@@ -1,0 +1,64 @@
+//! Table 1 interactive driver: LINPACK performance and power efficiency.
+//!
+//! Runs the in-core LU benchmark on every technology preset, prints the
+//! paper's table plus the comparison points §5.1 discusses (Pascal /
+//! Maxwell GPUs, Jetson TX1, Cortex-A53, Haswell — literature values the
+//! paper cites, reproduced here as fixed reference rows).
+//!
+//! ```text
+//! cargo run --release --example linpack_power
+//! ```
+
+use microcore::metrics::report::{f3, Table};
+use microcore::workloads::linpack;
+
+fn main() -> anyhow::Result<()> {
+    let rows = linpack::table1(linpack::DEFAULT_N, 42)?;
+    let mut t = Table::new(
+        "Table 1 — LINPACK performance and power consumption",
+        &["Technology", "MFLOPs", "Watts", "GFLOPs/Watt", "residual"],
+    );
+    for r in &rows {
+        t.row(&[
+            r.technology.clone(),
+            format!("{:.2}", r.mflops),
+            format!("{:.2}", r.watts),
+            f3(r.gflops_per_watt),
+            format!("{:.1e}", r.residual),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // §5.1's literature comparison points, for context.
+    let mut c = Table::new(
+        "Literature comparison (values cited by the paper, not simulated)",
+        &["Technology", "GFLOPs", "Watts", "GFLOPs/Watt"],
+    );
+    for (name, gflops, watts, eff) in [
+        ("Pascal GPU (ML workload)", f64::NAN, 250.0, 42.0),
+        ("Maxwell GPU (ML workload)", f64::NAN, 250.0, 23.0),
+        ("Jetson TX1 (Tegra X1)", 16.0, 15.3, 1.2),
+        ("Cortex-A53 (quad)", 4.43, 5.1, 1.07),
+        ("Haswell 16-core", 47.7, 29.1, 1.64),
+        ("Zynq-7020 theoretical", 180.0, f64::NAN, 72.0),
+    ] {
+        c.row(&[
+            name.to_string(),
+            if gflops.is_nan() { "-".into() } else { format!("{gflops:.2}") },
+            if watts.is_nan() { "-".into() } else { format!("{watts:.1}") },
+            format!("{eff:.2}"),
+        ]);
+    }
+    print!("\n{}", c.render());
+
+    // The §5.1 headline ratios, checked.
+    let eff = |name: &str| rows.iter().find(|r| r.technology == name).unwrap().gflops_per_watt;
+    let e = eff("Epiphany-III");
+    println!("\nEpiphany vs MicroBlaze+FPU efficiency: {:.1}x (paper: ~6x)", e / eff("MicroBlaze+FPU"));
+    println!("Epiphany vs Cortex-A9 efficiency:      {:.1}x (paper: ~30x)", e / eff("Cortex-A9"));
+    println!(
+        "Epiphany vs MicroBlaze+FPU FLOP rate:  {:.1}x (paper: ~31x)",
+        rows[0].mflops / rows[2].mflops
+    );
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Table 2 interactive driver: the synthetic stall-time probe.
+//!
+//! ```text
+//! cargo run --release --example stall_probe [-- --tech microblaze+fpu]
+//! ```
+
+use microcore::cli::Cli;
+use microcore::device::Technology;
+use microcore::metrics::report::{f3, Table};
+use microcore::workloads::stall;
+
+fn main() -> anyhow::Result<()> {
+    let cli = Cli::new("stall_probe", "Table 2: single-transfer stall times")
+        .opt("tech", Some("epiphany"), "technology preset")
+        .opt("trials", Some("500"), "trials per configuration")
+        .opt("seed", Some("7"), "seed");
+    let Some(args) = cli.parse(std::env::args().skip(1))? else {
+        println!("{}", cli.help());
+        return Ok(());
+    };
+    let tech = Technology::by_name(args.req("tech")?)
+        .ok_or_else(|| anyhow::anyhow!("unknown technology"))?;
+    let trials: usize = args.parse_as("trials")?;
+    let rows = stall::stall_table(&tech, trials, args.parse_as("seed")?);
+
+    let mut t = Table::new(
+        format!("Table 2 — micro-core stall time, {} ({} trials)", tech.name, trials),
+        &["size", "mode", "min (ms)", "max (ms)", "mean (ms)"],
+    );
+    for r in &rows {
+        t.row(&[
+            format!("{}B", r.size),
+            r.mode.to_string(),
+            f3(r.min_ms),
+            f3(r.max_ms),
+            f3(r.mean_ms),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "\nPaper (Epiphany): 128B 0.099/0.112/0.104 | 1KB 0.759/0.955/0.816 | \
+         8KB 6.396/11.801/7.882 (on-demand min/max/mean, ms)\n\
+         Key shape: at 8KB pre-fetch's mean exceeds on-demand's (polling tax)\n\
+         while its max is lower (pre-posted requests dodge scheduling spikes)."
+    );
+    Ok(())
+}

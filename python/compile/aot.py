@@ -1,0 +1,165 @@
+"""AOT pipeline: lower the Layer-2 model (and its Layer-1 Pallas kernels)
+to HLO-text artifacts consumed by the Rust coordinator.
+
+Run via ``make artifacts`` (``python -m compile.aot --out-dir ../artifacts``).
+Python runs exactly once, at build time; the Rust binary is self-contained
+afterwards and loads these artifacts through PJRT
+(``rust/src/runtime/artifacts.rs``).
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Alongside the ``.hlo.txt`` files we emit ``manifest.json`` describing every
+artifact's I/O signature and tiling metadata, so the Rust side can
+type-check invocations at load time instead of failing inside PJRT.
+"""
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+HIDDEN = 100  # the paper's hidden-layer width
+TB = 75       # T-block: 100x75 f32 = 30 KB — just under the 32 KB scratchpad
+
+# Shard lengths: 3600-pixel small images over 16 Epiphany cores (225) and
+# 8 MicroBlaze cores (450); 1200 is the streaming-chunk length for full-size
+# images (one pre-fetch buffer's worth of pixels per call).
+SHARDS = (225, 450, 1200)
+VEC_NS = {1000: 250, 1024: 256}   # quickstart vecadd sizes -> block
+DOT_NS = {256: 64, 1024: 128}     # VM dot builtin sizes -> block
+
+
+def _spec(*dims):
+    return jax.ShapeDtypeStruct(tuple(dims), jnp.float32)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def catalogue():
+    """Yield (name, fn, arg_specs, arg_names, meta) for every artifact."""
+    for t in SHARDS:
+        yield (
+            f"fwd_shard_t{t}",
+            functools.partial(model.fwd_shard, tb=TB),
+            [_spec(HIDDEN, t), _spec(t)],
+            ["w", "x"],
+            {"phase": "feed_forward", "hidden": HIDDEN, "shard": t, "tb": TB,
+             "flops": 2 * HIDDEN * t},
+        )
+        yield (
+            f"fwd_accum_t{t}",
+            functools.partial(model.fwd_shard_accum, tb=TB),
+            [_spec(HIDDEN, t), _spec(t), _spec(HIDDEN)],
+            ["w", "x", "acc"],
+            {"phase": "feed_forward", "hidden": HIDDEN, "shard": t, "tb": TB,
+             "flops": 2 * HIDDEN * t + HIDDEN},
+        )
+        yield (
+            f"grad_shard_t{t}",
+            functools.partial(model.grad_shard, tb=TB),
+            [_spec(HIDDEN), _spec(t), _spec(HIDDEN, t)],
+            ["dh", "x", "g"],
+            {"phase": "combine_gradients", "hidden": HIDDEN, "shard": t,
+             "tb": TB, "flops": 2 * HIDDEN * t},
+        )
+        yield (
+            f"update_shard_t{t}",
+            functools.partial(model.update_shard, tb=TB),
+            [_spec(HIDDEN, t), _spec(HIDDEN, t), _spec(1)],
+            ["w", "g", "lr"],
+            {"phase": "model_update", "hidden": HIDDEN, "shard": t, "tb": TB,
+             "flops": 2 * HIDDEN * t},
+        )
+    yield (
+        f"head_h{HIDDEN}",
+        model.head_fwd_bwd,
+        [_spec(HIDDEN), _spec(HIDDEN), _spec(1)],
+        ["acc", "v", "y"],
+        {"phase": "head", "hidden": HIDDEN, "flops": 14 * HIDDEN},
+    )
+    yield (
+        f"update_vec_h{HIDDEN}",
+        model.update_vec,
+        [_spec(HIDDEN), _spec(HIDDEN), _spec(1)],
+        ["v", "gv", "lr"],
+        {"phase": "model_update", "hidden": HIDDEN, "flops": 2 * HIDDEN},
+    )
+    for n, nb in VEC_NS.items():
+        yield (
+            f"vecadd_n{n}",
+            functools.partial(model.vecadd, nb=nb),
+            [_spec(n), _spec(n)],
+            ["a", "b"],
+            {"phase": "quickstart", "n": n, "nb": nb, "flops": n},
+        )
+    for n, nb in DOT_NS.items():
+        yield (
+            f"dot_n{n}",
+            functools.partial(model.dot, nb=nb),
+            [_spec(n), _spec(n)],
+            ["a", "b"],
+            {"phase": "vm_builtin", "n": n, "nb": nb, "flops": 2 * n},
+        )
+
+
+def lower_all(out_dir: str, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"hidden": HIDDEN, "tb": TB, "artifacts": []}
+    for name, fn, specs, arg_names, meta in catalogue():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        out_avals = [o for o in lowered.out_info]
+        entry = {
+            "name": name,
+            "file": fname,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "inputs": [
+                {"name": an, "dtype": "f32", "dims": list(s.shape)}
+                for an, s in zip(arg_names, specs)
+            ],
+            "outputs": [
+                {"dtype": "f32", "dims": list(o.shape)} for o in jax.tree.leaves(out_avals)
+            ],
+            "meta": meta,
+        }
+        manifest["artifacts"].append(entry)
+        if verbose:
+            print(f"  lowered {name:>20s} -> {fname} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    if verbose:
+        print(f"wrote {len(manifest['artifacts'])} artifacts + manifest.json to {out_dir}")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+    lower_all(args.out_dir, verbose=not args.quiet)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Layer-1 Pallas kernels: elementwise vector sum and dot product.
+
+``vecadd`` is the paper's Listing 1/2/3 running example (summing two lists
+of numbers on the micro-cores) — it backs the ``examples/quickstart.rs``
+offload and the VM's vector builtins.  ``dot`` backs the VM's accelerated
+dot-product builtin used by the LINPACK workload's inner loops.
+
+Both stream their operands through scratchpad-sized blocks, matching the
+pre-fetch buffer discipline of the paper (§3.1).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _vecadd_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("nb",))
+def vecadd(a, b, *, nb):
+    """Elementwise ``a + b`` over (N,), streamed in blocks of ``nb``."""
+    (n,) = a.shape
+    assert n % nb == 0, f"block {nb} must divide length {n}"
+    return pl.pallas_call(
+        _vecadd_kernel,
+        grid=(n // nb,),
+        in_specs=[
+            pl.BlockSpec((nb,), lambda j: (j,)),
+            pl.BlockSpec((nb,), lambda j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((nb,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def _dot_kernel(a_ref, b_ref, o_ref):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...].reshape(1, -1),
+        b_ref[...].reshape(-1, 1),
+        preferred_element_type=jnp.float32,
+    ).reshape(o_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("nb",))
+def dot(a, b, *, nb):
+    """Dot product over (N,) in ``nb`` blocks; returns a (1,) array."""
+    (n,) = a.shape
+    assert n % nb == 0, f"block {nb} must divide length {n}"
+    return pl.pallas_call(
+        _dot_kernel,
+        grid=(n // nb,),
+        in_specs=[
+            pl.BlockSpec((nb,), lambda j: (j,)),
+            pl.BlockSpec((nb,), lambda j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda j: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=True,
+    )(a, b)

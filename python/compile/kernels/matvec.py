@@ -1,0 +1,98 @@
+"""Layer-1 Pallas kernel: streaming shard mat-vec (``y = W @ x``).
+
+This is the compute hot-spot of the paper's machine-learning benchmark —
+each micro-core multiplies its (H, T) input→hidden weight shard with its
+(T,) image shard during the feed-forward pass (§5.1: "Forward feed involves
+a dot product on the weight matrix with the image").
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the Epiphany core has
+a 32 KB manually-managed scratchpad and streams data in via DMA/pre-fetch.
+On TPU the same insight maps to VMEM tiling: the grid walks the T dimension
+in blocks of ``tb`` so the per-step working set
+
+    W block (H, tb) + x block (tb, 1) + out (H, 1)
+
+stays inside a scratchpad-sized budget (~30 KB for H=100, tb=75, f32 —
+deliberately chosen to mirror the Epiphany's 32 KB local store).  The
+``BlockSpec`` index maps *are* the pre-fetch schedule: Pallas double-buffers
+the HBM→VMEM block streams exactly like the paper's ``prefetch=`` annotation
+streams host→core chunks.
+
+The kernel body is a matmul on the (H, tb) × (tb, 1) tile so it lowers onto
+the MXU systolic array on a real TPU; run here with ``interpret=True``
+because the CPU PJRT client cannot execute Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# f32 bytes per element; used for the scratchpad-budget assertion.
+_F32 = 4
+# The Epiphany-III local store is 32 KB; the ePython VM leaves ~8 KB of it
+# for user data after the 24 KB interpreter.  We budget the *weight* tile
+# against the full store (weights are device-resident in the benchmark) and
+# assert we never exceed it, mirroring the constraint the paper designs for.
+SCRATCHPAD_BYTES = 32 * 1024
+
+
+def _matvec_kernel(w_ref, x_ref, o_ref):
+    """One grid step: accumulate ``W[:, j*tb:(j+1)*tb] @ x[j*tb:(j+1)*tb]``."""
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (H, tb) @ (tb, 1) — MXU-shaped on real hardware.
+    o_ref[...] += jnp.dot(
+        w_ref[...], x_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tb",))
+def matvec(w, x, *, tb):
+    """Tiled ``W @ x`` for a (H, T) shard, streaming T in blocks of ``tb``.
+
+    Args:
+      w: (H, T) float32 weight shard.
+      x: (T,) float32 image shard.
+      tb: T-block size; must divide T and keep the tile under the
+        scratchpad budget.
+
+    Returns the (H,) partial pre-activation.
+    """
+    h, t = w.shape
+    assert t % tb == 0, f"tile {tb} must divide shard length {t}"
+    assert h * tb * _F32 <= SCRATCHPAD_BYTES, (
+        f"W tile ({h}x{tb} f32 = {h * tb * _F32} B) exceeds the "
+        f"{SCRATCHPAD_BYTES} B scratchpad budget"
+    )
+    x2 = x.reshape(t, 1)
+    out = pl.pallas_call(
+        _matvec_kernel,
+        grid=(t // tb,),
+        in_specs=[
+            # Walk W along T; revisit the same (whole-H) row panel.
+            pl.BlockSpec((h, tb), lambda j: (0, j)),
+            pl.BlockSpec((tb, 1), lambda j: (j, 0)),
+        ],
+        # Output block is revisited on every grid step (accumulator).
+        out_specs=pl.BlockSpec((h, 1), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, 1), jnp.float32),
+        interpret=True,
+    )(w, x2)
+    return out.reshape(h)
+
+
+@functools.partial(jax.jit, static_argnames=("tb",))
+def matvec_accum(w, x, acc, *, tb):
+    """Accumulating variant: ``acc + W @ x`` (chains across image tiles).
+
+    The Rust coordinator streams a full-size image through the cores one
+    pre-fetch buffer at a time; each buffered chunk is one call of this
+    executable, carrying the running (H,) pre-activation forward.
+    """
+    return acc + matvec(w, x, tb=tb)

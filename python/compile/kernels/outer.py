@@ -1,0 +1,72 @@
+"""Layer-1 Pallas kernel: tiled outer product (weight-gradient shard).
+
+§5.1: "Combining gradients, done for each image ... involves a dot product
+and an outer product."  The outer product produces this core's (H, T)
+input→hidden weight-gradient shard from the back-propagated hidden delta
+``dh`` (H,) and the image shard ``x`` (T,).
+
+Tiling mirrors :mod:`.matvec`: the grid walks T in blocks of ``tb`` so each
+step touches a scratchpad-sized (H, tb) gradient tile.  The accumulating
+variant folds a batch of images into a running gradient, which is the
+paper's "we don't update the model weights until after the batch".
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matvec import SCRATCHPAD_BYTES, _F32
+
+
+def _outer_kernel(dh_ref, x_ref, o_ref):
+    # (H, 1) * (1, tb) broadcast multiply — a rank-1 MXU/VPU tile.
+    o_ref[...] = dh_ref[...] * x_ref[...]
+
+
+def _outer_accum_kernel(dh_ref, x_ref, g_ref, o_ref):
+    o_ref[...] = g_ref[...] + dh_ref[...] * x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tb",))
+def outer(dh, x, *, tb):
+    """``outer(dh, x)`` tiled along T in blocks of ``tb``."""
+    (h,) = dh.shape
+    (t,) = x.shape
+    assert t % tb == 0, f"tile {tb} must divide shard length {t}"
+    assert h * tb * _F32 <= SCRATCHPAD_BYTES
+    out = pl.pallas_call(
+        _outer_kernel,
+        grid=(t // tb,),
+        in_specs=[
+            pl.BlockSpec((h, 1), lambda j: (0, 0)),
+            pl.BlockSpec((1, tb), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((h, tb), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((h, t), jnp.float32),
+        interpret=True,
+    )(dh.reshape(h, 1), x.reshape(1, t))
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("tb",))
+def outer_accum(dh, x, g, *, tb):
+    """``g + outer(dh, x)`` — batch-gradient accumulation, tiled like outer."""
+    (h,) = dh.shape
+    (t,) = x.shape
+    assert t % tb == 0, f"tile {tb} must divide shard length {t}"
+    assert h * tb * _F32 <= SCRATCHPAD_BYTES
+    out = pl.pallas_call(
+        _outer_accum_kernel,
+        grid=(t // tb,),
+        in_specs=[
+            pl.BlockSpec((h, 1), lambda j: (0, 0)),
+            pl.BlockSpec((1, tb), lambda j: (0, j)),
+            pl.BlockSpec((h, tb), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((h, tb), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((h, t), jnp.float32),
+        interpret=True,
+    )(dh.reshape(h, 1), x.reshape(1, t), g)
+    return out

@@ -1,0 +1,83 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has a corresponding reference
+implementation here, written with plain ``jax.numpy`` ops only.  The pytest
+suite (``python/tests/test_kernels.py``) asserts elementwise closeness
+between the Pallas kernel (run in interpret mode) and these oracles across a
+hypothesis-driven sweep of shapes, dtypes and value ranges.  These functions
+are the *correctness ground truth* for Layer 1.
+"""
+
+import jax.numpy as jnp
+
+
+def matvec(w, x):
+    """Reference shard mat-vec: ``y = W @ x``.
+
+    ``w``: (H, T) input→hidden weight shard held by one micro-core.
+    ``x``: (T,) image shard.
+    Returns the (H,) partial pre-activation contributed by this core.
+    """
+    return jnp.dot(w, x)
+
+
+def matvec_accum(w, x, acc):
+    """Reference accumulating mat-vec: ``acc + W @ x`` (streaming tiles)."""
+    return acc + jnp.dot(w, x)
+
+
+def outer(dh, x):
+    """Reference outer product: per-image weight gradient tile.
+
+    ``dh``: (H,) back-propagated hidden-layer delta.
+    ``x``:  (T,) image shard.
+    Returns the (H, T) gradient of the input→hidden weights for this shard.
+    """
+    return jnp.outer(dh, x)
+
+
+def outer_accum(dh, x, g):
+    """Reference accumulating outer product: ``g + outer(dh, x)``.
+
+    Used by the batch-gradient combine step: gradients are accumulated over
+    every image in the batch before the model update is applied.
+    """
+    return g + jnp.outer(dh, x)
+
+
+def update(w, g, lr):
+    """Reference SGD model update: ``W - lr * G`` (lr is a (1,) array)."""
+    return w - lr[0] * g
+
+
+def vecadd(a, b):
+    """Reference elementwise sum (the paper's Listing 1 kernel)."""
+    return a + b
+
+
+def dot(a, b):
+    """Reference dot product, returned as a (1,) array."""
+    return jnp.dot(a, b).reshape((1,))
+
+
+def head(acc, v, y):
+    """Reference network head: everything after the sharded mat-vec.
+
+    ``acc``: (H,) summed pre-activation over all core shards.
+    ``v``:   (H,) hidden→output weight vector.
+    ``y``:   (1,) binary label.
+
+    Returns ``(h, yhat, loss, gv, dh)`` — hidden activations, prediction,
+    binary-cross-entropy loss, gradient wrt ``v`` and the hidden-layer delta
+    that is broadcast back to the cores for the outer-product gradient.
+    """
+    h = jnp.reciprocal(1.0 + jnp.exp(-acc))
+    z = jnp.dot(v, h)
+    yhat = jnp.reciprocal(1.0 + jnp.exp(-z))
+    eps = 1e-7
+    yc = jnp.clip(yhat, eps, 1.0 - eps)
+    loss = -(y[0] * jnp.log(yc) + (1.0 - y[0]) * jnp.log(1.0 - yc))
+    delta = yhat - y[0]
+    gv = delta * h
+    dh = (v * delta) * h * (1.0 - h)
+    return h, yhat.reshape((1,)), loss.reshape((1,)), gv, dh

@@ -1,0 +1,51 @@
+"""Layer-1 Pallas kernel: tiled SGD model update (``W ← W − lr·G``).
+
+The paper's third benchmark phase ("model update is the time taken to update
+the model with gradients for the batch").  Notably, Figure 3 shows this
+phase is *identical* across eager / on-demand / pre-fetch configurations
+because both operands are device-resident — no external data transfer — a
+property the Rust simulator reproduces and the benches assert.
+
+The learning rate arrives as a (1,) array rather than a trace-time constant
+so one AOT artifact serves every lr the coordinator chooses at run time.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matvec import SCRATCHPAD_BYTES, _F32
+
+
+def _update_kernel(w_ref, g_ref, lr_ref, o_ref):
+    o_ref[...] = w_ref[...] - lr_ref[0, 0] * g_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tb",))
+def update(w, g, lr, *, tb):
+    """``W - lr*G`` over an (H, T) shard, tiled along T in ``tb`` blocks.
+
+    Args:
+      w, g: (H, T) float32 weight / gradient shards.
+      lr: (1,) float32 learning rate.
+      tb: T-block size; must divide T.
+    """
+    h, t = w.shape
+    assert t % tb == 0, f"tile {tb} must divide shard length {t}"
+    # Two (H, tb) tiles resident per step (W and G) — budget both.
+    assert 2 * h * tb * _F32 <= 2 * SCRATCHPAD_BYTES
+    out = pl.pallas_call(
+        _update_kernel,
+        grid=(t // tb,),
+        in_specs=[
+            pl.BlockSpec((h, tb), lambda j: (0, j)),
+            pl.BlockSpec((h, tb), lambda j: (0, j)),
+            pl.BlockSpec((1, 1), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((h, tb), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((h, t), jnp.float32),
+        interpret=True,
+    )(w, g, lr.reshape(1, 1))
+    return out

@@ -1,0 +1,115 @@
+"""Layer-2 JAX model: the paper's machine-learning benchmark network.
+
+§5 of the paper trains a one-hidden-layer (100 neuron) network on 3D CT
+lung-scan images for binary lesion classification, with the input pixels
+*distributed among the micro-cores*: each core owns a (H, T) slice of the
+input→hidden weight matrix and the matching (T,) shard of every image.  The
+three timed phases are
+
+  feed forward      — per-core shard mat-vec, then the (host-combined) head
+  combine gradients — head backward + per-core outer-product gradient
+  model update      — per-core SGD step on the weight shard
+
+This module composes the Layer-1 Pallas kernels into exactly those phases.
+Each public function is a pure jax function with static shapes; ``aot.py``
+lowers each to an HLO-text artifact that the Rust coordinator loads via
+PJRT and invokes from the (simulated) micro-cores' kernel execution.
+
+Full-size images do not fit on a core (nor, on the Epiphany, even in the
+directly-addressable shared window), so the streaming variants
+(``fwd_shard_accum`` / ``grad_shard_accum``) process one pre-fetch buffer's
+worth of pixels per call, carrying accumulator state — the AOT twin of the
+paper's pre-fetch loop.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import elementwise, matvec, outer, update
+from .kernels import ref as kref
+
+
+def fwd_shard(w, x, *, tb):
+    """Feed-forward, core-local half: partial pre-activation ``W @ x``.
+
+    One invocation per core per image (small-image regime where the whole
+    shard fits in the core's streaming budget).
+    """
+    return (matvec.matvec(w, x, tb=tb),)
+
+
+def fwd_shard_accum(w, x, acc, *, tb):
+    """Streaming feed-forward step: ``acc + W @ x`` for one buffered chunk."""
+    return (matvec.matvec_accum(w, x, acc, tb=tb),)
+
+
+def head_fwd_bwd(acc, v, y):
+    """Network head: activation, prediction, loss and both backward deltas.
+
+    Runs on the host side of the benchmark (the combined (H,) pre-activation
+    is tiny), emitting the hidden delta ``dh`` that is broadcast back to the
+    cores.  Forward and backward are fused into one artifact so the hidden
+    activation is computed exactly once (no fwd/grad recompute — §Perf L2).
+    """
+    h = jax.nn.sigmoid(acc)
+    z = jnp.dot(v, h)
+    yhat = jax.nn.sigmoid(z)
+    eps = 1e-7
+    yc = jnp.clip(yhat, eps, 1.0 - eps)
+    loss = -(y[0] * jnp.log(yc) + (1.0 - y[0]) * jnp.log(1.0 - yc))
+    delta = yhat - y[0]
+    gv = delta * h
+    dh = (v * delta) * h * (1.0 - h)
+    return h, yhat.reshape(1), loss.reshape(1), gv, dh
+
+
+def grad_shard(dh, x, g, *, tb):
+    """Combine-gradients, core-local half: ``g + outer(dh, x)``.
+
+    Accumulates this image's weight-gradient shard into the batch gradient
+    ``g`` (the paper holds updates until the batch boundary).
+    """
+    return (outer.outer_accum(dh, x, g, tb=tb),)
+
+
+def update_shard(w, g, lr, *, tb):
+    """Model update, core-local half: SGD step on the (H, T) weight shard."""
+    return (update.update(w, g, lr, tb=tb),)
+
+
+def update_vec(v, gv, lr):
+    """Model update, head half: SGD step on the (H,) output weight vector."""
+    return (v - lr[0] * gv,)
+
+
+def vecadd(a, b, *, nb):
+    """Listing 1 kernel (quickstart): elementwise sum of two vectors."""
+    return (elementwise.vecadd(a, b, nb=nb),)
+
+
+def dot(a, b, *, nb):
+    """Accelerated dot-product builtin for the on-core VM (LINPACK)."""
+    return (elementwise.dot(a, b, nb=nb),)
+
+
+# ---------------------------------------------------------------------------
+# Pure-reference twins (no Pallas) used by the pytest gradient checks.
+# ---------------------------------------------------------------------------
+
+
+def reference_step(w, v, x_full, y, lr, *, cores):
+    """One full training step on the *unsharded* model, pure jnp.
+
+    The oracle for the end-to-end integration test: running the sharded,
+    streamed, AOT-compiled pipeline across ``cores`` simulated micro-cores
+    must reproduce this (per-image SGD, batch size 1) to tolerance.
+    """
+    t = x_full.shape[0] // cores
+    acc = jnp.zeros(w.shape[0], jnp.float32)
+    for c in range(cores):
+        acc = kref.matvec_accum(w[:, c * t : (c + 1) * t], x_full[c * t : (c + 1) * t], acc)
+    h, yhat, loss, gv, dh = kref.head(acc, v, y)
+    gw = kref.outer(dh, x_full)
+    w2 = kref.update(w, gw, lr)
+    v2 = v - lr[0] * gv
+    return w2, v2, loss, yhat

@@ -1,0 +1,7 @@
+"""Make `compile.*` importable whether pytest runs from `python/` (the
+Makefile path) or from the repository root (`pytest python/tests/`)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))

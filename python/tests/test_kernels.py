@@ -1,0 +1,184 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp reference oracles.
+
+Hypothesis sweeps shapes/blocks/value-ranges; every kernel must match
+``kernels.ref`` elementwise.  This is the CORE correctness signal for the
+compute layer — everything the Rust coordinator executes via PJRT was
+lowered from these kernels.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import elementwise, matvec, outer, ref, update
+
+jax.config.update("jax_platform_name", "cpu")
+
+# Shard-length/block pairs that satisfy the scratchpad budget (H=100).
+SHAPE_CASES = [(75, 75), (150, 75), (225, 75), (450, 75), (1200, 75), (64, 32), (256, 64)]
+HS = [1, 7, 100]
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+@pytest.mark.parametrize("t,tb", SHAPE_CASES)
+@pytest.mark.parametrize("h", HS)
+def test_matvec_matches_ref(t, tb, h):
+    if h * tb * 4 > matvec.SCRATCHPAD_BYTES:
+        pytest.skip("tile exceeds scratchpad budget")
+    r = _rng(t * 1000 + h)
+    w = r.standard_normal((h, t), dtype=np.float32)
+    x = r.standard_normal(t, dtype=np.float32)
+    got = matvec.matvec(w, x, tb=tb)
+    want = ref.matvec(w, x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("t,tb", SHAPE_CASES)
+def test_matvec_accum_matches_ref(t, tb):
+    r = _rng(t)
+    w = r.standard_normal((100, t), dtype=np.float32)
+    x = r.standard_normal(t, dtype=np.float32)
+    acc = r.standard_normal(100, dtype=np.float32)
+    got = matvec.matvec_accum(w, x, acc, tb=tb)
+    want = ref.matvec_accum(w, x, acc)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("t,tb", SHAPE_CASES)
+def test_outer_matches_ref(t, tb):
+    r = _rng(t + 1)
+    dh = r.standard_normal(100, dtype=np.float32)
+    x = r.standard_normal(t, dtype=np.float32)
+    np.testing.assert_allclose(
+        outer.outer(dh, x, tb=tb), ref.outer(dh, x), rtol=1e-6, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("t,tb", SHAPE_CASES)
+def test_outer_accum_matches_ref(t, tb):
+    r = _rng(t + 2)
+    dh = r.standard_normal(100, dtype=np.float32)
+    x = r.standard_normal(t, dtype=np.float32)
+    g = r.standard_normal((100, t), dtype=np.float32)
+    np.testing.assert_allclose(
+        outer.outer_accum(dh, x, g, tb=tb), ref.outer_accum(dh, x, g),
+        rtol=1e-6, atol=1e-6,
+    )
+
+
+@pytest.mark.parametrize("t,tb", SHAPE_CASES)
+def test_update_matches_ref(t, tb):
+    r = _rng(t + 3)
+    w = r.standard_normal((100, t), dtype=np.float32)
+    g = r.standard_normal((100, t), dtype=np.float32)
+    lr = np.array([0.05], dtype=np.float32)
+    np.testing.assert_allclose(
+        update.update(w, g, lr, tb=tb), ref.update(w, g, lr), rtol=1e-6, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("n,nb", [(250, 250), (1000, 250), (1024, 256), (64, 32)])
+def test_vecadd_matches_ref(n, nb):
+    r = _rng(n)
+    a = r.standard_normal(n, dtype=np.float32)
+    b = r.standard_normal(n, dtype=np.float32)
+    np.testing.assert_allclose(
+        elementwise.vecadd(a, b, nb=nb), ref.vecadd(a, b), rtol=1e-6, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("n,nb", [(256, 64), (1024, 128), (128, 128)])
+def test_dot_matches_ref(n, nb):
+    r = _rng(n + 9)
+    a = r.standard_normal(n, dtype=np.float32)
+    b = r.standard_normal(n, dtype=np.float32)
+    np.testing.assert_allclose(
+        elementwise.dot(a, b, nb=nb), ref.dot(a, b), rtol=1e-4, atol=1e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: randomized shapes and magnitudes.
+# ---------------------------------------------------------------------------
+
+finite_f32 = st.floats(
+    min_value=-1e3, max_value=1e3, allow_nan=False, allow_infinity=False, width=32
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(1, 100),
+    blocks=st.integers(1, 6),
+    tb=st.sampled_from([16, 25, 32, 64, 75]),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(1e-3, 1e3),
+)
+def test_matvec_hypothesis(h, blocks, tb, seed, scale):
+    hypothesis.assume(h * tb * 4 <= matvec.SCRATCHPAD_BYTES)
+    t = blocks * tb
+    r = _rng(seed)
+    w = (r.standard_normal((h, t)) * scale).astype(np.float32)
+    x = (r.standard_normal(t) * scale).astype(np.float32)
+    got = np.asarray(matvec.matvec(w, x, tb=tb))
+    want = np.asarray(ref.matvec(w, x))
+    tol = max(1e-4, 1e-5 * scale * scale * t)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=tol)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.integers(1, 8),
+    tb=st.sampled_from([16, 32, 75]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_outer_hypothesis(blocks, tb, seed):
+    t = blocks * tb
+    r = _rng(seed)
+    dh = r.standard_normal(100).astype(np.float32)
+    x = r.standard_normal(t).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(outer.outer(dh, x, tb=tb)),
+        np.asarray(ref.outer(dh, x)),
+        rtol=1e-6,
+        atol=1e-6,
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.integers(1, 8),
+    nb=st.sampled_from([16, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+    vals=st.tuples(finite_f32, finite_f32),
+)
+def test_vecadd_hypothesis(blocks, nb, seed, vals):
+    n = blocks * nb
+    r = _rng(seed)
+    a = np.full(n, vals[0], dtype=np.float32) + r.standard_normal(n).astype(np.float32)
+    b = np.full(n, vals[1], dtype=np.float32)
+    np.testing.assert_allclose(
+        np.asarray(elementwise.vecadd(a, b, nb=nb)), a + b, rtol=1e-6, atol=1e-6
+    )
+
+
+def test_matvec_rejects_non_dividing_tile():
+    w = np.zeros((10, 100), np.float32)
+    x = np.zeros(100, np.float32)
+    with pytest.raises(AssertionError):
+        matvec.matvec(w, x, tb=33)
+
+
+def test_matvec_rejects_scratchpad_overflow():
+    # 200 x 75 x 4B = 60 KB > 32 KB budget
+    w = np.zeros((200, 150), np.float32)
+    x = np.zeros(150, np.float32)
+    with pytest.raises(AssertionError):
+        matvec.matvec(w, x, tb=75)

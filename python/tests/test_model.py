@@ -1,0 +1,138 @@
+"""Layer-2 correctness: model phases vs jax.grad and end-to-end learning."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+H, T, CORES = 100, 225, 16
+LR = np.array([0.1], dtype=np.float32)
+
+
+def _params(seed=0):
+    r = np.random.default_rng(seed)
+    w = (r.standard_normal((H, CORES * T)) * 0.01).astype(np.float32)
+    v = (r.standard_normal(H) * 0.01).astype(np.float32)
+    return w, v
+
+
+def _loss_fn(w, v, x, y):
+    h = jax.nn.sigmoid(w @ x)
+    yhat = jax.nn.sigmoid(v @ h)
+    eps = 1e-7
+    yc = jnp.clip(yhat, eps, 1 - eps)
+    return -(y * jnp.log(yc) + (1 - y) * jnp.log(1 - yc))
+
+
+def test_head_gradients_match_jax_grad():
+    """dh and gv emitted by the fused head must equal autodiff gradients."""
+    w, v = _params(1)
+    r = np.random.default_rng(2)
+    x = r.standard_normal(CORES * T).astype(np.float32)
+    y = np.array([1.0], dtype=np.float32)
+
+    acc = w @ x
+    h, yhat, loss, gv, dh = model.head_fwd_bwd(acc, v, np.asarray(y))
+
+    g_acc = jax.grad(lambda a: _loss_fn_from_acc(a, v, y[0]))(acc)
+    g_v = jax.grad(lambda vv: _loss_fn_from_acc(acc, vv, y[0]))(v)
+    np.testing.assert_allclose(dh, g_acc, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(gv, g_v, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(
+        loss[0], _loss_fn_from_acc(acc, v, y[0]), rtol=1e-5, atol=1e-6
+    )
+
+
+def _loss_fn_from_acc(acc, v, y):
+    h = jax.nn.sigmoid(acc)
+    yhat = jax.nn.sigmoid(v @ h)
+    eps = 1e-7
+    yc = jnp.clip(yhat, eps, 1 - eps)
+    return -(y * jnp.log(yc) + (1 - y) * jnp.log(1 - yc))
+
+
+def test_full_weight_gradient_matches_jax_grad():
+    """outer(dh, x) must equal d loss / d W from autodiff."""
+    w, v = _params(3)
+    r = np.random.default_rng(4)
+    x = r.standard_normal(CORES * T).astype(np.float32)
+    y = np.float32(0.0)
+
+    acc = w @ x
+    _, _, _, _, dh = ref.head(acc, v, np.array([y], np.float32))
+    gw = ref.outer(np.asarray(dh), x)
+    gw_ad = jax.grad(lambda ww: _loss_fn(ww, v, x, y))(w)
+    np.testing.assert_allclose(gw, gw_ad, rtol=1e-4, atol=1e-5)
+
+
+def test_sharded_step_matches_unsharded_reference():
+    """Sharding the matvec over cores must not change the training step."""
+    w, v = _params(5)
+    r = np.random.default_rng(6)
+    x = r.standard_normal(CORES * T).astype(np.float32)
+    y = np.array([1.0], np.float32)
+
+    # Sharded pipeline exactly as the Rust coordinator drives it.
+    acc = np.zeros(H, np.float32)
+    for c in range(CORES):
+        xs = x[c * T : (c + 1) * T]
+        ws = w[:, c * T : (c + 1) * T]
+        (acc,) = model.fwd_shard_accum(ws, xs, acc, tb=75)
+    h, yhat, loss, gv, dh = model.head_fwd_bwd(np.asarray(acc), v, y)
+
+    w_new = np.empty_like(w)
+    for c in range(CORES):
+        sl = slice(c * T, (c + 1) * T)
+        (g,) = model.grad_shard(
+            np.asarray(dh), x[sl], np.zeros((H, T), np.float32), tb=75
+        )
+        (wn,) = model.update_shard(w[:, sl], np.asarray(g), LR, tb=75)
+        w_new[:, sl] = np.asarray(wn)
+    (v_new,) = model.update_vec(v, np.asarray(gv), LR)
+
+    w_ref, v_ref, loss_ref, yhat_ref = model.reference_step(
+        w, v, x, y, LR, cores=CORES
+    )
+    np.testing.assert_allclose(loss[0], loss_ref[0], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(w_new, w_ref, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(v_new, v_ref, rtol=1e-4, atol=1e-5)
+
+
+def test_training_reduces_loss():
+    """A few SGD steps on a separable synthetic task must reduce the loss."""
+    w, v = _params(7)
+    r = np.random.default_rng(8)
+    n_px = CORES * T
+    # Two-class task: class-1 images have a bright synthetic 'lesion' blob.
+    losses = []
+    for step in range(60):
+        y = np.float32(step % 2)
+        x = (r.standard_normal(n_px) * 0.1).astype(np.float32)
+        if y > 0.5:
+            x[: n_px // 8] += 1.0
+        acc = w @ x
+        h, yhat, loss, gv, dh = ref.head(acc, v, np.array([y], np.float32))
+        gw = np.outer(np.asarray(dh), x)
+        w = w - LR[0] * gw
+        v = v - LR[0] * np.asarray(gv)
+        losses.append(float(loss[0]))
+    first = np.mean(losses[:10])
+    last = np.mean(losses[-10:])
+    assert last < first * 0.5, f"loss did not fall: {first:.4f} -> {last:.4f}"
+
+
+def test_head_loss_nonnegative_and_prediction_in_range():
+    r = np.random.default_rng(9)
+    for seed in range(5):
+        acc = r.standard_normal(H).astype(np.float32) * 10
+        v = r.standard_normal(H).astype(np.float32)
+        y = np.array([float(seed % 2)], np.float32)
+        h, yhat, loss, gv, dh = model.head_fwd_bwd(acc, v, y)
+        assert 0.0 <= float(yhat[0]) <= 1.0
+        assert float(loss[0]) >= 0.0
+        assert np.all(np.isfinite(np.asarray(dh)))

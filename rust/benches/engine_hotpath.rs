@@ -1,0 +1,118 @@
+//! L3 hot-path microbenchmark (wall-clock) — the §Perf workhorse.
+//!
+//! Measures the *simulator's own* throughput, which bounds how fast the
+//! paper-scale experiments run in wallclock:
+//!
+//! * VM dispatch rate (interpreted ops/s);
+//! * engine round-trip rate for on-demand element requests (the
+//!   suspension → service → resume cycle);
+//! * pre-fetch hit path rate;
+//! * tensor-builtin invocation rate through PJRT.
+//!
+//! ```text
+//! cargo bench --bench engine_hotpath
+//! ```
+
+use microcore::bench_support::{banner, time_wall};
+use microcore::coordinator::{
+    Access, ArgSpec, OffloadOptions, PrefetchSpec, Session, TransferMode,
+};
+use microcore::device::Technology;
+
+const SPIN: &str = r#"
+def spin(n):
+    s = 0
+    i = 0
+    while i < n:
+        s += i
+        i += 1
+    return s
+"#;
+
+const STREAM: &str = r#"
+def stream(x):
+    s = 0.0
+    i = 0
+    while i < len(x):
+        s += x[i]
+        i += 1
+    return s
+"#;
+
+fn main() -> anyhow::Result<()> {
+    banner("engine_hotpath", "simulator wallclock throughput (seconds per run)");
+
+    // 1. VM dispatch rate: 100k-iteration spin on one core.
+    let iters = 100_000i64;
+    let m = time_wall("vm_spin_100k_iters_1core", 1, 5, || {
+        let mut sess = Session::builder(Technology::epiphany3()).seed(1).build().unwrap();
+        let k = sess.compile_kernel("spin", SPIN).unwrap();
+        sess.offload(
+            &k,
+            &[ArgSpec::Int(iters)],
+            OffloadOptions::default().transfer(TransferMode::OnDemand).on_cores(vec![0]),
+        )
+        .unwrap();
+    });
+    // ~10 bytecode ops per iteration.
+    let ops_per_sec = iters as f64 * 10.0 / m.mean();
+    println!("{}", m.summary());
+    println!("  -> ~{:.1} M VM ops/s", ops_per_sec / 1e6);
+
+    // 2. On-demand round-trip rate: 16 cores x 1000 elements.
+    let n = 16_000usize;
+    let m = time_wall("ondemand_16k_roundtrips", 1, 5, || {
+        let mut sess = Session::builder(Technology::epiphany3()).seed(1).build().unwrap();
+        let x = sess.alloc_host_zeroed("x", n).unwrap();
+        let k = sess.compile_kernel("stream", STREAM).unwrap();
+        sess.offload(
+            &k,
+            &[ArgSpec::sharded(x)],
+            OffloadOptions::default().transfer(TransferMode::OnDemand),
+        )
+        .unwrap();
+    });
+    println!("{}", m.summary());
+    println!("  -> ~{:.2} M round-trips/s", n as f64 / m.mean() / 1e6);
+
+    // 3. Pre-fetch hit path rate.
+    let m = time_wall("prefetch_16k_elements", 1, 5, || {
+        let mut sess = Session::builder(Technology::epiphany3()).seed(1).build().unwrap();
+        let x = sess.alloc_host_zeroed("x", n).unwrap();
+        let k = sess.compile_kernel("stream", STREAM).unwrap();
+        sess.offload(
+            &k,
+            &[ArgSpec::sharded(x)],
+            OffloadOptions::default().prefetch(PrefetchSpec {
+                buffer_size: 240,
+                elems_per_fetch: 120,
+                distance: 120,
+                access: Access::ReadOnly,
+            }),
+        )
+        .unwrap();
+    });
+    println!("{}", m.summary());
+    println!("  -> ~{:.2} M element-reads/s via prefetch", n as f64 / m.mean() / 1e6);
+
+    // 4. Tensor-builtin (PJRT) invocation rate, if artifacts exist.
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let m = time_wall("pjrt_fwd_accum_x100", 1, 5, || {
+            let sess = Session::builder(Technology::epiphany3())
+                .artifacts_dir("artifacts")
+                .seed(1)
+                .build()
+                .unwrap();
+            let ex = sess.engine().executor().unwrap().clone();
+            let w = vec![0.01f32; 100 * 225];
+            let x = vec![0.5f32; 225];
+            let acc = vec![0.0f32; 100];
+            for _ in 0..100 {
+                ex.fwd_accum(&w, &x, &acc).unwrap();
+            }
+        });
+        println!("{}", m.summary());
+        println!("  -> ~{:.0} PJRT executions/s", 100.0 / m.mean());
+    }
+    Ok(())
+}

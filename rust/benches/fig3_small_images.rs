@@ -1,0 +1,67 @@
+//! Figure 3 — ML benchmark, small (3600-pixel) images.
+//!
+//! Regenerates the paper's bars: per-phase per-image times for
+//! {ePython eager, on-demand, pre-fetch} × {Epiphany-III, MicroBlaze+FPU},
+//! plus the host baselines (CPython-ARM, native-ARM, CPython-Broadwell).
+//!
+//! Expected shape (paper §5.1): pre-fetch ≲ eager (paper: pre-fetch up to
+//! 1.3× better on combine-gradients), on-demand ≫ both; model-update
+//! identical across modes; ePython eager competitive with CPython-ARM.
+//!
+//! ```text
+//! cargo bench --bench fig3_small_images
+//! ```
+
+use microcore::bench_support::banner;
+use microcore::coordinator::{Session, TransferMode};
+use microcore::device::Technology;
+use microcore::metrics::report::{ms, Table};
+use microcore::workloads::baselines::{phase_flops, HostBaseline};
+use microcore::workloads::mlbench::{MlBench, MlBenchConfig};
+
+fn main() -> anyhow::Result<()> {
+    banner(
+        "fig3_small_images",
+        "per-image phase times, 3600-pixel images, hidden=100 (virtual ms)",
+    );
+    let images = 4;
+    let mut table = Table::new(
+        "Figure 3 — ML benchmark (small images)",
+        &["configuration", "feed forward", "combine gradients", "model update"],
+    );
+
+    for tech in [Technology::epiphany3(), Technology::microblaze_fpu()] {
+        for mode in [TransferMode::Eager, TransferMode::OnDemand, TransferMode::Prefetch] {
+            let session = Session::builder(tech.clone())
+                .artifacts_dir("artifacts")
+                .seed(42)
+                .build()?;
+            let mut cfg = MlBenchConfig::small(tech.cores, mode);
+            cfg.images = images;
+            let mut bench = MlBench::new(session, cfg)?;
+            let r = bench.run()?;
+            table.row(&[
+                format!("ePython {} ({})", mode.name(), tech.name),
+                ms(r.per_image.feed_forward),
+                ms(r.per_image.combine_gradients),
+                ms(r.per_image.model_update),
+            ]);
+        }
+    }
+
+    // Host baselines (documented analytic models; single core).
+    let (ff, grad, upd) = phase_flops(3600, 100);
+    for b in HostBaseline::all() {
+        table.row(&[
+            b.name().to_string(),
+            ms(b.phase_time(ff, 2)),
+            ms(b.phase_time(grad, 2)),
+            ms(b.phase_time(upd, 2)),
+        ]);
+    }
+
+    print!("{}", table.render());
+    table.save_csv("reports", "fig3_small_images").ok();
+    println!("(CSV written to reports/fig3_small_images.csv)");
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Ablation — interpreted vs compiled LINPACK (the paper's methodology
+//! footnote, quantified).
+//!
+//! §5.1: "ePython is an interpreter, therefore to explore performance and
+//! power efficiency in more detail, and avoid noise due to the interpreted
+//! nature of ePython, we modified the C LINPACK benchmark to run on the
+//! micro-cores." This bench runs the *same* LU solve both ways — once in
+//! the kernel language on the on-core VM, once through the compiled-code
+//! cost model — and reports the interpreter overhead the authors dodged.
+//!
+//! ```text
+//! cargo bench --bench interpreter_overhead
+//! ```
+
+use microcore::bench_support::banner;
+use microcore::device::Technology;
+use microcore::metrics::report::Table;
+use microcore::workloads::linpack;
+
+fn main() -> anyhow::Result<()> {
+    banner("interpreter_overhead", "VM-interpreted vs compiled LINPACK (n=24)");
+    let mut t = Table::new(
+        "Ablation — interpreter overhead on LINPACK",
+        &["Technology", "interpreted MFLOPs", "compiled MFLOPs", "overhead", "max err"],
+    );
+    for tech in [Technology::epiphany3(), Technology::microblaze_fpu()] {
+        let row = linpack::linpack_vm_row(&tech, 24, 42)?;
+        t.row(&[
+            row.technology,
+            format!("{:.3}", row.mflops_interpreted),
+            format!("{:.2}", row.mflops_compiled),
+            format!("{:.0}x", row.overhead),
+            format!("{:.1e}", row.max_err),
+        ]);
+    }
+    print!("{}", t.render());
+    t.save_csv("reports", "interpreter_overhead").ok();
+    println!(
+        "(the gap is why Table 1 used C LINPACK; it also bounds what the ML\n\
+         benchmark's tensor builtins — ePython's native escape hatch — buy)"
+    );
+    Ok(())
+}

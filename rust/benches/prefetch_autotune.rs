@@ -1,0 +1,72 @@
+//! Ablation — pre-fetch parameter sweep (the paper's §6 future work).
+//!
+//! "Our optimal pre-fetching arguments, which were found empirically, were
+//! different between large and small image benchmark runs, and micro-core
+//! technologies" — the paper closes by proposing auto-tuning. This bench
+//! *is* that tuner: it sweeps `elements_per_fetch` × `buffer_size` for
+//! the feed-forward phase and reports the empirical optimum per
+//! technology, demonstrating that the best setting indeed differs.
+//!
+//! ```text
+//! cargo bench --bench prefetch_autotune
+//! ```
+
+use microcore::bench_support::banner;
+use microcore::coordinator::{Access, PrefetchSpec, Session, TransferMode};
+use microcore::device::Technology;
+use microcore::metrics::report::{ms, Table};
+use microcore::workloads::mlbench::{MlBench, MlBenchConfig};
+
+fn main() -> anyhow::Result<()> {
+    banner("prefetch_autotune", "sweep elems_per_fetch x buffer for feed-forward");
+    for tech in [Technology::epiphany3(), Technology::microblaze_fpu()] {
+        let mut t = Table::new(
+            format!("Pre-fetch sweep — {} (feed-forward, small images)", tech.name),
+            &["elems/fetch", "buffer", "feed forward", "requests"],
+        );
+        let mut best: Option<(u64, usize, usize)> = None;
+        for epf in [8usize, 16, 30, 60, 120, 225] {
+            for mult in [2usize, 4] {
+                let buffer = (epf * mult).min(240);
+                if buffer < epf {
+                    continue;
+                }
+                let session = Session::builder(tech.clone())
+                    .artifacts_dir("artifacts")
+                    .seed(42)
+                    .build()?;
+                let mut cfg = MlBenchConfig::small(tech.cores, TransferMode::Prefetch);
+                cfg.prefetch = PrefetchSpec {
+                    buffer_size: buffer,
+                    elems_per_fetch: epf,
+                    distance: epf,
+                    access: Access::ReadOnly,
+                };
+                cfg.images = 2;
+                let mut bench = MlBench::new(session, cfg)?;
+                let r = bench.run()?;
+                let ff = r.per_image.feed_forward;
+                t.row(&[
+                    epf.to_string(),
+                    buffer.to_string(),
+                    ms(ff),
+                    (r.requests / 2).to_string(),
+                ]);
+                if best.map_or(true, |(b, _, _)| ff < b) {
+                    best = Some((ff, epf, buffer));
+                }
+            }
+        }
+        print!("{}", t.render());
+        if let Some((ff, epf, buffer)) = best {
+            println!(
+                "optimum for {}: elems_per_fetch={epf}, buffer={buffer} ({} ms)\n",
+                tech.name,
+                ms(ff)
+            );
+        }
+        t.save_csv("reports", &format!("prefetch_autotune_{}", tech.name.replace('+', "_")))
+            .ok();
+    }
+    Ok(())
+}

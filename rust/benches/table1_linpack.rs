@@ -1,0 +1,39 @@
+//! Table 1 — LINPACK performance and power consumption.
+//!
+//! ```text
+//! cargo bench --bench table1_linpack
+//! ```
+
+use microcore::bench_support::banner;
+use microcore::metrics::report::{f3, Table};
+use microcore::workloads::linpack;
+
+fn main() -> anyhow::Result<()> {
+    banner("table1_linpack", "in-core LU + power model; paper Table 1 alongside");
+    let rows = linpack::table1(linpack::DEFAULT_N, 42)?;
+    let paper = [
+        ("Epiphany-III", 1508.16, 0.90, 1.676),
+        ("MicroBlaze", 0.96, 0.19, 0.005),
+        ("MicroBlaze+FPU", 47.20, 0.18, 0.262),
+        ("Cortex-A9", 33.20, 0.60, 0.055),
+    ];
+    let mut t = Table::new(
+        "Table 1 — measured (simulated) vs paper",
+        &["Technology", "MFLOPs", "paper", "Watts", "paper", "GFLOPs/W", "paper"],
+    );
+    for (r, (name, p_mf, p_w, p_eff)) in rows.iter().zip(paper) {
+        assert_eq!(r.technology, name);
+        t.row(&[
+            r.technology.clone(),
+            format!("{:.2}", r.mflops),
+            format!("{p_mf:.2}"),
+            format!("{:.2}", r.watts),
+            format!("{p_w:.2}"),
+            f3(r.gflops_per_watt),
+            f3(p_eff),
+        ]);
+    }
+    print!("{}", t.render());
+    t.save_csv("reports", "table1_linpack").ok();
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Table 2 — synthetic micro-core stall time for different data sizes.
+//!
+//! ```text
+//! cargo bench --bench table2_stall
+//! ```
+
+use microcore::bench_support::banner;
+use microcore::device::Technology;
+use microcore::metrics::report::{f3, Table};
+use microcore::workloads::stall;
+
+fn main() {
+    banner("table2_stall", "single-transfer stall min/max/mean (ms); paper values alongside");
+    // Paper Table 2 (Epiphany): (size, mode, min, max, mean)
+    let paper = [
+        (128, "on-demand", 0.099, 0.112, 0.104),
+        (128, "pre-fetch", 0.098, 0.111, 0.103),
+        (1024, "on-demand", 0.759, 0.955, 0.816),
+        (1024, "pre-fetch", 0.758, 0.913, 0.804),
+        (8192, "on-demand", 6.396, 11.801, 7.882),
+        (8192, "pre-fetch", 7.215, 9.452, 8.537),
+    ];
+    let rows = stall::stall_table(&Technology::epiphany3(), 500, 7);
+    let mut t = Table::new(
+        "Table 2 — measured (simulated) vs paper (ms)",
+        &["size", "mode", "min", "max", "mean", "paper min", "paper max", "paper mean"],
+    );
+    for (r, (size, mode, pmin, pmax, pmean)) in rows.iter().zip(paper) {
+        assert_eq!((r.size, r.mode), (size, mode));
+        t.row(&[
+            format!("{size}B"),
+            mode.to_string(),
+            f3(r.min_ms),
+            f3(r.max_ms),
+            f3(r.mean_ms),
+            f3(pmin),
+            f3(pmax),
+            f3(pmean),
+        ]);
+    }
+    print!("{}", t.render());
+    t.save_csv("reports", "table2_stall").ok();
+}

@@ -1,0 +1,108 @@
+//! Benchmark harness (criterion is not in the offline crate set).
+//!
+//! Used by the `benches/` targets (built with `harness = false`): warmup,
+//! timed iterations with outlier-robust statistics, and paper-style table
+//! printing via [`crate::metrics::Table`]. Most of our benches measure
+//! *virtual* time produced by the simulator (deterministic), so the value
+//! being summarised is passed in rather than wall-clocked; [`time_wall`]
+//! covers the genuinely wall-clock cases (L3 hot-path perf work).
+
+use std::time::Instant;
+
+use crate::sim::OnlineStats;
+
+/// Result of a measurement series.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// Label for reports.
+    pub name: String,
+    /// Sample statistics (units defined by the caller; seconds for wall).
+    pub stats: OnlineStats,
+}
+
+impl Measurement {
+    /// Mean of the series.
+    pub fn mean(&self) -> f64 {
+        self.stats.mean()
+    }
+
+    /// Relative standard deviation (0 when degenerate).
+    pub fn rsd(&self) -> f64 {
+        if self.stats.mean() == 0.0 {
+            0.0
+        } else {
+            self.stats.stddev() / self.stats.mean()
+        }
+    }
+
+    /// One-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} mean {:>12.6} (min {:.6}, max {:.6}, n={}, rsd {:.1}%)",
+            self.name,
+            self.mean(),
+            self.stats.min().unwrap_or(0.0),
+            self.stats.max().unwrap_or(0.0),
+            self.stats.count(),
+            self.rsd() * 100.0
+        )
+    }
+}
+
+/// Summarise a series of pre-computed values (virtual-time benches).
+pub fn series(name: impl Into<String>, values: impl IntoIterator<Item = f64>) -> Measurement {
+    let mut stats = OnlineStats::new();
+    for v in values {
+        stats.push(v);
+    }
+    Measurement { name: name.into(), stats }
+}
+
+/// Wall-clock a closure: `warmup` unmeasured runs then `iters` timed runs.
+/// Returns seconds-per-iteration statistics.
+pub fn time_wall<F: FnMut()>(
+    name: impl Into<String>,
+    warmup: usize,
+    iters: usize,
+    mut f: F,
+) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut stats = OnlineStats::new();
+    for _ in 0..iters.max(1) {
+        let t = Instant::now();
+        f();
+        stats.push(t.elapsed().as_secs_f64());
+    }
+    Measurement { name: name.into(), stats }
+}
+
+/// Print a bench header (keeps bench output grep-able).
+pub fn banner(name: &str, detail: &str) {
+    println!("\n######## bench: {name} ########");
+    if !detail.is_empty() {
+        println!("# {detail}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_statistics() {
+        let m = series("s", [1.0, 2.0, 3.0]);
+        assert_eq!(m.mean(), 2.0);
+        assert!(m.summary().contains("n=3"));
+    }
+
+    #[test]
+    fn wall_clock_counts_iterations() {
+        let mut calls = 0;
+        let m = time_wall("w", 2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(m.stats.count(), 5);
+        assert!(m.mean() >= 0.0);
+    }
+}

@@ -1,0 +1,185 @@
+//! One 1 KB channel cell: the unit of host↔core transfer concurrency.
+//!
+//! State machine (all transitions stamped with virtual time):
+//!
+//! ```text
+//!   Free ──issue──▶ Requested ──service──▶ Serviced ──consume──▶ Free
+//! ```
+//!
+//! A cell in `Requested` is waiting for the host service thread; `Serviced`
+//! holds response data until the core consumes it. The non-blocking
+//! `ready()` test of §4 is "is my cell `Serviced` with `ready_at ≤ now`?".
+
+use super::protocol::Request;
+use crate::error::{Error, Result};
+use crate::sim::Time;
+
+/// Cell occupancy state.
+#[derive(Debug, Clone, Default)]
+pub enum CellState {
+    /// Unoccupied, available for a new request.
+    #[default]
+    Free,
+    /// Holds a deposited request awaiting host service.
+    Requested(Request),
+    /// Host pulled the request and is working on it.
+    Servicing,
+    /// Host finished at `ready_at`; `data` holds read payloads.
+    Serviced { ready_at: Time, data: Vec<f32> },
+}
+
+/// One cell plus bookkeeping counters.
+#[derive(Debug, Clone, Default)]
+pub struct Cell {
+    state: CellState,
+    /// Generation counter: stale handles are detected by generation.
+    generation: u64,
+}
+
+impl Cell {
+    /// Whether a new request may be deposited.
+    pub fn is_free(&self) -> bool {
+        matches!(self.state, CellState::Free)
+    }
+
+    /// Current generation (bumped when the cell is freed).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Deposit a request. Errors if occupied.
+    pub fn issue(&mut self, req: Request) -> Result<()> {
+        if !self.is_free() {
+            return Err(Error::Channel("cell occupied".into()));
+        }
+        if !req.fits_cell() {
+            return Err(Error::Channel(format!(
+                "request of {} elems exceeds the 1 KB cell payload",
+                req.kind.elems()
+            )));
+        }
+        self.state = CellState::Requested(req);
+        Ok(())
+    }
+
+    /// Take the pending request for servicing (host side).
+    pub fn begin_service(&mut self) -> Result<Request> {
+        match std::mem::replace(&mut self.state, CellState::Servicing) {
+            CellState::Requested(r) => Ok(r),
+            other => {
+                self.state = other;
+                Err(Error::Channel("begin_service on non-requested cell".into()))
+            }
+        }
+    }
+
+    /// Publish the service result (host side). The cell must be mid-service.
+    pub fn complete(&mut self, ready_at: Time, data: Vec<f32>) -> Result<()> {
+        if !matches!(self.state, CellState::Servicing) {
+            return Err(Error::Channel("complete on non-servicing cell".into()));
+        }
+        self.state = CellState::Serviced { ready_at, data };
+        Ok(())
+    }
+
+    /// Non-blocking completion test at virtual time `now`.
+    pub fn ready(&self, now: Time) -> bool {
+        matches!(&self.state, CellState::Serviced { ready_at, .. } if *ready_at <= now)
+    }
+
+    /// When the response lands (None unless serviced).
+    pub fn ready_at(&self) -> Option<Time> {
+        match &self.state {
+            CellState::Serviced { ready_at, .. } => Some(*ready_at),
+            _ => None,
+        }
+    }
+
+    /// Consume the response, freeing the cell (core side).
+    pub fn consume(&mut self, now: Time) -> Result<Vec<f32>> {
+        match &self.state {
+            CellState::Serviced { ready_at, .. } if *ready_at <= now => {
+                let CellState::Serviced { data, .. } = std::mem::take(&mut self.state) else {
+                    unreachable!()
+                };
+                self.generation += 1;
+                Ok(data)
+            }
+            CellState::Serviced { ready_at, .. } => Err(Error::Channel(format!(
+                "consume at t={now} before response lands at t={ready_at}"
+            ))),
+            _ => Err(Error::Channel("consume on unserviced cell".into())),
+        }
+    }
+
+    /// Peek at the pending request without consuming (host scheduling).
+    pub fn pending(&self) -> Option<&Request> {
+        match &self.state {
+            CellState::Requested(r) => Some(r),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::protocol::RequestKind;
+    use crate::memory::DataRef;
+
+    fn req(len: usize) -> Request {
+        Request {
+            core: 0,
+            kind: RequestKind::Read { dref: DataRef { id: 1, offset: 0, len: 1000 }, off: 0, len },
+            issued_at: 10,
+        }
+    }
+
+    #[test]
+    fn lifecycle_free_requested_serviced_free() {
+        let mut c = Cell::default();
+        assert!(c.is_free());
+        c.issue(req(4)).unwrap();
+        assert!(!c.is_free());
+        assert!(c.pending().is_some());
+        let r = c.begin_service().unwrap();
+        assert_eq!(r.kind.elems(), 4);
+        c.complete(100, vec![1.0; 4]).unwrap();
+        assert!(!c.ready(50), "not ready before ready_at");
+        assert!(c.ready(100));
+        let data = c.consume(100).unwrap();
+        assert_eq!(data.len(), 4);
+        assert!(c.is_free());
+        assert_eq!(c.generation(), 1);
+    }
+
+    #[test]
+    fn double_issue_rejected() {
+        let mut c = Cell::default();
+        c.issue(req(1)).unwrap();
+        assert!(c.issue(req(1)).is_err());
+    }
+
+    #[test]
+    fn oversized_request_rejected() {
+        let mut c = Cell::default();
+        assert!(c.issue(req(300)).is_err());
+    }
+
+    #[test]
+    fn early_consume_rejected() {
+        let mut c = Cell::default();
+        c.issue(req(1)).unwrap();
+        c.begin_service().unwrap();
+        c.complete(100, vec![0.0]).unwrap();
+        assert!(c.consume(99).is_err());
+        assert!(c.consume(100).is_ok());
+    }
+
+    #[test]
+    fn service_requires_request() {
+        let mut c = Cell::default();
+        assert!(c.begin_service().is_err());
+        assert!(c.complete(0, vec![]).is_err());
+    }
+}

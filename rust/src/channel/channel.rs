@@ -1,0 +1,210 @@
+//! A core's channel: 32 cells plus handle management and backpressure.
+//!
+//! The VM runtime's non-blocking primitives return a [`Handle`]
+//! ("Non-blocking external data access functions ... return a handle which
+//! corresponds to a specific data transfer cell in the micro-core's
+//! channel. A *ready* function is provided by the runtime to test for
+//! completion", §4). Handles carry the cell generation so a stale handle
+//! (cell recycled) is an error rather than silent corruption.
+//!
+//! When all 32 cells are occupied the channel exerts backpressure: `issue`
+//! returns `None` and the core must stall until a response is consumed —
+//! the regime the on-demand ML benchmark collapses into (§5.1).
+
+use super::cell::Cell;
+use super::protocol::{Request, CELLS_PER_CHANNEL};
+use crate::error::{Error, Result};
+use crate::sim::Time;
+
+/// Opaque transfer handle (core-local).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Handle {
+    /// Cell index in the channel.
+    pub cell: usize,
+    /// Cell generation at issue time (stale-handle detection).
+    pub generation: u64,
+}
+
+/// Per-core channel of [`CELLS_PER_CHANNEL`] cells.
+#[derive(Debug, Clone)]
+pub struct Channel {
+    core: usize,
+    cells: Vec<Cell>,
+    issued: u64,
+    stalled_no_cell: u64,
+    peak_occupancy: usize,
+}
+
+impl Channel {
+    /// Channel for `core`.
+    pub fn new(core: usize) -> Self {
+        Channel {
+            core,
+            cells: vec![Cell::default(); CELLS_PER_CHANNEL],
+            issued: 0,
+            stalled_no_cell: 0,
+            peak_occupancy: 0,
+        }
+    }
+
+    /// Owning core id.
+    pub fn core(&self) -> usize {
+        self.core
+    }
+
+    /// Deposit a request in a free cell. `None` ⇒ channel full
+    /// (backpressure; the caller stalls and the event is counted).
+    pub fn issue(&mut self, req: Request) -> Result<Option<Handle>> {
+        let Some(idx) = self.cells.iter().position(Cell::is_free) else {
+            self.stalled_no_cell += 1;
+            return Ok(None);
+        };
+        let generation = self.cells[idx].generation();
+        self.cells[idx].issue(req)?;
+        self.issued += 1;
+        let occ = self.occupancy();
+        self.peak_occupancy = self.peak_occupancy.max(occ);
+        Ok(Some(Handle { cell: idx, generation }))
+    }
+
+    /// Cells currently occupied.
+    pub fn occupancy(&self) -> usize {
+        self.cells.iter().filter(|c| !c.is_free()).count()
+    }
+
+    /// Peak simultaneous occupancy seen.
+    pub fn peak_occupancy(&self) -> usize {
+        self.peak_occupancy
+    }
+
+    /// Total requests issued.
+    pub fn issued(&self) -> u64 {
+        self.issued
+    }
+
+    /// Times a request found no free cell.
+    pub fn stalls(&self) -> u64 {
+        self.stalled_no_cell
+    }
+
+    fn check(&self, h: Handle) -> Result<()> {
+        if h.cell >= self.cells.len() {
+            return Err(Error::Channel(format!("bad cell index {}", h.cell)));
+        }
+        if self.cells[h.cell].generation() != h.generation {
+            return Err(Error::Channel(format!(
+                "stale handle: cell {} recycled (gen {} vs {})",
+                h.cell,
+                self.cells[h.cell].generation(),
+                h.generation
+            )));
+        }
+        Ok(())
+    }
+
+    /// Host side: pull the request out of a cell for servicing.
+    pub fn begin_service(&mut self, h: Handle) -> Result<Request> {
+        self.check(h)?;
+        self.cells[h.cell].begin_service()
+    }
+
+    /// Host side: publish a response landing at `ready_at`.
+    pub fn complete(&mut self, h: Handle, ready_at: Time, data: Vec<f32>) -> Result<()> {
+        self.check(h)?;
+        self.cells[h.cell].complete(ready_at, data)
+    }
+
+    /// Core side: the §4 `ready` test.
+    pub fn ready(&self, h: Handle, now: Time) -> Result<bool> {
+        self.check(h)?;
+        Ok(self.cells[h.cell].ready(now))
+    }
+
+    /// When the response for `h` lands (None until serviced).
+    pub fn ready_at(&self, h: Handle) -> Result<Option<Time>> {
+        self.check(h)?;
+        Ok(self.cells[h.cell].ready_at())
+    }
+
+    /// Core side: consume a ready response, freeing the cell.
+    pub fn consume(&mut self, h: Handle, now: Time) -> Result<Vec<f32>> {
+        self.check(h)?;
+        self.cells[h.cell].consume(now)
+    }
+
+    /// Earliest completion time among occupied (serviced) cells — the time
+    /// at which a currently-full channel will next free a cell.
+    pub fn earliest_ready_at(&self) -> Option<Time> {
+        self.cells.iter().filter_map(Cell::ready_at).min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::protocol::RequestKind;
+    use crate::memory::DataRef;
+
+    fn req(len: usize) -> Request {
+        Request {
+            core: 0,
+            kind: RequestKind::Read { dref: DataRef { id: 1, offset: 0, len: 100_000 }, off: 0, len },
+            issued_at: 0,
+        }
+    }
+
+    #[test]
+    fn thirty_two_concurrent_then_backpressure() {
+        let mut ch = Channel::new(0);
+        let mut handles = Vec::new();
+        for _ in 0..CELLS_PER_CHANNEL {
+            handles.push(ch.issue(req(1)).unwrap().expect("cell free"));
+        }
+        assert_eq!(ch.occupancy(), 32);
+        // 33rd concurrent transfer: channel full.
+        assert!(ch.issue(req(1)).unwrap().is_none());
+        assert_eq!(ch.stalls(), 1);
+        // Service + consume one, then a new issue succeeds.
+        let h = handles[0];
+        ch.begin_service(h).unwrap();
+        ch.complete(h, 50, vec![1.0]).unwrap();
+        assert_eq!(ch.consume(h, 50).unwrap(), vec![1.0]);
+        assert!(ch.issue(req(1)).unwrap().is_some());
+        assert_eq!(ch.peak_occupancy(), 32);
+    }
+
+    #[test]
+    fn stale_handle_detected_after_recycle() {
+        let mut ch = Channel::new(0);
+        let h = ch.issue(req(1)).unwrap().unwrap();
+        ch.begin_service(h).unwrap();
+        ch.complete(h, 0, vec![0.0]).unwrap();
+        ch.consume(h, 0).unwrap();
+        // Reuse the same cell.
+        let h2 = ch.issue(req(1)).unwrap().unwrap();
+        assert_eq!(h2.cell, h.cell);
+        assert_ne!(h2.generation, h.generation);
+        assert!(ch.ready(h, 0).is_err(), "old handle is stale");
+        assert!(ch.ready(h2, 0).is_ok());
+    }
+
+    #[test]
+    fn ready_tracks_virtual_time() {
+        let mut ch = Channel::new(3);
+        let h = ch.issue(req(8)).unwrap().unwrap();
+        ch.begin_service(h).unwrap();
+        ch.complete(h, 1000, vec![0.0; 8]).unwrap();
+        assert!(!ch.ready(h, 999).unwrap());
+        assert!(ch.ready(h, 1000).unwrap());
+        assert_eq!(ch.ready_at(h).unwrap(), Some(1000));
+    }
+
+    #[test]
+    fn issued_counter_counts() {
+        let mut ch = Channel::new(0);
+        for _ in 0..5 {
+            ch.issue(req(1)).unwrap().unwrap();
+        }
+        assert_eq!(ch.issued(), 5);
+    }
+}

@@ -1,0 +1,23 @@
+//! The Fig. 2 communications architecture.
+//!
+//! "A number of *channels* are constructed, one per core, and each channel
+//! contains thirty two 1KB *cells*. This enables up to thirty two
+//! concurrent transfers between the host CPU and each micro-core." (§4)
+//!
+//! * [`protocol`] — the request/response frames that travel through cells:
+//!   blocking and non-blocking reads/writes of external data, with the
+//!   framing overhead accounted in bytes.
+//! * [`cell`] — one 1 KB cell's state machine
+//!   (`Free → Requested → Serviced → Consumed`).
+//! * [`channel`] — a core's 32-cell channel: handle allocation,
+//!   backpressure (no free cell ⇒ the core must stall — the §5.1
+//!   "swamps the communication channels" regime), and the `ready()`
+//!   completion test the VM runtime polls.
+
+pub mod cell;
+pub mod channel;
+pub mod protocol;
+
+pub use cell::{Cell, CellState};
+pub use channel::{Channel, Handle};
+pub use protocol::{Request, RequestKind, CELLS_PER_CHANNEL, CELL_PAYLOAD_BYTES, FRAME_HEADER_BYTES};

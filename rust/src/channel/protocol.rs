@@ -1,0 +1,118 @@
+//! Request/response frames carried by channel cells.
+//!
+//! A request names a [`DataRef`] view plus an element window; the host
+//! decodes the reference through the [`crate::memory::MemRegistry`] and
+//! answers with data (reads) or an acknowledgement (writes). Frames carry a
+//! fixed header; payloads are capped by the 1 KB cell size, so larger
+//! transfers are split across cells by the issuing side (the pre-fetch
+//! engine) — exactly why pre-fetching "retrieves data in chunks" while
+//! on-demand pays a full round-trip per element.
+
+use crate::memory::DataRef;
+use crate::sim::Time;
+
+/// Cells per channel (§4: "thirty two 1KB cells").
+pub const CELLS_PER_CHANNEL: usize = 32;
+
+/// Payload capacity of one cell, bytes.
+pub const CELL_PAYLOAD_BYTES: usize = 1024;
+
+/// Frame header: ref id + offsets + lengths + flags (modelled, not packed).
+pub const FRAME_HEADER_BYTES: usize = 32;
+
+/// Maximum f32 elements movable in one cell.
+pub const CELL_PAYLOAD_ELEMS: usize = CELL_PAYLOAD_BYTES / 4;
+
+/// What a request asks the host to do.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RequestKind {
+    /// Read `len` elements at `off` (view-relative) from `dref`.
+    Read { dref: DataRef, off: usize, len: usize },
+    /// Write `data` at `off` (view-relative) into `dref`.
+    Write { dref: DataRef, off: usize, data: Vec<f32> },
+}
+
+impl RequestKind {
+    /// Elements moved by this request.
+    pub fn elems(&self) -> usize {
+        match self {
+            RequestKind::Read { len, .. } => *len,
+            RequestKind::Write { data, .. } => data.len(),
+        }
+    }
+
+    /// Payload bytes crossing the link for this request (header + data).
+    ///
+    /// Reads move the payload host→core; writes core→host. Either way the
+    /// link is half-duplex shared memory, so the cost model charges the
+    /// same.
+    pub fn wire_bytes(&self) -> u64 {
+        (FRAME_HEADER_BYTES + self.elems() * 4) as u64
+    }
+
+    /// The reference this request targets.
+    pub fn dref(&self) -> DataRef {
+        match self {
+            RequestKind::Read { dref, .. } | RequestKind::Write { dref, .. } => *dref,
+        }
+    }
+
+    /// True for writes (used by the access-modifier logic: read-only
+    /// arguments must never generate these).
+    pub fn is_write(&self) -> bool {
+        matches!(self, RequestKind::Write { .. })
+    }
+}
+
+/// A request as it sits in a cell awaiting / undergoing service.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Issuing core.
+    pub core: usize,
+    /// What to do.
+    pub kind: RequestKind,
+    /// Virtual time the core deposited the request.
+    pub issued_at: Time,
+}
+
+impl Request {
+    /// Validate against the cell payload limit.
+    pub fn fits_cell(&self) -> bool {
+        self.kind.elems() <= CELL_PAYLOAD_ELEMS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dref() -> DataRef {
+        DataRef { id: 1, offset: 0, len: 1000 }
+    }
+
+    #[test]
+    fn wire_bytes_includes_header() {
+        let r = RequestKind::Read { dref: dref(), off: 0, len: 1 };
+        assert_eq!(r.wire_bytes(), 32 + 4);
+        let w = RequestKind::Write { dref: dref(), off: 0, data: vec![0.0; 10] };
+        assert_eq!(w.wire_bytes(), 32 + 40);
+        assert!(w.is_write());
+    }
+
+    #[test]
+    fn cell_capacity_is_256_elems() {
+        assert_eq!(CELL_PAYLOAD_ELEMS, 256);
+        let ok = Request {
+            core: 0,
+            kind: RequestKind::Read { dref: dref(), off: 0, len: 256 },
+            issued_at: 0,
+        };
+        assert!(ok.fits_cell());
+        let too_big = Request {
+            core: 0,
+            kind: RequestKind::Read { dref: dref(), off: 0, len: 257 },
+            issued_at: 0,
+        };
+        assert!(!too_big.fits_cell());
+    }
+}

@@ -1,0 +1,201 @@
+//! Command-line argument parsing (clap is not in the offline crate set).
+//!
+//! A small subcommand + flag parser: `--name value`, `--name=value`,
+//! boolean `--flag`, positional arguments, and generated help text. Used
+//! by the `microcore` binary and the examples.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+
+/// One declared flag.
+#[derive(Debug, Clone)]
+struct FlagSpec {
+    name: &'static str,
+    help: &'static str,
+    takes_value: bool,
+    default: Option<&'static str>,
+}
+
+/// Declarative argument parser.
+#[derive(Debug, Default)]
+pub struct Cli {
+    program: &'static str,
+    about: &'static str,
+    flags: Vec<FlagSpec>,
+}
+
+/// Parsed arguments.
+#[derive(Debug)]
+pub struct Args {
+    values: HashMap<&'static str, String>,
+    bools: HashMap<&'static str, bool>,
+    /// Positional arguments in order.
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    /// New parser for `program`.
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Cli { program, about, flags: Vec::new() }
+    }
+
+    /// Declare a value flag with an optional default.
+    pub fn opt(mut self, name: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, takes_value: true, default });
+        self
+    }
+
+    /// Declare a boolean flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, takes_value: false, default: None });
+        self
+    }
+
+    /// Render help text.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for f in &self.flags {
+            let head = if f.takes_value {
+                format!("  --{} <value>", f.name)
+            } else {
+                format!("  --{}", f.name)
+            };
+            s.push_str(&format!("{head:<28} {}", f.help));
+            if let Some(d) = f.default {
+                s.push_str(&format!(" [default: {d}]"));
+            }
+            s.push('\n');
+        }
+        s.push_str("  --help                     show this help\n");
+        s
+    }
+
+    /// Parse an argument list (no program name). Returns `Ok(None)` when
+    /// `--help` was requested (caller prints help and exits 0).
+    pub fn parse<I: IntoIterator<Item = String>>(&self, argv: I) -> Result<Option<Args>> {
+        let mut values: HashMap<&'static str, String> = HashMap::new();
+        let mut bools: HashMap<&'static str, bool> = HashMap::new();
+        for f in &self.flags {
+            if f.takes_value {
+                if let Some(d) = f.default {
+                    values.insert(f.name, d.to_string());
+                }
+            } else {
+                bools.insert(f.name, false);
+            }
+        }
+        let mut positional = Vec::new();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                return Ok(None);
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| Error::Config(format!("unknown flag --{name}")))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| Error::Config(format!("--{name} needs a value")))?,
+                    };
+                    values.insert(spec.name, v);
+                } else {
+                    if inline.is_some() {
+                        return Err(Error::Config(format!("--{name} takes no value")));
+                    }
+                    bools.insert(spec.name, true);
+                }
+            } else {
+                positional.push(arg);
+            }
+        }
+        Ok(Some(Args { values, bools, positional }))
+    }
+}
+
+impl Args {
+    /// String value of a flag (present via default or explicitly).
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    /// Required string value.
+    pub fn req(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| Error::Config(format!("missing --{name}")))
+    }
+
+    /// Parse a typed value.
+    pub fn parse_as<T: std::str::FromStr>(&self, name: &str) -> Result<T> {
+        let raw = self.req(name)?;
+        raw.parse().map_err(|_| Error::Config(format!("--{name}: cannot parse '{raw}'")))
+    }
+
+    /// Boolean flag state.
+    pub fn is_set(&self, name: &str) -> bool {
+        self.bools.get(name).copied().unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("tech", Some("epiphany"), "technology")
+            .opt("images", Some("4"), "image count")
+            .flag("trace", "enable tracing")
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cli().parse(argv(&["--images", "8", "run"])).unwrap().unwrap();
+        assert_eq!(a.get("tech"), Some("epiphany"));
+        assert_eq!(a.parse_as::<usize>("images").unwrap(), 8);
+        assert_eq!(a.positional, vec!["run"]);
+        assert!(!a.is_set("trace"));
+    }
+
+    #[test]
+    fn equals_syntax_and_bools() {
+        let a = cli().parse(argv(&["--tech=microblaze", "--trace"])).unwrap().unwrap();
+        assert_eq!(a.get("tech"), Some("microblaze"));
+        assert!(a.is_set("trace"));
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(cli().parse(argv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(cli().parse(argv(&["--images"])).is_err());
+    }
+
+    #[test]
+    fn help_short_circuits() {
+        assert!(cli().parse(argv(&["--help"])).unwrap().is_none());
+        assert!(cli().help().contains("--tech"));
+    }
+
+    #[test]
+    fn typed_parse_errors() {
+        let a = cli().parse(argv(&["--images", "xyz"])).unwrap().unwrap();
+        assert!(a.parse_as::<usize>("images").is_err());
+    }
+}

@@ -1,0 +1,203 @@
+//! Typed experiment configuration.
+//!
+//! Benches, examples and the CLI all describe a run the same way: which
+//! technology, which transfer mode, image geometry, pre-fetch parameters
+//! and seed. Configs load from JSON (`--config run.json`) with every field
+//! optional and defaulted, and can be round-tripped back to JSON so runs
+//! are reproducible artifacts.
+
+use super::json::Json;
+use crate::error::{Error, Result};
+
+/// A fully-resolved experiment description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    /// Technology preset name (resolved via `Technology::by_name`).
+    pub technology: String,
+    /// Transfer mode: "eager", "on-demand" or "prefetch".
+    pub mode: String,
+    /// Total image pixels (split across cores).
+    pub image_pixels: usize,
+    /// Hidden-layer width.
+    pub hidden: usize,
+    /// Images per run (batch).
+    pub images: usize,
+    /// Pre-fetch: elements reserved on-core for each argument's buffer.
+    pub prefetch_buffer: usize,
+    /// Pre-fetch: elements fetched per request.
+    pub prefetch_elems: usize,
+    /// Pre-fetch: issue distance (elements ahead of use).
+    pub prefetch_distance: usize,
+    /// RNG seed.
+    pub seed: u64,
+    /// Host service threads.
+    pub service_threads: usize,
+    /// Artifacts directory.
+    pub artifacts_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            technology: "epiphany".into(),
+            mode: "prefetch".into(),
+            image_pixels: 3600,
+            hidden: 100,
+            images: 4,
+            prefetch_buffer: 240,
+            prefetch_elems: 120,
+            prefetch_distance: 120,
+            seed: 42,
+            service_threads: 1,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse from a JSON document; absent fields keep defaults.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut c = ExperimentConfig::default();
+        if !matches!(j, Json::Obj(_)) {
+            return Err(Error::Config("experiment config must be a JSON object".into()));
+        }
+        if let Some(v) = j.get("technology") {
+            c.technology = v
+                .as_str()
+                .ok_or_else(|| Error::Config("'technology' must be a string".into()))?
+                .to_string();
+        }
+        if let Some(v) = j.get("mode") {
+            let m = v.as_str().ok_or_else(|| Error::Config("'mode' must be a string".into()))?;
+            if !matches!(m, "eager" | "on-demand" | "prefetch") {
+                return Err(Error::Config(format!(
+                    "'mode' must be eager|on-demand|prefetch, got '{m}'"
+                )));
+            }
+            c.mode = m.to_string();
+        }
+        let usize_field = |field: &str| -> Result<Option<usize>> {
+            match j.get(field) {
+                None => Ok(None),
+                Some(v) => v.as_usize().map(Some).ok_or_else(|| {
+                    Error::Config(format!("'{field}' must be a non-negative integer"))
+                }),
+            }
+        };
+        if let Some(n) = usize_field("image_pixels")? {
+            c.image_pixels = n;
+        }
+        if let Some(n) = usize_field("hidden")? {
+            c.hidden = n;
+        }
+        if let Some(n) = usize_field("images")? {
+            c.images = n;
+        }
+        if let Some(n) = usize_field("prefetch_buffer")? {
+            c.prefetch_buffer = n;
+        }
+        if let Some(n) = usize_field("prefetch_elems")? {
+            c.prefetch_elems = n;
+        }
+        if let Some(n) = usize_field("prefetch_distance")? {
+            c.prefetch_distance = n;
+        }
+        if let Some(n) = usize_field("service_threads")? {
+            c.service_threads = n;
+        }
+        if let Some(v) = j.get("seed") {
+            c.seed =
+                v.as_u64().ok_or_else(|| Error::Config("'seed' must be a non-negative integer".into()))?;
+        }
+        if let Some(v) = j.get("artifacts_dir") {
+            c.artifacts_dir = v
+                .as_str()
+                .ok_or_else(|| Error::Config("'artifacts_dir' must be a string".into()))?
+                .to_string();
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Parse from a JSON string.
+    pub fn from_str(src: &str) -> Result<Self> {
+        Self::from_json(&Json::parse(src)?)
+    }
+
+    /// Structural sanity checks.
+    pub fn validate(&self) -> Result<()> {
+        if self.image_pixels == 0 || self.hidden == 0 || self.images == 0 {
+            return Err(Error::Config("image_pixels/hidden/images must be positive".into()));
+        }
+        if self.mode == "prefetch" {
+            if self.prefetch_elems == 0 || self.prefetch_buffer == 0 {
+                return Err(Error::Config("prefetch parameters must be positive".into()));
+            }
+            if self.prefetch_elems > self.prefetch_buffer {
+                return Err(Error::Config(
+                    "prefetch_elems cannot exceed prefetch_buffer".into(),
+                ));
+            }
+        }
+        if self.service_threads == 0 {
+            return Err(Error::Config("service_threads must be ≥ 1".into()));
+        }
+        Ok(())
+    }
+
+    /// Serialize (for run records).
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("technology".into(), Json::Str(self.technology.clone())),
+            ("mode".into(), Json::Str(self.mode.clone())),
+            ("image_pixels".into(), Json::Num(self.image_pixels as f64)),
+            ("hidden".into(), Json::Num(self.hidden as f64)),
+            ("images".into(), Json::Num(self.images as f64)),
+            ("prefetch_buffer".into(), Json::Num(self.prefetch_buffer as f64)),
+            ("prefetch_elems".into(), Json::Num(self.prefetch_elems as f64)),
+            ("prefetch_distance".into(), Json::Num(self.prefetch_distance as f64)),
+            ("seed".into(), Json::Num(self.seed as f64)),
+            ("service_threads".into(), Json::Num(self.service_threads as f64)),
+            ("artifacts_dir".into(), Json::Str(self.artifacts_dir.clone())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn partial_json_keeps_defaults() {
+        let c = ExperimentConfig::from_str(r#"{"technology": "microblaze", "images": 2}"#).unwrap();
+        assert_eq!(c.technology, "microblaze");
+        assert_eq!(c.images, 2);
+        assert_eq!(c.hidden, 100, "default kept");
+    }
+
+    #[test]
+    fn bad_mode_rejected() {
+        assert!(ExperimentConfig::from_str(r#"{"mode": "sideways"}"#).is_err());
+    }
+
+    #[test]
+    fn prefetch_invariants_enforced() {
+        let r = ExperimentConfig::from_str(
+            r#"{"mode": "prefetch", "prefetch_elems": 100, "prefetch_buffer": 50}"#,
+        );
+        assert!(r.is_err(), "elems > buffer must fail");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = ExperimentConfig::default();
+        let j = c.to_json().to_string_pretty();
+        let c2 = ExperimentConfig::from_str(&j).unwrap();
+        assert_eq!(c, c2);
+    }
+}

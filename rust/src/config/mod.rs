@@ -1,0 +1,12 @@
+//! Configuration: a JSON parser plus typed experiment configs.
+//!
+//! The offline crate set has no `serde`, so [`json`] implements the small,
+//! strict JSON subset this project needs (the AOT `manifest.json`, the
+//! experiment configuration files under `configs/`, and CSV/JSON report
+//! emission). [`experiment`] layers typed accessors and defaults on top.
+
+pub mod experiment;
+pub mod json;
+
+pub use experiment::ExperimentConfig;
+pub use json::Json;

@@ -1,0 +1,979 @@
+//! The offload engine: a deterministic min-clock discrete-event scheduler.
+//!
+//! Each participating core runs a resumable [`Interp`]; the engine
+//! interleaves them with the channel protocol, the host service, the
+//! shared link and PJRT tensor execution, all over virtual time.
+//!
+//! **Scheduling discipline (exactness).** Every core has a *candidate
+//! time*: its local clock (runnable / produced an outcome), its pending
+//! transfer's arrival time (blocked), or its channel's next free-cell time
+//! (backpressured). The engine always services the core with the minimum
+//! candidate. Cores interact *only* through the host service and link
+//! resources, and every resource allocation happens at the picked core's
+//! candidate time — a non-decreasing sequence — so FCFS resource order
+//! equals virtual-time order and the simulation is exact, not approximate.
+//!
+//! **Numerics are real.** Element reads return the variable's actual
+//! contents from the [`MemRegistry`]; writes land in it; tensor builtins
+//! execute the AOT-compiled JAX/Pallas artifacts through PJRT. The same
+//! run that produces the paper's timing figures trains the actual model.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::channel::protocol::{Request, RequestKind, FRAME_HEADER_BYTES};
+use crate::channel::{Channel, Handle};
+use crate::device::{ComputeModel, PowerModel, Scratchpad, Technology};
+use crate::error::{Error, Result};
+use crate::memory::{DataRef, Level, MemRegistry};
+use crate::runtime::ModelExecutor;
+use crate::sim::{Rng, Time, Trace};
+use crate::vm::{Builtin, CostCounters, Interp, Outcome, TensorOp, Value};
+
+use super::marshal::BoundArg;
+use super::offload::{CoreReport, Kernel, OffloadOptions, OffloadResult};
+use super::prefetch::{PrefetchState, ReadPlan};
+use super::service::HostService;
+use super::Access;
+
+/// Aggregate engine statistics (monotonic across offloads).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineStats {
+    /// Offloads executed.
+    pub offloads: u64,
+    /// Channel requests serviced.
+    pub requests: u64,
+    /// Bytes moved by tensor-builtin DMA.
+    pub dma_bytes: u64,
+    /// Bytes moved by eager argument copies.
+    pub eager_bytes: u64,
+    /// Eager arguments spilled to by-reference (didn't fit on-core).
+    pub spills: u64,
+    /// Tensor builtins executed natively because no PJRT executor was
+    /// attached (pure-VM sessions).
+    pub native_fallbacks: u64,
+    /// Total PJRT tensor-builtin executions.
+    pub tensor_ops: u64,
+}
+
+/// Outcome summary of one engine-level offload (see also
+/// [`OffloadResult`], which the offload layer assembles from this).
+pub type OffloadOutcome = OffloadResult;
+
+#[derive(Debug)]
+struct ExtBind {
+    dref: DataRef,
+    level: Level,
+    access: Access,
+    pf: Option<PrefetchState>,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum WaitCtx {
+    OnDemandRead,
+    PrefetchRead { slot: usize, index: usize },
+    WriteAck,
+}
+
+enum Status {
+    /// VM not yet started; candidate = start time.
+    Fresh,
+    /// VM produced an outcome at `clock`; service it in global order.
+    Pending(Outcome),
+    /// Blocked on a transfer.
+    Waiting { handle: Handle, ctx: WaitCtx, ready_at: Time },
+    /// Channel was full; retry the outcome when a cell frees at `at`.
+    Retry { outcome: Outcome, at: Time },
+    /// Finished.
+    Done,
+}
+
+struct CoreRun {
+    id: usize,
+    vm: Interp,
+    clock: Time,
+    start: Time,
+    channel: Channel,
+    binds: Vec<ExtBind>,
+    status: Status,
+    stall: Time,
+    result: Option<Value>,
+    finished_at: Time,
+    last_counters: CostCounters,
+    eager_writebacks: Vec<(Rc<RefCell<Vec<f64>>>, DataRef)>,
+    autoconsume: Vec<Handle>,
+}
+
+/// The engine: owns the memory registry, device model and PJRT executor.
+pub struct Engine {
+    tech: Technology,
+    compute: ComputeModel,
+    registry: MemRegistry,
+    exec: Option<Rc<ModelExecutor>>,
+    service: HostService,
+    power: PowerModel,
+    hidden: usize,
+    now: Time,
+    trace: Trace,
+    stats: EngineStats,
+    /// Reusable tile buffers for the tensor-builtin path (perf pass #2:
+    /// gather/scatter previously allocated ~0.5 MB per call).
+    scratch_a: Vec<f32>,
+    scratch_b: Vec<f32>,
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("tech", &self.tech.name)
+            .field("now", &self.now)
+            .field("stats", &self.stats)
+            .finish()
+    }
+}
+
+impl Engine {
+    /// Build an engine for a technology. `exec` enables PJRT-backed tensor
+    /// builtins (pass `None` for pure-VM sessions — tensor builtins then
+    /// run native Rust fallbacks with identical numerics).
+    pub fn new(
+        tech: Technology,
+        service_threads: usize,
+        seed: u64,
+        exec: Option<ModelExecutor>,
+    ) -> Self {
+        let mut rng = Rng::new(seed);
+        let service = HostService::new(&tech, service_threads, rng.fork(1));
+        let compute = ComputeModel::new(&tech);
+        let power = PowerModel::new(&tech);
+        let hidden = exec.as_ref().map_or(100, |e| e.hidden());
+        Engine {
+            tech,
+            compute,
+            registry: MemRegistry::new(),
+            exec: exec.map(Rc::new),
+            service,
+            power,
+            hidden,
+            now: 0,
+            trace: Trace::disabled(),
+            stats: EngineStats::default(),
+            scratch_a: Vec::new(),
+            scratch_b: Vec::new(),
+        }
+    }
+
+    /// Enable event tracing (bounded).
+    pub fn enable_trace(&mut self, capacity: usize) {
+        self.trace = Trace::bounded(capacity);
+    }
+
+    /// The trace (render with [`Trace::render`]).
+    pub fn trace(&self) -> &Trace {
+        &self.trace
+    }
+
+    /// The technology preset in use.
+    pub fn tech(&self) -> &Technology {
+        &self.tech
+    }
+
+    /// Memory registry (allocate/read variables).
+    pub fn registry(&self) -> &MemRegistry {
+        &self.registry
+    }
+
+    /// Mutable registry access.
+    pub fn registry_mut(&mut self) -> &mut MemRegistry {
+        &mut self.registry
+    }
+
+    /// Host service (link stats, bandwidth degradation knobs).
+    pub fn service_mut(&mut self) -> &mut HostService {
+        &mut self.service
+    }
+
+    /// Host service (read-only).
+    pub fn service(&self) -> &HostService {
+        &self.service
+    }
+
+    /// Engine statistics.
+    pub fn stats(&self) -> EngineStats {
+        self.stats
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    /// Energy consumed so far (Joules, integrated over offloads).
+    pub fn energy(&self) -> f64 {
+        self.power.energy()
+    }
+
+    /// PJRT executor, if attached.
+    pub fn executor(&self) -> Option<&Rc<ModelExecutor>> {
+        self.exec.as_ref()
+    }
+
+    /// Run a kernel across cores (blocking collective, the paper's default).
+    pub fn offload(
+        &mut self,
+        kernel: &Kernel,
+        bound: Vec<Vec<BoundArg>>,
+        options: &OffloadOptions,
+        core_ids: &[usize],
+    ) -> Result<OffloadResult> {
+        debug_assert_eq!(bound.len(), core_ids.len());
+        let launch = self.now;
+        let mut spills = 0u64;
+        let mut cores: Vec<CoreRun> = Vec::with_capacity(core_ids.len());
+
+        // ---- launch: code push, eager copies, reference binding ----
+        for (pos, (&cid, args)) in core_ids.iter().zip(bound).enumerate() {
+            let mut spad =
+                Scratchpad::new(cid, self.tech.local_store, self.tech.vm_footprint);
+            // Kernel byte code + launch frame travel to every core via the
+            // direct path (the §5.1 "new data transfer mechanism").
+            let code_bytes = (kernel.code_bytes() + FRAME_HEADER_BYTES) as u64;
+            let mut start = self.service.push_code(launch, code_bytes);
+            self.stats.eager_bytes += code_bytes;
+
+            let mut values: Vec<Value> = Vec::with_capacity(args.len());
+            let mut binds: Vec<ExtBind> = Vec::new();
+            let mut ext_lens: Vec<usize> = Vec::new();
+            let mut eager_writebacks = Vec::new();
+
+            for arg in args {
+                match arg {
+                    BoundArg::Float(v) => values.push(Value::Float(v)),
+                    BoundArg::Int(v) => values.push(Value::Int(v)),
+                    BoundArg::Values(vals) => {
+                        // Small by-value array in the launch message: costs
+                        // launch transfer time and on-core space.
+                        let bytes = vals.len() * 4;
+                        spad.alloc(bytes)?;
+                        let done = self.service.push_code(launch, bytes as u64);
+                        self.stats.eager_bytes += bytes as u64;
+                        start = start.max(done);
+                        values.push(Value::array(vals));
+                    }
+                    BoundArg::EagerCopy { dref, access } => {
+                        let info = self.registry.info(dref)?;
+                        let bytes = dref.bytes();
+                        if spad.alloc(bytes).is_ok() {
+                            let data =
+                                self.registry.read_all(dref, Some(cid))?;
+                            let done =
+                                self.service.eager_push(launch, info.level, bytes as u64);
+                            self.stats.eager_bytes += bytes as u64;
+                            start = start.max(done);
+                            let arr: Vec<f64> = data.into_iter().map(f64::from).collect();
+                            let val = Value::array(arr);
+                            if access == Access::Mutable {
+                                eager_writebacks
+                                    .push((val.as_array().unwrap().clone(), dref));
+                            }
+                            values.push(val);
+                        } else {
+                            // ePython's overflow: data stays put, access
+                            // degrades to by-reference on demand (§2.2).
+                            spills += 1;
+                            self.stats.spills += 1;
+                            self.trace.emit(launch, cid, "spill", format!("{} B arg", bytes));
+                            let slot = binds.len();
+                            binds.push(ExtBind {
+                                dref,
+                                level: info.level,
+                                access,
+                                pf: None,
+                            });
+                            ext_lens.push(dref.len);
+                            values.push(Value::External(slot));
+                        }
+                    }
+                    BoundArg::External { dref, access, prefetch } => {
+                        let info = self.registry.info(dref)?;
+                        let slot = binds.len();
+                        let pf = match prefetch {
+                            Some(spec) => {
+                                // The buffer is real on-core memory (§3.1's
+                                // cost); reserve it.
+                                spad.alloc(spec.buffer_bytes()).map_err(|_| {
+                                    Error::ScratchpadExhausted {
+                                        core: cid,
+                                        requested: spec.buffer_bytes(),
+                                        free: spad.free_bytes(),
+                                    }
+                                })?;
+                                Some(PrefetchState::new(spec, dref.len)?)
+                            }
+                            None => None,
+                        };
+                        binds.push(ExtBind { dref, level: info.level, access, pf });
+                        ext_lens.push(dref.len);
+                        values.push(Value::External(slot));
+                    }
+                }
+            }
+
+            let mut vm = Interp::new(
+                kernel.program.clone(),
+                pos, // logical core index within this offload
+                core_ids.len(),
+                values,
+                ext_lens,
+            )?;
+            vm.set_fuel(options.fuel);
+            let last_counters = vm.counters();
+            cores.push(CoreRun {
+                id: cid,
+                vm,
+                clock: start,
+                start,
+                channel: Channel::new(cid),
+                binds,
+                status: Status::Fresh,
+                stall: 0,
+                result: None,
+                finished_at: start,
+                last_counters,
+                eager_writebacks,
+                autoconsume: Vec::new(),
+            });
+            self.trace.emit(launch, cid, "launch", format!("start at {start}"));
+        }
+
+        // Warm the pre-fetch streams: the host issues the initial fill at
+        // launch — before the cores even start — so transfer overlaps the
+        // kernel prologue (§3.1's whole point). Issuing everything at
+        // `launch` also keeps resource allocations in global time order
+        // (the cores' staggered code-push start times come later).
+        for c in cores.iter_mut() {
+            for slot in 0..c.binds.len() {
+                if c.binds[slot].pf.is_some() {
+                    Self::issue_prefetch_spans_at(
+                        &mut self.service,
+                        &mut self.registry,
+                        &mut self.stats,
+                        c,
+                        slot,
+                        0,
+                        launch,
+                    )?;
+                }
+            }
+        }
+
+        // ---- main scheduling loop ----
+        loop {
+            let mut best: Option<(usize, Time)> = None;
+            for (i, c) in cores.iter().enumerate() {
+                let cand = match &c.status {
+                    Status::Fresh => c.clock,
+                    Status::Pending(_) => c.clock,
+                    Status::Waiting { ready_at, .. } => (*ready_at).max(c.clock),
+                    Status::Retry { at, .. } => (*at).max(c.clock),
+                    Status::Done => continue,
+                };
+                if best.map_or(true, |(_, t)| cand < t) {
+                    best = Some((i, cand));
+                }
+            }
+            let Some((i, cand)) = best else { break };
+            self.step_core(&mut cores[i], cand)?;
+        }
+
+        // ---- teardown: copy-backs, reports, power ----
+        // Process in finish-time order so copy-back resource allocations
+        // stay globally time-ordered; reports re-sorted by core id after.
+        cores.sort_by_key(|c| c.finished_at);
+        let mut finish = launch;
+        let mut reports = Vec::with_capacity(cores.len());
+        let mut busy_total: Time = 0;
+        for mut c in cores {
+            // Mutable eager arguments copy back at completion.
+            for (arr, dref) in std::mem::take(&mut c.eager_writebacks) {
+                let data: Vec<f32> = arr.borrow().iter().map(|&v| v as f32).collect();
+                self.registry.write(dref, Some(c.id), 0, &data)?;
+                let done = self.service.service(c.finished_at, Level::Shared, dref.bytes() as u64);
+                c.finished_at = done;
+            }
+            finish = finish.max(c.finished_at);
+            busy_total += c.finished_at.saturating_sub(c.start).saturating_sub(c.stall);
+            reports.push(CoreReport {
+                core: c.id,
+                value: c.result.take().unwrap_or(Value::None),
+                finished_at: c.finished_at,
+                stall: c.stall,
+                counters: c.vm.counters(),
+                requests: c.channel.issued(),
+                peak_cells: c.channel.peak_occupancy(),
+                cell_stalls: c.channel.stalls(),
+            });
+        }
+        reports.sort_by_key(|r| {
+            core_ids.iter().position(|&id| id == r.core).unwrap_or(usize::MAX)
+        });
+        let duration = finish.saturating_sub(launch).max(1);
+        let utilization =
+            busy_total as f64 / (duration as f64 * self.tech.cores as f64);
+        self.power.advance(finish, utilization.min(1.0));
+        self.now = finish;
+        self.stats.offloads += 1;
+        Ok(OffloadResult { reports, launched_at: launch, finished_at: finish, spills })
+    }
+
+    /// Service one core at its candidate time.
+    fn step_core(&mut self, c: &mut CoreRun, cand: Time) -> Result<()> {
+        match std::mem::replace(&mut c.status, Status::Fresh) {
+            Status::Fresh => {
+                c.clock = c.clock.max(cand);
+                let out = c.vm.run()?;
+                self.charge_vm(c);
+                c.status = Status::Pending(out);
+            }
+            Status::Pending(out) => {
+                c.clock = c.clock.max(cand);
+                self.service_outcome(c, out)?;
+            }
+            Status::Waiting { handle, ctx, ready_at } => {
+                c.stall += ready_at.saturating_sub(c.clock);
+                c.clock = c.clock.max(ready_at);
+                let data = c.channel.consume(handle, c.clock)?;
+                self.stats.requests += 1;
+                match ctx {
+                    WaitCtx::OnDemandRead => {
+                        let v = f64::from(data[0]);
+                        let out = c.vm.resume(Value::Float(v))?;
+                        self.charge_vm(c);
+                        c.status = Status::Pending(out);
+                    }
+                    WaitCtx::WriteAck => {
+                        let out = c.vm.resume(Value::None)?;
+                        self.charge_vm(c);
+                        c.status = Status::Pending(out);
+                    }
+                    WaitCtx::PrefetchRead { slot, index } => {
+                        if let Some(pf) = c.binds[slot].pf.as_mut() {
+                            pf.on_arrival(handle, &data);
+                        }
+                        // Re-enter the read path with the data landed.
+                        self.service_outcome(c, Outcome::ExtRead { slot, index })?;
+                    }
+                }
+            }
+            Status::Retry { outcome, at } => {
+                c.stall += at.saturating_sub(c.clock);
+                c.clock = c.clock.max(at);
+                self.harvest(c);
+                self.service_outcome(c, outcome)?;
+            }
+            Status::Done => unreachable!("done cores are not scheduled"),
+        }
+        Ok(())
+    }
+
+    /// Convert the VM's cost delta since the last call into core time.
+    fn charge_vm(&self, c: &mut CoreRun) {
+        let now = c.vm.counters();
+        let dd = now.dispatches - c.last_counters.dispatches;
+        let df = now.flops - c.last_counters.flops;
+        c.last_counters = now;
+        c.clock += self.compute.dispatch(dd) + self.compute.compiled_flops(df);
+    }
+
+    /// Consume arrived responses (pre-fetch data, write acks) at `c.clock`.
+    fn harvest(&mut self, c: &mut CoreRun) {
+        // Write acks: consume silently.
+        let clock = c.clock;
+        c.autoconsume.retain(|&h| {
+            if c.channel.ready(h, clock).unwrap_or(false) {
+                let _ = c.channel.consume(h, clock);
+                self.stats.requests += 1;
+                false
+            } else {
+                true
+            }
+        });
+        // Pre-fetch arrivals.
+        for b in c.binds.iter_mut() {
+            if let Some(pf) = b.pf.as_mut() {
+                let arrived: Vec<Handle> = pf
+                    .inflight()
+                    .iter()
+                    .filter(|f| c.channel.ready(f.handle, clock).unwrap_or(false))
+                    .map(|f| f.handle)
+                    .collect();
+                for h in arrived {
+                    if let Ok(data) = c.channel.consume(h, clock) {
+                        self.stats.requests += 1;
+                        pf.on_arrival(h, &data);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Issue as many pending pre-fetch spans as cells allow for `slot`,
+    /// reading stream position `idx`, at the core's current clock.
+    fn issue_prefetch_spans(
+        service: &mut HostService,
+        registry: &mut MemRegistry,
+        stats: &mut EngineStats,
+        c: &mut CoreRun,
+        slot: usize,
+        idx: usize,
+    ) -> Result<usize> {
+        let at = c.clock;
+        Self::issue_prefetch_spans_at(service, registry, stats, c, slot, idx, at)
+    }
+
+    /// As [`Self::issue_prefetch_spans`] but at an explicit issue time
+    /// (the launch-time warm-up path).
+    fn issue_prefetch_spans_at(
+        service: &mut HostService,
+        registry: &mut MemRegistry,
+        stats: &mut EngineStats,
+        c: &mut CoreRun,
+        slot: usize,
+        idx: usize,
+        at: Time,
+    ) -> Result<usize> {
+        let b = &mut c.binds[slot];
+        let Some(pf) = b.pf.as_mut() else { return Ok(0) };
+        let spans = pf.spans_to_fetch(idx);
+        let mut issued = 0;
+        for (start, len) in spans {
+            let req = Request {
+                core: c.id,
+                kind: RequestKind::Read { dref: b.dref, off: start, len },
+                issued_at: at,
+            };
+            let wire = req.kind.wire_bytes();
+            match c.channel.issue(req)? {
+                Some(h) => {
+                    let mut data = vec![0.0f32; len];
+                    registry.read(b.dref, Some(c.id), start, &mut data)?;
+                    let ready = service.service(at, b.level, wire);
+                    c.channel.begin_service(h)?;
+                    c.channel.complete(h, ready, data)?;
+                    pf.on_issued(h, start, len);
+                    issued += 1;
+                }
+                None => break, // backpressure: stop topping up
+            }
+        }
+        let _ = stats;
+        Ok(issued)
+    }
+
+    /// Service a VM outcome at `c.clock` (the global minimum).
+    fn service_outcome(&mut self, c: &mut CoreRun, out: Outcome) -> Result<()> {
+        match out {
+            Outcome::Done(v) => {
+                // Result copy-back (the per-core return list of §2.2).
+                let bytes = match &v {
+                    Value::Array(a) => a.borrow().len() * 4,
+                    _ => 8,
+                };
+                let done = self.service.service(
+                    c.clock,
+                    Level::Shared,
+                    (bytes + FRAME_HEADER_BYTES) as u64,
+                );
+                self.stats.requests += 1;
+                c.finished_at = done;
+                c.result = Some(v);
+                c.status = Status::Done;
+                self.trace.emit(done, c.id, "done", "");
+            }
+            Outcome::ExtRead { slot, index } => {
+                // Microcore-kind data is *in this core's local store*: the
+                // reference decodes to a local load (§3.2) — no channel.
+                if c.binds[slot].level == Level::CoreLocal {
+                    let b = &c.binds[slot];
+                    let mut data = [0.0f32];
+                    self.registry.read(b.dref, Some(c.id), index, &mut data)?;
+                    c.clock += self.compute.dispatch(4);
+                    let out = c.vm.resume(Value::Float(f64::from(data[0])))?;
+                    self.charge_vm(c);
+                    c.status = Status::Pending(out);
+                    return Ok(());
+                }
+                self.harvest(c);
+                if c.binds[slot].pf.is_some() {
+                    self.prefetch_read(c, slot, index)?;
+                } else {
+                    self.ondemand_read(c, slot, index)?;
+                }
+            }
+            Outcome::ExtWrite { slot, index, value } => {
+                if c.binds[slot].level == Level::CoreLocal {
+                    let b = &c.binds[slot];
+                    if b.access == Access::ReadOnly {
+                        return Err(Error::Coordinator(
+                            "write to read-only reference argument".into(),
+                        ));
+                    }
+                    self.registry.write(b.dref, Some(c.id), index, &[value as f32])?;
+                    c.clock += self.compute.dispatch(4);
+                    let out = c.vm.resume(Value::None)?;
+                    self.charge_vm(c);
+                    c.status = Status::Pending(out);
+                    return Ok(());
+                }
+                self.ext_write(c, slot, index, value)?;
+            }
+            Outcome::Tensor(top) => {
+                let v = self.handle_tensor(c, top)?;
+                let out = c.vm.resume(v)?;
+                self.charge_vm(c);
+                c.status = Status::Pending(out);
+            }
+        }
+        Ok(())
+    }
+
+    fn ondemand_read(&mut self, c: &mut CoreRun, slot: usize, index: usize) -> Result<()> {
+        let b = &c.binds[slot];
+        let req = Request {
+            core: c.id,
+            kind: RequestKind::Read { dref: b.dref, off: index, len: 1 },
+            issued_at: c.clock,
+        };
+        let wire = req.kind.wire_bytes();
+        match c.channel.issue(req)? {
+            Some(h) => {
+                let mut data = [0.0f32];
+                self.registry.read(b.dref, Some(c.id), index, &mut data)?;
+                let ready = self.service.service(c.clock, b.level, wire);
+                c.channel.begin_service(h)?;
+                c.channel.complete(h, ready, data.to_vec())?;
+                c.status = Status::Waiting { handle: h, ctx: WaitCtx::OnDemandRead, ready_at: ready };
+            }
+            None => {
+                let at = c.channel.earliest_ready_at().ok_or_else(|| {
+                    Error::Channel("channel full with no inflight completions".into())
+                })?;
+                c.status =
+                    Status::Retry { outcome: Outcome::ExtRead { slot, index }, at };
+            }
+        }
+        Ok(())
+    }
+
+    fn prefetch_read(&mut self, c: &mut CoreRun, slot: usize, index: usize) -> Result<()> {
+        loop {
+            let plan = c.binds[slot].pf.as_mut().unwrap().plan_read(index);
+            match plan {
+                ReadPlan::Hit(v) => {
+                    // Top up the stream, then continue the VM.
+                    Self::issue_prefetch_spans(
+                        &mut self.service,
+                        &mut self.registry,
+                        &mut self.stats,
+                        c,
+                        slot,
+                        index,
+                    )?;
+                    let out = c.vm.resume(Value::Float(v))?;
+                    self.charge_vm(c);
+                    c.status = Status::Pending(out);
+                    return Ok(());
+                }
+                ReadPlan::WaitInflight(h) => {
+                    let ready_at = c
+                        .channel
+                        .ready_at(h)?
+                        .ok_or_else(|| Error::Channel("inflight cell not serviced".into()))?;
+                    c.status = Status::Waiting {
+                        handle: h,
+                        ctx: WaitCtx::PrefetchRead { slot, index },
+                        ready_at,
+                    };
+                    return Ok(());
+                }
+                ReadPlan::Miss => {
+                    let issued = Self::issue_prefetch_spans(
+                        &mut self.service,
+                        &mut self.registry,
+                        &mut self.stats,
+                        c,
+                        slot,
+                        index,
+                    )?;
+                    if issued == 0 {
+                        let at = c.channel.earliest_ready_at().ok_or_else(|| {
+                            Error::Channel("channel full with no inflight completions".into())
+                        })?;
+                        c.status =
+                            Status::Retry { outcome: Outcome::ExtRead { slot, index }, at };
+                        return Ok(());
+                    }
+                    // Loop: the plan will now find the inflight span.
+                }
+            }
+        }
+    }
+
+    fn ext_write(&mut self, c: &mut CoreRun, slot: usize, index: usize, value: f64) -> Result<()> {
+        let b = &mut c.binds[slot];
+        if b.access == Access::ReadOnly {
+            return Err(Error::Coordinator(format!(
+                "write to read-only reference argument (slot {slot}); \
+                 declare it mutable in the access modifier"
+            )));
+        }
+        // §3.3: write updates any local copy AND writes through.
+        if let Some(pf) = b.pf.as_mut() {
+            pf.on_write(index, value as f32);
+        }
+        let req = Request {
+            core: c.id,
+            kind: RequestKind::Write { dref: b.dref, off: index, data: vec![value as f32] },
+            issued_at: c.clock,
+        };
+        let wire = req.kind.wire_bytes();
+        let prefetched = b.pf.is_some();
+        match c.channel.issue(req)? {
+            Some(h) => {
+                // Atomic per-element write applied in service order.
+                self.registry.write(b.dref, Some(c.id), index, &[value as f32])?;
+                let ready = self.service.service(c.clock, b.level, wire);
+                c.channel.begin_service(h)?;
+                c.channel.complete(h, ready, Vec::new())?;
+                if prefetched {
+                    // Write-through is non-blocking under pre-fetch;
+                    // ordering within the core is preserved by FCFS
+                    // service.
+                    c.autoconsume.push(h);
+                    let out = c.vm.resume(Value::None)?;
+                    self.charge_vm(c);
+                    c.status = Status::Pending(out);
+                } else {
+                    // On-demand writes block (§3.1 default).
+                    c.status =
+                        Status::Waiting { handle: h, ctx: WaitCtx::WriteAck, ready_at: ready };
+                }
+            }
+            None => {
+                let at = c.channel.earliest_ready_at().ok_or_else(|| {
+                    Error::Channel("channel full with no inflight completions".into())
+                })?;
+                c.status =
+                    Status::Retry { outcome: Outcome::ExtWrite { slot, index, value }, at };
+            }
+        }
+        Ok(())
+    }
+
+    // ---- tensor builtins -------------------------------------------------
+
+    /// Gather `h` rows of `len` columns at column `off` from a row-major
+    /// `[h, t]` external variable into `out` (reused scratch).
+    fn gather_rows_into(
+        registry: &MemRegistry,
+        out: &mut Vec<f32>,
+        dref: DataRef,
+        core: usize,
+        h: usize,
+        t: usize,
+        off: usize,
+        len: usize,
+    ) -> Result<()> {
+        out.clear();
+        out.resize(h * len, 0.0);
+        for r in 0..h {
+            registry.read(dref, Some(core), r * t + off, &mut out[r * len..(r + 1) * len])?;
+        }
+        Ok(())
+    }
+
+    fn scatter_rows(
+        &mut self,
+        dref: DataRef,
+        core: usize,
+        h: usize,
+        t: usize,
+        off: usize,
+        len: usize,
+        data: &[f32],
+    ) -> Result<()> {
+        for r in 0..h {
+            self.registry.write(dref, Some(core), r * t + off, &data[r * len..(r + 1) * len])?;
+        }
+        Ok(())
+    }
+
+    /// Charge a bulk device-initiated transfer of `bytes` from `level`.
+    /// Device-addressable levels use DMA (link only); non-addressable
+    /// levels must be shuttled by the host service.
+    fn bulk_transfer(&mut self, at: Time, level: Level, bytes: u64) -> Time {
+        self.stats.dma_bytes += bytes;
+        if self.service.hierarchy().addressable(level) {
+            self.service.dma(at, level, bytes)
+        } else {
+            self.service.service(at, level, bytes)
+        }
+    }
+
+    fn ext_of(&self, c: &CoreRun, v: &Value) -> Option<(DataRef, Level)> {
+        match v {
+            Value::External(slot) => {
+                let b = &c.binds[*slot];
+                Some((b.dref, b.level))
+            }
+            _ => None,
+        }
+    }
+
+    fn handle_tensor(&mut self, c: &mut CoreRun, top: TensorOp) -> Result<Value> {
+        self.stats.tensor_ops += 1;
+        match top.builtin {
+            Builtin::Dot => {
+                let a = top.args[0].to_f32_vec()?;
+                let b = top.args[1].to_f32_vec()?;
+                if a.len() != b.len() {
+                    return Err(Error::Vm("dot: length mismatch".into()));
+                }
+                let (val, flops) = match &self.exec {
+                    Some(ex) => ex.dot(&a, &b)?,
+                    None => {
+                        self.stats.native_fallbacks += 1;
+                        let s: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+                        (s, 2 * a.len() as u64)
+                    }
+                };
+                c.clock += self.compute.compiled_flops(flops);
+                Ok(Value::Float(f64::from(val)))
+            }
+            Builtin::FwdAccum => {
+                // fwd_accum(w, off, len, xbuf, acc)
+                let off = top.args[1].as_index()?;
+                let len = top.args[2].as_index()?;
+                let x = top.args[3].to_f32_vec()?;
+                let acc = top.args[4].to_f32_vec()?;
+                if x.len() != len {
+                    return Err(Error::Vm(format!(
+                        "fwd_accum: xbuf has {} elems, len says {len}",
+                        x.len()
+                    )));
+                }
+                let h = acc.len();
+                let mut w = std::mem::take(&mut self.scratch_a);
+                match self.ext_of(c, &top.args[0]) {
+                    Some((dref, level)) => {
+                        let t = dref.len / h;
+                        Self::gather_rows_into(&self.registry, &mut w, dref, c.id, h, t, off, len)?;
+                        let done = self.bulk_transfer(c.clock, level, (h * len * 4) as u64);
+                        c.clock = done;
+                    }
+                    None => {
+                        // W held locally (unusual but allowed): slice it.
+                        let full = top.args[0].to_f32_vec()?;
+                        let t = full.len() / h;
+                        w.clear();
+                        w.resize(h * len, 0.0);
+                        for r in 0..h {
+                            w[r * len..(r + 1) * len]
+                                .copy_from_slice(&full[r * t + off..r * t + off + len]);
+                        }
+                    }
+                };
+                let res = match &self.exec {
+                    Some(ex) => ex.fwd_accum(&w, &x, &acc)?,
+                    None => {
+                        self.stats.native_fallbacks += 1;
+                        let mut out = acc.clone();
+                        for (r, o) in out.iter_mut().enumerate() {
+                            let mut s = 0.0f32;
+                            for j in 0..len {
+                                s += w[r * len + j] * x[j];
+                            }
+                            *o += s;
+                        }
+                        (out, (2 * h * len) as u64)
+                    }
+                };
+                self.scratch_a = w;
+                let (out, flops) = res;
+                c.clock += self.compute.compiled_flops(flops);
+                Ok(Value::array(out.into_iter().map(f64::from).collect()))
+            }
+            Builtin::GradTile => {
+                // grad_tile(dh, xbuf, g, off)
+                let dh = top.args[0].to_f32_vec()?;
+                let x = top.args[1].to_f32_vec()?;
+                let off = top.args[3].as_index()?;
+                let h = dh.len();
+                let len = x.len();
+                let (gref, glevel) = self.ext_of(c, &top.args[2]).ok_or_else(|| {
+                    Error::Vm("grad_tile: g must be a reference argument".into())
+                })?;
+                let t = gref.len / h;
+                let mut gtile = std::mem::take(&mut self.scratch_a);
+                Self::gather_rows_into(&self.registry, &mut gtile, gref, c.id, h, t, off, len)?;
+                let bytes = (h * len * 4) as u64;
+                let read_done = self.bulk_transfer(c.clock, glevel, bytes);
+                let (out, flops) = match &self.exec {
+                    Some(ex) => ex.grad_shard(&dh, &x, &gtile)?,
+                    None => {
+                        self.stats.native_fallbacks += 1;
+                        let mut out = gtile.clone();
+                        for r in 0..h {
+                            for j in 0..len {
+                                out[r * len + j] += dh[r] * x[j];
+                            }
+                        }
+                        (out, (2 * h * len) as u64)
+                    }
+                };
+                let compute_done = read_done + self.compute.compiled_flops(flops);
+                self.scatter_rows(gref, c.id, h, t, off, len, &out)?;
+                self.scratch_a = gtile;
+                c.clock = self.bulk_transfer(compute_done, glevel, bytes);
+                Ok(Value::Int(0))
+            }
+            Builtin::UpdateTile => {
+                // update_tile(w, g, lr, off, len)
+                let lr = top.args[2].as_f64()? as f32;
+                let off = top.args[3].as_index()?;
+                let len = top.args[4].as_index()?;
+                let h = self.hidden;
+                let (wref, wlevel) = self.ext_of(c, &top.args[0]).ok_or_else(|| {
+                    Error::Vm("update_tile: w must be a reference argument".into())
+                })?;
+                let (gref, glevel) = self.ext_of(c, &top.args[1]).ok_or_else(|| {
+                    Error::Vm("update_tile: g must be a reference argument".into())
+                })?;
+                let t = wref.len / h;
+                let mut wtile = std::mem::take(&mut self.scratch_a);
+                let mut gtile = std::mem::take(&mut self.scratch_b);
+                Self::gather_rows_into(&self.registry, &mut wtile, wref, c.id, h, t, off, len)?;
+                Self::gather_rows_into(&self.registry, &mut gtile, gref, c.id, h, t, off, len)?;
+                let bytes = (h * len * 4) as u64;
+                let r1 = self.bulk_transfer(c.clock, wlevel, bytes);
+                let r2 = self.bulk_transfer(r1, glevel, bytes);
+                let (out, flops) = match &self.exec {
+                    Some(ex) => ex.update_shard(&wtile, &gtile, lr)?,
+                    None => {
+                        self.stats.native_fallbacks += 1;
+                        let out: Vec<f32> =
+                            wtile.iter().zip(&gtile).map(|(w, g)| w - lr * g).collect();
+                        (out, (2 * h * len) as u64)
+                    }
+                };
+                let compute_done = r2 + self.compute.compiled_flops(flops);
+                self.scatter_rows(wref, c.id, h, t, off, len, &out)?;
+                self.scratch_a = wtile;
+                self.scratch_b = gtile;
+                c.clock = self.bulk_transfer(compute_done, wlevel, bytes);
+                Ok(Value::Int(0))
+            }
+            other => Err(Error::Vm(format!("{other:?} is not a tensor builtin"))),
+        }
+    }
+}

@@ -1,0 +1,359 @@
+//! Argument marshalling: how host values become per-core kernel arguments.
+//!
+//! The offload call site describes each argument with an [`ArgSpec`];
+//! marshalling resolves it per core into a [`BoundArg`]:
+//!
+//! * scalars are copied into the launch message (they are tiny);
+//! * references are either **sharded** (each core receives a disjoint
+//!   window of the variable — how the benchmark distributes image pixels)
+//!   or **broadcast** (every core sees the whole view);
+//! * under [`TransferMode::Eager`] reference arguments are materialised
+//!   into core-local arrays at launch — unless they don't fit the
+//!   scratchpad, in which case the engine *spills* them back to
+//!   by-reference access (ePython's overflow-into-shared-memory
+//!   behaviour, §2.2).
+
+use crate::error::{Error, Result};
+use crate::memory::DataRef;
+
+use super::prefetch::PrefetchSpec;
+use super::{Access, TransferMode};
+
+/// Per-argument pre-fetch choice under [`TransferMode::Prefetch`].
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum PrefetchChoice {
+    /// Use the offload's `default_prefetch`.
+    #[default]
+    Default,
+    /// Never pre-fetch this argument (plain by-reference access) — for
+    /// arguments only touched by bulk tensor builtins, where a streaming
+    /// buffer would waste on-core memory.
+    Never,
+    /// Use this specific annotation.
+    Spec(PrefetchSpec),
+}
+
+/// One kernel argument as described at the offload call site.
+#[derive(Debug, Clone)]
+pub enum ArgSpec {
+    /// A host scalar (float).
+    Float(f64),
+    /// A host scalar (int).
+    Int(i64),
+    /// A reference argument.
+    Ref {
+        /// The variable (full view or pre-sliced).
+        dref: DataRef,
+        /// Shard across the participating cores (`true`) or broadcast the
+        /// whole view to every core (`false`).
+        shard: bool,
+        /// Read-only vs mutable (the access modifier).
+        access: Access,
+        /// Per-argument pre-fetch choice (§3.1's decorator argument).
+        prefetch: PrefetchChoice,
+    },
+    /// A small host-side array copied by value into the launch message
+    /// (e.g. the per-image hidden delta `dh` — hundreds of bytes). Always
+    /// eager regardless of the transfer mode; must fit the core budget.
+    Values(Vec<f64>),
+    /// One distinct reference per core (e.g. per-core weight shards that
+    /// are separate registry variables). `drefs.len()` must equal the
+    /// participating core count.
+    PerCore {
+        /// Core-ordered references.
+        drefs: Vec<DataRef>,
+        /// Access modifier, applied to each.
+        access: Access,
+        /// Pre-fetch choice (as for `Ref`).
+        prefetch: PrefetchChoice,
+    },
+}
+
+impl ArgSpec {
+    /// Convenience: a sharded read-only reference.
+    pub fn sharded(dref: DataRef) -> ArgSpec {
+        ArgSpec::Ref { dref, shard: true, access: Access::ReadOnly, prefetch: PrefetchChoice::Default }
+    }
+
+    /// Convenience: a broadcast read-only reference.
+    pub fn broadcast(dref: DataRef) -> ArgSpec {
+        ArgSpec::Ref { dref, shard: false, access: Access::ReadOnly, prefetch: PrefetchChoice::Default }
+    }
+
+    /// Convenience: a sharded mutable reference.
+    pub fn sharded_mut(dref: DataRef) -> ArgSpec {
+        ArgSpec::Ref { dref, shard: true, access: Access::Mutable, prefetch: PrefetchChoice::Default }
+    }
+
+    /// Attach a pre-fetch annotation.
+    pub fn with_prefetch(self, spec: PrefetchSpec) -> ArgSpec {
+        match self {
+            ArgSpec::Ref { dref, shard, access, .. } => {
+                ArgSpec::Ref { dref, shard, access, prefetch: PrefetchChoice::Spec(spec) }
+            }
+            ArgSpec::PerCore { drefs, access, .. } => {
+                ArgSpec::PerCore { drefs, access, prefetch: PrefetchChoice::Spec(spec) }
+            }
+            other => other,
+        }
+    }
+
+    /// Opt out of pre-fetching (bulk-tensor-only arguments).
+    pub fn never_prefetch(self) -> ArgSpec {
+        match self {
+            ArgSpec::Ref { dref, shard, access, .. } => {
+                ArgSpec::Ref { dref, shard, access, prefetch: PrefetchChoice::Never }
+            }
+            ArgSpec::PerCore { drefs, access, .. } => {
+                ArgSpec::PerCore { drefs, access, prefetch: PrefetchChoice::Never }
+            }
+            other => other,
+        }
+    }
+}
+
+/// One argument resolved for one core.
+#[derive(Debug, Clone)]
+pub enum BoundArg {
+    /// Scalar (in the launch message).
+    Float(f64),
+    /// Scalar int.
+    Int(i64),
+    /// Small by-value array (in the launch message).
+    Values(Vec<f64>),
+    /// Copy the window's data into core-local memory at launch.
+    EagerCopy {
+        /// This core's window.
+        dref: DataRef,
+        /// Mutable eager args are copied back at kernel completion.
+        access: Access,
+    },
+    /// Pass the reference; the core fetches on demand / via pre-fetch.
+    External {
+        /// This core's window.
+        dref: DataRef,
+        /// Access modifier.
+        access: Access,
+        /// Pre-fetch annotation (None = pure on-demand).
+        prefetch: Option<PrefetchSpec>,
+    },
+}
+
+/// Resolve call-site arg specs into per-core bound arguments.
+///
+/// `cores` lists the participating physical core ids; sharded refs are
+/// split into `cores.len()` near-equal windows in id order.
+pub fn bind(
+    args: &[ArgSpec],
+    cores: &[usize],
+    mode: TransferMode,
+    default_prefetch: Option<PrefetchSpec>,
+) -> Result<Vec<Vec<BoundArg>>> {
+    if cores.is_empty() {
+        return Err(Error::Coordinator("offload requires at least one core".into()));
+    }
+    let n = cores.len();
+    let mut per_core: Vec<Vec<BoundArg>> = vec![Vec::with_capacity(args.len()); n];
+    for spec in args {
+        match spec {
+            ArgSpec::Float(v) => per_core.iter_mut().for_each(|c| c.push(BoundArg::Float(*v))),
+            ArgSpec::Int(v) => per_core.iter_mut().for_each(|c| c.push(BoundArg::Int(*v))),
+            ArgSpec::Values(vals) => {
+                per_core.iter_mut().for_each(|c| c.push(BoundArg::Values(vals.clone())))
+            }
+            ArgSpec::Ref { dref, shard, access, prefetch } => {
+                let windows: Vec<DataRef> =
+                    if *shard { dref.shards(n) } else { vec![*dref; n] };
+                bind_windows(&mut per_core, windows, mode, *access, *prefetch, default_prefetch)?;
+            }
+            ArgSpec::PerCore { drefs, access, prefetch } => {
+                if drefs.len() != n {
+                    return Err(Error::Coordinator(format!(
+                        "PerCore argument has {} refs for {n} cores",
+                        drefs.len()
+                    )));
+                }
+                bind_windows(
+                    &mut per_core,
+                    drefs.clone(),
+                    mode,
+                    *access,
+                    *prefetch,
+                    default_prefetch,
+                )?;
+            }
+        }
+    }
+    Ok(per_core)
+}
+
+fn bind_windows(
+    per_core: &mut [Vec<BoundArg>],
+    windows: Vec<DataRef>,
+    mode: TransferMode,
+    access: Access,
+    prefetch: PrefetchChoice,
+    default_prefetch: Option<PrefetchSpec>,
+) -> Result<()> {
+    for (ci, win) in windows.into_iter().enumerate() {
+        let bound = match (mode, prefetch) {
+            (TransferMode::Eager, _) => BoundArg::EagerCopy { dref: win, access },
+            (TransferMode::OnDemand, _) | (TransferMode::Prefetch, PrefetchChoice::Never) => {
+                BoundArg::External { dref: win, access, prefetch: None }
+            }
+            (TransferMode::Prefetch, choice) => {
+                let pf = match choice {
+                    PrefetchChoice::Spec(s) => Some(s),
+                    PrefetchChoice::Default => default_prefetch,
+                    PrefetchChoice::Never => unreachable!(),
+                }
+                .ok_or_else(|| {
+                    Error::Coordinator(
+                        "prefetch mode requires a prefetch annotation \
+                         (per-arg or offload default)"
+                            .into(),
+                    )
+                })?;
+                pf.validate()?;
+                BoundArg::External { dref: win, access, prefetch: Some(pf) }
+            }
+        };
+        per_core[ci].push(bound);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dref(len: usize) -> DataRef {
+        DataRef { id: 9, offset: 0, len }
+    }
+
+    fn pf() -> PrefetchSpec {
+        PrefetchSpec {
+            buffer_size: 16,
+            elems_per_fetch: 8,
+            distance: 8,
+            access: Access::ReadOnly,
+        }
+    }
+
+    #[test]
+    fn sharding_splits_disjoint_windows() {
+        let bound =
+            bind(&[ArgSpec::sharded(dref(100))], &[0, 1, 2, 3], TransferMode::OnDemand, None)
+                .unwrap();
+        assert_eq!(bound.len(), 4);
+        let mut covered = 0;
+        for c in &bound {
+            let BoundArg::External { dref, .. } = &c[0] else { panic!() };
+            assert_eq!(dref.offset, covered);
+            covered += dref.len;
+        }
+        assert_eq!(covered, 100);
+    }
+
+    #[test]
+    fn broadcast_gives_every_core_full_view() {
+        let bound =
+            bind(&[ArgSpec::broadcast(dref(50))], &[0, 1], TransferMode::OnDemand, None).unwrap();
+        for c in &bound {
+            let BoundArg::External { dref, .. } = &c[0] else { panic!() };
+            assert_eq!((dref.offset, dref.len), (0, 50));
+        }
+    }
+
+    #[test]
+    fn eager_mode_produces_copies() {
+        let bound =
+            bind(&[ArgSpec::sharded(dref(10))], &[0], TransferMode::Eager, None).unwrap();
+        assert!(matches!(bound[0][0], BoundArg::EagerCopy { .. }));
+    }
+
+    #[test]
+    fn prefetch_mode_requires_annotation() {
+        let err = bind(&[ArgSpec::sharded(dref(10))], &[0], TransferMode::Prefetch, None);
+        assert!(err.is_err());
+        let ok = bind(&[ArgSpec::sharded(dref(10))], &[0], TransferMode::Prefetch, Some(pf()))
+            .unwrap();
+        let BoundArg::External { prefetch, .. } = &ok[0][0] else { panic!() };
+        assert!(prefetch.is_some());
+    }
+
+    #[test]
+    fn per_arg_prefetch_overrides_default() {
+        let custom = PrefetchSpec { buffer_size: 99, ..pf() };
+        let bound = bind(
+            &[ArgSpec::sharded(dref(10)).with_prefetch(custom)],
+            &[0],
+            TransferMode::Prefetch,
+            Some(pf()),
+        )
+        .unwrap();
+        let BoundArg::External { prefetch: Some(p), .. } = &bound[0][0] else { panic!() };
+        assert_eq!(p.buffer_size, 99);
+    }
+
+    #[test]
+    fn scalars_replicate() {
+        let bound = bind(
+            &[ArgSpec::Float(1.5), ArgSpec::Int(7)],
+            &[0, 1, 2],
+            TransferMode::OnDemand,
+            None,
+        )
+        .unwrap();
+        for c in &bound {
+            assert!(matches!(c[0], BoundArg::Float(v) if v == 1.5));
+            assert!(matches!(c[1], BoundArg::Int(7)));
+        }
+    }
+
+    #[test]
+    fn zero_cores_rejected() {
+        assert!(bind(&[], &[], TransferMode::Eager, None).is_err());
+    }
+
+    #[test]
+    fn per_core_refs_bind_one_each() {
+        let refs: Vec<DataRef> =
+            (0..3).map(|i| DataRef { id: 10 + i, offset: 0, len: 8 }).collect();
+        let bound = bind(
+            &[ArgSpec::PerCore { drefs: refs, access: Access::Mutable, prefetch: PrefetchChoice::Default }],
+            &[0, 1, 2],
+            TransferMode::OnDemand,
+            None,
+        )
+        .unwrap();
+        for (ci, c) in bound.iter().enumerate() {
+            let BoundArg::External { dref, access, .. } = &c[0] else { panic!() };
+            assert_eq!(dref.id, 10 + ci as u64);
+            assert_eq!(*access, Access::Mutable);
+        }
+        // count mismatch rejected
+        let refs: Vec<DataRef> = (0..2).map(|i| DataRef { id: i, offset: 0, len: 8 }).collect();
+        assert!(bind(
+            &[ArgSpec::PerCore { drefs: refs, access: Access::ReadOnly, prefetch: PrefetchChoice::Default }],
+            &[0, 1, 2],
+            TransferMode::OnDemand,
+            None,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn values_arg_replicates_by_value() {
+        let bound = bind(
+            &[ArgSpec::Values(vec![1.0, 2.0])],
+            &[0, 1],
+            TransferMode::OnDemand,
+            None,
+        )
+        .unwrap();
+        for c in &bound {
+            assert!(matches!(&c[0], BoundArg::Values(v) if v == &vec![1.0, 2.0]));
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! The host-side offload coordinator — the paper's contribution.
+//!
+//! §3 defines the programming model this module implements:
+//!
+//! * **Kernel offload** ([`offload`], [`session`]) — kernels are compiled
+//!   once and invoked across all (or a subset of) micro-cores; by default
+//!   execution is blocking and every core receives the same kernel with
+//!   per-core argument shards.
+//! * **Pass by reference** ([`marshal`]) — instead of eagerly copying
+//!   argument data to the device, the coordinator sends opaque
+//!   [`crate::memory::DataRef`]s; element accesses on the cores become
+//!   channel requests serviced by the host ([`service`]).
+//! * **Pre-fetching** ([`prefetch`]) — the
+//!   `prefetch={var, buffer, elems_per_fetch, distance, access}`
+//!   annotation turns blocking per-element round-trips into streamed,
+//!   overlapped chunk transfers into a reserved on-core buffer.
+//! * **The engine** ([`engine`]) — a deterministic min-clock discrete-event
+//!   scheduler that interleaves the per-core VMs, the channel protocol,
+//!   the host service threads, the shared link, and PJRT tensor-builtin
+//!   execution, producing both *numerics* (real data moves, the model
+//!   really trains) and *virtual-time* measurements (the paper's figures).
+
+pub mod engine;
+pub mod marshal;
+pub mod offload;
+pub mod prefetch;
+pub mod service;
+pub mod session;
+
+pub use engine::{Engine, EngineStats, OffloadOutcome};
+pub use marshal::{ArgSpec, BoundArg, PrefetchChoice};
+pub use offload::{Kernel, KernelRegistry, OffloadOptions, OffloadResult};
+pub use prefetch::{PrefetchSpec, PrefetchState};
+pub use service::HostService;
+pub use session::{Session, SessionBuilder};
+
+/// How kernel arguments travel to the device (§3.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransferMode {
+    /// Legacy ePython behaviour: copy the entire argument to the core at
+    /// launch (fails or spills for data larger than the local store).
+    Eager,
+    /// Pass by reference; every element access is a blocking round-trip.
+    OnDemand,
+    /// Pass by reference with the pre-fetch engine filling a reserved
+    /// on-core buffer ahead of use.
+    Prefetch,
+}
+
+impl TransferMode {
+    /// Parse from the config-file spelling.
+    pub fn parse(s: &str) -> Option<TransferMode> {
+        match s {
+            "eager" => Some(TransferMode::Eager),
+            "on-demand" | "ondemand" => Some(TransferMode::OnDemand),
+            "prefetch" | "pre-fetch" => Some(TransferMode::Prefetch),
+            _ => None,
+        }
+    }
+
+    /// Config-file spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            TransferMode::Eager => "eager",
+            TransferMode::OnDemand => "on-demand",
+            TransferMode::Prefetch => "prefetch",
+        }
+    }
+}
+
+/// Read/write intent of a reference argument — the paper's *access
+/// modifier* ("whether the data is mutable ... or read only (so no copy
+/// back is required)").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Access {
+    /// Read-only: no write-back traffic is ever generated.
+    #[default]
+    ReadOnly,
+    /// Mutable: element writes are written through to the owning level
+    /// (atomic per element; ordered within a core, unordered across cores
+    /// — §3.3's weak memory model).
+    Mutable,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        for m in [TransferMode::Eager, TransferMode::OnDemand, TransferMode::Prefetch] {
+            assert_eq!(TransferMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(TransferMode::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,225 @@
+//! Kernel registry and offload options/results.
+//!
+//! Mirrors the ePython `@offload` decorator surface: a kernel is compiled
+//! once ([`Kernel`]), then invoked many times with different arguments and
+//! [`OffloadOptions`] ("numerous options that the programmer can pass to
+//! the offload directive ... such as running on a subset of cores").
+
+use std::rc::Rc;
+
+use crate::error::{Error, Result};
+use crate::sim::Time;
+use crate::vm::{self, CostCounters, Program, Value};
+
+use super::prefetch::PrefetchSpec;
+use super::TransferMode;
+
+/// A compiled kernel ready for offload.
+#[derive(Debug, Clone)]
+pub struct Kernel {
+    /// Registry name.
+    pub name: String,
+    /// Compiled program (shared across invocations).
+    pub program: Rc<Program>,
+}
+
+impl Kernel {
+    /// Compile kernel source; `entry` selects the `def` (default: last).
+    pub fn compile(name: impl Into<String>, src: &str, entry: Option<&str>) -> Result<Kernel> {
+        let program = Rc::new(vm::compile_source(src, entry)?);
+        Ok(Kernel { name: name.into(), program })
+    }
+
+    /// Bytecode footprint (the part of the local store user code occupies).
+    pub fn code_bytes(&self) -> usize {
+        self.program.functions.iter().map(|f| f.code_bytes()).sum()
+    }
+}
+
+/// Named kernel store (one per session).
+#[derive(Debug, Default)]
+pub struct KernelRegistry {
+    kernels: Vec<Kernel>,
+}
+
+impl KernelRegistry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Compile + register. Re-registering a name replaces it.
+    pub fn register(&mut self, name: &str, src: &str, entry: Option<&str>) -> Result<Kernel> {
+        let k = Kernel::compile(name, src, entry)?;
+        if let Some(slot) = self.kernels.iter_mut().find(|e| e.name == name) {
+            *slot = k.clone();
+        } else {
+            self.kernels.push(k.clone());
+        }
+        Ok(k)
+    }
+
+    /// Look up by name.
+    pub fn get(&self, name: &str) -> Result<&Kernel> {
+        self.kernels
+            .iter()
+            .find(|k| k.name == name)
+            .ok_or_else(|| Error::Coordinator(format!("unknown kernel '{name}'")))
+    }
+
+    /// Registered kernel count.
+    pub fn len(&self) -> usize {
+        self.kernels.len()
+    }
+
+    /// Whether no kernels are registered.
+    pub fn is_empty(&self) -> bool {
+        self.kernels.is_empty()
+    }
+}
+
+/// Options for one offload invocation.
+#[derive(Debug, Clone)]
+pub struct OffloadOptions {
+    /// Argument transfer mode.
+    pub mode: TransferMode,
+    /// Physical cores to run on (`None` = all).
+    pub cores: Option<Vec<usize>>,
+    /// Default pre-fetch annotation for reference args without their own.
+    pub default_prefetch: Option<PrefetchSpec>,
+    /// Dispatch budget per core (runaway guard).
+    pub fuel: u64,
+}
+
+impl Default for OffloadOptions {
+    fn default() -> Self {
+        OffloadOptions {
+            mode: TransferMode::OnDemand,
+            cores: None,
+            default_prefetch: None,
+            fuel: 2_000_000_000,
+        }
+    }
+}
+
+impl OffloadOptions {
+    /// Set the transfer mode.
+    pub fn transfer(mut self, mode: TransferMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Restrict to a core subset.
+    pub fn on_cores(mut self, cores: Vec<usize>) -> Self {
+        self.cores = Some(cores);
+        self
+    }
+
+    /// Set the default pre-fetch annotation (switches mode to Prefetch).
+    pub fn prefetch(mut self, spec: PrefetchSpec) -> Self {
+        self.mode = TransferMode::Prefetch;
+        self.default_prefetch = Some(spec);
+        self
+    }
+}
+
+/// Per-core execution record in an [`OffloadResult`].
+#[derive(Debug, Clone)]
+pub struct CoreReport {
+    /// Physical core id.
+    pub core: usize,
+    /// Kernel return value.
+    pub value: Value,
+    /// Core-local finish time.
+    pub finished_at: Time,
+    /// Virtual time spent stalled on transfers.
+    pub stall: Time,
+    /// VM cost counters.
+    pub counters: CostCounters,
+    /// Channel requests issued by this core.
+    pub requests: u64,
+    /// Peak channel-cell occupancy.
+    pub peak_cells: usize,
+    /// Times the core found no free cell (backpressure).
+    pub cell_stalls: u64,
+}
+
+/// Result of a blocking offload across cores.
+#[derive(Debug, Clone)]
+pub struct OffloadResult {
+    /// One report per participating core (in core-id order).
+    pub reports: Vec<CoreReport>,
+    /// Launch virtual time.
+    pub launched_at: Time,
+    /// Finish virtual time (max over cores, incl. result copy-back).
+    pub finished_at: Time,
+    /// Eager-copy arguments that did not fit on-core and were spilled to
+    /// by-reference access.
+    pub spills: u64,
+}
+
+impl OffloadResult {
+    /// Per-core return values (paper: "sixteen identical results, one from
+    /// each micro-core, are copied back in a list").
+    pub fn per_core(&self) -> Vec<&Value> {
+        self.reports.iter().map(|r| &r.value).collect()
+    }
+
+    /// Wall (virtual) duration of the offload.
+    pub fn elapsed(&self) -> Time {
+        self.finished_at - self.launched_at
+    }
+
+    /// Aggregate stall time across cores.
+    pub fn total_stall(&self) -> Time {
+        self.reports.iter().map(|r| r.stall).sum()
+    }
+
+    /// Aggregate channel requests.
+    pub fn total_requests(&self) -> u64 {
+        self.reports.iter().map(|r| r.requests).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SRC: &str = "def k(a):\n    return a\n";
+
+    #[test]
+    fn registry_register_get_replace() {
+        let mut r = KernelRegistry::new();
+        r.register("k", SRC, None).unwrap();
+        assert_eq!(r.get("k").unwrap().program.arity(), 1);
+        assert!(r.get("missing").is_err());
+        // replace with a 2-arg kernel
+        r.register("k", "def k(a, b):\n    return a\n", None).unwrap();
+        assert_eq!(r.get("k").unwrap().program.arity(), 2);
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn options_builders() {
+        let o = OffloadOptions::default()
+            .transfer(TransferMode::Eager)
+            .on_cores(vec![0, 2]);
+        assert_eq!(o.mode, TransferMode::Eager);
+        assert_eq!(o.cores, Some(vec![0, 2]));
+        let p = PrefetchSpec {
+            buffer_size: 8,
+            elems_per_fetch: 4,
+            distance: 4,
+            access: super::super::Access::ReadOnly,
+        };
+        let o = OffloadOptions::default().prefetch(p);
+        assert_eq!(o.mode, TransferMode::Prefetch);
+        assert!(o.default_prefetch.is_some());
+    }
+
+    #[test]
+    fn kernel_code_fits_microcore_budget() {
+        let k = Kernel::compile("k", SRC, None).unwrap();
+        assert!(k.code_bytes() < 1024);
+    }
+}

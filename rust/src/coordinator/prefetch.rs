@@ -1,0 +1,395 @@
+//! The pre-fetch engine (§3.1).
+//!
+//! The paper's API:
+//! `prefetch={variable name, buffer size, elements per pre-fetch, distance,
+//! access modifier}` — [`PrefetchSpec`] carries the numbers,
+//! [`PrefetchState`] is the per-(core, argument) runtime state machine.
+//!
+//! Semantics implemented exactly as described:
+//!
+//! * `buffer_size` elements are reserved in the core's local store (the
+//!   memory cost the paper highlights: "40 bytes are required for each
+//!   function argument");
+//! * each request moves `elems_per_fetch` elements — "a by product of
+//!   pre-fetching is that it retrieves multiple pieces of data on each
+//!   access [so] the overall number of data accesses is significantly
+//!   lower";
+//! * fetch-ahead triggers whenever the stream position is within
+//!   `distance` elements of the fetched frontier;
+//! * mutable buffers write through (atomic per element, core-ordered).
+//!
+//! The state machine is *sequential-stream oriented* (the paper's access
+//! pattern); a random access outside the buffered window invalidates the
+//! window and restarts streaming at the new position — correct, just slow,
+//! matching how a real pre-fetcher degrades.
+
+use crate::channel::protocol::CELL_PAYLOAD_ELEMS;
+use crate::channel::Handle;
+use crate::error::{Error, Result};
+
+use super::Access;
+
+/// The §3.1 pre-fetch annotation for one kernel argument.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefetchSpec {
+    /// Elements reserved on-core for this argument's buffer.
+    pub buffer_size: usize,
+    /// Elements moved per request (capped by the 1 KB cell payload).
+    pub elems_per_fetch: usize,
+    /// Fetch-ahead trigger distance, in elements.
+    pub distance: usize,
+    /// Read-only vs mutable (write-back) — the access modifier.
+    pub access: Access,
+}
+
+impl PrefetchSpec {
+    /// Validate against protocol and sanity limits.
+    pub fn validate(&self) -> Result<()> {
+        if self.buffer_size == 0 || self.elems_per_fetch == 0 {
+            return Err(Error::Coordinator("prefetch sizes must be positive".into()));
+        }
+        if self.elems_per_fetch > self.buffer_size {
+            return Err(Error::Coordinator(
+                "elems_per_fetch cannot exceed buffer_size".into(),
+            ));
+        }
+        if self.elems_per_fetch > CELL_PAYLOAD_ELEMS {
+            return Err(Error::Coordinator(format!(
+                "elems_per_fetch {} exceeds the 1 KB cell payload ({} elements)",
+                self.elems_per_fetch, CELL_PAYLOAD_ELEMS
+            )));
+        }
+        Ok(())
+    }
+
+    /// On-core memory this argument's buffer consumes (bytes).
+    pub fn buffer_bytes(&self) -> usize {
+        self.buffer_size * 4
+    }
+}
+
+/// An in-flight fetch: `[start, start+len)` arriving via `handle`.
+#[derive(Debug, Clone, Copy)]
+pub struct Inflight {
+    /// Channel handle of the request.
+    pub handle: Handle,
+    /// First element index covered.
+    pub start: usize,
+    /// Elements covered.
+    pub len: usize,
+}
+
+/// What the state machine wants done next for a read at some index.
+#[derive(Debug, PartialEq)]
+pub enum ReadPlan {
+    /// Element available in the buffer right now.
+    Hit(f64),
+    /// Wait on this in-flight handle (data already requested).
+    WaitInflight(Handle),
+    /// Buffer/inflight do not cover the index: issue fetches starting at
+    /// the given element (the state was re-seeded).
+    Miss,
+}
+
+/// Per-(core, argument) pre-fetch runtime state.
+#[derive(Debug)]
+pub struct PrefetchState {
+    spec: PrefetchSpec,
+    /// Total length of the external view.
+    total_len: usize,
+    /// Valid window: elements `[lo, hi)` are in `buf`.
+    lo: usize,
+    hi: usize,
+    buf: Vec<f32>,
+    /// Requested-but-not-arrived spans (kept in issue order).
+    inflight: Vec<Inflight>,
+    /// Write-through values for elements covered by an in-flight span:
+    /// the span was read at issue time, so its payload is stale for these
+    /// elements; the overlay re-applies them on arrival (§3.3: "preference
+    /// is given to any local copy").
+    overlay: Vec<(usize, f32)>,
+    /// Next element index to request.
+    next_fetch: usize,
+    /// Statistics.
+    hits: u64,
+    misses: u64,
+    fetches_issued: u64,
+}
+
+impl PrefetchState {
+    /// Fresh state for a view of `total_len` elements.
+    pub fn new(spec: PrefetchSpec, total_len: usize) -> Result<Self> {
+        spec.validate()?;
+        Ok(PrefetchState {
+            spec,
+            total_len,
+            lo: 0,
+            hi: 0,
+            buf: Vec::with_capacity(spec.buffer_size),
+            inflight: Vec::new(),
+            overlay: Vec::new(),
+            next_fetch: 0,
+            hits: 0,
+            misses: 0,
+            fetches_issued: 0,
+        })
+    }
+
+    /// The annotation this state was built from.
+    pub fn spec(&self) -> &PrefetchSpec {
+        &self.spec
+    }
+
+    /// (hits, misses, fetches issued).
+    pub fn stats(&self) -> (u64, u64, u64) {
+        (self.hits, self.misses, self.fetches_issued)
+    }
+
+    /// Plan a read of element `idx`.
+    pub fn plan_read(&mut self, idx: usize) -> ReadPlan {
+        if idx >= self.lo && idx < self.hi {
+            self.hits += 1;
+            return ReadPlan::Hit(f64::from(self.buf[idx - self.lo]));
+        }
+        if let Some(f) = self.inflight.iter().find(|f| idx >= f.start && idx < f.start + f.len) {
+            // Requested, still in the air: stall on that handle.
+            self.misses += 1;
+            return ReadPlan::WaitInflight(f.handle);
+        }
+        // Outside window and not requested: re-seed the stream here.
+        self.misses += 1;
+        self.lo = idx;
+        self.hi = idx;
+        self.buf.clear();
+        self.next_fetch = idx;
+        // In-flight spans for the old stream will be dropped on arrival;
+        // overlay values are already in the home location (write-through),
+        // so refetching delivers them.
+        self.inflight.clear();
+        self.overlay.clear();
+        ReadPlan::Miss
+    }
+
+    /// Spans to request now: called after a read at `idx` (and at kernel
+    /// start with `idx = 0`). Issues ahead while (a) the frontier is
+    /// within `distance` of `idx`, (b) buffer space remains, (c) data
+    /// remains. Returns `(start, len)` spans; caller issues the channel
+    /// requests and registers them via [`PrefetchState::on_issued`].
+    pub fn spans_to_fetch(&mut self, idx: usize) -> Vec<(usize, usize)> {
+        let mut spans = Vec::new();
+        loop {
+            if self.next_fetch >= self.total_len {
+                break; // stream exhausted
+            }
+            // Buffer occupancy if all inflight arrive, counting only the
+            // *live* window [max(lo, idx), next_fetch): elements behind the
+            // read position are dead for a sequential stream and will be
+            // evicted on the next arrival.
+            let occupied = self.next_fetch.saturating_sub(self.lo.max(idx));
+            if occupied >= self.spec.buffer_size {
+                break; // buffer full
+            }
+            // Only fetch ahead within the trigger distance.
+            if self.next_fetch > idx + self.spec.distance {
+                break;
+            }
+            let len = self
+                .spec
+                .elems_per_fetch
+                .min(self.total_len - self.next_fetch)
+                .min(self.spec.buffer_size - occupied);
+            spans.push((self.next_fetch, len));
+            self.next_fetch += len;
+        }
+        spans
+    }
+
+    /// Register a channel request covering `[start, start+len)`.
+    pub fn on_issued(&mut self, handle: Handle, start: usize, len: usize) {
+        self.fetches_issued += 1;
+        self.inflight.push(Inflight { handle, start, len });
+    }
+
+    /// Outstanding request handles (consumed on arrival).
+    pub fn inflight(&self) -> &[Inflight] {
+        &self.inflight
+    }
+
+    /// Data for `[start, start+len)` arrived; fold into the window.
+    /// Stale arrivals (from a superseded stream) are dropped.
+    pub fn on_arrival(&mut self, handle: Handle, data: &[f32]) {
+        let Some(pos) = self.inflight.iter().position(|f| f.handle == handle) else {
+            return; // stale
+        };
+        let f = self.inflight.remove(pos);
+        debug_assert_eq!(f.len, data.len());
+        if f.start != self.hi {
+            // Out-of-order arrival for a contiguous stream can only happen
+            // after a re-seed; drop.
+            return;
+        }
+        // Evict from the front if the window would exceed the buffer.
+        let new_size = (self.hi + data.len()).saturating_sub(self.lo);
+        if new_size > self.spec.buffer_size {
+            let evict = new_size - self.spec.buffer_size;
+            self.buf.drain(..evict.min(self.buf.len()));
+            self.lo += evict;
+        }
+        self.buf.extend_from_slice(data);
+        self.hi += data.len();
+        // Re-apply writes that raced this span (its payload was read at
+        // issue time and is stale for them).
+        let (lo, hi) = (self.lo, self.hi);
+        let buf = &mut self.buf;
+        self.overlay.retain(|&(idx, val)| {
+            if idx >= lo && idx < hi {
+                buf[idx - lo] = val;
+                false
+            } else {
+                true
+            }
+        });
+    }
+
+    /// Write-through of element `idx` (mutable buffers): update the local
+    /// copy if resident; if the element is covered by an in-flight span,
+    /// remember the value so the (stale) arrival cannot clobber it. The
+    /// caller issues the write-back request.
+    pub fn on_write(&mut self, idx: usize, value: f32) {
+        if idx >= self.lo && idx < self.hi {
+            self.buf[idx - self.lo] = value;
+        } else if self.inflight.iter().any(|f| idx >= f.start && idx < f.start + f.len) {
+            self.overlay.push((idx, value));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn handle(i: usize) -> Handle {
+        Handle { cell: i, generation: 0 }
+    }
+
+    fn spec() -> PrefetchSpec {
+        PrefetchSpec { buffer_size: 10, elems_per_fetch: 2, distance: 10, access: Access::ReadOnly }
+    }
+
+    #[test]
+    fn validates_against_cell_payload() {
+        let bad = PrefetchSpec {
+            buffer_size: 1000,
+            elems_per_fetch: 300,
+            distance: 10,
+            access: Access::ReadOnly,
+        };
+        assert!(bad.validate().is_err(), "300 elems > 256-elem cell");
+        assert!(spec().validate().is_ok());
+        assert_eq!(spec().buffer_bytes(), 40, "paper: 10 ints = 40 bytes");
+    }
+
+    #[test]
+    fn initial_fill_respects_buffer_and_distance() {
+        let mut st = PrefetchState::new(spec(), 100).unwrap();
+        let spans = st.spans_to_fetch(0);
+        // buffer 10, fetch 2 ⇒ 5 spans of 2
+        assert_eq!(spans, vec![(0, 2), (2, 2), (4, 2), (6, 2), (8, 2)]);
+        // nothing further until data is consumed
+        assert!(st.spans_to_fetch(0).is_empty());
+    }
+
+    #[test]
+    fn hit_after_arrival_and_streaming_advance() {
+        let mut st = PrefetchState::new(spec(), 100).unwrap();
+        for (i, (s, l)) in st.spans_to_fetch(0).into_iter().enumerate() {
+            st.on_issued(handle(i), s, l);
+        }
+        assert_eq!(st.plan_read(0), ReadPlan::WaitInflight(handle(0)));
+        st.on_arrival(handle(0), &[10.0, 11.0]);
+        assert_eq!(st.plan_read(0), ReadPlan::Hit(10.0));
+        assert_eq!(st.plan_read(1), ReadPlan::Hit(11.0));
+        // consuming ahead triggers more spans once the window slides
+        st.on_arrival(handle(1), &[12.0, 13.0]);
+        st.on_arrival(handle(2), &[14.0, 15.0]);
+        st.on_arrival(handle(3), &[16.0, 17.0]);
+        st.on_arrival(handle(4), &[18.0, 19.0]);
+        // window now [0,10): full buffer; reading at 8 triggers lookahead
+        // for the live window [8, ...) — elements behind 8 are dead
+        let spans = st.spans_to_fetch(8);
+        assert_eq!(spans, vec![(10, 2), (12, 2), (14, 2), (16, 2)]);
+        for (i, (s, l)) in spans.into_iter().enumerate() {
+            st.on_issued(handle(10 + i), s, l);
+        }
+        st.on_arrival(handle(10), &[20.0, 21.0]);
+        // 0..2 evicted
+        assert_eq!(st.plan_read(10), ReadPlan::Hit(20.0));
+        assert!(matches!(st.plan_read(0), ReadPlan::Miss), "evicted element misses");
+    }
+
+    #[test]
+    fn random_access_reseeds_stream() {
+        let mut st = PrefetchState::new(spec(), 1000).unwrap();
+        for (i, (s, l)) in st.spans_to_fetch(0).into_iter().enumerate() {
+            st.on_issued(handle(i), s, l);
+        }
+        assert!(matches!(st.plan_read(500), ReadPlan::Miss));
+        let spans = st.spans_to_fetch(500);
+        assert_eq!(spans[0], (500, 2));
+        let (h, m, _) = st.stats();
+        assert_eq!(h, 0);
+        assert_eq!(m, 1);
+    }
+
+    #[test]
+    fn stale_arrivals_dropped_after_reseed() {
+        let mut st = PrefetchState::new(spec(), 1000).unwrap();
+        for (i, (s, l)) in st.spans_to_fetch(0).into_iter().enumerate() {
+            st.on_issued(handle(i), s, l);
+        }
+        st.plan_read(500); // reseed clears inflight
+        st.on_arrival(handle(0), &[1.0, 2.0]); // stale: ignored
+        assert!(matches!(st.plan_read(0), ReadPlan::Miss));
+    }
+
+    #[test]
+    fn tail_of_stream_fetches_partial_span() {
+        let mut st = PrefetchState::new(spec(), 5).unwrap();
+        let spans = st.spans_to_fetch(0);
+        assert_eq!(spans, vec![(0, 2), (2, 2), (4, 1)], "last span truncated");
+    }
+
+    #[test]
+    fn write_racing_inflight_span_survives_arrival() {
+        // Regression: a write to an element covered by an in-flight span
+        // must not be clobbered when the (stale) span lands.
+        let mut st = PrefetchState::new(
+            PrefetchSpec { access: Access::Mutable, ..spec() },
+            100,
+        )
+        .unwrap();
+        for (i, (s, l)) in st.spans_to_fetch(0).into_iter().enumerate() {
+            st.on_issued(handle(i), s, l);
+        }
+        st.on_write(0, 42.0); // span (0,2) still in flight
+        st.on_arrival(handle(0), &[0.0, 1.0]); // stale payload
+        assert_eq!(st.plan_read(0), ReadPlan::Hit(42.0), "overlay wins");
+        assert_eq!(st.plan_read(1), ReadPlan::Hit(1.0), "untouched element fresh");
+    }
+
+    #[test]
+    fn write_through_updates_resident_copy() {
+        let mut st = PrefetchState::new(
+            PrefetchSpec { access: Access::Mutable, ..spec() },
+            100,
+        )
+        .unwrap();
+        for (i, (s, l)) in st.spans_to_fetch(0).into_iter().enumerate() {
+            st.on_issued(handle(i), s, l);
+        }
+        st.on_arrival(handle(0), &[1.0, 2.0]);
+        st.on_write(1, 42.0);
+        assert_eq!(st.plan_read(1), ReadPlan::Hit(42.0));
+        st.on_write(50, 9.0); // non-resident: no-op locally
+    }
+}

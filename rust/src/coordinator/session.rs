@@ -1,0 +1,586 @@
+//! The user-facing session: the ePython module surface, in Rust.
+//!
+//! A [`Session`] owns one simulated device plus the host-side runtime:
+//! memory kinds, kernel registry, offload engine, and (optionally) the
+//! PJRT executor for tensor builtins. Its API mirrors the paper's Python
+//! surface:
+//!
+//! | paper (Python)                         | here                                      |
+//! |----------------------------------------|-------------------------------------------|
+//! | `memkind.Host(types.int, 1000)`        | [`Session::alloc_host_f32`]               |
+//! | `memkind.Shared(...)`                  | [`Session::alloc_shared_f32`]             |
+//! | `memkind.Microcore(...)`               | [`Session::alloc_microcore_f32`]          |
+//! | `@offload` + call                      | [`Session::compile_kernel`] + [`Session::offload`] |
+//! | `prefetch={...}` decorator argument    | [`ArgSpec::with_prefetch`] / [`OffloadOptions::prefetch`] |
+//! | `define_on_device` / `copy_to_device` / `copy_from_device` | [`Session::define_on_device`] / [`Session::copy_to_device`] / [`Session::copy_from_device`] |
+//!
+//! Changing where data lives is one call-site change — swap the alloc
+//! method — with everything downstream (reference decoding, transfer
+//! costs, host staging) following from the kind, as §3.2 prescribes.
+
+use crate::device::Technology;
+use crate::error::{Error, Result};
+use crate::memory::{
+    DataRef, FileKind, HostKind, MicrocoreKind, ProceduralKind, SharedKind, SinkKind,
+};
+use crate::runtime::{ModelExecutor, PjrtContext};
+use crate::sim::Time;
+use crate::vm::Value;
+
+use super::engine::{Engine, EngineStats};
+use super::marshal::{bind, ArgSpec};
+use super::offload::{Kernel, KernelRegistry, OffloadOptions, OffloadResult};
+
+/// Builder for [`Session`].
+#[derive(Debug, Clone)]
+pub struct SessionBuilder {
+    tech: Technology,
+    artifacts_dir: Option<String>,
+    service_threads: usize,
+    seed: u64,
+    trace_capacity: Option<usize>,
+}
+
+impl SessionBuilder {
+    /// Start building a session for a technology preset.
+    pub fn new(tech: Technology) -> Self {
+        SessionBuilder {
+            tech,
+            artifacts_dir: None,
+            service_threads: 1,
+            seed: 42,
+            trace_capacity: None,
+        }
+    }
+
+    /// Attach AOT artifacts (enables PJRT-backed tensor builtins).
+    pub fn artifacts_dir(mut self, dir: impl Into<String>) -> Self {
+        self.artifacts_dir = Some(dir.into());
+        self
+    }
+
+    /// Host service threads (§4 models one dedicated thread by default).
+    pub fn service_threads(mut self, n: usize) -> Self {
+        self.service_threads = n.max(1);
+        self
+    }
+
+    /// Deterministic seed for service jitter and synthetic content.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Record a bounded event trace.
+    pub fn trace(mut self, capacity: usize) -> Self {
+        self.trace_capacity = Some(capacity);
+        self
+    }
+
+    /// Construct the session.
+    pub fn build(self) -> Result<Session> {
+        let exec = match &self.artifacts_dir {
+            Some(dir) => Some(ModelExecutor::new(PjrtContext::new(dir)?)),
+            None => None,
+        };
+        let mut engine = Engine::new(self.tech.clone(), self.service_threads, self.seed, exec);
+        if let Some(cap) = self.trace_capacity {
+            engine.enable_trace(cap);
+        }
+        Ok(Session { tech: self.tech, engine, kernels: KernelRegistry::new() })
+    }
+}
+
+/// A live offload session against one simulated micro-core device.
+#[derive(Debug)]
+pub struct Session {
+    tech: Technology,
+    engine: Engine,
+    kernels: KernelRegistry,
+}
+
+impl Session {
+    /// Builder entry point.
+    pub fn builder(tech: Technology) -> SessionBuilder {
+        SessionBuilder::new(tech)
+    }
+
+    /// The technology preset.
+    pub fn tech(&self) -> &Technology {
+        &self.tech
+    }
+
+    /// The engine (stats, trace, service knobs).
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Mutable engine access.
+    pub fn engine_mut(&mut self) -> &mut Engine {
+        &mut self.engine
+    }
+
+    /// Engine statistics snapshot.
+    pub fn stats(&self) -> EngineStats {
+        self.engine.stats()
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> Time {
+        self.engine.now()
+    }
+
+    // ---- memory kinds (§3.2) --------------------------------------------
+
+    /// Allocate in host memory (top of the hierarchy; on the Epiphany the
+    /// cores cannot address this — every access is host-serviced).
+    pub fn alloc_host_f32(&mut self, name: &str, data: &[f32]) -> Result<DataRef> {
+        Ok(self
+            .engine
+            .registry_mut()
+            .register(name, Box::new(HostKind::from_vec(data.to_vec()))))
+    }
+
+    /// Allocate zeroed host memory.
+    pub fn alloc_host_zeroed(&mut self, name: &str, len: usize) -> Result<DataRef> {
+        Ok(self.engine.registry_mut().register(name, Box::new(HostKind::zeroed(len))))
+    }
+
+    /// Allocate in the shared window (device-addressable; bounded by the
+    /// technology's window size — the Epiphany's 32 MB).
+    pub fn alloc_shared_f32(&mut self, name: &str, data: &[f32]) -> Result<DataRef> {
+        let kind = SharedKind::from_vec(data.to_vec(), self.tech.shared_window)?;
+        Ok(self.engine.registry_mut().register(name, Box::new(kind)))
+    }
+
+    /// Allocate zeroed shared-window memory.
+    pub fn alloc_shared_zeroed(&mut self, name: &str, len: usize) -> Result<DataRef> {
+        let kind = SharedKind::zeroed(len, self.tech.shared_window)?;
+        Ok(self.engine.registry_mut().register(name, Box::new(kind)))
+    }
+
+    /// Allocate one replica per core in local store (`Microcore` kind;
+    /// §3.2's device-resident data). Checked against the per-core budget.
+    pub fn alloc_microcore_f32(&mut self, name: &str, len: usize) -> Result<DataRef> {
+        let bytes = len * 4;
+        if bytes > self.tech.user_store() {
+            return Err(Error::ScratchpadExhausted {
+                core: 0,
+                requested: bytes,
+                free: self.tech.user_store(),
+            });
+        }
+        Ok(self
+            .engine
+            .registry_mut()
+            .register(name, Box::new(MicrocoreKind::zeroed(self.tech.cores, len))))
+    }
+
+    /// Allocate a *procedural* (generated-on-read) variable in the shared
+    /// level — used where the paper's dense full-size tensors cannot
+    /// physically exist in board memory (DESIGN.md substitution table).
+    pub fn alloc_procedural_f32(
+        &mut self,
+        name: &str,
+        seed: u64,
+        len: usize,
+        scale: f32,
+    ) -> Result<DataRef> {
+        Ok(self
+            .engine
+            .registry_mut()
+            .register(name, Box::new(ProceduralKind::new(seed, len, scale))))
+    }
+
+    /// Allocate a write-only sink variable (gradient stream destination in
+    /// the full-size regime).
+    pub fn alloc_sink_f32(&mut self, name: &str, len: usize) -> Result<DataRef> {
+        Ok(self.engine.registry_mut().register(name, Box::new(SinkKind::new(len))))
+    }
+
+    /// Allocate a file-backed variable (the extensibility kind of §4).
+    pub fn alloc_file_f32(
+        &mut self,
+        name: &str,
+        path: impl Into<std::path::PathBuf>,
+        len: usize,
+    ) -> Result<DataRef> {
+        Ok(self.engine.registry_mut().register(name, Box::new(FileKind::create(path, len)?)))
+    }
+
+    /// Read a variable's (view's) contents from the host side.
+    pub fn read(&self, dref: DataRef) -> Result<Vec<f32>> {
+        self.engine.registry().read_all(dref, None)
+    }
+
+    /// Write into a variable from the host side.
+    pub fn write(&mut self, dref: DataRef, off: usize, data: &[f32]) -> Result<()> {
+        self.engine.registry_mut().write(dref, None, off, data)
+    }
+
+    // ---- device-resident data API (§2.2) ----------------------------------
+
+    /// `define_on_device`: allocate a per-core device variable.
+    pub fn define_on_device(&mut self, name: &str, len: usize) -> Result<DataRef> {
+        self.alloc_microcore_f32(name, len)
+    }
+
+    /// `copy_to_device`: host → every core's replica.
+    pub fn copy_to_device(&mut self, dref: DataRef, data: &[f32]) -> Result<()> {
+        self.engine.registry_mut().write(dref, None, 0, data)
+    }
+
+    /// `copy_from_device`: one core's replica → host.
+    pub fn copy_from_device(&self, dref: DataRef, core: usize) -> Result<Vec<f32>> {
+        self.engine.registry().read_all(dref, Some(core))
+    }
+
+    // ---- kernels ----------------------------------------------------------
+
+    /// Compile and register a kernel (entry = last `def`).
+    pub fn compile_kernel(&mut self, name: &str, src: &str) -> Result<Kernel> {
+        self.kernels.register(name, src, None)
+    }
+
+    /// Compile with an explicit entry function.
+    pub fn compile_kernel_entry(&mut self, name: &str, src: &str, entry: &str) -> Result<Kernel> {
+        self.kernels.register(name, src, Some(entry))
+    }
+
+    /// Look up a registered kernel.
+    pub fn kernel(&self, name: &str) -> Result<&Kernel> {
+        self.kernels.get(name)
+    }
+
+    /// Offload a kernel (blocking, collective across the selected cores).
+    pub fn offload(
+        &mut self,
+        kernel: &Kernel,
+        args: &[ArgSpec],
+        options: OffloadOptions,
+    ) -> Result<OffloadResult> {
+        let core_ids: Vec<usize> = match &options.cores {
+            Some(ids) => {
+                for &id in ids {
+                    if id >= self.tech.cores {
+                        return Err(Error::Coordinator(format!(
+                            "core {id} out of range (device has {})",
+                            self.tech.cores
+                        )));
+                    }
+                }
+                ids.clone()
+            }
+            None => (0..self.tech.cores).collect(),
+        };
+        let bound = bind(args, &core_ids, options.mode, options.default_prefetch)?;
+        self.engine.offload(kernel, bound, &options, &core_ids)
+    }
+
+    /// Convenience: offload by kernel name.
+    pub fn offload_named(
+        &mut self,
+        kernel: &str,
+        args: &[ArgSpec],
+        options: OffloadOptions,
+    ) -> Result<OffloadResult> {
+        let k = self.kernels.get(kernel)?.clone();
+        self.offload(&k, args, options)
+    }
+}
+
+/// Helper: unwrap a per-core return value as a numeric vector.
+pub fn value_as_vec(v: &Value) -> Result<Vec<f64>> {
+    Ok(v.as_array()?.borrow().clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::marshal::PrefetchChoice;
+    use crate::coordinator::{Access, PrefetchSpec, TransferMode};
+
+    fn microcore_prefetch_default() -> PrefetchChoice {
+        PrefetchChoice::Default
+    }
+
+    const SUM_SRC: &str = r#"
+def mykernel(a, b):
+    ret_data = [0.0] * len(a)
+    i = 0
+    while i < len(a):
+        ret_data[i] = a[i] + b[i]
+        i += 1
+    return ret_data
+"#;
+
+    fn session() -> Session {
+        Session::builder(Technology::epiphany3()).seed(7).build().unwrap()
+    }
+
+    fn pf(buf: usize, elems: usize) -> PrefetchSpec {
+        PrefetchSpec {
+            buffer_size: buf,
+            elems_per_fetch: elems,
+            distance: elems,
+            access: Access::ReadOnly,
+        }
+    }
+
+    #[test]
+    fn listing1_on_demand_all_cores() {
+        let mut s = session();
+        let n = 160;
+        let a: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let b: Vec<f32> = vec![1000.0; n as usize];
+        let ra = s.alloc_host_f32("a", &a).unwrap();
+        let rb = s.alloc_host_f32("b", &b).unwrap();
+        let k = s.compile_kernel("sum", SUM_SRC).unwrap();
+        let res = s
+            .offload(
+                &k,
+                &[ArgSpec::sharded(ra), ArgSpec::sharded(rb)],
+                OffloadOptions::default().transfer(TransferMode::OnDemand),
+            )
+            .unwrap();
+        assert_eq!(res.reports.len(), 16);
+        // Core 0 got elements [0, 10): expect a[i] + 1000
+        let v0 = value_as_vec(&res.reports[0].value).unwrap();
+        assert_eq!(v0.len(), 10);
+        assert_eq!(v0[0], 1000.0);
+        assert_eq!(v0[9], 1009.0);
+        // Core 15 got [150, 160)
+        let v15 = value_as_vec(&res.reports[15].value).unwrap();
+        assert_eq!(v15[0], 1150.0);
+        assert!(res.elapsed() > 0);
+        assert!(res.total_requests() >= 2 * n as u64, "per-element traffic");
+    }
+
+    #[test]
+    fn prefetch_beats_on_demand_on_elapsed_time() {
+        let run = |mode_prefetch: bool| {
+            let mut s = session();
+            let n = 3200usize;
+            let a: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            let b = vec![1.0f32; n];
+            let ra = s.alloc_host_f32("a", &a).unwrap();
+            let rb = s.alloc_host_f32("b", &b).unwrap();
+            let k = s.compile_kernel("sum", SUM_SRC).unwrap();
+            let opts = if mode_prefetch {
+                OffloadOptions::default().prefetch(pf(40, 20))
+            } else {
+                OffloadOptions::default().transfer(TransferMode::OnDemand)
+            };
+            let res = s
+                .offload(&k, &[ArgSpec::sharded(ra), ArgSpec::sharded(rb)], opts)
+                .unwrap();
+            // correctness identical across modes (§3.1)
+            let v = value_as_vec(&res.reports[0].value).unwrap();
+            assert_eq!(v[5], (5 + 1) as f64);
+            res.elapsed()
+        };
+        let od = run(false);
+        let pfx = run(true);
+        assert!(
+            pfx * 3 < od,
+            "prefetch ({pfx} ns) must be ≫ faster than on-demand ({od} ns)"
+        );
+    }
+
+    #[test]
+    fn eager_small_args_work_and_are_fast() {
+        let mut s = session();
+        let n = 320usize; // 20 elems/core: fits on-core
+        let a = vec![2.0f32; n];
+        let b = vec![3.0f32; n];
+        let ra = s.alloc_host_f32("a", &a).unwrap();
+        let rb = s.alloc_host_f32("b", &b).unwrap();
+        let k = s.compile_kernel("sum", SUM_SRC).unwrap();
+        let res = s
+            .offload(
+                &k,
+                &[ArgSpec::sharded(ra), ArgSpec::sharded(rb)],
+                OffloadOptions::default().transfer(TransferMode::Eager),
+            )
+            .unwrap();
+        assert_eq!(res.spills, 0);
+        let v = value_as_vec(&res.reports[3].value).unwrap();
+        assert!(v.iter().all(|&x| x == 5.0));
+        // No channel requests for argument data (only result copy-back).
+        for r in &res.reports {
+            assert_eq!(r.counters.ext_reads, 0, "eager args are local");
+        }
+    }
+
+    #[test]
+    fn eager_oversized_args_spill_to_reference() {
+        let mut s = session();
+        // 4000 f32 per core = 16 KB > ~7 KB free: must spill.
+        let n = 4000 * 16;
+        let ra = s.alloc_host_zeroed("a", n).unwrap();
+        let rb = s.alloc_host_zeroed("b", n).unwrap();
+        let k = s.compile_kernel("first", "def first(a, b):\n    return a[0] + b[0]\n").unwrap();
+        let res = s
+            .offload(
+                &k,
+                &[ArgSpec::sharded(ra), ArgSpec::sharded(rb)],
+                OffloadOptions::default().transfer(TransferMode::Eager),
+            )
+            .unwrap();
+        assert!(res.spills > 0, "paper's Listing-1 overflow scenario");
+        // Spilled args still work (by reference): a[0] + b[0] = 0.0.
+        assert_eq!(res.reports[0].value.as_f64().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn core_subset_runs_only_there() {
+        let mut s = session();
+        let ra = s.alloc_host_f32("a", &[1.0; 40]).unwrap();
+        let rb = s.alloc_host_f32("b", &[2.0; 40]).unwrap();
+        let k = s.compile_kernel("sum", SUM_SRC).unwrap();
+        let res = s
+            .offload(
+                &k,
+                &[ArgSpec::sharded(ra), ArgSpec::sharded(rb)],
+                OffloadOptions::default()
+                    .transfer(TransferMode::OnDemand)
+                    .on_cores(vec![2, 5]),
+            )
+            .unwrap();
+        assert_eq!(res.reports.len(), 2);
+        assert_eq!(res.reports[0].core, 2);
+        assert_eq!(res.reports[1].core, 5);
+        // Shards split across 2 cores: 20 each.
+        assert_eq!(value_as_vec(&res.reports[0].value).unwrap().len(), 20);
+    }
+
+    #[test]
+    fn out_of_range_core_rejected() {
+        let mut s = session();
+        let k = s.compile_kernel("k", "def k():\n    return 0\n").unwrap();
+        let err = s.offload(&k, &[], OffloadOptions::default().on_cores(vec![99]));
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn mutable_reference_writes_propagate_to_host() {
+        let mut s = session();
+        let ra = s.alloc_host_f32("a", &[0.0; 32]).unwrap();
+        let src = r#"
+def scale(a):
+    i = 0
+    while i < len(a):
+        a[i] = core_id() + 1.0
+        i += 1
+    return 0
+"#;
+        let k = s.compile_kernel("scale", src).unwrap();
+        s.offload(
+            &k,
+            &[ArgSpec::sharded_mut(ra)],
+            OffloadOptions::default().transfer(TransferMode::OnDemand),
+        )
+        .unwrap();
+        let data = s.read(ra).unwrap();
+        // Core i wrote (i+1) into its 2-element shard.
+        assert_eq!(data[0], 1.0);
+        assert_eq!(data[1], 1.0);
+        assert_eq!(data[30], 16.0);
+        assert_eq!(data[31], 16.0);
+    }
+
+    #[test]
+    fn write_to_readonly_reference_is_typed_error() {
+        let mut s = session();
+        let ra = s.alloc_host_f32("a", &[0.0; 16]).unwrap();
+        let k = s
+            .compile_kernel("w", "def w(a):\n    a[0] = 1.0\n    return 0\n")
+            .unwrap();
+        let err = s
+            .offload(
+                &k,
+                &[ArgSpec::sharded(ra)],
+                OffloadOptions::default().transfer(TransferMode::OnDemand),
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("read-only"), "{err}");
+    }
+
+    #[test]
+    fn shared_kind_respects_window() {
+        let mut s = session();
+        // 10M f32 = 40 MB > 32 MB window
+        assert!(s.alloc_shared_zeroed("big", 10_000_000).is_err());
+        assert!(s.alloc_shared_zeroed("ok", 1_000_000).is_ok());
+    }
+
+    #[test]
+    fn microcore_kind_per_core_replicas() {
+        let mut s = session();
+        let d = s.define_on_device("state", 16).unwrap();
+        s.copy_to_device(d, &[7.0; 16]).unwrap();
+        let src = r#"
+def bump(state):
+    state[0] = state[0] + core_id()
+    return state[0]
+"#;
+        let k = s.compile_kernel("bump", src).unwrap();
+        let res = s
+            .offload(
+                &k,
+                &[ArgSpec::Ref {
+                    dref: d,
+                    shard: false,
+                    access: Access::Mutable,
+                    prefetch: microcore_prefetch_default(),
+                }],
+                OffloadOptions::default().transfer(TransferMode::OnDemand),
+            )
+            .unwrap();
+        // Each core saw its own replica: 7 + core_id.
+        assert_eq!(res.reports[0].value.as_f64().unwrap(), 7.0);
+        assert_eq!(res.reports[5].value.as_f64().unwrap(), 12.0);
+        assert_eq!(s.copy_from_device(d, 5).unwrap()[0], 12.0);
+    }
+
+    #[test]
+    fn microcore_kind_too_large_rejected() {
+        let mut s = session();
+        assert!(s.alloc_microcore_f32("big", 10_000).is_err(), "40 KB > 32 KB store");
+    }
+
+    #[test]
+    fn deterministic_same_seed_same_times() {
+        let run = || {
+            let mut s = Session::builder(Technology::epiphany3()).seed(99).build().unwrap();
+            let ra = s.alloc_host_f32("a", &[1.0; 320]).unwrap();
+            let rb = s.alloc_host_f32("b", &[2.0; 320]).unwrap();
+            let k = s.compile_kernel("sum", SUM_SRC).unwrap();
+            s.offload(
+                &k,
+                &[ArgSpec::sharded(ra), ArgSpec::sharded(rb)],
+                OffloadOptions::default().transfer(TransferMode::OnDemand),
+            )
+            .unwrap()
+            .elapsed()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn virtual_time_is_monotonic_across_offloads() {
+        let mut s = session();
+        let ra = s.alloc_host_f32("a", &[1.0; 32]).unwrap();
+        let rb = s.alloc_host_f32("b", &[2.0; 32]).unwrap();
+        let k = s.compile_kernel("sum", SUM_SRC).unwrap();
+        let t0 = s.now();
+        let args = [ArgSpec::sharded(ra), ArgSpec::sharded(rb)];
+        s.offload(&k, &args, OffloadOptions::default().transfer(TransferMode::OnDemand))
+            .unwrap();
+        let t1 = s.now();
+        s.offload(&k, &args, OffloadOptions::default().transfer(TransferMode::OnDemand))
+            .unwrap();
+        let t2 = s.now();
+        assert!(t0 < t1 && t1 < t2);
+    }
+}

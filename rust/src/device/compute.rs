@@ -1,0 +1,98 @@
+//! Cycle-cost model: turning work into virtual time.
+//!
+//! Two execution regimes exist on the simulated cores, mirroring the paper:
+//!
+//! * **Interpreted** — ePython-style bytecode dispatch. Each VM opcode costs
+//!   `vm_dispatch_cycles`; floating-point opcodes additionally pay the FLOP
+//!   cost (× soft-float penalty without an FPU). This regime produces the
+//!   ML-benchmark timings of Figs. 3–4.
+//! * **Compiled** — C-class inner loops (the LINPACK benchmark of Table 1,
+//!   and the VM's accelerated tensor builtins, which stand for the
+//!   hand-written C kernels a native programmer would use). Work costs
+//!   `flops / flops_per_cycle` cycles.
+
+use super::Technology;
+use crate::sim::{cycles_to_time, Time};
+
+/// Per-core compute-cost calculator for one technology.
+#[derive(Debug, Clone)]
+pub struct ComputeModel {
+    clock_hz: u64,
+    flops_per_cycle: f64,
+    softfloat: f64,
+    dispatch_cycles: u64,
+}
+
+impl ComputeModel {
+    /// Build the cost model for a technology preset.
+    pub fn new(tech: &Technology) -> Self {
+        ComputeModel {
+            clock_hz: tech.clock_hz,
+            flops_per_cycle: tech.flops_per_cycle,
+            softfloat: tech.softfloat_penalty,
+            dispatch_cycles: tech.vm_dispatch_cycles,
+        }
+    }
+
+    /// Time for `n` interpreted bytecode dispatches (no FP work).
+    pub fn dispatch(&self, n: u64) -> Time {
+        cycles_to_time(n * self.dispatch_cycles, self.clock_hz)
+    }
+
+    /// Time for `flops` floating-point operations in a compiled loop.
+    pub fn compiled_flops(&self, flops: u64) -> Time {
+        let cycles = (flops as f64 * self.softfloat / self.flops_per_cycle).ceil() as u64;
+        cycles_to_time(cycles, self.clock_hz)
+    }
+
+    /// Time for one interpreted FP opcode: dispatch + the FLOP itself.
+    pub fn interpreted_flop(&self) -> Time {
+        self.dispatch(1) + self.compiled_flops(1)
+    }
+
+    /// Effective compiled FLOP rate (FLOPs/s) of one core.
+    pub fn core_flops(&self) -> f64 {
+        self.clock_hz as f64 * self.flops_per_cycle / self.softfloat
+    }
+
+    /// Clock rate in Hz.
+    pub fn clock_hz(&self) -> u64 {
+        self.clock_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Technology;
+    use crate::sim::SEC;
+
+    #[test]
+    fn compiled_rate_matches_table1_per_core() {
+        let m = ComputeModel::new(&Technology::epiphany3());
+        // One core should deliver ~94.26 MFLOPs (1508.16 / 16).
+        let t = m.compiled_flops(94_260_000);
+        let err = (t as f64 - SEC as f64).abs() / SEC as f64;
+        assert!(err < 0.01, "one second of FLOPs took {t} ns");
+    }
+
+    #[test]
+    fn softfloat_penalty_applies() {
+        let fpu = ComputeModel::new(&Technology::microblaze_fpu());
+        let soft = ComputeModel::new(&Technology::microblaze());
+        let ratio = soft.compiled_flops(1_000_000) as f64 / fpu.compiled_flops(1_000_000) as f64;
+        assert!((ratio - 49.2).abs() < 1.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn dispatch_scales_linearly() {
+        let m = ComputeModel::new(&Technology::epiphany3());
+        assert_eq!(m.dispatch(10) * 10, m.dispatch(100));
+    }
+
+    #[test]
+    fn interpreted_flop_slower_than_compiled() {
+        let m = ComputeModel::new(&Technology::epiphany3());
+        assert!(m.interpreted_flop() > m.compiled_flops(1));
+    }
+}

@@ -1,0 +1,26 @@
+//! Simulated micro-core hardware.
+//!
+//! The paper evaluates on physical Parallella (Epiphany-III) and Pynq-II
+//! (Zynq-7020 MicroBlaze) boards; neither exists here, so this module is the
+//! DESIGN.md-documented substitution: a parameterised hardware model whose
+//! constants are taken from the paper and the cited datasheets.
+//!
+//! * [`technology`] — named presets: core count, clock, local-store size,
+//!   off-chip bandwidth (theoretical + achieved), FLOP rates with/without a
+//!   hardware FPU, host-visibility of each memory level.
+//! * [`power`] — activity-based power model calibrated to the paper's
+//!   multimeter measurements (Table 1).
+//! * [`scratchpad`] — the per-core local-store allocator, with the ePython
+//!   VM's 24 KB footprint reserved exactly as on the real device.
+//! * [`compute`] — cycle-cost helpers turning FLOP counts and VM opcode
+//!   dispatches into virtual time.
+
+pub mod compute;
+pub mod power;
+pub mod scratchpad;
+pub mod technology;
+
+pub use compute::ComputeModel;
+pub use power::PowerModel;
+pub use scratchpad::Scratchpad;
+pub use technology::{HostClass, Technology};

@@ -1,0 +1,210 @@
+//! Per-core local-store (scratchpad) allocator.
+//!
+//! The defining constraint of micro-cores: the Epiphany-III core has 32 KB
+//! of local store, of which the resident ePython VM consumes 24 KB (+1.2 KB
+//! for the §4 extensions), leaving single-digit KBs for user data, stack and
+//! pre-fetch buffers. This allocator enforces that budget — exceeding it is
+//! the [`crate::Error::ScratchpadExhausted`] condition that motivates the
+//! whole paper (data that used to be *copied* must now be *referenced*).
+//!
+//! The design is a simple first-fit free-list allocator with coalescing:
+//! faithful to the bump/heap allocators used on real local stores, cheap,
+//! and fully deterministic.
+
+use crate::error::{Error, Result};
+
+/// One allocation handle (offset into the scratchpad).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SpadAlloc {
+    /// Byte offset in the local store.
+    pub offset: usize,
+    /// Allocation size in bytes.
+    pub size: usize,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct FreeBlock {
+    offset: usize,
+    size: usize,
+}
+
+/// First-fit free-list allocator over one core's local store.
+#[derive(Debug, Clone)]
+pub struct Scratchpad {
+    core: usize,
+    capacity: usize,
+    reserved: usize,
+    free: Vec<FreeBlock>,
+    in_use: usize,
+    high_water: usize,
+}
+
+impl Scratchpad {
+    /// Scratchpad for `core` with `capacity` bytes total, of which
+    /// `reserved` (the VM footprint) is never allocatable.
+    pub fn new(core: usize, capacity: usize, reserved: usize) -> Self {
+        let avail = capacity.saturating_sub(reserved);
+        Scratchpad {
+            core,
+            capacity,
+            reserved,
+            free: vec![FreeBlock { offset: reserved, size: avail }],
+            in_use: 0,
+            high_water: 0,
+        }
+    }
+
+    /// Allocate `size` bytes (8-byte aligned). First-fit.
+    pub fn alloc(&mut self, size: usize) -> Result<SpadAlloc> {
+        let size = size.max(1).div_ceil(8) * 8;
+        for i in 0..self.free.len() {
+            if self.free[i].size >= size {
+                let offset = self.free[i].offset;
+                self.free[i].offset += size;
+                self.free[i].size -= size;
+                if self.free[i].size == 0 {
+                    self.free.remove(i);
+                }
+                self.in_use += size;
+                self.high_water = self.high_water.max(self.in_use);
+                return Ok(SpadAlloc { offset, size });
+            }
+        }
+        Err(Error::ScratchpadExhausted { core: self.core, requested: size, free: self.free_bytes() })
+    }
+
+    /// Release an allocation, coalescing adjacent free blocks.
+    pub fn free(&mut self, a: SpadAlloc) {
+        debug_assert!(a.offset >= self.reserved && a.offset + a.size <= self.capacity);
+        self.in_use = self.in_use.saturating_sub(a.size);
+        // Insert sorted by offset, then coalesce neighbours.
+        let pos = self.free.partition_point(|b| b.offset < a.offset);
+        self.free.insert(pos, FreeBlock { offset: a.offset, size: a.size });
+        // Coalesce with next.
+        if pos + 1 < self.free.len()
+            && self.free[pos].offset + self.free[pos].size == self.free[pos + 1].offset
+        {
+            self.free[pos].size += self.free[pos + 1].size;
+            self.free.remove(pos + 1);
+        }
+        // Coalesce with previous.
+        if pos > 0 && self.free[pos - 1].offset + self.free[pos - 1].size == self.free[pos].offset {
+            self.free[pos - 1].size += self.free[pos].size;
+            self.free.remove(pos);
+        }
+    }
+
+    /// Bytes currently free for user data.
+    pub fn free_bytes(&self) -> usize {
+        self.free.iter().map(|b| b.size).sum()
+    }
+
+    /// Bytes currently allocated.
+    pub fn used_bytes(&self) -> usize {
+        self.in_use
+    }
+
+    /// Peak allocation over the scratchpad's lifetime.
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
+    /// Total capacity including the VM reservation.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Whether `size` bytes could currently be allocated contiguously.
+    pub fn can_fit(&self, size: usize) -> bool {
+        let size = size.max(1).div_ceil(8) * 8;
+        self.free.iter().any(|b| b.size >= size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn epiphany_spad() -> Scratchpad {
+        Scratchpad::new(0, 32 * 1024, 24 * 1024 + 1228)
+    }
+
+    #[test]
+    fn vm_reservation_is_excluded() {
+        let s = epiphany_spad();
+        assert!(s.free_bytes() < 8 * 1024);
+        assert!(s.free_bytes() > 4 * 1024);
+    }
+
+    #[test]
+    fn alloc_free_roundtrip_restores_space() {
+        let mut s = epiphany_spad();
+        let before = s.free_bytes();
+        let a = s.alloc(1000).unwrap();
+        assert_eq!(s.free_bytes(), before - 1000usize.div_ceil(8) * 8);
+        s.free(a);
+        assert_eq!(s.free_bytes(), before);
+        assert_eq!(s.used_bytes(), 0);
+    }
+
+    #[test]
+    fn exhaustion_reports_typed_error() {
+        let mut s = epiphany_spad();
+        match s.alloc(64 * 1024) {
+            Err(Error::ScratchpadExhausted { core, requested, .. }) => {
+                assert_eq!(core, 0);
+                assert_eq!(requested, 64 * 1024);
+            }
+            other => panic!("expected exhaustion, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn listing1_data_does_not_fit_epiphany() {
+        // The paper's motivating example: three 4 KB lists (1000 numbers
+        // each) cannot all fit next to the 24 KB interpreter in 32 KB.
+        let mut s = epiphany_spad();
+        let a = s.alloc(4000);
+        let b = a.is_ok().then(|| s.alloc(4000));
+        assert!(
+            a.is_err() || matches!(b, Some(Err(_))),
+            "paper's Listing 1 scenario must exhaust the Epiphany scratchpad"
+        );
+    }
+
+    #[test]
+    fn coalescing_reassembles_contiguity() {
+        let mut s = Scratchpad::new(1, 1024, 0);
+        let a = s.alloc(256).unwrap();
+        let b = s.alloc(256).unwrap();
+        let c = s.alloc(256).unwrap();
+        s.free(b);
+        assert!(!s.can_fit(512), "fragmented");
+        s.free(a);
+        assert!(s.can_fit(512), "coalesced a+b");
+        s.free(c);
+        assert!(s.can_fit(1024 - 8), "fully coalesced");
+        // exact full-capacity alloc succeeds (1024 is 8-aligned)
+        assert!(s.alloc(1024).is_ok());
+    }
+
+    #[test]
+    fn high_water_tracks_peak() {
+        let mut s = Scratchpad::new(2, 4096, 0);
+        let a = s.alloc(1024).unwrap();
+        let b = s.alloc(2048).unwrap();
+        s.free(a);
+        s.free(b);
+        assert_eq!(s.high_water(), 1024 + 2048);
+    }
+
+    #[test]
+    fn alignment_rounds_to_eight() {
+        let mut s = Scratchpad::new(3, 4096, 0);
+        let a = s.alloc(1).unwrap();
+        assert_eq!(a.size, 8);
+        let b = s.alloc(9).unwrap();
+        assert_eq!(b.size, 16);
+        assert_eq!(b.offset % 8, 0);
+    }
+}

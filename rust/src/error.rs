@@ -1,0 +1,101 @@
+//! Crate-wide error type.
+//!
+//! Library code returns [`Result<T>`]; binaries/examples wrap it in
+//! `anyhow` for reporting. Variants are grouped by subsystem so callers can
+//! match on the failure domain (e.g. an out-of-scratchpad condition is a
+//! programmer-visible event in this system, not an internal bug — the paper
+//! dedicates §2.2 to what happens when kernel data cannot fit on-core).
+
+use std::fmt;
+
+/// All errors produced by the microcore library.
+#[derive(Debug)]
+pub enum Error {
+    /// VM front-end: lexing/parsing the kernel source failed.
+    Syntax { line: usize, msg: String },
+    /// VM back-end: compiling the AST to bytecode failed.
+    Compile(String),
+    /// VM runtime: a kernel raised (type error, OOB index, …).
+    Vm(String),
+    /// On-core scratchpad exhausted (the defining micro-core failure mode).
+    ScratchpadExhausted { core: usize, requested: usize, free: usize },
+    /// Memory-kind / DataRef errors (unknown ref, bad slice, kind mismatch).
+    Memory(String),
+    /// Channel-protocol violation (no free cell, bad handle, double-ack).
+    Channel(String),
+    /// Offload coordination errors (unknown kernel, bad argument count, …).
+    Coordinator(String),
+    /// PJRT runtime errors (artifact missing, shape mismatch, XLA failure).
+    Runtime(String),
+    /// Configuration / manifest parse errors.
+    Config(String),
+    /// Underlying I/O error.
+    Io(std::io::Error),
+    /// Error bubbled up from the `xla` crate.
+    Xla(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Syntax { line, msg } => write!(f, "syntax error (line {line}): {msg}"),
+            Error::Compile(m) => write!(f, "compile error: {m}"),
+            Error::Vm(m) => write!(f, "vm error: {m}"),
+            Error::ScratchpadExhausted { core, requested, free } => write!(
+                f,
+                "core {core}: scratchpad exhausted ({requested} B requested, {free} B free)"
+            ),
+            Error::Memory(m) => write!(f, "memory error: {m}"),
+            Error::Channel(m) => write!(f, "channel error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_domain() {
+        let e = Error::ScratchpadExhausted { core: 3, requested: 4096, free: 128 };
+        let s = e.to_string();
+        assert!(s.contains("core 3"));
+        assert!(s.contains("4096"));
+    }
+
+    #[test]
+    fn io_error_converts_and_sources() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(e.to_string().contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

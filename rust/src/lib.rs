@@ -1,0 +1,85 @@
+//! # microcore — hierarchical-memory offload abstractions for micro-core architectures
+//!
+//! A production-quality reproduction of *Jamieson & Brown, "High level
+//! programming abstractions for leveraging hierarchical memories with
+//! micro-core architectures"* (JPDC 2020, DOI 10.1016/j.jpdc.2019.11.011).
+//!
+//! Micro-core architectures (Epiphany-III, multi-core MicroBlaze soft-cores)
+//! pack many simple cores with *kilobytes* of manually-managed local memory.
+//! Offloading kernels to them cannot assume the accelerator can hold its
+//! arguments: the paper's contribution is a **pass-by-reference** kernel
+//! invocation model plus **pre-fetching** and **memory kinds**, letting
+//! kernels process arbitrarily large data living anywhere in a deep memory
+//! hierarchy — including levels the device cannot address directly.
+//!
+//! This crate implements the full system:
+//!
+//! * [`device`] — simulated micro-core hardware: technology presets
+//!   (Epiphany-III, MicroBlaze ± FPU, Cortex-A9, …), clocks, scratchpads,
+//!   off-chip links with contention, and an activity-based power model.
+//! * [`memory`] — the memory hierarchy: [`memory::MemKind`] allocation
+//!   classes (`Host`, `Shared`, `Microcore`, …) and opaque [`memory::DataRef`]
+//!   references that are what actually travels to the device.
+//! * [`channel`] — the paper's Fig. 2 communication substrate: per-core
+//!   channels of thirty-two 1 KB cells in shared memory.
+//! * [`vm`] — an ePython-like on-core interpreter (lexer → parser →
+//!   bytecode → VM) whose symbol table carries the paper's `external` flag;
+//!   external reads/writes become blocking or pre-fetched channel traffic.
+//! * [`coordinator`] — the host-side offload engine: kernel registry,
+//!   argument marshalling (eager copy vs by-reference), the pre-fetch
+//!   engine, request servicing, and device-resident data management.
+//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
+//!   (`artifacts/*.hlo.txt`) that carry the numeric hot path.
+//! * [`workloads`] — the paper's benchmarks: the lung-scan neural-network
+//!   training benchmark (Figs. 3–4), LINPACK (Table 1) and the synthetic
+//!   stall-time probe (Table 2).
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use microcore::coordinator::{ArgSpec, OffloadOptions, Session, TransferMode};
+//! use microcore::device::Technology;
+//!
+//! let mut sess = Session::builder(Technology::epiphany3()).build().unwrap();
+//! let a = sess.alloc_host_f32("a", &vec![1.0; 1000]).unwrap();
+//! let b = sess.alloc_host_f32("b", &vec![2.0; 1000]).unwrap();
+//! let kernel = sess
+//!     .compile_kernel(
+//!         "sum",
+//!         "def mykernel(a, b):\n    ret = [0.0] * len(a)\n    i = 0\n    \
+//!          while i < len(a):\n        ret[i] = a[i] + b[i]\n        i += 1\n    \
+//!          return ret\n",
+//!     )
+//!     .unwrap();
+//! let out = sess
+//!     .offload(
+//!         &kernel,
+//!         &[ArgSpec::sharded(a), ArgSpec::sharded(b)],
+//!         OffloadOptions::default().transfer(TransferMode::OnDemand),
+//!     )
+//!     .unwrap();
+//! println!("elapsed {} virtual ns across {} cores", out.elapsed(), out.reports.len());
+//! ```
+//!
+//! Determinism: the whole stack is a single-threaded discrete-event
+//! simulation over virtual time (host service threads and link contention
+//! are *modelled* resources), so every run with the same seed reproduces the
+//! same timings bit-for-bit. The `xla` crate's PJRT client is `Rc`-based
+//! (non-`Send`), which this design accommodates naturally.
+
+pub mod bench_support;
+pub mod channel;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod device;
+pub mod error;
+pub mod memory;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod testkit;
+pub mod vm;
+pub mod workloads;
+
+pub use error::{Error, Result};

@@ -1,0 +1,173 @@
+//! `microcore` — the leader binary.
+//!
+//! Subcommands:
+//!
+//! * `mlbench`  — the §5 machine-learning benchmark (Figs. 3–4 rows).
+//! * `linpack`  — Table 1 (MFLOPs / Watts / GFLOPs-per-Watt).
+//! * `stall`    — Table 2 (synthetic stall-time probe).
+//! * `info`     — technology presets and memory hierarchy facts.
+//!
+//! See `--help` for flags; each bench target under `benches/` regenerates
+//! a full paper table, this binary is the interactive driver.
+
+use microcore::cli::Cli;
+use microcore::config::ExperimentConfig;
+use microcore::coordinator::{Session, TransferMode};
+use microcore::device::Technology;
+use microcore::memory::{Hierarchy, Level};
+use microcore::metrics::report::{f3, ms, Table};
+use microcore::workloads::{linpack, mlbench, stall};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(argv) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: Vec<String>) -> anyhow::Result<()> {
+    let cli = Cli::new(
+        "microcore",
+        "hierarchical-memory offload for micro-core architectures (JPDC'20 reproduction)",
+    )
+    .opt("tech", Some("epiphany"), "technology preset (epiphany|microblaze|microblaze+fpu|cortex-a9)")
+    .opt("mode", Some("prefetch"), "transfer mode (eager|on-demand|prefetch)")
+    .opt("images", Some("4"), "images for mlbench")
+    .opt("pixels", None, "override image pixels for mlbench")
+    .opt("artifacts", Some("artifacts"), "AOT artifacts directory")
+    .opt("seed", Some("42"), "deterministic seed")
+    .opt("config", None, "JSON experiment config (overrides other flags)")
+    .flag("full", "full-size image regime for mlbench")
+    .flag("trace", "print the event trace after a run");
+
+    let Some(args) = cli.parse(argv)? else {
+        println!("{}", cli.help());
+        println!("Subcommands: mlbench | linpack | stall | info");
+        return Ok(());
+    };
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("info");
+
+    match cmd {
+        "info" => info(),
+        "linpack" => {
+            let seed: u64 = args.parse_as("seed")?;
+            let rows = linpack::table1(linpack::DEFAULT_N, seed)?;
+            let mut t = Table::new(
+                "Table 1: LINPACK performance and power",
+                &["Technology", "MFLOPs", "Watts", "GFLOPs/Watt", "residual"],
+            );
+            for r in rows {
+                t.row(&[
+                    r.technology,
+                    format!("{:.2}", r.mflops),
+                    format!("{:.2}", r.watts),
+                    f3(r.gflops_per_watt),
+                    format!("{:.2e}", r.residual),
+                ]);
+            }
+            print!("{}", t.render());
+            Ok(())
+        }
+        "stall" => {
+            let seed: u64 = args.parse_as("seed")?;
+            let tech = tech_of(&args)?;
+            let rows = stall::stall_table(&tech, 200, seed);
+            let mut t = Table::new(
+                format!("Table 2: micro-core stall time ({})", tech.name),
+                &["size", "mode", "min (ms)", "max (ms)", "mean (ms)"],
+            );
+            for r in rows {
+                t.row(&[
+                    format!("{}B", r.size),
+                    r.mode.to_string(),
+                    f3(r.min_ms),
+                    f3(r.max_ms),
+                    f3(r.mean_ms),
+                ]);
+            }
+            print!("{}", t.render());
+            Ok(())
+        }
+        "mlbench" => {
+            let cfgjson = match args.get("config") {
+                Some(path) => Some(ExperimentConfig::from_str(&std::fs::read_to_string(path)?)?),
+                None => None,
+            };
+            let tech = match &cfgjson {
+                Some(c) => Technology::by_name(&c.technology)
+                    .ok_or_else(|| anyhow::anyhow!("unknown technology {}", c.technology))?,
+                None => tech_of(&args)?,
+            };
+            let mode = match &cfgjson {
+                Some(c) => TransferMode::parse(&c.mode).unwrap(),
+                None => TransferMode::parse(args.req("mode")?)
+                    .ok_or_else(|| anyhow::anyhow!("bad --mode"))?,
+            };
+            let seed: u64 = args.parse_as("seed")?;
+            let session = Session::builder(tech.clone())
+                .artifacts_dir(args.req("artifacts")?)
+                .seed(seed)
+                .build()?;
+            let mut cfg = if args.is_set("full") {
+                mlbench::MlBenchConfig::full(mode)
+            } else {
+                mlbench::MlBenchConfig::small(tech.cores, mode)
+            };
+            if let Some(c) = &cfgjson {
+                cfg.images = c.images;
+            } else {
+                cfg.images = args.parse_as("images")?;
+            }
+            if let Some(px) = args.get("pixels") {
+                cfg.pixels = px.parse()?;
+            }
+            let mut bench = mlbench::MlBench::new(session, cfg.clone())?;
+            let r = bench.run()?;
+            let mut t = Table::new(
+                format!("ML benchmark — {} / {} / {} px", tech.name, mode.name(), cfg.pixels),
+                &["phase", "per-image (ms, virtual)"],
+            );
+            t.row(&["feed forward".into(), ms(r.per_image.feed_forward)]);
+            t.row(&["combine gradients".into(), ms(r.per_image.combine_gradients)]);
+            t.row(&["model update".into(), ms(r.per_image.model_update)]);
+            print!("{}", t.render());
+            println!(
+                "losses: {:?}\nrequests: {}  stall: {} ms",
+                r.losses,
+                r.requests,
+                ms(r.stall)
+            );
+            Ok(())
+        }
+        other => {
+            anyhow::bail!("unknown subcommand '{other}' (try --help)");
+        }
+    }
+}
+
+fn tech_of(args: &microcore::cli::Args) -> anyhow::Result<Technology> {
+    Technology::by_name(args.req("tech")?)
+        .ok_or_else(|| anyhow::anyhow!("unknown technology '{}'", args.req("tech").unwrap()))
+}
+
+fn info() -> anyhow::Result<()> {
+    let mut t = Table::new(
+        "Technology presets",
+        &["name", "cores", "clock", "local store", "link (achieved)", "shared window", "host addressable"],
+    );
+    for tech in Technology::all() {
+        let h = Hierarchy::new(&tech);
+        t.row(&[
+            tech.name.to_string(),
+            tech.cores.to_string(),
+            format!("{} MHz", tech.clock_hz / 1_000_000),
+            format!("{} KB", tech.local_store / 1024),
+            format!("{} MB/s", tech.link_bw_achieved / 1_000_000),
+            format!("{} MB", tech.shared_window / (1024 * 1024)),
+            h.addressable(Level::Host).to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}

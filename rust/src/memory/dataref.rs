@@ -1,0 +1,112 @@
+//! Opaque data references — what actually travels to the micro-cores.
+//!
+//! §3.1/§4: on kernel invocation the coordinator sends each core a
+//! *reference* instead of the argument data. A [`DataRef`] is a unique id
+//! plus a `(offset, len)` window, so the same base variable can be handed to
+//! sixteen cores as sixteen disjoint shard views without copying anything.
+//! The id is meaningless on the device; only the host-side
+//! [`super::MemRegistry`] can decode it ("lookup ... designed this way for
+//! further extensibility").
+
+/// A reference to (a window of) a variable registered with the host.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DataRef {
+    /// Unique id of the base variable (registry key).
+    pub id: u64,
+    /// Element offset of this view within the base variable.
+    pub offset: usize,
+    /// Number of elements visible through this view.
+    pub len: usize,
+}
+
+impl DataRef {
+    /// Number of bytes this view spans (f32 elements).
+    pub fn bytes(&self) -> usize {
+        self.len * 4
+    }
+
+    /// A sub-view of this view. Panics if out of range (programmer error,
+    /// mirrors Python slice semantics tested at kernel launch).
+    pub fn slice(&self, offset: usize, len: usize) -> DataRef {
+        assert!(
+            offset + len <= self.len,
+            "slice [{offset}, {}) out of view of length {}",
+            offset + len,
+            self.len
+        );
+        DataRef { id: self.id, offset: self.offset + offset, len }
+    }
+
+    /// Split the view into `n` near-equal contiguous shards (per-core
+    /// argument distribution). Earlier shards get the remainder, matching
+    /// how ePython distributes pixels.
+    pub fn shards(&self, n: usize) -> Vec<DataRef> {
+        assert!(n >= 1);
+        let base = self.len / n;
+        let rem = self.len % n;
+        let mut out = Vec::with_capacity(n);
+        let mut off = 0;
+        for i in 0..n {
+            let l = base + usize::from(i < rem);
+            out.push(self.slice(off, l));
+            off += l;
+        }
+        out
+    }
+}
+
+/// Host-side metadata the registry returns for a reference.
+#[derive(Debug, Clone)]
+pub struct RefInfo {
+    /// The hierarchy level the base variable lives in.
+    pub level: super::Level,
+    /// Kind name (for reports).
+    pub kind_name: String,
+    /// Total length of the base variable, elements.
+    pub base_len: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn r(len: usize) -> DataRef {
+        DataRef { id: 7, offset: 0, len }
+    }
+
+    #[test]
+    fn shards_cover_exactly_once() {
+        for (len, n) in [(3600, 16), (3600, 8), (1000, 3), (7, 7), (10, 4)] {
+            let shards = r(len).shards(n);
+            assert_eq!(shards.len(), n);
+            let mut covered = 0;
+            for (i, s) in shards.iter().enumerate() {
+                assert_eq!(s.offset, covered, "shard {i} contiguous");
+                covered += s.len;
+                assert_eq!(s.id, 7);
+            }
+            assert_eq!(covered, len);
+        }
+    }
+
+    #[test]
+    fn shards_balanced_within_one() {
+        let shards = r(10).shards(4);
+        let lens: Vec<_> = shards.iter().map(|s| s.len).collect();
+        assert_eq!(lens, vec![3, 3, 2, 2]);
+    }
+
+    #[test]
+    fn nested_slices_compose_offsets() {
+        let s = r(100).slice(10, 50).slice(5, 10);
+        assert_eq!(s.offset, 15);
+        assert_eq!(s.len, 10);
+        assert_eq!(s.bytes(), 40);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of view")]
+    fn oob_slice_panics() {
+        r(10).slice(5, 10);
+    }
+}

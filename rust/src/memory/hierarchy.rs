@@ -1,0 +1,148 @@
+//! Fig. 1: the memory hierarchy of both evaluation platforms.
+//!
+//! ```text
+//!   Epiphany / Parallella                MicroBlaze / Pynq-II
+//!   ---------------------                --------------------
+//!   host DRAM   (NOT addressable)        host DRAM  (addressable)
+//!   shared window (32 MB, addressable)   shared = same DRAM
+//!   off-chip link (88 MB/s achieved)     off-chip link (~100 MB/s)
+//!   core local store (32 KB)             core local store (64 KB)
+//!   ```
+//!
+//! "The only difference between the two is that the Epiphany/Parallella
+//! combination contains a top-level that is not directly accessible to the
+//! micro-core" — that asymmetry is the [`Hierarchy::addressable`] predicate.
+
+use crate::device::Technology;
+use crate::sim::{transfer_time, Time};
+
+/// A level in the memory hierarchy (Fig. 1, top to bottom).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Level {
+    /// Board main memory *outside* the device-addressable window.
+    Host,
+    /// The shared window addressable by both host and micro-cores.
+    Shared,
+    /// A micro-core's local store.
+    CoreLocal,
+}
+
+impl Level {
+    /// Display name matching the paper's kind names.
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Host => "Host",
+            Level::Shared => "Shared",
+            Level::CoreLocal => "Microcore",
+        }
+    }
+}
+
+/// Hierarchy facts for one technology.
+#[derive(Debug, Clone)]
+pub struct Hierarchy {
+    host_addressable: bool,
+    shared_window: usize,
+    board_memory: usize,
+    /// Host-side DRAM copy bandwidth (staging Host-level data into the
+    /// shared window before it can cross the link).
+    host_memcpy_bw: u64,
+}
+
+impl Hierarchy {
+    /// Derive the hierarchy from a technology preset.
+    pub fn new(tech: &Technology) -> Self {
+        Hierarchy {
+            host_addressable: tech.host_memory_addressable,
+            shared_window: tech.shared_window,
+            board_memory: tech.board_memory,
+            host_memcpy_bw: 800_000_000, // ARM A9 DRAM copy, ~0.8 GB/s
+        }
+    }
+
+    /// Can the micro-cores directly address data at `level`?
+    pub fn addressable(&self, level: Level) -> bool {
+        match level {
+            Level::Host => self.host_addressable,
+            Level::Shared | Level::CoreLocal => true,
+        }
+    }
+
+    /// Size of the shared window (bytes).
+    pub fn shared_window(&self) -> usize {
+        self.shared_window
+    }
+
+    /// Total board memory (bytes).
+    pub fn board_memory(&self) -> usize {
+        self.board_memory
+    }
+
+    /// Host-side staging cost for servicing `bytes` from `level` (time to
+    /// move the data between host DRAM and the link-visible window, plus a
+    /// fixed address-translation/page-touch overhead per request). Zero
+    /// for levels the device reaches without host help.
+    pub fn staging_cost(&self, level: Level, bytes: u64) -> Time {
+        const STAGING_FIXED: Time = 15_000; // 15 us per request
+        match level {
+            Level::Host if !self.host_addressable => {
+                STAGING_FIXED + transfer_time(bytes, self.host_memcpy_bw)
+            }
+            _ => 0,
+        }
+    }
+
+    /// Does a variable of `bytes` fit in the shared window at all? (§5.2:
+    /// on the Epiphany "only 32MB of main memory is directly accessible to
+    /// the micro-core which even a single, full sized image, does not fit
+    /// into" once the model and workspace share it.)
+    pub fn fits_shared(&self, bytes: usize) -> bool {
+        bytes <= self.shared_window
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Technology;
+
+    #[test]
+    fn epiphany_host_level_not_addressable() {
+        let h = Hierarchy::new(&Technology::epiphany3());
+        assert!(!h.addressable(Level::Host));
+        assert!(h.addressable(Level::Shared));
+        assert!(h.addressable(Level::CoreLocal));
+    }
+
+    #[test]
+    fn microblaze_all_levels_addressable() {
+        let h = Hierarchy::new(&Technology::microblaze_fpu());
+        assert!(h.addressable(Level::Host));
+    }
+
+    #[test]
+    fn staging_only_for_non_addressable_host() {
+        let e = Hierarchy::new(&Technology::epiphany3());
+        let m = Hierarchy::new(&Technology::microblaze_fpu());
+        assert!(e.staging_cost(Level::Host, 1 << 20) > 0);
+        assert_eq!(e.staging_cost(Level::Shared, 1 << 20), 0);
+        assert_eq!(m.staging_cost(Level::Host, 1 << 20), 0);
+    }
+
+    #[test]
+    fn shared_window_limits_match_paper() {
+        let e = Hierarchy::new(&Technology::epiphany3());
+        // A 28.3 MB image alone fits, but image + model workspace does not.
+        let image = 7_084_800 * 4;
+        let weights = 7_084_800 * 4; // input->hidden weights at H=100 sharded: far larger
+        assert!(e.fits_shared(image));
+        assert!(!e.fits_shared(image + weights));
+    }
+
+    #[test]
+    fn level_ordering_top_down() {
+        assert!(Level::Host < Level::Shared);
+        assert!(Level::Shared < Level::CoreLocal);
+        assert_eq!(Level::CoreLocal.name(), "Microcore");
+    }
+}

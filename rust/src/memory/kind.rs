@@ -1,0 +1,518 @@
+//! Memory kinds: allocation classes naming a hierarchy level.
+//!
+//! §3.2: "We have created numerous kinds, including *Host* which allocates
+//! the data in the large host memory (not accessible directly by the
+//! micro-cores), *Shared* which places data in the memory which is
+//! accessible by both the host and micro-cores, and *Microcore* which
+//! allocates the data in the local memory of each micro-core."
+//!
+//! A kind owns its variable's storage and knows how to turn decoded
+//! references into loads and stores. Changing where data lives is a
+//! one-line change of kind — everything else in user code stays the same.
+//! New levels (remote memory, IO, …) are added by implementing [`MemKind`];
+//! [`FileKind`] demonstrates the extensibility claim with a kind whose
+//! "memory" is a file on disk.
+
+use std::cell::RefCell;
+use std::fs;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::PathBuf;
+
+use super::hierarchy::Level;
+use crate::error::{Error, Result};
+
+/// Behaviour shared by every memory kind.
+///
+/// Offsets/lengths are in f32 elements (the benchmark's single-precision
+/// data type; the VM converts at the boundary).
+pub trait MemKind {
+    /// Kind display name ("Host", "Shared", "Microcore", …).
+    fn name(&self) -> &'static str;
+
+    /// Which hierarchy level this kind allocates in.
+    fn level(&self) -> Level;
+
+    /// Total length of the variable, in elements.
+    fn len(&self) -> usize;
+
+    /// Whether the variable holds zero elements.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Read `out.len()` elements starting at `off`.
+    ///
+    /// `core`: which micro-core's replica to read, for kinds with per-core
+    /// storage (ignored by host-side kinds).
+    fn read(&self, core: Option<usize>, off: usize, out: &mut [f32]) -> Result<()>;
+
+    /// Write `data` starting at `off` (see `read` for `core`).
+    fn write(&mut self, core: Option<usize>, off: usize, data: &[f32]) -> Result<()>;
+}
+
+fn check_range(kind: &str, len: usize, off: usize, n: usize) -> Result<()> {
+    if off + n > len {
+        return Err(Error::Memory(format!(
+            "{kind}: access [{off}, {}) out of bounds (len {len})",
+            off + n
+        )));
+    }
+    Ok(())
+}
+
+/// `Host` kind: board main memory outside the device-addressable window.
+///
+/// On the Epiphany/Parallella this is the level the cores *cannot* reach;
+/// every access must be serviced by the host (staging cost applied by the
+/// hierarchy). This is the kind that makes arbitrarily-large data possible.
+#[derive(Debug, Clone)]
+pub struct HostKind {
+    data: Vec<f32>,
+}
+
+impl HostKind {
+    /// Allocate `len` zero-initialised elements in host memory.
+    pub fn zeroed(len: usize) -> Self {
+        HostKind { data: vec![0.0; len] }
+    }
+
+    /// Allocate from existing contents.
+    pub fn from_vec(data: Vec<f32>) -> Self {
+        HostKind { data }
+    }
+}
+
+impl MemKind for HostKind {
+    fn name(&self) -> &'static str {
+        "Host"
+    }
+    fn level(&self) -> Level {
+        Level::Host
+    }
+    fn len(&self) -> usize {
+        self.data.len()
+    }
+    fn read(&self, _core: Option<usize>, off: usize, out: &mut [f32]) -> Result<()> {
+        check_range("Host", self.data.len(), off, out.len())?;
+        out.copy_from_slice(&self.data[off..off + out.len()]);
+        Ok(())
+    }
+    fn write(&mut self, _core: Option<usize>, off: usize, data: &[f32]) -> Result<()> {
+        check_range("Host", self.data.len(), off, data.len())?;
+        self.data[off..off + data.len()].copy_from_slice(data);
+        Ok(())
+    }
+}
+
+/// `Shared` kind: the window addressable by both host and micro-cores
+/// (32 MB on the Parallella). Device accesses still cross the off-chip
+/// link, but need no host staging.
+#[derive(Debug, Clone)]
+pub struct SharedKind {
+    data: Vec<f32>,
+    window_bytes: usize,
+}
+
+impl SharedKind {
+    /// Allocate `len` zeroed elements in the shared window; fails if the
+    /// variable alone exceeds the window (the paper's full-size-image
+    /// condition on the Epiphany).
+    pub fn zeroed(len: usize, window_bytes: usize) -> Result<Self> {
+        if len * 4 > window_bytes {
+            return Err(Error::Memory(format!(
+                "Shared: {} B exceeds the {window_bytes} B device-addressable window",
+                len * 4
+            )));
+        }
+        Ok(SharedKind { data: vec![0.0; len], window_bytes })
+    }
+
+    /// Allocate from existing contents (same window check).
+    pub fn from_vec(data: Vec<f32>, window_bytes: usize) -> Result<Self> {
+        if data.len() * 4 > window_bytes {
+            return Err(Error::Memory(format!(
+                "Shared: {} B exceeds the {window_bytes} B device-addressable window",
+                data.len() * 4
+            )));
+        }
+        Ok(SharedKind { data, window_bytes })
+    }
+
+    /// The window capacity this kind was checked against.
+    pub fn window_bytes(&self) -> usize {
+        self.window_bytes
+    }
+}
+
+impl MemKind for SharedKind {
+    fn name(&self) -> &'static str {
+        "Shared"
+    }
+    fn level(&self) -> Level {
+        Level::Shared
+    }
+    fn len(&self) -> usize {
+        self.data.len()
+    }
+    fn read(&self, _core: Option<usize>, off: usize, out: &mut [f32]) -> Result<()> {
+        check_range("Shared", self.data.len(), off, out.len())?;
+        out.copy_from_slice(&self.data[off..off + out.len()]);
+        Ok(())
+    }
+    fn write(&mut self, _core: Option<usize>, off: usize, data: &[f32]) -> Result<()> {
+        check_range("Shared", self.data.len(), off, data.len())?;
+        self.data[off..off + data.len()].copy_from_slice(data);
+        Ok(())
+    }
+}
+
+/// `Microcore` kind: one replica of the variable in *each* core's local
+/// store. Host reads/writes are transparently translated into device
+/// copies (§3.2's abstraction over `copy_to_device`/`copy_from_device`).
+#[derive(Debug, Clone)]
+pub struct MicrocoreKind {
+    per_core: Vec<Vec<f32>>,
+}
+
+impl MicrocoreKind {
+    /// Allocate `len` zeroed elements on each of `cores` cores.
+    ///
+    /// The scratchpad budget is enforced by the session at allocation time
+    /// (it owns the per-core [`crate::device::Scratchpad`]s); this type
+    /// holds the contents.
+    pub fn zeroed(cores: usize, len: usize) -> Self {
+        MicrocoreKind { per_core: vec![vec![0.0; len]; cores] }
+    }
+
+    /// Number of core replicas.
+    pub fn cores(&self) -> usize {
+        self.per_core.len()
+    }
+}
+
+impl MemKind for MicrocoreKind {
+    fn name(&self) -> &'static str {
+        "Microcore"
+    }
+    fn level(&self) -> Level {
+        Level::CoreLocal
+    }
+    fn len(&self) -> usize {
+        self.per_core.first().map_or(0, |v| v.len())
+    }
+    fn read(&self, core: Option<usize>, off: usize, out: &mut [f32]) -> Result<()> {
+        let c = core.unwrap_or(0);
+        let data = self
+            .per_core
+            .get(c)
+            .ok_or_else(|| Error::Memory(format!("Microcore: no core {c}")))?;
+        check_range("Microcore", data.len(), off, out.len())?;
+        out.copy_from_slice(&data[off..off + out.len()]);
+        Ok(())
+    }
+    fn write(&mut self, core: Option<usize>, off: usize, data: &[f32]) -> Result<()> {
+        match core {
+            Some(c) => {
+                let v = self
+                    .per_core
+                    .get_mut(c)
+                    .ok_or_else(|| Error::Memory(format!("Microcore: no core {c}")))?;
+                check_range("Microcore", v.len(), off, data.len())?;
+                v[off..off + data.len()].copy_from_slice(data);
+            }
+            // Host-side write without a core: broadcast (define_on_device
+            // semantics — every core sees the same initial value).
+            None => {
+                for v in &mut self.per_core {
+                    check_range("Microcore", v.len(), off, data.len())?;
+                    v[off..off + data.len()].copy_from_slice(data);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Extensibility demo: a kind whose backing store is a file on disk.
+///
+/// §4: "the memory kinds could perform some functionality other than memory
+/// access, such as communicating with remote memory spaces or IO". This
+/// kind treats the file as the top of the hierarchy: slower than Host, but
+/// unbounded — full-size scan archives can be processed without ever being
+/// resident in memory.
+pub struct FileKind {
+    path: PathBuf,
+    len: usize,
+    file: RefCell<fs::File>,
+}
+
+impl std::fmt::Debug for FileKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FileKind").field("path", &self.path).field("len", &self.len).finish()
+    }
+}
+
+impl FileKind {
+    /// Create (or truncate) a file holding `len` zeroed elements.
+    pub fn create(path: impl Into<PathBuf>, len: usize) -> Result<Self> {
+        let path = path.into();
+        let file = fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)?;
+        file.set_len((len * 4) as u64)?;
+        Ok(FileKind { path, len, file: RefCell::new(file) })
+    }
+
+    /// Backing path (for reports).
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+}
+
+impl MemKind for FileKind {
+    fn name(&self) -> &'static str {
+        "File"
+    }
+    fn level(&self) -> Level {
+        // Beyond Host in the hierarchy; serviced like Host (host staging).
+        Level::Host
+    }
+    fn len(&self) -> usize {
+        self.len
+    }
+    fn read(&self, _core: Option<usize>, off: usize, out: &mut [f32]) -> Result<()> {
+        check_range("File", self.len, off, out.len())?;
+        let mut f = self.file.borrow_mut();
+        f.seek(SeekFrom::Start((off * 4) as u64))?;
+        let mut buf = vec![0u8; out.len() * 4];
+        f.read_exact(&mut buf)?;
+        for (i, chunk) in buf.chunks_exact(4).enumerate() {
+            out[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        Ok(())
+    }
+    fn write(&mut self, _core: Option<usize>, off: usize, data: &[f32]) -> Result<()> {
+        check_range("File", self.len, off, data.len())?;
+        let mut f = self.file.borrow_mut();
+        f.seek(SeekFrom::Start((off * 4) as u64))?;
+        let mut buf = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        f.write_all(&buf)?;
+        Ok(())
+    }
+}
+
+/// A *virtual* kind whose contents are generated on read from a counter
+/// hash — no storage. Used for the full-size-image regime where the dense
+/// input→hidden weight matrix (H × 7 M pixels ≈ 2.8 GB f32) cannot
+/// physically exist on a 1 GB board (nor could it in the paper's own
+/// full-size runs — see DESIGN.md). Reads are deterministic in
+/// `(seed, index)`; transfer *costs* are identical to [`SharedKind`]
+/// (level `Shared`), so timing experiments are unaffected while memory
+/// stays O(1). Writes are rejected.
+#[derive(Debug, Clone)]
+pub struct ProceduralKind {
+    seed: u64,
+    len: usize,
+    scale: f32,
+}
+
+impl ProceduralKind {
+    /// `len` virtual elements derived from `seed`, uniform in
+    /// `[-scale, scale]`.
+    pub fn new(seed: u64, len: usize, scale: f32) -> Self {
+        ProceduralKind { seed, len, scale }
+    }
+
+    /// Deterministic element value (pure function of seed + index).
+    pub fn value_at(&self, i: usize) -> f32 {
+        let h = crate::sim::rng::mix2(self.seed, i as u64);
+        // map to [-1, 1) then scale
+        let unit = (h >> 11) as f32 / (1u64 << 53) as f32 * 2.0 - 1.0;
+        unit * self.scale
+    }
+}
+
+impl MemKind for ProceduralKind {
+    fn name(&self) -> &'static str {
+        "Procedural"
+    }
+    fn level(&self) -> Level {
+        Level::Shared
+    }
+    fn len(&self) -> usize {
+        self.len
+    }
+    fn read(&self, _core: Option<usize>, off: usize, out: &mut [f32]) -> Result<()> {
+        check_range("Procedural", self.len, off, out.len())?;
+        for (k, o) in out.iter_mut().enumerate() {
+            *o = self.value_at(off + k);
+        }
+        Ok(())
+    }
+    fn write(&mut self, _core: Option<usize>, _off: usize, _data: &[f32]) -> Result<()> {
+        Err(Error::Memory("Procedural kind is read-only".into()))
+    }
+}
+
+/// A write-only *sink* kind: accepts writes, accumulating count and a
+/// running sum/abs-sum (so numerics remain checkable), storing nothing.
+/// Reads return zero. Pairs with [`ProceduralKind`] for the full-size
+/// gradient stream whose dense tensor cannot exist in board memory.
+#[derive(Debug, Default, Clone)]
+pub struct SinkKind {
+    len: usize,
+    writes: u64,
+    elems: u64,
+    sum: f64,
+    abs_sum: f64,
+}
+
+impl SinkKind {
+    /// A sink accepting `len` virtual elements.
+    pub fn new(len: usize) -> Self {
+        SinkKind { len, ..Default::default() }
+    }
+
+    /// (write calls, elements written, sum, abs-sum).
+    pub fn totals(&self) -> (u64, u64, f64, f64) {
+        (self.writes, self.elems, self.sum, self.abs_sum)
+    }
+}
+
+impl MemKind for SinkKind {
+    fn name(&self) -> &'static str {
+        "Sink"
+    }
+    fn level(&self) -> Level {
+        Level::Shared
+    }
+    fn len(&self) -> usize {
+        self.len
+    }
+    fn read(&self, _core: Option<usize>, off: usize, out: &mut [f32]) -> Result<()> {
+        check_range("Sink", self.len, off, out.len())?;
+        out.fill(0.0);
+        Ok(())
+    }
+    fn write(&mut self, _core: Option<usize>, off: usize, data: &[f32]) -> Result<()> {
+        check_range("Sink", self.len, off, data.len())?;
+        self.writes += 1;
+        self.elems += data.len() as u64;
+        for &v in data {
+            self.sum += f64::from(v);
+            self.abs_sum += f64::from(v.abs());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_kind_roundtrip() {
+        let mut k = HostKind::zeroed(10);
+        k.write(None, 2, &[1.0, 2.0, 3.0]).unwrap();
+        let mut out = [0.0; 3];
+        k.read(None, 2, &mut out).unwrap();
+        assert_eq!(out, [1.0, 2.0, 3.0]);
+        assert_eq!(k.level(), Level::Host);
+    }
+
+    #[test]
+    fn host_kind_rejects_oob() {
+        let k = HostKind::zeroed(4);
+        let mut out = [0.0; 3];
+        assert!(k.read(None, 2, &mut out).is_err());
+    }
+
+    #[test]
+    fn shared_kind_enforces_window() {
+        // 32 MB window: a 7.08 M-element image (28.3 MB) fits...
+        assert!(SharedKind::zeroed(7_084_800, 32 << 20).is_ok());
+        // ...but a 10 M-element (40 MB) variable does not.
+        assert!(SharedKind::zeroed(10_000_000, 32 << 20).is_err());
+    }
+
+    #[test]
+    fn microcore_kind_is_per_core() {
+        let mut k = MicrocoreKind::zeroed(4, 8);
+        k.write(Some(2), 0, &[5.0]).unwrap();
+        let mut a = [0.0];
+        k.read(Some(2), 0, &mut a).unwrap();
+        assert_eq!(a, [5.0]);
+        k.read(Some(1), 0, &mut a).unwrap();
+        assert_eq!(a, [0.0], "other cores unaffected");
+    }
+
+    #[test]
+    fn microcore_hostside_write_broadcasts() {
+        let mut k = MicrocoreKind::zeroed(3, 4);
+        k.write(None, 1, &[9.0]).unwrap();
+        for c in 0..3 {
+            let mut a = [0.0];
+            k.read(Some(c), 1, &mut a).unwrap();
+            assert_eq!(a, [9.0]);
+        }
+    }
+
+    #[test]
+    fn microcore_unknown_core_errors() {
+        let k = MicrocoreKind::zeroed(2, 4);
+        let mut a = [0.0];
+        assert!(k.read(Some(5), 0, &mut a).is_err());
+    }
+
+    #[test]
+    fn procedural_kind_deterministic_and_readonly() {
+        let k = ProceduralKind::new(42, 1000, 0.01);
+        let mut a = [0.0f32; 4];
+        let mut b = [0.0f32; 4];
+        k.read(None, 100, &mut a).unwrap();
+        k.read(None, 100, &mut b).unwrap();
+        assert_eq!(a, b, "deterministic");
+        assert!(a.iter().all(|v| v.abs() <= 0.01));
+        let k2 = ProceduralKind::new(43, 1000, 0.01);
+        let mut c = [0.0f32; 4];
+        k2.read(None, 100, &mut c).unwrap();
+        assert_ne!(a, c, "seed matters");
+        let mut kk = k.clone();
+        assert!(kk.write(None, 0, &[1.0]).is_err());
+    }
+
+    #[test]
+    fn sink_kind_accumulates_but_stores_nothing() {
+        let mut k = SinkKind::new(100);
+        k.write(None, 0, &[1.0, -2.0]).unwrap();
+        k.write(None, 50, &[3.0]).unwrap();
+        let (w, e, sum, abs) = k.totals();
+        assert_eq!((w, e), (2, 3));
+        assert_eq!(sum, 2.0);
+        assert_eq!(abs, 6.0);
+        let mut out = [9.0f32];
+        k.read(None, 0, &mut out).unwrap();
+        assert_eq!(out[0], 0.0);
+        assert!(k.write(None, 99, &[0.0, 0.0]).is_err(), "oob still checked");
+    }
+
+    #[test]
+    fn file_kind_roundtrips_through_disk() {
+        let dir = std::env::temp_dir().join(format!("mk_filekind_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("blob.f32");
+        let mut k = FileKind::create(&path, 1000).unwrap();
+        k.write(None, 500, &[1.5, -2.5]).unwrap();
+        let mut out = [0.0; 2];
+        k.read(None, 500, &mut out).unwrap();
+        assert_eq!(out, [1.5, -2.5]);
+        assert_eq!(k.level(), Level::Host);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

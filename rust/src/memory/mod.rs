@@ -1,0 +1,29 @@
+//! The memory hierarchy: levels, kinds and references.
+//!
+//! §3.2 of the paper: variables are allocated in a named level of the
+//! hierarchy via a *memory kind* (`Host`, `Shared`, `Microcore`); what is
+//! passed to the device on kernel invocation is an opaque *reference*,
+//! which the host later decodes ("the reference itself isn't a physical
+//! memory location but instead a unique identifier which is used to look up
+//! the corresponding variable and memory kind it belongs to", §4).
+//!
+//! * [`hierarchy`] — Fig. 1's levels and their addressability per
+//!   technology (the Epiphany's host DRAM is *not* device addressable; the
+//!   MicroBlaze's is).
+//! * [`kind`] — the [`MemKind`] trait plus the built-in kinds. New levels
+//!   are added exactly as the paper prescribes: implement the trait,
+//!   "everything else remains unchanged".
+//! * [`dataref`] — [`DataRef`], the unique-id reference (with slicing, so a
+//!   core can be handed its shard of a larger variable).
+//! * [`registry`] — the host-side lookup table from reference id to kind,
+//!   servicing decoded reads/writes.
+
+pub mod dataref;
+pub mod hierarchy;
+pub mod kind;
+pub mod registry;
+
+pub use dataref::{DataRef, RefInfo};
+pub use hierarchy::{Hierarchy, Level};
+pub use kind::{FileKind, HostKind, MemKind, MicrocoreKind, ProceduralKind, SharedKind, SinkKind};
+pub use registry::MemRegistry;

@@ -1,0 +1,190 @@
+//! The host-side reference lookup table.
+//!
+//! §4: "The host CPU side must be able to identify what each reference
+//! corresponds to, and then decode this and perform physical memory access.
+//! In reality, the reference itself isn't a physical memory location but
+//! instead a unique identifier which is used to look up the corresponding
+//! variable and memory kind it belongs to."
+//!
+//! The registry is that lookup: `DataRef.id → Box<dyn MemKind>`. All host
+//! servicing of device requests flows through [`MemRegistry::read`] /
+//! [`MemRegistry::write`], which translate view-relative offsets into base
+//! offsets and dispatch to the owning kind.
+
+use std::collections::HashMap;
+
+use super::dataref::{DataRef, RefInfo};
+use super::kind::MemKind;
+use crate::error::{Error, Result};
+
+/// Host-side table of live variables.
+#[derive(Default)]
+pub struct MemRegistry {
+    vars: HashMap<u64, Entry>,
+    next_id: u64,
+}
+
+struct Entry {
+    name: String,
+    kind: Box<dyn MemKind>,
+}
+
+impl MemRegistry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        MemRegistry { vars: HashMap::new(), next_id: 1 }
+    }
+
+    /// Register a variable under a debug `name`; returns the full-view ref.
+    pub fn register(&mut self, name: impl Into<String>, kind: Box<dyn MemKind>) -> DataRef {
+        let id = self.next_id;
+        self.next_id += 1;
+        let len = kind.len();
+        self.vars.insert(id, Entry { name: name.into(), kind });
+        DataRef { id, offset: 0, len }
+    }
+
+    /// Drop a variable; subsequent accesses through its refs error.
+    pub fn release(&mut self, r: DataRef) -> Result<()> {
+        self.vars
+            .remove(&r.id)
+            .map(|_| ())
+            .ok_or_else(|| Error::Memory(format!("release: unknown ref id {}", r.id)))
+    }
+
+    fn entry(&self, id: u64) -> Result<&Entry> {
+        self.vars.get(&id).ok_or_else(|| Error::Memory(format!("unknown ref id {id}")))
+    }
+
+    /// Decode + read `out.len()` elements at view-relative `off`.
+    pub fn read(&self, r: DataRef, core: Option<usize>, off: usize, out: &mut [f32]) -> Result<()> {
+        if off + out.len() > r.len {
+            return Err(Error::Memory(format!(
+                "read [{off}, {}) outside view of len {}",
+                off + out.len(),
+                r.len
+            )));
+        }
+        self.entry(r.id)?.kind.read(core, r.offset + off, out)
+    }
+
+    /// Decode + write `data` at view-relative `off`.
+    pub fn write(&mut self, r: DataRef, core: Option<usize>, off: usize, data: &[f32]) -> Result<()> {
+        if off + data.len() > r.len {
+            return Err(Error::Memory(format!(
+                "write [{off}, {}) outside view of len {}",
+                off + data.len(),
+                r.len
+            )));
+        }
+        let e = self
+            .vars
+            .get_mut(&r.id)
+            .ok_or_else(|| Error::Memory(format!("unknown ref id {}", r.id)))?;
+        e.kind.write(core, r.offset + off, data)
+    }
+
+    /// Convenience: read the whole view into a fresh vector.
+    pub fn read_all(&self, r: DataRef, core: Option<usize>) -> Result<Vec<f32>> {
+        let mut out = vec![0.0; r.len];
+        self.read(r, core, 0, &mut out)?;
+        Ok(out)
+    }
+
+    /// Metadata for a reference (level, kind, base length).
+    pub fn info(&self, r: DataRef) -> Result<RefInfo> {
+        let e = self.entry(r.id)?;
+        Ok(RefInfo {
+            level: e.kind.level(),
+            kind_name: e.kind.name().to_string(),
+            base_len: e.kind.len(),
+        })
+    }
+
+    /// Debug name of the variable behind a reference.
+    pub fn name(&self, r: DataRef) -> Result<&str> {
+        Ok(&self.entry(r.id)?.name)
+    }
+
+    /// Number of live variables.
+    pub fn len(&self) -> usize {
+        self.vars.len()
+    }
+
+    /// Whether the registry holds no variables.
+    pub fn is_empty(&self) -> bool {
+        self.vars.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::kind::{HostKind, MicrocoreKind, SharedKind};
+    use crate::memory::Level;
+
+    #[test]
+    fn register_read_write_roundtrip() {
+        let mut reg = MemRegistry::new();
+        let r = reg.register("xs", Box::new(HostKind::from_vec(vec![1.0, 2.0, 3.0, 4.0])));
+        assert_eq!(r.len, 4);
+        reg.write(r, None, 1, &[9.0]).unwrap();
+        assert_eq!(reg.read_all(r, None).unwrap(), vec![1.0, 9.0, 3.0, 4.0]);
+        assert_eq!(reg.name(r).unwrap(), "xs");
+    }
+
+    #[test]
+    fn view_offsets_translate_to_base() {
+        let mut reg = MemRegistry::new();
+        let r = reg.register("xs", Box::new(HostKind::from_vec((0..100).map(|i| i as f32).collect())));
+        let shard = r.slice(40, 10);
+        let vals = reg.read_all(shard, None).unwrap();
+        assert_eq!(vals[0], 40.0);
+        assert_eq!(vals[9], 49.0);
+        reg.write(shard, None, 0, &[-1.0]).unwrap();
+        let mut probe = [0.0];
+        reg.read(r, None, 40, &mut probe).unwrap();
+        assert_eq!(probe[0], -1.0);
+    }
+
+    #[test]
+    fn reads_outside_view_rejected() {
+        let mut reg = MemRegistry::new();
+        let r = reg.register("xs", Box::new(HostKind::zeroed(10)));
+        let shard = r.slice(5, 5);
+        let mut buf = [0.0; 3];
+        assert!(reg.read(shard, None, 4, &mut buf).is_err());
+    }
+
+    #[test]
+    fn info_reports_level_and_kind() {
+        let mut reg = MemRegistry::new();
+        let h = reg.register("h", Box::new(HostKind::zeroed(4)));
+        let s = reg.register("s", Box::new(SharedKind::zeroed(4, 1 << 20).unwrap()));
+        let m = reg.register("m", Box::new(MicrocoreKind::zeroed(2, 4)));
+        assert_eq!(reg.info(h).unwrap().level, Level::Host);
+        assert_eq!(reg.info(s).unwrap().level, Level::Shared);
+        assert_eq!(reg.info(m).unwrap().level, Level::CoreLocal);
+        assert_eq!(reg.info(m).unwrap().kind_name, "Microcore");
+        assert_eq!(reg.len(), 3);
+    }
+
+    #[test]
+    fn release_invalidates_refs() {
+        let mut reg = MemRegistry::new();
+        let r = reg.register("xs", Box::new(HostKind::zeroed(4)));
+        reg.release(r).unwrap();
+        assert!(reg.read_all(r, None).is_err());
+        assert!(reg.release(r).is_err(), "double release errors");
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn ids_are_unique_across_lifetime() {
+        let mut reg = MemRegistry::new();
+        let a = reg.register("a", Box::new(HostKind::zeroed(1)));
+        reg.release(a).unwrap();
+        let b = reg.register("b", Box::new(HostKind::zeroed(1)));
+        assert_ne!(a.id, b.id, "ids never recycled");
+    }
+}

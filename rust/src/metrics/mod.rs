@@ -1,0 +1,5 @@
+//! Reporting: paper-style tables/figures as ASCII + CSV.
+
+pub mod report;
+
+pub use report::Table;

@@ -1,0 +1,233 @@
+//! Typed model-operation wrappers over [`PjrtContext`].
+//!
+//! The engine's tensor-builtin handler and the workloads call these
+//! instead of raw `execute`, getting: artifact selection by shard length
+//! (`fwd_accum_t{225,450,1200}` …), input assembly, output destructuring,
+//! and the artifact's FLOP count for the device cost model.
+
+use super::pjrt::PjrtContext;
+use crate::error::{Error, Result};
+
+/// Output of the fused network head (one image).
+#[derive(Debug, Clone)]
+pub struct HeadOutput {
+    /// Hidden activations (H).
+    pub h: Vec<f32>,
+    /// Prediction in [0,1].
+    pub yhat: f32,
+    /// Binary cross-entropy loss.
+    pub loss: f32,
+    /// Gradient wrt the hidden→output weights (H).
+    pub gv: Vec<f32>,
+    /// Hidden-layer delta broadcast back to the cores (H).
+    pub dh: Vec<f32>,
+}
+
+/// Typed executor for the benchmark's model phases.
+#[derive(Debug)]
+pub struct ModelExecutor {
+    ctx: PjrtContext,
+    hidden: usize,
+}
+
+impl ModelExecutor {
+    /// Wrap a PJRT context.
+    pub fn new(ctx: PjrtContext) -> Self {
+        let hidden = ctx.manifest().hidden;
+        ModelExecutor { ctx, hidden }
+    }
+
+    /// Hidden-layer width of the loaded artifacts.
+    pub fn hidden(&self) -> usize {
+        self.hidden
+    }
+
+    /// Underlying context (perf counters, raw execution).
+    pub fn ctx(&self) -> &PjrtContext {
+        &self.ctx
+    }
+
+    fn sized(&self, prefix: &str, t: usize) -> Result<(String, u64)> {
+        let name = format!("{prefix}_t{t}");
+        let spec = self.ctx.manifest().get(&name).map_err(|_| {
+            Error::Runtime(format!(
+                "no artifact '{name}': supported shard lengths are {:?}",
+                self.ctx.manifest().names_with_prefix(prefix)
+            ))
+        })?;
+        Ok((name, spec.flops))
+    }
+
+    /// Feed-forward tile: `acc + W[:, chunk] @ x_chunk`.
+    /// Returns (new_acc, flops).
+    pub fn fwd_accum(&self, w: &[f32], x: &[f32], acc: &[f32]) -> Result<(Vec<f32>, u64)> {
+        let t = x.len();
+        let (name, flops) = self.sized("fwd_accum", t)?;
+        let mut out = self.ctx.execute(&name, &[w, x, acc])?;
+        Ok((out.swap_remove(0), flops))
+    }
+
+    /// One-shot feed-forward shard: `W @ x` (small-image regime).
+    pub fn fwd_shard(&self, w: &[f32], x: &[f32]) -> Result<(Vec<f32>, u64)> {
+        let t = x.len();
+        let (name, flops) = self.sized("fwd_shard", t)?;
+        let mut out = self.ctx.execute(&name, &[w, x])?;
+        Ok((out.swap_remove(0), flops))
+    }
+
+    /// Gradient tile: `g + outer(dh, x_chunk)`.
+    pub fn grad_shard(&self, dh: &[f32], x: &[f32], g: &[f32]) -> Result<(Vec<f32>, u64)> {
+        let t = x.len();
+        let (name, flops) = self.sized("grad_shard", t)?;
+        let mut out = self.ctx.execute(&name, &[dh, x, g])?;
+        Ok((out.swap_remove(0), flops))
+    }
+
+    /// SGD tile update: `w - lr * g`.
+    pub fn update_shard(&self, w: &[f32], g: &[f32], lr: f32) -> Result<(Vec<f32>, u64)> {
+        let t = w.len() / self.hidden;
+        let (name, flops) = self.sized("update_shard", t)?;
+        let lr_arr = [lr];
+        let mut out = self.ctx.execute(&name, &[w, g, &lr_arr])?;
+        Ok((out.swap_remove(0), flops))
+    }
+
+    /// The fused network head (forward + backward), host-side.
+    pub fn head(&self, acc: &[f32], v: &[f32], y: f32) -> Result<(HeadOutput, u64)> {
+        let name = format!("head_h{}", self.hidden);
+        let flops = self.ctx.manifest().get(&name)?.flops;
+        let y_arr = [y];
+        let out = self.ctx.execute(&name, &[acc, v, &y_arr])?;
+        let [h, yhat, loss, gv, dh]: [Vec<f32>; 5] =
+            out.try_into().map_err(|_| Error::Runtime("head: bad output arity".into()))?;
+        Ok((HeadOutput { h, yhat: yhat[0], loss: loss[0], gv, dh }, flops))
+    }
+
+    /// Head-weight update: `v - lr * gv`.
+    pub fn update_vec(&self, v: &[f32], gv: &[f32], lr: f32) -> Result<(Vec<f32>, u64)> {
+        let name = format!("update_vec_h{}", self.hidden);
+        let flops = self.ctx.manifest().get(&name)?.flops;
+        let lr_arr = [lr];
+        let mut out = self.ctx.execute(&name, &[v, gv, &lr_arr])?;
+        Ok((out.swap_remove(0), flops))
+    }
+
+    /// Dot product via the VM-builtin artifact, padding to the nearest
+    /// supported size (padding with zeros is exact for dot).
+    pub fn dot(&self, a: &[f32], b: &[f32]) -> Result<(f32, u64)> {
+        debug_assert_eq!(a.len(), b.len());
+        let sizes: Vec<usize> = self
+            .ctx
+            .manifest()
+            .names_with_prefix("dot_n")
+            .iter()
+            .filter_map(|n| n.trim_start_matches("dot_n").parse().ok())
+            .collect();
+        let n = sizes
+            .iter()
+            .copied()
+            .filter(|&s| s >= a.len())
+            .min()
+            .ok_or_else(|| {
+                Error::Runtime(format!("dot: no artifact fits length {} (have {sizes:?})", a.len()))
+            })?;
+        let mut ap = a.to_vec();
+        let mut bp = b.to_vec();
+        ap.resize(n, 0.0);
+        bp.resize(n, 0.0);
+        let name = format!("dot_n{n}");
+        let flops = self.ctx.manifest().get(&name)?.flops;
+        let out = self.ctx.execute(&name, &[&ap, &bp])?;
+        Ok((out[0][0], flops))
+    }
+
+    /// Elementwise vector sum (quickstart path).
+    pub fn vecadd(&self, a: &[f32], b: &[f32]) -> Result<(Vec<f32>, u64)> {
+        let name = format!("vecadd_n{}", a.len());
+        let flops = self.ctx.manifest().get(&name).map(|s| s.flops).map_err(|_| {
+            Error::Runtime(format!(
+                "vecadd: no artifact for length {} (have {:?})",
+                a.len(),
+                self.ctx.manifest().names_with_prefix("vecadd_n")
+            ))
+        })?;
+        let mut out = self.ctx.execute(&name, &[a, b])?;
+        Ok((out.swap_remove(0), flops))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Self-skipping when artifacts are absent (see pjrt.rs note).
+    use super::*;
+
+    fn exec() -> Option<ModelExecutor> {
+        std::path::Path::new("artifacts/manifest.json")
+            .exists()
+            .then(|| ModelExecutor::new(PjrtContext::new("artifacts").unwrap()))
+    }
+
+    #[test]
+    fn fwd_accum_matches_manual_matvec() {
+        let Some(ex) = exec() else { return };
+        let h = ex.hidden();
+        let t = 225;
+        let w: Vec<f32> = (0..h * t).map(|i| ((i % 13) as f32 - 6.0) * 0.01).collect();
+        let x: Vec<f32> = (0..t).map(|i| (i % 7) as f32 * 0.1).collect();
+        let acc = vec![1.0f32; h];
+        let (out, flops) = ex.fwd_accum(&w, &x, &acc).unwrap();
+        assert_eq!(out.len(), h);
+        assert!(flops > 0);
+        // manual row 0
+        let manual: f32 = 1.0 + (0..t).map(|j| w[j] * x[j]).sum::<f32>();
+        assert!((out[0] - manual).abs() < 1e-3, "{} vs {manual}", out[0]);
+    }
+
+    #[test]
+    fn grad_then_update_shrinks_loss_direction() {
+        let Some(ex) = exec() else { return };
+        let h = ex.hidden();
+        let t = 225;
+        let dh = vec![0.5f32; h];
+        let x: Vec<f32> = (0..t).map(|i| i as f32 / t as f32).collect();
+        let g0 = vec![0.0f32; h * t];
+        let (g, _) = ex.grad_shard(&dh, &x, &g0).unwrap();
+        // outer(dh,x)[0][j] = 0.5 * x[j]
+        assert!((g[10] - 0.5 * x[10]).abs() < 1e-5);
+        let w = vec![1.0f32; h * t];
+        let (w2, _) = ex.update_shard(&w, &g, 0.1).unwrap();
+        assert!((w2[10] - (1.0 - 0.1 * g[10])).abs() < 1e-5);
+    }
+
+    #[test]
+    fn head_loss_is_bce() {
+        let Some(ex) = exec() else { return };
+        let h = ex.hidden();
+        let acc = vec![0.0f32; h]; // sigmoid = 0.5 everywhere
+        let v = vec![0.0f32; h]; // z = 0, yhat = 0.5
+        let (out, _) = ex.head(&acc, &v, 1.0).unwrap();
+        assert!((out.yhat - 0.5).abs() < 1e-6);
+        assert!((out.loss - 0.5f32.ln().abs()).abs() < 1e-4, "loss {}", out.loss);
+        // dh = v*delta*h*(1-h) = 0 since v = 0
+        assert!(out.dh.iter().all(|&d| d.abs() < 1e-7));
+    }
+
+    #[test]
+    fn dot_pads_exactly() {
+        let Some(ex) = exec() else { return };
+        let a: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let b = vec![2.0f32; 100];
+        let (d, _) = ex.dot(&a, &b).unwrap();
+        assert!((d - 9900.0).abs() < 1e-2, "{d}");
+    }
+
+    #[test]
+    fn update_vec_steps() {
+        let Some(ex) = exec() else { return };
+        let h = ex.hidden();
+        let v = vec![1.0f32; h];
+        let gv = vec![0.5f32; h];
+        let (v2, _) = ex.update_vec(&v, &gv, 0.2).unwrap();
+        assert!((v2[0] - 0.9).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,182 @@
+//! The AOT artifact manifest (`artifacts/manifest.json`).
+//!
+//! Produced by `python/compile/aot.py` alongside the `.hlo.txt` files; the
+//! Rust side type-checks kernel invocations against it at *load* time so a
+//! shape mismatch is a clear `Error::Runtime` up front, not an XLA failure
+//! deep inside a benchmark run.
+
+use std::path::{Path, PathBuf};
+
+use crate::config::Json;
+use crate::error::{Error, Result};
+
+/// One tensor signature (dtype is always f32 in this system).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSig {
+    /// Argument name (inputs only; outputs are positional).
+    pub name: String,
+    /// Dimensions (row-major).
+    pub dims: Vec<usize>,
+}
+
+impl TensorSig {
+    /// Total element count.
+    pub fn elems(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One AOT artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// Artifact name (e.g. `fwd_accum_t1200`).
+    pub name: String,
+    /// HLO text file (relative to the artifacts dir).
+    pub file: String,
+    /// Input signatures in call order.
+    pub inputs: Vec<TensorSig>,
+    /// Output signatures in tuple order.
+    pub outputs: Vec<TensorSig>,
+    /// FLOPs per invocation (from the Python cost annotation).
+    pub flops: u64,
+    /// Benchmark phase tag ("feed_forward", "combine_gradients", …).
+    pub phase: String,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Artifact directory the manifest was loaded from.
+    pub dir: PathBuf,
+    /// Hidden-layer width the artifacts were built for.
+    pub hidden: usize,
+    /// All artifacts.
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        let j = Json::parse(&text)?;
+        Self::from_json(dir, &j)
+    }
+
+    /// Parse from a JSON document.
+    pub fn from_json(dir: PathBuf, j: &Json) -> Result<Manifest> {
+        let hidden = j.req_usize("hidden")?;
+        let arts = j
+            .req("artifacts")?
+            .as_arr()
+            .ok_or_else(|| Error::Config("'artifacts' must be an array".into()))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let name = a.req_str("name")?.to_string();
+            let file = a.req_str("file")?.to_string();
+            let sig = |v: &Json, positional: bool| -> Result<Vec<TensorSig>> {
+                v.as_arr()
+                    .ok_or_else(|| Error::Config(format!("{name}: signature must be array")))?
+                    .iter()
+                    .enumerate()
+                    .map(|(i, t)| {
+                        let dims = t
+                            .req("dims")?
+                            .as_arr()
+                            .ok_or_else(|| Error::Config(format!("{name}: dims must be array")))?
+                            .iter()
+                            .map(|d| {
+                                d.as_usize().ok_or_else(|| {
+                                    Error::Config(format!("{name}: dims must be integers"))
+                                })
+                            })
+                            .collect::<Result<Vec<_>>>()?;
+                        let nm = if positional {
+                            format!("out{i}")
+                        } else {
+                            t.req_str("name")?.to_string()
+                        };
+                        Ok(TensorSig { name: nm, dims })
+                    })
+                    .collect()
+            };
+            let inputs = sig(a.req("inputs")?, false)?;
+            let outputs = sig(a.req("outputs")?, true)?;
+            let meta = a.req("meta")?;
+            let flops = meta.get("flops").and_then(Json::as_u64).unwrap_or(0);
+            let phase = meta.get("phase").and_then(Json::as_str).unwrap_or("unknown").to_string();
+            artifacts.push(ArtifactSpec { name, file, inputs, outputs, flops, phase });
+        }
+        Ok(Manifest { dir, hidden, artifacts })
+    }
+
+    /// Find an artifact by exact name.
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| Error::Runtime(format!("artifact '{name}' not in manifest")))
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    /// Artifact names matching a prefix (e.g. all `fwd_accum_t*`).
+    pub fn names_with_prefix(&self, prefix: &str) -> Vec<&str> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.name.starts_with(prefix))
+            .map(|a| a.name.as_str())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+      "hidden": 100, "tb": 75,
+      "artifacts": [
+        {"name": "fwd_shard_t225", "file": "fwd_shard_t225.hlo.txt",
+         "sha256": "x",
+         "inputs": [{"name": "w", "dtype": "f32", "dims": [100, 225]},
+                    {"name": "x", "dtype": "f32", "dims": [225]}],
+         "outputs": [{"dtype": "f32", "dims": [100]}],
+         "meta": {"phase": "feed_forward", "flops": 45000}}
+      ]}"#;
+
+    #[test]
+    fn parses_and_indexes() {
+        let m = Manifest::from_json(PathBuf::from("arts"), &Json::parse(DOC).unwrap()).unwrap();
+        assert_eq!(m.hidden, 100);
+        let a = m.get("fwd_shard_t225").unwrap();
+        assert_eq!(a.inputs[0].dims, vec![100, 225]);
+        assert_eq!(a.inputs[0].elems(), 22500);
+        assert_eq!(a.outputs[0].dims, vec![100]);
+        assert_eq!(a.flops, 45000);
+        assert_eq!(a.phase, "feed_forward");
+        assert_eq!(m.path_of(a), PathBuf::from("arts/fwd_shard_t225.hlo.txt"));
+        assert!(m.get("nope").is_err());
+        assert_eq!(m.names_with_prefix("fwd_").len(), 1);
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        // Integration-lite: if `make artifacts` has run, validate it.
+        if std::path::Path::new("artifacts/manifest.json").exists() {
+            let m = Manifest::load("artifacts").unwrap();
+            assert_eq!(m.hidden, 100);
+            assert!(m.get("head_h100").is_ok());
+            assert!(!m.names_with_prefix("fwd_accum_t").is_empty());
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! PJRT runtime: loading and executing the AOT-compiled artifacts.
+//!
+//! `make artifacts` runs Python exactly once, lowering the Layer-2 JAX
+//! model (with its Layer-1 Pallas kernels inlined) to **HLO text** files
+//! plus a `manifest.json` describing every artifact's I/O signature. This
+//! module is the Rust side of that interchange:
+//!
+//! * [`manifest`] — parse and validate the manifest.
+//! * [`pjrt`] — the PJRT CPU client: HLO text → `XlaComputation` →
+//!   compiled executable, with a compile cache (one compile per artifact
+//!   per process) and shape-checked execution.
+//! * [`executor`] — typed wrappers for each model operation (`fwd_accum`,
+//!   `grad_shard`, `head`, …) used by the engine's tensor-builtin handler.
+//!
+//! Python never runs on the request path: once `artifacts/` exists the
+//! whole system is this Rust binary plus `libxla_extension`.
+
+pub mod executor;
+pub mod manifest;
+pub mod pjrt;
+
+pub use executor::ModelExecutor;
+pub use manifest::{ArtifactSpec, Manifest};
+pub use pjrt::PjrtContext;

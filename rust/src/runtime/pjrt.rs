@@ -1,0 +1,223 @@
+//! PJRT execution context: HLO-text artifacts → compiled executables.
+//!
+//! Follows the reference wiring of `/opt/xla-example/load_hlo`: parse HLO
+//! *text* with `HloModuleProto::from_text_file` (the text parser reassigns
+//! instruction ids, sidestepping the 64-bit-id proto incompatibility
+//! between jax ≥ 0.5 and xla_extension 0.5.1), wrap in an
+//! `XlaComputation`, compile on the CPU `PjRtClient`, and cache the
+//! executable — each artifact compiles exactly once per process.
+//!
+//! Execution is shape-checked against the manifest before touching XLA so
+//! misuse surfaces as a typed [`Error::Runtime`].
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use super::manifest::{ArtifactSpec, Manifest};
+use crate::error::{Error, Result};
+
+/// A PJRT CPU client plus executable cache for one artifacts directory.
+pub struct PjrtContext {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    executions: RefCell<u64>,
+}
+
+impl std::fmt::Debug for PjrtContext {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PjrtContext")
+            .field("artifacts", &self.manifest.dir)
+            .field("cached", &self.cache.borrow().len())
+            .finish()
+    }
+}
+
+impl PjrtContext {
+    /// Create a CPU PJRT client over an artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtContext {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            executions: RefCell::new(0),
+        })
+    }
+
+    /// The manifest this context serves.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Total `execute` calls (perf accounting).
+    pub fn executions(&self) -> u64 {
+        *self.executions.borrow()
+    }
+
+    /// Get (compiling on first use) the executable for an artifact.
+    pub fn load(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.get(name)?;
+        let path = self.manifest.path_of(spec);
+        let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| {
+            Error::Runtime(format!("parse {} failed: {e}", path.display()))
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile '{name}' failed: {e}")))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute artifact `name` with row-major f32 inputs; returns one
+    /// row-major f32 vector per output.
+    pub fn execute(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let spec = self.manifest.get(name)?.clone();
+        self.check_inputs(&spec, inputs)?;
+        let exe = self.load(name)?;
+        let literals = inputs
+            .iter()
+            .zip(&spec.inputs)
+            .map(|(data, sig)| {
+                // Single-copy literal creation (perf pass #3: vec1+reshape
+                // used to copy twice for rank-2 inputs).
+                let bytes = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    &sig.dims,
+                    bytes,
+                )
+                .map_err(|e| {
+                    Error::Runtime(format!("{name}: build input '{}': {e}", sig.name))
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        *self.executions.borrow_mut() += 1;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Runtime(format!("{name}: execute failed: {e}")))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("{name}: fetch result: {e}")))?;
+        // aot.py lowers with return_tuple=True: unwrap the tuple.
+        let parts = out
+            .to_tuple()
+            .map_err(|e| Error::Runtime(format!("{name}: untuple result: {e}")))?;
+        if parts.len() != spec.outputs.len() {
+            return Err(Error::Runtime(format!(
+                "{name}: expected {} outputs, got {}",
+                spec.outputs.len(),
+                parts.len()
+            )));
+        }
+        parts
+            .into_iter()
+            .enumerate()
+            .map(|(i, lit)| {
+                let v = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| Error::Runtime(format!("{name}: output {i}: {e}")))?;
+                if v.len() != spec.outputs[i].elems() {
+                    return Err(Error::Runtime(format!(
+                        "{name}: output {i} has {} elems, expected {}",
+                        v.len(),
+                        spec.outputs[i].elems()
+                    )));
+                }
+                Ok(v)
+            })
+            .collect()
+    }
+
+    fn check_inputs(&self, spec: &ArtifactSpec, inputs: &[&[f32]]) -> Result<()> {
+        if inputs.len() != spec.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{}: takes {} inputs, got {}",
+                spec.name,
+                spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (data, sig) in inputs.iter().zip(&spec.inputs) {
+            if data.len() != sig.elems() {
+                return Err(Error::Runtime(format!(
+                    "{}: input '{}' has {} elems, expected {} (dims {:?})",
+                    spec.name,
+                    sig.name,
+                    data.len(),
+                    sig.elems(),
+                    sig.dims
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! These tests require built artifacts; they self-skip otherwise so
+    //! `cargo test` stays green pre-`make artifacts` (CI runs both orders).
+    use super::*;
+
+    fn ctx() -> Option<PjrtContext> {
+        std::path::Path::new("artifacts/manifest.json").exists().then(|| {
+            PjrtContext::new("artifacts").expect("artifacts built but context failed")
+        })
+    }
+
+    #[test]
+    fn vecadd_roundtrip_through_pjrt() {
+        let Some(ctx) = ctx() else { return };
+        let a: Vec<f32> = (0..1024).map(|i| i as f32).collect();
+        let b = vec![0.5f32; 1024];
+        let out = ctx.execute("vecadd_n1024", &[&a, &b]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0][3], 3.5);
+        assert_eq!(out[0][1023], 1023.5);
+    }
+
+    #[test]
+    fn executable_cache_compiles_once() {
+        let Some(ctx) = ctx() else { return };
+        let a = vec![1.0f32; 1024];
+        ctx.execute("vecadd_n1024", &[&a, &a]).unwrap();
+        let e1 = Rc::as_ptr(&ctx.load("vecadd_n1024").unwrap());
+        ctx.execute("vecadd_n1024", &[&a, &a]).unwrap();
+        let e2 = Rc::as_ptr(&ctx.load("vecadd_n1024").unwrap());
+        assert_eq!(e1, e2, "same executable instance");
+        assert_eq!(ctx.executions(), 2);
+    }
+
+    #[test]
+    fn shape_mismatch_is_typed_error() {
+        let Some(ctx) = ctx() else { return };
+        let short = vec![1.0f32; 10];
+        let err = ctx.execute("vecadd_n1024", &[&short, &short]).unwrap_err();
+        assert!(err.to_string().contains("elems"), "{err}");
+    }
+
+    #[test]
+    fn head_produces_five_outputs() {
+        let Some(ctx) = ctx() else { return };
+        let acc = vec![0.1f32; 100];
+        let v = vec![0.05f32; 100];
+        let y = vec![1.0f32];
+        let out = ctx.execute("head_h100", &[&acc, &v, &y]).unwrap();
+        assert_eq!(out.len(), 5, "(h, yhat, loss, gv, dh)");
+        assert_eq!(out[0].len(), 100);
+        assert_eq!(out[1].len(), 1);
+        let yhat = out[1][0];
+        assert!((0.0..=1.0).contains(&yhat));
+    }
+}

@@ -1,0 +1,99 @@
+//! Deterministic virtual-time simulation substrate.
+//!
+//! Everything timing-related in this crate runs over *virtual* nanoseconds:
+//! the micro-core clocks, the off-chip link, the host service thread and the
+//! channel protocol all advance [`Time`] deterministically, so a run with a
+//! fixed seed reproduces the paper-style tables bit-for-bit.
+//!
+//! The scheduling discipline (implemented by
+//! [`crate::coordinator::engine`]) is *min-clock exact*: the entity with the
+//! smallest local clock executes next, and entities interact only through
+//! the shared [`timeline`] resources, which guarantees causal ordering
+//! without a general event queue.
+
+pub mod rng;
+pub mod stats;
+pub mod timeline;
+pub mod trace;
+
+pub use rng::Rng;
+pub use stats::{Histogram, OnlineStats};
+pub use timeline::{Resource, Timeline};
+pub use trace::{Trace, TraceEvent};
+
+/// Virtual time in nanoseconds. `u64` covers ~584 years of simulated time.
+pub type Time = u64;
+
+/// One second in [`Time`] units.
+pub const SEC: Time = 1_000_000_000;
+/// One millisecond in [`Time`] units.
+pub const MSEC: Time = 1_000_000;
+/// One microsecond in [`Time`] units.
+pub const USEC: Time = 1_000;
+
+/// Convert virtual [`Time`] to floating-point seconds (for reporting).
+pub fn to_secs(t: Time) -> f64 {
+    t as f64 / SEC as f64
+}
+
+/// Convert virtual [`Time`] to floating-point milliseconds (for reporting).
+pub fn to_msecs(t: Time) -> f64 {
+    t as f64 / MSEC as f64
+}
+
+/// Convert floating-point seconds to virtual [`Time`], saturating.
+pub fn from_secs(s: f64) -> Time {
+    if s <= 0.0 {
+        0
+    } else {
+        (s * SEC as f64).round() as Time
+    }
+}
+
+/// Duration of `cycles` clock cycles at `hz`, in virtual time.
+///
+/// Uses 128-bit intermediate math so multi-minute simulations of slow
+/// (100 MHz MicroBlaze) cores cannot overflow.
+pub fn cycles_to_time(cycles: u64, hz: u64) -> Time {
+    debug_assert!(hz > 0);
+    ((cycles as u128 * SEC as u128) / hz as u128) as Time
+}
+
+/// Time to move `bytes` at `bytes_per_sec`, in virtual time.
+pub fn transfer_time(bytes: u64, bytes_per_sec: u64) -> Time {
+    debug_assert!(bytes_per_sec > 0);
+    ((bytes as u128 * SEC as u128) / bytes_per_sec as u128) as Time
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycles_at_600mhz() {
+        // 600 cycles at 600 MHz = 1 us
+        assert_eq!(cycles_to_time(600, 600_000_000), USEC);
+    }
+
+    #[test]
+    fn cycles_no_overflow_on_long_runs() {
+        // An hour of cycles on a 1 GHz clock.
+        let t = cycles_to_time(3_600_000_000_000, 1_000_000_000);
+        assert_eq!(t, 3600 * SEC);
+    }
+
+    #[test]
+    fn transfer_time_matches_bandwidth() {
+        // 150 MB at 150 MB/s = 1 s
+        assert_eq!(transfer_time(150_000_000, 150_000_000), SEC);
+        // 1 KB at 100 MB/s = 10.24 us
+        assert_eq!(transfer_time(1024, 100_000_000), 10_240);
+    }
+
+    #[test]
+    fn secs_roundtrip() {
+        assert_eq!(from_secs(1.5), 3 * SEC / 2);
+        assert!((to_secs(from_secs(0.125)) - 0.125).abs() < 1e-12);
+        assert_eq!(from_secs(-4.0), 0);
+    }
+}

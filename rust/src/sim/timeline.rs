@@ -1,0 +1,239 @@
+//! Shared-resource timelines: the contention model of the simulator.
+//!
+//! Two resource shapes cover the paper's system:
+//!
+//! * [`Resource`] — `k` identical servers (the host-side service thread(s)
+//!   of §4: "a dedicated thread on the host CPU needs to pick up a request
+//!   and handle it"). A request occupies one server for its service time.
+//! * [`Timeline`] — a serially-shared bandwidth pipe (the off-chip shared
+//!   memory link of Fig. 1). Transfers occupy the pipe back-to-back, which
+//!   is what makes per-element on-demand traffic "swamp the communication
+//!   channels" (§5.1) when sixteen cores each stream individual words.
+//!
+//! Allocations must be issued in non-decreasing `ready_at` order per the
+//! engine's min-clock scheduling; both structures debug-assert this.
+
+use super::Time;
+
+/// A pool of `k` identical servers with FCFS allocation.
+#[derive(Debug, Clone)]
+pub struct Resource {
+    free_at: Vec<Time>,
+    busy: Time,
+    served: u64,
+    last_ready: Time,
+}
+
+impl Resource {
+    /// Create a resource with `servers ≥ 1` identical servers.
+    pub fn new(servers: usize) -> Self {
+        assert!(servers >= 1, "resource needs at least one server");
+        Resource { free_at: vec![0; servers], busy: 0, served: 0, last_ready: 0 }
+    }
+
+    /// Allocate one server for `duration`, not before `ready_at`.
+    /// Returns `(start, end)` of the granted slot.
+    pub fn allocate(&mut self, ready_at: Time, duration: Time) -> (Time, Time) {
+        debug_assert!(
+            ready_at >= self.last_ready,
+            "resource allocations must be issued in time order ({} < {})",
+            ready_at,
+            self.last_ready
+        );
+        self.last_ready = ready_at;
+        // Earliest-free server.
+        let (idx, &free) =
+            self.free_at.iter().enumerate().min_by_key(|&(_, &t)| t).expect("servers");
+        let start = free.max(ready_at);
+        let end = start + duration;
+        self.free_at[idx] = end;
+        self.busy += duration;
+        self.served += 1;
+        (start, end)
+    }
+
+    /// Earliest time any server is free, given arrival at `ready_at`.
+    pub fn next_free(&self, ready_at: Time) -> Time {
+        self.free_at.iter().copied().min().unwrap_or(0).max(ready_at)
+    }
+
+    /// Total busy time across servers (for utilization reports).
+    pub fn busy_time(&self) -> Time {
+        self.busy
+    }
+
+    /// Number of requests served.
+    pub fn served(&self) -> u64 {
+        self.served
+    }
+
+    /// Utilization in `[0, 1]` over a horizon.
+    pub fn utilization(&self, horizon: Time) -> f64 {
+        if horizon == 0 {
+            0.0
+        } else {
+            self.busy as f64 / (horizon as f64 * self.free_at.len() as f64)
+        }
+    }
+}
+
+/// A serially-shared bandwidth pipe with a fixed per-transfer latency.
+///
+/// `allocate(ready, bytes)` grants the pipe exclusively for
+/// `latency + bytes/bandwidth`, starting when both the pipe and the caller
+/// are ready — FCFS, like a memory bus.
+#[derive(Debug, Clone)]
+pub struct Timeline {
+    free_at: Time,
+    bytes_per_sec: u64,
+    latency: Time,
+    busy: Time,
+    bytes_moved: u64,
+    transfers: u64,
+    last_ready: Time,
+}
+
+impl Timeline {
+    /// A pipe moving `bytes_per_sec`, charging `latency` per transfer.
+    pub fn new(bytes_per_sec: u64, latency: Time) -> Self {
+        assert!(bytes_per_sec > 0);
+        Timeline {
+            free_at: 0,
+            bytes_per_sec,
+            latency,
+            busy: 0,
+            bytes_moved: 0,
+            transfers: 0,
+            last_ready: 0,
+        }
+    }
+
+    /// Occupy the pipe for a `bytes`-sized transfer; returns `(start, end)`.
+    ///
+    /// Grants are FCFS in *call* order (bus-request order). `ready_at`
+    /// values may jitter slightly out of order when several host service
+    /// threads finish pickup at different times; the pipe still serializes
+    /// correctly because `start = max(free, ready_at)`.
+    pub fn allocate(&mut self, ready_at: Time, bytes: u64) -> (Time, Time) {
+        self.last_ready = self.last_ready.max(ready_at);
+        let start = self.free_at.max(ready_at);
+        let dur = self.latency + super::transfer_time(bytes, self.bytes_per_sec);
+        let end = start + dur;
+        self.free_at = end;
+        self.busy += dur;
+        self.bytes_moved += bytes;
+        self.transfers += 1;
+        (start, end)
+    }
+
+    /// Configured bandwidth in bytes/second.
+    pub fn bandwidth(&self) -> u64 {
+        self.bytes_per_sec
+    }
+
+    /// Re-rate the pipe (bandwidth-degradation experiments, §5.1's
+    /// "frequently dropped to as low as 16 MB/s").
+    pub fn set_bandwidth(&mut self, bytes_per_sec: u64) {
+        assert!(bytes_per_sec > 0);
+        self.bytes_per_sec = bytes_per_sec;
+    }
+
+    /// Total bytes moved.
+    pub fn bytes_moved(&self) -> u64 {
+        self.bytes_moved
+    }
+
+    /// Number of transfers carried.
+    pub fn transfers(&self) -> u64 {
+        self.transfers
+    }
+
+    /// Effective bandwidth achieved over a horizon (bytes/sec).
+    pub fn effective_bandwidth(&self, horizon: Time) -> f64 {
+        if horizon == 0 {
+            0.0
+        } else {
+            self.bytes_moved as f64 / super::to_secs(horizon)
+        }
+    }
+
+    /// Utilization in `[0, 1]` over a horizon.
+    pub fn utilization(&self, horizon: Time) -> f64 {
+        if horizon == 0 {
+            0.0
+        } else {
+            (self.busy as f64 / horizon as f64).min(1.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{MSEC, SEC, USEC};
+
+    #[test]
+    fn single_server_serializes() {
+        let mut r = Resource::new(1);
+        let (s1, e1) = r.allocate(0, MSEC);
+        let (s2, e2) = r.allocate(0, MSEC);
+        assert_eq!((s1, e1), (0, MSEC));
+        assert_eq!((s2, e2), (MSEC, 2 * MSEC));
+    }
+
+    #[test]
+    fn two_servers_run_concurrently() {
+        let mut r = Resource::new(2);
+        let (_, e1) = r.allocate(0, MSEC);
+        let (s2, _) = r.allocate(0, MSEC);
+        assert_eq!(e1, MSEC);
+        assert_eq!(s2, 0);
+    }
+
+    #[test]
+    fn respects_ready_time() {
+        let mut r = Resource::new(1);
+        let (s, e) = r.allocate(5 * MSEC, USEC);
+        assert_eq!(s, 5 * MSEC);
+        assert_eq!(e, 5 * MSEC + USEC);
+    }
+
+    #[test]
+    fn utilization_accounts_busy_time() {
+        let mut r = Resource::new(1);
+        r.allocate(0, SEC / 2);
+        assert!((r.utilization(SEC) - 0.5).abs() < 1e-9);
+        assert_eq!(r.served(), 1);
+    }
+
+    #[test]
+    fn pipe_charges_latency_plus_size() {
+        // 100 MB/s, 1 us latency; 1 MB transfer = 1 us + 10 ms
+        let mut p = Timeline::new(100_000_000, USEC);
+        let (s, e) = p.allocate(0, 1_000_000);
+        assert_eq!(s, 0);
+        assert_eq!(e, USEC + 10 * MSEC);
+    }
+
+    #[test]
+    fn pipe_serializes_contending_transfers() {
+        let mut p = Timeline::new(100_000_000, 0);
+        let (_, e1) = p.allocate(0, 1_000_000);
+        let (s2, _) = p.allocate(0, 1_000_000);
+        assert_eq!(s2, e1, "second transfer waits for the pipe");
+        assert_eq!(p.transfers(), 2);
+        assert_eq!(p.bytes_moved(), 2_000_000);
+    }
+
+    #[test]
+    fn pipe_effective_bandwidth_under_contention() {
+        let mut p = Timeline::new(100_000_000, 0);
+        for _ in 0..10 {
+            p.allocate(0, 1_000_000);
+        }
+        // 10 MB in exactly 0.1 s of pipe time.
+        let horizon = 100 * MSEC;
+        assert!((p.effective_bandwidth(horizon) - 100_000_000.0).abs() < 1.0);
+        assert!((p.utilization(horizon) - 1.0).abs() < 1e-9);
+    }
+}

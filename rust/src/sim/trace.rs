@@ -1,0 +1,140 @@
+//! Structured event tracing for the simulator.
+//!
+//! A [`Trace`] is an append-only, bounded log of [`TraceEvent`]s carrying
+//! virtual timestamps. It powers `--trace` CLI output and the debugging
+//! story for the channel protocol (every request/grant/completion can be
+//! replayed in time order). Tracing is O(1) per event and disabled traces
+//! cost one branch.
+
+use super::Time;
+
+/// One simulator event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Virtual timestamp (ns).
+    pub at: Time,
+    /// Core id, or `usize::MAX` for host-side events.
+    pub core: usize,
+    /// Event category (static, for cheap filtering).
+    pub kind: &'static str,
+    /// Free-form detail.
+    pub detail: String,
+}
+
+/// Host-side pseudo core id used in trace events.
+pub const HOST: usize = usize::MAX;
+
+/// Bounded, optionally-disabled event log.
+#[derive(Debug, Default)]
+pub struct Trace {
+    events: Vec<TraceEvent>,
+    enabled: bool,
+    capacity: usize,
+    dropped: u64,
+}
+
+impl Trace {
+    /// Disabled trace (records nothing).
+    pub fn disabled() -> Self {
+        Trace { events: Vec::new(), enabled: false, capacity: 0, dropped: 0 }
+    }
+
+    /// Enabled trace keeping at most `capacity` events (older kept, newer
+    /// dropped — the interesting protocol set-up happens early).
+    pub fn bounded(capacity: usize) -> Self {
+        Trace { events: Vec::with_capacity(capacity.min(4096)), enabled: true, capacity, dropped: 0 }
+    }
+
+    /// Whether events are being recorded.
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Record an event (no-op when disabled or full).
+    pub fn emit(&mut self, at: Time, core: usize, kind: &'static str, detail: impl Into<String>) {
+        if !self.enabled {
+            return;
+        }
+        if self.events.len() >= self.capacity {
+            self.dropped += 1;
+            return;
+        }
+        self.events.push(TraceEvent { at, core, kind, detail: detail.into() });
+    }
+
+    /// All recorded events in emission order.
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    /// Events of one kind.
+    pub fn of_kind(&self, kind: &str) -> Vec<&TraceEvent> {
+        self.events.iter().filter(|e| e.kind == kind).collect()
+    }
+
+    /// Number of events dropped due to the capacity bound.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Render as human-readable lines (`t_us core kind detail`).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for e in &self.events {
+            let who = if e.core == HOST { "host".to_string() } else { format!("core{}", e.core) };
+            out.push_str(&format!(
+                "{:>12.3}us {:>7} {:<14} {}\n",
+                e.at as f64 / 1000.0,
+                who,
+                e.kind,
+                e.detail
+            ));
+        }
+        if self.dropped > 0 {
+            out.push_str(&format!("... {} events dropped (capacity {})\n", self.dropped, self.capacity));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_records_nothing() {
+        let mut t = Trace::disabled();
+        t.emit(1, 0, "req", "x");
+        assert!(t.events().is_empty());
+    }
+
+    #[test]
+    fn bounded_drops_after_capacity() {
+        let mut t = Trace::bounded(2);
+        t.emit(1, 0, "a", "");
+        t.emit(2, 0, "b", "");
+        t.emit(3, 0, "c", "");
+        assert_eq!(t.events().len(), 2);
+        assert_eq!(t.dropped(), 1);
+        assert!(t.render().contains("dropped"));
+    }
+
+    #[test]
+    fn filters_by_kind() {
+        let mut t = Trace::bounded(10);
+        t.emit(1, 0, "req", "");
+        t.emit(2, 1, "ack", "");
+        t.emit(3, 0, "req", "");
+        assert_eq!(t.of_kind("req").len(), 2);
+        assert_eq!(t.of_kind("ack").len(), 1);
+    }
+
+    #[test]
+    fn render_labels_host() {
+        let mut t = Trace::bounded(4);
+        t.emit(1500, HOST, "service", "cell 3");
+        let s = t.render();
+        assert!(s.contains("host"));
+        assert!(s.contains("service"));
+    }
+}

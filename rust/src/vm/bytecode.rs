@@ -1,0 +1,117 @@
+//! Bytecode: the compiled form executed by the interpreter.
+//!
+//! A register-free stack machine in the classic interpreter mould (ePython
+//! itself compiles user code to a compact byte code before shipping it to
+//! the cores). Every executed op counts one dispatch against the owning
+//! technology's `vm_dispatch_cycles`; arithmetic ops additionally count
+//! FLOPs when operating on floats.
+
+use super::symbol::SymbolTable;
+
+/// One opcode.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// Push a float constant.
+    ConstF(f64),
+    /// Push an int constant.
+    ConstI(i64),
+    /// Push a bool constant.
+    ConstB(bool),
+    /// Push `None`.
+    ConstNone,
+    /// Push a string constant (index into the string pool).
+    ConstStr(u16),
+    /// Push local `slot`.
+    Load(u16),
+    /// Pop into local `slot`.
+    Store(u16),
+    /// Pop `n` items, push a list of them (in push order).
+    NewList(u16),
+    /// `obj[i]` — pop index, pop obj, push element. Externals suspend.
+    Index,
+    /// `obj[i] = v` — pop value, pop index, pop obj. Externals suspend.
+    StoreIndex,
+    /// Arithmetic (pop rhs, pop lhs, push result).
+    Add,
+    Sub,
+    Mul,
+    Div,
+    FloorDiv,
+    Mod,
+    /// Unary ops.
+    Neg,
+    Not,
+    /// Comparisons.
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    CmpEq,
+    CmpNe,
+    /// Unconditional jump to absolute target.
+    Jump(u32),
+    /// Pop; jump if falsy.
+    JumpIfFalse(u32),
+    /// Peek; jump if falsy (keep value) — `and` chains.
+    JumpIfFalsePeek(u32),
+    /// Peek; jump if truthy (keep value) — `or` chains.
+    JumpIfTruePeek(u32),
+    /// Pop the top of stack.
+    Pop,
+    /// Call user function `fid` with `argc` args (args on stack).
+    CallFunc(u16, u8),
+    /// Call builtin `bid` with `argc` args.
+    CallBuiltin(u16, u8),
+    /// Return (value on stack; functions with no explicit return push None).
+    Return,
+}
+
+/// A compiled function.
+#[derive(Debug, Clone)]
+pub struct Function {
+    /// Name (diagnostics, entry selection).
+    pub name: String,
+    /// Parameter count (parameters occupy slots `0..params`).
+    pub params: usize,
+    /// Total local slots (params + locals).
+    pub nlocals: usize,
+    /// Code.
+    pub code: Vec<Op>,
+    /// String pool for `ConstStr`.
+    pub strings: Vec<String>,
+    /// Compile-time symbol table (names → slots; external flags are set
+    /// per-invocation on the interpreter's copy).
+    pub symbols: SymbolTable,
+    /// Source line per op (diagnostics).
+    pub lines: Vec<usize>,
+}
+
+impl Function {
+    /// Approximate byte size of the compiled form — used to check the
+    /// user-code budget against the device's local store (byte code must
+    /// fit next to the 24 KB interpreter).
+    pub fn code_bytes(&self) -> usize {
+        // Modelled at 4 bytes/op plus string pool, close to ePython's
+        // packed form.
+        self.code.len() * 4 + self.strings.iter().map(String::len).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn code_bytes_scales_with_ops() {
+        let f = Function {
+            name: "f".into(),
+            params: 0,
+            nlocals: 0,
+            code: vec![Op::ConstI(1), Op::Return],
+            strings: vec!["x".into()],
+            symbols: SymbolTable::default(),
+            lines: vec![1, 1],
+        };
+        assert_eq!(f.code_bytes(), 8 + 1);
+    }
+}

@@ -1,0 +1,491 @@
+//! AST → bytecode compiler.
+//!
+//! Single pass with backpatching for control flow. `for i in range(...)` is
+//! desugared to an explicit counter loop; augmented assignment desugars to
+//! load-op-store (so `a[i] += v` on an external argument performs an
+//! external *read then write*, faithful to the paper's §3.3 memory model
+//! where `a = a * a` reads then writes through the hierarchy).
+
+use std::collections::HashMap;
+
+use super::ast::*;
+use super::builtins::Builtin;
+use super::bytecode::{Function, Op};
+use super::symbol::SymbolTable;
+use super::Program;
+use crate::error::{Error, Result};
+
+/// Compile a parsed module. `entry` selects the kernel function by name;
+/// default is the *last* definition (matching the paper's examples where
+/// the decorated kernel follows its helpers).
+pub fn compile_module(module: &Module, entry: Option<&str>) -> Result<Program> {
+    if module.functions.is_empty() {
+        return Err(Error::Compile("no function definitions in kernel source".into()));
+    }
+    let fids: HashMap<&str, usize> =
+        module.functions.iter().enumerate().map(|(i, f)| (f.name.as_str(), i)).collect();
+    if fids.len() != module.functions.len() {
+        return Err(Error::Compile("duplicate function names".into()));
+    }
+    let entry = match entry {
+        Some(name) => *fids
+            .get(name)
+            .ok_or_else(|| Error::Compile(format!("entry function '{name}' not defined")))?,
+        None => module.functions.len() - 1,
+    };
+    let functions = module
+        .functions
+        .iter()
+        .map(|f| FnCompiler::new(&fids).compile(f))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(Program { functions, entry })
+}
+
+struct FnCompiler<'a> {
+    fids: &'a HashMap<&'a str, usize>,
+    slots: HashMap<String, usize>,
+    names: Vec<String>,
+    code: Vec<Op>,
+    lines: Vec<usize>,
+    strings: Vec<String>,
+    /// (break-patch-sites, continue-target) per enclosing loop.
+    loops: Vec<(Vec<usize>, u32)>,
+}
+
+impl<'a> FnCompiler<'a> {
+    fn new(fids: &'a HashMap<&'a str, usize>) -> Self {
+        FnCompiler {
+            fids,
+            slots: HashMap::new(),
+            names: Vec::new(),
+            code: Vec::new(),
+            lines: Vec::new(),
+            strings: Vec::new(),
+            loops: Vec::new(),
+        }
+    }
+
+    fn compile(mut self, f: &FuncDef) -> Result<Function> {
+        for p in &f.params {
+            self.slot(p);
+        }
+        if self.slots.len() != f.params.len() {
+            return Err(Error::Compile(format!("duplicate parameter in '{}'", f.name)));
+        }
+        self.stmts(&f.body)?;
+        // Implicit `return None`.
+        self.emit(Op::ConstNone, f.line);
+        self.emit(Op::Return, f.line);
+        Ok(Function {
+            name: f.name.clone(),
+            params: f.params.len(),
+            nlocals: self.names.len(),
+            code: self.code,
+            strings: self.strings,
+            symbols: SymbolTable::new(&self.names),
+            lines: self.lines,
+        })
+    }
+
+    fn slot(&mut self, name: &str) -> usize {
+        if let Some(&s) = self.slots.get(name) {
+            return s;
+        }
+        let s = self.names.len();
+        self.slots.insert(name.to_string(), s);
+        self.names.push(name.to_string());
+        s
+    }
+
+    fn existing_slot(&self, name: &str, line: usize) -> Result<usize> {
+        self.slots
+            .get(name)
+            .copied()
+            .ok_or_else(|| Error::Syntax { line, msg: format!("undefined variable '{name}'") })
+    }
+
+    fn emit(&mut self, op: Op, line: usize) -> usize {
+        self.code.push(op);
+        self.lines.push(line);
+        self.code.len() - 1
+    }
+
+    fn here(&self) -> u32 {
+        self.code.len() as u32
+    }
+
+    fn patch(&mut self, site: usize, target: u32) {
+        match &mut self.code[site] {
+            Op::Jump(t)
+            | Op::JumpIfFalse(t)
+            | Op::JumpIfFalsePeek(t)
+            | Op::JumpIfTruePeek(t) => *t = target,
+            other => unreachable!("patching non-jump {other:?}"),
+        }
+    }
+
+    fn stmts(&mut self, body: &[Stmt]) -> Result<()> {
+        for s in body {
+            self.stmt(s)?;
+        }
+        Ok(())
+    }
+
+    fn stmt(&mut self, s: &Stmt) -> Result<()> {
+        match s {
+            Stmt::Assign { name, value, line } => {
+                self.expr(value, *line)?;
+                let slot = self.slot(name);
+                self.emit(Op::Store(slot as u16), *line);
+            }
+            Stmt::AugAssign { name, op, value, line } => {
+                let slot = self.existing_slot(name, *line)?;
+                self.emit(Op::Load(slot as u16), *line);
+                self.expr(value, *line)?;
+                self.binop(*op, *line);
+                self.emit(Op::Store(slot as u16), *line);
+            }
+            Stmt::IndexAssign { target, index, value, line } => {
+                let slot = self.existing_slot(target, *line)?;
+                self.emit(Op::Load(slot as u16), *line);
+                self.expr(index, *line)?;
+                self.expr(value, *line)?;
+                self.emit(Op::StoreIndex, *line);
+            }
+            Stmt::IndexAugAssign { target, index, op, value, line } => {
+                // Desugar: t[i] op= v  →  t[i] = t[i] op v
+                // (index expression evaluated twice, as in ePython).
+                let slot = self.existing_slot(target, *line)?;
+                self.emit(Op::Load(slot as u16), *line);
+                self.expr(index, *line)?;
+                self.emit(Op::Load(slot as u16), *line);
+                self.expr(index, *line)?;
+                self.emit(Op::Index, *line);
+                self.expr(value, *line)?;
+                self.binop(*op, *line);
+                self.emit(Op::StoreIndex, *line);
+            }
+            Stmt::While { cond, body, line } => {
+                let top = self.here();
+                self.expr(cond, *line)?;
+                let exit = self.emit(Op::JumpIfFalse(0), *line);
+                self.loops.push((Vec::new(), top));
+                self.stmts(body)?;
+                self.emit(Op::Jump(top), *line);
+                let after = self.here();
+                self.patch(exit, after);
+                let (breaks, _) = self.loops.pop().unwrap();
+                for b in breaks {
+                    self.patch(b, after);
+                }
+            }
+            Stmt::If { cond, then, else_, line } => {
+                self.expr(cond, *line)?;
+                let jf = self.emit(Op::JumpIfFalse(0), *line);
+                self.stmts(then)?;
+                if else_.is_empty() {
+                    let after = self.here();
+                    self.patch(jf, after);
+                } else {
+                    let jend = self.emit(Op::Jump(0), *line);
+                    let else_at = self.here();
+                    self.patch(jf, else_at);
+                    self.stmts(else_)?;
+                    let after = self.here();
+                    self.patch(jend, after);
+                }
+            }
+            Stmt::ForRange { var, args, body, line } => {
+                // Desugar to: var = start; while var <cmp> stop: body; var += step
+                // Step must be a compile-time constant to pick the compare
+                // direction (ePython has the same restriction).
+                let (start, stop, step) = match args.len() {
+                    1 => (Expr::Int(0), args[0].clone(), 1i64),
+                    2 => (args[0].clone(), args[1].clone(), 1i64),
+                    _ => {
+                        let step = match args[2] {
+                            Expr::Int(s) => s,
+                            Expr::Unary(UnOp::Neg, ref inner) => match **inner {
+                                Expr::Int(s) => -s,
+                                _ => {
+                                    return Err(Error::Syntax {
+                                        line: *line,
+                                        msg: "range step must be an integer literal".into(),
+                                    })
+                                }
+                            },
+                            _ => {
+                                return Err(Error::Syntax {
+                                    line: *line,
+                                    msg: "range step must be an integer literal".into(),
+                                })
+                            }
+                        };
+                        if step == 0 {
+                            return Err(Error::Syntax {
+                                line: *line,
+                                msg: "range step must be nonzero".into(),
+                            });
+                        }
+                        (args[0].clone(), args[1].clone(), step)
+                    }
+                };
+                let vslot = self.slot(var) as u16;
+                // Evaluate stop once into a hidden local.
+                let stop_slot = self.slot(&format!("$stop{}", self.here())) as u16;
+                self.expr(&stop, *line)?;
+                self.emit(Op::Store(stop_slot), *line);
+                self.expr(&start, *line)?;
+                self.emit(Op::Store(vslot), *line);
+                let top = self.here();
+                self.emit(Op::Load(vslot), *line);
+                self.emit(Op::Load(stop_slot), *line);
+                self.emit(if step > 0 { Op::Lt } else { Op::Gt }, *line);
+                let exit = self.emit(Op::JumpIfFalse(0), *line);
+                // continue must jump to the increment, which sits after the
+                // body; collect body first with a placeholder target.
+                self.loops.push((Vec::new(), u32::MAX));
+                let loop_idx = self.loops.len() - 1;
+                self.stmts(body)?;
+                let incr_at = self.here();
+                self.loops[loop_idx].1 = incr_at;
+                self.emit(Op::Load(vslot), *line);
+                self.emit(Op::ConstI(step), *line);
+                self.emit(Op::Add, *line);
+                self.emit(Op::Store(vslot), *line);
+                self.emit(Op::Jump(top), *line);
+                let after = self.here();
+                self.patch(exit, after);
+                let (breaks, _) = self.loops.pop().unwrap();
+                for b in breaks {
+                    self.patch(b, after);
+                }
+                // Retarget continues recorded with the placeholder: they
+                // were emitted as Jump(u32::MAX).
+                for i in 0..self.code.len() {
+                    if self.code[i] == Op::Jump(u32::MAX) {
+                        self.code[i] = Op::Jump(incr_at);
+                    }
+                }
+            }
+            Stmt::Return { value, line } => {
+                match value {
+                    Some(e) => self.expr(e, *line)?,
+                    None => {
+                        self.emit(Op::ConstNone, *line);
+                    }
+                }
+                self.emit(Op::Return, *line);
+            }
+            Stmt::Expr { value, line } => {
+                self.expr(value, *line)?;
+                self.emit(Op::Pop, *line);
+            }
+            Stmt::Break { line } => {
+                let site = self.emit(Op::Jump(0), *line);
+                match self.loops.last_mut() {
+                    Some((breaks, _)) => breaks.push(site),
+                    None => {
+                        return Err(Error::Syntax { line: *line, msg: "break outside loop".into() })
+                    }
+                }
+            }
+            Stmt::Continue { line } => {
+                let target = match self.loops.last() {
+                    Some(&(_, t)) => t,
+                    None => {
+                        return Err(Error::Syntax {
+                            line: *line,
+                            msg: "continue outside loop".into(),
+                        })
+                    }
+                };
+                self.emit(Op::Jump(target), *line);
+            }
+            Stmt::Pass => {}
+        }
+        Ok(())
+    }
+
+    fn binop(&mut self, op: BinOp, line: usize) {
+        let o = match op {
+            BinOp::Add => Op::Add,
+            BinOp::Sub => Op::Sub,
+            BinOp::Mul => Op::Mul,
+            BinOp::Div => Op::Div,
+            BinOp::FloorDiv => Op::FloorDiv,
+            BinOp::Mod => Op::Mod,
+            BinOp::Lt => Op::Lt,
+            BinOp::Le => Op::Le,
+            BinOp::Gt => Op::Gt,
+            BinOp::Ge => Op::Ge,
+            BinOp::Eq => Op::CmpEq,
+            BinOp::Ne => Op::CmpNe,
+        };
+        self.emit(o, line);
+    }
+
+    fn expr(&mut self, e: &Expr, line: usize) -> Result<()> {
+        match e {
+            Expr::Int(v) => {
+                self.emit(Op::ConstI(*v), line);
+            }
+            Expr::Float(v) => {
+                self.emit(Op::ConstF(*v), line);
+            }
+            Expr::Bool(b) => {
+                self.emit(Op::ConstB(*b), line);
+            }
+            Expr::None => {
+                self.emit(Op::ConstNone, line);
+            }
+            Expr::Str(s) => {
+                let idx = self.strings.len() as u16;
+                self.strings.push(s.clone());
+                self.emit(Op::ConstStr(idx), line);
+            }
+            Expr::Name(n) => {
+                let slot = self.existing_slot(n, line)?;
+                self.emit(Op::Load(slot as u16), line);
+            }
+            Expr::Bin(l, op, r) => {
+                self.expr(l, line)?;
+                self.expr(r, line)?;
+                self.binop(*op, line);
+            }
+            Expr::Unary(UnOp::Neg, inner) => {
+                self.expr(inner, line)?;
+                self.emit(Op::Neg, line);
+            }
+            Expr::Unary(UnOp::Not, inner) => {
+                self.expr(inner, line)?;
+                self.emit(Op::Not, line);
+            }
+            Expr::Logic(l, LogicOp::And, r) => {
+                self.expr(l, line)?;
+                let site = self.emit(Op::JumpIfFalsePeek(0), line);
+                self.emit(Op::Pop, line);
+                self.expr(r, line)?;
+                let after = self.here();
+                self.patch(site, after);
+            }
+            Expr::Logic(l, LogicOp::Or, r) => {
+                self.expr(l, line)?;
+                let site = self.emit(Op::JumpIfTruePeek(0), line);
+                self.emit(Op::Pop, line);
+                self.expr(r, line)?;
+                let after = self.here();
+                self.patch(site, after);
+            }
+            Expr::Call { name, args } => {
+                if let Some(b) = Builtin::by_name(name) {
+                    if args.len() != b.arity() {
+                        return Err(Error::Syntax {
+                            line,
+                            msg: format!(
+                                "{name}() takes {} arguments, got {}",
+                                b.arity(),
+                                args.len()
+                            ),
+                        });
+                    }
+                    for a in args {
+                        self.expr(a, line)?;
+                    }
+                    self.emit(Op::CallBuiltin(b.id(), args.len() as u8), line);
+                } else if let Some(&fid) = self.fids.get(name.as_str()) {
+                    for a in args {
+                        self.expr(a, line)?;
+                    }
+                    self.emit(Op::CallFunc(fid as u16, args.len() as u8), line);
+                } else {
+                    return Err(Error::Syntax {
+                        line,
+                        msg: format!("unknown function '{name}'"),
+                    });
+                }
+            }
+            Expr::Index(obj, idx) => {
+                self.expr(obj, line)?;
+                self.expr(idx, line)?;
+                self.emit(Op::Index, line);
+            }
+            Expr::List(items) => {
+                for it in items {
+                    self.expr(it, line)?;
+                }
+                self.emit(Op::NewList(items.len() as u16), line);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::vm::compile_source;
+
+    #[test]
+    fn compiles_listing1() {
+        let p = compile_source(
+            r#"
+def mykernel(a, b):
+    ret_data = [0.0] * len(a)
+    i = 0
+    while i < len(a):
+        ret_data[i] = a[i] + b[i]
+        i += 1
+    return ret_data
+"#,
+            None,
+        )
+        .unwrap();
+        assert_eq!(p.arity(), 2);
+        assert_eq!(p.entry_fn().name, "mykernel");
+        assert!(p.entry_fn().code.len() > 10);
+        assert!(p.entry_fn().code_bytes() < 8 * 1024, "fits user-code budget");
+    }
+
+    #[test]
+    fn entry_selection_by_name() {
+        let src = "def a():\n    return 1\n\ndef b():\n    return 2\n";
+        assert_eq!(compile_source(src, None).unwrap().entry_fn().name, "b");
+        assert_eq!(compile_source(src, Some("a")).unwrap().entry_fn().name, "a");
+        assert!(compile_source(src, Some("zz")).is_err());
+    }
+
+    #[test]
+    fn undefined_variable_rejected() {
+        assert!(compile_source("def f():\n    return x\n", None).is_err());
+    }
+
+    #[test]
+    fn unknown_function_rejected() {
+        assert!(compile_source("def f():\n    return nosuch(1)\n", None).is_err());
+    }
+
+    #[test]
+    fn builtin_arity_checked() {
+        assert!(compile_source("def f():\n    return len(1, 2)\n", None).is_err());
+    }
+
+    #[test]
+    fn break_outside_loop_rejected() {
+        assert!(compile_source("def f():\n    break\n", None).is_err());
+        assert!(compile_source("def f():\n    continue\n", None).is_err());
+    }
+
+    #[test]
+    fn duplicate_defs_rejected() {
+        assert!(compile_source("def f():\n    pass\n\ndef f():\n    pass\n", None).is_err());
+    }
+
+    #[test]
+    fn symbols_include_params_and_locals() {
+        let p = compile_source("def f(a, b):\n    c = a + b\n    return c\n", None).unwrap();
+        let sym = &p.entry_fn().symbols;
+        assert_eq!(sym.by_name("a").unwrap().slot, 0);
+        assert_eq!(sym.by_name("b").unwrap().slot, 1);
+        assert!(sym.by_name("c").is_some());
+    }
+}

@@ -1,0 +1,767 @@
+//! The bytecode interpreter — resumable, cost-counted, external-aware.
+//!
+//! The interpreter runs until it either finishes ([`Outcome::Done`]) or
+//! needs the outside world:
+//!
+//! * [`Outcome::ExtRead`] / [`Outcome::ExtWrite`] — an indexed access went
+//!   through a variable whose symbol-table `external` flag is set (§4).
+//!   The engine performs the transfer (on-demand blocking, or served from
+//!   the pre-fetch buffer) and resumes the VM with the element / an ack.
+//! * [`Outcome::Tensor`] — a tensor builtin call; the engine executes it
+//!   against the AOT-compiled PJRT artifact and resumes with the result.
+//!
+//! This suspension structure is exactly the interpreter ↔ runtime split of
+//! the paper: "Extra calls for interacting with external data have been
+//! added to the ePython runtime, which the interpreter calls when external
+//! access is required."
+//!
+//! Cost accounting: every executed opcode is one *dispatch*; float
+//! arithmetic counts *interpreted FLOPs*; both are converted to virtual
+//! time by the engine using the technology's
+//! [`crate::device::ComputeModel`].
+
+use std::rc::Rc;
+
+use super::builtins::{Builtin, TensorOp};
+use super::bytecode::Op;
+use super::symbol::SymbolTable;
+use super::value::Value;
+use super::Program;
+use crate::error::{Error, Result};
+
+/// Why the interpreter returned control.
+#[derive(Debug)]
+pub enum Outcome {
+    /// Kernel finished with this return value.
+    Done(Value),
+    /// Blocking read of element `index` of external slot `slot`.
+    ExtRead {
+        /// External-slot index (engine maps to a `DataRef`).
+        slot: usize,
+        /// Element index within the slot's view.
+        index: usize,
+    },
+    /// Write of `value` to element `index` of external slot `slot`.
+    ExtWrite {
+        /// External-slot index.
+        slot: usize,
+        /// Element index within the view.
+        index: usize,
+        /// Value written.
+        value: f64,
+    },
+    /// A tensor builtin suspended; execute and resume with the result.
+    Tensor(TensorOp),
+}
+
+/// Dispatch/FLOP/transfer counters for one kernel execution.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CostCounters {
+    /// Bytecode dispatches executed.
+    pub dispatches: u64,
+    /// Interpreted floating-point operations.
+    pub flops: u64,
+    /// External element reads issued.
+    pub ext_reads: u64,
+    /// External element writes issued.
+    pub ext_writes: u64,
+    /// Tensor builtin suspensions.
+    pub tensor_calls: u64,
+}
+
+#[derive(Debug)]
+struct Frame {
+    func: usize,
+    ip: usize,
+    locals: Vec<Value>,
+    symbols: SymbolTable,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Pending {
+    ReadValue,
+    WriteAck,
+    TensorValue,
+}
+
+/// A resumable interpreter for one core's kernel invocation.
+#[derive(Debug)]
+pub struct Interp {
+    program: Rc<Program>,
+    stack: Vec<Value>,
+    frames: Vec<Frame>,
+    counters: CostCounters,
+    core_id: usize,
+    num_cores: usize,
+    /// Per-external-slot view lengths (bound at launch; `len()` is local
+    /// because the reference carries its metadata).
+    ext_lens: Vec<usize>,
+    print_log: Vec<String>,
+    pending: Option<Pending>,
+    fuel: u64,
+    finished_symbols: Option<SymbolTable>,
+}
+
+impl Interp {
+    /// Create an interpreter for `program` on `core_id` of `num_cores`,
+    /// with the kernel arguments already marshalled to `args`
+    /// (`Value::External(slot)` entries must have their view length in
+    /// `ext_lens[slot]`).
+    pub fn new(
+        program: Rc<Program>,
+        core_id: usize,
+        num_cores: usize,
+        args: Vec<Value>,
+        ext_lens: Vec<usize>,
+    ) -> Result<Self> {
+        let entry = program.entry;
+        let f = &program.functions[entry];
+        if args.len() != f.params {
+            return Err(Error::Vm(format!(
+                "kernel '{}' takes {} arguments, got {}",
+                f.name,
+                f.params,
+                args.len()
+            )));
+        }
+        let mut locals = args;
+        locals.resize(f.nlocals, Value::None);
+        let mut symbols = f.symbols.clone();
+        for (slot, v) in locals.iter().enumerate() {
+            if matches!(v, Value::External(_)) {
+                symbols.set_external(slot, true);
+            }
+        }
+        let frame = Frame { func: entry, ip: 0, locals, symbols };
+        Ok(Interp {
+            program,
+            stack: Vec::with_capacity(32),
+            frames: vec![frame],
+            counters: CostCounters::default(),
+            core_id,
+            num_cores,
+            ext_lens,
+            print_log: Vec::new(),
+            pending: None,
+            fuel: u64::MAX,
+            finished_symbols: None,
+        })
+    }
+
+    /// Limit total dispatches (runaway-kernel guard). Errors when exceeded.
+    pub fn set_fuel(&mut self, fuel: u64) {
+        self.fuel = fuel;
+    }
+
+    /// Cost counters so far.
+    pub fn counters(&self) -> CostCounters {
+        self.counters
+    }
+
+    /// The entry frame's symbol table (post-run statistics; preserved
+    /// after the kernel completes).
+    pub fn entry_symbols(&self) -> Option<&SymbolTable> {
+        self.frames.first().map(|f| &f.symbols).or(self.finished_symbols.as_ref())
+    }
+
+    /// Lines printed by the kernel.
+    pub fn print_log(&self) -> &[String] {
+        &self.print_log
+    }
+
+    /// Resume after a suspension, supplying the requested value
+    /// (`Value::None` for write acks).
+    pub fn resume(&mut self, value: Value) -> Result<Outcome> {
+        match self.pending.take() {
+            Some(Pending::ReadValue) | Some(Pending::TensorValue) => self.stack.push(value),
+            Some(Pending::WriteAck) => {}
+            None => return Err(Error::Vm("resume without pending suspension".into())),
+        }
+        self.run()
+    }
+
+    /// Run until completion or the next suspension.
+    pub fn run(&mut self) -> Result<Outcome> {
+        if self.pending.is_some() {
+            return Err(Error::Vm("run() while suspended; call resume()".into()));
+        }
+        // Hot loop: borrow opcodes from a local Rc clone of the program so
+        // dispatch never clones an `Op` (perf pass #1, EXPERIMENTS.md §Perf).
+        let program = self.program.clone();
+        loop {
+            if self.counters.dispatches >= self.fuel {
+                return Err(Error::Vm("kernel exceeded its dispatch budget (fuel)".into()));
+            }
+            let frame = self.frames.last_mut().expect("frame");
+            let func = &program.functions[frame.func];
+            debug_assert!(frame.ip < func.code.len(), "fell off code");
+            let op = &func.code[frame.ip];
+            let line = func.lines[frame.ip];
+            frame.ip += 1;
+            self.counters.dispatches += 1;
+
+            macro_rules! vm_err {
+                ($($arg:tt)*) => {
+                    return Err(Error::Vm(format!("line {line}: {}", format!($($arg)*))))
+                };
+            }
+
+            match *op {
+                Op::ConstF(v) => self.stack.push(Value::Float(v)),
+                Op::ConstI(v) => self.stack.push(Value::Int(v)),
+                Op::ConstB(v) => self.stack.push(Value::Bool(v)),
+                Op::ConstNone => self.stack.push(Value::None),
+                Op::ConstStr(i) => {
+                    self.stack.push(Value::Str(Rc::new(func.strings[i as usize].clone())))
+                }
+                Op::Load(slot) => {
+                    let frame = self.frames.last_mut().unwrap();
+                    frame.symbols.record(slot as usize, false);
+                    let v = frame
+                        .locals
+                        .get(slot as usize)
+                        .cloned()
+                        .ok_or_else(|| Error::Vm(format!("line {line}: bad slot {slot}")))?;
+                    self.stack.push(v);
+                }
+                Op::Store(slot) => {
+                    let v = self.pop()?;
+                    let frame = self.frames.last_mut().unwrap();
+                    frame.symbols.record(slot as usize, true);
+                    // Rebinding updates the external flag: a variable that
+                    // held a reference and is assigned a local value stops
+                    // being external, and vice versa (§4 semantics).
+                    frame.symbols.set_external(slot as usize, matches!(v, Value::External(_)));
+                    frame.locals[slot as usize] = v;
+                }
+                Op::NewList(n) => {
+                    let n = n as usize;
+                    let at = self.stack.len() - n;
+                    let items: Result<Vec<f64>> =
+                        self.stack.drain(at..).map(|v| v.as_f64()).collect();
+                    match items {
+                        Ok(v) => self.stack.push(Value::array(v)),
+                        Err(e) => return Err(e),
+                    }
+                }
+                Op::Index => {
+                    let idx = self.pop()?;
+                    let obj = self.pop()?;
+                    match obj {
+                        Value::Array(a) => {
+                            let i = idx.as_index()?;
+                            let b = a.borrow();
+                            match b.get(i) {
+                                Some(&v) => self.stack.push(Value::Float(v)),
+                                None => vm_err!("index {i} out of range (len {})", b.len()),
+                            }
+                        }
+                        Value::External(slot) => {
+                            let i = idx.as_index()?;
+                            let len = self.ext_lens[slot];
+                            if i >= len {
+                                vm_err!("external index {i} out of range (len {len})");
+                            }
+                            self.counters.ext_reads += 1;
+                            self.pending = Some(Pending::ReadValue);
+                            return Ok(Outcome::ExtRead { slot, index: i });
+                        }
+                        other => vm_err!("cannot index {}", other.type_name()),
+                    }
+                }
+                Op::StoreIndex => {
+                    let val = self.pop()?;
+                    let idx = self.pop()?;
+                    let obj = self.pop()?;
+                    match obj {
+                        Value::Array(a) => {
+                            let i = idx.as_index()?;
+                            let x = val.as_f64()?;
+                            let mut b = a.borrow_mut();
+                            let len = b.len();
+                            match b.get_mut(i) {
+                                Some(p) => *p = x,
+                                None => vm_err!("index {i} out of range (len {len})"),
+                            }
+                        }
+                        Value::External(slot) => {
+                            let i = idx.as_index()?;
+                            let len = self.ext_lens[slot];
+                            if i >= len {
+                                vm_err!("external index {i} out of range (len {len})");
+                            }
+                            let x = val.as_f64()?;
+                            self.counters.ext_writes += 1;
+                            self.pending = Some(Pending::WriteAck);
+                            return Ok(Outcome::ExtWrite { slot, index: i, value: x });
+                        }
+                        other => vm_err!("cannot index-assign {}", other.type_name()),
+                    }
+                }
+                ref aop @ (Op::Add | Op::Sub | Op::Mul | Op::Div | Op::FloorDiv | Op::Mod) => {
+                    let r = self.pop()?;
+                    let l = self.pop()?;
+                    let v = self.arith(aop, l, r, line)?;
+                    self.stack.push(v);
+                }
+                Op::Neg => {
+                    let v = self.pop()?;
+                    let out = match v {
+                        Value::Int(i) => Value::Int(-i),
+                        Value::Float(f) => {
+                            self.counters.flops += 1;
+                            Value::Float(-f)
+                        }
+                        other => vm_err!("cannot negate {}", other.type_name()),
+                    };
+                    self.stack.push(out);
+                }
+                Op::Not => {
+                    let v = self.pop()?;
+                    self.stack.push(Value::Bool(!v.truthy()));
+                }
+                ref cop @ (Op::Lt | Op::Le | Op::Gt | Op::Ge) => {
+                    let r = self.pop()?.as_f64()?;
+                    let l = self.pop()?.as_f64()?;
+                    let b = match cop {
+                        Op::Lt => l < r,
+                        Op::Le => l <= r,
+                        Op::Gt => l > r,
+                        _ => l >= r,
+                    };
+                    self.stack.push(Value::Bool(b));
+                }
+                ref eop @ (Op::CmpEq | Op::CmpNe) => {
+                    let r = self.pop()?;
+                    let l = self.pop()?;
+                    let eq = l.py_eq(&r);
+                    self.stack.push(Value::Bool(if matches!(eop, Op::CmpEq) { eq } else { !eq }));
+                }
+                Op::Jump(t) => self.frames.last_mut().unwrap().ip = t as usize,
+                Op::JumpIfFalse(t) => {
+                    let v = self.pop()?;
+                    if !v.truthy() {
+                        self.frames.last_mut().unwrap().ip = t as usize;
+                    }
+                }
+                Op::JumpIfFalsePeek(t) => {
+                    if !self.peek()?.truthy() {
+                        self.frames.last_mut().unwrap().ip = t as usize;
+                    }
+                }
+                Op::JumpIfTruePeek(t) => {
+                    if self.peek()?.truthy() {
+                        self.frames.last_mut().unwrap().ip = t as usize;
+                    }
+                }
+                Op::Pop => {
+                    self.pop()?;
+                }
+                Op::CallFunc(fid, argc) => {
+                    let fid = fid as usize;
+                    let argc = argc as usize;
+                    let callee = &self.program.functions[fid];
+                    if callee.params != argc {
+                        vm_err!(
+                            "{}() takes {} arguments, got {argc}",
+                            callee.name,
+                            callee.params
+                        );
+                    }
+                    if self.frames.len() >= 64 {
+                        vm_err!("call depth limit (64) exceeded");
+                    }
+                    let at = self.stack.len() - argc;
+                    let mut locals: Vec<Value> = self.stack.drain(at..).collect();
+                    locals.resize(callee.nlocals, Value::None);
+                    let mut symbols = callee.symbols.clone();
+                    for (slot, v) in locals.iter().enumerate() {
+                        if matches!(v, Value::External(_)) {
+                            symbols.set_external(slot, true);
+                        }
+                    }
+                    self.frames.push(Frame { func: fid, ip: 0, locals, symbols });
+                }
+                Op::CallBuiltin(bid, argc) => {
+                    let b = Builtin::from_id(bid)
+                        .ok_or_else(|| Error::Vm(format!("line {line}: bad builtin id {bid}")))?;
+                    let argc = argc as usize;
+                    let at = self.stack.len() - argc;
+                    let args: Vec<Value> = self.stack.drain(at..).collect();
+                    if b.is_tensor() {
+                        self.counters.tensor_calls += 1;
+                        self.pending = Some(Pending::TensorValue);
+                        return Ok(Outcome::Tensor(TensorOp { builtin: b, args }));
+                    }
+                    let v = self.pure_builtin(b, args, line)?;
+                    self.stack.push(v);
+                }
+                Op::Return => {
+                    let v = self.pop()?;
+                    let done_frame = self.frames.pop().expect("frame");
+                    if self.frames.is_empty() {
+                        self.finished_symbols = Some(done_frame.symbols);
+                        return Ok(Outcome::Done(v));
+                    }
+                    self.stack.push(v);
+                }
+            }
+        }
+    }
+
+    fn pop(&mut self) -> Result<Value> {
+        self.stack.pop().ok_or_else(|| Error::Vm("stack underflow".into()))
+    }
+
+    fn peek(&self) -> Result<&Value> {
+        self.stack.last().ok_or_else(|| Error::Vm("stack underflow".into()))
+    }
+
+    fn arith(&mut self, op: &Op, l: Value, r: Value, line: usize) -> Result<Value> {
+        // list * int: Python repetition ([0.0] * n allocation idiom).
+        if matches!(op, Op::Mul) {
+            if let (Value::Array(a), Ok(n)) = (&l, r.as_i64()) {
+                let base = a.borrow();
+                let n = usize::try_from(n.max(0)).unwrap_or(0);
+                let mut out = Vec::with_capacity(base.len() * n);
+                for _ in 0..n {
+                    out.extend_from_slice(&base);
+                }
+                return Ok(Value::array(out));
+            }
+        }
+        let both_int = matches!(l, Value::Int(_)) && matches!(r, Value::Int(_));
+        let lf = l.as_f64().map_err(|_| {
+            Error::Vm(format!("line {line}: bad operand {} for arithmetic", l.type_name()))
+        })?;
+        let rf = r.as_f64().map_err(|_| {
+            Error::Vm(format!("line {line}: bad operand {} for arithmetic", r.type_name()))
+        })?;
+        if !both_int {
+            self.counters.flops += 1;
+        }
+        Ok(match op {
+            Op::Add => {
+                if both_int {
+                    Value::Int(lf as i64 + rf as i64)
+                } else {
+                    Value::Float(lf + rf)
+                }
+            }
+            Op::Sub => {
+                if both_int {
+                    Value::Int(lf as i64 - rf as i64)
+                } else {
+                    Value::Float(lf - rf)
+                }
+            }
+            Op::Mul => {
+                if both_int {
+                    Value::Int(lf as i64 * rf as i64)
+                } else {
+                    Value::Float(lf * rf)
+                }
+            }
+            Op::Div => {
+                if rf == 0.0 {
+                    return Err(Error::Vm(format!("line {line}: division by zero")));
+                }
+                Value::Float(lf / rf)
+            }
+            Op::FloorDiv => {
+                if rf == 0.0 {
+                    return Err(Error::Vm(format!("line {line}: division by zero")));
+                }
+                if both_int {
+                    Value::Int((lf / rf).floor() as i64)
+                } else {
+                    Value::Float((lf / rf).floor())
+                }
+            }
+            Op::Mod => {
+                if rf == 0.0 {
+                    return Err(Error::Vm(format!("line {line}: modulo by zero")));
+                }
+                let m = lf - (lf / rf).floor() * rf;
+                if both_int {
+                    Value::Int(m as i64)
+                } else {
+                    Value::Float(m)
+                }
+            }
+            _ => unreachable!(),
+        })
+    }
+
+    fn pure_builtin(&mut self, b: Builtin, args: Vec<Value>, line: usize) -> Result<Value> {
+        let flop = |me: &mut Self| me.counters.flops += 1;
+        Ok(match b {
+            Builtin::Len => match &args[0] {
+                Value::Array(a) => Value::Int(a.borrow().len() as i64),
+                Value::External(slot) => Value::Int(self.ext_lens[*slot] as i64),
+                Value::Str(s) => Value::Int(s.len() as i64),
+                other => {
+                    return Err(Error::Vm(format!(
+                        "line {line}: len() of {}",
+                        other.type_name()
+                    )))
+                }
+            },
+            Builtin::Abs => {
+                flop(self);
+                match &args[0] {
+                    Value::Int(i) => Value::Int(i.abs()),
+                    v => Value::Float(v.as_f64()?.abs()),
+                }
+            }
+            Builtin::Min2 => {
+                flop(self);
+                let (a, b2) = (args[0].as_f64()?, args[1].as_f64()?);
+                Value::Float(a.min(b2))
+            }
+            Builtin::Max2 => {
+                flop(self);
+                let (a, b2) = (args[0].as_f64()?, args[1].as_f64()?);
+                Value::Float(a.max(b2))
+            }
+            Builtin::Sqrt => {
+                flop(self);
+                Value::Float(args[0].as_f64()?.sqrt())
+            }
+            Builtin::Exp => {
+                flop(self);
+                Value::Float(args[0].as_f64()?.exp())
+            }
+            Builtin::Log => {
+                flop(self);
+                Value::Float(args[0].as_f64()?.ln())
+            }
+            Builtin::ToFloat => Value::Float(args[0].as_f64()?),
+            Builtin::ToInt => Value::Int(args[0].as_f64()? as i64),
+            Builtin::CoreId => Value::Int(self.core_id as i64),
+            Builtin::NumCores => Value::Int(self.num_cores as i64),
+            Builtin::Print => {
+                let s = match &args[0] {
+                    Value::Str(s) => s.to_string(),
+                    Value::Int(i) => i.to_string(),
+                    Value::Float(f) => format!("{f}"),
+                    Value::Bool(b) => b.to_string(),
+                    Value::None => "None".into(),
+                    Value::Array(a) => format!("{:?}", a.borrow()),
+                    Value::External(s) => format!("<external ref slot {s}>"),
+                };
+                self.print_log.push(s);
+                Value::None
+            }
+            _ => unreachable!("tensor builtins suspend"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vm::compile_source;
+
+    fn run_kernel(src: &str, args: Vec<Value>) -> (Value, CostCounters) {
+        let p = Rc::new(compile_source(src, None).unwrap());
+        let mut vm = Interp::new(p, 0, 16, args, vec![]).unwrap();
+        match vm.run().unwrap() {
+            Outcome::Done(v) => (v, vm.counters()),
+            other => panic!("unexpected suspension {other:?}"),
+        }
+    }
+
+    #[test]
+    fn listing1_sums_two_lists() {
+        let src = r#"
+def mykernel(a, b):
+    ret_data = [0.0] * len(a)
+    i = 0
+    while i < len(a):
+        ret_data[i] = a[i] + b[i]
+        i += 1
+    return ret_data
+"#;
+        let a = Value::array((0..10).map(f64::from).collect());
+        let b = Value::array(vec![100.0; 10]);
+        let (v, c) = run_kernel(src, vec![a, b]);
+        let out = v.as_array().unwrap().borrow().clone();
+        assert_eq!(out[0], 100.0);
+        assert_eq!(out[9], 109.0);
+        assert!(c.dispatches > 50);
+        assert!(c.flops >= 10, "10 float adds counted");
+        assert_eq!(c.ext_reads, 0);
+    }
+
+    #[test]
+    fn fib_with_recursion() {
+        let src = r#"
+def fib(n):
+    if n < 2:
+        return n
+    return fib(n - 1) + fib(n - 2)
+
+def kernel(n):
+    return fib(n)
+"#;
+        let (v, _) = run_kernel(src, vec![Value::Int(10)]);
+        assert_eq!(v.as_i64().unwrap(), 55);
+    }
+
+    #[test]
+    fn for_range_and_aug_assign() {
+        let src = r#"
+def kernel(n):
+    total = 0
+    for i in range(1, n + 1):
+        total += i
+    return total
+"#;
+        let (v, _) = run_kernel(src, vec![Value::Int(100)]);
+        assert_eq!(v.as_i64().unwrap(), 5050);
+    }
+
+    #[test]
+    fn for_range_step_and_break_continue() {
+        let src = r#"
+def kernel():
+    s = 0
+    for i in range(0, 100, 7):
+        if i == 35:
+            continue
+        if i > 70:
+            break
+        s += i
+    return s
+"#;
+        let (v, _) = run_kernel(src, vec![]);
+        // 0+7+14+21+28+42+49+56+63+70 = 350
+        assert_eq!(v.as_i64().unwrap(), 350);
+    }
+
+    #[test]
+    fn external_read_suspends_and_resumes() {
+        let src = r#"
+def kernel(x):
+    return x[3] * 2.0
+"#;
+        let p = Rc::new(compile_source(src, None).unwrap());
+        let mut vm = Interp::new(p, 0, 1, vec![Value::External(0)], vec![10]).unwrap();
+        let out = vm.run().unwrap();
+        let Outcome::ExtRead { slot, index } = out else { panic!("expected ExtRead, {out:?}") };
+        assert_eq!((slot, index), (0, 3));
+        let out = vm.resume(Value::Float(21.0)).unwrap();
+        let Outcome::Done(v) = out else { panic!() };
+        assert_eq!(v.as_f64().unwrap(), 42.0);
+        assert_eq!(vm.counters().ext_reads, 1);
+        // the symbol table flagged parameter x as external
+        assert!(vm.entry_symbols().unwrap().by_name("x").unwrap().external);
+    }
+
+    #[test]
+    fn external_write_suspends_with_value() {
+        let src = r#"
+def kernel(x):
+    x[5] = 1.25
+    return 0
+"#;
+        let p = Rc::new(compile_source(src, None).unwrap());
+        let mut vm = Interp::new(p, 0, 1, vec![Value::External(0)], vec![10]).unwrap();
+        let Outcome::ExtWrite { slot, index, value } = vm.run().unwrap() else { panic!() };
+        assert_eq!((slot, index, value), (0, 5, 1.25));
+        let Outcome::Done(_) = vm.resume(Value::None).unwrap() else { panic!() };
+        assert_eq!(vm.counters().ext_writes, 1);
+    }
+
+    #[test]
+    fn external_oob_is_vm_error() {
+        let src = "def kernel(x):\n    return x[99]\n";
+        let p = Rc::new(compile_source(src, None).unwrap());
+        let mut vm = Interp::new(p, 0, 1, vec![Value::External(0)], vec![10]).unwrap();
+        assert!(vm.run().is_err());
+    }
+
+    #[test]
+    fn len_of_external_is_local_metadata() {
+        let src = "def kernel(x):\n    return len(x)\n";
+        let p = Rc::new(compile_source(src, None).unwrap());
+        let mut vm = Interp::new(p, 0, 1, vec![Value::External(0)], vec![777]).unwrap();
+        let Outcome::Done(v) = vm.run().unwrap() else { panic!("len() must not suspend") };
+        assert_eq!(v.as_i64().unwrap(), 777);
+        assert_eq!(vm.counters().ext_reads, 0);
+    }
+
+    #[test]
+    fn tensor_builtin_suspends() {
+        let src = "def kernel(a, b):\n    return dot(a, b)\n";
+        let p = Rc::new(compile_source(src, None).unwrap());
+        let a = Value::array(vec![1.0, 2.0]);
+        let b = Value::array(vec![3.0, 4.0]);
+        let mut vm = Interp::new(p, 0, 1, vec![a, b], vec![]).unwrap();
+        let Outcome::Tensor(top) = vm.run().unwrap() else { panic!() };
+        assert_eq!(top.builtin, Builtin::Dot);
+        assert_eq!(top.args.len(), 2);
+        let Outcome::Done(v) = vm.resume(Value::Float(11.0)).unwrap() else { panic!() };
+        assert_eq!(v.as_f64().unwrap(), 11.0);
+        assert_eq!(vm.counters().tensor_calls, 1);
+    }
+
+    #[test]
+    fn core_id_and_num_cores() {
+        let src = "def kernel():\n    return core_id() * 100 + num_cores()\n";
+        let p = Rc::new(compile_source(src, None).unwrap());
+        let mut vm = Interp::new(p, 3, 16, vec![], vec![]).unwrap();
+        let Outcome::Done(v) = vm.run().unwrap() else { panic!() };
+        assert_eq!(v.as_i64().unwrap(), 316);
+    }
+
+    #[test]
+    fn short_circuit_does_not_evaluate_rhs() {
+        // rhs would be a division by zero if evaluated
+        let src = "def kernel(n):\n    if n == 0 or 1 / n > 0:\n        return 1\n    return 0\n";
+        let (v, _) = run_kernel(src, vec![Value::Int(0)]);
+        assert_eq!(v.as_i64().unwrap(), 1);
+    }
+
+    #[test]
+    fn division_semantics() {
+        let (v, _) = run_kernel("def k():\n    return 7 / 2\n", vec![]);
+        assert_eq!(v.as_f64().unwrap(), 3.5);
+        let (v, _) = run_kernel("def k():\n    return 7 // 2\n", vec![]);
+        assert!(matches!(v, Value::Int(3)));
+        let (v, _) = run_kernel("def k():\n    return -7 % 3\n", vec![]);
+        assert_eq!(v.as_i64().unwrap(), 2, "python modulo semantics");
+    }
+
+    #[test]
+    fn fuel_limits_runaway_kernels() {
+        let src = "def kernel():\n    while True:\n        pass\n    return 0\n";
+        let p = Rc::new(compile_source(src, None).unwrap());
+        let mut vm = Interp::new(p, 0, 1, vec![], vec![]).unwrap();
+        vm.set_fuel(10_000);
+        assert!(vm.run().is_err());
+    }
+
+    #[test]
+    fn division_by_zero_is_error() {
+        let p = Rc::new(compile_source("def k(n):\n    return 1 / n\n", None).unwrap());
+        let mut vm = Interp::new(p, 0, 1, vec![Value::Int(0)], vec![]).unwrap();
+        assert!(vm.run().is_err());
+    }
+
+    #[test]
+    fn print_collects_log() {
+        let src = "def k():\n    print('hello')\n    print(42)\n    return 0\n";
+        let p = Rc::new(compile_source(src, None).unwrap());
+        let mut vm = Interp::new(p, 0, 1, vec![], vec![]).unwrap();
+        vm.run().unwrap();
+        assert_eq!(vm.print_log(), &["hello".to_string(), "42".to_string()]);
+    }
+
+    #[test]
+    fn wrong_arity_at_launch_rejected() {
+        let p = Rc::new(compile_source("def k(a, b):\n    return 0\n", None).unwrap());
+        assert!(Interp::new(p, 0, 1, vec![Value::Int(1)], vec![]).is_err());
+    }
+}

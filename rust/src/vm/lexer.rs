@@ -1,0 +1,381 @@
+//! Lexer for the kernel language: Python-style, indentation-sensitive.
+//!
+//! Produces a token stream with synthetic `Indent`/`Dedent`/`Newline`
+//! tokens (the classic CPython tokenizer scheme, with an indent stack).
+//! Lines inside unclosed brackets are joined implicitly; blank lines and
+//! `#` comments are skipped.
+
+use crate::error::{Error, Result};
+
+/// One lexical token with its source line (for diagnostics).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Token {
+    /// Token payload.
+    pub kind: Tok,
+    /// 1-based source line.
+    pub line: usize,
+}
+
+/// Token kinds.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    // literals / names
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Name(String),
+    // keywords
+    Def,
+    Return,
+    While,
+    If,
+    Elif,
+    Else,
+    For,
+    In,
+    Break,
+    Continue,
+    Pass,
+    And,
+    Or,
+    Not,
+    True,
+    False,
+    NoneKw,
+    // punctuation / operators
+    LParen,
+    RParen,
+    LBracket,
+    RBracket,
+    Comma,
+    Colon,
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    DoubleSlash,
+    Percent,
+    Assign,
+    PlusAssign,
+    MinusAssign,
+    StarAssign,
+    SlashAssign,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+    // layout
+    Newline,
+    Indent,
+    Dedent,
+    Eof,
+}
+
+fn keyword(s: &str) -> Option<Tok> {
+    Some(match s {
+        "def" => Tok::Def,
+        "return" => Tok::Return,
+        "while" => Tok::While,
+        "if" => Tok::If,
+        "elif" => Tok::Elif,
+        "else" => Tok::Else,
+        "for" => Tok::For,
+        "in" => Tok::In,
+        "break" => Tok::Break,
+        "continue" => Tok::Continue,
+        "pass" => Tok::Pass,
+        "and" => Tok::And,
+        "or" => Tok::Or,
+        "not" => Tok::Not,
+        "True" => Tok::True,
+        "False" => Tok::False,
+        "None" => Tok::NoneKw,
+        _ => return None,
+    })
+}
+
+/// Tokenise kernel source.
+pub fn lex(src: &str) -> Result<Vec<Token>> {
+    let mut toks = Vec::new();
+    let mut indents = vec![0usize];
+    let mut bracket_depth = 0usize;
+    let bytes: Vec<char> = src.chars().collect();
+    let mut i = 0;
+    let mut line = 1;
+    let mut at_line_start = true;
+
+    while i < bytes.len() {
+        if at_line_start && bracket_depth == 0 {
+            // Measure indentation; skip blank/comment-only lines entirely.
+            let mut j = i;
+            let mut col = 0;
+            while j < bytes.len() && (bytes[j] == ' ' || bytes[j] == '\t') {
+                col += if bytes[j] == '\t' { 8 - col % 8 } else { 1 };
+                j += 1;
+            }
+            if j >= bytes.len() {
+                break;
+            }
+            if bytes[j] == '\n' {
+                i = j + 1;
+                line += 1;
+                continue;
+            }
+            if bytes[j] == '#' {
+                while j < bytes.len() && bytes[j] != '\n' {
+                    j += 1;
+                }
+                i = j;
+                continue;
+            }
+            let cur = *indents.last().unwrap();
+            if col > cur {
+                indents.push(col);
+                toks.push(Token { kind: Tok::Indent, line });
+            } else if col < cur {
+                while *indents.last().unwrap() > col {
+                    indents.pop();
+                    toks.push(Token { kind: Tok::Dedent, line });
+                }
+                if *indents.last().unwrap() != col {
+                    return Err(Error::Syntax { line, msg: "inconsistent dedent".into() });
+                }
+            }
+            i = j;
+            at_line_start = false;
+            continue;
+        }
+
+        let c = bytes[i];
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+                if bracket_depth == 0 {
+                    at_line_start = true;
+                    if !matches!(toks.last().map(|t| &t.kind), Some(Tok::Newline) | None) {
+                        toks.push(Token { kind: Tok::Newline, line: line - 1 });
+                    }
+                }
+            }
+            ' ' | '\t' | '\r' => i += 1,
+            '#' => {
+                while i < bytes.len() && bytes[i] != '\n' {
+                    i += 1;
+                }
+            }
+            '0'..='9' | '.' if c != '.' || bytes.get(i + 1).is_some_and(|d| d.is_ascii_digit()) => {
+                let start = i;
+                let mut is_float = false;
+                while i < bytes.len() && (bytes[i].is_ascii_digit() || bytes[i] == '.') {
+                    if bytes[i] == '.' {
+                        if is_float {
+                            break;
+                        }
+                        is_float = true;
+                    }
+                    i += 1;
+                }
+                // exponent
+                if i < bytes.len() && (bytes[i] == 'e' || bytes[i] == 'E') {
+                    let mut k = i + 1;
+                    if k < bytes.len() && (bytes[k] == '+' || bytes[k] == '-') {
+                        k += 1;
+                    }
+                    if k < bytes.len() && bytes[k].is_ascii_digit() {
+                        is_float = true;
+                        i = k;
+                        while i < bytes.len() && bytes[i].is_ascii_digit() {
+                            i += 1;
+                        }
+                    }
+                }
+                let text: String = bytes[start..i].iter().collect();
+                let kind = if is_float {
+                    Tok::Float(text.parse().map_err(|_| Error::Syntax {
+                        line,
+                        msg: format!("bad float literal {text}"),
+                    })?)
+                } else {
+                    Tok::Int(text.parse().map_err(|_| Error::Syntax {
+                        line,
+                        msg: format!("bad int literal {text}"),
+                    })?)
+                };
+                toks.push(Token { kind, line });
+            }
+            'a'..='z' | 'A'..='Z' | '_' => {
+                let start = i;
+                while i < bytes.len() && (bytes[i].is_ascii_alphanumeric() || bytes[i] == '_') {
+                    i += 1;
+                }
+                let text: String = bytes[start..i].iter().collect();
+                toks.push(Token { kind: keyword(&text).unwrap_or(Tok::Name(text)), line });
+            }
+            '"' | '\'' => {
+                let quote = c;
+                i += 1;
+                let start = i;
+                while i < bytes.len() && bytes[i] != quote && bytes[i] != '\n' {
+                    i += 1;
+                }
+                if i >= bytes.len() || bytes[i] != quote {
+                    return Err(Error::Syntax { line, msg: "unterminated string".into() });
+                }
+                let text: String = bytes[start..i].iter().collect();
+                i += 1;
+                toks.push(Token { kind: Tok::Str(text), line });
+            }
+            '(' => {
+                bracket_depth += 1;
+                toks.push(Token { kind: Tok::LParen, line });
+                i += 1;
+            }
+            ')' => {
+                bracket_depth = bracket_depth.saturating_sub(1);
+                toks.push(Token { kind: Tok::RParen, line });
+                i += 1;
+            }
+            '[' => {
+                bracket_depth += 1;
+                toks.push(Token { kind: Tok::LBracket, line });
+                i += 1;
+            }
+            ']' => {
+                bracket_depth = bracket_depth.saturating_sub(1);
+                toks.push(Token { kind: Tok::RBracket, line });
+                i += 1;
+            }
+            ',' => {
+                toks.push(Token { kind: Tok::Comma, line });
+                i += 1;
+            }
+            ':' => {
+                toks.push(Token { kind: Tok::Colon, line });
+                i += 1;
+            }
+            '+' | '-' | '*' | '/' | '%' | '<' | '>' | '=' | '!' => {
+                let two = bytes.get(i + 1).copied();
+                let (kind, adv) = match (c, two) {
+                    ('+', Some('=')) => (Tok::PlusAssign, 2),
+                    ('-', Some('=')) => (Tok::MinusAssign, 2),
+                    ('*', Some('=')) => (Tok::StarAssign, 2),
+                    ('/', Some('=')) => (Tok::SlashAssign, 2),
+                    ('/', Some('/')) => (Tok::DoubleSlash, 2),
+                    ('<', Some('=')) => (Tok::Le, 2),
+                    ('>', Some('=')) => (Tok::Ge, 2),
+                    ('=', Some('=')) => (Tok::Eq, 2),
+                    ('!', Some('=')) => (Tok::Ne, 2),
+                    ('+', _) => (Tok::Plus, 1),
+                    ('-', _) => (Tok::Minus, 1),
+                    ('*', _) => (Tok::Star, 1),
+                    ('/', _) => (Tok::Slash, 1),
+                    ('%', _) => (Tok::Percent, 1),
+                    ('<', _) => (Tok::Lt, 1),
+                    ('>', _) => (Tok::Gt, 1),
+                    ('=', _) => (Tok::Assign, 1),
+                    _ => {
+                        return Err(Error::Syntax { line, msg: format!("unexpected character {c:?}") })
+                    }
+                };
+                toks.push(Token { kind, line });
+                i += adv;
+            }
+            _ => return Err(Error::Syntax { line, msg: format!("unexpected character {c:?}") }),
+        }
+    }
+
+    if !matches!(toks.last().map(|t| &t.kind), Some(Tok::Newline) | None) {
+        toks.push(Token { kind: Tok::Newline, line });
+    }
+    while indents.len() > 1 {
+        indents.pop();
+        toks.push(Token { kind: Tok::Dedent, line });
+    }
+    toks.push(Token { kind: Tok::Eof, line });
+    Ok(toks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<Tok> {
+        lex(src).unwrap().into_iter().map(|t| t.kind).collect()
+    }
+
+    #[test]
+    fn lexes_simple_assignment() {
+        let k = kinds("x = 1 + 2.5\n");
+        assert_eq!(
+            k,
+            vec![
+                Tok::Name("x".into()),
+                Tok::Assign,
+                Tok::Int(1),
+                Tok::Plus,
+                Tok::Float(2.5),
+                Tok::Newline,
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn indentation_produces_indent_dedent() {
+        let k = kinds("def f():\n    x = 1\n    while x:\n        x = 0\ny = 2\n");
+        let indents = k.iter().filter(|t| **t == Tok::Indent).count();
+        let dedents = k.iter().filter(|t| **t == Tok::Dedent).count();
+        assert_eq!(indents, 2);
+        assert_eq!(dedents, 2);
+    }
+
+    #[test]
+    fn comments_and_blank_lines_skipped() {
+        let k = kinds("# header\n\nx = 1  # trailing\n\n# done\n");
+        assert!(k.iter().all(|t| !matches!(t, Tok::Indent | Tok::Dedent)));
+        assert_eq!(k.iter().filter(|t| matches!(t, Tok::Newline)).count(), 1);
+    }
+
+    #[test]
+    fn brackets_join_lines() {
+        let k = kinds("x = f(1,\n      2)\n");
+        assert_eq!(k.iter().filter(|t| matches!(t, Tok::Newline)).count(), 1);
+    }
+
+    #[test]
+    fn keywords_vs_names() {
+        let k = kinds("while whilex:\n    pass\n");
+        assert!(matches!(k[0], Tok::While));
+        assert!(matches!(k[1], Tok::Name(ref s) if s == "whilex"));
+    }
+
+    #[test]
+    fn operators_two_char() {
+        let k = kinds("a <= b != c // d\n");
+        assert!(k.contains(&Tok::Le));
+        assert!(k.contains(&Tok::Ne));
+        assert!(k.contains(&Tok::DoubleSlash));
+    }
+
+    #[test]
+    fn exponent_floats() {
+        let k = kinds("x = 1e-3\n");
+        assert!(matches!(k[2], Tok::Float(f) if (f - 1e-3).abs() < 1e-12));
+    }
+
+    #[test]
+    fn inconsistent_dedent_errors() {
+        let r = lex("if x:\n        a = 1\n    b = 2\n");
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn string_literals() {
+        let k = kinds("s = 'hi'\n");
+        assert!(matches!(k[2], Tok::Str(ref s) if s == "hi"));
+        assert!(lex("s = 'oops\n").is_err());
+    }
+}

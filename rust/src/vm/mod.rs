@@ -1,0 +1,73 @@
+//! The on-core kernel VM — our ePython stand-in.
+//!
+//! ePython squeezes a Python interpreter into 24 KB of Epiphany local store
+//! (§2.2). This module re-implements that substrate in Rust: a lexer /
+//! parser / bytecode compiler / interpreter for a small Python-subset
+//! kernel language, sized and cost-modelled like the original (every opcode
+//! dispatch is charged `vm_dispatch_cycles` of the owning technology).
+//!
+//! The paper's §4 machinery is implemented exactly:
+//!
+//! * the **symbol table** ([`symbol`]) carries an `external` flag per
+//!   variable — zero means ordinary local access, one means the value is a
+//!   reference into the memory hierarchy and the interpreter must call the
+//!   runtime's transfer primitives;
+//! * external accesses **suspend** the interpreter ([`interp::Outcome`]) —
+//!   the blocking/non-blocking transfer calls live in the engine (host
+//!   side), and the VM resumes when data arrives, exactly like the
+//!   interpreter↔runtime split on the real device;
+//! * **tensor builtins** ([`builtins`]) model ePython's native-code escape
+//!   hatch; in this system they are backed by the AOT-compiled JAX/Pallas
+//!   artifacts executed through PJRT.
+//!
+//! The language supports: `def` (multiple, calling each other), `while`,
+//! `if`/`elif`/`else`, `for i in range(...)`, assignment and augmented
+//! assignment, list literals and `[x] * n` allocation, indexing,
+//! arithmetic / comparison / boolean operators, `break` / `continue` /
+//! `return` / `pass`, and calls.
+
+pub mod ast;
+pub mod builtins;
+pub mod bytecode;
+pub mod compiler;
+pub mod interp;
+pub mod lexer;
+pub mod parser;
+pub mod symbol;
+pub mod value;
+
+pub use builtins::{Builtin, TensorOp};
+pub use interp::{CostCounters, Interp, Outcome};
+pub use symbol::SymbolTable;
+pub use value::Value;
+
+use crate::error::Result;
+
+/// A compiled kernel program: one or more functions plus an entry point.
+#[derive(Debug, Clone)]
+pub struct Program {
+    /// All compiled functions (index = function id used by `CallFunc`).
+    pub functions: Vec<bytecode::Function>,
+    /// Index of the entry function (the kernel invoked by `offload`).
+    pub entry: usize,
+}
+
+impl Program {
+    /// Entry function metadata.
+    pub fn entry_fn(&self) -> &bytecode::Function {
+        &self.functions[self.entry]
+    }
+
+    /// Number of parameters the kernel takes.
+    pub fn arity(&self) -> usize {
+        self.entry_fn().params
+    }
+}
+
+/// Convenience: parse + compile kernel source, entry = last `def` (or the
+/// `def` named `entry` if given).
+pub fn compile_source(src: &str, entry: Option<&str>) -> Result<Program> {
+    let toks = lexer::lex(src)?;
+    let module = parser::parse(&toks)?;
+    compiler::compile_module(&module, entry)
+}

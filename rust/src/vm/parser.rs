@@ -1,0 +1,581 @@
+//! Recursive-descent parser: token stream → [`ast::Module`].
+//!
+//! Grammar (statements are newline-terminated, blocks are INDENT/DEDENT):
+//!
+//! ```text
+//! module    := (funcdef)*
+//! funcdef   := 'def' NAME '(' params? ')' ':' block
+//! block     := NEWLINE INDENT stmt+ DEDENT
+//! stmt      := simple NEWLINE | while | if | for
+//! simple    := assign | augassign | indexassign | 'return' expr?
+//!            | 'break' | 'continue' | 'pass' | expr
+//! expr      := or ; or := and ('or' and)* ; and := not ('and' not)*
+//! not       := 'not' not | cmp
+//! cmp       := arith (CMPOP arith)?
+//! arith     := term (('+'|'-') term)*
+//! term      := factor (('*'|'/'|'//'|'%') factor)*
+//! factor    := '-' factor | atom trailer*
+//! trailer   := '(' args ')' | '[' expr ']'
+//! atom      := NUMBER | STRING | NAME | 'True' | 'False' | 'None'
+//!            | '(' expr ')' | '[' args ']'
+//! ```
+
+use super::ast::*;
+use super::lexer::{Tok, Token};
+use crate::error::{Error, Result};
+
+struct Parser<'a> {
+    toks: &'a [Token],
+    pos: usize,
+}
+
+/// Parse a token stream into a module.
+pub fn parse(toks: &[Token]) -> Result<Module> {
+    let mut p = Parser { toks, pos: 0 };
+    let mut functions = Vec::new();
+    loop {
+        p.skip_newlines();
+        if p.check(&Tok::Eof) {
+            break;
+        }
+        functions.push(p.funcdef()?);
+    }
+    Ok(Module { functions })
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> &Tok {
+        &self.toks[self.pos].kind
+    }
+
+    fn line(&self) -> usize {
+        self.toks[self.pos].line
+    }
+
+    fn advance(&mut self) -> &Tok {
+        let t = &self.toks[self.pos].kind;
+        if self.pos + 1 < self.toks.len() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn check(&self, t: &Tok) -> bool {
+        self.peek() == t
+    }
+
+    fn eat(&mut self, t: &Tok) -> bool {
+        if self.check(t) {
+            self.advance();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect(&mut self, t: &Tok, what: &str) -> Result<()> {
+        if self.eat(t) {
+            Ok(())
+        } else {
+            Err(Error::Syntax {
+                line: self.line(),
+                msg: format!("expected {what}, found {:?}", self.peek()),
+            })
+        }
+    }
+
+    fn name(&mut self, what: &str) -> Result<String> {
+        match self.peek().clone() {
+            Tok::Name(s) => {
+                self.advance();
+                Ok(s)
+            }
+            other => Err(Error::Syntax {
+                line: self.line(),
+                msg: format!("expected {what}, found {other:?}"),
+            }),
+        }
+    }
+
+    fn skip_newlines(&mut self) {
+        while self.check(&Tok::Newline) {
+            self.advance();
+        }
+    }
+
+    fn funcdef(&mut self) -> Result<FuncDef> {
+        let line = self.line();
+        self.expect(&Tok::Def, "'def'")?;
+        let name = self.name("function name")?;
+        self.expect(&Tok::LParen, "'('")?;
+        let mut params = Vec::new();
+        if !self.check(&Tok::RParen) {
+            loop {
+                params.push(self.name("parameter name")?);
+                if !self.eat(&Tok::Comma) {
+                    break;
+                }
+            }
+        }
+        self.expect(&Tok::RParen, "')'")?;
+        self.expect(&Tok::Colon, "':'")?;
+        let body = self.block()?;
+        Ok(FuncDef { name, params, body, line })
+    }
+
+    fn block(&mut self) -> Result<Vec<Stmt>> {
+        self.expect(&Tok::Newline, "newline before block")?;
+        self.skip_newlines();
+        self.expect(&Tok::Indent, "indented block")?;
+        let mut stmts = Vec::new();
+        loop {
+            self.skip_newlines();
+            if self.eat(&Tok::Dedent) {
+                break;
+            }
+            if self.check(&Tok::Eof) {
+                break;
+            }
+            stmts.push(self.stmt()?);
+        }
+        if stmts.is_empty() {
+            return Err(Error::Syntax { line: self.line(), msg: "empty block".into() });
+        }
+        Ok(stmts)
+    }
+
+    fn stmt(&mut self) -> Result<Stmt> {
+        let line = self.line();
+        match self.peek() {
+            Tok::While => {
+                self.advance();
+                let cond = self.expr()?;
+                self.expect(&Tok::Colon, "':' after while condition")?;
+                let body = self.block()?;
+                Ok(Stmt::While { cond, body, line })
+            }
+            Tok::If => {
+                self.advance();
+                self.if_tail(line)
+            }
+            Tok::For => {
+                self.advance();
+                let var = self.name("loop variable")?;
+                self.expect(&Tok::In, "'in'")?;
+                let fname = self.name("'range'")?;
+                if fname != "range" {
+                    return Err(Error::Syntax {
+                        line,
+                        msg: format!("only 'for v in range(...)' supported, found '{fname}'"),
+                    });
+                }
+                self.expect(&Tok::LParen, "'('")?;
+                let mut args = Vec::new();
+                if !self.check(&Tok::RParen) {
+                    loop {
+                        args.push(self.expr()?);
+                        if !self.eat(&Tok::Comma) {
+                            break;
+                        }
+                    }
+                }
+                self.expect(&Tok::RParen, "')'")?;
+                if args.is_empty() || args.len() > 3 {
+                    return Err(Error::Syntax { line, msg: "range takes 1-3 arguments".into() });
+                }
+                self.expect(&Tok::Colon, "':' after for header")?;
+                let body = self.block()?;
+                Ok(Stmt::ForRange { var, args, body, line })
+            }
+            _ => {
+                let s = self.simple_stmt(line)?;
+                self.expect(&Tok::Newline, "newline after statement")?;
+                Ok(s)
+            }
+        }
+    }
+
+    fn if_tail(&mut self, line: usize) -> Result<Stmt> {
+        let cond = self.expr()?;
+        self.expect(&Tok::Colon, "':' after if condition")?;
+        let then = self.block()?;
+        let mut else_ = Vec::new();
+        self.skip_newlines();
+        if self.check(&Tok::Elif) {
+            let eline = self.line();
+            self.advance();
+            else_.push(self.if_tail(eline)?);
+        } else if self.eat(&Tok::Else) {
+            self.expect(&Tok::Colon, "':' after else")?;
+            else_ = self.block()?;
+        }
+        Ok(Stmt::If { cond, then, else_, line })
+    }
+
+    fn simple_stmt(&mut self, line: usize) -> Result<Stmt> {
+        match self.peek() {
+            Tok::Return => {
+                self.advance();
+                let value =
+                    if self.check(&Tok::Newline) { None } else { Some(self.expr()?) };
+                Ok(Stmt::Return { value, line })
+            }
+            Tok::Break => {
+                self.advance();
+                Ok(Stmt::Break { line })
+            }
+            Tok::Continue => {
+                self.advance();
+                Ok(Stmt::Continue { line })
+            }
+            Tok::Pass => {
+                self.advance();
+                Ok(Stmt::Pass)
+            }
+            _ => {
+                // Could be: name = ..., name op= ..., name[i] = ..., or expr.
+                let start = self.pos;
+                if let Tok::Name(n) = self.peek().clone() {
+                    self.advance();
+                    match self.peek().clone() {
+                        Tok::Assign => {
+                            self.advance();
+                            let value = self.expr()?;
+                            return Ok(Stmt::Assign { name: n, value, line });
+                        }
+                        Tok::PlusAssign | Tok::MinusAssign | Tok::StarAssign | Tok::SlashAssign => {
+                            let op = match self.advance() {
+                                Tok::PlusAssign => BinOp::Add,
+                                Tok::MinusAssign => BinOp::Sub,
+                                Tok::StarAssign => BinOp::Mul,
+                                _ => BinOp::Div,
+                            };
+                            let value = self.expr()?;
+                            return Ok(Stmt::AugAssign { name: n, op, value, line });
+                        }
+                        Tok::LBracket => {
+                            // lookahead: name [ expr ] (=|op=) ...
+                            self.advance();
+                            let index = self.expr()?;
+                            self.expect(&Tok::RBracket, "']'")?;
+                            match self.peek().clone() {
+                                Tok::Assign => {
+                                    self.advance();
+                                    let value = self.expr()?;
+                                    return Ok(Stmt::IndexAssign { target: n, index, value, line });
+                                }
+                                Tok::PlusAssign
+                                | Tok::MinusAssign
+                                | Tok::StarAssign
+                                | Tok::SlashAssign => {
+                                    let op = match self.advance() {
+                                        Tok::PlusAssign => BinOp::Add,
+                                        Tok::MinusAssign => BinOp::Sub,
+                                        Tok::StarAssign => BinOp::Mul,
+                                        _ => BinOp::Div,
+                                    };
+                                    let value = self.expr()?;
+                                    return Ok(Stmt::IndexAugAssign {
+                                        target: n,
+                                        index,
+                                        op,
+                                        value,
+                                        line,
+                                    });
+                                }
+                                _ => {
+                                    // plain expression beginning with indexing
+                                    self.pos = start;
+                                }
+                            }
+                        }
+                        _ => {
+                            self.pos = start;
+                        }
+                    }
+                }
+                let value = self.expr()?;
+                Ok(Stmt::Expr { value, line })
+            }
+        }
+    }
+
+    fn expr(&mut self) -> Result<Expr> {
+        self.or_expr()
+    }
+
+    fn or_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.and_expr()?;
+        while self.eat(&Tok::Or) {
+            let rhs = self.and_expr()?;
+            lhs = Expr::Logic(Box::new(lhs), LogicOp::Or, Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn and_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.not_expr()?;
+        while self.eat(&Tok::And) {
+            let rhs = self.not_expr()?;
+            lhs = Expr::Logic(Box::new(lhs), LogicOp::And, Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn not_expr(&mut self) -> Result<Expr> {
+        if self.eat(&Tok::Not) {
+            Ok(Expr::Unary(UnOp::Not, Box::new(self.not_expr()?)))
+        } else {
+            self.cmp_expr()
+        }
+    }
+
+    fn cmp_expr(&mut self) -> Result<Expr> {
+        let lhs = self.arith()?;
+        let op = match self.peek() {
+            Tok::Lt => BinOp::Lt,
+            Tok::Le => BinOp::Le,
+            Tok::Gt => BinOp::Gt,
+            Tok::Ge => BinOp::Ge,
+            Tok::Eq => BinOp::Eq,
+            Tok::Ne => BinOp::Ne,
+            _ => return Ok(lhs),
+        };
+        self.advance();
+        let rhs = self.arith()?;
+        Ok(Expr::Bin(Box::new(lhs), op, Box::new(rhs)))
+    }
+
+    fn arith(&mut self) -> Result<Expr> {
+        let mut lhs = self.term()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Plus => BinOp::Add,
+                Tok::Minus => BinOp::Sub,
+                _ => break,
+            };
+            self.advance();
+            let rhs = self.term()?;
+            lhs = Expr::Bin(Box::new(lhs), op, Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn term(&mut self) -> Result<Expr> {
+        let mut lhs = self.factor()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Star => BinOp::Mul,
+                Tok::Slash => BinOp::Div,
+                Tok::DoubleSlash => BinOp::FloorDiv,
+                Tok::Percent => BinOp::Mod,
+                _ => break,
+            };
+            self.advance();
+            let rhs = self.factor()?;
+            lhs = Expr::Bin(Box::new(lhs), op, Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn factor(&mut self) -> Result<Expr> {
+        if self.eat(&Tok::Minus) {
+            return Ok(Expr::Unary(UnOp::Neg, Box::new(self.factor()?)));
+        }
+        let mut e = self.atom()?;
+        loop {
+            if self.eat(&Tok::LBracket) {
+                let idx = self.expr()?;
+                self.expect(&Tok::RBracket, "']'")?;
+                e = Expr::Index(Box::new(e), Box::new(idx));
+            } else if self.check(&Tok::LParen) {
+                if let Expr::Name(name) = e {
+                    self.advance();
+                    let mut args = Vec::new();
+                    if !self.check(&Tok::RParen) {
+                        loop {
+                            args.push(self.expr()?);
+                            if !self.eat(&Tok::Comma) {
+                                break;
+                            }
+                        }
+                    }
+                    self.expect(&Tok::RParen, "')'")?;
+                    e = Expr::Call { name, args };
+                } else {
+                    return Err(Error::Syntax {
+                        line: self.line(),
+                        msg: "only named functions are callable".into(),
+                    });
+                }
+            } else {
+                break;
+            }
+        }
+        Ok(e)
+    }
+
+    fn atom(&mut self) -> Result<Expr> {
+        let line = self.line();
+        let e = match self.peek().clone() {
+            Tok::Int(v) => {
+                self.advance();
+                Expr::Int(v)
+            }
+            Tok::Float(v) => {
+                self.advance();
+                Expr::Float(v)
+            }
+            Tok::Str(s) => {
+                self.advance();
+                Expr::Str(s)
+            }
+            Tok::True => {
+                self.advance();
+                Expr::Bool(true)
+            }
+            Tok::False => {
+                self.advance();
+                Expr::Bool(false)
+            }
+            Tok::NoneKw => {
+                self.advance();
+                Expr::None
+            }
+            Tok::Name(n) => {
+                self.advance();
+                Expr::Name(n)
+            }
+            Tok::LParen => {
+                self.advance();
+                let inner = self.expr()?;
+                self.expect(&Tok::RParen, "')'")?;
+                inner
+            }
+            Tok::LBracket => {
+                self.advance();
+                let mut items = Vec::new();
+                if !self.check(&Tok::RBracket) {
+                    loop {
+                        items.push(self.expr()?);
+                        if !self.eat(&Tok::Comma) {
+                            break;
+                        }
+                    }
+                }
+                self.expect(&Tok::RBracket, "']'")?;
+                Expr::List(items)
+            }
+            other => {
+                return Err(Error::Syntax { line, msg: format!("unexpected token {other:?}") })
+            }
+        };
+        Ok(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vm::lexer::lex;
+
+    fn parse_src(src: &str) -> Module {
+        parse(&lex(src).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn parses_listing1_kernel() {
+        let m = parse_src(
+            r#"
+def mykernel(a, b):
+    ret_data = [0] * len(a)
+    i = 0
+    while i < len(a):
+        ret_data[i] = a[i] + b[i]
+        i += 1
+    return ret_data
+"#,
+        );
+        assert_eq!(m.functions.len(), 1);
+        let f = &m.functions[0];
+        assert_eq!(f.name, "mykernel");
+        assert_eq!(f.params, vec!["a", "b"]);
+        assert_eq!(f.body.len(), 4);
+        assert!(matches!(f.body[2], Stmt::While { .. }));
+    }
+
+    #[test]
+    fn parses_if_elif_else() {
+        let m = parse_src(
+            "def f(x):\n    if x < 0:\n        return -1\n    elif x == 0:\n        return 0\n    else:\n        return 1\n",
+        );
+        let Stmt::If { else_, .. } = &m.functions[0].body[0] else { panic!() };
+        assert!(matches!(else_[0], Stmt::If { .. }), "elif nests as if");
+    }
+
+    #[test]
+    fn parses_for_range_variants() {
+        for src in ["for i in range(10):", "for i in range(2, 10):", "for i in range(0, 10, 2):"] {
+            let full = format!("def f():\n    {src}\n        pass\n");
+            let m = parse_src(&full);
+            let Stmt::ForRange { args, .. } = &m.functions[0].body[0] else { panic!() };
+            assert!(!args.is_empty());
+        }
+    }
+
+    #[test]
+    fn rejects_for_over_nonrange() {
+        let toks = lex("def f(xs):\n    for x in xs:\n        pass\n").unwrap();
+        assert!(parse(&toks).is_err());
+    }
+
+    #[test]
+    fn precedence_mul_over_add() {
+        let m = parse_src("def f():\n    return 1 + 2 * 3\n");
+        let Stmt::Return { value: Some(Expr::Bin(_, BinOp::Add, rhs)), .. } =
+            &m.functions[0].body[0]
+        else {
+            panic!()
+        };
+        assert!(matches!(**rhs, Expr::Bin(_, BinOp::Mul, _)));
+    }
+
+    #[test]
+    fn short_circuit_ops_parse() {
+        let m = parse_src("def f(a, b):\n    return a > 0 and b > 0 or a == b\n");
+        let Stmt::Return { value: Some(Expr::Logic(_, LogicOp::Or, _)), .. } =
+            &m.functions[0].body[0]
+        else {
+            panic!("or binds loosest")
+        };
+    }
+
+    #[test]
+    fn index_aug_assign() {
+        let m = parse_src("def f(a):\n    a[3] += 1.5\n");
+        assert!(matches!(m.functions[0].body[0], Stmt::IndexAugAssign { op: BinOp::Add, .. }));
+    }
+
+    #[test]
+    fn multiple_functions() {
+        let m = parse_src("def g(x):\n    return x\n\ndef f(y):\n    return g(y) + 1\n");
+        assert_eq!(m.functions.len(), 2);
+    }
+
+    #[test]
+    fn call_with_multiline_args() {
+        let m = parse_src("def f(a):\n    return dot(a,\n        a)\n");
+        let Stmt::Return { value: Some(Expr::Call { name, args }), .. } = &m.functions[0].body[0]
+        else {
+            panic!()
+        };
+        assert_eq!(name, "dot");
+        assert_eq!(args.len(), 2);
+    }
+
+    #[test]
+    fn expr_statement_call() {
+        let m = parse_src("def f(a):\n    barrier()\n    return 0\n");
+        assert!(matches!(m.functions[0].body[0], Stmt::Expr { .. }));
+    }
+}

@@ -1,0 +1,142 @@
+//! Symbol tables with the paper's `external` flag.
+//!
+//! §4: "Each ePython interpreter running on a micro-core maintains it's own
+//! symbol table which, for each variable, contains some metadata and a
+//! pointer to the physical data ... We extended the symbol table metadata
+//! to add an extra *external* flag indicating whether the pointer references
+//! directly accessible or external, non-directly accessible, data."
+//!
+//! Compile time assigns slots; kernel launch sets the external flags for
+//! parameters bound to [`crate::memory::DataRef`]s. The interpreter
+//! consults the flag on every variable access (cheap: it's the
+//! `Value::External` tag) and reports per-symbol access statistics, which
+//! the benches use to assert things like "the model-update kernel performs
+//! zero external accesses".
+
+/// Metadata for one variable in a function.
+#[derive(Debug, Clone)]
+pub struct Symbol {
+    /// Variable name.
+    pub name: String,
+    /// Local slot index.
+    pub slot: usize,
+    /// Whether the variable currently references external data (§4 flag).
+    pub external: bool,
+    /// Reads through this symbol (locals: slot loads; externals: element
+    /// fetches).
+    pub reads: u64,
+    /// Writes through this symbol.
+    pub writes: u64,
+}
+
+/// Per-function symbol table.
+#[derive(Debug, Clone, Default)]
+pub struct SymbolTable {
+    symbols: Vec<Symbol>,
+}
+
+impl SymbolTable {
+    /// Build from compile-time names (params first, then locals).
+    pub fn new(names: &[String]) -> Self {
+        SymbolTable {
+            symbols: names
+                .iter()
+                .enumerate()
+                .map(|(slot, name)| Symbol {
+                    name: name.clone(),
+                    slot,
+                    external: false,
+                    reads: 0,
+                    writes: 0,
+                })
+                .collect(),
+        }
+    }
+
+    /// Number of symbols.
+    pub fn len(&self) -> usize {
+        self.symbols.len()
+    }
+
+    /// Whether the table is empty.
+    pub fn is_empty(&self) -> bool {
+        self.symbols.is_empty()
+    }
+
+    /// Look up by slot.
+    pub fn by_slot(&self, slot: usize) -> Option<&Symbol> {
+        self.symbols.get(slot)
+    }
+
+    /// Look up by name.
+    pub fn by_name(&self, name: &str) -> Option<&Symbol> {
+        self.symbols.iter().find(|s| s.name == name)
+    }
+
+    /// Set the external flag (kernel launch binds a reference argument).
+    pub fn set_external(&mut self, slot: usize, external: bool) {
+        if let Some(s) = self.symbols.get_mut(slot) {
+            s.external = external;
+        }
+    }
+
+    /// Record an access for statistics.
+    pub fn record(&mut self, slot: usize, write: bool) {
+        if let Some(s) = self.symbols.get_mut(slot) {
+            if write {
+                s.writes += 1;
+            } else {
+                s.reads += 1;
+            }
+        }
+    }
+
+    /// All symbols flagged external.
+    pub fn externals(&self) -> impl Iterator<Item = &Symbol> {
+        self.symbols.iter().filter(|s| s.external)
+    }
+
+    /// Total external accesses (reads + writes through external symbols).
+    pub fn external_accesses(&self) -> u64 {
+        self.externals().map(|s| s.reads + s.writes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> SymbolTable {
+        SymbolTable::new(&["a".into(), "b".into(), "ret".into()])
+    }
+
+    #[test]
+    fn slots_match_declaration_order() {
+        let t = table();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.by_name("b").unwrap().slot, 1);
+        assert_eq!(t.by_slot(2).unwrap().name, "ret");
+    }
+
+    #[test]
+    fn external_flag_defaults_off_and_is_settable() {
+        let mut t = table();
+        assert!(!t.by_name("a").unwrap().external);
+        t.set_external(0, true);
+        assert!(t.by_name("a").unwrap().external);
+        assert_eq!(t.externals().count(), 1);
+    }
+
+    #[test]
+    fn access_statistics_accumulate() {
+        let mut t = table();
+        t.set_external(0, true);
+        t.record(0, false);
+        t.record(0, false);
+        t.record(0, true);
+        t.record(1, false); // non-external: not counted in external_accesses
+        assert_eq!(t.by_slot(0).unwrap().reads, 2);
+        assert_eq!(t.by_slot(0).unwrap().writes, 1);
+        assert_eq!(t.external_accesses(), 3);
+    }
+}

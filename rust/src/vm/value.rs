@@ -1,0 +1,161 @@
+//! Runtime values of the kernel language.
+//!
+//! The dynamic-typing model mirrors ePython: numbers (int/float), booleans,
+//! strings, lists of numbers, `None`, and — the heart of the paper —
+//! **external references** ([`Value::External`]): a value that is not data
+//! but a handle naming data elsewhere in the memory hierarchy. Reading or
+//! writing through an external value is what triggers the interpreter's
+//! transfer machinery (the §4 symbol-table `external` flag check happens on
+//! every access).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::error::{Error, Result};
+
+/// A kernel-language value.
+#[derive(Debug, Clone)]
+pub enum Value {
+    /// Python `None`.
+    None,
+    /// Integer.
+    Int(i64),
+    /// Float (all external data is f32 at rest, f64 in the VM).
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+    /// Mutable numeric list (locally-held data).
+    Array(Rc<RefCell<Vec<f64>>>),
+    /// String (diagnostics only).
+    Str(Rc<String>),
+    /// External reference: index into the interpreter's external-slot
+    /// table (which maps to a `DataRef` + access mode on the host side).
+    External(usize),
+}
+
+impl Value {
+    /// Build a local array value.
+    pub fn array(v: Vec<f64>) -> Value {
+        Value::Array(Rc::new(RefCell::new(v)))
+    }
+
+    /// Truthiness (Python semantics).
+    pub fn truthy(&self) -> bool {
+        match self {
+            Value::None => false,
+            Value::Int(v) => *v != 0,
+            Value::Float(v) => *v != 0.0,
+            Value::Bool(b) => *b,
+            Value::Array(a) => !a.borrow().is_empty(),
+            Value::Str(s) => !s.is_empty(),
+            Value::External(_) => true,
+        }
+    }
+
+    /// Numeric view (int promoted to float).
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Int(v) => Ok(*v as f64),
+            Value::Float(v) => Ok(*v),
+            Value::Bool(b) => Ok(f64::from(*b)),
+            other => Err(Error::Vm(format!("expected number, found {}", other.type_name()))),
+        }
+    }
+
+    /// Integer view (exact floats accepted; Python-truncating for indices
+    /// is *not* done silently — kernels must be explicit).
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            Value::Int(v) => Ok(*v),
+            Value::Bool(b) => Ok(i64::from(*b)),
+            Value::Float(v) if v.fract() == 0.0 => Ok(*v as i64),
+            other => Err(Error::Vm(format!("expected integer, found {}", other.type_name()))),
+        }
+    }
+
+    /// Non-negative index view.
+    pub fn as_index(&self) -> Result<usize> {
+        let i = self.as_i64()?;
+        usize::try_from(i).map_err(|_| Error::Vm(format!("negative index {i}")))
+    }
+
+    /// Borrow as a local array.
+    pub fn as_array(&self) -> Result<&Rc<RefCell<Vec<f64>>>> {
+        match self {
+            Value::Array(a) => Ok(a),
+            other => Err(Error::Vm(format!("expected list, found {}", other.type_name()))),
+        }
+    }
+
+    /// Clone a local array's contents as f32 (PJRT boundary).
+    pub fn to_f32_vec(&self) -> Result<Vec<f32>> {
+        Ok(self.as_array()?.borrow().iter().map(|&v| v as f32).collect())
+    }
+
+    /// Human-readable type name for diagnostics.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::None => "None",
+            Value::Int(_) => "int",
+            Value::Float(_) => "float",
+            Value::Bool(_) => "bool",
+            Value::Array(_) => "list",
+            Value::Str(_) => "str",
+            Value::External(_) => "external-ref",
+        }
+    }
+
+    /// Structural equality (Python `==`).
+    pub fn py_eq(&self, other: &Value) -> bool {
+        match (self, other) {
+            (Value::None, Value::None) => true,
+            (Value::Bool(a), Value::Bool(b)) => a == b,
+            (Value::Str(a), Value::Str(b)) => a == b,
+            (Value::Array(a), Value::Array(b)) => *a.borrow() == *b.borrow(),
+            (Value::External(a), Value::External(b)) => a == b,
+            (a, b) => match (a.as_f64(), b.as_f64()) {
+                (Ok(x), Ok(y)) => x == y,
+                _ => false,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn truthiness_matches_python() {
+        assert!(!Value::None.truthy());
+        assert!(!Value::Int(0).truthy());
+        assert!(Value::Int(-1).truthy());
+        assert!(!Value::Float(0.0).truthy());
+        assert!(!Value::array(vec![]).truthy());
+        assert!(Value::array(vec![0.0]).truthy());
+    }
+
+    #[test]
+    fn numeric_coercions() {
+        assert_eq!(Value::Int(3).as_f64().unwrap(), 3.0);
+        assert_eq!(Value::Float(4.0).as_i64().unwrap(), 4);
+        assert!(Value::Float(4.5).as_i64().is_err());
+        assert!(Value::array(vec![]).as_f64().is_err());
+        assert!(Value::Int(-1).as_index().is_err());
+    }
+
+    #[test]
+    fn py_eq_cross_type_numbers() {
+        assert!(Value::Int(2).py_eq(&Value::Float(2.0)));
+        assert!(!Value::Int(2).py_eq(&Value::None));
+        assert!(Value::array(vec![1.0]).py_eq(&Value::array(vec![1.0])));
+    }
+
+    #[test]
+    fn arrays_share_storage() {
+        let a = Value::array(vec![1.0]);
+        let b = a.clone();
+        a.as_array().unwrap().borrow_mut()[0] = 9.0;
+        assert_eq!(b.as_array().unwrap().borrow()[0], 9.0, "pass by reference");
+    }
+}

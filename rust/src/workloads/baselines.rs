@@ -1,0 +1,95 @@
+//! Analytic host-side baselines for Figure 3.
+//!
+//! The paper compares ePython-on-micro-core against the same kernels run
+//! on the host: CPython on the ARM A9, a native (GCC -O3 + numpy) ARM
+//! build, and CPython on a Broadwell server core — each a *single-core*
+//! run (§5.1). We have neither board, so these are documented analytic
+//! models: `time = flops × cost_per_flop + calls × call_overhead`. The
+//! constants below are ordinary published magnitudes for each platform,
+//! recorded here so the benches are reproducible and criticisable:
+//!
+//! | baseline          | per-flop cost | rationale                          |
+//! |-------------------|---------------|------------------------------------|
+//! | CPython / ARM A9  | 1.6 µs        | ~8 bytecodes per list-arithmetic FLOP at ~5 M dispatch/s |
+//! | CPython / Broadwell | 0.13 µs     | same bytecode count at ~60 M dispatch/s |
+//! | native numpy / ARM | 4 ns (0.25 GFLOPs) + 120 µs/call | NEON single-core dgemv-class rate + numpy dispatch overhead |
+
+use crate::sim::{from_secs, Time};
+
+/// Which host baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HostBaseline {
+    /// CPython interpreter on the ARM Cortex-A9 host.
+    CPythonArm,
+    /// GCC -O3 + numpy on the ARM host.
+    NativeArm,
+    /// CPython on a Broadwell server core.
+    CPythonBroadwell,
+}
+
+impl HostBaseline {
+    /// Display name used in figures.
+    pub fn name(self) -> &'static str {
+        match self {
+            HostBaseline::CPythonArm => "CPython (ARM)",
+            HostBaseline::NativeArm => "native+numpy (ARM)",
+            HostBaseline::CPythonBroadwell => "CPython (Broadwell)",
+        }
+    }
+
+    /// All baselines, figure order.
+    pub fn all() -> [HostBaseline; 3] {
+        [HostBaseline::CPythonArm, HostBaseline::NativeArm, HostBaseline::CPythonBroadwell]
+    }
+
+    /// Time for a kernel phase of `flops` FLOPs issued as `calls`
+    /// vectorised library calls (relevant to numpy only).
+    pub fn phase_time(self, flops: u64, calls: u64) -> Time {
+        match self {
+            HostBaseline::CPythonArm => from_secs(flops as f64 * 1.6e-6),
+            HostBaseline::CPythonBroadwell => from_secs(flops as f64 * 0.13e-6),
+            HostBaseline::NativeArm => {
+                from_secs(flops as f64 * 4.0e-9 + calls as f64 * 120.0e-6)
+            }
+        }
+    }
+}
+
+/// FLOPs of the benchmark's phases for a whole image (see mlbench).
+pub fn phase_flops(pixels: usize, hidden: usize) -> (u64, u64, u64) {
+    let ff = 2 * pixels as u64 * hidden as u64 + 14 * hidden as u64;
+    let grad = 2 * pixels as u64 * hidden as u64;
+    let upd = 2 * pixels as u64 * hidden as u64 + 2 * hidden as u64;
+    (ff, grad, upd)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::to_secs;
+
+    #[test]
+    fn ordering_broadwell_fastest_interpreter() {
+        let (ff, _, _) = phase_flops(3600, 100);
+        let arm = HostBaseline::CPythonArm.phase_time(ff, 2);
+        let bdw = HostBaseline::CPythonBroadwell.phase_time(ff, 2);
+        let native = HostBaseline::NativeArm.phase_time(ff, 2);
+        assert!(bdw < arm, "server CPython beats embedded CPython");
+        assert!(native < bdw, "compiled numpy beats interpreters");
+    }
+
+    #[test]
+    fn small_image_cpython_arm_is_around_a_second() {
+        let (ff, _, _) = phase_flops(3600, 100);
+        let t = to_secs(HostBaseline::CPythonArm.phase_time(ff, 2));
+        assert!((0.3..3.0).contains(&t), "{t} s");
+    }
+
+    #[test]
+    fn full_image_scales_linearly() {
+        let (ff_small, _, _) = phase_flops(3600, 100);
+        let (ff_full, _, _) = phase_flops(7_084_800, 100);
+        let ratio = ff_full as f64 / ff_small as f64;
+        assert!((ratio - 1968.0).abs() < 50.0, "paper: full ≈ 1966× small");
+    }
+}

@@ -1,0 +1,26 @@
+//! The paper's evaluation workloads.
+//!
+//! * [`scans`] — synthetic 3D CT lung-scan generator (stands in for the
+//!   NCI Data Science Bowl data, which is gated; sizes match the paper:
+//!   3600-pixel interpolated "small" images and ~7 M-pixel "full" images).
+//! * [`mlbench`] — the §5 machine-learning benchmark: a one-hidden-layer
+//!   (100 neuron) binary classifier with input pixels distributed across
+//!   the micro-cores; three timed phases (feed forward / combine
+//!   gradients / model update) under eager / on-demand / pre-fetch
+//!   transfer — Figures 3 and 4.
+//! * [`linpack`] — the LINPACK LU benchmark and power table — Table 1.
+//! * [`stall`] — the synthetic single-transfer stall-time probe — Table 2.
+//! * [`baselines`] — analytic host-side comparators (CPython on ARM,
+//!   native/numpy on ARM, CPython on Broadwell) for Figure 3's
+//!   host bars; constants documented per entry.
+
+pub mod baselines;
+pub mod linpack;
+pub mod mlbench;
+pub mod scans;
+pub mod stall;
+
+pub use linpack::{linpack_row, LinpackRow};
+pub use mlbench::{MlBench, MlBenchConfig, MlBenchResult, PhaseTimes};
+pub use scans::ScanGenerator;
+pub use stall::{stall_table, StallRow};

@@ -1,0 +1,355 @@
+//! Property-based tests over coordinator invariants (testkit-driven).
+
+use microcore::coordinator::{
+    Access, ArgSpec, OffloadOptions, PrefetchSpec, Session, TransferMode,
+};
+use microcore::device::Technology;
+use microcore::memory::DataRef;
+use microcore::testkit::{check, Gen};
+
+const SUM_KERNEL: &str = r#"
+def total(xs):
+    s = 0.0
+    i = 0
+    while i < len(xs):
+        s += xs[i]
+        i += 1
+    return s
+"#;
+
+/// Sharding is a partition: disjoint, contiguous, covering, balanced ±1.
+#[test]
+fn prop_sharding_partitions() {
+    check("sharding-partitions", 0xA11CE, 200, |g: &mut Gen| {
+        let len = g.usize(1, 100_000);
+        let n = g.usize(1, 64).min(len);
+        let base = DataRef { id: 1, offset: g.usize(0, 1000), len };
+        let shards = base.shards(n);
+        let mut cover = 0usize;
+        let mut min = usize::MAX;
+        let mut max = 0usize;
+        for (i, s) in shards.iter().enumerate() {
+            if s.offset != base.offset + cover {
+                return Err(format!("shard {i} not contiguous"));
+            }
+            cover += s.len;
+            min = min.min(s.len);
+            max = max.max(s.len);
+        }
+        if cover != len {
+            return Err(format!("covered {cover} != {len}"));
+        }
+        if max - min > 1 {
+            return Err(format!("imbalance {min}..{max}"));
+        }
+        Ok(())
+    });
+}
+
+/// Every transfer mode computes the same result for a random reduction.
+#[test]
+fn prop_modes_numerically_equivalent() {
+    check("modes-equivalent", 0xBEEF, 12, |g: &mut Gen| {
+        let cores = *g.choose(&[2usize, 4, 8, 16]);
+        let per_core = g.usize(1, 40);
+        let n = cores * per_core;
+        let data = g.vec_f32(n, -100.0, 100.0);
+        let mut results = Vec::new();
+        for mode in [TransferMode::Eager, TransferMode::OnDemand, TransferMode::Prefetch] {
+            let mut sess =
+                Session::builder(Technology::epiphany3()).seed(1).build().map_err(|e| e.to_string())?;
+            let a = sess.alloc_host_f32("a", &data).map_err(|e| e.to_string())?;
+            let k = sess.compile_kernel("total", SUM_KERNEL).map_err(|e| e.to_string())?;
+            let opts = match mode {
+                TransferMode::Prefetch => OffloadOptions::default().prefetch(PrefetchSpec {
+                    buffer_size: g.usize(2, 64),
+                    elems_per_fetch: 1 + g.usize(0, 2),
+                    distance: g.usize(1, 32),
+                    access: Access::ReadOnly,
+                }),
+                m => OffloadOptions::default().transfer(m),
+            };
+            // prefetch invariants
+            let opts = match &opts.default_prefetch {
+                Some(p) if p.elems_per_fetch > p.buffer_size => {
+                    OffloadOptions::default().prefetch(PrefetchSpec {
+                        elems_per_fetch: p.buffer_size,
+                        ..*p
+                    })
+                }
+                _ => opts,
+            };
+            let cores_list: Vec<usize> = (0..cores).collect();
+            let res = sess
+                .offload(&k, &[ArgSpec::sharded(a)], opts.on_cores(cores_list))
+                .map_err(|e| e.to_string())?;
+            let total: f64 =
+                res.reports.iter().map(|r| r.value.as_f64().unwrap_or(f64::NAN)).sum();
+            results.push(total);
+        }
+        let expect: f64 = data.iter().map(|&v| f64::from(v)).sum();
+        for (i, r) in results.iter().enumerate() {
+            if (r - expect).abs() > 1e-2 {
+                return Err(format!("mode {i}: {r} vs {expect}"));
+            }
+        }
+        if results[0] != results[1] || results[1] != results[2] {
+            return Err(format!("modes disagree: {results:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// §3.3 memory model: within a core, a write then read of the same
+/// external element returns the written value (read-your-writes).
+#[test]
+fn prop_read_your_writes() {
+    check("read-your-writes", 0xC0FFEE, 10, |g: &mut Gen| {
+        let per_core = g.usize(2, 20);
+        let n = 16 * per_core;
+        let val = g.f64(-1000.0, 1000.0);
+        let mut sess =
+            Session::builder(Technology::epiphany3()).seed(2).build().map_err(|e| e.to_string())?;
+        let a = sess.alloc_host_zeroed("a", n).map_err(|e| e.to_string())?;
+        let src = r#"
+def rw(a):
+    a[0] = VAL
+    x = a[0]
+    a[1] = x * 2.0
+    return a[1]
+"#
+        .replace("VAL", &format!("{val:.6}"));
+        let k = sess.compile_kernel("rw", &src).map_err(|e| e.to_string())?;
+        let mode = if g.bool(0.5) {
+            OffloadOptions::default().transfer(TransferMode::OnDemand)
+        } else {
+            OffloadOptions::default().prefetch(PrefetchSpec {
+                buffer_size: 8,
+                elems_per_fetch: 4,
+                distance: 4,
+                access: Access::Mutable,
+            })
+        };
+        let res = sess
+            .offload(&k, &[ArgSpec::sharded_mut(a)], mode)
+            .map_err(|e| e.to_string())?;
+        let expect = (val as f32 * 2.0) as f64;
+        for r in &res.reports {
+            let got = r.value.as_f64().map_err(|e| e.to_string())?;
+            if (got - expect).abs() > 1e-3 {
+                return Err(format!("core {}: {got} vs {expect}", r.core));
+            }
+        }
+        // And the writes are visible host-side afterwards.
+        let mem = sess.read(a).map_err(|e| e.to_string())?;
+        if (f64::from(mem[0]) - val).abs() > 1e-3 {
+            return Err(format!("host sees {} not {val}", mem[0]));
+        }
+        Ok(())
+    });
+}
+
+/// Offloads are deterministic: same seed + same inputs ⇒ identical
+/// virtual-time results, for random configurations.
+#[test]
+fn prop_deterministic_replay() {
+    check("deterministic-replay", 0xD00D, 8, |g: &mut Gen| {
+        let n = 16 * g.usize(1, 30);
+        let seed = g.usize(0, 1_000_000) as u64;
+        let epf = g.usize(1, 16);
+        let run = || -> Result<(u64, f64), String> {
+            let mut sess = Session::builder(Technology::epiphany3())
+                .seed(seed)
+                .build()
+                .map_err(|e| e.to_string())?;
+            let a = sess.alloc_host_f32("a", &vec![1.5; n]).map_err(|e| e.to_string())?;
+            let k = sess.compile_kernel("total", SUM_KERNEL).map_err(|e| e.to_string())?;
+            let res = sess
+                .offload(
+                    &k,
+                    &[ArgSpec::sharded(a)],
+                    OffloadOptions::default().prefetch(PrefetchSpec {
+                        buffer_size: epf * 2,
+                        elems_per_fetch: epf,
+                        distance: epf,
+                        access: Access::ReadOnly,
+                    }),
+                )
+                .map_err(|e| e.to_string())?;
+            let sum: f64 = res.reports.iter().map(|r| r.value.as_f64().unwrap()).sum();
+            Ok((res.elapsed(), sum))
+        };
+        let a = run()?;
+        let b = run()?;
+        if a != b {
+            return Err(format!("replay diverged: {a:?} vs {b:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// Channel protocol fuzz: random interleavings of issue / service /
+/// complete / consume never violate the cell state machine, never exceed
+/// 32 cells, and conserve requests (issued = consumed + occupied).
+#[test]
+fn prop_channel_protocol_fuzz() {
+    use microcore::channel::protocol::{Request, RequestKind};
+    use microcore::channel::Channel;
+    use microcore::memory::DataRef;
+
+    check("channel-fuzz", 0xCAB1E, 100, |g: &mut Gen| {
+        let mut ch = Channel::new(0);
+        let dref = DataRef { id: 1, offset: 0, len: 100_000 };
+        let mut pending: Vec<microcore::channel::Handle> = Vec::new(); // issued, unserviced
+        let mut serviced: Vec<(microcore::channel::Handle, u64)> = Vec::new();
+        let mut consumed = 0u64;
+        let mut now = 0u64;
+        for step in 0..200 {
+            now += g.usize(0, 100) as u64;
+            match g.usize(0, 3) {
+                0 => {
+                    // issue
+                    let len = g.usize(1, 256);
+                    let req = Request {
+                        core: 0,
+                        kind: RequestKind::Read { dref, off: g.usize(0, 1000), len },
+                        issued_at: now,
+                    };
+                    match ch.issue(req).map_err(|e| e.to_string())? {
+                        Some(h) => pending.push(h),
+                        None => {
+                            if ch.occupancy() != 32 {
+                                return Err(format!(
+                                    "backpressure with occupancy {}",
+                                    ch.occupancy()
+                                ));
+                            }
+                        }
+                    }
+                }
+                1 => {
+                    // service one pending request
+                    if !pending.is_empty() {
+                        let h = pending.remove(g.usize(0, pending.len()));
+                        let req = ch.begin_service(h).map_err(|e| e.to_string())?;
+                        let ready = now + g.usize(1, 1000) as u64;
+                        ch.complete(h, ready, vec![0.0; req.kind.elems()])
+                            .map_err(|e| e.to_string())?;
+                        serviced.push((h, ready));
+                    }
+                }
+                _ => {
+                    // consume a ready response
+                    if !serviced.is_empty() {
+                        let i = g.usize(0, serviced.len());
+                        let (h, ready) = serviced[i];
+                        let is_ready = ch.ready(h, now).map_err(|e| e.to_string())?;
+                        if is_ready != (ready <= now) {
+                            return Err(format!("step {step}: ready() disagrees"));
+                        }
+                        if is_ready {
+                            ch.consume(h, now).map_err(|e| e.to_string())?;
+                            serviced.remove(i);
+                            consumed += 1;
+                            // stale handle must now fail
+                            if ch.ready(h, now).is_ok() {
+                                return Err("stale handle accepted".into());
+                            }
+                        }
+                    }
+                }
+            }
+            let occupied = (pending.len() + serviced.len()) as u64;
+            if ch.issued() != consumed + occupied {
+                return Err(format!(
+                    "conservation: issued {} != consumed {consumed} + occupied {occupied}",
+                    ch.issued()
+                ));
+            }
+            if ch.occupancy() != occupied as usize {
+                return Err(format!(
+                    "occupancy {} != tracked {occupied}",
+                    ch.occupancy()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// JSON parser round-trip on randomly generated documents.
+#[test]
+fn prop_json_roundtrip() {
+    use microcore::config::Json;
+
+    fn gen_json(g: &mut Gen, depth: usize) -> Json {
+        match if depth >= 3 { g.usize(0, 4) } else { g.usize(0, 6) } {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool(0.5)),
+            2 => Json::Num((g.f64(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => {
+                let n = g.usize(0, 8);
+                Json::Str((0..n).map(|_| *g.choose(&['a', 'β', '"', '\\', '\n', 'z'])).collect())
+            }
+            4 => Json::Arr((0..g.usize(0, 4)).map(|_| gen_json(g, depth + 1)).collect()),
+            _ => Json::Obj(
+                (0..g.usize(0, 4))
+                    .map(|i| (format!("k{i}"), gen_json(g, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+
+    check("json-roundtrip", 0x150_u64, 300, |g: &mut Gen| {
+        let doc = gen_json(g, 0);
+        let compact = Json::parse(&doc.to_string_compact()).map_err(|e| e.to_string())?;
+        let pretty = Json::parse(&doc.to_string_pretty()).map_err(|e| e.to_string())?;
+        if compact != doc {
+            return Err(format!("compact mismatch: {doc:?}"));
+        }
+        if pretty != doc {
+            return Err(format!("pretty mismatch: {doc:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// The pre-fetch engine never requests data beyond the view, regardless
+/// of access pattern, and request counts shrink as elems_per_fetch grows.
+#[test]
+fn prop_prefetch_requests_bounded() {
+    check("prefetch-requests-bounded", 0xFE7C4, 12, |g: &mut Gen| {
+        let per_core = g.usize(8, 60);
+        let n = 16 * per_core;
+        let small = 1 + g.usize(0, 1);
+        let large = (small * 4).min(per_core.max(2));
+        let mut counts = Vec::new();
+        for epf in [small, large] {
+            let mut sess = Session::builder(Technology::epiphany3())
+                .seed(3)
+                .build()
+                .map_err(|e| e.to_string())?;
+            let a = sess.alloc_host_zeroed("a", n).map_err(|e| e.to_string())?;
+            let k = sess.compile_kernel("total", SUM_KERNEL).map_err(|e| e.to_string())?;
+            let res = sess
+                .offload(
+                    &k,
+                    &[ArgSpec::sharded(a)],
+                    OffloadOptions::default().prefetch(PrefetchSpec {
+                        buffer_size: (epf * 2).max(2),
+                        elems_per_fetch: epf,
+                        distance: epf,
+                        access: Access::ReadOnly,
+                    }),
+                )
+                .map_err(|e| e.to_string())?;
+            counts.push(res.total_requests());
+        }
+        if counts[1] > counts[0] {
+            return Err(format!(
+                "larger fetches should not need more requests: {counts:?}"
+            ));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,152 @@
+//! The AOT interchange path end-to-end: python-lowered HLO text → PJRT →
+//! numerics identical to the engine's native fallbacks and to hand
+//! computation. Self-skips when `make artifacts` has not run.
+
+use microcore::coordinator::{ArgSpec, OffloadOptions, Session, TransferMode};
+use microcore::device::Technology;
+use microcore::runtime::{ModelExecutor, PjrtContext};
+use microcore::testkit::{assert_allclose, check, Gen};
+
+fn artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+#[test]
+fn pjrt_equals_native_fallback_for_tensor_builtins() {
+    if !artifacts() {
+        return;
+    }
+    // Same kernel, two engines: one with PJRT, one with native fallbacks.
+    const SRC: &str = r#"
+def k(w, x, n, chunk, h):
+    acc = [0.0] * h
+    buf = [0.0] * chunk
+    i = 0
+    while i < n:
+        j = 0
+        while j < chunk:
+            buf[j] = x[i + j]
+            j += 1
+        acc = fwd_accum(w, i, chunk, buf, acc)
+        i += chunk
+    return acc
+"#;
+    let run = |with_pjrt: bool| -> Vec<f64> {
+        let b = Session::builder(Technology::epiphany3()).seed(11);
+        let mut sess =
+            if with_pjrt { b.artifacts_dir("artifacts") } else { b }.build().unwrap();
+        let h = 100usize;
+        let shard = 225usize;
+        let n = 16 * shard;
+        let wdata: Vec<f32> = (0..h * n).map(|i| ((i % 23) as f32 - 11.0) * 0.003).collect();
+        let xdata: Vec<f32> = (0..n).map(|i| ((i % 17) as f32 - 8.0) * 0.1).collect();
+        // per-core W shards (column blocks), row-major [h, shard]
+        let mut wrefs = Vec::new();
+        for c in 0..16 {
+            let mut wc = vec![0.0f32; h * shard];
+            for r in 0..h {
+                wc[r * shard..(r + 1) * shard]
+                    .copy_from_slice(&wdata[r * n + c * shard..r * n + c * shard + shard]);
+            }
+            wrefs.push(sess.alloc_shared_f32(&format!("w{c}"), &wc).unwrap());
+        }
+        let x = sess.alloc_host_f32("x", &xdata).unwrap();
+        let k = sess.compile_kernel("k", SRC).unwrap();
+        let res = sess
+            .offload(
+                &k,
+                &[
+                    ArgSpec::PerCore {
+                        drefs: wrefs,
+                        access: microcore::coordinator::Access::ReadOnly,
+                        prefetch: microcore::coordinator::PrefetchChoice::Never,
+                    },
+                    ArgSpec::sharded(x),
+                    ArgSpec::Int(shard as i64),
+                    ArgSpec::Int(shard as i64),
+                    ArgSpec::Int(h as i64),
+                ],
+                OffloadOptions::default().transfer(TransferMode::OnDemand),
+            )
+            .unwrap();
+        // Sum partials
+        let mut acc = vec![0.0f64; h];
+        for r in &res.reports {
+            for (a, v) in acc.iter_mut().zip(r.value.as_array().unwrap().borrow().iter()) {
+                *a += v;
+            }
+        }
+        acc
+    };
+    let pjrt = run(true);
+    let native = run(false);
+    let pj: Vec<f32> = pjrt.iter().map(|&v| v as f32).collect();
+    let na: Vec<f32> = native.iter().map(|&v| v as f32).collect();
+    assert_allclose(&pj, &na, 1e-2, "pjrt vs native matvec").unwrap();
+}
+
+#[test]
+fn hypothesis_style_sweep_dot_artifact_vs_host() {
+    if !artifacts() {
+        return;
+    }
+    let ex = ModelExecutor::new(PjrtContext::new("artifacts").unwrap());
+    check("dot-artifact-vs-host", 0x90, 40, |g: &mut Gen| {
+        let n = g.usize(1, 1024);
+        let a = g.vec_f32(n, -10.0, 10.0);
+        let b = g.vec_f32(n, -10.0, 10.0);
+        let (got, _) = ex.dot(&a, &b).map_err(|e| e.to_string())?;
+        let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        let tol = 1e-3 * (1.0 + want.abs());
+        if (got - want).abs() > tol {
+            return Err(format!("n={n}: {got} vs {want}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn head_artifact_probabilities_well_formed() {
+    if !artifacts() {
+        return;
+    }
+    let ex = ModelExecutor::new(PjrtContext::new("artifacts").unwrap());
+    check("head-well-formed", 0x91, 30, |g: &mut Gen| {
+        let acc = g.vec_f32(100, -20.0, 20.0);
+        let v = g.vec_f32(100, -1.0, 1.0);
+        let y = if g.bool(0.5) { 1.0 } else { 0.0 };
+        let (out, _) = ex.head(&acc, &v, y).map_err(|e| e.to_string())?;
+        if !(0.0..=1.0).contains(&out.yhat) {
+            return Err(format!("yhat {}", out.yhat));
+        }
+        if out.loss < 0.0 || !out.loss.is_finite() {
+            return Err(format!("loss {}", out.loss));
+        }
+        if out.dh.iter().any(|d| !d.is_finite()) {
+            return Err("dh not finite".into());
+        }
+        // gv = (yhat - y) * h, with h in (0,1): |gv| <= |yhat - y|
+        let bound = (out.yhat - y).abs() + 1e-5;
+        if out.gv.iter().any(|g2| g2.abs() > bound) {
+            return Err("gv exceeds bound".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn update_artifact_is_exact_sgd() {
+    if !artifacts() {
+        return;
+    }
+    let ex = ModelExecutor::new(PjrtContext::new("artifacts").unwrap());
+    check("update-exact", 0x92, 20, |g: &mut Gen| {
+        let t = *g.choose(&[225usize, 450, 1200]);
+        let w = g.vec_f32(100 * t, -1.0, 1.0);
+        let grad = g.vec_f32(100 * t, -1.0, 1.0);
+        let lr = g.f64(0.001, 1.0) as f32;
+        let (out, _) = ex.update_shard(&w, &grad, lr).map_err(|e| e.to_string())?;
+        let want: Vec<f32> = w.iter().zip(&grad).map(|(a, b)| a - lr * b).collect();
+        assert_allclose(&out, &want, 1e-5, "sgd update")
+    });
+}

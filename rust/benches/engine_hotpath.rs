@@ -3,17 +3,24 @@
 //! Measures the *simulator's own* throughput, which bounds how fast the
 //! paper-scale experiments run in wallclock:
 //!
-//! * VM dispatch rate (interpreted ops/s);
+//! * VM dispatch rate (interpreted ops/s) — exercises the fused
+//!   superinstructions (`vm::fuse`);
 //! * engine round-trip rate for on-demand element requests (the
 //!   suspension → service → resume cycle);
-//! * pre-fetch hit path rate;
+//! * pre-fetch hit path rate — exercises the engine's inline
+//!   prefetch-hit fast path;
 //! * tensor-builtin invocation rate through PJRT.
 //!
 //! ```text
-//! cargo bench --bench engine_hotpath
+//! cargo bench --bench engine_hotpath [-- --json[=PATH]] [--smoke]
 //! ```
+//!
+//! `--json` writes `BENCH_hotpath.json` (per-case mean/median seconds and
+//! derived ops/s) so the perf trajectory is machine-trackable across PRs;
+//! `--smoke` runs a single unwarmed iteration per case (CI compile-rot
+//! guard, numbers not meaningful).
 
-use microcore::bench_support::{banner, time_wall};
+use microcore::bench_support::{banner, time_wall, JsonReport, Measurement};
 use microcore::coordinator::{
     Access, ArgSpec, OffloadOptions, PrefetchSpec, Session, TransferMode,
 };
@@ -40,28 +47,52 @@ def stream(x):
 "#;
 
 fn main() -> anyhow::Result<()> {
-    banner("engine_hotpath", "simulator wallclock throughput (seconds per run)");
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path = args.iter().find_map(|a| {
+        if a == "--json" {
+            Some("BENCH_hotpath.json".to_string())
+        } else {
+            a.strip_prefix("--json=").map(String::from)
+        }
+    });
+    let (warmup, iters) = if smoke { (0, 1) } else { (1, 5) };
+
+    banner(
+        "engine_hotpath",
+        if smoke {
+            "SMOKE MODE: 1 iteration per case, numbers not meaningful"
+        } else {
+            "simulator wallclock throughput (seconds per run)"
+        },
+    );
+    let mut report = JsonReport::new("engine_hotpath");
+    let mut case = |m: &Measurement, ops: Option<f64>| {
+        println!("{}", m.summary());
+        report.add(m, ops);
+    };
 
     // 1. VM dispatch rate: 100k-iteration spin on one core.
-    let iters = 100_000i64;
-    let m = time_wall("vm_spin_100k_iters_1core", 1, 5, || {
+    let iters_spin = 100_000i64;
+    let m = time_wall("vm_spin_100k_iters_1core", warmup, iters, || {
         let mut sess = Session::builder(Technology::epiphany3()).seed(1).build().unwrap();
         let k = sess.compile_kernel("spin", SPIN).unwrap();
         sess.offload(
             &k,
-            &[ArgSpec::Int(iters)],
+            &[ArgSpec::Int(iters_spin)],
             OffloadOptions::default().transfer(TransferMode::OnDemand).on_cores(vec![0]),
         )
         .unwrap();
     });
-    // ~10 bytecode ops per iteration.
-    let ops_per_sec = iters as f64 * 10.0 / m.mean();
-    println!("{}", m.summary());
+    // ~10 bytecode ops per iteration (counted unfused; fusion executes
+    // them as 3 superinstructions but charges the same dispatches).
+    let ops_per_sec = iters_spin as f64 * 10.0 / m.mean();
+    case(&m, Some(ops_per_sec));
     println!("  -> ~{:.1} M VM ops/s", ops_per_sec / 1e6);
 
     // 2. On-demand round-trip rate: 16 cores x 1000 elements.
     let n = 16_000usize;
-    let m = time_wall("ondemand_16k_roundtrips", 1, 5, || {
+    let m = time_wall("ondemand_16k_roundtrips", warmup, iters, || {
         let mut sess = Session::builder(Technology::epiphany3()).seed(1).build().unwrap();
         let x = sess.alloc_host_zeroed("x", n).unwrap();
         let k = sess.compile_kernel("stream", STREAM).unwrap();
@@ -72,11 +103,11 @@ fn main() -> anyhow::Result<()> {
         )
         .unwrap();
     });
-    println!("{}", m.summary());
+    case(&m, Some(n as f64 / m.mean()));
     println!("  -> ~{:.2} M round-trips/s", n as f64 / m.mean() / 1e6);
 
     // 3. Pre-fetch hit path rate.
-    let m = time_wall("prefetch_16k_elements", 1, 5, || {
+    let m = time_wall("prefetch_16k_elements", warmup, iters, || {
         let mut sess = Session::builder(Technology::epiphany3()).seed(1).build().unwrap();
         let x = sess.alloc_host_zeroed("x", n).unwrap();
         let k = sess.compile_kernel("stream", STREAM).unwrap();
@@ -92,12 +123,14 @@ fn main() -> anyhow::Result<()> {
         )
         .unwrap();
     });
-    println!("{}", m.summary());
+    case(&m, Some(n as f64 / m.mean()));
     println!("  -> ~{:.2} M element-reads/s via prefetch", n as f64 / m.mean() / 1e6);
 
-    // 4. Tensor-builtin (PJRT) invocation rate, if artifacts exist.
-    if std::path::Path::new("artifacts/manifest.json").exists() {
-        let m = time_wall("pjrt_fwd_accum_x100", 1, 5, || {
+    // 4. Tensor-builtin (PJRT) invocation rate, if artifacts exist and
+    // the build carries the real PJRT backend (stub builds would error
+    // at session construction).
+    if cfg!(feature = "xla") && std::path::Path::new("artifacts/manifest.json").exists() {
+        let m = time_wall("pjrt_fwd_accum_x100", warmup, iters, || {
             let sess = Session::builder(Technology::epiphany3())
                 .artifacts_dir("artifacts")
                 .seed(1)
@@ -111,8 +144,13 @@ fn main() -> anyhow::Result<()> {
                 ex.fwd_accum(&w, &x, &acc).unwrap();
             }
         });
-        println!("{}", m.summary());
+        case(&m, Some(100.0 / m.mean()));
         println!("  -> ~{:.0} PJRT executions/s", 100.0 / m.mean());
+    }
+
+    if let Some(path) = json_path {
+        report.write(&path)?;
+        println!("\nwrote {path}");
     }
     Ok(())
 }

@@ -6,9 +6,14 @@
 //! *virtual* time produced by the simulator (deterministic), so the value
 //! being summarised is passed in rather than wall-clocked; [`time_wall`]
 //! covers the genuinely wall-clock cases (L3 hot-path perf work).
+//!
+//! [`JsonReport`] renders a series of measurements as a machine-readable
+//! JSON file (`BENCH_hotpath.json`) so the perf trajectory is trackable
+//! across PRs; `benches/engine_hotpath.rs --json` writes it.
 
 use std::time::Instant;
 
+use crate::config::Json;
 use crate::sim::OnlineStats;
 
 /// Result of a measurement series.
@@ -18,12 +23,29 @@ pub struct Measurement {
     pub name: String,
     /// Sample statistics (units defined by the caller; seconds for wall).
     pub stats: OnlineStats,
+    /// Raw samples in observation order (median, JSON reports).
+    pub samples: Vec<f64>,
 }
 
 impl Measurement {
     /// Mean of the series.
     pub fn mean(&self) -> f64 {
         self.stats.mean()
+    }
+
+    /// Median of the series (0 when empty).
+    pub fn median(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let n = sorted.len();
+        if n % 2 == 1 {
+            sorted[n / 2]
+        } else {
+            (sorted[n / 2 - 1] + sorted[n / 2]) / 2.0
+        }
     }
 
     /// Relative standard deviation (0 when degenerate).
@@ -38,9 +60,10 @@ impl Measurement {
     /// One-line summary.
     pub fn summary(&self) -> String {
         format!(
-            "{:<40} mean {:>12.6} (min {:.6}, max {:.6}, n={}, rsd {:.1}%)",
+            "{:<40} mean {:>12.6} (median {:.6}, min {:.6}, max {:.6}, n={}, rsd {:.1}%)",
             self.name,
             self.mean(),
+            self.median(),
             self.stats.min().unwrap_or(0.0),
             self.stats.max().unwrap_or(0.0),
             self.stats.count(),
@@ -52,10 +75,12 @@ impl Measurement {
 /// Summarise a series of pre-computed values (virtual-time benches).
 pub fn series(name: impl Into<String>, values: impl IntoIterator<Item = f64>) -> Measurement {
     let mut stats = OnlineStats::new();
+    let mut samples = Vec::new();
     for v in values {
         stats.push(v);
+        samples.push(v);
     }
-    Measurement { name: name.into(), stats }
+    Measurement { name: name.into(), stats, samples }
 }
 
 /// Wall-clock a closure: `warmup` unmeasured runs then `iters` timed runs.
@@ -70,12 +95,15 @@ pub fn time_wall<F: FnMut()>(
         f();
     }
     let mut stats = OnlineStats::new();
+    let mut samples = Vec::new();
     for _ in 0..iters.max(1) {
         let t = Instant::now();
         f();
-        stats.push(t.elapsed().as_secs_f64());
+        let s = t.elapsed().as_secs_f64();
+        stats.push(s);
+        samples.push(s);
     }
-    Measurement { name: name.into(), stats }
+    Measurement { name: name.into(), stats, samples }
 }
 
 /// Print a bench header (keeps bench output grep-able).
@@ -83,6 +111,51 @@ pub fn banner(name: &str, detail: &str) {
     println!("\n######## bench: {name} ########");
     if !detail.is_empty() {
         println!("# {detail}");
+    }
+}
+
+/// Machine-readable benchmark report (one JSON object per case), written
+/// as e.g. `BENCH_hotpath.json` so perf is comparable across PRs.
+#[derive(Debug, Default)]
+pub struct JsonReport {
+    bench: String,
+    cases: Vec<Json>,
+}
+
+impl JsonReport {
+    /// Start a report for the named bench.
+    pub fn new(bench: impl Into<String>) -> Self {
+        JsonReport { bench: bench.into(), cases: Vec::new() }
+    }
+
+    /// Add one case. `ops_per_sec` is the caller's derived throughput
+    /// (`None` when the case has no natural ops unit).
+    pub fn add(&mut self, m: &Measurement, ops_per_sec: Option<f64>) {
+        let mut fields = vec![
+            ("name".to_string(), Json::Str(m.name.clone())),
+            ("mean_s".to_string(), Json::Num(m.mean())),
+            ("median_s".to_string(), Json::Num(m.median())),
+            ("min_s".to_string(), Json::Num(m.stats.min().unwrap_or(0.0))),
+            ("max_s".to_string(), Json::Num(m.stats.max().unwrap_or(0.0))),
+            ("n".to_string(), Json::Num(m.stats.count() as f64)),
+        ];
+        if let Some(ops) = ops_per_sec {
+            fields.push(("ops_per_sec".to_string(), Json::Num(ops)));
+        }
+        self.cases.push(Json::Obj(fields));
+    }
+
+    /// The report as a JSON value.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("bench".to_string(), Json::Str(self.bench.clone())),
+            ("cases".to_string(), Json::Arr(self.cases.clone())),
+        ])
+    }
+
+    /// Serialise and write to `path`.
+    pub fn write(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json().to_string_pretty()))
     }
 }
 
@@ -94,7 +167,16 @@ mod tests {
     fn series_statistics() {
         let m = series("s", [1.0, 2.0, 3.0]);
         assert_eq!(m.mean(), 2.0);
+        assert_eq!(m.median(), 2.0);
         assert!(m.summary().contains("n=3"));
+    }
+
+    #[test]
+    fn median_is_outlier_robust() {
+        let m = series("s", [1.0, 1.0, 1.0, 100.0]);
+        assert_eq!(m.median(), 1.0);
+        assert!(m.mean() > 20.0);
+        assert_eq!(series("e", []).median(), 0.0);
     }
 
     #[test]
@@ -103,6 +185,22 @@ mod tests {
         let m = time_wall("w", 2, 5, || calls += 1);
         assert_eq!(calls, 7);
         assert_eq!(m.stats.count(), 5);
+        assert_eq!(m.samples.len(), 5);
         assert!(m.mean() >= 0.0);
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        let mut rep = JsonReport::new("hotpath");
+        rep.add(&series("case_a", [0.5, 1.5]), Some(1000.0));
+        rep.add(&series("case_b", [2.0]), None);
+        let rendered = rep.to_json().to_string_pretty();
+        let parsed = Json::parse(&rendered).unwrap();
+        assert_eq!(parsed.get("bench").and_then(Json::as_str), Some("hotpath"));
+        let Some(Json::Arr(cases)) = parsed.get("cases") else { panic!() };
+        assert_eq!(cases.len(), 2);
+        assert_eq!(cases[0].get("mean_s").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(cases[0].get("ops_per_sec").and_then(Json::as_f64), Some(1000.0));
+        assert!(cases[1].get("ops_per_sec").is_none());
     }
 }

@@ -17,6 +17,25 @@
 //! contents from the [`MemRegistry`]; writes land in it; tensor builtins
 //! execute the AOT-compiled JAX/Pallas artifacts through PJRT. The same
 //! run that produces the paper's timing figures trains the actual model.
+//!
+//! **Prefetch-hit fast path (when inline resume is legal).** Each VM
+//! outcome normally costs a scheduler round trip: requeue the core,
+//! re-find the global minimum, re-dispatch. When an external read
+//! resolves entirely from an already-arrived pre-fetch buffer *and*
+//! topping up the stream would issue no new request
+//! ([`PrefetchState::wants_fetch`] is false), servicing it touches no
+//! shared resource: the buffer hit is core-local, consuming already-landed
+//! responses is core-local (channels are per-core), and the VM advance
+//! moves only this core's clock. Such reads commute with every other
+//! core's events, so the engine resumes the VM inline and keeps going —
+//! bit-identical virtual times, stalls and trace; strictly less
+//! wall-clock. The moment an iteration would allocate a shared resource
+//! (issue a pre-fetch span, start an on-demand transfer, read
+//! core-local registry state, or finish the kernel) the engine hands the
+//! outcome back to the scheduler so host-service allocations stay in
+//! global time order — the FCFS-equals-virtual-time exactness invariant
+//! above. [`Engine::set_fast_path`] disables the inline path (the
+//! differential tests compare both).
 
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -120,6 +139,12 @@ pub struct Engine {
     /// gather/scatter previously allocated ~0.5 MB per call).
     scratch_a: Vec<f32>,
     scratch_b: Vec<f32>,
+    /// Reusable f32↔f64 marshalling buffer for eager-copy launches and
+    /// mutable-argument write-backs (perf pass #4).
+    scratch_m: Vec<f32>,
+    /// Inline prefetch-hit fast path enabled (see module docs). On by
+    /// default; the differential tests switch it off to compare.
+    fast_path: bool,
 }
 
 impl std::fmt::Debug for Engine {
@@ -160,7 +185,16 @@ impl Engine {
             stats: EngineStats::default(),
             scratch_a: Vec::new(),
             scratch_b: Vec::new(),
+            scratch_m: Vec::new(),
+            fast_path: true,
         }
+    }
+
+    /// Enable/disable the inline prefetch-hit fast path (module docs).
+    /// Virtual-time results are bit-identical either way; disabling only
+    /// costs wall-clock. Exists for differential testing.
+    pub fn set_fast_path(&mut self, on: bool) {
+        self.fast_path = on;
     }
 
     /// Enable event tracing (bounded).
@@ -264,13 +298,18 @@ impl Engine {
                         let info = self.registry.info(dref)?;
                         let bytes = dref.bytes();
                         if spad.alloc(bytes).is_ok() {
-                            let data =
-                                self.registry.read_all(dref, Some(cid))?;
+                            // Read into the reusable marshalling scratch
+                            // (no per-argument Vec<f32> temporary), then
+                            // widen into the Value's own storage.
+                            self.scratch_m.clear();
+                            self.scratch_m.resize(dref.len, 0.0);
+                            self.registry.read(dref, Some(cid), 0, &mut self.scratch_m)?;
                             let done =
                                 self.service.eager_push(launch, info.level, bytes as u64);
                             self.stats.eager_bytes += bytes as u64;
                             start = start.max(done);
-                            let arr: Vec<f64> = data.into_iter().map(f64::from).collect();
+                            let arr: Vec<f64> =
+                                self.scratch_m.iter().map(|&v| f64::from(v)).collect();
                             let val = Value::array(arr);
                             if access == Access::Mutable {
                                 eager_writebacks
@@ -368,22 +407,29 @@ impl Engine {
         }
 
         // ---- main scheduling loop ----
-        loop {
-            let mut best: Option<(usize, Time)> = None;
-            for (i, c) in cores.iter().enumerate() {
-                let cand = match &c.status {
-                    Status::Fresh => c.clock,
-                    Status::Pending(_) => c.clock,
-                    Status::Waiting { ready_at, .. } => (*ready_at).max(c.clock),
-                    Status::Retry { at, .. } => (*at).max(c.clock),
-                    Status::Done => continue,
-                };
-                if best.map_or(true, |(_, t)| cand < t) {
-                    best = Some((i, cand));
+        // Indexed min-structure over candidate times (perf pass #4): a
+        // binary heap keyed by (candidate time, core position) replaces
+        // the O(n) scan per step. A core's candidate only moves when it is
+        // stepped, so exactly one live entry per runnable core exists at a
+        // time; the stale-entry guard is defensive. Ties break on core
+        // position, matching the old scan's first-minimum choice, so the
+        // service order — and therefore every virtual time — is unchanged.
+        let mut heap: std::collections::BinaryHeap<std::cmp::Reverse<(Time, usize)>> = cores
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| Self::candidate(c).map(|t| std::cmp::Reverse((t, i))))
+            .collect();
+        while let Some(std::cmp::Reverse((t, i))) = heap.pop() {
+            match Self::candidate(&cores[i]) {
+                Some(cand) if cand == t => {
+                    self.step_core(&mut cores[i], t)?;
+                    if let Some(next) = Self::candidate(&cores[i]) {
+                        heap.push(std::cmp::Reverse((next, i)));
+                    }
                 }
+                Some(cand) => heap.push(std::cmp::Reverse((cand, i))), // stale entry
+                None => {}
             }
-            let Some((i, cand)) = best else { break };
-            self.step_core(&mut cores[i], cand)?;
         }
 
         // ---- teardown: copy-backs, reports, power ----
@@ -394,10 +440,12 @@ impl Engine {
         let mut reports = Vec::with_capacity(cores.len());
         let mut busy_total: Time = 0;
         for mut c in cores {
-            // Mutable eager arguments copy back at completion.
+            // Mutable eager arguments copy back at completion (narrowed
+            // through the reusable marshalling scratch — no temporary).
             for (arr, dref) in std::mem::take(&mut c.eager_writebacks) {
-                let data: Vec<f32> = arr.borrow().iter().map(|&v| v as f32).collect();
-                self.registry.write(dref, Some(c.id), 0, &data)?;
+                self.scratch_m.clear();
+                self.scratch_m.extend(arr.borrow().iter().map(|&v| v as f32));
+                self.registry.write(dref, Some(c.id), 0, &self.scratch_m)?;
                 let done = self.service.service(c.finished_at, Level::Shared, dref.bytes() as u64);
                 c.finished_at = done;
             }
@@ -424,6 +472,17 @@ impl Engine {
         self.now = finish;
         self.stats.offloads += 1;
         Ok(OffloadResult { reports, launched_at: launch, finished_at: finish, spills })
+    }
+
+    /// A core's candidate time: when it next needs service (`None` once
+    /// done). The scheduler always services the minimum candidate.
+    fn candidate(c: &CoreRun) -> Option<Time> {
+        match &c.status {
+            Status::Fresh | Status::Pending(_) => Some(c.clock),
+            Status::Waiting { ready_at, .. } => Some((*ready_at).max(c.clock)),
+            Status::Retry { at, .. } => Some((*at).max(c.clock)),
+            Status::Done => None,
+        }
     }
 
     /// Service one core at its candidate time.
@@ -486,35 +545,44 @@ impl Engine {
     }
 
     /// Consume arrived responses (pre-fetch data, write acks) at `c.clock`.
+    /// Consume-only and core-local (the channel belongs to this core), so
+    /// it is safe to call from the inline fast path at any point; calling
+    /// it twice at the same clock is a no-op the second time.
     fn harvest(&mut self, c: &mut CoreRun) {
-        // Write acks: consume silently.
         let clock = c.clock;
-        c.autoconsume.retain(|&h| {
-            if c.channel.ready(h, clock).unwrap_or(false) {
-                let _ = c.channel.consume(h, clock);
-                self.stats.requests += 1;
+        let CoreRun { autoconsume, channel, binds, .. } = c;
+        let mut consumed = 0u64;
+        // Write acks: consume silently.
+        autoconsume.retain(|&h| {
+            if channel.ready(h, clock).unwrap_or(false) {
+                let _ = channel.consume(h, clock);
+                consumed += 1;
                 false
             } else {
                 true
             }
         });
-        // Pre-fetch arrivals.
-        for b in c.binds.iter_mut() {
+        // Pre-fetch arrivals, scanned in place (perf pass #4: this runs
+        // per element read — no per-call Vec of handles). `on_arrival`
+        // removes the entry at the scan position, so only advance on a
+        // non-ready span.
+        for b in binds.iter_mut() {
             if let Some(pf) = b.pf.as_mut() {
-                let arrived: Vec<Handle> = pf
-                    .inflight()
-                    .iter()
-                    .filter(|f| c.channel.ready(f.handle, clock).unwrap_or(false))
-                    .map(|f| f.handle)
-                    .collect();
-                for h in arrived {
-                    if let Ok(data) = c.channel.consume(h, clock) {
-                        self.stats.requests += 1;
-                        pf.on_arrival(h, &data);
+                let mut i = 0;
+                while i < pf.inflight().len() {
+                    let h = pf.inflight()[i].handle;
+                    if channel.ready(h, clock).unwrap_or(false) {
+                        if let Ok(data) = channel.consume(h, clock) {
+                            consumed += 1;
+                            pf.on_arrival(h, &data);
+                            continue;
+                        }
                     }
+                    i += 1;
                 }
             }
         }
+        self.stats.requests += consumed;
     }
 
     /// Issue as many pending pre-fetch spans as cells allow for `slot`,
@@ -590,7 +658,48 @@ impl Engine {
                 c.status = Status::Done;
                 self.trace.emit(done, c.id, "done", "");
             }
-            Outcome::ExtRead { slot, index } => {
+            Outcome::ExtRead { mut slot, mut index } => {
+                // Inline fast path: consume a run of pure pre-fetch hits
+                // without a scheduler round trip per element. Legal only
+                // while no shared resource is touched — the buffer hit is
+                // core-local, `harvest` is consume-only, and the VM
+                // advance moves only this core's clock (module docs). The
+                // moment the next read would issue a span, miss, or leave
+                // the pre-fetch path, hand the outcome back to the
+                // scheduler so it is serviced in global time order.
+                if self.fast_path {
+                    let mut advanced = false;
+                    while c.binds[slot].level != Level::CoreLocal && c.binds[slot].pf.is_some()
+                    {
+                        self.harvest(c);
+                        let pf = c.binds[slot].pf.as_ref().expect("checked");
+                        let Some(v) = pf.peek_hit(index) else { break };
+                        if pf.wants_fetch(index) {
+                            break;
+                        }
+                        c.binds[slot].pf.as_mut().expect("checked").note_hit();
+                        let out = c.vm.resume(Value::Float(v))?;
+                        self.charge_vm(c);
+                        advanced = true;
+                        match out {
+                            Outcome::ExtRead { slot: s, index: i } => {
+                                slot = s;
+                                index = i;
+                            }
+                            other => {
+                                c.status = Status::Pending(other);
+                                return Ok(());
+                            }
+                        }
+                    }
+                    if advanced {
+                        // The VM moved past this core's original candidate
+                        // time; requeue the unservable read for global
+                        // ordering instead of servicing it late here.
+                        c.status = Status::Pending(Outcome::ExtRead { slot, index });
+                        return Ok(());
+                    }
+                }
                 // Microcore-kind data is *in this core's local store*: the
                 // reference decodes to a local load (§3.2) — no channel.
                 if c.binds[slot].level == Level::CoreLocal {

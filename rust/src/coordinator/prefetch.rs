@@ -145,6 +145,52 @@ impl PrefetchState {
         (self.hits, self.misses, self.fetches_issued)
     }
 
+    /// Mutation-free hit probe: the value for `idx` if (and only if) it is
+    /// resident in the buffered window right now. Unlike
+    /// [`PrefetchState::plan_read`] this does not touch the hit/miss
+    /// statistics and never re-seeds the stream — the engine's inline
+    /// fast path uses it to decide whether a read can bypass the
+    /// scheduler round-trip entirely (pair with
+    /// [`PrefetchState::note_hit`] to keep the statistics identical).
+    pub fn peek_hit(&self, idx: usize) -> Option<f64> {
+        if idx >= self.lo && idx < self.hi {
+            Some(f64::from(self.buf[idx - self.lo]))
+        } else {
+            None
+        }
+    }
+
+    /// Record a hit taken through [`PrefetchState::peek_hit`], keeping
+    /// `stats()` identical to the `plan_read` path.
+    pub fn note_hit(&mut self) {
+        self.hits += 1;
+    }
+
+    /// Mutation-free probe: would [`PrefetchState::spans_to_fetch`] issue
+    /// at least one span for a read at `idx`? This *is* that method's loop
+    /// condition (it calls this), so the two cannot drift — the engine's
+    /// inline fast path is only legal when this is `false` (no
+    /// host-service resource would be allocated out of global time
+    /// order).
+    pub fn wants_fetch(&self, idx: usize) -> bool {
+        if self.next_fetch >= self.total_len {
+            return false; // stream exhausted
+        }
+        if self.live_occupancy(idx) >= self.spec.buffer_size {
+            return false; // buffer full
+        }
+        // Only fetch ahead within the trigger distance.
+        self.next_fetch <= idx + self.spec.distance
+    }
+
+    /// Buffer occupancy if all inflight arrive, counting only the *live*
+    /// window `[max(lo, idx), next_fetch)`: elements behind the read
+    /// position are dead for a sequential stream and will be evicted on
+    /// the next arrival.
+    fn live_occupancy(&self, idx: usize) -> usize {
+        self.next_fetch.saturating_sub(self.lo.max(idx))
+    }
+
     /// Plan a read of element `idx`.
     pub fn plan_read(&mut self, idx: usize) -> ReadPlan {
         if idx >= self.lo && idx < self.hi {
@@ -177,22 +223,10 @@ impl PrefetchState {
     /// requests and registers them via [`PrefetchState::on_issued`].
     pub fn spans_to_fetch(&mut self, idx: usize) -> Vec<(usize, usize)> {
         let mut spans = Vec::new();
-        loop {
-            if self.next_fetch >= self.total_len {
-                break; // stream exhausted
-            }
-            // Buffer occupancy if all inflight arrive, counting only the
-            // *live* window [max(lo, idx), next_fetch): elements behind the
-            // read position are dead for a sequential stream and will be
-            // evicted on the next arrival.
-            let occupied = self.next_fetch.saturating_sub(self.lo.max(idx));
-            if occupied >= self.spec.buffer_size {
-                break; // buffer full
-            }
-            // Only fetch ahead within the trigger distance.
-            if self.next_fetch > idx + self.spec.distance {
-                break;
-            }
+        // Loop condition shared with the engine's fast-path probe: one
+        // predicate, no drift (see `wants_fetch`).
+        while self.wants_fetch(idx) {
+            let occupied = self.live_occupancy(idx);
             let len = self
                 .spec
                 .elems_per_fetch
@@ -375,6 +409,25 @@ mod tests {
         st.on_arrival(handle(0), &[0.0, 1.0]); // stale payload
         assert_eq!(st.plan_read(0), ReadPlan::Hit(42.0), "overlay wins");
         assert_eq!(st.plan_read(1), ReadPlan::Hit(1.0), "untouched element fresh");
+    }
+
+    #[test]
+    fn peek_and_wants_fetch_mirror_plan_read() {
+        let mut st = PrefetchState::new(spec(), 100).unwrap();
+        assert!(st.peek_hit(0).is_none());
+        assert!(st.wants_fetch(0), "empty stream wants the initial fill");
+        for (i, (s, l)) in st.spans_to_fetch(0).into_iter().enumerate() {
+            st.on_issued(handle(i), s, l);
+        }
+        assert!(!st.wants_fetch(0), "window fully requested: nothing to issue");
+        st.on_arrival(handle(0), &[10.0, 11.0]);
+        assert_eq!(st.peek_hit(0), Some(10.0));
+        assert_eq!(st.peek_hit(2), None, "not yet arrived");
+        let (h0, _, _) = st.stats();
+        st.note_hit();
+        assert_eq!(st.stats().0, h0 + 1);
+        // peek_hit agrees with plan_read on residency
+        assert_eq!(st.plan_read(0), ReadPlan::Hit(10.0));
     }
 
     #[test]

@@ -156,9 +156,11 @@ impl ModelExecutor {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "xla"))]
 mod tests {
-    //! Self-skipping when artifacts are absent (see pjrt.rs note).
+    //! Self-skipping when artifacts are absent (see pjrt.rs note);
+    //! compiled out entirely without the `xla` feature, where the stub
+    //! `PjrtContext::new` always errors.
     use super::*;
 
     fn exec() -> Option<ModelExecutor> {

@@ -10,14 +10,27 @@
 //! Execution is shape-checked against the manifest before touching XLA so
 //! misuse surfaces as a typed [`Error::Runtime`].
 
+//! Offline builds: the `xla` crate only exists on machines that ship
+//! `libxla_extension`, so everything touching it is gated behind the
+//! `xla` cargo feature. Without the feature a stub [`PjrtContext`] with
+//! the same API compiles instead; its constructor returns a typed
+//! `Error::Runtime`, and the engine's native tensor-builtin fallbacks
+//! (identical numerics, see `coordinator::engine`) carry the workloads.
+
+#[cfg(feature = "xla")]
 use std::cell::RefCell;
+#[cfg(feature = "xla")]
 use std::collections::HashMap;
+#[cfg(feature = "xla")]
 use std::rc::Rc;
 
-use super::manifest::{ArtifactSpec, Manifest};
+use super::manifest::Manifest;
+#[cfg(feature = "xla")]
+use super::manifest::ArtifactSpec;
 use crate::error::{Error, Result};
 
 /// A PJRT CPU client plus executable cache for one artifacts directory.
+#[cfg(feature = "xla")]
 pub struct PjrtContext {
     client: xla::PjRtClient,
     manifest: Manifest,
@@ -25,6 +38,52 @@ pub struct PjrtContext {
     executions: RefCell<u64>,
 }
 
+/// Stub used when the crate is built without the `xla` feature: carries
+/// the manifest type so downstream code typechecks, but can never be
+/// constructed — `new` reports PJRT as unavailable.
+#[cfg(not(feature = "xla"))]
+pub struct PjrtContext {
+    manifest: Manifest,
+}
+
+#[cfg(not(feature = "xla"))]
+impl std::fmt::Debug for PjrtContext {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PjrtContext").field("xla", &"unavailable (stub)").finish()
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+impl PjrtContext {
+    /// Always fails: this build has no PJRT backend.
+    pub fn new(_artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        Err(Error::Runtime(
+            "built without the `xla` feature: PJRT-backed tensor builtins are \
+             unavailable (rebuild with `--features xla` on a machine that ships \
+             libxla_extension); pure-VM sessions use native fallbacks instead"
+                .into(),
+        ))
+    }
+
+    /// The manifest this context serves (unreachable in stub builds).
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Total `execute` calls (always zero in stub builds).
+    pub fn executions(&self) -> u64 {
+        0
+    }
+
+    /// Always fails: this build has no PJRT backend.
+    pub fn execute(&self, name: &str, _inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        Err(Error::Runtime(format!(
+            "built without the `xla` feature: cannot execute artifact '{name}'"
+        )))
+    }
+}
+
+#[cfg(feature = "xla")]
 impl std::fmt::Debug for PjrtContext {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("PjrtContext")
@@ -34,6 +93,7 @@ impl std::fmt::Debug for PjrtContext {
     }
 }
 
+#[cfg(feature = "xla")]
 impl PjrtContext {
     /// Create a CPU PJRT client over an artifacts directory.
     pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
@@ -164,7 +224,7 @@ impl PjrtContext {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "xla"))]
 mod tests {
     //! These tests require built artifacts; they self-skip otherwise so
     //! `cargo test` stays green pre-`make artifacts` (CI runs both orders).

@@ -8,6 +8,41 @@
 
 use super::symbol::SymbolTable;
 
+/// Comparison selector for the fused compare-and-branch superinstruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpKind {
+    /// `<`
+    Lt,
+    /// `<=`
+    Le,
+    /// `>`
+    Gt,
+    /// `>=`
+    Ge,
+}
+
+impl CmpKind {
+    /// The plain opcode this selector fuses.
+    pub fn op(self) -> Op {
+        match self {
+            CmpKind::Lt => Op::Lt,
+            CmpKind::Le => Op::Le,
+            CmpKind::Gt => Op::Gt,
+            CmpKind::Ge => Op::Ge,
+        }
+    }
+
+    /// Evaluate over the promoted operands.
+    pub fn eval(self, l: f64, r: f64) -> bool {
+        match self {
+            CmpKind::Lt => l < r,
+            CmpKind::Le => l <= r,
+            CmpKind::Gt => l > r,
+            CmpKind::Ge => l >= r,
+        }
+    }
+}
+
 /// One opcode.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Op {
@@ -64,6 +99,49 @@ pub enum Op {
     CallBuiltin(u16, u8),
     /// Return (value on stack; functions with no explicit return push None).
     Return,
+
+    // ---- superinstructions (peephole-fused, see `vm::fuse`) -------------
+    //
+    // Each replaces a fixed sequence of the plain ops above with
+    // *bit-identical* semantics: same `CostCounters` deltas (they charge
+    // the fused sequence's full dispatch count), same symbol-table access
+    // records, same error messages, same suspension points for external
+    // operands, and the same modelled `code_bytes()` footprint (see
+    // [`Op::fused_len`]). They exist purely to cut host-side dispatch
+    // overhead — virtual time is unchanged by construction.
+    /// `Load(s); ConstI(imm); Add; Store(s)` — integer augmented add
+    /// (`i += 1` loop counters).
+    AugAddConstI(u16, i64),
+    /// `Load(s); ConstF(imm); Add; Store(s)` — float augmented add.
+    AugAddConstF(u16, f64),
+    /// `Load(dst); Load(src); Add; Store(dst)` — local-to-local augmented
+    /// add (`s += i` accumulators).
+    AugAddLocal(u16, u16),
+    /// `Load(a); Load(b); <cmp>; JumpIfFalse(t)` — the while/for loop
+    /// back-edge test. Falls through when the comparison holds, jumps to
+    /// `t` when it fails.
+    BranchCmpLL(u16, u16, CmpKind, u32),
+    /// `Load(acc); Load(obj); Load(idx); Index; Add; Store(acc)` —
+    /// indexed-load-accumulate (`s += x[i]` reductions). Suspends exactly
+    /// like the unfused `Index` when `obj` is external; the interpreter
+    /// completes the add+store on resume.
+    AccumIndexLLL(u16, u16, u16),
+}
+
+impl Op {
+    /// Number of plain (unfused) ops this op stands for: 1 for plain ops,
+    /// the replaced sequence length for superinstructions. Governs both
+    /// the dispatch count charged per execution and the modelled byte size
+    /// in [`Function::code_bytes`], keeping fused and unfused programs
+    /// bit-identical in cost and virtual time.
+    pub fn fused_len(&self) -> u64 {
+        match self {
+            Op::AugAddConstI(..) | Op::AugAddConstF(..) | Op::AugAddLocal(..) => 4,
+            Op::BranchCmpLL(..) => 4,
+            Op::AccumIndexLLL(..) => 6,
+            _ => 1,
+        }
+    }
 }
 
 /// A compiled function.
@@ -92,8 +170,12 @@ impl Function {
     /// fit next to the 24 KB interpreter).
     pub fn code_bytes(&self) -> usize {
         // Modelled at 4 bytes/op plus string pool, close to ePython's
-        // packed form.
-        self.code.len() * 4 + self.strings.iter().map(String::len).sum::<usize>()
+        // packed form. Superinstructions are counted at their unfused
+        // size: fusion is a host-simulator dispatch optimisation, not a
+        // change to the modelled on-core code footprint (and launch-time
+        // code-push costs must not depend on whether fusion ran).
+        let ops: u64 = self.code.iter().map(Op::fused_len).sum();
+        ops as usize * 4 + self.strings.iter().map(String::len).sum::<usize>()
     }
 }
 

@@ -1,0 +1,268 @@
+//! Peephole bytecode fusion: superinstructions for the dominant kernel
+//! patterns (perf pass #4, the L3 hot-path overhaul).
+//!
+//! The interpreter's per-op dispatch cost — not data movement — bounds the
+//! simulator's wall-clock throughput (see `benches/engine_hotpath.rs`, and
+//! the same observation for real micro-core dynamic languages in
+//! arXiv:2102.02109 / arXiv:2209.00894). This pass rewrites each compiled
+//! function, replacing the three sequences that dominate paper-style
+//! kernels with single superinstructions:
+//!
+//! * `Load a; Load b; Lt/Le/Gt/Ge; JumpIfFalse t` → [`Op::BranchCmpLL`]
+//!   (every `while i < n` / `for i in range(...)` back-edge test);
+//! * `Load s; ConstI/ConstF k; Add; Store s` → [`Op::AugAddConstI`] /
+//!   [`Op::AugAddConstF`] (loop counters, `i += 1`);
+//! * `Load d; Load s; Add; Store d` → [`Op::AugAddLocal`] (`s += i`
+//!   accumulators);
+//! * `Load s; Load x; Load i; Index; Add; Store s` →
+//!   [`Op::AccumIndexLLL`] (`s += x[i]` reductions — the streaming
+//!   read pattern of §3.1).
+//!
+//! **Semantics are bit-identical** to the unfused sequence: the same
+//! `CostCounters` deltas (each superinstruction charges its full unfused
+//! dispatch count, split across a suspension exactly where the unfused
+//! sequence would split), the same symbol-table access records, the same
+//! error messages, the same suspension points for external operands, and
+//! the same modelled `code_bytes()`. The only divergence is fuel
+//! exhaustion *inside* a fused group: the group checks its whole budget up
+//! front, so a kernel may error up to `fused_len - 1` dispatches earlier
+//! than unfused — the error outcome itself is identical.
+//!
+//! **Safety around control flow:** a sequence is fused only if no jump
+//! lands in its interior (its first op may be a jump target — that is the
+//! loop-top case). All jump targets are remapped after rewriting.
+//!
+//! Fusion runs by default in [`crate::vm::compile_source`]; set the
+//! `MICROCORE_NO_FUSE` environment variable (or call
+//! [`crate::vm::compile_source_unfused`]) to disable it, e.g. for the
+//! differential tests in `tests/fusion_differential.rs`.
+
+use super::bytecode::{CmpKind, Function, Op};
+use super::Program;
+
+/// Fuse every function of a compiled program in place.
+pub fn fuse_program(p: &mut Program) {
+    for f in &mut p.functions {
+        fuse_function(f);
+    }
+}
+
+/// Collect the set of old-code positions that some jump targets.
+fn jump_targets(code: &[Op]) -> Vec<bool> {
+    let mut target = vec![false; code.len() + 1];
+    for op in code {
+        let t = match *op {
+            Op::Jump(t)
+            | Op::JumpIfFalse(t)
+            | Op::JumpIfFalsePeek(t)
+            | Op::JumpIfTruePeek(t) => t,
+            Op::BranchCmpLL(_, _, _, t) => t,
+            _ => continue,
+        };
+        if (t as usize) < target.len() {
+            target[t as usize] = true;
+        }
+    }
+    target
+}
+
+/// Try to fuse a superinstruction starting at `i`. Interior positions must
+/// not be jump targets (the head may be one). Returns the replacement op
+/// and the number of plain ops consumed.
+fn try_fuse(code: &[Op], target: &[bool], i: usize) -> Option<(Op, usize)> {
+    let interior_free =
+        |from: usize, to: usize| (from..to).all(|j| !target[j]);
+
+    // s += x[i]  (longest pattern first)
+    if i + 6 <= code.len() && interior_free(i + 1, i + 6) {
+        if let (
+            Op::Load(acc),
+            Op::Load(obj),
+            Op::Load(idx),
+            Op::Index,
+            Op::Add,
+            Op::Store(st),
+        ) = (&code[i], &code[i + 1], &code[i + 2], &code[i + 3], &code[i + 4], &code[i + 5])
+        {
+            if st == acc {
+                return Some((Op::AccumIndexLLL(*acc, *obj, *idx), 6));
+            }
+        }
+    }
+
+    if i + 4 <= code.len() && interior_free(i + 1, i + 4) {
+        // i += k  (integer or float constant)
+        if let (Op::Load(a), Op::ConstI(k), Op::Add, Op::Store(st)) =
+            (&code[i], &code[i + 1], &code[i + 2], &code[i + 3])
+        {
+            if st == a {
+                return Some((Op::AugAddConstI(*a, *k), 4));
+            }
+        }
+        if let (Op::Load(a), Op::ConstF(k), Op::Add, Op::Store(st)) =
+            (&code[i], &code[i + 1], &code[i + 2], &code[i + 3])
+        {
+            if st == a {
+                return Some((Op::AugAddConstF(*a, *k), 4));
+            }
+        }
+        // s += i
+        if let (Op::Load(d), Op::Load(s), Op::Add, Op::Store(st)) =
+            (&code[i], &code[i + 1], &code[i + 2], &code[i + 3])
+        {
+            if st == d {
+                return Some((Op::AugAddLocal(*d, *s), 4));
+            }
+        }
+        // while a <cmp> b back-edge test
+        if let (Op::Load(a), Op::Load(b), cmp, Op::JumpIfFalse(t)) =
+            (&code[i], &code[i + 1], &code[i + 2], &code[i + 3])
+        {
+            let kind = match cmp {
+                Op::Lt => Some(CmpKind::Lt),
+                Op::Le => Some(CmpKind::Le),
+                Op::Gt => Some(CmpKind::Gt),
+                Op::Ge => Some(CmpKind::Ge),
+                _ => None,
+            };
+            if let Some(kind) = kind {
+                return Some((Op::BranchCmpLL(*a, *b, kind, *t), 4));
+            }
+        }
+    }
+    None
+}
+
+/// Fuse one function in place, remapping all jump targets.
+pub fn fuse_function(f: &mut Function) {
+    let n = f.code.len();
+    let target = jump_targets(&f.code);
+    let mut new_code: Vec<Op> = Vec::with_capacity(n);
+    let mut new_lines: Vec<usize> = Vec::with_capacity(n);
+    // Old position → new position (interior positions map to their group
+    // head; never jump targets, filled for totality).
+    let mut map: Vec<u32> = vec![0; n + 1];
+    let mut i = 0;
+    while i < n {
+        if let Some((sup, k)) = try_fuse(&f.code, &target, i) {
+            for j in i..i + k {
+                map[j] = new_code.len() as u32;
+            }
+            new_lines.push(f.lines[i]);
+            new_code.push(sup);
+            i += k;
+        } else {
+            map[i] = new_code.len() as u32;
+            new_lines.push(f.lines[i]);
+            new_code.push(f.code[i].clone());
+            i += 1;
+        }
+    }
+    map[n] = new_code.len() as u32;
+    for op in &mut new_code {
+        match op {
+            Op::Jump(t)
+            | Op::JumpIfFalse(t)
+            | Op::JumpIfFalsePeek(t)
+            | Op::JumpIfTruePeek(t)
+            | Op::BranchCmpLL(_, _, _, t) => *t = map[*t as usize],
+            _ => {}
+        }
+    }
+    f.code = new_code;
+    f.lines = new_lines;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vm::{compile_source, compile_source_unfused};
+
+    const SPIN: &str = r#"
+def spin(n):
+    s = 0
+    i = 0
+    while i < n:
+        s += i
+        i += 1
+    return s
+"#;
+
+    const STREAM: &str = r#"
+def stream(x):
+    s = 0.0
+    i = 0
+    while i < len(x):
+        s += x[i]
+        i += 1
+    return s
+"#;
+
+    fn count<F: Fn(&Op) -> bool>(p: &crate::vm::Program, pred: F) -> usize {
+        p.functions.iter().flat_map(|f| f.code.iter()).filter(|op| pred(op)).count()
+    }
+
+    #[test]
+    fn spin_loop_fuses_all_three_patterns() {
+        let p = compile_source(SPIN, None).unwrap();
+        assert_eq!(count(&p, |o| matches!(o, Op::BranchCmpLL(..))), 1, "back-edge test");
+        assert_eq!(count(&p, |o| matches!(o, Op::AugAddLocal(..))), 1, "s += i");
+        assert_eq!(count(&p, |o| matches!(o, Op::AugAddConstI(..))), 1, "i += 1");
+    }
+
+    #[test]
+    fn stream_loop_fuses_indexed_accumulate() {
+        let p = compile_source(STREAM, None).unwrap();
+        assert_eq!(count(&p, |o| matches!(o, Op::AccumIndexLLL(..))), 1, "s += x[i]");
+        // `while i < len(x)` calls a builtin between the loads: not fusable.
+        assert_eq!(count(&p, |o| matches!(o, Op::BranchCmpLL(..))), 0);
+    }
+
+    #[test]
+    fn code_bytes_are_preserved_by_fusion() {
+        for src in [SPIN, STREAM] {
+            let fused = compile_source(src, None).unwrap();
+            let plain = compile_source_unfused(src, None).unwrap();
+            assert_eq!(fused.entry_fn().code_bytes(), plain.entry_fn().code_bytes());
+            assert!(fused.entry_fn().code.len() < plain.entry_fn().code.len());
+        }
+    }
+
+    #[test]
+    fn jump_targets_survive_fusion() {
+        // break/continue land on fused-group heads and past them; the
+        // kernel must still compute the same value (full differential
+        // coverage lives in tests/fusion_differential.rs).
+        let src = r#"
+def k():
+    s = 0
+    for i in range(0, 100, 7):
+        if i == 35:
+            continue
+        if i > 70:
+            break
+        s += i
+    return s
+"#;
+        let p = std::rc::Rc::new(compile_source(src, None).unwrap());
+        let mut vm = crate::vm::Interp::new(p, 0, 1, vec![], vec![]).unwrap();
+        let crate::vm::Outcome::Done(v) = vm.run().unwrap() else { panic!() };
+        assert_eq!(v.as_i64().unwrap(), 350);
+    }
+
+    #[test]
+    fn interior_jump_target_blocks_fusion() {
+        // `while i < n: i += 1` — the continue target of a hypothetical
+        // jump into the middle of a group must prevent fusion; here we
+        // check the analysis directly on a synthetic sequence.
+        let code = vec![
+            Op::Load(0),
+            Op::ConstI(1),
+            Op::Add,
+            Op::Store(0),
+            Op::Jump(2), // lands inside the aug-add group
+        ];
+        let target = jump_targets(&code);
+        assert!(try_fuse(&code, &target, 0).is_none());
+    }
+}

@@ -77,11 +77,42 @@ struct Frame {
     symbols: SymbolTable,
 }
 
+/// `Op::Load` semantics for a fused arm: record the read and clone the
+/// slot, with the plain arm's exact error.
+fn load_local(frame: &mut Frame, slot: u16, line: usize) -> Result<Value> {
+    frame.symbols.record(slot as usize, false);
+    frame
+        .locals
+        .get(slot as usize)
+        .cloned()
+        .ok_or_else(|| Error::Vm(format!("line {line}: bad slot {slot}")))
+}
+
+/// `Op::Store` semantics for a fused arm: record the write, refresh the
+/// external flag (§4 rebinding), store.
+fn store_local(frame: &mut Frame, slot: u16, v: Value) {
+    frame.symbols.record(slot as usize, true);
+    frame.symbols.set_external(slot as usize, matches!(v, Value::External(_)));
+    frame.locals[slot as usize] = v;
+}
+
 #[derive(Debug, Clone, Copy)]
 enum Pending {
     ReadValue,
     WriteAck,
     TensorValue,
+}
+
+/// Continuation of a suspended [`Op::AccumIndexLLL`]: the unfused sequence
+/// keeps the accumulator value on the stack across the `Index` suspension
+/// and performs `Add; Store` after resume; the fused op stashes the same
+/// state here so the resume path charges the identical 2 dispatches and
+/// produces the identical result.
+#[derive(Debug)]
+struct FusedAccum {
+    slot: u16,
+    acc: Value,
+    line: usize,
 }
 
 /// A resumable interpreter for one core's kernel invocation.
@@ -98,6 +129,7 @@ pub struct Interp {
     ext_lens: Vec<usize>,
     print_log: Vec<String>,
     pending: Option<Pending>,
+    fused_accum: Option<FusedAccum>,
     fuel: u64,
     finished_symbols: Option<SymbolTable>,
 }
@@ -143,6 +175,7 @@ impl Interp {
             ext_lens,
             print_log: Vec::new(),
             pending: None,
+            fused_accum: None,
             fuel: u64::MAX,
             finished_symbols: None,
         })
@@ -173,7 +206,24 @@ impl Interp {
     /// (`Value::None` for write acks).
     pub fn resume(&mut self, value: Value) -> Result<Outcome> {
         match self.pending.take() {
-            Some(Pending::ReadValue) | Some(Pending::TensorValue) => self.stack.push(value),
+            Some(Pending::ReadValue) => {
+                if let Some(FusedAccum { slot, acc, line }) = self.fused_accum.take() {
+                    // Complete a suspended `AccumIndexLLL`: the unfused
+                    // sequence would now execute `Add; Store` — charge the
+                    // same 2 dispatches and perform the identical update.
+                    if self.counters.dispatches + 2 > self.fuel {
+                        return Err(Error::Vm(
+                            "kernel exceeded its dispatch budget (fuel)".into(),
+                        ));
+                    }
+                    self.counters.dispatches += 2;
+                    let v = self.arith(&Op::Add, acc, value, line)?;
+                    store_local(self.frames.last_mut().expect("frame"), slot, v);
+                } else {
+                    self.stack.push(value);
+                }
+            }
+            Some(Pending::TensorValue) => self.stack.push(value),
             Some(Pending::WriteAck) => {}
             None => return Err(Error::Vm("resume without pending suspension".into())),
         }
@@ -189,14 +239,18 @@ impl Interp {
         // dispatch never clones an `Op` (perf pass #1, EXPERIMENTS.md §Perf).
         let program = self.program.clone();
         loop {
-            if self.counters.dispatches >= self.fuel {
-                return Err(Error::Vm("kernel exceeded its dispatch budget (fuel)".into()));
-            }
             let frame = self.frames.last_mut().expect("frame");
             let func = &program.functions[frame.func];
             debug_assert!(frame.ip < func.code.len(), "fell off code");
             let op = &func.code[frame.ip];
             let line = func.lines[frame.ip];
+            // Fuel: an op executes iff its full dispatch weight fits the
+            // budget (for plain ops this is exactly the old
+            // `dispatches >= fuel` check; a fused group reserves its whole
+            // unfused length up front — see `vm::fuse` module docs).
+            if self.counters.dispatches.saturating_add(op.fused_len()) > self.fuel {
+                return Err(Error::Vm("kernel exceeded its dispatch budget (fuel)".into()));
+            }
             frame.ip += 1;
             self.counters.dispatches += 1;
 
@@ -386,14 +440,30 @@ impl Interp {
                     let b = Builtin::from_id(bid)
                         .ok_or_else(|| Error::Vm(format!("line {line}: bad builtin id {bid}")))?;
                     let argc = argc as usize;
-                    let at = self.stack.len() - argc;
-                    let args: Vec<Value> = self.stack.drain(at..).collect();
+                    if self.stack.len() < argc {
+                        return Err(Error::Vm("stack underflow".into()));
+                    }
                     if b.is_tensor() {
+                        let at = self.stack.len() - argc;
+                        let args: Vec<Value> = self.stack.drain(at..).collect();
                         self.counters.tensor_calls += 1;
                         self.pending = Some(Pending::TensorValue);
                         return Ok(Outcome::Tensor(TensorOp { builtin: b, args }));
                     }
-                    let v = self.pure_builtin(b, args, line)?;
+                    // Pure builtins have small fixed arity: pop into an
+                    // inline buffer instead of allocating a Vec per call
+                    // (perf pass #4: this arm is on the arith hot path).
+                    let v = if argc <= 4 {
+                        let mut buf = [Value::None, Value::None, Value::None, Value::None];
+                        for j in (0..argc).rev() {
+                            buf[j] = self.stack.pop().expect("checked above");
+                        }
+                        self.pure_builtin(b, &buf[..argc], line)?
+                    } else {
+                        let at = self.stack.len() - argc;
+                        let args: Vec<Value> = self.stack.drain(at..).collect();
+                        self.pure_builtin(b, &args, line)?
+                    };
                     self.stack.push(v);
                 }
                 Op::Return => {
@@ -404,6 +474,81 @@ impl Interp {
                         return Ok(Outcome::Done(v));
                     }
                     self.stack.push(v);
+                }
+
+                // ---- superinstructions (see `vm::fuse`) -----------------
+                // Each charges its remaining unfused dispatches explicitly
+                // (the loop top charged 1) and replays the unfused
+                // sequence's symbol records, arithmetic and error order.
+                ref aug @ (Op::AugAddConstI(..) | Op::AugAddConstF(..)) => {
+                    let (slot, rhs) = match *aug {
+                        Op::AugAddConstI(s, k) => (s, Value::Int(k)),
+                        Op::AugAddConstF(s, k) => (s, Value::Float(k)),
+                        _ => unreachable!(),
+                    };
+                    self.counters.dispatches += 3;
+                    let l = load_local(self.frames.last_mut().unwrap(), slot, line)?;
+                    let v = self.arith(&Op::Add, l, rhs, line)?;
+                    store_local(self.frames.last_mut().unwrap(), slot, v);
+                }
+                Op::AugAddLocal(dst, src) => {
+                    self.counters.dispatches += 3;
+                    let frame = self.frames.last_mut().unwrap();
+                    let l = load_local(frame, dst, line)?;
+                    let r = load_local(frame, src, line)?;
+                    let v = self.arith(&Op::Add, l, r, line)?;
+                    store_local(self.frames.last_mut().unwrap(), dst, v);
+                }
+                Op::BranchCmpLL(a, b, cmp, t) => {
+                    self.counters.dispatches += 3;
+                    let frame = self.frames.last_mut().unwrap();
+                    let l = load_local(frame, a, line)?;
+                    let r = load_local(frame, b, line)?;
+                    // The unfused comparison converts the rhs first.
+                    let rf = r.as_f64()?;
+                    let lf = l.as_f64()?;
+                    if !cmp.eval(lf, rf) {
+                        self.frames.last_mut().unwrap().ip = t as usize;
+                    }
+                }
+                Op::AccumIndexLLL(acc, obj, idx) => {
+                    // Load; Load; Load charged here (+ the loop top's 1 =
+                    // 4 through Index — the unfused suspension point).
+                    self.counters.dispatches += 3;
+                    let frame = self.frames.last_mut().unwrap();
+                    let accv = load_local(frame, acc, line)?;
+                    let objv = load_local(frame, obj, line)?;
+                    let idxv = load_local(frame, idx, line)?;
+                    match objv {
+                        Value::Array(arr) => {
+                            let i = idxv.as_index()?;
+                            let elem = {
+                                let b = arr.borrow();
+                                match b.get(i) {
+                                    Some(&v) => v,
+                                    None => {
+                                        vm_err!("index {i} out of range (len {})", b.len())
+                                    }
+                                }
+                            };
+                            self.counters.dispatches += 2; // Add; Store
+                            let v = self.arith(&Op::Add, accv, Value::Float(elem), line)?;
+                            store_local(self.frames.last_mut().unwrap(), acc, v);
+                        }
+                        Value::External(slot) => {
+                            let i = idxv.as_index()?;
+                            let len = self.ext_lens[slot];
+                            if i >= len {
+                                vm_err!("external index {i} out of range (len {len})");
+                            }
+                            self.counters.ext_reads += 1;
+                            self.pending = Some(Pending::ReadValue);
+                            self.fused_accum =
+                                Some(FusedAccum { slot: acc, acc: accv, line });
+                            return Ok(Outcome::ExtRead { slot, index: i });
+                        }
+                        other => vm_err!("cannot index {}", other.type_name()),
+                    }
                 }
             }
         }
@@ -493,7 +638,7 @@ impl Interp {
         })
     }
 
-    fn pure_builtin(&mut self, b: Builtin, args: Vec<Value>, line: usize) -> Result<Value> {
+    fn pure_builtin(&mut self, b: Builtin, args: &[Value], line: usize) -> Result<Value> {
         let flop = |me: &mut Self| me.counters.flops += 1;
         Ok(match b {
             Builtin::Len => match &args[0] {

@@ -30,6 +30,7 @@ pub mod ast;
 pub mod builtins;
 pub mod bytecode;
 pub mod compiler;
+pub mod fuse;
 pub mod interp;
 pub mod lexer;
 pub mod parser;
@@ -65,9 +66,28 @@ impl Program {
 }
 
 /// Convenience: parse + compile kernel source, entry = last `def` (or the
-/// `def` named `entry` if given).
+/// `def` named `entry` if given). Superinstruction fusion ([`fuse`]) runs
+/// by default; set the `MICROCORE_NO_FUSE` environment variable to disable
+/// it process-wide (debugging aid — semantics are identical either way).
 pub fn compile_source(src: &str, entry: Option<&str>) -> Result<Program> {
+    let mut p = compile_source_unfused(src, entry)?;
+    if !fuse_disabled() {
+        fuse::fuse_program(&mut p);
+    }
+    Ok(p)
+}
+
+/// As [`compile_source`] but never fuses — the reference semantics the
+/// differential tests compare against.
+pub fn compile_source_unfused(src: &str, entry: Option<&str>) -> Result<Program> {
     let toks = lexer::lex(src)?;
     let module = parser::parse(&toks)?;
     compiler::compile_module(&module, entry)
+}
+
+fn fuse_disabled() -> bool {
+    match std::env::var_os("MICROCORE_NO_FUSE") {
+        Some(v) => v != "0",
+        None => false,
+    }
 }

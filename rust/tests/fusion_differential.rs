@@ -1,0 +1,351 @@
+//! Differential tests: fused superinstructions and the engine's inline
+//! prefetch-hit fast path must be *bit-identical* to the reference
+//! semantics — same results, print logs, cost counters, suspension
+//! sequences, virtual times (stall/finish) and engine traces.
+//!
+//! The fused compiler path is `vm::compile_source`; the reference is
+//! `vm::compile_source_unfused`. The engine fast path toggles via
+//! `Engine::set_fast_path`.
+
+use std::rc::Rc;
+
+use microcore::coordinator::{
+    Access, ArgSpec, Kernel, OffloadOptions, PrefetchSpec, Session, TransferMode,
+};
+use microcore::device::Technology;
+use microcore::vm::{
+    compile_source, compile_source_unfused, CostCounters, Interp, Outcome, Value,
+};
+
+// ---- kernel corpus (from vm::interp tests and examples/) ----------------
+
+const LISTING1: &str = r#"
+def mykernel(a, b):
+    ret_data = [0.0] * len(a)
+    i = 0
+    while i < len(a):
+        ret_data[i] = a[i] + b[i]
+        i += 1
+    return ret_data
+"#;
+
+const FIB: &str = r#"
+def fib(n):
+    if n < 2:
+        return n
+    return fib(n - 1) + fib(n - 2)
+
+def kernel(n):
+    return fib(n)
+"#;
+
+const RANGE_AUG: &str = r#"
+def kernel(n):
+    total = 0
+    for i in range(1, n + 1):
+        total += i
+    return total
+"#;
+
+const BREAK_CONTINUE: &str = r#"
+def kernel():
+    s = 0
+    for i in range(0, 100, 7):
+        if i == 35:
+            continue
+        if i > 70:
+            break
+        s += i
+    return s
+"#;
+
+const SPIN: &str = r#"
+def spin(n):
+    s = 0
+    i = 0
+    while i < n:
+        s += i
+        i += 1
+    return s
+"#;
+
+const STREAM: &str = r#"
+def stream(x):
+    s = 0.0
+    i = 0
+    while i < len(x):
+        s += x[i]
+        i += 1
+    return s
+"#;
+
+const SCALE_MUT: &str = r#"
+def scale(a):
+    i = 0
+    while i < len(a):
+        a[i] = a[i] * 2.0 + core_id()
+        i += 1
+    return 0
+"#;
+
+const PRINTY: &str = r#"
+def kernel(n):
+    s = 0.0
+    i = 0
+    while i < n:
+        s += float(i)
+        if i == 2:
+            print(s)
+        i += 1
+    print('done')
+    return s
+"#;
+
+fn assert_counters_eq(a: CostCounters, b: CostCounters, what: &str) {
+    assert_eq!(a.dispatches, b.dispatches, "{what}: dispatches");
+    assert_eq!(a.flops, b.flops, "{what}: flops");
+    assert_eq!(a.ext_reads, b.ext_reads, "{what}: ext_reads");
+    assert_eq!(a.ext_writes, b.ext_writes, "{what}: ext_writes");
+    assert_eq!(a.tensor_calls, b.tensor_calls, "{what}: tensor_calls");
+}
+
+/// Drive one interpreter to completion, answering external reads with
+/// `read(slot, index)` and recording every suspension event plus the
+/// counters at each suspension boundary (the engine charges virtual time
+/// from exactly these deltas, so equal snapshots ⇒ equal virtual time).
+fn drive(
+    src: &str,
+    fused: bool,
+    args: Vec<Value>,
+    ext_lens: Vec<usize>,
+    read: impl Fn(usize, usize) -> f64,
+) -> (Value, CostCounters, Vec<String>, Vec<String>) {
+    let p = if fused {
+        compile_source(src, None).unwrap()
+    } else {
+        compile_source_unfused(src, None).unwrap()
+    };
+    let mut vm = Interp::new(Rc::new(p), 0, 4, args, ext_lens).unwrap();
+    let mut events = Vec::new();
+    let mut out = vm.run().unwrap();
+    loop {
+        let c = vm.counters();
+        match out {
+            Outcome::Done(v) => {
+                events.push(format!("done d={} f={}", c.dispatches, c.flops));
+                return (v, c, vm.print_log().to_vec(), events);
+            }
+            Outcome::ExtRead { slot, index } => {
+                events.push(format!("read {slot}[{index}] d={} f={}", c.dispatches, c.flops));
+                out = vm.resume(Value::Float(read(slot, index))).unwrap();
+            }
+            Outcome::ExtWrite { slot, index, value } => {
+                events.push(format!(
+                    "write {slot}[{index}]={value} d={} f={}",
+                    c.dispatches, c.flops
+                ));
+                out = vm.resume(Value::None).unwrap();
+            }
+            Outcome::Tensor(_) => {
+                events.push(format!("tensor d={}", c.dispatches));
+                out = vm.resume(Value::Float(0.0)).unwrap();
+            }
+        }
+    }
+}
+
+fn assert_same_run(
+    src: &str,
+    args: Vec<Value>,
+    ext_lens: Vec<usize>,
+    read: impl Fn(usize, usize) -> f64 + Copy,
+    what: &str,
+) {
+    let (va, ca, pa, ea) = drive(src, false, args.clone(), ext_lens.clone(), read);
+    let (vb, cb, pb, eb) = drive(src, true, args, ext_lens, read);
+    assert!(va.py_eq(&vb), "{what}: results differ: {va:?} vs {vb:?}");
+    assert_counters_eq(ca, cb, what);
+    assert_eq!(pa, pb, "{what}: print logs differ");
+    assert_eq!(ea, eb, "{what}: suspension event sequences differ");
+}
+
+#[test]
+fn pure_kernels_identical_fused_vs_unfused() {
+    let a = Value::array((0..10).map(f64::from).collect());
+    let b = Value::array(vec![100.0; 10]);
+    assert_same_run(LISTING1, vec![a, b], vec![], |_, _| 0.0, "listing1");
+    assert_same_run(FIB, vec![Value::Int(12)], vec![], |_, _| 0.0, "fib");
+    assert_same_run(RANGE_AUG, vec![Value::Int(100)], vec![], |_, _| 0.0, "range_aug");
+    assert_same_run(BREAK_CONTINUE, vec![], vec![], |_, _| 0.0, "break_continue");
+    assert_same_run(SPIN, vec![Value::Int(5000)], vec![], |_, _| 0.0, "spin");
+    assert_same_run(PRINTY, vec![Value::Int(10)], vec![], |_, _| 0.0, "printy");
+}
+
+#[test]
+fn external_stream_identical_suspension_sequence() {
+    // `s += x[i]` fuses to AccumIndexLLL, which must suspend at the same
+    // point, with the same counters, and complete the add on resume.
+    assert_same_run(
+        STREAM,
+        vec![Value::External(0)],
+        vec![257],
+        |_, i| (i as f64) * 0.5 - 3.0,
+        "stream_external",
+    );
+}
+
+#[test]
+fn external_write_kernel_identical() {
+    // Reads then writes through an external mutable argument.
+    let vals = std::cell::RefCell::new(vec![1.0f64; 64]);
+    let read = |_s: usize, i: usize| vals.borrow()[i];
+    let (va, ca, _, ea) =
+        drive(SCALE_MUT, false, vec![Value::External(0)], vec![64], read);
+    let (vb, cb, _, eb) =
+        drive(SCALE_MUT, true, vec![Value::External(0)], vec![64], read);
+    assert!(va.py_eq(&vb));
+    assert_counters_eq(ca, cb, "scale_mut");
+    assert_eq!(ea, eb, "scale_mut: event sequences differ");
+}
+
+#[test]
+fn fused_spin_result_matches_closed_form() {
+    let (v, c, _, _) = drive(SPIN, true, vec![Value::Int(1000)], vec![], |_, _| 0.0);
+    assert_eq!(v.as_i64().unwrap(), 999 * 1000 / 2);
+    // dispatch counts are charged at the unfused rate by design
+    let (_, cu, _, _) = drive(SPIN, false, vec![Value::Int(1000)], vec![], |_, _| 0.0);
+    assert_eq!(c.dispatches, cu.dispatches);
+}
+
+// ---- engine-level differential runs -------------------------------------
+
+const SUM_SRC: &str = r#"
+def mykernel(a, b):
+    ret_data = [0.0] * len(a)
+    i = 0
+    while i < len(a):
+        ret_data[i] = a[i] + b[i]
+        i += 1
+    return ret_data
+"#;
+
+/// Run one offload and capture everything observable about it.
+struct RunCapture {
+    launched_at: u64,
+    finished_at: u64,
+    per_core: Vec<(usize, u64, u64, u64, usize, u64)>,
+    counters: Vec<(u64, u64, u64, u64)>,
+    values: Vec<Vec<f64>>,
+    trace: String,
+    host_data: Vec<f32>,
+}
+
+fn run_offload(fuse: bool, fast_path: bool, mode: &str) -> RunCapture {
+    let mut sess = Session::builder(Technology::epiphany3())
+        .seed(7)
+        .trace(4096)
+        .build()
+        .unwrap();
+    sess.engine_mut().set_fast_path(fast_path);
+    let n = 3200usize;
+    let a: Vec<f32> = (0..n).map(|i| i as f32 * 0.25).collect();
+    let b: Vec<f32> = vec![1.5; n];
+    let ra = sess.alloc_host_f32("a", &a).unwrap();
+    let rb = sess.alloc_host_f32("b", &b).unwrap();
+    let (name, src) = match mode {
+        "stream" => ("stream", STREAM),
+        _ => ("sum", SUM_SRC),
+    };
+    let program = if fuse {
+        compile_source(src, None).unwrap()
+    } else {
+        compile_source_unfused(src, None).unwrap()
+    };
+    let kernel = Kernel { name: name.into(), program: Rc::new(program) };
+    let args: Vec<ArgSpec> = if mode == "stream" {
+        vec![ArgSpec::sharded(ra)]
+    } else {
+        vec![ArgSpec::sharded(ra), ArgSpec::sharded_mut(rb)]
+    };
+    let opts = match mode {
+        "ondemand" => OffloadOptions::default().transfer(TransferMode::OnDemand),
+        "eager" => OffloadOptions::default().transfer(TransferMode::Eager),
+        _ => OffloadOptions::default().prefetch(PrefetchSpec {
+            buffer_size: 40,
+            elems_per_fetch: 20,
+            distance: 20,
+            access: Access::ReadOnly,
+        }),
+    };
+    let res = sess.offload(&kernel, &args, opts).unwrap();
+    RunCapture {
+        launched_at: res.launched_at,
+        finished_at: res.finished_at,
+        per_core: res
+            .reports
+            .iter()
+            .map(|r| {
+                (r.core, r.finished_at, r.stall, r.requests, r.peak_cells, r.cell_stalls)
+            })
+            .collect(),
+        counters: res
+            .reports
+            .iter()
+            .map(|r| {
+                (
+                    r.counters.dispatches,
+                    r.counters.flops,
+                    r.counters.ext_reads,
+                    r.counters.ext_writes,
+                )
+            })
+            .collect(),
+        values: res
+            .reports
+            .iter()
+            .map(|r| match &r.value {
+                Value::Array(a) => a.borrow().clone(),
+                v => vec![v.as_f64().unwrap_or(f64::NAN)],
+            })
+            .collect(),
+        trace: sess.engine().trace().render(),
+        host_data: sess.read(rb).unwrap(),
+    }
+}
+
+fn assert_same_capture(x: &RunCapture, y: &RunCapture, what: &str) {
+    assert_eq!(x.launched_at, y.launched_at, "{what}: launch time");
+    assert_eq!(x.finished_at, y.finished_at, "{what}: finish time");
+    assert_eq!(x.per_core, y.per_core, "{what}: per-core times/stalls/requests");
+    assert_eq!(x.counters, y.counters, "{what}: per-core counters");
+    assert_eq!(x.values, y.values, "{what}: per-core results");
+    assert_eq!(x.trace, y.trace, "{what}: engine traces");
+    assert_eq!(x.host_data, y.host_data, "{what}: host-side data after run");
+}
+
+#[test]
+fn engine_fused_vs_unfused_identical_across_modes() {
+    for mode in ["ondemand", "eager", "prefetch", "stream"] {
+        let plain = run_offload(false, true, mode);
+        let fused = run_offload(true, true, mode);
+        assert_same_capture(&plain, &fused, mode);
+    }
+}
+
+#[test]
+fn engine_fast_path_identical_virtual_times() {
+    for mode in ["ondemand", "prefetch", "stream"] {
+        let slow = run_offload(true, false, mode);
+        let fast = run_offload(true, true, mode);
+        assert_same_capture(&slow, &fast, mode);
+    }
+}
+
+#[test]
+fn engine_all_four_combinations_agree_on_prefetch() {
+    let base = run_offload(false, false, "prefetch");
+    for (fuse, fast) in [(false, true), (true, false), (true, true)] {
+        let other = run_offload(fuse, fast, "prefetch");
+        assert_same_capture(&base, &other, "prefetch combinations");
+    }
+}

@@ -1,6 +1,9 @@
 //! The AOT interchange path end-to-end: python-lowered HLO text → PJRT →
 //! numerics identical to the engine's native fallbacks and to hand
-//! computation. Self-skips when `make artifacts` has not run.
+//! computation. Self-skips when `make artifacts` has not run; compiled
+//! out entirely without the `xla` feature, where the stub `PjrtContext`
+//! cannot be constructed even when artifacts exist.
+#![cfg(feature = "xla")]
 
 use microcore::coordinator::{ArgSpec, OffloadOptions, Session, TransferMode};
 use microcore::device::Technology;

@@ -1,0 +1,125 @@
+//! Minimal offline `anyhow` stand-in.
+//!
+//! The real crate is not in the offline set; this shim implements the
+//! subset the workspace uses — an erased error type with `Display`/`Debug`,
+//! a `Result` alias suitable as a `main` return type, blanket conversion
+//! from any `std::error::Error`, and the `anyhow!` / `bail!` / `ensure!`
+//! macros. API-compatible for those uses, nothing more.
+
+use std::fmt;
+
+/// Type-erased error. Holds any `std::error::Error` (or an ad-hoc
+/// message built by [`anyhow!`]).
+pub struct Error {
+    inner: Box<dyn std::error::Error + Send + Sync + 'static>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { inner: Box::new(MessageError(message.to_string())) }
+    }
+
+    /// Borrow the underlying error.
+    pub fn as_dyn(&self) -> &(dyn std::error::Error + 'static) {
+        &*self.inner
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.inner, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `fn main() -> anyhow::Result<()>` prints errors via Debug; show
+        // the human-readable message plus the source chain, like anyhow.
+        write!(f, "{}", self.inner)?;
+        let mut source = self.inner.source();
+        if source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(s) = source {
+            write!(f, "\n    {s}")?;
+            source = s.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { inner: Box::new(e) }
+    }
+}
+
+/// Ad-hoc message error (what `anyhow!` produces).
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for MessageError {}
+
+/// `Result` with the erased error as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("boom {}", 42)
+    }
+
+    #[test]
+    fn macros_and_conversions() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "boom 42");
+        let io: Error =
+            std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(io.to_string().contains("gone"));
+        let ok: Result<()> = (|| {
+            ensure!(1 + 1 == 2, "math broke");
+            Ok(())
+        })();
+        assert!(ok.is_ok());
+    }
+}

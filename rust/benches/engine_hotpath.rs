@@ -22,9 +22,12 @@
 
 use microcore::bench_support::{banner, time_wall, JsonReport, Measurement};
 use microcore::coordinator::{
-    Access, ArgSpec, OffloadOptions, PrefetchSpec, Session, TransferMode,
+    Access, ArgSpec, OffloadOptions, PrefetchSpec, Session, ShardPolicy, TransferMode,
 };
 use microcore::device::Technology;
+use microcore::memory::CacheSpec;
+use microcore::metrics::report::cache_table;
+use microcore::workloads::{sharded_normalize, sharded_sum};
 
 const SPIN: &str = r#"
 def spin(n):
@@ -126,7 +129,70 @@ fn main() -> anyhow::Result<()> {
     case(&m, Some(n as f64 / m.mean()));
     println!("  -> ~{:.2} M element-reads/s via prefetch", n as f64 / m.mean() / 1e6);
 
-    // 4. Tensor-builtin (PJRT) invocation rate, if artifacts exist and
+    // 4. Sharded multi-core scan: block-cyclic plan with gather/scatter
+    // staging and write-back merge, streamed via pre-fetch.
+    let m = time_wall("sharded_scan_16core", warmup, iters, || {
+        let mut sess = Session::builder(Technology::epiphany3()).seed(1).build().unwrap();
+        let data: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let x = sess.alloc_host_f32("x", &data).unwrap();
+        let cores: Vec<usize> = (0..16).collect();
+        sharded_normalize(
+            &mut sess,
+            x,
+            ShardPolicy::BlockCyclic { block_elems: 250 },
+            &cores,
+            0.5,
+            2.0,
+            OffloadOptions::default().prefetch(PrefetchSpec {
+                buffer_size: 240,
+                elems_per_fetch: 120,
+                distance: 120,
+                access: Access::Mutable,
+            }),
+        )
+        .unwrap();
+    });
+    case(&m, Some(n as f64 / m.mean()));
+    println!("  -> ~{:.2} M elements/s through the shard planner", n as f64 / m.mean() / 1e6);
+
+    // 5. Cached epochs: repeated passes over a Host dataset fronted by
+    // the shared-window segment cache (epoch 2+ skips host staging).
+    let epochs = 3usize;
+    let cached_run = |report: bool| {
+        let mut sess = Session::builder(Technology::epiphany3()).seed(1).build().unwrap();
+        let data: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let spec = CacheSpec { segment_elems: 1000, capacity_segments: 16 };
+        let x = sess.alloc_host_cached_f32("x", &data, spec).unwrap();
+        let cores: Vec<usize> = (0..16).collect();
+        for _ in 0..epochs {
+            sharded_sum(
+                &mut sess,
+                x,
+                ShardPolicy::Block,
+                &cores,
+                OffloadOptions::default().prefetch(PrefetchSpec {
+                    buffer_size: 240,
+                    elems_per_fetch: 120,
+                    distance: 120,
+                    access: Access::ReadOnly,
+                }),
+            )
+            .unwrap();
+        }
+        if report {
+            let c = sess.cache_counters(x).unwrap().unwrap();
+            println!("{}", cache_table("cached_epochs image-store cache", &c).render());
+        }
+    };
+    let m = time_wall("cached_epochs", warmup, iters, || cached_run(false));
+    case(&m, Some((n * epochs) as f64 / m.mean()));
+    println!(
+        "  -> ~{:.2} M element-reads/s over {epochs} epochs",
+        (n * epochs) as f64 / m.mean() / 1e6
+    );
+    cached_run(true); // one uncounted run to surface the hit/miss audit
+
+    // 6. Tensor-builtin (PJRT) invocation rate, if artifacts exist and
     // the build carries the real PJRT backend (stub builds would error
     // at session construction).
     if cfg!(feature = "xla") && std::path::Path::new("artifacts/manifest.json").exists() {

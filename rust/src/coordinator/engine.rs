@@ -36,6 +36,17 @@
 //! global time order — the FCFS-equals-virtual-time exactness invariant
 //! above. [`Engine::set_fast_path`] disables the inline path (the
 //! differential tests compare both).
+//!
+//! **Cache-aware transfer costing.** Element-request service costs are no
+//! longer fixed at a variable's home level: before servicing a read/write
+//! the engine probes [`MemRegistry::access_level`] for the exact range,
+//! so a range resident in a [`crate::memory::SharedCacheKind`] is charged
+//! at `Shared` (no host staging) while a miss is charged at the backing
+//! level — and the probe happens *before* the data access, because the
+//! access itself refills the cache. Numerics are unaffected: the cache is
+//! coherent by construction (write-back on evict, host-side flush/patch),
+//! so cached and uncached runs produce bit-identical values and differ
+//! only in virtual time.
 
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -46,7 +57,7 @@ use crate::device::{ComputeModel, PowerModel, Scratchpad, Technology};
 use crate::error::{Error, Result};
 use crate::memory::{DataRef, Level, MemRegistry};
 use crate::runtime::ModelExecutor;
-use crate::sim::{Rng, Time, Trace};
+use crate::sim::{CacheCounters, Rng, Time, Trace};
 use crate::vm::{Builtin, CostCounters, Interp, Outcome, TensorOp, Value};
 
 use super::marshal::BoundArg;
@@ -82,6 +93,11 @@ pub type OffloadOutcome = OffloadResult;
 #[derive(Debug)]
 struct ExtBind {
     dref: DataRef,
+    /// The variable's *home* level at bind time. Used for fast-path
+    /// legality (`CoreLocal` short-circuit) and as the cost level for the
+    /// bulk tensor-builtin path; element-request service costs are
+    /// re-probed per access via [`MemRegistry::access_level`] so a
+    /// shared-window cache hit is charged at `Shared` cost instead.
     level: Level,
     access: Access,
     pf: Option<PrefetchState>,
@@ -222,6 +238,12 @@ impl Engine {
         &mut self.registry
     }
 
+    /// Aggregate shared-window cache accounting across all live variables
+    /// (all-zero when none are cache-fronted).
+    pub fn cache_counters(&self) -> CacheCounters {
+        self.registry.total_cache_counters()
+    }
+
     /// Host service (link stats, bandwidth degradation knobs).
     pub fn service_mut(&mut self) -> &mut HostService {
         &mut self.service
@@ -298,6 +320,11 @@ impl Engine {
                         let info = self.registry.info(dref)?;
                         let bytes = dref.bytes();
                         if spad.alloc(bytes).is_ok() {
+                            // Cost level probed *before* the read: the read
+                            // itself may pull the range into a fronting
+                            // cache, and this launch must pay the cost of
+                            // where the data was when it was asked for.
+                            let lvl = self.registry.access_level(dref, 0, dref.len)?;
                             // Read into the reusable marshalling scratch
                             // (no per-argument Vec<f32> temporary), then
                             // widen into the Value's own storage.
@@ -305,7 +332,7 @@ impl Engine {
                             self.scratch_m.resize(dref.len, 0.0);
                             self.registry.read(dref, Some(cid), 0, &mut self.scratch_m)?;
                             let done =
-                                self.service.eager_push(launch, info.level, bytes as u64);
+                                self.service.eager_push(launch, lvl, bytes as u64);
                             self.stats.eager_bytes += bytes as u64;
                             start = start.max(done);
                             let arr: Vec<f64> =
@@ -623,9 +650,13 @@ impl Engine {
             let wire = req.kind.wire_bytes();
             match c.channel.issue(req)? {
                 Some(h) => {
+                    // Probe the servicing level before the read: the read
+                    // refills a fronting cache on miss, and the cost must
+                    // reflect pre-access residency.
+                    let lvl = registry.access_level(b.dref, start, len)?;
                     let mut data = vec![0.0f32; len];
                     registry.read(b.dref, Some(c.id), start, &mut data)?;
-                    let ready = service.service(at, b.level, wire);
+                    let ready = service.service(at, lvl, wire);
                     c.channel.begin_service(h)?;
                     c.channel.complete(h, ready, data)?;
                     pf.on_issued(h, start, len);
@@ -756,9 +787,12 @@ impl Engine {
         let wire = req.kind.wire_bytes();
         match c.channel.issue(req)? {
             Some(h) => {
+                // Pre-access residency decides the cost (see module docs);
+                // the read below may refill a fronting cache.
+                let lvl = self.registry.access_level(b.dref, index, 1)?;
                 let mut data = [0.0f32];
                 self.registry.read(b.dref, Some(c.id), index, &mut data)?;
-                let ready = self.service.service(c.clock, b.level, wire);
+                let ready = self.service.service(c.clock, lvl, wire);
                 c.channel.begin_service(h)?;
                 c.channel.complete(h, ready, data.to_vec())?;
                 c.status = Status::Waiting { handle: h, ctx: WaitCtx::OnDemandRead, ready_at: ready };
@@ -849,9 +883,12 @@ impl Engine {
         let prefetched = b.pf.is_some();
         match c.channel.issue(req)? {
             Some(h) => {
+                // Write-back caches absorb writes to resident segments at
+                // shared-window cost; probe before the write allocates.
+                let lvl = self.registry.access_level(b.dref, index, 1)?;
                 // Atomic per-element write applied in service order.
                 self.registry.write(b.dref, Some(c.id), index, &[value as f32])?;
-                let ready = self.service.service(c.clock, b.level, wire);
+                let ready = self.service.service(c.clock, lvl, wire);
                 c.channel.begin_service(h)?;
                 c.channel.complete(h, ready, Vec::new())?;
                 if prefetched {

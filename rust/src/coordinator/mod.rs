@@ -19,6 +19,10 @@
 //!   the host service threads, the shared link, and PJRT tensor-builtin
 //!   execution, producing both *numerics* (real data moves, the model
 //!   really trains) and *virtual-time* measurements (the paper's figures).
+//! * **Sharding** ([`shard`]) — the multi-core offload planner: an
+//!   explicit partition of a variable over N cores (block or block-cyclic
+//!   with gather/scatter staging and write-back merge), the ownership
+//!   model every later scaling layer builds on.
 
 pub mod engine;
 pub mod marshal;
@@ -26,6 +30,7 @@ pub mod offload;
 pub mod prefetch;
 pub mod service;
 pub mod session;
+pub mod shard;
 
 pub use engine::{Engine, EngineStats, OffloadOutcome};
 pub use marshal::{ArgSpec, BoundArg, PrefetchChoice};
@@ -33,6 +38,7 @@ pub use offload::{Kernel, KernelRegistry, OffloadOptions, OffloadResult};
 pub use prefetch::{PrefetchSpec, PrefetchState};
 pub use service::HostService;
 pub use session::{Session, SessionBuilder};
+pub use shard::{ShardAssignment, ShardPlan, ShardPolicy};
 
 /// How kernel arguments travel to the device (§3.1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -21,7 +21,8 @@
 use crate::device::Technology;
 use crate::error::{Error, Result};
 use crate::memory::{
-    DataRef, FileKind, HostKind, MicrocoreKind, ProceduralKind, SharedKind, SinkKind,
+    CacheSpec, DataRef, FileKind, HostKind, MemKind, MicrocoreKind, ProceduralKind,
+    SharedCacheKind, SharedKind, SinkKind,
 };
 use crate::runtime::{ModelExecutor, PjrtContext};
 use crate::sim::Time;
@@ -196,6 +197,55 @@ impl Session {
     /// the full-size regime).
     pub fn alloc_sink_f32(&mut self, name: &str, len: usize) -> Result<DataRef> {
         Ok(self.engine.registry_mut().register(name, Box::new(SinkKind::new(len))))
+    }
+
+    /// Allocate host memory fronted by a shared-window segment cache
+    /// ([`SharedCacheKind`]): the first device pass streams across the
+    /// off-chip boundary; repeated passes are serviced at shared-window
+    /// cost. The cache budget must fit the technology's window.
+    pub fn alloc_host_cached_f32(
+        &mut self,
+        name: &str,
+        data: &[f32],
+        spec: CacheSpec,
+    ) -> Result<DataRef> {
+        self.alloc_cached_kind(name, Box::new(HostKind::from_vec(data.to_vec())), spec)
+    }
+
+    /// Front an arbitrary kind with a shared-window segment cache (the
+    /// general form of [`Session::alloc_host_cached_f32`] — e.g. a
+    /// [`FileKind`] archive too large for board memory).
+    pub fn alloc_cached_kind(
+        &mut self,
+        name: &str,
+        inner: Box<dyn MemKind>,
+        spec: CacheSpec,
+    ) -> Result<DataRef> {
+        if spec.budget_bytes() > self.tech.shared_window {
+            return Err(Error::Memory(format!(
+                "cache budget {} B exceeds the {} B shared window",
+                spec.budget_bytes(),
+                self.tech.shared_window
+            )));
+        }
+        let kind = SharedCacheKind::new(inner, spec)?;
+        Ok(self.engine.registry_mut().register(name, Box::new(kind)))
+    }
+
+    /// Hit/miss accounting for one variable (`None` unless cache-fronted).
+    pub fn cache_counters(&self, dref: DataRef) -> Result<Option<crate::sim::CacheCounters>> {
+        self.engine.registry().cache_counters(dref)
+    }
+
+    /// Aggregate cache accounting over every live variable.
+    pub fn total_cache_counters(&self) -> crate::sim::CacheCounters {
+        self.engine.cache_counters()
+    }
+
+    /// Release a variable; later accesses through its references error.
+    /// (The shard planner uses this to drop gather staging after a run.)
+    pub fn release(&mut self, dref: DataRef) -> Result<()> {
+        self.engine.registry_mut().release(dref)
     }
 
     /// Allocate a file-backed variable (the extensibility kind of §4).

@@ -1,0 +1,357 @@
+//! The sharded offload planner: one logical kernel over N cores.
+//!
+//! The paper distributes data by handing each core a contiguous window of
+//! the argument (`DataRef::shards`, ePython's pixel distribution). That is
+//! one point in a bigger design space: load balance and locality often
+//! want **block-cyclic** decomposition (ePython's own successors and the
+//! Vipera studies both shard this way), where fixed-size blocks are dealt
+//! round-robin so hot regions spread across cores. A [`ShardPlan`] makes
+//! the decomposition an explicit, inspectable object:
+//!
+//! * [`ShardPolicy::Block`] — contiguous near-equal windows, zero-copy:
+//!   each core's shard is a [`DataRef`] sub-view of the base variable.
+//! * [`ShardPolicy::BlockCyclic`] — blocks dealt round-robin. A core's
+//!   shard is no longer contiguous, so [`ShardPlan::execute`] **gathers**
+//!   each core's ranges into a per-core staging variable at launch
+//!   (host-side, the registry is the single source of truth), offloads,
+//!   and — for mutable shards — **scatters** the staging contents back
+//!   into the base variable afterwards (write-back merge). Staging
+//!   variables are released before `execute` returns.
+//!
+//! Ownership model: ranges of a plan are disjoint and cover the base view
+//! exactly once, so every element has exactly one writer and the merge
+//! order across cores is irrelevant — N-core runs produce bit-identical
+//! results to the 1-core reference for element-wise kernels (enforced by
+//! `tests/sharded_cache.rs`). Later scaling layers (async batching,
+//! multi-device) extend this planner rather than re-deriving per-core
+//! windows at call sites.
+//!
+//! The planner composes with the rest of the stack: shards work in any
+//! [`super::TransferMode`] and pre-fetch annotations apply per shard. A
+//! base variable fronted by a [`crate::memory::SharedCacheKind`] serves
+//! repeated **block**-sharded passes out of the shared window (block
+//! shards are zero-copy views of the base, so device traffic reaches the
+//! cache). Block-*cyclic* shards stream their host-side staging copies
+//! instead — correct, but cache-bypassing: pick `Block` when combining
+//! sharding with a cached base.
+
+use crate::error::{Error, Result};
+use crate::memory::{DataRef, HostKind};
+
+use super::marshal::{ArgSpec, PrefetchChoice};
+use super::offload::{Kernel, OffloadOptions, OffloadResult};
+use super::session::Session;
+use super::Access;
+
+/// How a variable is partitioned over the participating cores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardPolicy {
+    /// One contiguous, near-equal window per core (earlier cores take the
+    /// remainder — the classic ePython distribution). Zero-copy.
+    Block,
+    /// Fixed-size blocks dealt round-robin across cores. Balances skewed
+    /// access cost at the price of gather/scatter staging.
+    BlockCyclic {
+        /// Elements per dealt block (must be positive).
+        block_elems: usize,
+    },
+}
+
+/// One core's share of a plan: view-relative `(offset, len)` ranges of the
+/// base variable, in stream order. The core sees them concatenated as one
+/// local view.
+#[derive(Debug, Clone)]
+pub struct ShardAssignment {
+    /// Disjoint ranges owned by this core, ascending.
+    pub ranges: Vec<(usize, usize)>,
+}
+
+impl ShardAssignment {
+    /// Total elements this core owns.
+    pub fn elems(&self) -> usize {
+        self.ranges.iter().map(|r| r.1).sum()
+    }
+
+    /// Whether the shard is a single contiguous window (no staging
+    /// needed).
+    pub fn is_contiguous(&self) -> bool {
+        self.ranges.len() <= 1
+    }
+}
+
+/// A partition of one base [`DataRef`] over N cores (module docs).
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    base: DataRef,
+    policy: ShardPolicy,
+    assignments: Vec<ShardAssignment>,
+}
+
+impl ShardPlan {
+    /// Partition `base` over `cores` cores under `policy`.
+    pub fn new(base: DataRef, cores: usize, policy: ShardPolicy) -> Result<ShardPlan> {
+        if cores == 0 {
+            return Err(Error::Coordinator("shard plan requires at least one core".into()));
+        }
+        let assignments = match policy {
+            ShardPolicy::Block => {
+                let per = base.len / cores;
+                let rem = base.len % cores;
+                let mut out = Vec::with_capacity(cores);
+                let mut off = 0;
+                for i in 0..cores {
+                    let l = per + usize::from(i < rem);
+                    out.push(ShardAssignment { ranges: vec![(off, l)] });
+                    off += l;
+                }
+                out
+            }
+            ShardPolicy::BlockCyclic { block_elems } => {
+                if block_elems == 0 {
+                    return Err(Error::Coordinator(
+                        "block-cyclic sharding requires a positive block size".into(),
+                    ));
+                }
+                let mut out = vec![ShardAssignment { ranges: Vec::new() }; cores];
+                let mut off = 0;
+                let mut turn = 0usize;
+                while off < base.len {
+                    let l = block_elems.min(base.len - off);
+                    out[turn % cores].ranges.push((off, l));
+                    off += l;
+                    turn += 1;
+                }
+                out
+            }
+        };
+        Ok(ShardPlan { base, policy, assignments })
+    }
+
+    /// The base view this plan partitions.
+    pub fn base(&self) -> DataRef {
+        self.base
+    }
+
+    /// The decomposition policy.
+    pub fn policy(&self) -> ShardPolicy {
+        self.policy
+    }
+
+    /// Per-core assignments (index = position among participating cores).
+    pub fn assignments(&self) -> &[ShardAssignment] {
+        &self.assignments
+    }
+
+    /// Number of participating cores.
+    pub fn cores(&self) -> usize {
+        self.assignments.len()
+    }
+
+    /// Run `kernel` with this plan's shard as the **first** kernel
+    /// argument (`extra` args follow it), on the cores named by
+    /// `options.cores` (default: all device cores; the count must match
+    /// the plan's).
+    ///
+    /// Contiguous shards bind as zero-copy sub-views. Non-contiguous
+    /// shards are gathered into per-core staging variables before launch
+    /// and — when `access` is [`Access::Mutable`] — scatter-merged back
+    /// into the base variable after completion; staging is always
+    /// released. Gather/scatter are host-side registry moves (free in
+    /// virtual time): the *modelled* traffic is exactly what the cores
+    /// pull through the channels, which is what the paper times.
+    pub fn execute(
+        &self,
+        session: &mut Session,
+        kernel: &Kernel,
+        access: Access,
+        prefetch: PrefetchChoice,
+        extra: &[ArgSpec],
+        options: OffloadOptions,
+    ) -> Result<OffloadResult> {
+        let core_ids: Vec<usize> = match &options.cores {
+            Some(ids) => ids.clone(),
+            None => (0..session.tech().cores).collect(),
+        };
+        if core_ids.len() != self.assignments.len() {
+            return Err(Error::Coordinator(format!(
+                "shard plan partitions over {} cores but the offload runs on {}",
+                self.assignments.len(),
+                core_ids.len()
+            )));
+        }
+        let base_name =
+            session.engine().registry().name(self.base).unwrap_or("shard").to_string();
+
+        // Bind: zero-copy sub-views where contiguous, gather staging
+        // otherwise.
+        let mut drefs = Vec::with_capacity(core_ids.len());
+        let mut staging: Vec<Option<DataRef>> = Vec::with_capacity(core_ids.len());
+        for (ci, asg) in self.assignments.iter().enumerate() {
+            if let [(off, len)] = asg.ranges[..] {
+                drefs.push(self.base.slice(off, len));
+                staging.push(None);
+            } else {
+                let mut buf: Vec<f32> = Vec::with_capacity(asg.elems());
+                for &(off, len) in &asg.ranges {
+                    buf.extend(session.read(self.base.slice(off, len))?);
+                }
+                let sref = session
+                    .engine_mut()
+                    .registry_mut()
+                    .register(format!("{base_name}.c{ci}"), Box::new(HostKind::from_vec(buf)));
+                drefs.push(sref);
+                staging.push(Some(sref));
+            }
+        }
+
+        let mut args = Vec::with_capacity(1 + extra.len());
+        args.push(ArgSpec::PerCore { drefs, access, prefetch });
+        args.extend_from_slice(extra);
+        let opts = OffloadOptions { cores: Some(core_ids), ..options };
+        let result = session.offload(kernel, &args, opts);
+
+        // Write-back merge, then release staging. Every staging variable
+        // is released even when the offload or an earlier merge step
+        // failed — the first error is reported after cleanup.
+        let mut merge_err: Option<Error> = None;
+        for (asg, st) in self.assignments.iter().zip(&staging) {
+            let Some(sref) = st else { continue };
+            if result.is_ok() && access == Access::Mutable && merge_err.is_none() {
+                let merged = (|| -> Result<()> {
+                    let vals = session.read(*sref)?;
+                    let mut pos = 0;
+                    for &(off, len) in &asg.ranges {
+                        session.write(self.base, off, &vals[pos..pos + len])?;
+                        pos += len;
+                    }
+                    Ok(())
+                })();
+                if let Err(e) = merged {
+                    merge_err = Some(e);
+                }
+            }
+            session.release(*sref)?;
+        }
+        if let Some(e) = merge_err {
+            return Err(e);
+        }
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::TransferMode;
+    use crate::device::Technology;
+
+    fn base(len: usize) -> DataRef {
+        DataRef { id: 3, offset: 0, len }
+    }
+
+    /// Every element is owned exactly once, ranges ascend per core.
+    fn assert_exact_cover(plan: &ShardPlan, len: usize) {
+        let mut owned = vec![0u8; len];
+        for asg in plan.assignments() {
+            let mut prev_end = 0;
+            for &(off, l) in &asg.ranges {
+                assert!(off >= prev_end, "ranges ascend within a core");
+                prev_end = off + l;
+                for o in owned.iter_mut().skip(off).take(l) {
+                    *o += 1;
+                }
+            }
+        }
+        assert!(owned.iter().all(|&c| c == 1), "exactly-once coverage");
+    }
+
+    #[test]
+    fn block_plan_matches_shards_split() {
+        let plan = ShardPlan::new(base(10), 4, ShardPolicy::Block).unwrap();
+        let lens: Vec<usize> = plan.assignments().iter().map(|a| a.elems()).collect();
+        assert_eq!(lens, vec![3, 3, 2, 2], "remainder to earlier cores");
+        assert!(plan.assignments().iter().all(|a| a.is_contiguous()));
+        assert_exact_cover(&plan, 10);
+    }
+
+    #[test]
+    fn block_cyclic_deals_round_robin() {
+        let plan =
+            ShardPlan::new(base(100), 3, ShardPolicy::BlockCyclic { block_elems: 10 }).unwrap();
+        // blocks: 0,10,...,90 dealt to cores 0,1,2,0,1,2,...
+        assert_eq!(plan.assignments()[0].ranges, vec![(0, 10), (30, 10), (60, 10), (90, 10)]);
+        assert_eq!(plan.assignments()[1].ranges, vec![(10, 10), (40, 10), (70, 10)]);
+        assert_eq!(plan.assignments()[2].elems(), 30);
+        assert!(!plan.assignments()[0].is_contiguous());
+        assert_exact_cover(&plan, 100);
+    }
+
+    #[test]
+    fn block_cyclic_tail_block_is_partial() {
+        let plan =
+            ShardPlan::new(base(25), 2, ShardPolicy::BlockCyclic { block_elems: 10 }).unwrap();
+        assert_eq!(plan.assignments()[0].ranges, vec![(0, 10), (20, 5)]);
+        assert_eq!(plan.assignments()[1].ranges, vec![(10, 10)]);
+        assert_exact_cover(&plan, 25);
+    }
+
+    #[test]
+    fn degenerate_plans_validated() {
+        assert!(ShardPlan::new(base(10), 0, ShardPolicy::Block).is_err());
+        assert!(
+            ShardPlan::new(base(10), 2, ShardPolicy::BlockCyclic { block_elems: 0 }).is_err()
+        );
+        // More cores than elements: trailing cores own nothing.
+        let plan = ShardPlan::new(base(3), 5, ShardPolicy::Block).unwrap();
+        assert_exact_cover(&plan, 3);
+        assert_eq!(plan.assignments()[4].elems(), 0);
+    }
+
+    #[test]
+    fn execute_merges_mutable_cyclic_shards_back() {
+        let mut s = Session::builder(Technology::epiphany3()).seed(11).build().unwrap();
+        let data: Vec<f32> = (0..40).map(|i| i as f32).collect();
+        let d = s.alloc_host_f32("xs", &data).unwrap();
+        let k = s
+            .compile_kernel(
+                "bump",
+                "def bump(x):\n    i = 0\n    while i < len(x):\n        x[i] = x[i] + 1.0\n        i += 1\n    return 0\n",
+            )
+            .unwrap();
+        let plan = ShardPlan::new(d, 4, ShardPolicy::BlockCyclic { block_elems: 5 }).unwrap();
+        let vars_before = s.engine().registry().len();
+        plan.execute(
+            &mut s,
+            &k,
+            Access::Mutable,
+            PrefetchChoice::Default,
+            &[],
+            OffloadOptions::default()
+                .transfer(TransferMode::OnDemand)
+                .on_cores(vec![0, 1, 2, 3]),
+        )
+        .unwrap();
+        assert_eq!(s.engine().registry().len(), vars_before, "staging released");
+        let out = s.read(d).unwrap();
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as f32 + 1.0, "element {i} merged back");
+        }
+    }
+
+    #[test]
+    fn execute_rejects_core_count_mismatch() {
+        let mut s = Session::builder(Technology::epiphany3()).seed(1).build().unwrap();
+        let d = s.alloc_host_zeroed("xs", 16).unwrap();
+        let k = s.compile_kernel("k", "def k(x):\n    return 0\n").unwrap();
+        let plan = ShardPlan::new(d, 4, ShardPolicy::Block).unwrap();
+        let err = plan.execute(
+            &mut s,
+            &k,
+            Access::ReadOnly,
+            PrefetchChoice::Default,
+            &[],
+            OffloadOptions::default().on_cores(vec![0, 1]),
+        );
+        assert!(err.is_err());
+    }
+}

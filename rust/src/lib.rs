@@ -18,8 +18,10 @@
 //!   (Epiphany-III, MicroBlaze ± FPU, Cortex-A9, …), clocks, scratchpads,
 //!   off-chip links with contention, and an activity-based power model.
 //! * [`memory`] — the memory hierarchy: [`memory::MemKind`] allocation
-//!   classes (`Host`, `Shared`, `Microcore`, …) and opaque [`memory::DataRef`]
-//!   references that are what actually travels to the device.
+//!   classes (`Host`, `Shared`, `Microcore`, …), opaque [`memory::DataRef`]
+//!   references that are what actually travels to the device, and the
+//!   shared-window segment cache ([`memory::SharedCacheKind`]) that turns
+//!   repeated passes over off-chip data into window-cost hits.
 //! * [`channel`] — the paper's Fig. 2 communication substrate: per-core
 //!   channels of thirty-two 1 KB cells in shared memory.
 //! * [`vm`] — an ePython-like on-core interpreter (lexer → parser →
@@ -27,7 +29,9 @@
 //!   external reads/writes become blocking or pre-fetched channel traffic.
 //! * [`coordinator`] — the host-side offload engine: kernel registry,
 //!   argument marshalling (eager copy vs by-reference), the pre-fetch
-//!   engine, request servicing, and device-resident data management.
+//!   engine, request servicing, device-resident data management, and the
+//!   sharded offload planner ([`coordinator::ShardPlan`]: block /
+//!   block-cyclic decomposition with write-back merge).
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`) that carry the numeric hot path.
 //! * [`workloads`] — the paper's benchmarks: the lung-scan neural-network
@@ -66,6 +70,15 @@
 //! are *modelled* resources), so every run with the same seed reproduces the
 //! same timings bit-for-bit. The `xla` crate's PJRT client is `Rc`-based
 //! (non-`Send`), which this design accommodates naturally.
+//!
+//! A module-by-module walkthrough mapping paper sections to source files —
+//! including the request lifecycle and the fast-path/fusion invariants —
+//! lives in `ARCHITECTURE.md` at the repository root.
+
+// Every public item in this crate is documentation-bearing; CI builds the
+// docs with `-D warnings`, so doc rot (or an undocumented addition) fails
+// the build rather than silently accruing.
+#![warn(missing_docs)]
 
 pub mod bench_support;
 pub mod channel;

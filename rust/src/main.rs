@@ -35,10 +35,12 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
     .opt("mode", Some("prefetch"), "transfer mode (eager|on-demand|prefetch)")
     .opt("images", Some("4"), "images for mlbench")
     .opt("pixels", None, "override image pixels for mlbench")
+    .opt("epochs", None, "passes over the mlbench image set")
     .opt("artifacts", Some("artifacts"), "AOT artifacts directory")
     .opt("seed", Some("42"), "deterministic seed")
     .opt("config", None, "JSON experiment config (overrides other flags)")
     .flag("full", "full-size image regime for mlbench")
+    .flag("cache", "front the mlbench image store with the shared-window cache")
     .flag("trace", "print the event trace after a run");
 
     let Some(args) = cli.parse(argv)? else {
@@ -122,6 +124,26 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
             if let Some(px) = args.get("pixels") {
                 cfg.pixels = px.parse()?;
             }
+            if let Some(e) = args.get("epochs") {
+                cfg.epochs = e.parse()?;
+            }
+            if args.is_set("cache") {
+                // Cover the whole image set when it fits the shared
+                // window; otherwise take the window's worth of segments.
+                // Segments grow so the resident-set index stays small
+                // (lookups are linear in capacity).
+                let total = cfg.images * cfg.pixels;
+                let mut seg = cfg.chunk.max(1);
+                while total / seg + 1 > 512 {
+                    seg *= 2;
+                }
+                let want = total / seg + 1;
+                let window_cap = (tech.shared_window / (seg * 4)).max(1);
+                cfg.cache = Some(microcore::memory::CacheSpec {
+                    segment_elems: seg,
+                    capacity_segments: want.min(window_cap).max(1),
+                });
+            }
             let mut bench = mlbench::MlBench::new(session, cfg.clone())?;
             let r = bench.run()?;
             let mut t = Table::new(
@@ -132,6 +154,12 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
             t.row(&["combine gradients".into(), ms(r.per_image.combine_gradients)]);
             t.row(&["model update".into(), ms(r.per_image.model_update)]);
             print!("{}", t.render());
+            if let Some(c) = &r.cache {
+                print!(
+                    "{}",
+                    microcore::metrics::report::cache_table("image-store cache", c).render()
+                );
+            }
             println!(
                 "losses: {:?}\nrequests: {}  stall: {} ms",
                 r.losses,

@@ -1,0 +1,528 @@
+//! A shared-window segment cache fronting slower memory kinds.
+//!
+//! The paper's headline claim is "the ability to compute with data sets of
+//! arbitrarily large size" (§3.2): `Host`-kind data is reachable from the
+//! cores only through host-serviced round trips, each paying the off-chip
+//! staging cost. What the hardware *does* give us is the 32 MB
+//! device-addressable shared window — far larger than any core's local
+//! store, far cheaper to reach than host DRAM. [`SharedCacheKind`] turns a
+//! slice of that window into an **LRU, write-back segment cache** in front
+//! of any Host-level kind: the first pass over a dataset streams across
+//! the off-chip boundary and *lands* in the window; every later pass (the
+//! mlbench epochs loop, iterative solvers, multi-kernel pipelines re-reading
+//! the same input) is serviced at shared-window cost instead.
+//!
+//! Mechanics:
+//!
+//! * the backing variable is split into fixed-size **segments**
+//!   ([`CacheSpec::segment_elems`]); at most
+//!   [`CacheSpec::capacity_segments`] are resident at once;
+//! * a **device access** (`core = Some(_)`, i.e. traffic the engine
+//!   services on behalf of a micro-core) that touches a resident segment
+//!   is a *hit*; a miss refills the whole segment from the backing kind,
+//!   evicting the least-recently-used segment first (dirty victims are
+//!   written back — the write-back half of the policy);
+//! * device writes are **write-allocate, write-back**: they land in the
+//!   resident segment and reach the backing kind only on eviction or
+//!   [`SharedCacheKind::flush`];
+//! * **host-side accesses** (`core = None`: result staging, shard
+//!   gather/scatter, test probes) bypass the cache for statistics but stay
+//!   coherent — host reads flush covered dirty segments first, host writes
+//!   update the backing kind *and* patch any resident copy;
+//! * [`MemKind::access_level`] reports, without mutating anything, which
+//!   level would service a given range *right now* — `Shared` when fully
+//!   resident, the backing level otherwise. The engine calls it per
+//!   serviced request to charge hit-cost vs miss-cost transfer times
+//!   ([`crate::coordinator::engine`]).
+//!
+//! Accounting lives in [`CacheCounters`] (see `sim::stats`): hits/misses
+//! are counted per (device access × segment touched); bytes are split by
+//! which boundary they crossed. Host-side coherence traffic is
+//! deliberately *not* counted — the counters describe device-visible
+//! behaviour, which is what the metrics report explains.
+
+use std::cell::RefCell;
+
+use super::hierarchy::Level;
+use super::kind::{check_range, MemKind};
+use crate::error::{Error, Result};
+use crate::sim::CacheCounters;
+
+/// Geometry of a [`SharedCacheKind`]: segment size and resident capacity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheSpec {
+    /// Elements per cache segment (the refill/write-back granule).
+    pub segment_elems: usize,
+    /// Maximum segments resident in the shared window at once.
+    pub capacity_segments: usize,
+}
+
+impl CacheSpec {
+    /// Validate: both dimensions must be positive.
+    pub fn validate(&self) -> Result<()> {
+        if self.segment_elems == 0 || self.capacity_segments == 0 {
+            return Err(Error::Memory(
+                "cache spec: segment_elems and capacity_segments must be positive".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Shared-window bytes the cache may occupy when full.
+    pub fn budget_bytes(&self) -> usize {
+        self.segment_elems * self.capacity_segments * 4
+    }
+}
+
+/// One resident segment.
+struct Segment {
+    /// Segment index (element range `[seg * S, seg * S + data.len())`).
+    seg: usize,
+    data: Vec<f32>,
+    dirty: bool,
+    /// Monotonic touch tick (unique per touch — the LRU key).
+    last_used: u64,
+}
+
+struct CacheState {
+    segments: Vec<Segment>,
+    counters: CacheCounters,
+    tick: u64,
+    /// Slot touched by the previous device access. Streaming kernels hit
+    /// the same segment run after run, so this makes the common lookup
+    /// O(1); it is validated (bounds + segment id) before use, since
+    /// `swap_remove` on eviction reshuffles slots.
+    mru: usize,
+}
+
+/// An LRU, write-back segment cache in the shared window, fronting any
+/// slower [`MemKind`] (module docs). Registered like any other kind; the
+/// engine and registry see a variable whose *home* level is the backing
+/// kind's, but whose per-access service level improves to `Shared` for
+/// resident data.
+pub struct SharedCacheKind {
+    inner: RefCell<Box<dyn MemKind>>,
+    spec: CacheSpec,
+    state: RefCell<CacheState>,
+}
+
+impl std::fmt::Debug for SharedCacheKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let st = self.state.borrow();
+        f.debug_struct("SharedCacheKind")
+            .field("spec", &self.spec)
+            .field("resident", &st.segments.len())
+            .field("counters", &st.counters)
+            .finish()
+    }
+}
+
+impl SharedCacheKind {
+    /// Wrap `inner` with a cache of the given geometry.
+    pub fn new(inner: Box<dyn MemKind>, spec: CacheSpec) -> Result<Self> {
+        spec.validate()?;
+        Ok(SharedCacheKind {
+            inner: RefCell::new(inner),
+            spec,
+            state: RefCell::new(CacheState {
+                segments: Vec::new(),
+                counters: CacheCounters::default(),
+                tick: 0,
+                mru: 0,
+            }),
+        })
+    }
+
+    /// The cache geometry.
+    pub fn spec(&self) -> CacheSpec {
+        self.spec
+    }
+
+    /// Resident segment count (tests / reports).
+    pub fn resident_segments(&self) -> usize {
+        self.state.borrow().segments.len()
+    }
+
+    /// Write every dirty segment back to the backing kind (host-side
+    /// sync; segments stay resident and become clean). Not counted in the
+    /// device-traffic statistics.
+    pub fn flush(&self) -> Result<()> {
+        let mut st = self.state.borrow_mut();
+        let mut inner = self.inner.borrow_mut();
+        let seg_elems = self.spec.segment_elems;
+        for s in st.segments.iter_mut() {
+            if s.dirty {
+                inner.write(None, s.seg * seg_elems, &s.data)?;
+                s.dirty = false;
+            }
+        }
+        Ok(())
+    }
+
+    /// `(start, len)` element span of segment `seg`, clipped to `total`.
+    fn seg_span(&self, seg: usize, total: usize) -> (usize, usize) {
+        let start = seg * self.spec.segment_elems;
+        (start, self.spec.segment_elems.min(total - start))
+    }
+
+    /// Make `seg` resident, evicting (with write-back) if at capacity.
+    /// Returns the slot index. Counts the miss and the boundary bytes.
+    fn fetch_segment(
+        spec: CacheSpec,
+        st: &mut CacheState,
+        inner: &mut dyn MemKind,
+        seg: usize,
+        sstart: usize,
+        slen: usize,
+    ) -> Result<usize> {
+        if st.segments.len() >= spec.capacity_segments {
+            // Evict the least-recently-used segment. `last_used` ticks are
+            // unique (every touch increments the clock), so the victim is
+            // deterministic; the slot index tie-break is defensive.
+            let (vi, _) = st
+                .segments
+                .iter()
+                .enumerate()
+                .min_by_key(|(i, s)| (s.last_used, *i))
+                .expect("capacity > 0 implies a victim exists");
+            let victim = st.segments.swap_remove(vi);
+            st.counters.evictions += 1;
+            if victim.dirty {
+                inner.write(None, victim.seg * spec.segment_elems, &victim.data)?;
+                st.counters.write_backs += 1;
+                st.counters.bytes_from_backing += (victim.data.len() * 4) as u64;
+            }
+        }
+        let mut data = vec![0.0f32; slen];
+        inner.read(None, sstart, &mut data)?;
+        st.counters.misses += 1;
+        st.counters.bytes_from_backing += (slen * 4) as u64;
+        st.segments.push(Segment { seg, data, dirty: false, last_used: 0 });
+        Ok(st.segments.len() - 1)
+    }
+
+    /// Shared device-side segment walk: make each covered segment
+    /// resident (refilling on miss, evicting as needed), touch the LRU
+    /// clock, count hit traffic, and hand each overlap to `apply` as
+    /// `(segment, offset_within_segment, n_elems, offset_within_access)`.
+    fn device_access(
+        &self,
+        off: usize,
+        len: usize,
+        mut apply: impl FnMut(&mut Segment, usize, usize, usize),
+    ) -> Result<()> {
+        let mut st = self.state.borrow_mut();
+        let mut inner = self.inner.borrow_mut();
+        let total = inner.len();
+        check_range("SharedCache", total, off, len)?;
+        let mut pos = 0;
+        while pos < len {
+            let elem = off + pos;
+            let seg = elem / self.spec.segment_elems;
+            let (sstart, slen) = self.seg_span(seg, total);
+            let found = match st.segments.get(st.mru) {
+                Some(s) if s.seg == seg => Some(st.mru),
+                _ => st.segments.iter().position(|s| s.seg == seg),
+            };
+            let (idx, was_hit) = match found {
+                Some(i) => (i, true),
+                None => (
+                    Self::fetch_segment(self.spec, &mut st, inner.as_mut(), seg, sstart, slen)?,
+                    false,
+                ),
+            };
+            st.mru = idx;
+            st.tick += 1;
+            let tick = st.tick;
+            st.segments[idx].last_used = tick;
+            let within = elem - sstart;
+            let n = (slen - within).min(len - pos);
+            apply(&mut st.segments[idx], within, n, pos);
+            if was_hit {
+                st.counters.hits += 1;
+                st.counters.bytes_from_cache += (n * 4) as u64;
+            }
+            pos += n;
+        }
+        Ok(())
+    }
+
+    /// Device-side read: serve each covered segment from the cache,
+    /// refilling on miss.
+    fn device_read(&self, off: usize, out: &mut [f32]) -> Result<()> {
+        self.device_access(off, out.len(), |s, within, n, pos| {
+            out[pos..pos + n].copy_from_slice(&s.data[within..within + n]);
+        })
+    }
+
+    /// Device-side write: write-allocate, write-back.
+    fn device_write(&self, off: usize, data: &[f32]) -> Result<()> {
+        self.device_access(off, data.len(), |s, within, n, pos| {
+            s.data[within..within + n].copy_from_slice(&data[pos..pos + n]);
+            s.dirty = true;
+        })
+    }
+
+    /// Host-side read: flush covered dirty segments, then read the backing
+    /// kind (uncounted — coherence traffic, not device traffic).
+    fn host_read(&self, off: usize, out: &mut [f32]) -> Result<()> {
+        let mut st = self.state.borrow_mut();
+        let mut inner = self.inner.borrow_mut();
+        let total = inner.len();
+        check_range("SharedCache", total, off, out.len())?;
+        let (lo, hi) = (off, off + out.len());
+        let seg_elems = self.spec.segment_elems;
+        for s in st.segments.iter_mut() {
+            let sstart = s.seg * seg_elems;
+            if s.dirty && sstart < hi && sstart + s.data.len() > lo {
+                inner.write(None, sstart, &s.data)?;
+                s.dirty = false;
+            }
+        }
+        inner.read(None, off, out)
+    }
+
+    /// Host-side write: update the backing kind and patch any resident
+    /// copy so device reads observe the new values.
+    fn host_write(&self, off: usize, data: &[f32]) -> Result<()> {
+        let mut st = self.state.borrow_mut();
+        let mut inner = self.inner.borrow_mut();
+        let total = inner.len();
+        check_range("SharedCache", total, off, data.len())?;
+        inner.write(None, off, data)?;
+        let (lo, hi) = (off, off + data.len());
+        let seg_elems = self.spec.segment_elems;
+        for s in st.segments.iter_mut() {
+            let sstart = s.seg * seg_elems;
+            let send = sstart + s.data.len();
+            if sstart < hi && send > lo {
+                let from = lo.max(sstart);
+                let to = hi.min(send);
+                s.data[from - sstart..to - sstart].copy_from_slice(&data[from - lo..to - lo]);
+            }
+        }
+        Ok(())
+    }
+}
+
+impl MemKind for SharedCacheKind {
+    fn name(&self) -> &'static str {
+        "SharedCache"
+    }
+
+    /// The *home* level is the backing kind's — that is where the data
+    /// lives when not resident, and the conservative default for cost
+    /// paths that do not probe per access (eager spill binding, tensor
+    /// bulk transfers).
+    fn level(&self) -> Level {
+        self.inner.borrow().level()
+    }
+
+    fn len(&self) -> usize {
+        self.inner.borrow().len()
+    }
+
+    fn access_level(&self, off: usize, len: usize) -> Level {
+        let st = self.state.borrow();
+        let total = self.inner.borrow().len();
+        if off + len > total || len == 0 {
+            return self.inner.borrow().level();
+        }
+        let first = off / self.spec.segment_elems;
+        let last = (off + len - 1) / self.spec.segment_elems;
+        for seg in first..=last {
+            if !st.segments.iter().any(|s| s.seg == seg) {
+                return self.inner.borrow().level();
+            }
+        }
+        Level::Shared
+    }
+
+    fn cache_counters(&self) -> Option<CacheCounters> {
+        Some(self.state.borrow().counters)
+    }
+
+    fn read(&self, core: Option<usize>, off: usize, out: &mut [f32]) -> Result<()> {
+        match core {
+            Some(_) => self.device_read(off, out),
+            None => self.host_read(off, out),
+        }
+    }
+
+    fn write(&mut self, core: Option<usize>, off: usize, data: &[f32]) -> Result<()> {
+        match core {
+            Some(_) => self.device_write(off, data),
+            None => self.host_write(off, data),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::kind::HostKind;
+
+    fn spec(seg: usize, cap: usize) -> CacheSpec {
+        CacheSpec { segment_elems: seg, capacity_segments: cap }
+    }
+
+    /// 0..n as f32 contents behind a cache of `seg`-element segments.
+    fn cached(n: usize, seg: usize, cap: usize) -> SharedCacheKind {
+        let data: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        SharedCacheKind::new(Box::new(HostKind::from_vec(data)), spec(seg, cap)).unwrap()
+    }
+
+    fn read1(k: &SharedCacheKind, core: Option<usize>, off: usize) -> f32 {
+        let mut v = [0.0f32];
+        k.read(core, off, &mut v).unwrap();
+        v[0]
+    }
+
+    #[test]
+    fn spec_validates_and_budgets() {
+        assert!(spec(0, 4).validate().is_err());
+        assert!(spec(4, 0).validate().is_err());
+        assert!(spec(4, 4).validate().is_ok());
+        assert_eq!(spec(1200, 16).budget_bytes(), 1200 * 16 * 4);
+    }
+
+    #[test]
+    fn first_touch_misses_second_hits() {
+        let k = cached(100, 10, 4);
+        assert_eq!(k.access_level(5, 1), Level::Host, "cold: backing level");
+        assert_eq!(read1(&k, Some(0), 5), 5.0);
+        assert_eq!(k.access_level(5, 1), Level::Shared, "resident now");
+        assert_eq!(read1(&k, Some(0), 6), 6.0, "same segment");
+        let c = k.cache_counters().unwrap();
+        assert_eq!((c.hits, c.misses), (1, 1));
+        assert_eq!(c.bytes_from_backing, 40, "one 10-element segment refill");
+        assert_eq!(c.bytes_from_cache, 4, "one hit element");
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let k = cached(100, 10, 2);
+        read1(&k, Some(0), 0); // seg 0 resident
+        read1(&k, Some(0), 10); // seg 1 resident
+        read1(&k, Some(0), 5); // touch seg 0 again: seg 1 is now LRU
+        read1(&k, Some(0), 20); // seg 2 fetched: evicts seg 1
+        assert_eq!(k.resident_segments(), 2);
+        assert_eq!(k.access_level(0, 10), Level::Shared, "seg 0 survives");
+        assert_eq!(k.access_level(20, 10), Level::Shared, "seg 2 resident");
+        assert_eq!(k.access_level(10, 10), Level::Host, "seg 1 evicted");
+        assert_eq!(k.cache_counters().unwrap().evictions, 1);
+    }
+
+    #[test]
+    fn write_back_on_evict_preserves_data() {
+        let mut k = cached(100, 10, 2);
+        k.write(Some(0), 3, &[99.5]).unwrap(); // seg 0 dirty
+        read1(&k, Some(0), 10); // seg 1
+        read1(&k, Some(0), 20); // seg 2: evicts dirty seg 0 -> write-back
+        let c = k.cache_counters().unwrap();
+        assert_eq!(c.evictions, 1);
+        assert_eq!(c.write_backs, 1);
+        assert_eq!(k.access_level(3, 1), Level::Host, "seg 0 gone");
+        // Refetching seg 0 must deliver the written-back value.
+        assert_eq!(read1(&k, Some(0), 3), 99.5);
+    }
+
+    #[test]
+    fn clean_evictions_skip_write_back() {
+        let k = cached(100, 10, 2);
+        read1(&k, Some(0), 0);
+        read1(&k, Some(0), 10);
+        read1(&k, Some(0), 20);
+        let c = k.cache_counters().unwrap();
+        assert_eq!(c.evictions, 1);
+        assert_eq!(c.write_backs, 0);
+    }
+
+    #[test]
+    fn host_read_sees_dirty_device_writes() {
+        let mut k = cached(100, 10, 4);
+        k.write(Some(2), 7, &[42.0]).unwrap();
+        // Host-side read (session.read / shard gather) must see it.
+        assert_eq!(read1(&k, None, 7), 42.0);
+        // Flush-on-host-read left the segment resident and clean; a later
+        // eviction must not write back again.
+        let before = k.cache_counters().unwrap().write_backs;
+        read1(&k, Some(0), 10);
+        read1(&k, Some(0), 20);
+        read1(&k, Some(0), 30);
+        read1(&k, Some(0), 40); // forces eviction of seg 0
+        assert_eq!(k.cache_counters().unwrap().write_backs, before);
+    }
+
+    #[test]
+    fn host_write_patches_resident_copy() {
+        let mut k = cached(100, 10, 4);
+        read1(&k, Some(0), 0); // seg 0 resident
+        k.write(None, 2, &[7.5]).unwrap();
+        assert_eq!(read1(&k, Some(0), 2), 7.5, "device sees the host write");
+        let c = k.cache_counters().unwrap();
+        assert_eq!(c.misses, 1, "host write counted no device traffic");
+    }
+
+    #[test]
+    fn host_accesses_do_not_touch_stats_or_residency() {
+        let k = cached(100, 10, 4);
+        let mut buf = [0.0f32; 20];
+        k.read(None, 0, &mut buf).unwrap();
+        assert_eq!(buf[19], 19.0);
+        assert_eq!(k.resident_segments(), 0);
+        assert_eq!(k.cache_counters().unwrap(), CacheCounters::default());
+    }
+
+    #[test]
+    fn reads_spanning_segments_fill_correctly() {
+        let k = cached(100, 10, 4);
+        let mut buf = [0.0f32; 25];
+        k.read(Some(0), 5, &mut buf).unwrap();
+        for (i, v) in buf.iter().enumerate() {
+            assert_eq!(*v, (5 + i) as f32);
+        }
+        let c = k.cache_counters().unwrap();
+        assert_eq!(c.misses, 3, "segments 0, 1, 2 refilled");
+    }
+
+    #[test]
+    fn tail_segment_is_partial() {
+        let k = cached(25, 10, 4);
+        assert_eq!(read1(&k, Some(0), 24), 24.0);
+        let c = k.cache_counters().unwrap();
+        assert_eq!(c.bytes_from_backing, 20, "5-element tail segment");
+    }
+
+    #[test]
+    fn flush_writes_back_all_dirty() {
+        let mut k = cached(100, 10, 4);
+        k.write(Some(0), 0, &[1.5]).unwrap();
+        k.write(Some(0), 15, &[2.5]).unwrap();
+        k.flush().unwrap();
+        // After flush the backing kind holds the values; drop residency by
+        // thrashing and re-read.
+        for s in 2..6 {
+            read1(&k, Some(0), s * 10);
+        }
+        assert_eq!(read1(&k, None, 0), 1.5);
+        assert_eq!(read1(&k, None, 15), 2.5);
+    }
+
+    #[test]
+    fn out_of_bounds_rejected() {
+        let mut k = cached(20, 10, 2);
+        let mut buf = [0.0f32; 5];
+        assert!(k.read(Some(0), 18, &mut buf).is_err());
+        assert!(k.write(Some(0), 19, &[0.0, 0.0]).is_err());
+        assert!(k.read(None, 18, &mut buf).is_err());
+    }
+
+    #[test]
+    fn access_level_is_pure() {
+        let k = cached(100, 10, 4);
+        k.access_level(0, 100);
+        assert_eq!(k.resident_segments(), 0);
+        assert_eq!(k.cache_counters().unwrap(), CacheCounters::default());
+    }
+}

@@ -32,6 +32,22 @@ pub trait MemKind {
     /// Which hierarchy level this kind allocates in.
     fn level(&self) -> Level;
 
+    /// Which level would service an access to `[off, off+len)` *right
+    /// now*. Identical to [`MemKind::level`] for plain kinds; caching
+    /// kinds ([`crate::memory::SharedCacheKind`]) refine it per access so
+    /// the engine can charge hit-cost transfers for resident data. Must
+    /// not mutate any state (it is a cost-model probe, not an access).
+    fn access_level(&self, off: usize, len: usize) -> Level {
+        let _ = (off, len);
+        self.level()
+    }
+
+    /// Hit/miss accounting, for kinds that front another level with a
+    /// cache. `None` for plain kinds.
+    fn cache_counters(&self) -> Option<crate::sim::CacheCounters> {
+        None
+    }
+
     /// Total length of the variable, in elements.
     fn len(&self) -> usize;
 
@@ -50,7 +66,7 @@ pub trait MemKind {
     fn write(&mut self, core: Option<usize>, off: usize, data: &[f32]) -> Result<()>;
 }
 
-fn check_range(kind: &str, len: usize, off: usize, n: usize) -> Result<()> {
+pub(crate) fn check_range(kind: &str, len: usize, off: usize, n: usize) -> Result<()> {
     if off + n > len {
         return Err(Error::Memory(format!(
             "{kind}: access [{off}, {}) out of bounds (len {len})",

@@ -17,12 +17,17 @@
 //!   core can be handed its shard of a larger variable).
 //! * [`registry`] — the host-side lookup table from reference id to kind,
 //!   servicing decoded reads/writes.
+//! * [`cache`] — [`SharedCacheKind`], an LRU write-back segment cache in
+//!   the shared window fronting any Host-level kind, so repeated passes
+//!   over an off-chip dataset are serviced at shared-window cost.
 
+pub mod cache;
 pub mod dataref;
 pub mod hierarchy;
 pub mod kind;
 pub mod registry;
 
+pub use cache::{CacheSpec, SharedCacheKind};
 pub use dataref::{DataRef, RefInfo};
 pub use hierarchy::{Hierarchy, Level};
 pub use kind::{FileKind, HostKind, MemKind, MicrocoreKind, ProceduralKind, SharedKind, SinkKind};

@@ -91,6 +91,32 @@ impl MemRegistry {
         Ok(out)
     }
 
+    /// Which level would service an access to `[off, off+len)` of view
+    /// `r` *right now* (view-relative offsets). Equal to the home level
+    /// for plain kinds; caching kinds refine it per access — see
+    /// [`crate::memory::MemKind::access_level`]. Pure: never mutates
+    /// residency or statistics.
+    pub fn access_level(&self, r: DataRef, off: usize, len: usize) -> Result<super::Level> {
+        Ok(self.entry(r.id)?.kind.access_level(r.offset + off, len))
+    }
+
+    /// Hit/miss accounting for the variable behind `r` (`None` for
+    /// non-caching kinds).
+    pub fn cache_counters(&self, r: DataRef) -> Result<Option<crate::sim::CacheCounters>> {
+        Ok(self.entry(r.id)?.kind.cache_counters())
+    }
+
+    /// Aggregate cache accounting over every live caching variable.
+    pub fn total_cache_counters(&self) -> crate::sim::CacheCounters {
+        let mut total = crate::sim::CacheCounters::default();
+        for e in self.vars.values() {
+            if let Some(c) = e.kind.cache_counters() {
+                total.merge(&c);
+            }
+        }
+        total
+    }
+
     /// Metadata for a reference (level, kind, base length).
     pub fn info(&self, r: DataRef) -> Result<RefInfo> {
         let e = self.entry(r.id)?;
@@ -177,6 +203,26 @@ mod tests {
         assert!(reg.read_all(r, None).is_err());
         assert!(reg.release(r).is_err(), "double release errors");
         assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn cached_variable_reports_access_level_and_counters() {
+        use crate::memory::cache::{CacheSpec, SharedCacheKind};
+        let mut reg = MemRegistry::new();
+        let inner = Box::new(HostKind::from_vec((0..40).map(|i| i as f32).collect()));
+        let spec = CacheSpec { segment_elems: 10, capacity_segments: 2 };
+        let r = reg.register("xs", Box::new(SharedCacheKind::new(inner, spec).unwrap()));
+        let plain = reg.register("p", Box::new(HostKind::zeroed(4)));
+        assert_eq!(reg.access_level(r, 0, 1).unwrap(), Level::Host);
+        let mut buf = [0.0f32];
+        reg.read(r, Some(0), 0, &mut buf).unwrap();
+        assert_eq!(reg.access_level(r, 0, 1).unwrap(), Level::Shared);
+        // View-relative translation: a slice starting at 20 probes base 20.
+        let view = r.slice(20, 10);
+        assert_eq!(reg.access_level(view, 0, 1).unwrap(), Level::Host);
+        assert!(reg.cache_counters(r).unwrap().is_some());
+        assert!(reg.cache_counters(plain).unwrap().is_none());
+        assert_eq!(reg.total_cache_counters().misses, 1);
     }
 
     #[test]

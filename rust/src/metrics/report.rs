@@ -105,6 +105,26 @@ pub fn ms(t: crate::sim::Time) -> String {
     format!("{:.3}", t as f64 / 1e6)
 }
 
+/// One-row table of shared-window cache accounting (hit/miss counts, hit
+/// rate, bytes by boundary) — the standard way runs surface
+/// [`crate::sim::CacheCounters`] in their reports.
+pub fn cache_table(title: impl Into<String>, c: &crate::sim::CacheCounters) -> Table {
+    let mut t = Table::new(
+        title,
+        &["hits", "misses", "hit rate", "evictions", "write-backs", "KB cached", "KB backing"],
+    );
+    t.row(&[
+        c.hits.to_string(),
+        c.misses.to_string(),
+        format!("{:.3}", c.hit_rate()),
+        c.evictions.to_string(),
+        c.write_backs.to_string(),
+        format!("{:.1}", c.bytes_from_cache as f64 / 1024.0),
+        format!("{:.1}", c.bytes_from_backing as f64 / 1024.0),
+    ]);
+    t
+}
+
 /// Format a float with 3 decimals.
 pub fn f3(v: f64) -> String {
     format!("{v:.3}")
@@ -126,6 +146,24 @@ mod tests {
         assert_eq!(csv.lines().count(), 3);
         assert!(csv.starts_with("Technology,MFLOPs"));
         assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn cache_table_renders_counts_and_rate() {
+        let c = crate::sim::CacheCounters {
+            hits: 9,
+            misses: 3,
+            evictions: 1,
+            write_backs: 1,
+            bytes_from_cache: 2048,
+            bytes_from_backing: 4096,
+        };
+        let t = cache_table("image cache", &c);
+        let s = t.render();
+        assert!(s.contains("image cache"));
+        assert!(s.contains('9'));
+        assert!(s.contains("0.750"));
+        assert_eq!(t.len(), 1);
     }
 
     #[test]

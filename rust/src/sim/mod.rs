@@ -17,7 +17,7 @@ pub mod timeline;
 pub mod trace;
 
 pub use rng::Rng;
-pub use stats::{Histogram, OnlineStats};
+pub use stats::{CacheCounters, Histogram, OnlineStats};
 pub use timeline::{Resource, Timeline};
 pub use trace::{Trace, TraceEvent};
 

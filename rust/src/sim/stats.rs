@@ -94,6 +94,75 @@ impl OnlineStats {
     }
 }
 
+/// Hit/miss/transfer accounting for a level-fronting cache (the
+/// shared-window segment cache of [`crate::memory::SharedCacheKind`]).
+///
+/// The split the simulator cares about is *which boundary an access
+/// crossed*: `bytes_from_cache` were served out of the device-addressable
+/// shared window (link cost only), while `bytes_from_backing` had to cross
+/// the off-chip + host-staging boundary to refill a segment. The transfer
+/// *times* are charged by the engine per access via
+/// [`crate::memory::MemKind::access_level`]; these counters are the
+/// residency audit behind them. Granularities differ by design: counters
+/// record one hit/miss per (access × segment touched), while the charged
+/// level is conservative per request — a range straddling resident and
+/// non-resident segments is charged wholly at the backing level yet still
+/// counts its resident segment as a hit.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheCounters {
+    /// Segment-resident accesses (served at the cache's front level).
+    pub hits: u64,
+    /// Accesses that forced a segment refill from the backing kind.
+    pub misses: u64,
+    /// Segments dropped to make room (capacity evictions).
+    pub evictions: u64,
+    /// Evicted-dirty segments written back to the backing kind.
+    pub write_backs: u64,
+    /// Bytes served out of resident segments.
+    pub bytes_from_cache: u64,
+    /// Bytes moved across the backing boundary (refills + write-backs).
+    pub bytes_from_backing: u64,
+}
+
+impl CacheCounters {
+    /// Hit fraction over all accesses (0 when nothing was accessed).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Fold another counter set into this one (aggregation across
+    /// variables or cores).
+    pub fn merge(&mut self, other: &CacheCounters) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.evictions += other.evictions;
+        self.write_backs += other.write_backs;
+        self.bytes_from_cache += other.bytes_from_cache;
+        self.bytes_from_backing += other.bytes_from_backing;
+    }
+
+    /// The activity since `earlier` (a prior snapshot of the same
+    /// counters): per-field saturating difference. Lets per-run reports
+    /// subtract out a cache's lifetime-cumulative history.
+    pub fn since(&self, earlier: &CacheCounters) -> CacheCounters {
+        CacheCounters {
+            hits: self.hits.saturating_sub(earlier.hits),
+            misses: self.misses.saturating_sub(earlier.misses),
+            evictions: self.evictions.saturating_sub(earlier.evictions),
+            write_backs: self.write_backs.saturating_sub(earlier.write_backs),
+            bytes_from_cache: self.bytes_from_cache.saturating_sub(earlier.bytes_from_cache),
+            bytes_from_backing: self
+                .bytes_from_backing
+                .saturating_sub(earlier.bytes_from_backing),
+        }
+    }
+}
+
 /// Log2-bucketed histogram over `u64` magnitudes (latencies in ns, sizes in
 /// bytes). Bucket `i` holds values in `[2^i, 2^(i+1))`; bucket 0 holds 0–1.
 #[derive(Debug, Clone)]
@@ -223,6 +292,31 @@ mod tests {
         // median of 1..1000 lands in the [256,512) bucket's upper bound
         assert_eq!(h.quantile(0.5), 512);
         assert!(h.quantile(1.0) >= 1000);
+    }
+
+    #[test]
+    fn cache_counters_merge_and_hit_rate() {
+        let mut a = CacheCounters { hits: 3, misses: 1, ..Default::default() };
+        let b = CacheCounters {
+            hits: 1,
+            misses: 3,
+            evictions: 2,
+            write_backs: 1,
+            bytes_from_cache: 64,
+            bytes_from_backing: 512,
+        };
+        a.merge(&b);
+        assert_eq!(a.hits, 4);
+        assert_eq!(a.misses, 4);
+        assert_eq!(a.evictions, 2);
+        assert_eq!(a.write_backs, 1);
+        assert_eq!(a.bytes_from_backing, 512);
+        assert!((a.hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(CacheCounters::default().hit_rate(), 0.0);
+        let d = a.since(&b);
+        assert_eq!((d.hits, d.misses), (3, 1), "delta recovers the pre-merge half");
+        assert_eq!(d.evictions, 0);
+        assert_eq!(b.since(&a), CacheCounters::default(), "saturates, never underflows");
     }
 
     #[test]

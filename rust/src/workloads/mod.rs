@@ -2,12 +2,15 @@
 //!
 //! * [`scans`] — synthetic 3D CT lung-scan generator (stands in for the
 //!   NCI Data Science Bowl data, which is gated; sizes match the paper:
-//!   3600-pixel interpolated "small" images and ~7 M-pixel "full" images).
+//!   3600-pixel interpolated "small" images and ~7 M-pixel "full" images),
+//!   plus the sharded whole-volume scan kernels ([`scans::sharded_normalize`],
+//!   [`scans::sharded_sum`]) driven by the shard planner.
 //! * [`mlbench`] — the §5 machine-learning benchmark: a one-hidden-layer
 //!   (100 neuron) binary classifier with input pixels distributed across
 //!   the micro-cores; three timed phases (feed forward / combine
 //!   gradients / model update) under eager / on-demand / pre-fetch
-//!   transfer — Figures 3 and 4.
+//!   transfer — Figures 3 and 4. Multi-epoch runs can front the image
+//!   store with the shared-window cache ([`mlbench::MlBenchConfig::cache`]).
 //! * [`linpack`] — the LINPACK LU benchmark and power table — Table 1.
 //! * [`stall`] — the synthetic single-transfer stall-time probe — Table 2.
 //! * [`baselines`] — analytic host-side comparators (CPython on ARM,
@@ -22,5 +25,5 @@ pub mod stall;
 
 pub use linpack::{linpack_row, LinpackRow};
 pub use mlbench::{MlBench, MlBenchConfig, MlBenchResult, PhaseTimes};
-pub use scans::ScanGenerator;
+pub use scans::{sharded_normalize, sharded_sum, ScanGenerator};
 pub use stall::{stall_table, StallRow};

@@ -1,4 +1,4 @@
-//! Synthetic 3D CT lung-scan generator.
+//! Synthetic 3D CT lung-scan generator, plus sharded scan kernels.
 //!
 //! The paper trains on the NCI Data Science Bowl 2017 lung scans (access
 //! gated); per the DESIGN.md substitution rule we generate labelled
@@ -6,7 +6,21 @@
 //! contain a bright Gaussian "lesion" blob over lung-parenchyma noise.
 //! What the benchmark exercises — bytes moved, access order, FLOPs — is
 //! unchanged; classification accuracy is real but incidental.
+//!
+//! The second half of this module is the **sharded scan workload**: two
+//! whole-volume passes ([`sharded_normalize`], [`sharded_sum`]) driven by
+//! the [`ShardPlan`] planner, used by the N-core-vs-reference differential
+//! tests and the `sharded_scan_16core` hot-path bench. Normalize is
+//! element-wise with per-element write-back, so its result is bit-identical
+//! across core counts, policies and transfer modes — the property the
+//! differential tests pin down.
 
+use crate::coordinator::{
+    Access, ArgSpec, OffloadOptions, OffloadResult, PrefetchChoice, Session, ShardPlan,
+    ShardPolicy,
+};
+use crate::error::Result;
+use crate::memory::DataRef;
 use crate::sim::Rng;
 
 /// Paper geometry: small interpolated images are 3600 pixels.
@@ -60,9 +74,97 @@ impl ScanGenerator {
     }
 }
 
+/// Element-wise volume normalization: `x[i] = (x[i] - mu) * scale`,
+/// written back in place. Two statements so every arithmetic step is a
+/// plain binary op — identical f64 evaluation on every core.
+const NORM_SRC: &str = r#"
+def norm(x, mu, scale):
+    i = 0
+    while i < len(x):
+        t = x[i] - mu
+        x[i] = t * scale
+        i += 1
+    return 0
+"#;
+
+/// Whole-shard reduction: per-core partial sum, combined on the host.
+const SUM_SRC: &str = r#"
+def total(x):
+    s = 0.0
+    i = 0
+    while i < len(x):
+        s += x[i]
+        i += 1
+    return s
+"#;
+
+/// Fetch a registered kernel, compiling it on first use (repeat calls —
+/// the epochs loop, bench iterations — skip the whole front-end).
+fn kernel_once(session: &mut Session, name: &str, src: &str) -> Result<crate::coordinator::Kernel> {
+    if session.kernel(name).is_err() {
+        session.compile_kernel(name, src)?;
+    }
+    Ok(session.kernel(name)?.clone())
+}
+
+/// Normalize `data` in place across `cores` under `policy`:
+/// `x[i] = (x[i] - mu) * scale`. Mutable sharded offload with write-back
+/// merge; bit-identical output for any core set, policy and transfer mode.
+pub fn sharded_normalize(
+    session: &mut Session,
+    data: DataRef,
+    policy: ShardPolicy,
+    cores: &[usize],
+    mu: f64,
+    scale: f64,
+    options: OffloadOptions,
+) -> Result<OffloadResult> {
+    let plan = ShardPlan::new(data, cores.len(), policy)?;
+    let k = kernel_once(session, "scan.norm", NORM_SRC)?;
+    plan.execute(
+        session,
+        &k,
+        Access::Mutable,
+        PrefetchChoice::Default,
+        &[ArgSpec::Float(mu), ArgSpec::Float(scale)],
+        options.on_cores(cores.to_vec()),
+    )
+}
+
+/// Sum `data` across `cores` under `policy`; per-core partials are
+/// combined on the host in core order (f64 accumulation — the combine
+/// order is fixed, but a *different core count* changes rounding, so
+/// exact-equality comparisons belong to [`sharded_normalize`]).
+pub fn sharded_sum(
+    session: &mut Session,
+    data: DataRef,
+    policy: ShardPolicy,
+    cores: &[usize],
+    options: OffloadOptions,
+) -> Result<(f64, OffloadResult)> {
+    let plan = ShardPlan::new(data, cores.len(), policy)?;
+    let k = kernel_once(session, "scan.total", SUM_SRC)?;
+    let res = plan.execute(
+        session,
+        &k,
+        Access::ReadOnly,
+        PrefetchChoice::Default,
+        &[],
+        options.on_cores(cores.to_vec()),
+    )?;
+    let mut sum = 0.0;
+    for r in &res.reports {
+        sum += r.value.as_f64()?;
+    }
+    Ok((sum, res))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::TransferMode;
+    use crate::device::Technology;
+    use crate::memory::CacheSpec;
 
     #[test]
     fn labels_alternate_and_shapes_match() {
@@ -108,5 +210,57 @@ mod tests {
         let mut a = ScanGenerator::new(7, 100);
         let mut b = ScanGenerator::new(7, 100);
         assert_eq!(a.scan(0).0, b.scan(0).0);
+    }
+
+    #[test]
+    fn sharded_normalize_matches_host_arithmetic() {
+        let mut s = Session::builder(Technology::epiphany3()).seed(9).build().unwrap();
+        let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let d = s.alloc_host_f32("vol", &data).unwrap();
+        let cores: Vec<usize> = (0..16).collect();
+        sharded_normalize(
+            &mut s,
+            d,
+            ShardPolicy::BlockCyclic { block_elems: 4 },
+            &cores,
+            2.0,
+            0.5,
+            OffloadOptions::default().transfer(TransferMode::OnDemand),
+        )
+        .unwrap();
+        let out = s.read(d).unwrap();
+        for (i, v) in out.iter().enumerate() {
+            let expect = ((f64::from(i as f32) - 2.0) * 0.5) as f32;
+            assert_eq!(*v, expect, "element {i}");
+        }
+    }
+
+    #[test]
+    fn sharded_sum_over_cached_volume_warms_the_cache() {
+        let mut s = Session::builder(Technology::epiphany3()).seed(9).build().unwrap();
+        let data: Vec<f32> = (0..320).map(|_| 1.0).collect();
+        let spec = CacheSpec { segment_elems: 40, capacity_segments: 8 };
+        let d = s.alloc_host_cached_f32("vol", &data, spec).unwrap();
+        let cores: Vec<usize> = (0..4).collect();
+        let run = |s: &mut Session| {
+            sharded_sum(
+                s,
+                d,
+                ShardPolicy::Block,
+                &cores,
+                OffloadOptions::default().transfer(TransferMode::OnDemand),
+            )
+            .unwrap()
+        };
+        let (sum1, r1) = run(&mut s);
+        let pass1 = s.cache_counters(d).unwrap().unwrap();
+        let (sum2, _r2) = run(&mut s);
+        let pass2 = s.cache_counters(d).unwrap().unwrap();
+        assert_eq!(sum1, 320.0);
+        assert_eq!(sum2, sum1, "cache never changes numerics");
+        assert_eq!(pass1.misses, 8, "first pass: one refill per segment");
+        assert_eq!(pass2.misses, 8, "second pass re-reads the resident set");
+        assert!(pass2.hits > pass1.hits, "epoch 2 runs out of the window");
+        assert_eq!(r1.total_requests(), _r2.total_requests(), "traffic shape unchanged");
     }
 }

@@ -1,0 +1,182 @@
+//! Differential tests for the sharded offload planner and the
+//! shared-window cache.
+//!
+//! Two properties are pinned down:
+//!
+//! 1. **Sharding is invisible to results** — an element-wise kernel run
+//!    over N cores (block or block-cyclic, any transfer mode) produces
+//!    output bit-identical to the single-core reference run: every element
+//!    has exactly one owner, each owner computes in identical f64
+//!    arithmetic, and write-back merge puts cyclic shards back where they
+//!    came from.
+//! 2. **The cache is invisible to numerics** — fronting the dataset with
+//!    `SharedCacheKind` changes transfer *times* (and the hit/miss audit)
+//!    but never a computed value, including under the engine's inline
+//!    prefetch fast path.
+
+use microcore::coordinator::{
+    Access, OffloadOptions, PrefetchSpec, Session, ShardPolicy, TransferMode,
+};
+use microcore::device::Technology;
+use microcore::memory::CacheSpec;
+use microcore::workloads::{sharded_normalize, sharded_sum};
+
+const N: usize = 2048;
+const MU: f64 = 0.25;
+const SCALE: f64 = 1.5;
+
+fn dataset() -> Vec<f32> {
+    // Deterministic, non-trivial mantissas (exercise f32 rounding).
+    (0..N).map(|i| (i as f32) * 0.1 - 7.3).collect()
+}
+
+fn pf(access: Access) -> PrefetchSpec {
+    PrefetchSpec { buffer_size: 240, elems_per_fetch: 120, distance: 120, access }
+}
+
+/// Normalize `dataset()` under the given decomposition; return the final
+/// array contents.
+fn normalized(cores: usize, policy: ShardPolicy, options: OffloadOptions) -> Vec<f32> {
+    let mut s = Session::builder(Technology::epiphany3()).seed(21).build().unwrap();
+    let d = s.alloc_host_f32("vol", &dataset()).unwrap();
+    let core_ids: Vec<usize> = (0..cores).collect();
+    sharded_normalize(&mut s, d, policy, &core_ids, MU, SCALE, options).unwrap();
+    s.read(d).unwrap()
+}
+
+#[test]
+fn sharded_runs_bit_identical_to_single_core_reference() {
+    let reference = normalized(
+        1,
+        ShardPolicy::Block,
+        OffloadOptions::default().transfer(TransferMode::OnDemand),
+    );
+    // Host-side oracle: same arithmetic, no device involved.
+    for (i, (&v, &x0)) in reference.iter().zip(dataset().iter()).enumerate() {
+        let expect = ((f64::from(x0) - MU) * SCALE) as f32;
+        assert_eq!(v, expect, "reference element {i}");
+    }
+
+    let block16 = normalized(
+        16,
+        ShardPolicy::Block,
+        OffloadOptions::default().transfer(TransferMode::OnDemand),
+    );
+    assert_eq!(reference, block16, "16-core block == 1-core reference");
+
+    // A block size that divides nothing evenly: partial tail block,
+    // uneven per-core range counts — the merge must still be exact.
+    let cyclic16 = normalized(
+        16,
+        ShardPolicy::BlockCyclic { block_elems: 7 },
+        OffloadOptions::default().transfer(TransferMode::OnDemand),
+    );
+    assert_eq!(reference, cyclic16, "16-core block-cyclic == reference");
+
+    let cyclic16_pf = normalized(
+        16,
+        ShardPolicy::BlockCyclic { block_elems: 64 },
+        OffloadOptions::default().prefetch(pf(Access::Mutable)),
+    );
+    assert_eq!(reference, cyclic16_pf, "pre-fetched cyclic == reference");
+}
+
+#[test]
+fn cache_changes_times_but_never_values() {
+    let run = |cache: Option<CacheSpec>| {
+        let mut s = Session::builder(Technology::epiphany3()).seed(33).build().unwrap();
+        let d = match cache {
+            Some(spec) => s.alloc_host_cached_f32("vol", &dataset(), spec).unwrap(),
+            None => s.alloc_host_f32("vol", &dataset()).unwrap(),
+        };
+        let cores: Vec<usize> = (0..16).collect();
+        let mut sums = Vec::new();
+        for _epoch in 0..3 {
+            let (sum, _res) = sharded_sum(
+                &mut s,
+                d,
+                ShardPolicy::Block,
+                &cores,
+                OffloadOptions::default().prefetch(pf(Access::ReadOnly)),
+            )
+            .unwrap();
+            sums.push(sum);
+        }
+        (sums, s.cache_counters(d).unwrap())
+    };
+
+    let (plain_sums, plain_counters) = run(None);
+    let spec = CacheSpec { segment_elems: 256, capacity_segments: 8 };
+    let (cached_sums, cached_counters) = run(Some(spec));
+
+    assert_eq!(plain_sums, cached_sums, "cache must not change numerics");
+    assert_eq!(plain_sums[0], plain_sums[1], "same data every epoch");
+    assert!(plain_counters.is_none());
+    let c = cached_counters.expect("cached variable reports counters");
+    // 2048 elems / 256-elem segments = 8 segments, capacity 8: epoch 1
+    // pays the 8 compulsory misses, epochs 2-3 run fully resident.
+    assert_eq!(c.misses, 8, "{c:?}");
+    assert!(c.hits > 0);
+    assert!(c.hit_rate() > 0.5, "{c:?}");
+    assert_eq!(c.evictions, 0);
+}
+
+#[test]
+fn fast_path_toggle_is_invisible_with_cache_in_play() {
+    // The inline prefetch-hit fast path must stay bit-identical in
+    // virtual time when request costs depend on cache residency.
+    let run = |fast: bool| {
+        let mut s = Session::builder(Technology::epiphany3()).seed(7).build().unwrap();
+        s.engine_mut().set_fast_path(fast);
+        let spec = CacheSpec { segment_elems: 256, capacity_segments: 8 };
+        let d = s.alloc_host_cached_f32("vol", &dataset(), spec).unwrap();
+        let cores: Vec<usize> = (0..16).collect();
+        let mut out = Vec::new();
+        for _ in 0..2 {
+            let (sum, res) = sharded_sum(
+                &mut s,
+                d,
+                ShardPolicy::Block,
+                &cores,
+                OffloadOptions::default().prefetch(pf(Access::ReadOnly)),
+            )
+            .unwrap();
+            out.push((sum, res.elapsed(), res.total_stall(), res.total_requests()));
+        }
+        out
+    };
+    assert_eq!(run(true), run(false));
+}
+
+#[test]
+fn cache_write_back_coheres_with_sharded_mutation() {
+    // Mutate a cache-fronted volume through a sharded offload, evicting
+    // along the way, then verify the merged host view.
+    let mut s = Session::builder(Technology::epiphany3()).seed(13).build().unwrap();
+    // Tiny cache (2 segments of 128) under a 2048-element volume split
+    // into 16 zero-copy block shards (one segment each): sixteen cores
+    // interleaving on-demand reads and writes must evict and write back
+    // constantly and still be exact. (Block policy on purpose — cyclic
+    // shards stream host-side staging copies, not the cached base.)
+    let spec = CacheSpec { segment_elems: 128, capacity_segments: 2 };
+    let d = s.alloc_host_cached_f32("vol", &dataset(), spec).unwrap();
+    let cores: Vec<usize> = (0..16).collect();
+    sharded_normalize(
+        &mut s,
+        d,
+        ShardPolicy::Block,
+        &cores,
+        MU,
+        SCALE,
+        OffloadOptions::default().transfer(TransferMode::OnDemand),
+    )
+    .unwrap();
+    let out = s.read(d).unwrap();
+    for (i, (&v, &x0)) in out.iter().zip(dataset().iter()).enumerate() {
+        let expect = ((f64::from(x0) - MU) * SCALE) as f32;
+        assert_eq!(v, expect, "element {i} after evict/write-back churn");
+    }
+    let c = s.cache_counters(d).unwrap().unwrap();
+    assert!(c.evictions > 0, "the tiny cache must have thrashed: {c:?}");
+    assert!(c.write_backs > 0, "dirty victims were written back: {c:?}");
+}

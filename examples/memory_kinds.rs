@@ -15,9 +15,9 @@
 //! cargo run --release --example memory_kinds
 //! ```
 
-use microcore::coordinator::{ArgSpec, OffloadOptions, Session, TransferMode};
+use microcore::coordinator::{ArgSpec, Session, TransferMode};
 use microcore::device::Technology;
-use microcore::memory::DataRef;
+use microcore::memory::{DataRef, MemSpec};
 use microcore::metrics::report::{ms, Table};
 
 const SUM_KERNEL: &str = r#"
@@ -44,10 +44,10 @@ fn main() -> anyhow::Result<()> {
     let tmp = std::env::temp_dir().join(format!("mk_kinds_{}.f32", std::process::id()));
     for kind in ["host", "shared", "microcore", "file"] {
         let mut sess = Session::builder(tech.clone()).seed(1).build()?;
-        // THE one-line change of §3.2:
+        // THE one-line change of §3.2 — swap the MemSpec constructor:
         let dref: DataRef = match kind {
-            "host" => sess.alloc_host_f32("xs", &data)?,
-            "shared" => sess.alloc_shared_f32("xs", &data)?,
+            "host" => sess.alloc(MemSpec::host("xs").from(&data))?,
+            "shared" => sess.alloc(MemSpec::shared("xs").from(&data))?,
             "microcore" => {
                 // Per-core replicas hold per-core shards here: allocate a
                 // shard-sized replica and fill each core's copy.
@@ -63,11 +63,7 @@ fn main() -> anyhow::Result<()> {
                 }
                 d
             }
-            _ => {
-                let d = sess.alloc_file_f32("xs", &tmp, n)?;
-                sess.write(d, 0, &data)?;
-                d
-            }
+            _ => sess.alloc(MemSpec::file("xs", &tmp).from(&data))?,
         };
         let kernel = sess.compile_kernel("total", SUM_KERNEL)?;
         // Microcore replicas are per-core shards (broadcast view); others
@@ -77,11 +73,12 @@ fn main() -> anyhow::Result<()> {
         } else {
             ArgSpec::sharded(dref)
         };
-        let res = sess.offload(
-            &kernel,
-            &[arg],
-            OffloadOptions::default().transfer(TransferMode::OnDemand),
-        )?;
+        let res = sess
+            .launch(&kernel)
+            .arg(arg)
+            .mode(TransferMode::OnDemand)
+            .submit()?
+            .wait(&mut sess)?;
         let total: f64 = res.reports.iter().map(|r| r.value.as_f64().unwrap()).sum();
         assert!((total - expect).abs() < 1e-3, "{kind}: {total} vs {expect}");
         let info = sess.engine().registry().info(dref)?;
@@ -97,13 +94,14 @@ fn main() -> anyhow::Result<()> {
 
     // --- Listing 1's failure mode: eager copy that cannot fit ---------
     let mut sess = Session::builder(tech.clone()).seed(1).build()?;
-    let big = sess.alloc_host_zeroed("big", 4000 * 16)?; // 16 KB/core
+    let big = sess.alloc(MemSpec::host("big").zeroed(4000 * 16))?; // 16 KB/core
     let kernel = sess.compile_kernel("total", SUM_KERNEL)?;
-    let res = sess.offload(
-        &kernel,
-        &[ArgSpec::sharded(big)],
-        OffloadOptions::default().transfer(TransferMode::Eager),
-    )?;
+    let res = sess
+        .launch(&kernel)
+        .arg(ArgSpec::sharded(big))
+        .mode(TransferMode::Eager)
+        .submit()?
+        .wait(&mut sess)?;
     println!(
         "\nEager copy of 16 KB/core into a ~7 KB scratchpad: {} argument(s) \
          spilled to\nby-reference access (ePython's overflow behaviour) — the \
@@ -119,16 +117,16 @@ fn main() -> anyhow::Result<()> {
         "bump",
         "def bump(c):\n    c[0] = c[0] + 1.0 + core_id()\n    return c[0]\n",
     )?;
-    sess.offload(
-        &bump,
-        &[ArgSpec::Ref {
+    sess.launch(&bump)
+        .arg(ArgSpec::Ref {
             dref: counter,
             shard: false,
             access: microcore::coordinator::Access::Mutable,
             prefetch: microcore::coordinator::PrefetchChoice::Default,
-        }],
-        OffloadOptions::default().transfer(TransferMode::OnDemand),
-    )?;
+        })
+        .mode(TransferMode::OnDemand)
+        .submit()?
+        .wait(&mut sess)?;
     println!(
         "\ndefine_on_device/copy_to_device/copy_from_device: core 0 counter = {}, \
          core 15 counter = {}",

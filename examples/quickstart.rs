@@ -19,10 +19,9 @@
 //! ```
 
 use microcore::cli::Cli;
-use microcore::coordinator::{
-    Access, ArgSpec, OffloadOptions, PrefetchSpec, Session, TransferMode,
-};
+use microcore::coordinator::{Access, ArgSpec, PrefetchSpec, Session, TransferMode};
 use microcore::device::Technology;
+use microcore::memory::MemSpec;
 use microcore::metrics::report::{ms, Table};
 use microcore::sim::Rng;
 
@@ -62,29 +61,35 @@ fn main() -> anyhow::Result<()> {
 
     for mode in [TransferMode::Eager, TransferMode::OnDemand, TransferMode::Prefetch] {
         let mut sess = Session::builder(tech.clone()).seed(42).build()?;
-        // Listing 3: the memory kind is one call-site choice.
+        // Listing 3: the memory kind is one call-site choice — swap the
+        // MemSpec constructor and everything downstream follows.
         let (a, b) = match kind.as_str() {
             "shared" => (
-                sess.alloc_shared_f32("nums1", &nums1)?,
-                sess.alloc_shared_f32("nums2", &nums2)?,
+                sess.alloc(MemSpec::shared("nums1").from(&nums1))?,
+                sess.alloc(MemSpec::shared("nums2").from(&nums2))?,
             ),
             _ => (
-                sess.alloc_host_f32("nums1", &nums1)?,
-                sess.alloc_host_f32("nums2", &nums2)?,
+                sess.alloc(MemSpec::host("nums1").from(&nums1))?,
+                sess.alloc(MemSpec::host("nums2").from(&nums2))?,
             ),
         };
         let kernel = sess.compile_kernel("mykernel", KERNEL)?;
+        // The launch builder replaces the blocking offload call; submit
+        // returns a handle, wait drives the virtual timeline.
+        let builder =
+            sess.launch(&kernel).args(&[ArgSpec::sharded(a), ArgSpec::sharded(b)]);
         // Listing 2's annotation: buffer 10 elements, fetch 2, distance 10.
-        let opts = match mode {
-            TransferMode::Prefetch => OffloadOptions::default().prefetch(PrefetchSpec {
+        let handle = match mode {
+            TransferMode::Prefetch => builder.prefetch(PrefetchSpec {
                 buffer_size: 10,
                 elems_per_fetch: 2,
                 distance: 10,
                 access: Access::ReadOnly,
             }),
-            m => OffloadOptions::default().transfer(m),
-        };
-        let res = sess.offload(&kernel, &[ArgSpec::sharded(a), ArgSpec::sharded(b)], opts)?;
+            m => builder.mode(m),
+        }
+        .submit()?;
+        let res = handle.wait(&mut sess)?;
 
         // Gather the per-core result lists (the paper's returned list of
         // per-core values) and checksum them.

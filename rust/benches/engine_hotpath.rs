@@ -9,6 +9,9 @@
 //!   suspension → service → resume cycle);
 //! * pre-fetch hit path rate — exercises the engine's inline
 //!   prefetch-hit fast path;
+//! * pipelined dual-replica mlbench epochs — exercises the engine's
+//!   launch queue (two in-flight launches on disjoint core halves), and
+//!   prints the blocking-vs-pipelined virtual-time comparison;
 //! * tensor-builtin invocation rate through PJRT.
 //!
 //! ```text
@@ -25,9 +28,9 @@ use microcore::coordinator::{
     Access, ArgSpec, OffloadOptions, PrefetchSpec, Session, ShardPolicy, TransferMode,
 };
 use microcore::device::Technology;
-use microcore::memory::CacheSpec;
+use microcore::memory::{CacheSpec, MemSpec};
 use microcore::metrics::report::cache_table;
-use microcore::workloads::{sharded_normalize, sharded_sum};
+use microcore::workloads::{dual_half_epochs, sharded_normalize, sharded_sum};
 
 const SPIN: &str = r#"
 def spin(n):
@@ -80,12 +83,14 @@ fn main() -> anyhow::Result<()> {
     let m = time_wall("vm_spin_100k_iters_1core", warmup, iters, || {
         let mut sess = Session::builder(Technology::epiphany3()).seed(1).build().unwrap();
         let k = sess.compile_kernel("spin", SPIN).unwrap();
-        sess.offload(
-            &k,
-            &[ArgSpec::Int(iters_spin)],
-            OffloadOptions::default().transfer(TransferMode::OnDemand).on_cores(vec![0]),
-        )
-        .unwrap();
+        sess.launch(&k)
+            .arg(ArgSpec::Int(iters_spin))
+            .mode(TransferMode::OnDemand)
+            .cores(vec![0])
+            .submit()
+            .unwrap()
+            .wait(&mut sess)
+            .unwrap();
     });
     // ~10 bytecode ops per iteration (counted unfused; fusion executes
     // them as 3 superinstructions but charges the same dispatches).
@@ -97,14 +102,15 @@ fn main() -> anyhow::Result<()> {
     let n = 16_000usize;
     let m = time_wall("ondemand_16k_roundtrips", warmup, iters, || {
         let mut sess = Session::builder(Technology::epiphany3()).seed(1).build().unwrap();
-        let x = sess.alloc_host_zeroed("x", n).unwrap();
+        let x = sess.alloc(MemSpec::host("x").zeroed(n)).unwrap();
         let k = sess.compile_kernel("stream", STREAM).unwrap();
-        sess.offload(
-            &k,
-            &[ArgSpec::sharded(x)],
-            OffloadOptions::default().transfer(TransferMode::OnDemand),
-        )
-        .unwrap();
+        sess.launch(&k)
+            .arg(ArgSpec::sharded(x))
+            .mode(TransferMode::OnDemand)
+            .submit()
+            .unwrap()
+            .wait(&mut sess)
+            .unwrap();
     });
     case(&m, Some(n as f64 / m.mean()));
     println!("  -> ~{:.2} M round-trips/s", n as f64 / m.mean() / 1e6);
@@ -112,19 +118,20 @@ fn main() -> anyhow::Result<()> {
     // 3. Pre-fetch hit path rate.
     let m = time_wall("prefetch_16k_elements", warmup, iters, || {
         let mut sess = Session::builder(Technology::epiphany3()).seed(1).build().unwrap();
-        let x = sess.alloc_host_zeroed("x", n).unwrap();
+        let x = sess.alloc(MemSpec::host("x").zeroed(n)).unwrap();
         let k = sess.compile_kernel("stream", STREAM).unwrap();
-        sess.offload(
-            &k,
-            &[ArgSpec::sharded(x)],
-            OffloadOptions::default().prefetch(PrefetchSpec {
+        sess.launch(&k)
+            .arg(ArgSpec::sharded(x))
+            .prefetch(PrefetchSpec {
                 buffer_size: 240,
                 elems_per_fetch: 120,
                 distance: 120,
                 access: Access::ReadOnly,
-            }),
-        )
-        .unwrap();
+            })
+            .submit()
+            .unwrap()
+            .wait(&mut sess)
+            .unwrap();
     });
     case(&m, Some(n as f64 / m.mean()));
     println!("  -> ~{:.2} M element-reads/s via prefetch", n as f64 / m.mean() / 1e6);
@@ -134,7 +141,7 @@ fn main() -> anyhow::Result<()> {
     let m = time_wall("sharded_scan_16core", warmup, iters, || {
         let mut sess = Session::builder(Technology::epiphany3()).seed(1).build().unwrap();
         let data: Vec<f32> = (0..n).map(|i| i as f32).collect();
-        let x = sess.alloc_host_f32("x", &data).unwrap();
+        let x = sess.alloc(MemSpec::host("x").from(&data)).unwrap();
         let cores: Vec<usize> = (0..16).collect();
         sharded_normalize(
             &mut sess,
@@ -162,7 +169,7 @@ fn main() -> anyhow::Result<()> {
         let mut sess = Session::builder(Technology::epiphany3()).seed(1).build().unwrap();
         let data: Vec<f32> = (0..n).map(|i| i as f32).collect();
         let spec = CacheSpec { segment_elems: 1000, capacity_segments: 16 };
-        let x = sess.alloc_host_cached_f32("x", &data, spec).unwrap();
+        let x = sess.alloc(MemSpec::cached("x", spec).from(&data)).unwrap();
         let cores: Vec<usize> = (0..16).collect();
         for _ in 0..epochs {
             sharded_sum(
@@ -192,7 +199,55 @@ fn main() -> anyhow::Result<()> {
     );
     cached_run(true); // one uncounted run to surface the hit/miss audit
 
-    // 6. Tensor-builtin (PJRT) invocation rate, if artifacts exist and
+    // 6. Pipelined dual-replica mlbench epochs: two model replicas on
+    // disjoint 8-core halves with each phase pair in flight together —
+    // the launch-queue layer's workload. The timed case is the pipelined
+    // variant; one uncounted blocking run prints the virtual-time
+    // comparison (the async API's whole point: same kernels, lower
+    // wall-virtual time).
+    let ml_images = 2usize;
+    let ml_epochs = 2usize;
+    let m = time_wall("pipelined_epochs_8core", warmup, iters, || {
+        dual_half_epochs(
+            Technology::epiphany3(),
+            1,
+            TransferMode::Prefetch,
+            ml_images,
+            ml_epochs,
+            true,
+        )
+        .unwrap();
+    });
+    case(&m, Some((ml_images * ml_epochs * 2) as f64 / m.mean()));
+    {
+        let blocking = dual_half_epochs(
+            Technology::epiphany3(),
+            1,
+            TransferMode::Prefetch,
+            ml_images,
+            ml_epochs,
+            false,
+        )
+        .unwrap();
+        let pipelined = dual_half_epochs(
+            Technology::epiphany3(),
+            1,
+            TransferMode::Prefetch,
+            ml_images,
+            ml_epochs,
+            true,
+        )
+        .unwrap();
+        assert_eq!(blocking.losses_a, pipelined.losses_a, "overlap never changes values");
+        println!(
+            "  -> virtual time: blocking {} ns, pipelined {} ns ({:.2}x)",
+            blocking.elapsed,
+            pipelined.elapsed,
+            blocking.elapsed as f64 / pipelined.elapsed as f64
+        );
+    }
+
+    // 7. Tensor-builtin (PJRT) invocation rate, if artifacts exist and
     // the build carries the real PJRT backend (stub builds would error
     // at session construction).
     if cfg!(feature = "xla") && std::path::Path::new("artifacts/manifest.json").exists() {

@@ -1,17 +1,44 @@
-//! The offload engine: a deterministic min-clock discrete-event scheduler.
+//! The offload engine: a deterministic min-clock discrete-event scheduler
+//! with an asynchronous launch queue.
 //!
 //! Each participating core runs a resumable [`Interp`]; the engine
 //! interleaves them with the channel protocol, the host service, the
 //! shared link and PJRT tensor execution, all over virtual time.
 //!
+//! **Launch queue (in-flight pipelining).** [`Engine::submit`] enqueues a
+//! launch and returns a [`LaunchId`] without advancing time; completion is
+//! driven by [`Engine::wait`] / [`Engine::wait_all`] / [`Engine::poll`].
+//! Multiple submitted launches share one virtual timeline under *per-core
+//! occupancy*: a launch activates (stages code, eager copies, pre-fetch
+//! warm-up) as soon as every core it names is free, so two launches on
+//! disjoint core sets overlap their staging, compute and harvest phases,
+//! while launches contending for a core queue deterministically in
+//! submission order (work-conserving: a later launch whose cores are all
+//! free starts ahead of an earlier one still blocked on a different
+//! core). Sequential submit-then-wait is bit-identical to the
+//! classic blocking [`Engine::offload`] (which is now literally
+//! submit + wait); `tests/async_launch.rs` enforces both properties.
+//! Overlapping launches that share *mutable* data see §3.3's weak memory
+//! model writ large: element accesses interleave deterministically in
+//! virtual-time order, but no cross-launch ordering is promised — keep
+//! in-flight launches to disjoint mutable data (the shard planner's
+//! ownership rule).
+//!
 //! **Scheduling discipline (exactness).** Every core has a *candidate
 //! time*: its local clock (runnable / produced an outcome), its pending
 //! transfer's arrival time (blocked), or its channel's next free-cell time
 //! (backpressured). The engine always services the core with the minimum
-//! candidate. Cores interact *only* through the host service and link
+//! candidate over *all active launches* (ties: submission order, then core
+//! position). Cores interact *only* through the host service and link
 //! resources, and every resource allocation happens at the picked core's
 //! candidate time — a non-decreasing sequence — so FCFS resource order
 //! equals virtual-time order and the simulation is exact, not approximate.
+//! Two bounded exceptions soften the non-decreasing property without
+//! breaking determinism (resources serialize FCFS in call order, like a
+//! real bus — see `sim/timeline.rs`): teardown copy-backs are issued at
+//! each core's own finish time, and a queued launch activates at the
+//! freed cores' release times, both of which may sit slightly behind the
+//! global cursor when other launches are still in flight.
 //!
 //! **Numerics are real.** Element reads return the variable's actual
 //! contents from the [`MemRegistry`]; writes land in it; tensor builtins
@@ -49,6 +76,8 @@
 //! only in virtual time.
 
 use std::cell::RefCell;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 use std::rc::Rc;
 
 use crate::channel::protocol::{Request, RequestKind, FRAME_HEADER_BYTES};
@@ -89,6 +118,54 @@ pub struct EngineStats {
 /// Outcome summary of one engine-level offload (see also
 /// [`OffloadResult`], which the offload layer assembles from this).
 pub type OffloadOutcome = OffloadResult;
+
+/// Identifier of a submitted launch, returned by [`Engine::submit`] and
+/// redeemed by [`Engine::wait`]. Wrapped by the session layer's
+/// `OffloadHandle`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LaunchId(pub(crate) u64);
+
+/// Lifecycle stage of a submitted launch ([`Engine::launch_status`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaunchStatus {
+    /// Submitted but not yet staged onto its cores: queued behind
+    /// launches occupying one of them, or simply not driven yet (nothing
+    /// runs until a `wait`/`wait_all`/`poll` drives the timeline).
+    Pending,
+    /// Staged on its cores and progressing on the virtual timeline.
+    Active,
+    /// Finished; the result is parked until `wait` claims it.
+    Completed,
+}
+
+/// Event-heap sentinel in the core-position slot: the event activates the
+/// launch (stages it onto its now-free cores) instead of stepping a core.
+const EV_ACTIVATE: usize = usize::MAX;
+
+/// One entry in the engine's launch table: everything needed to stage the
+/// launch when its cores free up, the per-core runs while active, and the
+/// parked result once complete.
+struct Launch {
+    id: u64,
+    kernel: Kernel,
+    /// Per-core bound arguments; consumed at activation.
+    bound: Option<Vec<Vec<BoundArg>>>,
+    options: OffloadOptions,
+    core_ids: Vec<usize>,
+    submitted_at: Time,
+    launched_at: Time,
+    /// Cores reserved (owner recorded) and the activation event scheduled.
+    reserved: bool,
+    active: bool,
+    /// Slot is `None` only transiently while that core is being stepped.
+    cores: Vec<Option<CoreRun>>,
+    /// Cores not yet `Done`.
+    live: usize,
+    spills: u64,
+    /// Parked completion: the result, or the error that killed this
+    /// launch (claimed exactly once by `wait`).
+    outcome: Option<Result<OffloadResult>>,
+}
 
 #[derive(Debug)]
 struct ExtBind {
@@ -161,6 +238,20 @@ pub struct Engine {
     /// Inline prefetch-hit fast path enabled (see module docs). On by
     /// default; the differential tests switch it off to compare.
     fast_path: bool,
+    /// The launch table: pending, active and completed-unclaimed launches
+    /// in submission order.
+    launches: Vec<Launch>,
+    /// Global event heap over all active launches: `(candidate time,
+    /// launch id, core position | EV_ACTIVATE)`. Ties resolve to the
+    /// earlier-submitted launch, then the lower core position — for a
+    /// single launch this is exactly the pre-queue scheduler's ordering.
+    events: BinaryHeap<Reverse<(Time, u64, usize)>>,
+    /// Per physical core: the launch currently reserving/occupying it.
+    core_owner: Vec<Option<u64>>,
+    /// Per physical core: virtual time it was last released (its final
+    /// `finished_at` including teardown copy-backs).
+    core_free: Vec<Time>,
+    next_launch: u64,
 }
 
 impl std::fmt::Debug for Engine {
@@ -188,6 +279,7 @@ impl Engine {
         let compute = ComputeModel::new(&tech);
         let power = PowerModel::new(&tech);
         let hidden = exec.as_ref().map_or(100, |e| e.hidden());
+        let cores = tech.cores;
         Engine {
             tech,
             compute,
@@ -203,6 +295,11 @@ impl Engine {
             scratch_b: Vec::new(),
             scratch_m: Vec::new(),
             fast_path: true,
+            launches: Vec::new(),
+            events: BinaryHeap::new(),
+            core_owner: vec![None; cores],
+            core_free: vec![0; cores],
+            next_launch: 0,
         }
     }
 
@@ -274,7 +371,10 @@ impl Engine {
         self.exec.as_ref()
     }
 
-    /// Run a kernel across cores (blocking collective, the paper's default).
+    /// Run a kernel across cores, blocking until it completes (the paper's
+    /// default collective). Literally [`Engine::submit`] + [`Engine::wait`]
+    /// — already-submitted launches keep progressing on the shared
+    /// timeline while this one runs.
     pub fn offload(
         &mut self,
         kernel: &Kernel,
@@ -282,8 +382,242 @@ impl Engine {
         options: &OffloadOptions,
         core_ids: &[usize],
     ) -> Result<OffloadResult> {
+        let id = self.submit(kernel, bound, options, core_ids)?;
+        self.wait(id)
+    }
+
+    /// Enqueue a launch without blocking and without advancing virtual
+    /// time. The launch activates — stages code pushes, eager copies and
+    /// pre-fetch warm-up — as soon as every core in `core_ids` is free:
+    /// immediately if they are free now, otherwise deterministically
+    /// queued (submission order) behind the launches occupying them.
+    /// Redeem the id with [`Engine::wait`]; progress happens inside
+    /// `wait`/`wait_all`/`poll`, never spontaneously.
+    pub fn submit(
+        &mut self,
+        kernel: &Kernel,
+        bound: Vec<Vec<BoundArg>>,
+        options: &OffloadOptions,
+        core_ids: &[usize],
+    ) -> Result<LaunchId> {
         debug_assert_eq!(bound.len(), core_ids.len());
-        let launch = self.now;
+        if core_ids.is_empty() {
+            return Err(Error::Coordinator("launch requires at least one core".into()));
+        }
+        self.tech.validate_cores(core_ids)?;
+        let id = self.next_launch;
+        self.next_launch += 1;
+        self.launches.push(Launch {
+            id,
+            kernel: kernel.clone(),
+            bound: Some(bound),
+            options: options.clone(),
+            core_ids: core_ids.to_vec(),
+            submitted_at: self.now,
+            launched_at: self.now,
+            reserved: false,
+            active: false,
+            cores: Vec::new(),
+            live: core_ids.len(),
+            spills: 0,
+            outcome: None,
+        });
+        self.reserve_ready();
+        Ok(LaunchId(id))
+    }
+
+    /// Drive the timeline until launch `id` completes; claim and return
+    /// its result — or the error that killed it (a failing launch parks
+    /// its own error and never poisons another launch's wait). Waiting on
+    /// an id twice is an error. Other in-flight launches progress as a
+    /// side effect — their outcomes stay parked for their own `wait`.
+    pub fn wait(&mut self, id: LaunchId) -> Result<OffloadResult> {
+        loop {
+            let Some(pos) = self.launches.iter().position(|l| l.id == id.0) else {
+                return Err(Error::Coordinator(format!(
+                    "launch {} is unknown or already waited",
+                    id.0
+                )));
+            };
+            if self.launches[pos].outcome.is_some() {
+                let l = self.launches.remove(pos);
+                return l.outcome.expect("checked above");
+            }
+            if !self.drive_one()? {
+                return Err(Error::Coordinator(
+                    "launch queue stalled: in-flight launches but no runnable events".into(),
+                ));
+            }
+        }
+    }
+
+    /// Drive the timeline until every submitted launch has completed (or
+    /// failed). Outcomes stay parked — including per-launch errors —
+    /// until claimed with [`Engine::wait`], which then returns
+    /// immediately; unclaimed outcomes are retained for the session's
+    /// lifetime, so long fire-and-forget loops should wait their handles
+    /// to reclaim the memory.
+    pub fn wait_all(&mut self) -> Result<()> {
+        while self.launches.iter().any(|l| l.outcome.is_none()) {
+            if !self.drive_one()? {
+                return Err(Error::Coordinator(
+                    "launch queue stalled: in-flight launches but no runnable events".into(),
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Drive the timeline until *some* launch is complete and unclaimed,
+    /// returning its id (`None` when nothing is in flight). Repeated calls
+    /// return the same id until it is `wait`ed.
+    pub fn poll(&mut self) -> Result<Option<LaunchId>> {
+        loop {
+            if let Some(l) = self.launches.iter().find(|l| l.outcome.is_some()) {
+                return Ok(Some(LaunchId(l.id)));
+            }
+            if !self.drive_one()? {
+                return Ok(None);
+            }
+        }
+    }
+
+    /// Lifecycle stage of a submitted launch; `None` once waited (or never
+    /// submitted).
+    pub fn launch_status(&self, id: LaunchId) -> Option<LaunchStatus> {
+        self.launches.iter().find(|l| l.id == id.0).map(|l| {
+            if l.outcome.is_some() {
+                LaunchStatus::Completed
+            } else if l.active {
+                LaunchStatus::Active
+            } else {
+                LaunchStatus::Pending
+            }
+        })
+    }
+
+    /// Launches submitted but not yet complete (pending + active).
+    pub fn in_flight(&self) -> usize {
+        self.launches.iter().filter(|l| l.outcome.is_none()).count()
+    }
+
+    /// Reserve cores for every launch whose core set is entirely free, in
+    /// submission order, and schedule its activation event at
+    /// `max(submit time, last release time of its cores)`.
+    ///
+    /// The scan is *work-conserving*, not strict FIFO: launches that
+    /// mutually contend for a core are reserved in submission order, but
+    /// a later launch whose cores are all free starts ahead of an earlier
+    /// launch still blocked on a different core (no head-of-line
+    /// blocking across disjoint core sets). Deterministic either way; a
+    /// pending launch can be deferred indefinitely only by a caller who
+    /// keeps submitting conflicting work before driving it to completion.
+    fn reserve_ready(&mut self) {
+        for li in 0..self.launches.len() {
+            if self.launches[li].reserved {
+                continue;
+            }
+            if self.launches[li]
+                .core_ids
+                .iter()
+                .any(|&c| self.core_owner[c].is_some())
+            {
+                continue;
+            }
+            let id = self.launches[li].id;
+            let mut at = self.launches[li].submitted_at;
+            for &c in &self.launches[li].core_ids {
+                self.core_owner[c] = Some(id);
+                at = at.max(self.core_free[c]);
+            }
+            self.launches[li].reserved = true;
+            self.events.push(Reverse((at, id, EV_ACTIVATE)));
+        }
+    }
+
+    /// Process one event from the global heap: activate a launch or step
+    /// one core at its candidate time. Returns `false` when the heap is
+    /// empty (nothing active). On error the offending launch is dropped
+    /// and its cores released, so the engine stays usable.
+    fn drive_one(&mut self) -> Result<bool> {
+        let Some(Reverse((t, id, pos))) = self.events.pop() else {
+            return Ok(false);
+        };
+        // Stale event for a launch already waited/aborted.
+        let Some(li) = self.launches.iter().position(|l| l.id == id) else {
+            return Ok(true);
+        };
+        if pos == EV_ACTIVATE {
+            if let Err(e) = self.activate(li, t) {
+                self.fail_launch(li, e);
+            }
+            return Ok(true);
+        }
+        match self.launches[li]
+            .cores
+            .get(pos)
+            .and_then(|c| c.as_ref())
+            .and_then(|c| Self::candidate(c))
+        {
+            Some(cand) if cand == t => {}
+            Some(cand) => {
+                self.events.push(Reverse((cand, id, pos))); // stale entry
+                return Ok(true);
+            }
+            None => return Ok(true),
+        }
+        let mut core = self.launches[li].cores[pos].take().expect("core parked");
+        let stepped = self.step_core(&mut core, t);
+        let next = Self::candidate(&core);
+        let done = matches!(core.status, Status::Done);
+        self.launches[li].cores[pos] = Some(core);
+        if let Err(e) = stepped {
+            self.fail_launch(li, e);
+            return Ok(true);
+        }
+        if let Some(nt) = next {
+            self.events.push(Reverse((nt, id, pos)));
+        }
+        if done {
+            self.launches[li].live -= 1;
+            if self.launches[li].live == 0 {
+                if let Err(e) = self.complete(li) {
+                    self.fail_launch(li, e);
+                }
+            }
+        }
+        Ok(true)
+    }
+
+    /// Park an error as launch `li`'s outcome and release its cores so
+    /// the rest of the queue keeps running. The error surfaces from
+    /// *this* launch's `wait` — never from another launch's. Remaining
+    /// heap events for the launch become stale no-ops (its core slots are
+    /// dropped).
+    fn fail_launch(&mut self, li: usize, e: Error) {
+        let l = &mut self.launches[li];
+        l.cores.clear();
+        l.outcome = Some(Err(e));
+        let id = l.id;
+        let core_ids = l.core_ids.clone();
+        for &c in &core_ids {
+            if self.core_owner[c] == Some(id) {
+                self.core_owner[c] = None;
+            }
+        }
+        self.reserve_ready();
+    }
+
+    /// Stage launch `li` onto its (free) cores at virtual time `at`: code
+    /// pushes, eager copies / spills, reference binding, and the pre-fetch
+    /// warm-up — the classic blocking launch sequence, verbatim.
+    fn activate(&mut self, li: usize, at: Time) -> Result<()> {
+        let bound = self.launches[li].bound.take().expect("activated exactly once");
+        let kernel = self.launches[li].kernel.clone();
+        let options = self.launches[li].options.clone();
+        let core_ids = self.launches[li].core_ids.clone();
+        let id = self.launches[li].id;
+        let launch = at;
         let mut spills = 0u64;
         let mut cores: Vec<CoreRun> = Vec::with_capacity(core_ids.len());
 
@@ -433,35 +767,38 @@ impl Engine {
             }
         }
 
-        // ---- main scheduling loop ----
-        // Indexed min-structure over candidate times (perf pass #4): a
-        // binary heap keyed by (candidate time, core position) replaces
-        // the O(n) scan per step. A core's candidate only moves when it is
-        // stepped, so exactly one live entry per runnable core exists at a
-        // time; the stale-entry guard is defensive. Ties break on core
-        // position, matching the old scan's first-minimum choice, so the
-        // service order — and therefore every virtual time — is unchanged.
-        let mut heap: std::collections::BinaryHeap<std::cmp::Reverse<(Time, usize)>> = cores
-            .iter()
-            .enumerate()
-            .filter_map(|(i, c)| Self::candidate(c).map(|t| std::cmp::Reverse((t, i))))
-            .collect();
-        while let Some(std::cmp::Reverse((t, i))) = heap.pop() {
-            match Self::candidate(&cores[i]) {
-                Some(cand) if cand == t => {
-                    self.step_core(&mut cores[i], t)?;
-                    if let Some(next) = Self::candidate(&cores[i]) {
-                        heap.push(std::cmp::Reverse((next, i)));
-                    }
-                }
-                Some(cand) => heap.push(std::cmp::Reverse((cand, i))), // stale entry
-                None => {}
+        // Schedule the cores' first steps on the global event heap. For a
+        // single active launch the heap degenerates to the classic
+        // (candidate time, core position) min-structure — ties break on
+        // core position, so the service order and every virtual time match
+        // the pre-queue blocking scheduler exactly.
+        for (pos, c) in cores.iter().enumerate() {
+            if let Some(t) = Self::candidate(c) {
+                self.events.push(Reverse((t, id, pos)));
             }
         }
+        let l = &mut self.launches[li];
+        l.cores = cores.into_iter().map(Some).collect();
+        l.active = true;
+        l.launched_at = launch;
+        l.spills = spills;
+        Ok(())
+    }
 
-        // ---- teardown: copy-backs, reports, power ----
+    /// Teardown for a launch whose cores are all `Done`: mutable-eager
+    /// copy-backs, per-core reports, power accounting; park the result and
+    /// release the cores (which may activate queued launches).
+    fn complete(&mut self, li: usize) -> Result<()> {
+        let launch = self.launches[li].launched_at;
+        let core_ids = self.launches[li].core_ids.clone();
+        let spills = self.launches[li].spills;
+        let mut cores: Vec<CoreRun> = self.launches[li]
+            .cores
+            .drain(..)
+            .map(|c| c.expect("all cores parked at completion"))
+            .collect();
         // Process in finish-time order so copy-back resource allocations
-        // stay globally time-ordered; reports re-sorted by core id after.
+        // stay time-ordered among themselves; reports re-sorted after.
         cores.sort_by_key(|c| c.finished_at);
         let mut finish = launch;
         let mut reports = Vec::with_capacity(cores.len());
@@ -478,6 +815,10 @@ impl Engine {
             }
             finish = finish.max(c.finished_at);
             busy_total += c.finished_at.saturating_sub(c.start).saturating_sub(c.stall);
+            // Release occupancy at this core's own final finish time, so a
+            // queued launch can start on it as early as possible.
+            self.core_owner[c.id] = None;
+            self.core_free[c.id] = c.finished_at;
             reports.push(CoreReport {
                 core: c.id,
                 value: c.result.take().unwrap_or(Value::None),
@@ -495,10 +836,23 @@ impl Engine {
         let duration = finish.saturating_sub(launch).max(1);
         let utilization =
             busy_total as f64 / (duration as f64 * self.tech.cores as f64);
-        self.power.advance(finish, utilization.min(1.0));
-        self.now = finish;
+        // `now` is the completion watermark (monotone even when launches
+        // finish out of submission order); power integrates up to it.
+        // With overlapped launches this attributes each launch's average
+        // utilization to the watermark-to-finish tail only — an
+        // energy-model approximation (virtual times are exact; sequential
+        // runs are unaffected, where watermark == previous finish).
+        self.now = self.now.max(finish);
+        self.power.advance(self.now, utilization.min(1.0));
         self.stats.offloads += 1;
-        Ok(OffloadResult { reports, launched_at: launch, finished_at: finish, spills })
+        self.launches[li].outcome = Some(Ok(OffloadResult {
+            reports,
+            launched_at: launch,
+            finished_at: finish,
+            spills,
+        }));
+        self.reserve_ready();
+        Ok(())
     }
 
     /// A core's candidate time: when it next needs service (`None` once

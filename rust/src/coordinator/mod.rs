@@ -3,9 +3,13 @@
 //! §3 defines the programming model this module implements:
 //!
 //! * **Kernel offload** ([`offload`], [`session`]) — kernels are compiled
-//!   once and invoked across all (or a subset of) micro-cores; by default
-//!   execution is blocking and every core receives the same kernel with
-//!   per-core argument shards.
+//!   once and invoked across all (or a subset of) micro-cores through the
+//!   asynchronous launch surface: `session.launch(&k)` builds the
+//!   invocation, `.submit()` returns an [`OffloadHandle`], and
+//!   `wait`/`wait_all`/`poll` drive completion. Sequential submit-then-
+//!   wait reproduces the paper's blocking collective bit-for-bit, while
+//!   launches on disjoint core sets pipeline on the shared virtual
+//!   timeline ([`engine`]'s launch queue).
 //! * **Pass by reference** ([`marshal`]) — instead of eagerly copying
 //!   argument data to the device, the coordinator sends opaque
 //!   [`crate::memory::DataRef`]s; element accesses on the cores become
@@ -32,12 +36,12 @@ pub mod service;
 pub mod session;
 pub mod shard;
 
-pub use engine::{Engine, EngineStats, OffloadOutcome};
+pub use engine::{Engine, EngineStats, LaunchId, LaunchStatus, OffloadOutcome};
 pub use marshal::{ArgSpec, BoundArg, PrefetchChoice};
 pub use offload::{Kernel, KernelRegistry, OffloadOptions, OffloadResult};
 pub use prefetch::{PrefetchSpec, PrefetchState};
 pub use service::HostService;
-pub use session::{Session, SessionBuilder};
+pub use session::{LaunchBuilder, OffloadHandle, Session, SessionBuilder};
 pub use shard::{ShardAssignment, ShardPlan, ShardPolicy};
 
 /// How kernel arguments travel to the device (§3.1).

@@ -15,10 +15,13 @@ use super::prefetch::PrefetchSpec;
 use super::TransferMode;
 
 /// A compiled kernel ready for offload.
+///
+/// Cloning is two reference-count bumps (`Rc`-backed name and program), so
+/// kernels pass by value freely — the registry, the launch builder and the
+/// engine's launch table all hold their own handle to one shared program.
 #[derive(Debug, Clone)]
 pub struct Kernel {
-    /// Registry name.
-    pub name: String,
+    name: Rc<str>,
     /// Compiled program (shared across invocations).
     pub program: Rc<Program>,
 }
@@ -27,7 +30,18 @@ impl Kernel {
     /// Compile kernel source; `entry` selects the `def` (default: last).
     pub fn compile(name: impl Into<String>, src: &str, entry: Option<&str>) -> Result<Kernel> {
         let program = Rc::new(vm::compile_source(src, entry)?);
-        Ok(Kernel { name: name.into(), program })
+        Ok(Kernel { name: Rc::from(name.into()), program })
+    }
+
+    /// Wrap an already-compiled program (e.g. the fusion differential
+    /// tests, which compile fused and unfused variants directly).
+    pub fn from_program(name: impl Into<String>, program: Rc<Program>) -> Kernel {
+        Kernel { name: Rc::from(name.into()), program }
+    }
+
+    /// Registry name.
+    pub fn name(&self) -> &str {
+        &self.name
     }
 
     /// Bytecode footprint (the part of the local store user code occupies).
@@ -48,10 +62,11 @@ impl KernelRegistry {
         Self::default()
     }
 
-    /// Compile + register. Re-registering a name replaces it.
+    /// Compile + register. Re-registering a name replaces it. The stored
+    /// and returned kernels share one `Rc`-backed program — no deep copy.
     pub fn register(&mut self, name: &str, src: &str, entry: Option<&str>) -> Result<Kernel> {
         let k = Kernel::compile(name, src, entry)?;
-        if let Some(slot) = self.kernels.iter_mut().find(|e| e.name == name) {
+        if let Some(slot) = self.kernels.iter_mut().find(|e| e.name() == name) {
             *slot = k.clone();
         } else {
             self.kernels.push(k.clone());
@@ -59,11 +74,12 @@ impl KernelRegistry {
         Ok(k)
     }
 
-    /// Look up by name.
+    /// Look up by name (borrow; clone the result only if you need to keep
+    /// it across a mutable session call — the clone is two `Rc` bumps).
     pub fn get(&self, name: &str) -> Result<&Kernel> {
         self.kernels
             .iter()
-            .find(|k| k.name == name)
+            .find(|k| k.name() == name)
             .ok_or_else(|| Error::Coordinator(format!("unknown kernel '{name}'")))
     }
 
@@ -119,6 +135,12 @@ impl OffloadOptions {
     pub fn prefetch(mut self, spec: PrefetchSpec) -> Self {
         self.mode = TransferMode::Prefetch;
         self.default_prefetch = Some(spec);
+        self
+    }
+
+    /// Set the per-core dispatch budget (runaway guard).
+    pub fn fuel(mut self, fuel: u64) -> Self {
+        self.fuel = fuel;
         self
     }
 }

@@ -7,30 +7,57 @@
 //!
 //! | paper (Python)                         | here                                      |
 //! |----------------------------------------|-------------------------------------------|
-//! | `memkind.Host(types.int, 1000)`        | [`Session::alloc_host_f32`]               |
-//! | `memkind.Shared(...)`                  | [`Session::alloc_shared_f32`]             |
-//! | `memkind.Microcore(...)`               | [`Session::alloc_microcore_f32`]          |
-//! | `@offload` + call                      | [`Session::compile_kernel`] + [`Session::offload`] |
-//! | `prefetch={...}` decorator argument    | [`ArgSpec::with_prefetch`] / [`OffloadOptions::prefetch`] |
+//! | `memkind.Host(types.int, 1000)`        | [`Session::alloc`] + [`MemSpec::host`]    |
+//! | `memkind.Shared(...)`                  | [`Session::alloc`] + [`MemSpec::shared`]  |
+//! | `memkind.Microcore(...)`               | [`Session::alloc`] + [`MemSpec::microcore`] |
+//! | `@offload` + call                      | [`Session::compile_kernel`] + [`Session::launch`] |
+//! | `prefetch={...}` decorator argument    | [`ArgSpec::with_prefetch`] / [`LaunchBuilder::prefetch`] |
 //! | `define_on_device` / `copy_to_device` / `copy_from_device` | [`Session::define_on_device`] / [`Session::copy_to_device`] / [`Session::copy_from_device`] |
 //!
-//! Changing where data lives is one call-site change — swap the alloc
-//! method — with everything downstream (reference decoding, transfer
-//! costs, host staging) following from the kind, as §3.2 prescribes.
+//! Changing where data lives is one call-site change — swap the
+//! [`MemSpec`] constructor — with everything downstream (reference
+//! decoding, transfer costs, host staging) following from the kind, as
+//! §3.2 prescribes.
+//!
+//! ## Asynchronous launches
+//!
+//! Kernel invocation is an asynchronous *launch*:
+//!
+//! ```ignore
+//! let h = sess.launch(&kernel).args(&[ArgSpec::sharded(a)]).submit()?;
+//! // ... submit more launches; disjoint core sets pipeline ...
+//! let result = h.wait(&mut sess)?;          // or sess.wait_all()?
+//! ```
+//!
+//! Submit-then-wait reproduces the classic blocking collective
+//! bit-for-bit; several submitted launches share the virtual timeline
+//! under the engine's per-core occupancy model (see
+//! [`super::engine`]'s module docs). `handle.wait(&mut sess)` takes the
+//! session explicitly — the handle itself is a plain `Copy` ticket, so
+//! any number can be in flight without aliasing the session borrow.
+//!
+//! ## Deprecation window
+//!
+//! The pre-0.3 surface — the `alloc_*` method-per-(kind × initializer)
+//! grid and the blocking [`Session::offload`] / `offload_named` — remains
+//! as thin `#[deprecated]` shims over [`Session::alloc`] and the launch
+//! builder **for one release** and will be removed in 0.4.
 
 use crate::device::Technology;
 use crate::error::{Error, Result};
 use crate::memory::{
-    CacheSpec, DataRef, FileKind, HostKind, MemKind, MicrocoreKind, ProceduralKind,
-    SharedCacheKind, SharedKind, SinkKind,
+    CacheSpec, DataRef, FileKind, HostKind, MemInit, MemKind, MemPlace, MemSpec, MicrocoreKind,
+    ProceduralKind, SharedCacheKind, SharedKind, SinkKind,
 };
 use crate::runtime::{ModelExecutor, PjrtContext};
 use crate::sim::Time;
 use crate::vm::Value;
 
-use super::engine::{Engine, EngineStats};
+use super::engine::{Engine, EngineStats, LaunchId, LaunchStatus};
 use super::marshal::{bind, ArgSpec};
 use super::offload::{Kernel, KernelRegistry, OffloadOptions, OffloadResult};
+use super::prefetch::PrefetchSpec;
+use super::TransferMode;
 
 /// Builder for [`Session`].
 #[derive(Debug, Clone)]
@@ -131,55 +158,152 @@ impl Session {
         self.engine.now()
     }
 
-    // ---- memory kinds (§3.2) --------------------------------------------
+    // ---- memory allocation (§3.2) ---------------------------------------
+
+    /// Allocate a variable from a declarative [`MemSpec`] — the single
+    /// entry point for every *place × initializer* combination:
+    ///
+    /// ```ignore
+    /// let a = sess.alloc(MemSpec::host("a").from(&data))?;
+    /// let b = sess.alloc(MemSpec::shared("b").zeroed(1024))?;
+    /// let c = sess.alloc(MemSpec::cached("c", cache_spec).from(&data))?;
+    /// let d = sess.alloc(MemSpec::microcore("d").zeroed(16))?;
+    /// ```
+    ///
+    /// Placement constraints are enforced here: shared-window allocations
+    /// are bounded by the technology's window, microcore replicas by the
+    /// per-core user store, cache budgets by the window. A `Microcore`
+    /// spec with [`MemSpec::from`] data broadcasts the contents into every
+    /// core's replica (the `copy_to_device` semantics).
+    pub fn alloc(&mut self, spec: MemSpec) -> Result<DataRef> {
+        let (name, place, init) = spec.into_parts();
+        let len = init.len();
+        if len == 0 {
+            // Guard the builder's default initializer: a bare
+            // `MemSpec::host("a")` would otherwise silently allocate an
+            // empty variable and every downstream kernel loop would be a
+            // no-op.
+            return Err(Error::Memory(format!(
+                "allocation '{name}' has no elements — initialize the MemSpec \
+                 with .zeroed(len) or .from(data)"
+            )));
+        }
+        match place {
+            MemPlace::Host => {
+                let kind = match init {
+                    MemInit::Data(v) => HostKind::from_vec(v),
+                    MemInit::Zeroed(n) => HostKind::zeroed(n),
+                };
+                Ok(self.engine.registry_mut().register(name, Box::new(kind)))
+            }
+            MemPlace::Shared => {
+                let kind = match init {
+                    MemInit::Data(v) => SharedKind::from_vec(v, self.tech.shared_window)?,
+                    MemInit::Zeroed(n) => SharedKind::zeroed(n, self.tech.shared_window)?,
+                };
+                Ok(self.engine.registry_mut().register(name, Box::new(kind)))
+            }
+            MemPlace::Microcore => {
+                let bytes = len * 4;
+                if bytes > self.tech.user_store() {
+                    return Err(Error::ScratchpadExhausted {
+                        core: 0,
+                        requested: bytes,
+                        free: self.tech.user_store(),
+                    });
+                }
+                let dref = self
+                    .engine
+                    .registry_mut()
+                    .register(name, Box::new(MicrocoreKind::zeroed(self.tech.cores, len)));
+                if let MemInit::Data(v) = init {
+                    self.engine.registry_mut().write(dref, None, 0, &v)?;
+                }
+                Ok(dref)
+            }
+            MemPlace::Cached(cache) => {
+                let kind = match init {
+                    MemInit::Data(v) => HostKind::from_vec(v),
+                    MemInit::Zeroed(n) => HostKind::zeroed(n),
+                };
+                self.alloc_cached_kind(&name, Box::new(kind), cache)
+            }
+            MemPlace::Procedural { seed, scale } => match init {
+                MemInit::Zeroed(n) => Ok(self
+                    .engine
+                    .registry_mut()
+                    .register(name, Box::new(ProceduralKind::new(seed, n, scale)))),
+                MemInit::Data(_) => Err(Error::Memory(
+                    "procedural variables generate their content; size them with .zeroed(len)"
+                        .into(),
+                )),
+            },
+            MemPlace::Sink => match init {
+                MemInit::Zeroed(n) => {
+                    Ok(self.engine.registry_mut().register(name, Box::new(SinkKind::new(n))))
+                }
+                MemInit::Data(_) => Err(Error::Memory(
+                    "sink variables discard their content; size them with .zeroed(len)".into(),
+                )),
+            },
+            MemPlace::File(path) => {
+                let dref = self
+                    .engine
+                    .registry_mut()
+                    .register(name, Box::new(FileKind::create(path, len)?));
+                if let MemInit::Data(v) = init {
+                    self.engine.registry_mut().write(dref, None, 0, &v)?;
+                }
+                Ok(dref)
+            }
+        }
+    }
+
+    // ---- deprecated allocation shims (0.3 window, removed in 0.4) -------
 
     /// Allocate in host memory (top of the hierarchy; on the Epiphany the
     /// cores cannot address this — every access is host-serviced).
+    #[deprecated(since = "0.3.0", note = "use session.alloc(MemSpec::host(name).from(data))")]
     pub fn alloc_host_f32(&mut self, name: &str, data: &[f32]) -> Result<DataRef> {
-        Ok(self
-            .engine
-            .registry_mut()
-            .register(name, Box::new(HostKind::from_vec(data.to_vec()))))
+        self.alloc(MemSpec::host(name).from(data))
     }
 
     /// Allocate zeroed host memory.
+    #[deprecated(since = "0.3.0", note = "use session.alloc(MemSpec::host(name).zeroed(len))")]
     pub fn alloc_host_zeroed(&mut self, name: &str, len: usize) -> Result<DataRef> {
-        Ok(self.engine.registry_mut().register(name, Box::new(HostKind::zeroed(len))))
+        self.alloc(MemSpec::host(name).zeroed(len))
     }
 
     /// Allocate in the shared window (device-addressable; bounded by the
     /// technology's window size — the Epiphany's 32 MB).
+    #[deprecated(since = "0.3.0", note = "use session.alloc(MemSpec::shared(name).from(data))")]
     pub fn alloc_shared_f32(&mut self, name: &str, data: &[f32]) -> Result<DataRef> {
-        let kind = SharedKind::from_vec(data.to_vec(), self.tech.shared_window)?;
-        Ok(self.engine.registry_mut().register(name, Box::new(kind)))
+        self.alloc(MemSpec::shared(name).from(data))
     }
 
     /// Allocate zeroed shared-window memory.
+    #[deprecated(since = "0.3.0", note = "use session.alloc(MemSpec::shared(name).zeroed(len))")]
     pub fn alloc_shared_zeroed(&mut self, name: &str, len: usize) -> Result<DataRef> {
-        let kind = SharedKind::zeroed(len, self.tech.shared_window)?;
-        Ok(self.engine.registry_mut().register(name, Box::new(kind)))
+        self.alloc(MemSpec::shared(name).zeroed(len))
     }
 
     /// Allocate one replica per core in local store (`Microcore` kind;
     /// §3.2's device-resident data). Checked against the per-core budget.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use session.alloc(MemSpec::microcore(name).zeroed(len))"
+    )]
     pub fn alloc_microcore_f32(&mut self, name: &str, len: usize) -> Result<DataRef> {
-        let bytes = len * 4;
-        if bytes > self.tech.user_store() {
-            return Err(Error::ScratchpadExhausted {
-                core: 0,
-                requested: bytes,
-                free: self.tech.user_store(),
-            });
-        }
-        Ok(self
-            .engine
-            .registry_mut()
-            .register(name, Box::new(MicrocoreKind::zeroed(self.tech.cores, len))))
+        self.alloc(MemSpec::microcore(name).zeroed(len))
     }
 
     /// Allocate a *procedural* (generated-on-read) variable in the shared
     /// level — used where the paper's dense full-size tensors cannot
     /// physically exist in board memory (DESIGN.md substitution table).
+    #[deprecated(
+        since = "0.3.0",
+        note = "use session.alloc(MemSpec::procedural(name, seed, scale).zeroed(len))"
+    )]
     pub fn alloc_procedural_f32(
         &mut self,
         name: &str,
@@ -187,29 +311,31 @@ impl Session {
         len: usize,
         scale: f32,
     ) -> Result<DataRef> {
-        Ok(self
-            .engine
-            .registry_mut()
-            .register(name, Box::new(ProceduralKind::new(seed, len, scale))))
+        self.alloc(MemSpec::procedural(name, seed, scale).zeroed(len))
     }
 
     /// Allocate a write-only sink variable (gradient stream destination in
     /// the full-size regime).
+    #[deprecated(since = "0.3.0", note = "use session.alloc(MemSpec::sink(name).zeroed(len))")]
     pub fn alloc_sink_f32(&mut self, name: &str, len: usize) -> Result<DataRef> {
-        Ok(self.engine.registry_mut().register(name, Box::new(SinkKind::new(len))))
+        self.alloc(MemSpec::sink(name).zeroed(len))
     }
 
     /// Allocate host memory fronted by a shared-window segment cache
     /// ([`SharedCacheKind`]): the first device pass streams across the
     /// off-chip boundary; repeated passes are serviced at shared-window
     /// cost. The cache budget must fit the technology's window.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use session.alloc(MemSpec::cached(name, spec).from(data))"
+    )]
     pub fn alloc_host_cached_f32(
         &mut self,
         name: &str,
         data: &[f32],
         spec: CacheSpec,
     ) -> Result<DataRef> {
-        self.alloc_cached_kind(name, Box::new(HostKind::from_vec(data.to_vec())), spec)
+        self.alloc(MemSpec::cached(name, spec).from(data))
     }
 
     /// Front an arbitrary kind with a shared-window segment cache (the
@@ -249,13 +375,17 @@ impl Session {
     }
 
     /// Allocate a file-backed variable (the extensibility kind of §4).
+    #[deprecated(
+        since = "0.3.0",
+        note = "use session.alloc(MemSpec::file(name, path).zeroed(len))"
+    )]
     pub fn alloc_file_f32(
         &mut self,
         name: &str,
         path: impl Into<std::path::PathBuf>,
         len: usize,
     ) -> Result<DataRef> {
-        Ok(self.engine.registry_mut().register(name, Box::new(FileKind::create(path, len)?)))
+        self.alloc(MemSpec::file(name, path).zeroed(len))
     }
 
     /// Read a variable's (view's) contents from the host side.
@@ -272,7 +402,7 @@ impl Session {
 
     /// `define_on_device`: allocate a per-core device variable.
     pub fn define_on_device(&mut self, name: &str, len: usize) -> Result<DataRef> {
-        self.alloc_microcore_f32(name, len)
+        self.alloc(MemSpec::microcore(name).zeroed(len))
     }
 
     /// `copy_to_device`: host → every core's replica.
@@ -302,40 +432,197 @@ impl Session {
         self.kernels.get(name)
     }
 
+    // ---- asynchronous launches ------------------------------------------
+
+    /// Begin building an asynchronous launch of `kernel`. Configure with
+    /// [`LaunchBuilder::arg`]/[`args`](LaunchBuilder::args),
+    /// [`cores`](LaunchBuilder::cores), [`mode`](LaunchBuilder::mode),
+    /// [`prefetch`](LaunchBuilder::prefetch); then
+    /// [`submit`](LaunchBuilder::submit) for an [`OffloadHandle`].
+    pub fn launch(&mut self, kernel: &Kernel) -> LaunchBuilder<'_> {
+        LaunchBuilder {
+            kernel: kernel.clone(),
+            session: self,
+            args: Vec::new(),
+            options: OffloadOptions::default(),
+        }
+    }
+
+    /// As [`Session::launch`], resolving the kernel by registry name. No
+    /// deep copy — kernels are `Rc`-backed, so the resolved handle is two
+    /// reference-count bumps.
+    pub fn launch_named(&mut self, name: &str) -> Result<LaunchBuilder<'_>> {
+        let kernel = self.kernels.get(name)?.clone();
+        Ok(LaunchBuilder {
+            kernel,
+            session: self,
+            args: Vec::new(),
+            options: OffloadOptions::default(),
+        })
+    }
+
+    /// Drive the timeline until `handle`'s launch completes; claim its
+    /// result (equivalently [`OffloadHandle::wait`]).
+    pub fn wait(&mut self, handle: OffloadHandle) -> Result<OffloadResult> {
+        self.engine.wait(handle.id)
+    }
+
+    /// Drive the timeline until every submitted launch completes. Results
+    /// stay parked for each handle's [`OffloadHandle::wait`], which then
+    /// returns immediately.
+    pub fn wait_all(&mut self) -> Result<()> {
+        self.engine.wait_all()
+    }
+
+    /// Drive the timeline until some launch is complete and unclaimed;
+    /// returns its handle (`None` when nothing is in flight).
+    pub fn poll(&mut self) -> Result<Option<OffloadHandle>> {
+        Ok(self.engine.poll()?.map(|id| OffloadHandle { id }))
+    }
+
+    /// Launches submitted but not yet complete.
+    pub fn in_flight(&self) -> usize {
+        self.engine.in_flight()
+    }
+
+    // ---- deprecated blocking shims (0.3 window, removed in 0.4) ---------
+
     /// Offload a kernel (blocking, collective across the selected cores).
+    #[deprecated(
+        since = "0.3.0",
+        note = "use session.launch(&kernel).args(args).options(options).submit()?.wait(&mut session)"
+    )]
     pub fn offload(
         &mut self,
         kernel: &Kernel,
         args: &[ArgSpec],
         options: OffloadOptions,
     ) -> Result<OffloadResult> {
-        let core_ids: Vec<usize> = match &options.cores {
-            Some(ids) => {
-                for &id in ids {
-                    if id >= self.tech.cores {
-                        return Err(Error::Coordinator(format!(
-                            "core {id} out of range (device has {})",
-                            self.tech.cores
-                        )));
-                    }
-                }
-                ids.clone()
-            }
-            None => (0..self.tech.cores).collect(),
-        };
-        let bound = bind(args, &core_ids, options.mode, options.default_prefetch)?;
-        self.engine.offload(kernel, bound, &options, &core_ids)
+        let handle = self.launch(kernel).args(args).options(options).submit()?;
+        handle.wait(self)
     }
 
-    /// Convenience: offload by kernel name.
+    /// Convenience: offload by kernel name (blocking).
+    #[deprecated(
+        since = "0.3.0",
+        note = "use session.launch_named(name)?.args(args).options(options).submit()?.wait(&mut session)"
+    )]
     pub fn offload_named(
         &mut self,
         kernel: &str,
         args: &[ArgSpec],
         options: OffloadOptions,
     ) -> Result<OffloadResult> {
-        let k = self.kernels.get(kernel)?.clone();
-        self.offload(&k, args, options)
+        let handle = self.launch_named(kernel)?.args(args).options(options).submit()?;
+        handle.wait(self)
+    }
+}
+
+/// Builder for one asynchronous kernel launch (from [`Session::launch`]).
+///
+/// Holds the session borrow only until [`LaunchBuilder::submit`], which
+/// returns a detached, copyable [`OffloadHandle`] — so any number of
+/// launches can be in flight while the session stays usable.
+#[derive(Debug)]
+pub struct LaunchBuilder<'s> {
+    session: &'s mut Session,
+    kernel: Kernel,
+    args: Vec<ArgSpec>,
+    options: OffloadOptions,
+}
+
+impl LaunchBuilder<'_> {
+    /// Append one argument.
+    pub fn arg(mut self, arg: ArgSpec) -> Self {
+        self.args.push(arg);
+        self
+    }
+
+    /// Append a slice of arguments.
+    pub fn args(mut self, args: &[ArgSpec]) -> Self {
+        self.args.extend_from_slice(args);
+        self
+    }
+
+    /// Restrict to a core subset (default: all device cores). Validated
+    /// against the device at submit time ([`Technology::validate_cores`]).
+    pub fn cores(mut self, cores: Vec<usize>) -> Self {
+        self.options.cores = Some(cores);
+        self
+    }
+
+    /// Set the argument transfer mode.
+    pub fn mode(mut self, mode: TransferMode) -> Self {
+        self.options.mode = mode;
+        self
+    }
+
+    /// Set the default pre-fetch annotation (switches the mode to
+    /// [`TransferMode::Prefetch`]).
+    pub fn prefetch(mut self, spec: PrefetchSpec) -> Self {
+        self.options = self.options.prefetch(spec);
+        self
+    }
+
+    /// Set the per-core dispatch budget (runaway guard).
+    pub fn fuel(mut self, fuel: u64) -> Self {
+        self.options.fuel = fuel;
+        self
+    }
+
+    /// Replace the whole options block (migration aid for call sites that
+    /// already hold an [`OffloadOptions`]); combine with the individual
+    /// setters by calling this first.
+    pub fn options(mut self, options: OffloadOptions) -> Self {
+        self.options = options;
+        self
+    }
+
+    /// Validate the core selection, marshal the arguments and enqueue the
+    /// launch. Returns without blocking and without advancing virtual
+    /// time; the launch activates as soon as its cores are free and
+    /// completes under [`OffloadHandle::wait`] / [`Session::wait_all`] /
+    /// [`Session::poll`].
+    pub fn submit(self) -> Result<OffloadHandle> {
+        let LaunchBuilder { session, kernel, args, options } = self;
+        let core_ids: Vec<usize> = match &options.cores {
+            Some(ids) => {
+                session.tech.validate_cores(ids)?;
+                ids.clone()
+            }
+            None => (0..session.tech.cores).collect(),
+        };
+        let bound = bind(&args, &core_ids, options.mode, options.default_prefetch)?;
+        let id = session.engine.submit(&kernel, bound, &options, &core_ids)?;
+        Ok(OffloadHandle { id })
+    }
+}
+
+/// A claim ticket for a submitted launch: plain `Copy` data, detached
+/// from the session borrow. Redeem with [`OffloadHandle::wait`] (or
+/// [`Session::wait`]); inspect with [`OffloadHandle::status`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OffloadHandle {
+    id: LaunchId,
+}
+
+impl OffloadHandle {
+    /// The engine-level launch id.
+    pub fn id(&self) -> LaunchId {
+        self.id
+    }
+
+    /// Drive the timeline until this launch completes; claim its result.
+    /// Other in-flight launches progress as a side effect. Waiting twice
+    /// is an error (the result is claimed by the first wait).
+    pub fn wait(self, session: &mut Session) -> Result<OffloadResult> {
+        session.engine.wait(self.id)
+    }
+
+    /// Lifecycle stage: pending (queued on busy cores), active, or
+    /// completed-unclaimed. `None` once waited.
+    pub fn status(&self, session: &Session) -> Option<LaunchStatus> {
+        session.engine.launch_status(self.id)
     }
 }
 
@@ -383,16 +670,16 @@ def mykernel(a, b):
         let n = 160;
         let a: Vec<f32> = (0..n).map(|i| i as f32).collect();
         let b: Vec<f32> = vec![1000.0; n as usize];
-        let ra = s.alloc_host_f32("a", &a).unwrap();
-        let rb = s.alloc_host_f32("b", &b).unwrap();
+        let ra = s.alloc(MemSpec::host("a").from(&a)).unwrap();
+        let rb = s.alloc(MemSpec::host("b").from(&b)).unwrap();
         let k = s.compile_kernel("sum", SUM_SRC).unwrap();
-        let res = s
-            .offload(
-                &k,
-                &[ArgSpec::sharded(ra), ArgSpec::sharded(rb)],
-                OffloadOptions::default().transfer(TransferMode::OnDemand),
-            )
+        let h = s
+            .launch(&k)
+            .args(&[ArgSpec::sharded(ra), ArgSpec::sharded(rb)])
+            .mode(TransferMode::OnDemand)
+            .submit()
             .unwrap();
+        let res = h.wait(&mut s).unwrap();
         assert_eq!(res.reports.len(), 16);
         // Core 0 got elements [0, 10): expect a[i] + 1000
         let v0 = value_as_vec(&res.reports[0].value).unwrap();
@@ -413,17 +700,17 @@ def mykernel(a, b):
             let n = 3200usize;
             let a: Vec<f32> = (0..n).map(|i| i as f32).collect();
             let b = vec![1.0f32; n];
-            let ra = s.alloc_host_f32("a", &a).unwrap();
-            let rb = s.alloc_host_f32("b", &b).unwrap();
+            let ra = s.alloc(MemSpec::host("a").from(&a)).unwrap();
+            let rb = s.alloc(MemSpec::host("b").from(&b)).unwrap();
             let k = s.compile_kernel("sum", SUM_SRC).unwrap();
-            let opts = if mode_prefetch {
-                OffloadOptions::default().prefetch(pf(40, 20))
+            let builder =
+                s.launch(&k).args(&[ArgSpec::sharded(ra), ArgSpec::sharded(rb)]);
+            let h = if mode_prefetch {
+                builder.prefetch(pf(40, 20)).submit().unwrap()
             } else {
-                OffloadOptions::default().transfer(TransferMode::OnDemand)
+                builder.mode(TransferMode::OnDemand).submit().unwrap()
             };
-            let res = s
-                .offload(&k, &[ArgSpec::sharded(ra), ArgSpec::sharded(rb)], opts)
-                .unwrap();
+            let res = h.wait(&mut s).unwrap();
             // correctness identical across modes (§3.1)
             let v = value_as_vec(&res.reports[0].value).unwrap();
             assert_eq!(v[5], (5 + 1) as f64);
@@ -443,16 +730,16 @@ def mykernel(a, b):
         let n = 320usize; // 20 elems/core: fits on-core
         let a = vec![2.0f32; n];
         let b = vec![3.0f32; n];
-        let ra = s.alloc_host_f32("a", &a).unwrap();
-        let rb = s.alloc_host_f32("b", &b).unwrap();
+        let ra = s.alloc(MemSpec::host("a").from(&a)).unwrap();
+        let rb = s.alloc(MemSpec::host("b").from(&b)).unwrap();
         let k = s.compile_kernel("sum", SUM_SRC).unwrap();
-        let res = s
-            .offload(
-                &k,
-                &[ArgSpec::sharded(ra), ArgSpec::sharded(rb)],
-                OffloadOptions::default().transfer(TransferMode::Eager),
-            )
+        let h = s
+            .launch(&k)
+            .args(&[ArgSpec::sharded(ra), ArgSpec::sharded(rb)])
+            .mode(TransferMode::Eager)
+            .submit()
             .unwrap();
+        let res = h.wait(&mut s).unwrap();
         assert_eq!(res.spills, 0);
         let v = value_as_vec(&res.reports[3].value).unwrap();
         assert!(v.iter().all(|&x| x == 5.0));
@@ -467,16 +754,16 @@ def mykernel(a, b):
         let mut s = session();
         // 4000 f32 per core = 16 KB > ~7 KB free: must spill.
         let n = 4000 * 16;
-        let ra = s.alloc_host_zeroed("a", n).unwrap();
-        let rb = s.alloc_host_zeroed("b", n).unwrap();
+        let ra = s.alloc(MemSpec::host("a").zeroed(n)).unwrap();
+        let rb = s.alloc(MemSpec::host("b").zeroed(n)).unwrap();
         let k = s.compile_kernel("first", "def first(a, b):\n    return a[0] + b[0]\n").unwrap();
-        let res = s
-            .offload(
-                &k,
-                &[ArgSpec::sharded(ra), ArgSpec::sharded(rb)],
-                OffloadOptions::default().transfer(TransferMode::Eager),
-            )
+        let h = s
+            .launch(&k)
+            .args(&[ArgSpec::sharded(ra), ArgSpec::sharded(rb)])
+            .mode(TransferMode::Eager)
+            .submit()
             .unwrap();
+        let res = h.wait(&mut s).unwrap();
         assert!(res.spills > 0, "paper's Listing-1 overflow scenario");
         // Spilled args still work (by reference): a[0] + b[0] = 0.0.
         assert_eq!(res.reports[0].value.as_f64().unwrap(), 0.0);
@@ -485,18 +772,17 @@ def mykernel(a, b):
     #[test]
     fn core_subset_runs_only_there() {
         let mut s = session();
-        let ra = s.alloc_host_f32("a", &[1.0; 40]).unwrap();
-        let rb = s.alloc_host_f32("b", &[2.0; 40]).unwrap();
+        let ra = s.alloc(MemSpec::host("a").from(&[1.0; 40])).unwrap();
+        let rb = s.alloc(MemSpec::host("b").from(&[2.0; 40])).unwrap();
         let k = s.compile_kernel("sum", SUM_SRC).unwrap();
-        let res = s
-            .offload(
-                &k,
-                &[ArgSpec::sharded(ra), ArgSpec::sharded(rb)],
-                OffloadOptions::default()
-                    .transfer(TransferMode::OnDemand)
-                    .on_cores(vec![2, 5]),
-            )
+        let h = s
+            .launch(&k)
+            .args(&[ArgSpec::sharded(ra), ArgSpec::sharded(rb)])
+            .mode(TransferMode::OnDemand)
+            .cores(vec![2, 5])
+            .submit()
             .unwrap();
+        let res = h.wait(&mut s).unwrap();
         assert_eq!(res.reports.len(), 2);
         assert_eq!(res.reports[0].core, 2);
         assert_eq!(res.reports[1].core, 5);
@@ -508,14 +794,24 @@ def mykernel(a, b):
     fn out_of_range_core_rejected() {
         let mut s = session();
         let k = s.compile_kernel("k", "def k():\n    return 0\n").unwrap();
-        let err = s.offload(&k, &[], OffloadOptions::default().on_cores(vec![99]));
+        let err = s.launch(&k).cores(vec![99]).submit();
         assert!(err.is_err());
+        let msg = s.launch(&k).cores(vec![99]).submit().unwrap_err().to_string();
+        assert!(msg.contains("out of range"), "{msg}");
+    }
+
+    #[test]
+    fn duplicate_core_rejected() {
+        let mut s = session();
+        let k = s.compile_kernel("k", "def k():\n    return 0\n").unwrap();
+        let msg = s.launch(&k).cores(vec![1, 1]).submit().unwrap_err().to_string();
+        assert!(msg.contains("more than once"), "{msg}");
     }
 
     #[test]
     fn mutable_reference_writes_propagate_to_host() {
         let mut s = session();
-        let ra = s.alloc_host_f32("a", &[0.0; 32]).unwrap();
+        let ra = s.alloc(MemSpec::host("a").from(&[0.0; 32])).unwrap();
         let src = r#"
 def scale(a):
     i = 0
@@ -525,12 +821,13 @@ def scale(a):
     return 0
 "#;
         let k = s.compile_kernel("scale", src).unwrap();
-        s.offload(
-            &k,
-            &[ArgSpec::sharded_mut(ra)],
-            OffloadOptions::default().transfer(TransferMode::OnDemand),
-        )
-        .unwrap();
+        let h = s
+            .launch(&k)
+            .arg(ArgSpec::sharded_mut(ra))
+            .mode(TransferMode::OnDemand)
+            .submit()
+            .unwrap();
+        h.wait(&mut s).unwrap();
         let data = s.read(ra).unwrap();
         // Core i wrote (i+1) into its 2-element shard.
         assert_eq!(data[0], 1.0);
@@ -542,17 +839,17 @@ def scale(a):
     #[test]
     fn write_to_readonly_reference_is_typed_error() {
         let mut s = session();
-        let ra = s.alloc_host_f32("a", &[0.0; 16]).unwrap();
+        let ra = s.alloc(MemSpec::host("a").from(&[0.0; 16])).unwrap();
         let k = s
             .compile_kernel("w", "def w(a):\n    a[0] = 1.0\n    return 0\n")
             .unwrap();
-        let err = s
-            .offload(
-                &k,
-                &[ArgSpec::sharded(ra)],
-                OffloadOptions::default().transfer(TransferMode::OnDemand),
-            )
-            .unwrap_err();
+        let h = s
+            .launch(&k)
+            .arg(ArgSpec::sharded(ra))
+            .mode(TransferMode::OnDemand)
+            .submit()
+            .unwrap();
+        let err = h.wait(&mut s).unwrap_err();
         assert!(err.to_string().contains("read-only"), "{err}");
     }
 
@@ -560,8 +857,8 @@ def scale(a):
     fn shared_kind_respects_window() {
         let mut s = session();
         // 10M f32 = 40 MB > 32 MB window
-        assert!(s.alloc_shared_zeroed("big", 10_000_000).is_err());
-        assert!(s.alloc_shared_zeroed("ok", 1_000_000).is_ok());
+        assert!(s.alloc(MemSpec::shared("big").zeroed(10_000_000)).is_err());
+        assert!(s.alloc(MemSpec::shared("ok").zeroed(1_000_000)).is_ok());
     }
 
     #[test]
@@ -575,18 +872,18 @@ def bump(state):
     return state[0]
 "#;
         let k = s.compile_kernel("bump", src).unwrap();
-        let res = s
-            .offload(
-                &k,
-                &[ArgSpec::Ref {
-                    dref: d,
-                    shard: false,
-                    access: Access::Mutable,
-                    prefetch: microcore_prefetch_default(),
-                }],
-                OffloadOptions::default().transfer(TransferMode::OnDemand),
-            )
+        let h = s
+            .launch(&k)
+            .arg(ArgSpec::Ref {
+                dref: d,
+                shard: false,
+                access: Access::Mutable,
+                prefetch: microcore_prefetch_default(),
+            })
+            .mode(TransferMode::OnDemand)
+            .submit()
             .unwrap();
+        let res = h.wait(&mut s).unwrap();
         // Each core saw its own replica: 7 + core_id.
         assert_eq!(res.reports[0].value.as_f64().unwrap(), 7.0);
         assert_eq!(res.reports[5].value.as_f64().unwrap(), 12.0);
@@ -596,23 +893,43 @@ def bump(state):
     #[test]
     fn microcore_kind_too_large_rejected() {
         let mut s = session();
-        assert!(s.alloc_microcore_f32("big", 10_000).is_err(), "40 KB > 32 KB store");
+        assert!(
+            s.alloc(MemSpec::microcore("big").zeroed(10_000)).is_err(),
+            "40 KB > 32 KB store"
+        );
+    }
+
+    #[test]
+    fn microcore_init_broadcasts_to_replicas() {
+        let mut s = session();
+        let d = s.alloc(MemSpec::microcore("d").from(&[3.5; 8])).unwrap();
+        assert_eq!(s.copy_from_device(d, 0).unwrap(), vec![3.5; 8]);
+        assert_eq!(s.copy_from_device(d, 15).unwrap(), vec![3.5; 8]);
+    }
+
+    #[test]
+    fn procedural_and_sink_specs_require_zeroed() {
+        let mut s = session();
+        assert!(s.alloc(MemSpec::procedural("w", 1, 0.01).zeroed(64)).is_ok());
+        assert!(s.alloc(MemSpec::procedural("w2", 1, 0.01).from(&[1.0])).is_err());
+        assert!(s.alloc(MemSpec::sink("g").zeroed(64)).is_ok());
+        assert!(s.alloc(MemSpec::sink("g2").from(&[1.0])).is_err());
     }
 
     #[test]
     fn deterministic_same_seed_same_times() {
         let run = || {
             let mut s = Session::builder(Technology::epiphany3()).seed(99).build().unwrap();
-            let ra = s.alloc_host_f32("a", &[1.0; 320]).unwrap();
-            let rb = s.alloc_host_f32("b", &[2.0; 320]).unwrap();
+            let ra = s.alloc(MemSpec::host("a").from(&[1.0; 320])).unwrap();
+            let rb = s.alloc(MemSpec::host("b").from(&[2.0; 320])).unwrap();
             let k = s.compile_kernel("sum", SUM_SRC).unwrap();
-            s.offload(
-                &k,
-                &[ArgSpec::sharded(ra), ArgSpec::sharded(rb)],
-                OffloadOptions::default().transfer(TransferMode::OnDemand),
-            )
-            .unwrap()
-            .elapsed()
+            let h = s
+                .launch(&k)
+                .args(&[ArgSpec::sharded(ra), ArgSpec::sharded(rb)])
+                .mode(TransferMode::OnDemand)
+                .submit()
+                .unwrap();
+            h.wait(&mut s).unwrap().elapsed()
         };
         assert_eq!(run(), run());
     }
@@ -620,17 +937,80 @@ def bump(state):
     #[test]
     fn virtual_time_is_monotonic_across_offloads() {
         let mut s = session();
-        let ra = s.alloc_host_f32("a", &[1.0; 32]).unwrap();
-        let rb = s.alloc_host_f32("b", &[2.0; 32]).unwrap();
+        let ra = s.alloc(MemSpec::host("a").from(&[1.0; 32])).unwrap();
+        let rb = s.alloc(MemSpec::host("b").from(&[2.0; 32])).unwrap();
         let k = s.compile_kernel("sum", SUM_SRC).unwrap();
         let t0 = s.now();
         let args = [ArgSpec::sharded(ra), ArgSpec::sharded(rb)];
-        s.offload(&k, &args, OffloadOptions::default().transfer(TransferMode::OnDemand))
-            .unwrap();
+        let h = s.launch(&k).args(&args).mode(TransferMode::OnDemand).submit().unwrap();
+        h.wait(&mut s).unwrap();
         let t1 = s.now();
-        s.offload(&k, &args, OffloadOptions::default().transfer(TransferMode::OnDemand))
-            .unwrap();
+        let h = s.launch(&k).args(&args).mode(TransferMode::OnDemand).submit().unwrap();
+        h.wait(&mut s).unwrap();
         let t2 = s.now();
         assert!(t0 < t1 && t1 < t2);
     }
+
+    /// The one-release compatibility window: the old grid + blocking
+    /// offload must behave identically to the new entry points.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_still_route_through_the_new_surface() {
+        let mut s = session();
+        let ra = s.alloc_host_f32("a", &[1.0; 32]).unwrap();
+        let rb = s.alloc_host_f32("b", &[2.0; 32]).unwrap();
+        let k = s.compile_kernel("sum", SUM_SRC).unwrap();
+        let res = s
+            .offload(
+                &k,
+                &[ArgSpec::sharded(ra), ArgSpec::sharded(rb)],
+                OffloadOptions::default().transfer(TransferMode::OnDemand),
+            )
+            .unwrap();
+        assert_eq!(value_as_vec(&res.reports[0].value).unwrap(), vec![3.0, 3.0]);
+        assert!(s.alloc_shared_zeroed("sz", 16).is_ok());
+        assert!(s.alloc_microcore_f32("mc", 8).is_ok());
+        assert!(s.alloc_sink_f32("sk", 8).is_ok());
+        assert!(s.alloc_procedural_f32("pr", 1, 8, 0.5).is_ok());
+        assert!(s.offload_named("sum", &[ArgSpec::sharded(ra), ArgSpec::sharded(rb)],
+            OffloadOptions::default().transfer(TransferMode::OnDemand)).is_ok());
+    }
+
+    #[test]
+    fn handle_status_and_wait_all() {
+        let mut s = session();
+        let ra = s.alloc(MemSpec::host("a").from(&[1.0; 32])).unwrap();
+        let rb = s.alloc(MemSpec::host("b").from(&[2.0; 32])).unwrap();
+        let k = s.compile_kernel("sum", SUM_SRC).unwrap();
+        let args = [ArgSpec::sharded(ra), ArgSpec::sharded(rb)];
+        let h1 = s
+            .launch(&k)
+            .args(&args)
+            .mode(TransferMode::OnDemand)
+            .cores((0..8).collect())
+            .submit()
+            .unwrap();
+        let h2 = s
+            .launch(&k)
+            .args(&args)
+            .mode(TransferMode::OnDemand)
+            .cores((0..8).collect())
+            .submit()
+            .unwrap();
+        // Nothing runs until a wait/poll drives the timeline.
+        assert_eq!(h1.status(&s), Some(LaunchStatus::Pending));
+        assert_eq!(h2.status(&s), Some(LaunchStatus::Pending));
+        assert_eq!(s.in_flight(), 2);
+        let first = s.poll().unwrap().expect("a launch completes");
+        assert_eq!(first, h1, "submission order completes first under core contention");
+        assert_eq!(h1.status(&s), Some(LaunchStatus::Completed));
+        s.wait_all().unwrap();
+        assert_eq!(h2.status(&s), Some(LaunchStatus::Completed));
+        let r1 = h1.wait(&mut s).unwrap();
+        let r2 = h2.wait(&mut s).unwrap();
+        assert_eq!(r2.launched_at, r1.finished_at, "contended launch queues behind");
+        assert_eq!(s.in_flight(), 0);
+        assert!(s.wait(h1).is_err(), "double wait is an error");
+    }
 }
+

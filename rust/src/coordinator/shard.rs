@@ -169,7 +169,11 @@ impl ShardPlan {
         options: OffloadOptions,
     ) -> Result<OffloadResult> {
         let core_ids: Vec<usize> = match &options.cores {
-            Some(ids) => ids.clone(),
+            Some(ids) => {
+                // Same uniform validation as the session's launch path.
+                session.tech().validate_cores(ids)?;
+                ids.clone()
+            }
             None => (0..session.tech().cores).collect(),
         };
         if core_ids.len() != self.assignments.len() {
@@ -208,7 +212,8 @@ impl ShardPlan {
         args.push(ArgSpec::PerCore { drefs, access, prefetch });
         args.extend_from_slice(extra);
         let opts = OffloadOptions { cores: Some(core_ids), ..options };
-        let result = session.offload(kernel, &args, opts);
+        let submitted = session.launch(kernel).args(&args).options(opts).submit();
+        let result = submitted.and_then(|h| h.wait(session));
 
         // Write-back merge, then release staging. Every staging variable
         // is released even when the offload or an earlier merge step
@@ -244,6 +249,7 @@ mod tests {
     use super::*;
     use crate::coordinator::TransferMode;
     use crate::device::Technology;
+    use crate::memory::MemSpec;
 
     fn base(len: usize) -> DataRef {
         DataRef { id: 3, offset: 0, len }
@@ -311,7 +317,7 @@ mod tests {
     fn execute_merges_mutable_cyclic_shards_back() {
         let mut s = Session::builder(Technology::epiphany3()).seed(11).build().unwrap();
         let data: Vec<f32> = (0..40).map(|i| i as f32).collect();
-        let d = s.alloc_host_f32("xs", &data).unwrap();
+        let d = s.alloc(MemSpec::host("xs").from(&data)).unwrap();
         let k = s
             .compile_kernel(
                 "bump",
@@ -341,7 +347,7 @@ mod tests {
     #[test]
     fn execute_rejects_core_count_mismatch() {
         let mut s = Session::builder(Technology::epiphany3()).seed(1).build().unwrap();
-        let d = s.alloc_host_zeroed("xs", 16).unwrap();
+        let d = s.alloc(MemSpec::host("xs").zeroed(16)).unwrap();
         let k = s.compile_kernel("k", "def k(x):\n    return 0\n").unwrap();
         let plan = ShardPlan::new(d, 4, ShardPolicy::Block).unwrap();
         let err = plan.execute(

@@ -7,6 +7,7 @@
 //! the Epiphany's observed degradation band (88 → 16 MB/s) exposed for the
 //! bandwidth-sweep ablation.
 
+use crate::error::{Error, Result};
 use crate::sim::{Time, USEC};
 
 /// Which class of host machine runs the coordinator-side baselines.
@@ -192,6 +193,27 @@ impl Technology {
         self.local_store.saturating_sub(self.vm_footprint)
     }
 
+    /// Validate a physical core-id selection against this device: every id
+    /// in range, no id listed twice. The single source of the uniform
+    /// error message used by the session launch path, the engine's submit
+    /// queue and the shard planner.
+    pub fn validate_cores(&self, cores: &[usize]) -> Result<()> {
+        for (i, &id) in cores.iter().enumerate() {
+            if id >= self.cores {
+                return Err(Error::Coordinator(format!(
+                    "core {id} out of range (device has {} cores)",
+                    self.cores
+                )));
+            }
+            if cores[..i].contains(&id) {
+                return Err(Error::Coordinator(format!(
+                    "core {id} selected more than once in {cores:?}"
+                )));
+            }
+        }
+        Ok(())
+    }
+
     /// Aggregate device compiled-code FLOP rate (FLOPs/s, all cores, with
     /// the soft-float penalty applied).
     pub fn device_flops(&self) -> f64 {
@@ -266,6 +288,17 @@ mod tests {
         let t = Technology::epiphany3();
         assert!(t.user_store() < 8 * 1024, "ePython leaves only ~7 KB free");
         assert!(t.user_store() > 4 * 1024);
+    }
+
+    #[test]
+    fn validate_cores_rejects_range_and_duplicates() {
+        let t = Technology::epiphany3();
+        assert!(t.validate_cores(&[0, 5, 15]).is_ok());
+        assert!(t.validate_cores(&[]).is_ok(), "empty selection is the caller's concern");
+        let err = t.validate_cores(&[3, 16]).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        let err = t.validate_cores(&[2, 7, 2]).unwrap_err().to_string();
+        assert!(err.contains("more than once"), "{err}");
     }
 
     #[test]

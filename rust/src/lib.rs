@@ -28,10 +28,13 @@
 //!   bytecode → VM) whose symbol table carries the paper's `external` flag;
 //!   external reads/writes become blocking or pre-fetched channel traffic.
 //! * [`coordinator`] — the host-side offload engine: kernel registry,
-//!   argument marshalling (eager copy vs by-reference), the pre-fetch
-//!   engine, request servicing, device-resident data management, and the
-//!   sharded offload planner ([`coordinator::ShardPlan`]: block /
-//!   block-cyclic decomposition with write-back merge).
+//!   the asynchronous launch queue (`launch`/`submit`/`wait`/`poll` with
+//!   per-core occupancy, so disjoint-core launches pipeline on the
+//!   shared virtual timeline), argument marshalling (eager copy vs
+//!   by-reference), the pre-fetch engine, request servicing,
+//!   device-resident data management, and the sharded offload planner
+//!   ([`coordinator::ShardPlan`]: block / block-cyclic decomposition with
+//!   write-back merge).
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`) that carry the numeric hot path.
 //! * [`workloads`] — the paper's benchmarks: the lung-scan neural-network
@@ -41,12 +44,14 @@
 //! ## Quick start
 //!
 //! ```no_run
-//! use microcore::coordinator::{ArgSpec, OffloadOptions, Session, TransferMode};
+//! use microcore::coordinator::{ArgSpec, Session, TransferMode};
 //! use microcore::device::Technology;
+//! use microcore::memory::MemSpec;
 //!
 //! let mut sess = Session::builder(Technology::epiphany3()).build().unwrap();
-//! let a = sess.alloc_host_f32("a", &vec![1.0; 1000]).unwrap();
-//! let b = sess.alloc_host_f32("b", &vec![2.0; 1000]).unwrap();
+//! // One allocation entry point; the MemSpec constructor picks the level.
+//! let a = sess.alloc(MemSpec::host("a").from(&vec![1.0; 1000])).unwrap();
+//! let b = sess.alloc(MemSpec::host("b").from(&vec![2.0; 1000])).unwrap();
 //! let kernel = sess
 //!     .compile_kernel(
 //!         "sum",
@@ -55,13 +60,15 @@
 //!          return ret\n",
 //!     )
 //!     .unwrap();
-//! let out = sess
-//!     .offload(
-//!         &kernel,
-//!         &[ArgSpec::sharded(a), ArgSpec::sharded(b)],
-//!         OffloadOptions::default().transfer(TransferMode::OnDemand),
-//!     )
+//! // Launches are asynchronous: submit returns a handle, wait drives the
+//! // virtual timeline. Launches on disjoint core sets pipeline.
+//! let handle = sess
+//!     .launch(&kernel)
+//!     .args(&[ArgSpec::sharded(a), ArgSpec::sharded(b)])
+//!     .mode(TransferMode::OnDemand)
+//!     .submit()
 //!     .unwrap();
+//! let out = handle.wait(&mut sess).unwrap();
 //! println!("elapsed {} virtual ns across {} cores", out.elapsed(), out.reports.len());
 //! ```
 //!

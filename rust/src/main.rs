@@ -41,6 +41,7 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
     .opt("config", None, "JSON experiment config (overrides other flags)")
     .flag("full", "full-size image regime for mlbench")
     .flag("cache", "front the mlbench image store with the shared-window cache")
+    .flag("pipeline", "mlbench: train two replicas on disjoint core halves, comparing blocking vs pipelined launches")
     .flag("trace", "print the event trace after a run");
 
     let Some(args) = cli.parse(argv)? else {
@@ -107,6 +108,36 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
                     .ok_or_else(|| anyhow::anyhow!("bad --mode"))?,
             };
             let seed: u64 = args.parse_as("seed")?;
+            if args.is_set("pipeline") {
+                // The launch-queue showcase: identical kernels and
+                // numerics, blocking vs pipelined control flow.
+                let images: usize = args.parse_as("images")?;
+                let epochs: usize =
+                    args.get("epochs").map(|e| e.parse()).transpose()?.unwrap_or(1);
+                let blocking =
+                    mlbench::dual_half_epochs(tech.clone(), seed, mode, images, epochs, false)?;
+                let pipelined =
+                    mlbench::dual_half_epochs(tech.clone(), seed, mode, images, epochs, true)?;
+                let mut t = Table::new(
+                    format!(
+                        "Dual-replica epochs on {}-core halves — {} / {}",
+                        tech.cores / 2,
+                        tech.name,
+                        mode.name()
+                    ),
+                    &["variant", "total (ms, virtual)"],
+                );
+                t.row(&["blocking (submit+wait per phase)".into(), ms(blocking.elapsed)]);
+                t.row(&["pipelined (phases in flight together)".into(), ms(pipelined.elapsed)]);
+                print!("{}", t.render());
+                println!(
+                    "speedup: {:.2}x — losses identical: {}",
+                    blocking.elapsed as f64 / pipelined.elapsed.max(1) as f64,
+                    blocking.losses_a == pipelined.losses_a
+                        && blocking.losses_b == pipelined.losses_b
+                );
+                return Ok(());
+            }
             let session = Session::builder(tech.clone())
                 .artifacts_dir(args.req("artifacts")?)
                 .seed(seed)

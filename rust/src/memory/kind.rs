@@ -18,8 +18,161 @@ use std::fs;
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::PathBuf;
 
+use super::cache::CacheSpec;
 use super::hierarchy::Level;
 use crate::error::{Error, Result};
+
+/// Where a [`MemSpec`] places its variable — one constructor per memory
+/// kind, replacing the old per-(kind × initializer) method grid.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MemPlace {
+    /// Host main memory (not device-addressable on the Epiphany).
+    Host,
+    /// The device-addressable shared window (bounded by the technology).
+    Shared,
+    /// One replica per core in local store (budget-checked).
+    Microcore,
+    /// Host memory fronted by a shared-window segment cache.
+    Cached(CacheSpec),
+    /// Generated-on-read content at the shared level (full-size regime).
+    Procedural {
+        /// Content seed.
+        seed: u64,
+        /// Amplitude of the generated values.
+        scale: f32,
+    },
+    /// Write-only gradient-stream destination (full-size regime).
+    Sink,
+    /// File-backed storage (the §4 extensibility kind).
+    File(PathBuf),
+}
+
+/// How a [`MemSpec`] initializes its variable.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MemInit {
+    /// `len` zero elements (also carries the length for content-free
+    /// places: procedural, sink, file).
+    Zeroed(usize),
+    /// Explicit contents.
+    Data(Vec<f32>),
+}
+
+impl MemInit {
+    /// Element count this initializer produces.
+    pub fn len(&self) -> usize {
+        match self {
+            MemInit::Zeroed(n) => *n,
+            MemInit::Data(v) => v.len(),
+        }
+    }
+
+    /// Whether the initializer produces zero elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A declarative allocation request: *name* + *place* + *initializer*,
+/// consumed by `Session::alloc` — the single entry point that replaced the
+/// `alloc_host_f32` / `alloc_shared_zeroed` / … method-per-combination
+/// grid. §3.2's one-line placement decision is now literally one argument:
+///
+/// ```ignore
+/// let a = sess.alloc(MemSpec::host("a").from(&data))?;      // was alloc_host_f32
+/// let b = sess.alloc(MemSpec::shared("b").zeroed(1024))?;   // was alloc_shared_zeroed
+/// let c = sess.alloc(MemSpec::cached("c", spec).from(&data))?;
+/// ```
+#[derive(Debug, Clone)]
+pub struct MemSpec {
+    name: String,
+    place: MemPlace,
+    init: MemInit,
+}
+
+impl MemSpec {
+    fn new(name: impl Into<String>, place: MemPlace) -> Self {
+        MemSpec { name: name.into(), place, init: MemInit::Zeroed(0) }
+    }
+
+    /// Place the variable in host memory.
+    pub fn host(name: impl Into<String>) -> Self {
+        Self::new(name, MemPlace::Host)
+    }
+
+    /// Place the variable in the shared window.
+    pub fn shared(name: impl Into<String>) -> Self {
+        Self::new(name, MemPlace::Shared)
+    }
+
+    /// Place one replica per core in local store.
+    pub fn microcore(name: impl Into<String>) -> Self {
+        Self::new(name, MemPlace::Microcore)
+    }
+
+    /// Place in host memory fronted by a shared-window segment cache.
+    pub fn cached(name: impl Into<String>, spec: CacheSpec) -> Self {
+        Self::new(name, MemPlace::Cached(spec))
+    }
+
+    /// Procedural (generated-on-read) content; size it with
+    /// [`MemSpec::zeroed`].
+    pub fn procedural(name: impl Into<String>, seed: u64, scale: f32) -> Self {
+        Self::new(name, MemPlace::Procedural { seed, scale })
+    }
+
+    /// Write-only sink; size it with [`MemSpec::zeroed`].
+    pub fn sink(name: impl Into<String>) -> Self {
+        Self::new(name, MemPlace::Sink)
+    }
+
+    /// File-backed storage at `path`.
+    pub fn file(name: impl Into<String>, path: impl Into<PathBuf>) -> Self {
+        Self::new(name, MemPlace::File(path.into()))
+    }
+
+    /// Initialize with `len` zeros (or merely size a content-free place).
+    pub fn zeroed(mut self, len: usize) -> Self {
+        self.init = MemInit::Zeroed(len);
+        self
+    }
+
+    /// Initialize from a slice (copied).
+    pub fn from(mut self, data: &[f32]) -> Self {
+        self.init = MemInit::Data(data.to_vec());
+        self
+    }
+
+    /// Initialize from an owned vector (moved, no copy).
+    pub fn from_vec(mut self, data: Vec<f32>) -> Self {
+        self.init = MemInit::Data(data);
+        self
+    }
+
+    /// The variable name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The placement.
+    pub fn place(&self) -> &MemPlace {
+        &self.place
+    }
+
+    /// Element count the spec allocates.
+    pub fn len(&self) -> usize {
+        self.init.len()
+    }
+
+    /// Whether the spec allocates zero elements.
+    pub fn is_empty(&self) -> bool {
+        self.init.is_empty()
+    }
+
+    /// Decompose for the allocator.
+    pub fn into_parts(self) -> (String, MemPlace, MemInit) {
+        (self.name, self.place, self.init)
+    }
+}
 
 /// Behaviour shared by every memory kind.
 ///

@@ -10,9 +10,12 @@
 //! * [`hierarchy`] — Fig. 1's levels and their addressability per
 //!   technology (the Epiphany's host DRAM is *not* device addressable; the
 //!   MicroBlaze's is).
-//! * [`kind`] — the [`MemKind`] trait plus the built-in kinds. New levels
-//!   are added exactly as the paper prescribes: implement the trait,
-//!   "everything else remains unchanged".
+//! * [`kind`] — the [`MemKind`] trait plus the built-in kinds, and
+//!   [`MemSpec`], the declarative *name + place + initializer* allocation
+//!   request consumed by `Session::alloc` (the single entry point that
+//!   replaced the per-kind `alloc_*` method grid). New levels are added
+//!   exactly as the paper prescribes: implement the trait, "everything
+//!   else remains unchanged".
 //! * [`dataref`] — [`DataRef`], the unique-id reference (with slicing, so a
 //!   core can be handed its shard of a larger variable).
 //! * [`registry`] — the host-side lookup table from reference id to kind,
@@ -30,5 +33,8 @@ pub mod registry;
 pub use cache::{CacheSpec, SharedCacheKind};
 pub use dataref::{DataRef, RefInfo};
 pub use hierarchy::{Hierarchy, Level};
-pub use kind::{FileKind, HostKind, MemKind, MicrocoreKind, ProceduralKind, SharedKind, SinkKind};
+pub use kind::{
+    FileKind, HostKind, MemInit, MemKind, MemPlace, MemSpec, MicrocoreKind, ProceduralKind,
+    SharedKind, SinkKind,
+};
 pub use registry::MemRegistry;

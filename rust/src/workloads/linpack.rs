@@ -193,7 +193,7 @@ pub struct VmLinpackRow {
 /// solves its own n×n system eagerly copied on-core) and compare with the
 /// compiled-path rate.
 pub fn linpack_vm_row(tech: &Technology, n: usize, seed: u64) -> Result<VmLinpackRow> {
-    use crate::coordinator::{ArgSpec, OffloadOptions, Session, TransferMode};
+    use crate::coordinator::{ArgSpec, Session, TransferMode};
 
     let mut sess = Session::builder(tech.clone()).seed(seed).build()?;
     let mut rng = Rng::new(seed ^ 0x11A);
@@ -210,14 +210,15 @@ pub fn linpack_vm_row(tech: &Technology, n: usize, seed: u64) -> Result<VmLinpac
     for i in 0..n {
         b[i] = (0..n).map(|j| a[i * n + j] * x_true[j]).sum();
     }
-    let ra = sess.alloc_shared_f32("a", &a)?;
-    let rb = sess.alloc_shared_f32("b", &b)?;
+    let ra = sess.alloc(crate::memory::MemSpec::shared("a").from(&a))?;
+    let rb = sess.alloc(crate::memory::MemSpec::shared("b").from(&b))?;
     let k = sess.compile_kernel("linpack", LINPACK_VM_SRC)?;
-    let res = sess.offload(
-        &k,
-        &[ArgSpec::broadcast(ra), ArgSpec::broadcast(rb), ArgSpec::Int(n as i64)],
-        OffloadOptions::default().transfer(TransferMode::Eager),
-    )?;
+    let res = sess
+        .launch(&k)
+        .args(&[ArgSpec::broadcast(ra), ArgSpec::broadcast(rb), ArgSpec::Int(n as i64)])
+        .mode(TransferMode::Eager)
+        .submit()?
+        .wait(&mut sess)?;
     let mut max_err = 0.0f64;
     for r in &res.reports {
         let x = r.value.as_array()?.borrow().clone();

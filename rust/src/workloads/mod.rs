@@ -10,7 +10,9 @@
 //!   the micro-cores; three timed phases (feed forward / combine
 //!   gradients / model update) under eager / on-demand / pre-fetch
 //!   transfer — Figures 3 and 4. Multi-epoch runs can front the image
-//!   store with the shared-window cache ([`mlbench::MlBenchConfig::cache`]).
+//!   store with the shared-window cache ([`mlbench::MlBenchConfig::cache`]),
+//!   and [`mlbench::dual_half_epochs`] pipelines two replicas' epochs on
+//!   disjoint core halves through the engine's async launch queue.
 //! * [`linpack`] — the LINPACK LU benchmark and power table — Table 1.
 //! * [`stall`] — the synthetic single-transfer stall-time probe — Table 2.
 //! * [`baselines`] — analytic host-side comparators (CPython on ARM,
@@ -24,6 +26,8 @@ pub mod scans;
 pub mod stall;
 
 pub use linpack::{linpack_row, LinpackRow};
-pub use mlbench::{MlBench, MlBenchConfig, MlBenchResult, PhaseTimes};
+pub use mlbench::{
+    dual_half_epochs, DualHalfOutcome, MlBench, MlBenchConfig, MlBenchResult, PhaseTimes,
+};
 pub use scans::{sharded_normalize, sharded_sum, ScanGenerator};
 pub use stall::{stall_table, StallRow};

@@ -164,7 +164,7 @@ mod tests {
     use super::*;
     use crate::coordinator::TransferMode;
     use crate::device::Technology;
-    use crate::memory::CacheSpec;
+    use crate::memory::{CacheSpec, MemSpec};
 
     #[test]
     fn labels_alternate_and_shapes_match() {
@@ -216,7 +216,7 @@ mod tests {
     fn sharded_normalize_matches_host_arithmetic() {
         let mut s = Session::builder(Technology::epiphany3()).seed(9).build().unwrap();
         let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
-        let d = s.alloc_host_f32("vol", &data).unwrap();
+        let d = s.alloc(MemSpec::host("vol").from(&data)).unwrap();
         let cores: Vec<usize> = (0..16).collect();
         sharded_normalize(
             &mut s,
@@ -240,7 +240,7 @@ mod tests {
         let mut s = Session::builder(Technology::epiphany3()).seed(9).build().unwrap();
         let data: Vec<f32> = (0..320).map(|_| 1.0).collect();
         let spec = CacheSpec { segment_elems: 40, capacity_segments: 8 };
-        let d = s.alloc_host_cached_f32("vol", &data, spec).unwrap();
+        let d = s.alloc(MemSpec::cached("vol", spec).from(&data)).unwrap();
         let cores: Vec<usize> = (0..4).collect();
         let run = |s: &mut Session| {
             sharded_sum(

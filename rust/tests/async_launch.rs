@@ -1,0 +1,353 @@
+//! Differential + determinism tests for the asynchronous offload API.
+//!
+//! Pinned properties:
+//!
+//! 1. **Sequential submit-then-wait ≡ blocking offload** — the deprecated
+//!    `Session::offload` shim and the launch builder produce bit-identical
+//!    results, virtual times, stats and traces for the same call sequence.
+//! 2. **Disjoint-core launches overlap** — two in-flight launches on
+//!    disjoint core halves finish in strictly less total virtual time
+//!    than the same launches run back to back, deterministically under a
+//!    fixed seed, with values unchanged.
+//! 3. **Contended launches queue** — two launches naming the same cores
+//!    behave bit-identically whether the second is submitted before or
+//!    after the first is waited; the queued launch starts exactly at the
+//!    blocking launch's finish.
+//! 4. **Pipelined mlbench epochs beat blocking** (the PR's acceptance
+//!    criterion) — `dual_half_epochs` pipelined reports strictly lower
+//!    total virtual time than the blocking sequence with bit-identical
+//!    losses.
+//! 5. **`MemSpec` allocation ≡ the legacy `alloc_*` grid**, including the
+//!    constraint errors.
+
+use microcore::coordinator::{
+    ArgSpec, LaunchStatus, OffloadOptions, OffloadResult, PrefetchSpec, Session, TransferMode,
+};
+use microcore::device::Technology;
+use microcore::memory::{CacheSpec, MemSpec};
+use microcore::workloads::dual_half_epochs;
+
+const SUM_KERNEL: &str = r#"
+def total(xs):
+    s = 0.0
+    i = 0
+    while i < len(xs):
+        s += xs[i]
+        i += 1
+    return s
+"#;
+
+fn pf(buf: usize, epf: usize) -> PrefetchSpec {
+    PrefetchSpec {
+        buffer_size: buf,
+        elems_per_fetch: epf,
+        distance: epf,
+        access: microcore::coordinator::Access::ReadOnly,
+    }
+}
+
+fn session(seed: u64) -> Session {
+    Session::builder(Technology::epiphany3()).seed(seed).trace(4096).build().unwrap()
+}
+
+/// Everything observable about one offload, comparable for equality.
+#[derive(Debug, PartialEq)]
+struct Capture {
+    launched_at: u64,
+    finished_at: u64,
+    per_core: Vec<(usize, u64, u64, u64, usize, u64)>,
+    values: Vec<Vec<f64>>,
+}
+
+fn capture(res: &OffloadResult) -> Capture {
+    Capture {
+        launched_at: res.launched_at,
+        finished_at: res.finished_at,
+        per_core: res
+            .reports
+            .iter()
+            .map(|r| (r.core, r.finished_at, r.stall, r.requests, r.peak_cells, r.cell_stalls))
+            .collect(),
+        values: res
+            .reports
+            .iter()
+            .map(|r| match r.value.as_array() {
+                Ok(a) => a.borrow().clone(),
+                Err(_) => vec![r.value.as_f64().unwrap_or(f64::NAN)],
+            })
+            .collect(),
+    }
+}
+
+/// Observable session state after a run sequence.
+fn epilogue(sess: &Session) -> (u64, String, String) {
+    (sess.now(), format!("{:?}", sess.stats()), sess.engine().trace().render())
+}
+
+#[test]
+#[allow(deprecated)]
+fn submit_wait_is_bit_identical_to_blocking_offload() {
+    let data: Vec<f32> = (0..3200).map(|i| i as f32 * 0.3 - 11.0).collect();
+    let opts_of = |mode: &str| match mode {
+        "ondemand" => OffloadOptions::default().transfer(TransferMode::OnDemand),
+        "eager" => OffloadOptions::default().transfer(TransferMode::Eager),
+        _ => OffloadOptions::default().prefetch(pf(40, 20)),
+    };
+
+    // Legacy: the deprecated blocking shim, three offloads back to back.
+    let mut legacy_caps = Vec::new();
+    let mut legacy = session(17);
+    let a = legacy.alloc(MemSpec::host("a").from(&data)).unwrap();
+    let k = legacy.compile_kernel("total", SUM_KERNEL).unwrap();
+    for mode in ["ondemand", "prefetch", "eager"] {
+        let res = legacy.offload(&k, &[ArgSpec::sharded(a)], opts_of(mode)).unwrap();
+        legacy_caps.push(capture(&res));
+    }
+    let legacy_end = epilogue(&legacy);
+
+    // New surface: submit then wait, same sequence, fresh session.
+    let mut fresh_caps = Vec::new();
+    let mut fresh = session(17);
+    let a = fresh.alloc(MemSpec::host("a").from(&data)).unwrap();
+    let k = fresh.compile_kernel("total", SUM_KERNEL).unwrap();
+    for mode in ["ondemand", "prefetch", "eager"] {
+        let h = fresh
+            .launch(&k)
+            .arg(ArgSpec::sharded(a))
+            .options(opts_of(mode))
+            .submit()
+            .unwrap();
+        fresh_caps.push(capture(&h.wait(&mut fresh).unwrap()));
+    }
+    let fresh_end = epilogue(&fresh);
+
+    assert_eq!(legacy_caps, fresh_caps, "per-offload observables");
+    assert_eq!(legacy_end, fresh_end, "virtual clock, stats and trace");
+}
+
+#[test]
+fn disjoint_core_launches_overlap_and_stay_deterministic() {
+    let data: Vec<f32> = (0..2400).map(|i| i as f32).collect();
+    let halves: (Vec<usize>, Vec<usize>) = ((0..8).collect(), (8..16).collect());
+
+    let run = |pipelined: bool| {
+        let mut s = session(23);
+        let a = s.alloc(MemSpec::host("a").from(&data)).unwrap();
+        let b = s.alloc(MemSpec::host("b").from(&data)).unwrap();
+        let k = s.compile_kernel("total", SUM_KERNEL).unwrap();
+        let launch = |s: &mut Session, d, cores: &[usize]| {
+            s.launch(&k)
+                .arg(ArgSpec::sharded(d))
+                .prefetch(pf(40, 20))
+                .cores(cores.to_vec())
+                .submit()
+                .unwrap()
+        };
+        let (ra, rb) = if pipelined {
+            let ha = launch(&mut s, a, &halves.0);
+            let hb = launch(&mut s, b, &halves.1);
+            assert_eq!(s.in_flight(), 2);
+            (ha.wait(&mut s).unwrap(), hb.wait(&mut s).unwrap())
+        } else {
+            let ha = launch(&mut s, a, &halves.0);
+            let ra = ha.wait(&mut s).unwrap();
+            let hb = launch(&mut s, b, &halves.1);
+            (ra, hb.wait(&mut s).unwrap())
+        };
+        (s.now(), capture(&ra), capture(&rb))
+    };
+
+    let (seq_total, seq_a, seq_b) = run(false);
+    let (pipe_total, pipe_a, pipe_b) = run(true);
+
+    // Values are identical — overlap moves time, never data.
+    assert_eq!(seq_a.values, pipe_a.values);
+    assert_eq!(seq_b.values, pipe_b.values);
+    // The second launch starts at virtual 0 instead of after the first.
+    assert_eq!(pipe_b.launched_at, 0, "disjoint cores admit immediately");
+    assert!(seq_b.launched_at > 0, "sequential B waits for A's wait");
+    // Strictly lower total virtual time — the pipelining win.
+    assert!(
+        pipe_total < seq_total,
+        "pipelined {pipe_total} must beat sequential {seq_total}"
+    );
+    // Deterministic under the fixed seed: bit-identical replay.
+    let (pipe_total2, pipe_a2, pipe_b2) = run(true);
+    assert_eq!(pipe_total, pipe_total2);
+    assert_eq!(pipe_a, pipe_a2);
+    assert_eq!(pipe_b, pipe_b2);
+}
+
+#[test]
+fn contended_launches_queue_bit_identically_to_sequential() {
+    let data: Vec<f32> = (0..800).map(|i| i as f32 * 0.5).collect();
+    let cores: Vec<usize> = (0..4).collect();
+
+    let run = |pipelined: bool| {
+        let mut s = session(29);
+        let a = s.alloc(MemSpec::host("a").from(&data)).unwrap();
+        let k = s.compile_kernel("total", SUM_KERNEL).unwrap();
+        let launch = |s: &mut Session| {
+            s.launch(&k)
+                .arg(ArgSpec::sharded(a))
+                .mode(TransferMode::OnDemand)
+                .cores(cores.clone())
+                .submit()
+                .unwrap()
+        };
+        let (ra, rb) = if pipelined {
+            let ha = launch(&mut s);
+            let hb = launch(&mut s);
+            assert_eq!(hb.status(&s), Some(LaunchStatus::Pending), "queued on busy cores");
+            (ha.wait(&mut s).unwrap(), hb.wait(&mut s).unwrap())
+        } else {
+            let ra = launch(&mut s).wait(&mut s).unwrap();
+            (ra, launch(&mut s).wait(&mut s).unwrap())
+        };
+        (epilogue(&s), capture(&ra), capture(&rb))
+    };
+
+    let sequential = run(false);
+    let pipelined = run(true);
+    // Contention on the same cores leaves no overlap to exploit: the
+    // queued launch runs exactly like the sequential one — bit-identical
+    // times, traces and stats, not just values.
+    assert_eq!(sequential, pipelined);
+    let (_, ref ra, ref rb) = pipelined;
+    assert_eq!(rb.launched_at, ra.finished_at, "queued launch starts at the release");
+}
+
+/// The PR's acceptance criterion: pipelined mlbench epochs on disjoint
+/// core halves report strictly lower total virtual time than the
+/// blocking sequence, with bit-identical numerics, deterministically.
+#[test]
+fn pipelined_mlbench_epochs_beat_blocking() {
+    let run = |pipelined| {
+        dual_half_epochs(Technology::epiphany3(), 42, TransferMode::Prefetch, 2, 2, pipelined)
+            .unwrap()
+    };
+    let blocking = run(false);
+    let pipelined = run(true);
+    assert_eq!(blocking.losses_a.len(), 4, "images × epochs");
+    assert_eq!(blocking.losses_a, pipelined.losses_a, "identical numerics");
+    assert_eq!(blocking.losses_b, pipelined.losses_b, "identical numerics");
+    assert!(
+        pipelined.elapsed < blocking.elapsed,
+        "pipelined {} must be strictly lower than blocking {}",
+        pipelined.elapsed,
+        blocking.elapsed
+    );
+    // Deterministic under the fixed seed.
+    let replay = run(true);
+    assert_eq!(replay.elapsed, pipelined.elapsed);
+    assert_eq!(replay.losses_a, pipelined.losses_a);
+}
+
+#[test]
+fn poll_returns_completions_in_finish_order() {
+    // A long launch on one half, a short one on the other: poll must
+    // surface the short one first even though it was submitted second.
+    let long: Vec<f32> = vec![1.0; 4000];
+    let short: Vec<f32> = vec![1.0; 80];
+    let mut s = session(31);
+    let a = s.alloc(MemSpec::host("long").from(&long)).unwrap();
+    let b = s.alloc(MemSpec::host("short").from(&short)).unwrap();
+    let k = s.compile_kernel("total", SUM_KERNEL).unwrap();
+    let ha = s
+        .launch(&k)
+        .arg(ArgSpec::sharded(a))
+        .mode(TransferMode::OnDemand)
+        .cores((0..8).collect())
+        .submit()
+        .unwrap();
+    let hb = s
+        .launch(&k)
+        .arg(ArgSpec::sharded(b))
+        .mode(TransferMode::OnDemand)
+        .cores((8..16).collect())
+        .submit()
+        .unwrap();
+    let first = s.poll().unwrap().expect("something completes");
+    assert_eq!(first, hb, "the short disjoint launch finishes first");
+    assert_eq!(ha.status(&s), Some(LaunchStatus::Active), "long launch still running");
+    s.wait_all().unwrap();
+    let rb = hb.wait(&mut s).unwrap();
+    let ra = ha.wait(&mut s).unwrap();
+    assert!(rb.finished_at < ra.finished_at);
+    assert_eq!(s.poll().unwrap(), None, "nothing left in flight");
+}
+
+#[test]
+fn a_failing_launch_parks_its_own_error() {
+    let mut s = session(37);
+    let data: Vec<f32> = vec![1.0; 80];
+    let a = s.alloc(MemSpec::host("a").from(&data)).unwrap();
+    let sum = s.compile_kernel("total", SUM_KERNEL).unwrap();
+    let bad = s.compile_kernel("w", "def w(a):\n    a[0] = 1.0\n    return 0\n").unwrap();
+    // The bad launch writes through a read-only reference on one half;
+    // a healthy launch runs on the other half.
+    let hb = s
+        .launch(&bad)
+        .arg(ArgSpec::sharded(a))
+        .mode(TransferMode::OnDemand)
+        .cores((0..8).collect())
+        .submit()
+        .unwrap();
+    let hg = s
+        .launch(&sum)
+        .arg(ArgSpec::sharded(a))
+        .mode(TransferMode::OnDemand)
+        .cores((8..16).collect())
+        .submit()
+        .unwrap();
+    // Waiting the healthy launch drives past the bad one's failure
+    // without surfacing it here — errors belong to their own launch.
+    let res = hg.wait(&mut s).unwrap();
+    assert!(res.finished_at > 0);
+    let err = hb.wait(&mut s).unwrap_err();
+    assert!(err.to_string().contains("read-only"), "{err}");
+    // The failed launch released its cores: new work runs there.
+    let h = s
+        .launch(&sum)
+        .arg(ArgSpec::sharded(a))
+        .mode(TransferMode::OnDemand)
+        .cores((0..8).collect())
+        .submit()
+        .unwrap();
+    assert!(h.wait(&mut s).is_ok());
+}
+
+#[test]
+#[allow(deprecated)]
+fn memspec_alloc_equivalent_to_legacy_grid() {
+    let data: Vec<f32> = (0..320).map(|i| i as f32 * 0.7).collect();
+    let spec = CacheSpec { segment_elems: 40, capacity_segments: 4 };
+
+    let mut old = session(3);
+    let o1 = old.alloc_host_f32("h", &data).unwrap();
+    let o2 = old.alloc_shared_f32("s", &data).unwrap();
+    let o3 = old.alloc_microcore_f32("m", 16).unwrap();
+    let o4 = old.alloc_host_cached_f32("c", &data, spec).unwrap();
+    let o5 = old.alloc_procedural_f32("p", 9, 64, 0.5).unwrap();
+
+    let mut new = session(3);
+    let n1 = new.alloc(MemSpec::host("h").from(&data)).unwrap();
+    let n2 = new.alloc(MemSpec::shared("s").from(&data)).unwrap();
+    let n3 = new.alloc(MemSpec::microcore("m").zeroed(16)).unwrap();
+    let n4 = new.alloc(MemSpec::cached("c", spec).from(&data)).unwrap();
+    let n5 = new.alloc(MemSpec::procedural("p", 9, 0.5).zeroed(64)).unwrap();
+
+    for (o, n) in [(o1, n1), (o2, n2), (o3, n3), (o4, n4), (o5, n5)] {
+        assert_eq!(o, n, "same ids and geometry in registration order");
+        assert_eq!(old.read(o).unwrap(), new.read(n).unwrap(), "same contents");
+        let oi = old.engine().registry().info(o).unwrap();
+        let ni = new.engine().registry().info(n).unwrap();
+        assert_eq!(oi.level, ni.level, "same hierarchy level");
+    }
+
+    // Constraint errors survive the unification.
+    assert!(new.alloc(MemSpec::shared("big").zeroed(10_000_000)).is_err(), "window");
+    assert!(new.alloc(MemSpec::microcore("big").zeroed(10_000)).is_err(), "user store");
+    let over = CacheSpec { segment_elems: 1 << 20, capacity_segments: 64 };
+    assert!(new.alloc(MemSpec::cached("big", over).from(&data)).is_err(), "cache budget");
+}

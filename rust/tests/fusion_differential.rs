@@ -13,6 +13,7 @@ use microcore::coordinator::{
     Access, ArgSpec, Kernel, OffloadOptions, PrefetchSpec, Session, TransferMode,
 };
 use microcore::device::Technology;
+use microcore::memory::MemSpec;
 use microcore::vm::{
     compile_source, compile_source_unfused, CostCounters, Interp, Outcome, Value,
 };
@@ -250,8 +251,8 @@ fn run_offload(fuse: bool, fast_path: bool, mode: &str) -> RunCapture {
     let n = 3200usize;
     let a: Vec<f32> = (0..n).map(|i| i as f32 * 0.25).collect();
     let b: Vec<f32> = vec![1.5; n];
-    let ra = sess.alloc_host_f32("a", &a).unwrap();
-    let rb = sess.alloc_host_f32("b", &b).unwrap();
+    let ra = sess.alloc(MemSpec::host("a").from(&a)).unwrap();
+    let rb = sess.alloc(MemSpec::host("b").from(&b)).unwrap();
     let (name, src) = match mode {
         "stream" => ("stream", STREAM),
         _ => ("sum", SUM_SRC),
@@ -261,7 +262,7 @@ fn run_offload(fuse: bool, fast_path: bool, mode: &str) -> RunCapture {
     } else {
         compile_source_unfused(src, None).unwrap()
     };
-    let kernel = Kernel { name: name.into(), program: Rc::new(program) };
+    let kernel = Kernel::from_program(name, Rc::new(program));
     let args: Vec<ArgSpec> = if mode == "stream" {
         vec![ArgSpec::sharded(ra)]
     } else {
@@ -277,7 +278,14 @@ fn run_offload(fuse: bool, fast_path: bool, mode: &str) -> RunCapture {
             access: Access::ReadOnly,
         }),
     };
-    let res = sess.offload(&kernel, &args, opts).unwrap();
+    let res = sess
+        .launch(&kernel)
+        .args(&args)
+        .options(opts)
+        .submit()
+        .unwrap()
+        .wait(&mut sess)
+        .unwrap();
     RunCapture {
         launched_at: res.launched_at,
         finished_at: res.finished_at,

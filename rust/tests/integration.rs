@@ -4,6 +4,7 @@ use microcore::coordinator::{
     Access, ArgSpec, OffloadOptions, PrefetchChoice, PrefetchSpec, Session, TransferMode,
 };
 use microcore::device::Technology;
+use microcore::memory::MemSpec;
 
 const SUM_KERNEL: &str = r#"
 def total(xs):
@@ -19,17 +20,28 @@ fn pf(buf: usize, epf: usize) -> PrefetchSpec {
     PrefetchSpec { buffer_size: buf, elems_per_fetch: epf, distance: epf, access: Access::ReadOnly }
 }
 
+/// Submit-then-wait through the async launch surface (the blocking
+/// collective, minus the deprecated `Session::offload` shim).
+fn offload(
+    sess: &mut Session,
+    k: &microcore::coordinator::Kernel,
+    args: &[ArgSpec],
+    opts: OffloadOptions,
+) -> microcore::error::Result<microcore::coordinator::OffloadResult> {
+    let h = sess.launch(k).args(args).options(opts).submit()?;
+    h.wait(sess)
+}
+
 #[test]
 fn file_kind_data_flows_through_offload() {
     let tmp = std::env::temp_dir().join(format!("it_file_{}.f32", std::process::id()));
     let mut sess = Session::builder(Technology::epiphany3()).seed(3).build().unwrap();
     let data: Vec<f32> = (0..320).map(|i| i as f32).collect();
-    let d = sess.alloc_file_f32("xs", &tmp, data.len()).unwrap();
-    sess.write(d, 0, &data).unwrap();
+    let d = sess.alloc(MemSpec::file("xs", &tmp).from(&data)).unwrap();
     let k = sess.compile_kernel("total", SUM_KERNEL).unwrap();
-    let res = sess
-        .offload(&k, &[ArgSpec::sharded(d)], OffloadOptions::default().prefetch(pf(20, 10)))
-        .unwrap();
+    let res =
+        offload(&mut sess, &k, &[ArgSpec::sharded(d)], OffloadOptions::default().prefetch(pf(20, 10)))
+            .unwrap();
     let total: f64 = res.reports.iter().map(|r| r.value.as_f64().unwrap()).sum();
     let expect: f64 = data.iter().map(|&v| f64::from(v)).sum();
     assert!((total - expect).abs() < 1e-3);
@@ -41,27 +53,28 @@ fn multi_kernel_pipeline_shares_state_across_offloads() {
     // Kernel 1 writes per-core markers into a mutable shared variable;
     // kernel 2 reads them back — state persists across offloads.
     let mut sess = Session::builder(Technology::epiphany3()).seed(4).build().unwrap();
-    let v = sess.alloc_shared_zeroed("v", 32).unwrap();
+    let v = sess.alloc(MemSpec::shared("v").zeroed(32)).unwrap();
     let w = sess
         .compile_kernel(
             "mark",
             "def mark(v):\n    i = 0\n    while i < len(v):\n        v[i] = core_id() * 10.0\n        i += 1\n    return 0\n",
         )
         .unwrap();
-    sess.offload(
+    offload(
+        &mut sess,
         &w,
         &[ArgSpec::sharded_mut(v)],
         OffloadOptions::default().transfer(TransferMode::OnDemand),
     )
     .unwrap();
     let r = sess.compile_kernel("total", SUM_KERNEL).unwrap();
-    let res = sess
-        .offload(
-            &r,
-            &[ArgSpec::sharded(v)],
-            OffloadOptions::default().transfer(TransferMode::OnDemand),
-        )
-        .unwrap();
+    let res = offload(
+        &mut sess,
+        &r,
+        &[ArgSpec::sharded(v)],
+        OffloadOptions::default().transfer(TransferMode::OnDemand),
+    )
+    .unwrap();
     // Core c wrote c*10 into its 2 elements; core c reads its own shard.
     for (c, rep) in res.reports.iter().enumerate() {
         assert_eq!(rep.value.as_f64().unwrap(), (c * 10 * 2) as f64, "core {c}");
@@ -74,7 +87,7 @@ fn modes_agree_numerically_on_mutable_writeback() {
     let run = |mode: TransferMode| {
         let mut sess = Session::builder(Technology::epiphany3()).seed(5).build().unwrap();
         let data: Vec<f32> = (0..160).map(|i| i as f32).collect();
-        let a = sess.alloc_host_f32("a", &data).unwrap();
+        let a = sess.alloc(MemSpec::host("a").from(&data)).unwrap();
         let k = sess
             .compile_kernel(
                 "dbl",
@@ -94,7 +107,7 @@ fn modes_agree_numerically_on_mutable_writeback() {
             access: Access::Mutable,
             prefetch: PrefetchChoice::Default,
         };
-        sess.offload(&k, &[arg], opts).unwrap();
+        offload(&mut sess, &k, &[arg], opts).unwrap();
         sess.read(a).unwrap()
     };
     let od = run(TransferMode::OnDemand);
@@ -108,14 +121,15 @@ fn modes_agree_numerically_on_mutable_writeback() {
 #[test]
 fn prefetch_mutable_write_through_visible_after_offload() {
     let mut sess = Session::builder(Technology::epiphany3()).seed(6).build().unwrap();
-    let a = sess.alloc_host_zeroed("a", 64).unwrap();
+    let a = sess.alloc(MemSpec::host("a").zeroed(64)).unwrap();
     let k = sess
         .compile_kernel(
             "fill",
             "def fill(a):\n    i = 0\n    while i < len(a):\n        a[i] = 7.0\n        i += 1\n    return 0\n",
         )
         .unwrap();
-    sess.offload(
+    offload(
+        &mut sess,
         &k,
         &[ArgSpec::Ref {
             dref: a,
@@ -142,7 +156,8 @@ fn microblaze_slower_on_compute_faster_shape_on_transfer() {
                 "def spin(n):\n    s = 0\n    i = 0\n    while i < n:\n        s += i\n        i += 1\n    return s\n",
             )
             .unwrap();
-        sess.offload(
+        offload(
+            &mut sess,
             &k,
             &[ArgSpec::Int(20_000)],
             OffloadOptions::default().transfer(TransferMode::OnDemand).on_cores(vec![0]),
@@ -160,15 +175,15 @@ fn microblaze_slower_on_compute_faster_shape_on_transfer() {
     // 2x of the Epiphany despite the 6x clock gap.
     let stream = |tech: Technology| {
         let mut sess = Session::builder(tech).seed(7).build().unwrap();
-        let a = sess.alloc_host_f32("a", &[1.0; 80]).unwrap();
+        let a = sess.alloc(MemSpec::host("a").from(&[1.0; 80])).unwrap();
         let k = sess.compile_kernel("total", SUM_KERNEL).unwrap();
-        let res = sess
-            .offload(
-                &k,
-                &[ArgSpec::sharded(a)],
-                OffloadOptions::default().transfer(TransferMode::OnDemand),
-            )
-            .unwrap();
+        let res = offload(
+            &mut sess,
+            &k,
+            &[ArgSpec::sharded(a)],
+            OffloadOptions::default().transfer(TransferMode::OnDemand),
+        )
+        .unwrap();
         let sum: f64 = res.reports.iter().map(|r| r.value.as_f64().unwrap()).sum();
         assert_eq!(sum, 80.0);
         res.elapsed()
@@ -185,9 +200,9 @@ fn bandwidth_degradation_slows_prefetch_runs() {
         let mut tech = Technology::epiphany3();
         tech.link_bw_achieved = bw;
         let mut sess = Session::builder(tech).seed(8).build().unwrap();
-        let a = sess.alloc_host_zeroed("a", 3200).unwrap();
+        let a = sess.alloc(MemSpec::host("a").zeroed(3200)).unwrap();
         let k = sess.compile_kernel("total", SUM_KERNEL).unwrap();
-        sess.offload(&k, &[ArgSpec::sharded(a)], OffloadOptions::default().prefetch(pf(240, 120)))
+        offload(&mut sess, &k, &[ArgSpec::sharded(a)], OffloadOptions::default().prefetch(pf(240, 120)))
             .unwrap()
             .elapsed()
     };
@@ -199,9 +214,10 @@ fn bandwidth_degradation_slows_prefetch_runs() {
 #[test]
 fn trace_records_protocol_events() {
     let mut sess = Session::builder(Technology::epiphany3()).seed(9).trace(4096).build().unwrap();
-    let a = sess.alloc_host_f32("a", &[1.0; 32]).unwrap();
+    let a = sess.alloc(MemSpec::host("a").from(&[1.0; 32])).unwrap();
     let k = sess.compile_kernel("total", SUM_KERNEL).unwrap();
-    sess.offload(
+    offload(
+        &mut sess,
         &k,
         &[ArgSpec::sharded(a)],
         OffloadOptions::default().transfer(TransferMode::OnDemand),
@@ -218,18 +234,18 @@ fn trace_records_protocol_events() {
 #[test]
 fn scratchpad_exhaustion_surfaces_for_oversized_prefetch_buffers() {
     let mut sess = Session::builder(Technology::epiphany3()).seed(10).build().unwrap();
-    let a = sess.alloc_host_zeroed("a", 64_000).unwrap();
+    let a = sess.alloc(MemSpec::host("a").zeroed(64_000)).unwrap();
     let k = sess.compile_kernel("total", SUM_KERNEL).unwrap();
     // A 4000-element (16 KB) buffer cannot fit beside the 25 KB VM in 32 KB
     // — but 4000 elems/fetch also exceeds the cell payload, so use a legal
     // fetch size with an oversized buffer.
-    let err = sess
-        .offload(
-            &k,
-            &[ArgSpec::sharded(a)],
-            OffloadOptions::default().prefetch(pf(4000, 250)),
-        )
-        .unwrap_err();
+    let err = offload(
+        &mut sess,
+        &k,
+        &[ArgSpec::sharded(a)],
+        OffloadOptions::default().prefetch(pf(4000, 250)),
+    )
+    .unwrap_err();
     assert!(err.to_string().contains("scratchpad"), "{err}");
 }
 
@@ -242,8 +258,7 @@ fn kernel_print_and_diagnostics_do_not_disturb_results() {
             "def talky():\n    print('hello from core')\n    print(core_id())\n    return core_id()\n",
         )
         .unwrap();
-    let res = sess
-        .offload(&k, &[], OffloadOptions::default().transfer(TransferMode::OnDemand))
+    let res = offload(&mut sess, &k, &[], OffloadOptions::default().transfer(TransferMode::OnDemand))
         .unwrap();
     assert_eq!(res.reports[3].value.as_f64().unwrap(), 3.0);
 }

@@ -4,7 +4,7 @@ use microcore::coordinator::{
     Access, ArgSpec, OffloadOptions, PrefetchSpec, Session, TransferMode,
 };
 use microcore::device::Technology;
-use microcore::memory::DataRef;
+use microcore::memory::{DataRef, MemSpec};
 use microcore::testkit::{check, Gen};
 
 const SUM_KERNEL: &str = r#"
@@ -16,6 +16,18 @@ def total(xs):
         i += 1
     return s
 "#;
+
+/// Submit-then-wait through the async launch surface (the blocking
+/// collective, minus the deprecated `Session::offload` shim).
+fn offload(
+    sess: &mut Session,
+    k: &microcore::coordinator::Kernel,
+    args: &[ArgSpec],
+    opts: OffloadOptions,
+) -> microcore::error::Result<microcore::coordinator::OffloadResult> {
+    let h = sess.launch(k).args(args).options(opts).submit()?;
+    h.wait(sess)
+}
 
 /// Sharding is a partition: disjoint, contiguous, covering, balanced ±1.
 #[test]
@@ -58,7 +70,7 @@ fn prop_modes_numerically_equivalent() {
         for mode in [TransferMode::Eager, TransferMode::OnDemand, TransferMode::Prefetch] {
             let mut sess =
                 Session::builder(Technology::epiphany3()).seed(1).build().map_err(|e| e.to_string())?;
-            let a = sess.alloc_host_f32("a", &data).map_err(|e| e.to_string())?;
+            let a = sess.alloc(MemSpec::host("a").from(&data)).map_err(|e| e.to_string())?;
             let k = sess.compile_kernel("total", SUM_KERNEL).map_err(|e| e.to_string())?;
             let opts = match mode {
                 TransferMode::Prefetch => OffloadOptions::default().prefetch(PrefetchSpec {
@@ -80,8 +92,7 @@ fn prop_modes_numerically_equivalent() {
                 _ => opts,
             };
             let cores_list: Vec<usize> = (0..cores).collect();
-            let res = sess
-                .offload(&k, &[ArgSpec::sharded(a)], opts.on_cores(cores_list))
+            let res = offload(&mut sess, &k, &[ArgSpec::sharded(a)], opts.on_cores(cores_list))
                 .map_err(|e| e.to_string())?;
             let total: f64 =
                 res.reports.iter().map(|r| r.value.as_f64().unwrap_or(f64::NAN)).sum();
@@ -110,7 +121,7 @@ fn prop_read_your_writes() {
         let val = g.f64(-1000.0, 1000.0);
         let mut sess =
             Session::builder(Technology::epiphany3()).seed(2).build().map_err(|e| e.to_string())?;
-        let a = sess.alloc_host_zeroed("a", n).map_err(|e| e.to_string())?;
+        let a = sess.alloc(MemSpec::host("a").zeroed(n)).map_err(|e| e.to_string())?;
         let src = r#"
 def rw(a):
     a[0] = VAL
@@ -130,8 +141,7 @@ def rw(a):
                 access: Access::Mutable,
             })
         };
-        let res = sess
-            .offload(&k, &[ArgSpec::sharded_mut(a)], mode)
+        let res = offload(&mut sess, &k, &[ArgSpec::sharded_mut(a)], mode)
             .map_err(|e| e.to_string())?;
         let expect = (val as f32 * 2.0) as f64;
         for r in &res.reports {
@@ -162,20 +172,20 @@ fn prop_deterministic_replay() {
                 .seed(seed)
                 .build()
                 .map_err(|e| e.to_string())?;
-            let a = sess.alloc_host_f32("a", &vec![1.5; n]).map_err(|e| e.to_string())?;
+            let a = sess.alloc(MemSpec::host("a").from(&vec![1.5; n])).map_err(|e| e.to_string())?;
             let k = sess.compile_kernel("total", SUM_KERNEL).map_err(|e| e.to_string())?;
-            let res = sess
-                .offload(
-                    &k,
-                    &[ArgSpec::sharded(a)],
-                    OffloadOptions::default().prefetch(PrefetchSpec {
-                        buffer_size: epf * 2,
-                        elems_per_fetch: epf,
-                        distance: epf,
-                        access: Access::ReadOnly,
-                    }),
-                )
-                .map_err(|e| e.to_string())?;
+            let res = offload(
+                &mut sess,
+                &k,
+                &[ArgSpec::sharded(a)],
+                OffloadOptions::default().prefetch(PrefetchSpec {
+                    buffer_size: epf * 2,
+                    elems_per_fetch: epf,
+                    distance: epf,
+                    access: Access::ReadOnly,
+                }),
+            )
+            .map_err(|e| e.to_string())?;
             let sum: f64 = res.reports.iter().map(|r| r.value.as_f64().unwrap()).sum();
             Ok((res.elapsed(), sum))
         };
@@ -329,20 +339,20 @@ fn prop_prefetch_requests_bounded() {
                 .seed(3)
                 .build()
                 .map_err(|e| e.to_string())?;
-            let a = sess.alloc_host_zeroed("a", n).map_err(|e| e.to_string())?;
+            let a = sess.alloc(MemSpec::host("a").zeroed(n)).map_err(|e| e.to_string())?;
             let k = sess.compile_kernel("total", SUM_KERNEL).map_err(|e| e.to_string())?;
-            let res = sess
-                .offload(
-                    &k,
-                    &[ArgSpec::sharded(a)],
-                    OffloadOptions::default().prefetch(PrefetchSpec {
-                        buffer_size: (epf * 2).max(2),
-                        elems_per_fetch: epf,
-                        distance: epf,
-                        access: Access::ReadOnly,
-                    }),
-                )
-                .map_err(|e| e.to_string())?;
+            let res = offload(
+                &mut sess,
+                &k,
+                &[ArgSpec::sharded(a)],
+                OffloadOptions::default().prefetch(PrefetchSpec {
+                    buffer_size: (epf * 2).max(2),
+                    elems_per_fetch: epf,
+                    distance: epf,
+                    access: Access::ReadOnly,
+                }),
+            )
+            .map_err(|e| e.to_string())?;
             counts.push(res.total_requests());
         }
         if counts[1] > counts[0] {

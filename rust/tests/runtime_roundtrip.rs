@@ -5,7 +5,8 @@
 //! cannot be constructed even when artifacts exist.
 #![cfg(feature = "xla")]
 
-use microcore::coordinator::{ArgSpec, OffloadOptions, Session, TransferMode};
+use microcore::coordinator::{ArgSpec, Session, TransferMode};
+use microcore::memory::MemSpec;
 use microcore::device::Technology;
 use microcore::runtime::{ModelExecutor, PjrtContext};
 use microcore::testkit::{assert_allclose, check, Gen};
@@ -51,26 +52,27 @@ def k(w, x, n, chunk, h):
                 wc[r * shard..(r + 1) * shard]
                     .copy_from_slice(&wdata[r * n + c * shard..r * n + c * shard + shard]);
             }
-            wrefs.push(sess.alloc_shared_f32(&format!("w{c}"), &wc).unwrap());
+            wrefs.push(sess.alloc(MemSpec::shared(format!("w{c}")).from(&wc)).unwrap());
         }
-        let x = sess.alloc_host_f32("x", &xdata).unwrap();
+        let x = sess.alloc(MemSpec::host("x").from(&xdata)).unwrap();
         let k = sess.compile_kernel("k", SRC).unwrap();
         let res = sess
-            .offload(
-                &k,
-                &[
-                    ArgSpec::PerCore {
-                        drefs: wrefs,
-                        access: microcore::coordinator::Access::ReadOnly,
-                        prefetch: microcore::coordinator::PrefetchChoice::Never,
-                    },
-                    ArgSpec::sharded(x),
-                    ArgSpec::Int(shard as i64),
-                    ArgSpec::Int(shard as i64),
-                    ArgSpec::Int(h as i64),
-                ],
-                OffloadOptions::default().transfer(TransferMode::OnDemand),
-            )
+            .launch(&k)
+            .args(&[
+                ArgSpec::PerCore {
+                    drefs: wrefs,
+                    access: microcore::coordinator::Access::ReadOnly,
+                    prefetch: microcore::coordinator::PrefetchChoice::Never,
+                },
+                ArgSpec::sharded(x),
+                ArgSpec::Int(shard as i64),
+                ArgSpec::Int(shard as i64),
+                ArgSpec::Int(h as i64),
+            ])
+            .mode(TransferMode::OnDemand)
+            .submit()
+            .unwrap()
+            .wait(&mut sess)
             .unwrap();
         // Sum partials
         let mut acc = vec![0.0f64; h];

@@ -18,7 +18,7 @@ use microcore::coordinator::{
     Access, OffloadOptions, PrefetchSpec, Session, ShardPolicy, TransferMode,
 };
 use microcore::device::Technology;
-use microcore::memory::CacheSpec;
+use microcore::memory::{CacheSpec, MemSpec};
 use microcore::workloads::{sharded_normalize, sharded_sum};
 
 const N: usize = 2048;
@@ -38,7 +38,7 @@ fn pf(access: Access) -> PrefetchSpec {
 /// array contents.
 fn normalized(cores: usize, policy: ShardPolicy, options: OffloadOptions) -> Vec<f32> {
     let mut s = Session::builder(Technology::epiphany3()).seed(21).build().unwrap();
-    let d = s.alloc_host_f32("vol", &dataset()).unwrap();
+    let d = s.alloc(MemSpec::host("vol").from(&dataset())).unwrap();
     let core_ids: Vec<usize> = (0..cores).collect();
     sharded_normalize(&mut s, d, policy, &core_ids, MU, SCALE, options).unwrap();
     s.read(d).unwrap()
@@ -86,8 +86,8 @@ fn cache_changes_times_but_never_values() {
     let run = |cache: Option<CacheSpec>| {
         let mut s = Session::builder(Technology::epiphany3()).seed(33).build().unwrap();
         let d = match cache {
-            Some(spec) => s.alloc_host_cached_f32("vol", &dataset(), spec).unwrap(),
-            None => s.alloc_host_f32("vol", &dataset()).unwrap(),
+            Some(spec) => s.alloc(MemSpec::cached("vol", spec).from(&dataset())).unwrap(),
+            None => s.alloc(MemSpec::host("vol").from(&dataset())).unwrap(),
         };
         let cores: Vec<usize> = (0..16).collect();
         let mut sums = Vec::new();
@@ -129,7 +129,7 @@ fn fast_path_toggle_is_invisible_with_cache_in_play() {
         let mut s = Session::builder(Technology::epiphany3()).seed(7).build().unwrap();
         s.engine_mut().set_fast_path(fast);
         let spec = CacheSpec { segment_elems: 256, capacity_segments: 8 };
-        let d = s.alloc_host_cached_f32("vol", &dataset(), spec).unwrap();
+        let d = s.alloc(MemSpec::cached("vol", spec).from(&dataset())).unwrap();
         let cores: Vec<usize> = (0..16).collect();
         let mut out = Vec::new();
         for _ in 0..2 {
@@ -159,7 +159,7 @@ fn cache_write_back_coheres_with_sharded_mutation() {
     // constantly and still be exact. (Block policy on purpose — cyclic
     // shards stream host-side staging copies, not the cached base.)
     let spec = CacheSpec { segment_elems: 128, capacity_segments: 2 };
-    let d = s.alloc_host_cached_f32("vol", &dataset(), spec).unwrap();
+    let d = s.alloc(MemSpec::cached("vol", spec).from(&dataset())).unwrap();
     let cores: Vec<usize> = (0..16).collect();
     sharded_normalize(
         &mut s,

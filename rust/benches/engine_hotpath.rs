@@ -10,8 +10,12 @@
 //! * pre-fetch hit path rate — exercises the engine's inline
 //!   prefetch-hit fast path;
 //! * pipelined dual-replica mlbench epochs — exercises the engine's
-//!   launch queue (two in-flight launches on disjoint core halves), and
-//!   prints the blocking-vs-pipelined virtual-time comparison;
+//!   launch graph (two replicas' phases in flight on disjoint core
+//!   halves), and prints the blocking-vs-pipelined virtual-time
+//!   comparison;
+//! * dep-pipelined single-replica mlbench epochs — software pipelining
+//!   from inferred data-flow edges (`grad(i)` overlapping `ff(i+1)`
+//!   inside one replica, no manual phase waits);
 //! * tensor-builtin invocation rate through PJRT.
 //!
 //! ```text
@@ -30,7 +34,9 @@ use microcore::coordinator::{
 use microcore::device::Technology;
 use microcore::memory::{CacheSpec, MemSpec};
 use microcore::metrics::report::cache_table;
-use microcore::workloads::{dual_half_epochs, sharded_normalize, sharded_sum};
+use microcore::workloads::{
+    dual_half_epochs, sharded_normalize, sharded_sum, single_replica_epochs,
+};
 
 const SPIN: &str = r#"
 def spin(n):
@@ -247,7 +253,56 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // 7. Tensor-builtin (PJRT) invocation rate, if artifacts exist and
+    // 7. Single-replica software pipelining over the launch graph: one
+    // model's phases split across disjoint core halves, `grad(i)`
+    // overlapping `ff(i+1)` with ordering inferred from data-flow edges
+    // (no manual phase waits). The timed case is the pipelined variant;
+    // one uncounted blocking run prints the virtual-time comparison.
+    let m = time_wall("dep_pipeline_1replica", warmup, iters, || {
+        single_replica_epochs(
+            Technology::epiphany3(),
+            1,
+            TransferMode::Prefetch,
+            ml_images,
+            ml_epochs,
+            true,
+        )
+        .unwrap();
+    });
+    case(&m, Some((ml_images * ml_epochs) as f64 / m.mean()));
+    {
+        let blocking = single_replica_epochs(
+            Technology::epiphany3(),
+            1,
+            TransferMode::Prefetch,
+            ml_images,
+            ml_epochs,
+            false,
+        )
+        .unwrap();
+        let pipelined = single_replica_epochs(
+            Technology::epiphany3(),
+            1,
+            TransferMode::Prefetch,
+            ml_images,
+            ml_epochs,
+            true,
+        )
+        .unwrap();
+        assert_eq!(blocking.losses, pipelined.losses, "overlap never changes values");
+        assert!(
+            pipelined.elapsed < blocking.elapsed,
+            "dep pipelining must lower virtual time"
+        );
+        println!(
+            "  -> virtual time: blocking {} ns, dep-pipelined {} ns ({:.2}x)",
+            blocking.elapsed,
+            pipelined.elapsed,
+            blocking.elapsed as f64 / pipelined.elapsed as f64
+        );
+    }
+
+    // 8. Tensor-builtin (PJRT) invocation rate, if artifacts exist and
     // the build carries the real PJRT backend (stub builds would error
     // at session construction).
     if cfg!(feature = "xla") && std::path::Path::new("artifacts/manifest.json").exists() {

@@ -5,24 +5,40 @@
 //! interleaves them with the channel protocol, the host service, the
 //! shared link and PJRT tensor execution, all over virtual time.
 //!
-//! **Launch queue (in-flight pipelining).** [`Engine::submit`] enqueues a
-//! launch and returns a [`LaunchId`] without advancing time; completion is
-//! driven by [`Engine::wait`] / [`Engine::wait_all`] / [`Engine::poll`].
-//! Multiple submitted launches share one virtual timeline under *per-core
-//! occupancy*: a launch activates (stages code, eager copies, pre-fetch
-//! warm-up) as soon as every core it names is free, so two launches on
-//! disjoint core sets overlap their staging, compute and harvest phases,
-//! while launches contending for a core queue deterministically in
-//! submission order (work-conserving: a later launch whose cores are all
-//! free starts ahead of an earlier one still blocked on a different
-//! core). Sequential submit-then-wait is bit-identical to the
-//! classic blocking [`Engine::offload`] (which is now literally
-//! submit + wait); `tests/async_launch.rs` enforces both properties.
-//! Overlapping launches that share *mutable* data see §3.3's weak memory
-//! model writ large: element accesses interleave deterministically in
-//! virtual-time order, but no cross-launch ordering is promised — keep
-//! in-flight launches to disjoint mutable data (the shard planner's
-//! ownership rule).
+//! **Launch graph (dependency-driven pipelining).** [`Engine::submit`]
+//! enqueues a launch and returns a [`LaunchId`] without advancing time;
+//! completion is driven by [`Engine::wait`] / [`Engine::wait_all`] /
+//! [`Engine::poll`]. Every submitted launch carries a set of *dependency
+//! edges* — explicit (`OffloadOptions::after`, the builder's `.after`)
+//! plus edges **inferred from data flow**: the bound arguments' read/write
+//! windows ([`super::marshal::BoundArg::flow`]) form the launch's flow
+//! set, and any pair of in-flight launches whose windows overlap with at
+//! least one writer is ordered by an edge. That subsumes the classic
+//! hazard triad — a reader depends on the live writers of its buffer
+//! (RAW), and a writer depends on the live readers *and* writers before
+//! it (WAR + WAW); redundant edges to earlier writers are harmless
+//! because the writers are already transitively ordered among themselves.
+//! A launch *activates* (stages code, eager copies, pre-fetch warm-up)
+//! only when **all its edges are satisfied and every core it names is
+//! free**, at virtual time `max(submit, dependencies' finishes, cores'
+//! releases)`. Among ready launches activation order is deterministic
+//! (submission order; the work-conserving scan lets a later ready launch
+//! start ahead of an earlier one still blocked on a core or an edge).
+//! Edges always point at already-submitted launches, so the graph is
+//! acyclic by construction; a forward or self edge is rejected at submit
+//! time. A failed launch parks its own error and propagates
+//! [`Error::DependencyFailed`] to its transitive dependents — each parks
+//! its *own* error, and launches with no path to the failure are
+//! untouched. A dependent chain submitted with no intervening waits is
+//! bit-identical (results, stats, trace) to the same chain run blocking;
+//! sequential submit-then-wait is bit-identical to the classic blocking
+//! [`Engine::offload`] (which is literally submit + wait);
+//! `tests/async_launch.rs` and `tests/launch_graph.rs` enforce all of
+//! this. Launches that opt out of flow inference
+//! (`OffloadOptions::independent`) and still share *mutable* data see
+//! §3.3's weak memory model writ large: element accesses interleave
+//! deterministically in virtual-time order, but no cross-launch ordering
+//! is promised.
 //!
 //! **Scheduling discipline (exactness).** Every core has a *candidate
 //! time*: its local clock (runnable / produced an outcome), its pending
@@ -37,8 +53,9 @@
 //! breaking determinism (resources serialize FCFS in call order, like a
 //! real bus — see `sim/timeline.rs`): teardown copy-backs are issued at
 //! each core's own finish time, and a queued launch activates at the
-//! freed cores' release times, both of which may sit slightly behind the
-//! global cursor when other launches are still in flight.
+//! freed cores' release times (or its dependencies' finish times, for a
+//! launch gated by graph edges), both of which may sit slightly behind
+//! the global cursor when other launches are still in flight.
 //!
 //! **Numerics are real.** Element reads return the variable's actual
 //! contents from the [`MemRegistry`]; writes land in it; tensor builtins
@@ -77,7 +94,7 @@
 
 use std::cell::RefCell;
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashSet};
 use std::rc::Rc;
 
 use crate::channel::protocol::{Request, RequestKind, FRAME_HEADER_BYTES};
@@ -125,12 +142,32 @@ pub type OffloadOutcome = OffloadResult;
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct LaunchId(pub(crate) u64);
 
+impl LaunchId {
+    /// The raw engine-assigned id (for tooling/persistence).
+    pub fn raw(self) -> u64 {
+        self.0
+    }
+
+    /// Rebuild an id from its raw value. The engine validates ids at
+    /// submit time — a dependency edge naming a launch that was never
+    /// submitted (or has not been submitted *yet*) is rejected as a
+    /// cycle, so a fabricated id cannot corrupt the graph.
+    pub fn from_raw(raw: u64) -> LaunchId {
+        LaunchId(raw)
+    }
+}
+
 /// Lifecycle stage of a submitted launch ([`Engine::launch_status`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LaunchStatus {
-    /// Submitted but not yet staged onto its cores: queued behind
-    /// launches occupying one of them, or simply not driven yet (nothing
-    /// runs until a `wait`/`wait_all`/`poll` drives the timeline).
+    /// Waiting on dependency edges: at least one launch it depends on
+    /// (explicit `.after` or inferred data flow) has not completed. The
+    /// launch holds no cores while blocked.
+    Blocked,
+    /// Dependencies satisfied but not yet staged onto its cores: queued
+    /// behind launches occupying one of them, or simply not driven yet
+    /// (nothing runs until a `wait`/`wait_all`/`poll` drives the
+    /// timeline).
     Pending,
     /// Staged on its cores and progressing on the virtual timeline.
     Active,
@@ -138,9 +175,86 @@ pub enum LaunchStatus {
     Completed,
 }
 
+/// Snapshot of the launch table by lifecycle stage
+/// ([`Engine::queue_stats`]) — distinguishes launches blocked on
+/// dependency edges from launches queued on core contention, so a caller
+/// staring at an idle device can tell *why* nothing is running.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QueueStats {
+    /// Launches waiting on unsatisfied dependency edges.
+    pub blocked: usize,
+    /// Launches with satisfied edges queued on busy cores (or not yet
+    /// driven).
+    pub pending: usize,
+    /// Launches progressing on the virtual timeline.
+    pub active: usize,
+    /// Launches finished with the outcome parked for `wait`.
+    pub completed: usize,
+}
+
 /// Event-heap sentinel in the core-position slot: the event activates the
 /// launch (stages it onto its now-free cores) instead of stepping a core.
 const EV_ACTIVATE: usize = usize::MAX;
+
+/// One entry of a launch's data-flow set: the hull of every window the
+/// launch's bound arguments open onto one registry variable, and whether
+/// any of them may write there. One span per distinct variable — per-core
+/// shard windows of the same variable collapse into their covering range
+/// (conservative: interleaved disjoint windows may report a spurious
+/// overlap, which only ever *adds* a deterministic edge, never loses one).
+#[derive(Debug, Clone, Copy)]
+struct FlowSpan {
+    /// Registry variable id (`DataRef::id` — stable, never recycled).
+    id: u64,
+    /// First element touched (base-view relative).
+    start: usize,
+    /// One past the last element touched.
+    end: usize,
+    /// Whether any argument opens the variable mutably.
+    write: bool,
+}
+
+impl FlowSpan {
+    /// The span as a view, so every aliasing question funnels through the
+    /// one canonical predicate ([`DataRef::overlaps`]).
+    fn as_view(&self) -> DataRef {
+        DataRef { id: self.id, offset: self.start, len: self.end - self.start }
+    }
+
+    /// Whether two flow sets must be ordered: aliasing views with at
+    /// least one writer (RAW / WAR / WAW — read-read pairs commute and
+    /// stay unordered).
+    fn conflicts(&self, other: &FlowSpan) -> bool {
+        (self.write || other.write) && self.as_view().overlaps(&other.as_view())
+    }
+
+    /// Whether this span can alias the given view (any access kind).
+    fn touches(&self, dref: &DataRef) -> bool {
+        self.as_view().overlaps(dref)
+    }
+}
+
+/// Collapse a launch's bound arguments into its data-flow set.
+fn collect_flows(bound: &[Vec<BoundArg>]) -> Vec<FlowSpan> {
+    let mut flows: Vec<FlowSpan> = Vec::new();
+    for (dref, access) in bound.iter().flatten().filter_map(BoundArg::flow) {
+        let write = access == Access::Mutable;
+        match flows.iter_mut().find(|f| f.id == dref.id) {
+            Some(f) => {
+                f.start = f.start.min(dref.offset);
+                f.end = f.end.max(dref.offset + dref.len);
+                f.write |= write;
+            }
+            None => flows.push(FlowSpan {
+                id: dref.id,
+                start: dref.offset,
+                end: dref.offset + dref.len,
+                write,
+            }),
+        }
+    }
+    flows
+}
 
 /// One entry in the engine's launch table: everything needed to stage the
 /// launch when its cores free up, the per-core runs while active, and the
@@ -154,6 +268,16 @@ struct Launch {
     core_ids: Vec<usize>,
     submitted_at: Time,
     launched_at: Time,
+    /// Unsatisfied dependency edges (launch ids this one waits on).
+    /// Elements are erased as the dependencies complete; the launch is
+    /// eligible for core reservation only once this is empty.
+    deps: Vec<u64>,
+    /// Earliest activation time contributed by satisfied dependencies
+    /// (the max of their finish times).
+    dep_ready: Time,
+    /// The launch's data-flow set (see [`FlowSpan`]); later submissions
+    /// infer their edges against it.
+    flows: Vec<FlowSpan>,
     /// Cores reserved (owner recorded) and the activation event scheduled.
     reserved: bool,
     active: bool,
@@ -251,6 +375,10 @@ pub struct Engine {
     /// Per physical core: virtual time it was last released (its final
     /// `finished_at` including teardown copy-backs).
     core_free: Vec<Time>,
+    /// Ids of launches that failed, kept for the engine's lifetime so an
+    /// explicit `.after` edge on a failed-and-claimed launch still parks
+    /// [`Error::DependencyFailed`] (one u64 per failure — negligible).
+    failed: HashSet<u64>,
     next_launch: u64,
 }
 
@@ -299,6 +427,7 @@ impl Engine {
             events: BinaryHeap::new(),
             core_owner: vec![None; cores],
             core_free: vec![0; cores],
+            failed: HashSet::new(),
             next_launch: 0,
         }
     }
@@ -387,12 +516,21 @@ impl Engine {
     }
 
     /// Enqueue a launch without blocking and without advancing virtual
-    /// time. The launch activates — stages code pushes, eager copies and
-    /// pre-fetch warm-up — as soon as every core in `core_ids` is free:
-    /// immediately if they are free now, otherwise deterministically
-    /// queued (submission order) behind the launches occupying them.
-    /// Redeem the id with [`Engine::wait`]; progress happens inside
-    /// `wait`/`wait_all`/`poll`, never spontaneously.
+    /// time. Dependency edges are attached here: the explicit
+    /// [`OffloadOptions::after`] list plus edges inferred from data flow
+    /// (this launch's argument read/write windows against every in-flight
+    /// launch's — module docs). The launch activates — stages code
+    /// pushes, eager copies and pre-fetch warm-up — once **all its edges
+    /// are satisfied** and every core in `core_ids` is free, at
+    /// `max(submit, dependency finishes, core releases)`; until then it
+    /// is deterministically queued (submission order among ready
+    /// launches). A forward or self `.after` edge is rejected here (cycle
+    /// rejection — edges may only point at already-submitted launches, so
+    /// the graph is acyclic by construction); an `.after` edge on a
+    /// launch that already failed parks [`Error::DependencyFailed`] as
+    /// this launch's outcome. Redeem the id with [`Engine::wait`];
+    /// progress happens inside `wait`/`wait_all`/`poll`, never
+    /// spontaneously.
     pub fn submit(
         &mut self,
         kernel: &Kernel,
@@ -406,6 +544,63 @@ impl Engine {
         }
         self.tech.validate_cores(core_ids)?;
         let id = self.next_launch;
+
+        // ---- dependency edges ----
+        // Cycle rejection: an edge may only point at a launch submitted
+        // strictly earlier, so every edge points "backwards" and the
+        // graph cannot contain a cycle.
+        for d in &options.after {
+            if d.0 >= id {
+                return Err(Error::Coordinator(format!(
+                    "dependency cycle rejected: launch {id} cannot wait on launch {} — \
+                     edges may only name already-submitted launches",
+                    d.0
+                )));
+            }
+        }
+        // The flow set is recorded unconditionally — `flow_deps: false`
+        // only stops *this* launch from waiting on inferred edges; later
+        // submissions still infer edges against it, and
+        // [`Engine::quiesce`] still sees it (an opted-out launch is
+        // unordered, not invisible).
+        let flows = collect_flows(&bound);
+        let mut deps: Vec<u64> = Vec::new();
+        let mut dep_ready: Time = 0;
+        let mut dep_error: Option<Error> = None;
+        // An explicit edge on a launch that failed and was already
+        // claimed (retired from the table) still abandons this launch.
+        for d in &options.after {
+            if self.failed.contains(&d.0) {
+                dep_error = Some(Error::DependencyFailed { launch: id, dep: d.0 });
+            }
+        }
+        for l in &self.launches {
+            let explicit = options.after.iter().any(|d| d.0 == l.id);
+            let inferred = options.flow_deps
+                && flows.iter().any(|f| l.flows.iter().any(|g| f.conflicts(g)));
+            if !explicit && !inferred {
+                continue;
+            }
+            match &l.outcome {
+                // In flight: a real edge.
+                None => deps.push(l.id),
+                // Completed, unclaimed: satisfied — only its finish time
+                // matters (already ≤ the `now` watermark, kept for
+                // robustness).
+                Some(Ok(res)) => dep_ready = dep_ready.max(res.finished_at),
+                // Failed, unclaimed: an explicit edge abandons this
+                // launch. An *inferred* edge does not — that matches the
+                // blocking sequence, where the caller saw the error from
+                // their own wait and chose to keep submitting.
+                Some(Err(_)) if explicit => {
+                    dep_error = Some(Error::DependencyFailed { launch: id, dep: l.id });
+                }
+                Some(Err(_)) => {}
+            }
+        }
+        deps.sort_unstable();
+        deps.dedup();
+
         self.next_launch += 1;
         self.launches.push(Launch {
             id,
@@ -415,6 +610,9 @@ impl Engine {
             core_ids: core_ids.to_vec(),
             submitted_at: self.now,
             launched_at: self.now,
+            deps,
+            dep_ready,
+            flows,
             reserved: false,
             active: false,
             cores: Vec::new(),
@@ -422,6 +620,10 @@ impl Engine {
             spills: 0,
             outcome: None,
         });
+        if let Some(e) = dep_error {
+            let li = self.launches.len() - 1;
+            self.fail_launch(li, e);
+        }
         self.reserve_ready();
         Ok(LaunchId(id))
     }
@@ -483,55 +685,111 @@ impl Engine {
     }
 
     /// Lifecycle stage of a submitted launch; `None` once waited (or never
-    /// submitted).
+    /// submitted). Distinguishes [`LaunchStatus::Blocked`] (waiting on
+    /// dependency edges) from [`LaunchStatus::Pending`] (edges satisfied,
+    /// queued on core contention or not yet driven).
     pub fn launch_status(&self, id: LaunchId) -> Option<LaunchStatus> {
         self.launches.iter().find(|l| l.id == id.0).map(|l| {
             if l.outcome.is_some() {
                 LaunchStatus::Completed
             } else if l.active {
                 LaunchStatus::Active
+            } else if !l.deps.is_empty() {
+                LaunchStatus::Blocked
             } else {
                 LaunchStatus::Pending
             }
         })
     }
 
-    /// Launches submitted but not yet complete (pending + active).
+    /// Launches submitted but not yet complete (blocked + pending +
+    /// active). See [`Engine::queue_stats`] for the per-stage breakdown.
     pub fn in_flight(&self) -> usize {
         self.launches.iter().filter(|l| l.outcome.is_none()).count()
     }
 
-    /// Reserve cores for every launch whose core set is entirely free, in
-    /// submission order, and schedule its activation event at
-    /// `max(submit time, last release time of its cores)`.
+    /// Per-stage breakdown of the launch table — blocked on dependency
+    /// edges vs queued on core contention vs active vs
+    /// completed-unclaimed.
+    pub fn queue_stats(&self) -> QueueStats {
+        let mut qs = QueueStats::default();
+        for l in &self.launches {
+            if l.outcome.is_some() {
+                qs.completed += 1;
+            } else if l.active {
+                qs.active += 1;
+            } else if !l.deps.is_empty() {
+                qs.blocked += 1;
+            } else {
+                qs.pending += 1;
+            }
+        }
+        qs
+    }
+
+    /// Drive the timeline until no in-flight launch's data-flow set can
+    /// alias `dref` (their outcomes stay parked for their own waits).
+    /// Host-side code about to read or write a variable directly calls
+    /// this to order itself after the device work touching it — the shard
+    /// planner drains the base variable this way before gather staging.
+    pub fn quiesce(&mut self, dref: DataRef) -> Result<()> {
+        loop {
+            let busy = self.launches.iter().any(|l| {
+                l.outcome.is_none() && l.flows.iter().any(|f| f.touches(&dref))
+            });
+            if !busy {
+                return Ok(());
+            }
+            if !self.drive_one()? {
+                return Err(Error::Coordinator(
+                    "launch queue stalled: in-flight launches but no runnable events".into(),
+                ));
+            }
+        }
+    }
+
+    /// Reserve cores for every launch whose dependency edges are all
+    /// satisfied and whose core set is entirely free, in submission
+    /// order, and schedule its activation event at `max(submit time,
+    /// dependencies' finish times, last release time of its cores)`.
     ///
     /// The scan is *work-conserving*, not strict FIFO: launches that
     /// mutually contend for a core are reserved in submission order, but
-    /// a later launch whose cores are all free starts ahead of an earlier
-    /// launch still blocked on a different core (no head-of-line
-    /// blocking across disjoint core sets). Deterministic either way; a
-    /// pending launch can be deferred indefinitely only by a caller who
-    /// keeps submitting conflicting work before driving it to completion.
+    /// a later ready launch starts ahead of an earlier launch still
+    /// blocked on a different core or on a dependency edge (no
+    /// head-of-line blocking). Deterministic either way; a pending launch
+    /// can be deferred indefinitely only by a caller who keeps submitting
+    /// conflicting work before driving it to completion.
     fn reserve_ready(&mut self) {
         for li in 0..self.launches.len() {
-            if self.launches[li].reserved {
+            let l = &self.launches[li];
+            if l.reserved || l.outcome.is_some() || !l.deps.is_empty() {
                 continue;
             }
-            if self.launches[li]
-                .core_ids
-                .iter()
-                .any(|&c| self.core_owner[c].is_some())
-            {
+            if l.core_ids.iter().any(|&c| self.core_owner[c].is_some()) {
                 continue;
             }
-            let id = self.launches[li].id;
-            let mut at = self.launches[li].submitted_at;
+            let id = l.id;
+            let mut at = l.submitted_at.max(l.dep_ready);
             for &c in &self.launches[li].core_ids {
                 self.core_owner[c] = Some(id);
                 at = at.max(self.core_free[c]);
             }
             self.launches[li].reserved = true;
             self.events.push(Reverse((at, id, EV_ACTIVATE)));
+        }
+    }
+
+    /// A dependency completed at `finish`: erase its edge from every
+    /// launch still waiting on it and raise their earliest activation
+    /// time to its finish.
+    fn resolve_deps(&mut self, id: u64, finish: Time) {
+        for l in &mut self.launches {
+            let before = l.deps.len();
+            l.deps.retain(|&d| d != id);
+            if l.deps.len() != before {
+                l.dep_ready = l.dep_ready.max(finish);
+            }
         }
     }
 
@@ -589,20 +847,57 @@ impl Engine {
         Ok(true)
     }
 
-    /// Park an error as launch `li`'s outcome and release its cores so
-    /// the rest of the queue keeps running. The error surfaces from
-    /// *this* launch's `wait` — never from another launch's. Remaining
-    /// heap events for the launch become stale no-ops (its core slots are
-    /// dropped).
+    /// Park an error as launch `li`'s outcome, release its cores so the
+    /// rest of the queue keeps running, and abandon its transitive
+    /// dependents: every launch with an edge (explicit or inferred) on a
+    /// failed launch parks its *own* [`Error::DependencyFailed`] —
+    /// claimed by its own `wait`, never surfacing from another launch's —
+    /// while launches with no path to the failure are untouched.
+    /// Remaining heap events for the launch become stale no-ops (its core
+    /// slots are dropped; dependents were blocked, so they hold neither
+    /// cores nor events).
     fn fail_launch(&mut self, li: usize, e: Error) {
+        // Release each core no earlier than the failed launch's own
+        // progress on it (its next candidate time covers in-flight
+        // transfer arrivals), so a queued successor cannot activate at a
+        // virtual time before effects the failed launch already stamped
+        // into the registry and trace.
+        let releases: Vec<(usize, Time)> = self.launches[li]
+            .cores
+            .iter()
+            .flatten()
+            .map(|c| (c.id, Self::candidate(c).unwrap_or(0).max(c.clock).max(c.finished_at)))
+            .collect();
+        for (cid, t) in releases {
+            self.core_free[cid] = self.core_free[cid].max(t);
+        }
         let l = &mut self.launches[li];
         l.cores.clear();
         l.outcome = Some(Err(e));
         let id = l.id;
+        self.failed.insert(id);
         let core_ids = l.core_ids.clone();
         for &c in &core_ids {
             if self.core_owner[c] == Some(id) {
                 self.core_owner[c] = None;
+            }
+        }
+        let mut worklist = vec![id];
+        while let Some(fid) = worklist.pop() {
+            let dependents: Vec<usize> = self
+                .launches
+                .iter()
+                .enumerate()
+                .filter(|(_, l)| l.outcome.is_none() && l.deps.contains(&fid))
+                .map(|(i, _)| i)
+                .collect();
+            for di in dependents {
+                let dl = &mut self.launches[di];
+                let did = dl.id;
+                dl.cores.clear();
+                dl.outcome = Some(Err(Error::DependencyFailed { launch: did, dep: fid }));
+                self.failed.insert(did);
+                worklist.push(did);
             }
         }
         self.reserve_ready();
@@ -845,12 +1140,16 @@ impl Engine {
         self.now = self.now.max(finish);
         self.power.advance(self.now, utilization.min(1.0));
         self.stats.offloads += 1;
+        let id = self.launches[li].id;
         self.launches[li].outcome = Some(Ok(OffloadResult {
             reports,
             launched_at: launch,
             finished_at: finish,
             spills,
         }));
+        // Satisfy dependency edges before the reservation scan so
+        // newly-unblocked launches activate in the same pass.
+        self.resolve_deps(id, finish);
         self.reserve_ready();
         Ok(())
     }

@@ -139,6 +139,24 @@ pub enum BoundArg {
     },
 }
 
+impl BoundArg {
+    /// The argument's contribution to the launch's *data-flow set*: the
+    /// registry window it touches and whether it may write there. Scalars
+    /// and by-value arrays travel in the launch message and touch no
+    /// registry storage. Eager copies read their window at activation (and
+    /// mutable ones write it back at completion), so they flow exactly
+    /// like reference arguments. The engine infers launch-graph dependency
+    /// edges from these sets (`coordinator/engine.rs`).
+    pub fn flow(&self) -> Option<(DataRef, Access)> {
+        match self {
+            BoundArg::Float(_) | BoundArg::Int(_) | BoundArg::Values(_) => None,
+            BoundArg::EagerCopy { dref, access } | BoundArg::External { dref, access, .. } => {
+                Some((*dref, *access))
+            }
+        }
+    }
+}
+
 /// Resolve call-site arg specs into per-core bound arguments.
 ///
 /// `cores` lists the participating physical core ids; sharded refs are

@@ -6,10 +6,12 @@
 //!   once and invoked across all (or a subset of) micro-cores through the
 //!   asynchronous launch surface: `session.launch(&k)` builds the
 //!   invocation, `.submit()` returns an [`OffloadHandle`], and
-//!   `wait`/`wait_all`/`poll` drive completion. Sequential submit-then-
-//!   wait reproduces the paper's blocking collective bit-for-bit, while
-//!   launches on disjoint core sets pipeline on the shared virtual
-//!   timeline ([`engine`]'s launch queue).
+//!   `wait`/`wait_all`/`poll` drive completion. Launches form a
+//!   *launch graph*: dependency edges are inferred from each launch's
+//!   argument read/write sets (plus explicit `.after` edges), so a
+//!   dependent chain submitted without intervening waits executes
+//!   bit-identically to the blocking sequence while independent launches
+//!   pipeline on the shared virtual timeline ([`engine`]'s launch graph).
 //! * **Pass by reference** ([`marshal`]) — instead of eagerly copying
 //!   argument data to the device, the coordinator sends opaque
 //!   [`crate::memory::DataRef`]s; element accesses on the cores become
@@ -36,7 +38,7 @@ pub mod service;
 pub mod session;
 pub mod shard;
 
-pub use engine::{Engine, EngineStats, LaunchId, LaunchStatus, OffloadOutcome};
+pub use engine::{Engine, EngineStats, LaunchId, LaunchStatus, OffloadOutcome, QueueStats};
 pub use marshal::{ArgSpec, BoundArg, PrefetchChoice};
 pub use offload::{Kernel, KernelRegistry, OffloadOptions, OffloadResult};
 pub use prefetch::{PrefetchSpec, PrefetchState};

@@ -11,6 +11,7 @@ use crate::error::{Error, Result};
 use crate::sim::Time;
 use crate::vm::{self, CostCounters, Program, Value};
 
+use super::engine::LaunchId;
 use super::prefetch::PrefetchSpec;
 use super::TransferMode;
 
@@ -105,6 +106,19 @@ pub struct OffloadOptions {
     pub default_prefetch: Option<PrefetchSpec>,
     /// Dispatch budget per core (runaway guard).
     pub fuel: u64,
+    /// Explicit launch-graph dependency edges: this launch activates only
+    /// after every named launch has completed (`LaunchBuilder::after`).
+    /// Edges may only point at already-submitted launches — a forward or
+    /// self edge is rejected at submit time (cycle rejection).
+    pub after: Vec<LaunchId>,
+    /// Infer data-flow dependency edges from the launch's argument
+    /// read/write sets (on by default). Disabling stops *this* launch
+    /// waiting on inferred edges — it is unordered, not invisible: later
+    /// launches still infer edges against its flow set, and `quiesce`
+    /// still drains it. Overlap with earlier in-flight mutable data then
+    /// gets §3.3's weak cross-launch memory model
+    /// (`LaunchBuilder::independent`).
+    pub flow_deps: bool,
 }
 
 impl Default for OffloadOptions {
@@ -114,6 +128,8 @@ impl Default for OffloadOptions {
             cores: None,
             default_prefetch: None,
             fuel: 2_000_000_000,
+            after: Vec::new(),
+            flow_deps: true,
         }
     }
 }
@@ -141,6 +157,19 @@ impl OffloadOptions {
     /// Set the per-core dispatch budget (runaway guard).
     pub fn fuel(mut self, fuel: u64) -> Self {
         self.fuel = fuel;
+        self
+    }
+
+    /// Add an explicit dependency edge: don't activate before `dep`
+    /// completes.
+    pub fn after(mut self, dep: LaunchId) -> Self {
+        self.after.push(dep);
+        self
+    }
+
+    /// Opt out of inferred data-flow dependency edges for this launch.
+    pub fn independent(mut self) -> Self {
+        self.flow_deps = false;
         self
     }
 }

@@ -19,29 +19,34 @@
 //! decoding, transfer costs, host staging) following from the kind, as
 //! §3.2 prescribes.
 //!
-//! ## Asynchronous launches
+//! ## Asynchronous launches and the launch graph
 //!
 //! Kernel invocation is an asynchronous *launch*:
 //!
 //! ```ignore
 //! let h = sess.launch(&kernel).args(&[ArgSpec::sharded(a)]).submit()?;
-//! // ... submit more launches; disjoint core sets pipeline ...
+//! // ... submit more launches; the engine orders them by data flow ...
 //! let result = h.wait(&mut sess)?;          // or sess.wait_all()?
 //! ```
 //!
-//! Submit-then-wait reproduces the classic blocking collective
-//! bit-for-bit; several submitted launches share the virtual timeline
-//! under the engine's per-core occupancy model (see
-//! [`super::engine`]'s module docs). `handle.wait(&mut sess)` takes the
-//! session explicitly — the handle itself is a plain `Copy` ticket, so
-//! any number can be in flight without aliasing the session borrow.
+//! Submitted launches form a *launch graph*: the builder records each
+//! argument's read/write window, and the engine adds a dependency edge
+//! wherever two in-flight launches touch overlapping data with at least
+//! one writer (plus any explicit [`LaunchBuilder::after`] edges). A
+//! dependent chain submitted with **no intervening waits** therefore
+//! executes bit-identically to the blocking sequence, while launches
+//! with no edges between them pipeline on the shared virtual timeline
+//! (see [`super::engine`]'s module docs). Submit-then-wait reproduces
+//! the classic blocking collective bit-for-bit. `handle.wait(&mut sess)`
+//! takes the session explicitly — the handle itself is a plain `Copy`
+//! ticket, so any number can be in flight without aliasing the session
+//! borrow. [`Session::queue_stats`] tells launches *blocked on edges*
+//! apart from launches queued on core contention.
 //!
-//! ## Deprecation window
-//!
-//! The pre-0.3 surface — the `alloc_*` method-per-(kind × initializer)
-//! grid and the blocking [`Session::offload`] / `offload_named` — remains
-//! as thin `#[deprecated]` shims over [`Session::alloc`] and the launch
-//! builder **for one release** and will be removed in 0.4.
+//! The pre-0.3 surface (the `alloc_*` method grid and the blocking
+//! `offload`/`offload_named`) was removed in 0.4 after its one-release
+//! deprecation window; use [`Session::alloc`] + [`MemSpec`] and the
+//! launch builder.
 
 use crate::device::Technology;
 use crate::error::{Error, Result};
@@ -259,88 +264,9 @@ impl Session {
         }
     }
 
-    // ---- deprecated allocation shims (0.3 window, removed in 0.4) -------
-
-    /// Allocate in host memory (top of the hierarchy; on the Epiphany the
-    /// cores cannot address this — every access is host-serviced).
-    #[deprecated(since = "0.3.0", note = "use session.alloc(MemSpec::host(name).from(data))")]
-    pub fn alloc_host_f32(&mut self, name: &str, data: &[f32]) -> Result<DataRef> {
-        self.alloc(MemSpec::host(name).from(data))
-    }
-
-    /// Allocate zeroed host memory.
-    #[deprecated(since = "0.3.0", note = "use session.alloc(MemSpec::host(name).zeroed(len))")]
-    pub fn alloc_host_zeroed(&mut self, name: &str, len: usize) -> Result<DataRef> {
-        self.alloc(MemSpec::host(name).zeroed(len))
-    }
-
-    /// Allocate in the shared window (device-addressable; bounded by the
-    /// technology's window size — the Epiphany's 32 MB).
-    #[deprecated(since = "0.3.0", note = "use session.alloc(MemSpec::shared(name).from(data))")]
-    pub fn alloc_shared_f32(&mut self, name: &str, data: &[f32]) -> Result<DataRef> {
-        self.alloc(MemSpec::shared(name).from(data))
-    }
-
-    /// Allocate zeroed shared-window memory.
-    #[deprecated(since = "0.3.0", note = "use session.alloc(MemSpec::shared(name).zeroed(len))")]
-    pub fn alloc_shared_zeroed(&mut self, name: &str, len: usize) -> Result<DataRef> {
-        self.alloc(MemSpec::shared(name).zeroed(len))
-    }
-
-    /// Allocate one replica per core in local store (`Microcore` kind;
-    /// §3.2's device-resident data). Checked against the per-core budget.
-    #[deprecated(
-        since = "0.3.0",
-        note = "use session.alloc(MemSpec::microcore(name).zeroed(len))"
-    )]
-    pub fn alloc_microcore_f32(&mut self, name: &str, len: usize) -> Result<DataRef> {
-        self.alloc(MemSpec::microcore(name).zeroed(len))
-    }
-
-    /// Allocate a *procedural* (generated-on-read) variable in the shared
-    /// level — used where the paper's dense full-size tensors cannot
-    /// physically exist in board memory (DESIGN.md substitution table).
-    #[deprecated(
-        since = "0.3.0",
-        note = "use session.alloc(MemSpec::procedural(name, seed, scale).zeroed(len))"
-    )]
-    pub fn alloc_procedural_f32(
-        &mut self,
-        name: &str,
-        seed: u64,
-        len: usize,
-        scale: f32,
-    ) -> Result<DataRef> {
-        self.alloc(MemSpec::procedural(name, seed, scale).zeroed(len))
-    }
-
-    /// Allocate a write-only sink variable (gradient stream destination in
-    /// the full-size regime).
-    #[deprecated(since = "0.3.0", note = "use session.alloc(MemSpec::sink(name).zeroed(len))")]
-    pub fn alloc_sink_f32(&mut self, name: &str, len: usize) -> Result<DataRef> {
-        self.alloc(MemSpec::sink(name).zeroed(len))
-    }
-
-    /// Allocate host memory fronted by a shared-window segment cache
-    /// ([`SharedCacheKind`]): the first device pass streams across the
-    /// off-chip boundary; repeated passes are serviced at shared-window
-    /// cost. The cache budget must fit the technology's window.
-    #[deprecated(
-        since = "0.3.0",
-        note = "use session.alloc(MemSpec::cached(name, spec).from(data))"
-    )]
-    pub fn alloc_host_cached_f32(
-        &mut self,
-        name: &str,
-        data: &[f32],
-        spec: CacheSpec,
-    ) -> Result<DataRef> {
-        self.alloc(MemSpec::cached(name, spec).from(data))
-    }
-
     /// Front an arbitrary kind with a shared-window segment cache (the
-    /// general form of [`Session::alloc_host_cached_f32`] — e.g. a
-    /// [`FileKind`] archive too large for board memory).
+    /// general form of `MemSpec::cached` — e.g. a [`FileKind`] archive
+    /// too large for board memory).
     pub fn alloc_cached_kind(
         &mut self,
         name: &str,
@@ -372,20 +298,6 @@ impl Session {
     /// (The shard planner uses this to drop gather staging after a run.)
     pub fn release(&mut self, dref: DataRef) -> Result<()> {
         self.engine.registry_mut().release(dref)
-    }
-
-    /// Allocate a file-backed variable (the extensibility kind of §4).
-    #[deprecated(
-        since = "0.3.0",
-        note = "use session.alloc(MemSpec::file(name, path).zeroed(len))"
-    )]
-    pub fn alloc_file_f32(
-        &mut self,
-        name: &str,
-        path: impl Into<std::path::PathBuf>,
-        len: usize,
-    ) -> Result<DataRef> {
-        self.alloc(MemSpec::file(name, path).zeroed(len))
     }
 
     /// Read a variable's (view's) contents from the host side.
@@ -437,8 +349,11 @@ impl Session {
     /// Begin building an asynchronous launch of `kernel`. Configure with
     /// [`LaunchBuilder::arg`]/[`args`](LaunchBuilder::args),
     /// [`cores`](LaunchBuilder::cores), [`mode`](LaunchBuilder::mode),
-    /// [`prefetch`](LaunchBuilder::prefetch); then
-    /// [`submit`](LaunchBuilder::submit) for an [`OffloadHandle`].
+    /// [`prefetch`](LaunchBuilder::prefetch),
+    /// [`after`](LaunchBuilder::after); then
+    /// [`submit`](LaunchBuilder::submit) for an [`OffloadHandle`]. The
+    /// builder's argument list doubles as the launch's read/write set —
+    /// the engine infers dependency edges from it (module docs).
     pub fn launch(&mut self, kernel: &Kernel) -> LaunchBuilder<'_> {
         LaunchBuilder {
             kernel: kernel.clone(),
@@ -475,46 +390,34 @@ impl Session {
     }
 
     /// Drive the timeline until some launch is complete and unclaimed;
-    /// returns its handle (`None` when nothing is in flight).
+    /// returns its handle (`None` when nothing is in flight — if
+    /// [`Session::in_flight`] is nonetheless positive, every remaining
+    /// launch already has its outcome parked; claim them with their
+    /// handles' `wait`).
     pub fn poll(&mut self) -> Result<Option<OffloadHandle>> {
         Ok(self.engine.poll()?.map(|id| OffloadHandle { id }))
     }
 
-    /// Launches submitted but not yet complete.
+    /// Launches submitted but not yet complete (blocked + pending +
+    /// active); see [`Session::queue_stats`] for the breakdown.
     pub fn in_flight(&self) -> usize {
         self.engine.in_flight()
     }
 
-    // ---- deprecated blocking shims (0.3 window, removed in 0.4) ---------
-
-    /// Offload a kernel (blocking, collective across the selected cores).
-    #[deprecated(
-        since = "0.3.0",
-        note = "use session.launch(&kernel).args(args).options(options).submit()?.wait(&mut session)"
-    )]
-    pub fn offload(
-        &mut self,
-        kernel: &Kernel,
-        args: &[ArgSpec],
-        options: OffloadOptions,
-    ) -> Result<OffloadResult> {
-        let handle = self.launch(kernel).args(args).options(options).submit()?;
-        handle.wait(self)
+    /// Per-stage breakdown of the launch table: blocked on dependency
+    /// edges vs queued on core contention vs active vs
+    /// completed-unclaimed — so a caller can tell *why* nothing is
+    /// running.
+    pub fn queue_stats(&self) -> crate::coordinator::QueueStats {
+        self.engine.queue_stats()
     }
 
-    /// Convenience: offload by kernel name (blocking).
-    #[deprecated(
-        since = "0.3.0",
-        note = "use session.launch_named(name)?.args(args).options(options).submit()?.wait(&mut session)"
-    )]
-    pub fn offload_named(
-        &mut self,
-        kernel: &str,
-        args: &[ArgSpec],
-        options: OffloadOptions,
-    ) -> Result<OffloadResult> {
-        let handle = self.launch_named(kernel)?.args(args).options(options).submit()?;
-        handle.wait(self)
+    /// Drive the timeline until no in-flight launch can touch `dref`
+    /// (host-side code about to read or write the variable directly uses
+    /// this to order itself after device work; the shard planner drains
+    /// the base variable this way before gather staging).
+    pub fn quiesce(&mut self, dref: DataRef) -> Result<()> {
+        self.engine.quiesce(dref)
     }
 }
 
@@ -570,9 +473,39 @@ impl LaunchBuilder<'_> {
         self
     }
 
+    /// Add an explicit dependency edge: this launch will not activate
+    /// before `dep`'s launch completes, even if its cores are free and
+    /// its data flow is disjoint. Edges may only point at
+    /// already-submitted launches (forward/self edges are rejected at
+    /// submit as cycles); an edge on a launch that failed parks
+    /// [`crate::error::Error::DependencyFailed`] as this launch's
+    /// outcome.
+    pub fn after(self, dep: OffloadHandle) -> Self {
+        self.after_id(dep.id())
+    }
+
+    /// As [`LaunchBuilder::after`], from a raw [`LaunchId`].
+    pub fn after_id(mut self, dep: LaunchId) -> Self {
+        self.options.after.push(dep);
+        self
+    }
+
+    /// Opt out of inferred data-flow edges for this launch: it orders
+    /// only behind its explicit `.after` edges and core contention.
+    /// Unordered, not invisible — later launches still infer edges
+    /// against its read/write set and [`Session::quiesce`] still drains
+    /// it. *Mutable* data shared with earlier in-flight launches then
+    /// gets §3.3's weak cross-launch memory model — deterministic
+    /// interleaving, no ordering promise.
+    pub fn independent(mut self) -> Self {
+        self.options.flow_deps = false;
+        self
+    }
+
     /// Replace the whole options block (migration aid for call sites that
     /// already hold an [`OffloadOptions`]); combine with the individual
-    /// setters by calling this first.
+    /// setters — including `.after`/`.independent` — by calling this
+    /// first (it overwrites previously accumulated edges).
     pub fn options(mut self, options: OffloadOptions) -> Self {
         self.options = options;
         self
@@ -619,7 +552,8 @@ impl OffloadHandle {
         session.engine.wait(self.id)
     }
 
-    /// Lifecycle stage: pending (queued on busy cores), active, or
+    /// Lifecycle stage: blocked (waiting on dependency edges), pending
+    /// (edges satisfied, queued on busy cores), active, or
     /// completed-unclaimed. `None` once waited.
     pub fn status(&self, session: &Session) -> Option<LaunchStatus> {
         session.engine.launch_status(self.id)
@@ -951,29 +885,94 @@ def bump(state):
         assert!(t0 < t1 && t1 < t2);
     }
 
-    /// The one-release compatibility window: the old grid + blocking
-    /// offload must behave identically to the new entry points.
+    /// 0.4 removed the pre-0.3 shims; the unified surface carries every
+    /// former spelling (this pins the grid's behaviour post-removal).
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_still_route_through_the_new_surface() {
+    fn unified_surface_covers_the_removed_grid() {
         let mut s = session();
-        let ra = s.alloc_host_f32("a", &[1.0; 32]).unwrap();
-        let rb = s.alloc_host_f32("b", &[2.0; 32]).unwrap();
+        let ra = s.alloc(MemSpec::host("a").from(&[1.0; 32])).unwrap();
+        let rb = s.alloc(MemSpec::host("b").from(&[2.0; 32])).unwrap();
         let k = s.compile_kernel("sum", SUM_SRC).unwrap();
         let res = s
-            .offload(
-                &k,
-                &[ArgSpec::sharded(ra), ArgSpec::sharded(rb)],
-                OffloadOptions::default().transfer(TransferMode::OnDemand),
-            )
+            .launch(&k)
+            .args(&[ArgSpec::sharded(ra), ArgSpec::sharded(rb)])
+            .mode(TransferMode::OnDemand)
+            .submit()
+            .unwrap()
+            .wait(&mut s)
             .unwrap();
         assert_eq!(value_as_vec(&res.reports[0].value).unwrap(), vec![3.0, 3.0]);
-        assert!(s.alloc_shared_zeroed("sz", 16).is_ok());
-        assert!(s.alloc_microcore_f32("mc", 8).is_ok());
-        assert!(s.alloc_sink_f32("sk", 8).is_ok());
-        assert!(s.alloc_procedural_f32("pr", 1, 8, 0.5).is_ok());
-        assert!(s.offload_named("sum", &[ArgSpec::sharded(ra), ArgSpec::sharded(rb)],
-            OffloadOptions::default().transfer(TransferMode::OnDemand)).is_ok());
+        assert!(s.alloc(MemSpec::shared("sz").zeroed(16)).is_ok());
+        assert!(s.alloc(MemSpec::microcore("mc").zeroed(8)).is_ok());
+        assert!(s.alloc(MemSpec::sink("sk").zeroed(8)).is_ok());
+        assert!(s.alloc(MemSpec::procedural("pr", 1, 0.5).zeroed(8)).is_ok());
+        assert!(s.launch_named("sum").is_ok());
+    }
+
+    #[test]
+    fn explicit_after_edge_blocks_until_dependency_finishes() {
+        let mut s = session();
+        let ra = s.alloc(MemSpec::host("a").from(&[1.0; 32])).unwrap();
+        let rb = s.alloc(MemSpec::host("b").from(&[2.0; 32])).unwrap();
+        let k = s.compile_kernel("sum", SUM_SRC).unwrap();
+        // Disjoint cores AND disjoint data: only the explicit edge orders
+        // them.
+        let h1 = s
+            .launch(&k)
+            .args(&[ArgSpec::sharded(ra), ArgSpec::sharded(ra)])
+            .mode(TransferMode::OnDemand)
+            .cores((0..4).collect())
+            .submit()
+            .unwrap();
+        let h2 = s
+            .launch(&k)
+            .args(&[ArgSpec::sharded(rb), ArgSpec::sharded(rb)])
+            .mode(TransferMode::OnDemand)
+            .cores((4..8).collect())
+            .after(h1)
+            .submit()
+            .unwrap();
+        assert_eq!(h2.status(&s), Some(LaunchStatus::Blocked), "edge unsatisfied");
+        let qs = s.queue_stats();
+        assert_eq!((qs.blocked, qs.pending), (1, 1));
+        let r1 = h1.wait(&mut s).unwrap();
+        let r2 = h2.wait(&mut s).unwrap();
+        assert_eq!(r2.launched_at, r1.finished_at, "activates at the dependency's finish");
+    }
+
+    #[test]
+    fn inferred_flow_edge_orders_writer_after_reader() {
+        let mut s = session();
+        let ra = s.alloc(MemSpec::host("a").from(&[5.0; 32])).unwrap();
+        let reader = s.compile_kernel("sum", SUM_SRC).unwrap();
+        let writer = s
+            .compile_kernel(
+                "fill",
+                "def fill(a):\n    i = 0\n    while i < len(a):\n        a[i] = 9.0\n        i += 1\n    return 0\n",
+            )
+            .unwrap();
+        let hr = s
+            .launch(&reader)
+            .args(&[ArgSpec::sharded(ra), ArgSpec::sharded(ra)])
+            .mode(TransferMode::OnDemand)
+            .cores((0..4).collect())
+            .submit()
+            .unwrap();
+        let hw = s
+            .launch(&writer)
+            .arg(ArgSpec::sharded_mut(ra))
+            .mode(TransferMode::OnDemand)
+            .cores((4..8).collect())
+            .submit()
+            .unwrap();
+        assert_eq!(hw.status(&s), Some(LaunchStatus::Blocked), "WAR edge inferred");
+        let rr = hr.wait(&mut s).unwrap();
+        // The reader saw pre-write contents: write-after-read ordering.
+        // (32 elements over 4 cores = 8 per shard; 5.0 + 5.0 each.)
+        assert_eq!(value_as_vec(&rr.reports[0].value).unwrap(), vec![10.0; 8]);
+        let rw = hw.wait(&mut s).unwrap();
+        assert_eq!(rw.launched_at, rr.finished_at);
+        assert_eq!(s.read(ra).unwrap(), vec![9.0; 32]);
     }
 
     #[test]

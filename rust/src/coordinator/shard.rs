@@ -26,6 +26,13 @@
 //! multi-device) extend this planner rather than re-deriving per-core
 //! windows at call sites.
 //!
+//! In the launch graph a sharded offload participates as **one dependency
+//! group**: [`ShardPlan::execute`] first quiesces the base variable
+//! (draining any in-flight launch whose data flow touches it — the edge
+//! its host-side gather staging needs), then submits a single launch
+//! whose per-core windows form one flow set, so later submissions order
+//! against the whole sharded run, not its fragments.
+//!
 //! The planner composes with the rest of the stack: shards work in any
 //! [`super::TransferMode`] and pre-fetch annotations apply per shard. A
 //! base variable fronted by a [`crate::memory::SharedCacheKind`] serves
@@ -185,6 +192,18 @@ impl ShardPlan {
         }
         let base_name =
             session.engine().registry().name(self.base).unwrap_or("shard").to_string();
+
+        // One dependency group: drain every in-flight launch whose data
+        // flow can touch the base variable before doing anything
+        // host-side. Contiguous shards bind base sub-views, so the
+        // launch's own flow set covers the base and later submissions
+        // order against it through the graph; gathered (block-cyclic)
+        // shards additionally read the base *on the host* right here,
+        // which the graph cannot defer — the quiesce supplies exactly the
+        // read-after-write edge the staging copy needs. The launch itself
+        // is waited below, so the scatter-merge write-back is ordered
+        // too.
+        session.quiesce(self.base)?;
 
         // Bind: zero-copy sub-views where contiguous, gather staging
         // otherwise.

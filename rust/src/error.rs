@@ -25,6 +25,16 @@ pub enum Error {
     Channel(String),
     /// Offload coordination errors (unknown kernel, bad argument count, …).
     Coordinator(String),
+    /// A launch was abandoned because a launch it depends on (an explicit
+    /// `.after` edge or an inferred data-flow edge) failed. Propagates
+    /// transitively through the launch graph; each abandoned launch parks
+    /// its *own* copy, claimed by its own `wait`.
+    DependencyFailed {
+        /// The abandoned launch.
+        launch: u64,
+        /// The direct dependency that failed (itself possibly abandoned).
+        dep: u64,
+    },
     /// PJRT runtime errors (artifact missing, shape mismatch, XLA failure).
     Runtime(String),
     /// Configuration / manifest parse errors.
@@ -48,6 +58,10 @@ impl fmt::Display for Error {
             Error::Memory(m) => write!(f, "memory error: {m}"),
             Error::Channel(m) => write!(f, "channel error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::DependencyFailed { launch, dep } => write!(
+                f,
+                "launch {launch} abandoned: dependency launch {dep} failed"
+            ),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),

@@ -28,13 +28,15 @@
 //!   bytecode → VM) whose symbol table carries the paper's `external` flag;
 //!   external reads/writes become blocking or pre-fetched channel traffic.
 //! * [`coordinator`] — the host-side offload engine: kernel registry,
-//!   the asynchronous launch queue (`launch`/`submit`/`wait`/`poll` with
-//!   per-core occupancy, so disjoint-core launches pipeline on the
-//!   shared virtual timeline), argument marshalling (eager copy vs
-//!   by-reference), the pre-fetch engine, request servicing,
-//!   device-resident data management, and the sharded offload planner
-//!   ([`coordinator::ShardPlan`]: block / block-cyclic decomposition with
-//!   write-back merge).
+//!   the asynchronous launch graph (`launch`/`submit`/`wait`/`poll`;
+//!   dependency edges inferred from each launch's argument read/write
+//!   sets plus explicit `.after` edges, with per-core occupancy — so a
+//!   dependent chain needs no waits while non-conflicting launches
+//!   pipeline on the shared virtual timeline), argument marshalling
+//!   (eager copy vs by-reference), the pre-fetch engine, request
+//!   servicing, device-resident data management, and the sharded offload
+//!   planner ([`coordinator::ShardPlan`]: block / block-cyclic
+//!   decomposition with write-back merge).
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`) that carry the numeric hot path.
 //! * [`workloads`] — the paper's benchmarks: the lung-scan neural-network
@@ -61,7 +63,8 @@
 //!     )
 //!     .unwrap();
 //! // Launches are asynchronous: submit returns a handle, wait drives the
-//! // virtual timeline. Launches on disjoint core sets pipeline.
+//! // virtual timeline. Dependent launches are ordered by inferred
+//! // data-flow edges (no waits needed); non-conflicting ones pipeline.
 //! let handle = sess
 //!     .launch(&kernel)
 //!     .args(&[ArgSpec::sharded(a), ArgSpec::sharded(b)])

@@ -9,6 +9,11 @@
 //! further extensibility").
 
 /// A reference to (a window of) a variable registered with the host.
+///
+/// The `id` is the variable's *stable identity*: the registry hands out
+/// monotonically increasing ids and never recycles them, so two views
+/// alias the same storage iff their ids match — the property the launch
+/// graph's data-flow inference rests on ([`DataRef::overlaps`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct DataRef {
     /// Unique id of the base variable (registry key).
@@ -35,6 +40,16 @@ impl DataRef {
             self.len
         );
         DataRef { id: self.id, offset: self.offset + offset, len }
+    }
+
+    /// Whether two views can alias storage: same base variable and
+    /// intersecting element ranges. Views of different variables never
+    /// alias (ids are unique for the registry's lifetime), so this is the
+    /// exact test the launch graph uses to infer data-flow dependencies.
+    pub fn overlaps(&self, other: &DataRef) -> bool {
+        self.id == other.id
+            && self.offset < other.offset + other.len
+            && other.offset < self.offset + self.len
     }
 
     /// Split the view into `n` near-equal contiguous shards (per-core
@@ -108,5 +123,15 @@ mod tests {
     #[should_panic(expected = "out of view")]
     fn oob_slice_panics() {
         r(10).slice(5, 10);
+    }
+
+    #[test]
+    fn overlaps_requires_same_id_and_range_intersection() {
+        let base = r(100);
+        assert!(base.slice(0, 50).overlaps(&base.slice(49, 10)), "share element 49");
+        assert!(!base.slice(0, 50).overlaps(&base.slice(50, 10)), "touching, disjoint");
+        assert!(base.overlaps(&base.slice(99, 1)), "full view covers every sub-view");
+        let other = DataRef { id: 8, offset: 0, len: 100 };
+        assert!(!base.overlaps(&other), "different variables never alias");
     }
 }

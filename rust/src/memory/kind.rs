@@ -12,6 +12,14 @@
 //! New levels (remote memory, IO, …) are added by implementing [`MemKind`];
 //! [`FileKind`] demonstrates the extensibility claim with a kind whose
 //! "memory" is a file on disk.
+//!
+//! A variable's *identity* is its registry id, not its kind or name: a
+//! kind may relocate or regenerate contents internally (cache refills,
+//! procedural reads), but all views minted from one registration alias
+//! one logical buffer. That stable identity is what the launch graph's
+//! data-flow inference keys on — two launches conflict iff their argument
+//! views share an id with overlapping ranges and a writer
+//! (`coordinator/engine.rs`).
 
 use std::cell::RefCell;
 use std::fs;

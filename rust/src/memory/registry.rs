@@ -10,6 +10,12 @@
 //! servicing of device requests flows through [`MemRegistry::read`] /
 //! [`MemRegistry::write`], which translate view-relative offsets into base
 //! offsets and dispatch to the owning kind.
+//!
+//! Ids are **stable identity**: assigned monotonically, never recycled
+//! (even across release/re-register), so `DataRef.id` equality is exactly
+//! "aliases the same storage" for the registry's lifetime. The launch
+//! graph's data-flow inference (`coordinator/engine.rs`) and
+//! [`DataRef::overlaps`] rely on this.
 
 use std::collections::HashMap;
 

@@ -36,15 +36,31 @@
 //! cache — only transfer times change; [`MlBenchResult::cache`] carries
 //! the hit/miss audit trail.
 //!
-//! **Pipelined epochs (the launch-queue layer).** Every phase is built on
+//! **Pipelined epochs (the launch-graph layer).** Every phase is built on
 //! the session's asynchronous launch surface: an internal per-replica
 //! `submit_*` method enqueues the phase and returns an `OffloadHandle`,
-//! so two model replicas on disjoint core halves can have their phases in
-//! flight *simultaneously* — [`dual_half_epochs`] runs that loop either
-//! blocking (submit-then-wait, one launch at a time) or pipelined (both
-//! halves submitted before either is waited), with bit-identical losses
-//! and strictly lower total virtual time pipelined. No kernel code
-//! changes between the variants; only the control side does.
+//! and the engine's launch graph orders the phases from their **data-flow
+//! edges** — `grad` writes the gradient shards `upd` reads (RAW), `upd`
+//! writes the weight shards `ff` streams (WAR) — so drivers submit
+//! without manual phase waits and ordering still comes out right. Two
+//! drivers exploit it:
+//!
+//! * [`dual_half_epochs`] — two model replicas on disjoint core halves
+//!   with their phases in flight simultaneously; the only waits left are
+//!   the host's own data needs (`dh` from the feed-forward result, the
+//!   gradient zeroing after `upd`).
+//! * [`single_replica_epochs`] — **cross-image software pipelining inside
+//!   one replica**: feed-forward runs on one half of the cores, the
+//!   backward phases on the other, and `ff(i+1)` is submitted before
+//!   `upd(i)` in *both* variants, so the dataflow (one-update-delayed
+//!   weights, classic software pipelining) is identical while the
+//!   pipelined variant overlaps `grad(i)` with `ff(i+1)` — bit-identical
+//!   losses, strictly lower virtual time. The image set is staged up
+//!   front ([`MlBenchConfig::staged`]) so in-flight phases read stable
+//!   views.
+//!
+//! No kernel code changes between blocking and pipelined variants; only
+//! the control side does.
 
 use crate::coordinator::{
     Access, ArgSpec, OffloadHandle, OffloadOptions, OffloadResult, PrefetchChoice, PrefetchSpec,
@@ -127,6 +143,11 @@ pub struct MlBenchConfig {
     /// Front the Host-level image store with a shared-window segment
     /// cache of this geometry (`None` = plain Host kind).
     pub cache: Option<CacheSpec>,
+    /// Force the whole image set to be staged up front even when epochs
+    /// and cache would not require it. Pipelined drivers set this:
+    /// in-flight phases must read stable image views, which the default
+    /// single rewritten streaming buffer cannot provide.
+    pub staged: bool,
 }
 
 impl MlBenchConfig {
@@ -152,6 +173,7 @@ impl MlBenchConfig {
             full_size: false,
             epochs: 1,
             cache: None,
+            staged: false,
         }
     }
 
@@ -174,6 +196,7 @@ impl MlBenchConfig {
             full_size: true,
             epochs: 1,
             cache: None,
+            staged: false,
         }
     }
 }
@@ -224,8 +247,15 @@ struct HeadOut {
 /// [`dual_half_epochs`] the two-replica pipelined one.
 struct Replica {
     cfg: MlBenchConfig,
-    /// Participating physical core ids (shard order).
-    cores: Vec<usize>,
+    /// Cores running the feed-forward phase (shard order). Shard `s` of
+    /// the pixels/weights belongs to `ff_cores[s]` in this phase.
+    ff_cores: Vec<usize>,
+    /// Cores running the backward phases (combine-gradients + model
+    /// update), in the same shard order: shard `s` is handled by
+    /// `bwd_cores[s]`. The classic driver uses one core set for both;
+    /// the software-pipelined driver splits them onto disjoint halves so
+    /// `grad(i)` can overlap `ff(i+1)`.
+    bwd_cores: Vec<usize>,
     shard: usize,
     w_refs: Vec<DataRef>,
     g_refs: Vec<DataRef>,
@@ -243,20 +273,42 @@ struct Replica {
 
 impl Replica {
     /// Set up model state and kernels inside `session`, on the given core
-    /// subset. `tag` prefixes variable names (distinct replicas in one
-    /// session stay distinguishable in traces); the single-replica driver
-    /// passes `""` for the historical names.
+    /// subset (used for every phase). `tag` prefixes variable names
+    /// (distinct replicas in one session stay distinguishable in traces);
+    /// the single-replica driver passes `""` for the historical names.
     fn new(
         session: &mut Session,
         cfg: MlBenchConfig,
         cores: Vec<usize>,
         tag: &str,
     ) -> Result<Self> {
-        let ncores = cores.len();
+        Self::with_phase_cores(session, cfg, cores.clone(), cores, tag)
+    }
+
+    /// As [`Replica::new`] but with distinct feed-forward and backward
+    /// core sets (equal lengths — the shard structure is shared; disjoint
+    /// sets let the launch graph overlap `grad(i)` with `ff(i+1)`).
+    fn with_phase_cores(
+        session: &mut Session,
+        cfg: MlBenchConfig,
+        ff_cores: Vec<usize>,
+        bwd_cores: Vec<usize>,
+        tag: &str,
+    ) -> Result<Self> {
+        let ncores = ff_cores.len();
         if ncores == 0 {
             return Err(Error::Coordinator("mlbench needs at least one core".into()));
         }
-        session.tech().validate_cores(&cores)?;
+        if bwd_cores.len() != ncores {
+            return Err(Error::Coordinator(format!(
+                "phase core sets must match the shard structure: {} feed-forward \
+                 cores vs {} backward cores",
+                ncores,
+                bwd_cores.len()
+            )));
+        }
+        session.tech().validate_cores(&ff_cores)?;
+        session.tech().validate_cores(&bwd_cores)?;
         if cfg.pixels % ncores != 0 {
             return Err(Error::Coordinator(format!(
                 "{} pixels do not divide over {ncores} cores",
@@ -306,7 +358,7 @@ impl Replica {
         // views, so those configs stage the whole set up front — peak host
         // memory O(images × pixels), moved (not copied) into the registry.
         // The default config keeps the seed's O(pixels) streaming buffer.
-        let staged = cfg.cache.is_some() || cfg.epochs > 1;
+        let staged = cfg.cache.is_some() || cfg.epochs > 1 || cfg.staged;
         let (x_ref, labels, gen) = if staged {
             let mut gen = ScanGenerator::new(cfg.seed, cfg.pixels);
             let mut dataset: Vec<f32> = Vec::with_capacity(cfg.images * cfg.pixels);
@@ -333,7 +385,7 @@ impl Replica {
         session.compile_kernel("grad", GRAD_SRC)?;
         session.compile_kernel("upd", UPD_SRC)?;
 
-        Ok(Replica { cfg, cores, shard, w_refs, g_refs, x_ref, labels, gen, v })
+        Ok(Replica { cfg, ff_cores, bwd_cores, shard, w_refs, g_refs, x_ref, labels, gen, v })
     }
 
     fn options(&self) -> OffloadOptions {
@@ -387,7 +439,7 @@ impl Replica {
                 ArgSpec::Int(self.cfg.hidden as i64),
             ])
             .options(self.options())
-            .cores(self.cores.clone())
+            .cores(self.ff_cores.clone())
             .submit()
     }
 
@@ -435,7 +487,7 @@ impl Replica {
                 ArgSpec::Int(self.cfg.chunk as i64),
             ])
             .options(self.options())
-            .cores(self.cores.clone())
+            .cores(self.bwd_cores.clone())
             .submit()
     }
 
@@ -457,7 +509,7 @@ impl Replica {
                 ArgSpec::Int(self.cfg.chunk as i64),
             ])
             .options(self.options())
-            .cores(self.cores.clone())
+            .cores(self.bwd_cores.clone())
             .submit()
     }
 
@@ -601,7 +653,12 @@ pub struct DualHalfOutcome {
 /// **blocking** (every phase is submit-then-wait, one launch in flight)
 /// or **pipelined** (each phase pair is submitted for both halves before
 /// either is waited, so the disjoint-core launches overlap their staging,
-/// compute and harvest on the shared virtual timeline).
+/// compute and harvest on the shared virtual timeline). The pipelined
+/// variant carries **no manual phase waits**: the grad → upd ordering
+/// inside each replica comes from the launch graph's inferred data-flow
+/// edges (upd reads the gradient shards grad writes), and the only
+/// remaining waits feed the host's own data needs (`dh`, the gradient
+/// zeroing).
 ///
 /// Kernel code and numerics are identical between the variants — the
 /// replicas touch disjoint variables, so overlap cannot change values
@@ -646,21 +703,34 @@ pub fn dual_half_epochs(
             if pipelined {
                 let ha = ra.submit_ff(&mut session, xa)?;
                 let hb = rb.submit_ff(&mut session, xb)?;
+                // The only scheduling waits left are the host's own data
+                // needs: `dh` comes out of the feed-forward result. The
+                // grad → upd ordering is *not* waited for — each
+                // replica's upd carries an inferred RAW edge on its grad
+                // (the gradient shards), so the graph serializes them.
                 let fa = ha.wait(&mut session)?;
                 let fb = hb.wait(&mut session)?;
                 let head_a = ra.finish_ff(&session, &fa, la)?;
                 let head_b = rb.finish_ff(&session, &fb, lb)?;
-                let ha = ra.submit_grad(&mut session, xa, &head_a.dh)?;
-                let hb = rb.submit_grad(&mut session, xb, &head_b.dh)?;
-                ha.wait(&mut session)?;
-                hb.wait(&mut session)?;
+                let ga = ra.submit_grad(&mut session, xa, &head_a.dh)?;
+                let gb = rb.submit_grad(&mut session, xb, &head_b.dh)?;
                 if !full_size {
-                    let ha = ra.submit_upd(&mut session)?;
-                    let hb = rb.submit_upd(&mut session)?;
-                    ha.wait(&mut session)?;
-                    hb.wait(&mut session)?;
+                    let ua = ra.submit_upd(&mut session)?;
+                    let ub = rb.submit_upd(&mut session)?;
+                    // finish_upd zeroes the gradient shards host-side —
+                    // that write is outside the graph, so the upd
+                    // handles are waited before it (the grad handles are
+                    // complete by then; waiting them just claims the
+                    // parked results).
+                    ua.wait(&mut session)?;
+                    ub.wait(&mut session)?;
+                    ga.wait(&mut session)?;
+                    gb.wait(&mut session)?;
                     ra.finish_upd(&mut session, &head_a.gv)?;
                     rb.finish_upd(&mut session, &head_b.gv)?;
+                } else {
+                    ga.wait(&mut session)?;
+                    gb.wait(&mut session)?;
                 }
                 losses_a.push(head_a.loss);
                 losses_b.push(head_b.loss);
@@ -683,6 +753,135 @@ pub fn dual_half_epochs(
         }
     }
     Ok(DualHalfOutcome { elapsed: session.now() - t0, losses_a, losses_b })
+}
+
+/// Outcome of a [`single_replica_epochs`] run.
+#[derive(Debug, Clone)]
+pub struct SingleReplicaOutcome {
+    /// Total virtual time of the whole epochs loop.
+    pub elapsed: Time,
+    /// Loss trajectory, one entry per processed image (`images × epochs`).
+    pub losses: Vec<f32>,
+}
+
+/// Train **one** model replica with its phases split over disjoint core
+/// halves — feed-forward on the first half, combine-gradients and model
+/// update on the second — software-pipelining across images: `ff(i+1)`
+/// enters the launch stream *before* `upd(i)` in **both** variants, so
+/// each feed-forward reads the weights as of the previous image's update
+/// (the classic one-slot software-pipeline delay) and the two variants
+/// execute the identical dataflow:
+///
+/// * **blocking** — every submit is waited immediately; the phases run
+///   back to back (`… grad(i), ff(i+1), upd(i) …` serially).
+/// * **pipelined** — the same submission order with **no intervening
+///   waits**; the launch graph's data-flow edges reproduce the ordering
+///   (`upd(i)` waits on `grad(i)`'s gradient writes *and* on `ff(i+1)`'s
+///   weight reads — RAW + WAR), which leaves `grad(i)` free to overlap
+///   `ff(i+1)` on the other core half.
+///
+/// Losses are bit-identical between the variants (same dataflow, and the
+/// engine guarantees overlap never changes values); the pipelined variant
+/// reports strictly lower total virtual time — enforced by
+/// `tests/async_launch.rs` and exercised as the
+/// `dep_pipeline_1replica` bench case. The image set is staged up front
+/// ([`MlBenchConfig::staged`]) so in-flight phases read stable views.
+pub fn single_replica_epochs(
+    tech: Technology,
+    seed: u64,
+    mode: TransferMode,
+    images: usize,
+    epochs: usize,
+    pipelined: bool,
+) -> Result<SingleReplicaOutcome> {
+    let cores = tech.cores;
+    if cores < 2 {
+        return Err(Error::Coordinator(
+            "single-replica pipelining needs at least 2 cores (one per phase half)".into(),
+        ));
+    }
+    if images == 0 {
+        return Err(Error::Coordinator("single-replica epochs needs at least one image".into()));
+    }
+    let half = cores / 2;
+    let mut session = Session::builder(tech).seed(seed).build()?;
+    let mut cfg = MlBenchConfig::small(half, mode);
+    cfg.images = images;
+    cfg.epochs = epochs;
+    cfg.staged = true;
+    let full_size = cfg.full_size;
+    let mut r = Replica::with_phase_cores(
+        &mut session,
+        cfg,
+        (0..half).collect(),
+        (half..2 * half).collect(),
+        "",
+    )?;
+
+    /// The pipeline's look-ahead slot: the next image's feed-forward,
+    /// either still in flight (pipelined) or already run to completion
+    /// (blocking — the handle is waited at submit, so only the parked
+    /// result travels to the next iteration).
+    enum FfSlot {
+        InFlight(OffloadHandle),
+        Ready(OffloadResult),
+    }
+
+    let total = images * epochs.max(1);
+    let t0 = session.now();
+    let mut losses = Vec::with_capacity(total);
+
+    // Prime: ff(0) enters the stream first in both variants.
+    let (xv0, lb0) = r.stage(&mut session, 0)?;
+    let h0 = r.submit_ff(&mut session, xv0)?;
+    let slot0 =
+        if pipelined { FfSlot::InFlight(h0) } else { FfSlot::Ready(h0.wait(&mut session)?) };
+    let mut upcoming: Option<(FfSlot, DataRef, f32)> = Some((slot0, xv0, lb0));
+
+    for t in 0..total {
+        let (slot, xv, label) = upcoming.take().expect("pipeline always primed");
+        let res = match slot {
+            FfSlot::InFlight(h) => h.wait(&mut session)?,
+            FfSlot::Ready(res) => res,
+        };
+        let head = r.finish_ff(&session, &res, label)?;
+
+        let gh = r.submit_grad(&mut session, xv, &head.dh)?;
+        if !pipelined {
+            gh.wait(&mut session)?;
+        }
+
+        // The next image's feed-forward enters the stream BEFORE this
+        // image's update in both variants — identical (one-slot-delayed)
+        // weight dataflow; only the waits differ.
+        if t + 1 < total {
+            let (nxv, nlb) = r.stage(&mut session, (t + 1) % images)?;
+            let nh = r.submit_ff(&mut session, nxv)?;
+            let nslot = if pipelined {
+                FfSlot::InFlight(nh)
+            } else {
+                FfSlot::Ready(nh.wait(&mut session)?)
+            };
+            upcoming = Some((nslot, nxv, nlb));
+        }
+
+        if !full_size {
+            let uh = r.submit_upd(&mut session)?;
+            // finish_upd zeroes the gradient shards host-side (a write
+            // outside the graph): wait the update first. In the
+            // pipelined variant this single wait drives grad(t) and —
+            // through upd's WAR edge on the weights — ff(t+1) too.
+            uh.wait(&mut session)?;
+            if pipelined {
+                gh.wait(&mut session)?; // complete by now; claims the result
+            }
+            r.finish_upd(&mut session, &head.gv)?;
+        } else if pipelined {
+            gh.wait(&mut session)?;
+        }
+        losses.push(head.loss);
+    }
+    Ok(SingleReplicaOutcome { elapsed: session.now() - t0, losses })
 }
 
 /// Native fused head (identical math to the PJRT artifact) for sessions
@@ -831,6 +1030,33 @@ mod tests {
         assert!(r.losses[0].is_finite());
         assert_eq!(r.per_image.model_update, 0, "no update phase at full size");
         assert!(r.per_image.feed_forward > 0);
+    }
+
+    #[test]
+    fn single_replica_variants_share_numerics() {
+        // The acceptance-critical virtual-time comparison lives in
+        // tests/async_launch.rs; here: same dataflow in both variants
+        // (ff(i+1) reads the one-update-delayed weights), identical
+        // losses, deterministic replay.
+        let run = |pipelined| {
+            single_replica_epochs(
+                Technology::epiphany3(),
+                7,
+                TransferMode::Prefetch,
+                2,
+                2,
+                pipelined,
+            )
+            .unwrap()
+        };
+        let blocking = run(false);
+        let pipelined = run(true);
+        assert_eq!(blocking.losses.len(), 4, "images × epochs");
+        assert_eq!(blocking.losses, pipelined.losses, "overlap never changes values");
+        assert!(blocking.losses.iter().all(|l| l.is_finite()));
+        let again = run(true);
+        assert_eq!(pipelined.elapsed, again.elapsed, "deterministic under a fixed seed");
+        assert_eq!(pipelined.losses, again.losses);
     }
 
     #[test]

@@ -10,9 +10,12 @@
 //!   the micro-cores; three timed phases (feed forward / combine
 //!   gradients / model update) under eager / on-demand / pre-fetch
 //!   transfer — Figures 3 and 4. Multi-epoch runs can front the image
-//!   store with the shared-window cache ([`mlbench::MlBenchConfig::cache`]),
-//!   and [`mlbench::dual_half_epochs`] pipelines two replicas' epochs on
-//!   disjoint core halves through the engine's async launch queue.
+//!   store with the shared-window cache ([`mlbench::MlBenchConfig::cache`]);
+//!   [`mlbench::dual_half_epochs`] pipelines two replicas' epochs on
+//!   disjoint core halves, and [`mlbench::single_replica_epochs`]
+//!   software-pipelines one replica's phases across images (`grad(i)`
+//!   overlapping `ff(i+1)`) — both riding the engine's launch graph,
+//!   with ordering inferred from data flow instead of manual waits.
 //! * [`linpack`] — the LINPACK LU benchmark and power table — Table 1.
 //! * [`stall`] — the synthetic single-transfer stall-time probe — Table 2.
 //! * [`baselines`] — analytic host-side comparators (CPython on ARM,
@@ -27,7 +30,8 @@ pub mod stall;
 
 pub use linpack::{linpack_row, LinpackRow};
 pub use mlbench::{
-    dual_half_epochs, DualHalfOutcome, MlBench, MlBenchConfig, MlBenchResult, PhaseTimes,
+    dual_half_epochs, single_replica_epochs, DualHalfOutcome, MlBench, MlBenchConfig,
+    MlBenchResult, PhaseTimes, SingleReplicaOutcome,
 };
 pub use scans::{sharded_normalize, sharded_sum, ScanGenerator};
 pub use stall::{stall_table, StallRow};

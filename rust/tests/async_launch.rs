@@ -2,9 +2,10 @@
 //!
 //! Pinned properties:
 //!
-//! 1. **Sequential submit-then-wait ≡ blocking offload** — the deprecated
-//!    `Session::offload` shim and the launch builder produce bit-identical
-//!    results, virtual times, stats and traces for the same call sequence.
+//! 1. **Immediate waits ≡ deferred waits** — a sequence of launches
+//!    waited one by one is bit-identical (results, virtual times, stats,
+//!    trace) to the same sequence driven by `wait_all` with the results
+//!    claimed afterwards.
 //! 2. **Disjoint-core launches overlap** — two in-flight launches on
 //!    disjoint core halves finish in strictly less total virtual time
 //!    than the same launches run back to back, deterministically under a
@@ -13,19 +14,21 @@
 //!    behave bit-identically whether the second is submitted before or
 //!    after the first is waited; the queued launch starts exactly at the
 //!    blocking launch's finish.
-//! 4. **Pipelined mlbench epochs beat blocking** (the PR's acceptance
-//!    criterion) — `dual_half_epochs` pipelined reports strictly lower
-//!    total virtual time than the blocking sequence with bit-identical
-//!    losses.
-//! 5. **`MemSpec` allocation ≡ the legacy `alloc_*` grid**, including the
-//!    constraint errors.
+//! 4. **Pipelined mlbench epochs beat blocking** — `dual_half_epochs`
+//!    (two replicas) and `single_replica_epochs` (cross-image software
+//!    pipelining inside one replica, this PR's acceptance criterion)
+//!    report strictly lower total virtual time pipelined than blocking,
+//!    with bit-identical losses.
+//! 5. **`MemSpec` placement constraints** are enforced at the unified
+//!    allocation entry point (the legacy `alloc_*` grid was removed in
+//!    0.4).
 
 use microcore::coordinator::{
     ArgSpec, LaunchStatus, OffloadOptions, OffloadResult, PrefetchSpec, Session, TransferMode,
 };
 use microcore::device::Technology;
-use microcore::memory::{CacheSpec, MemSpec};
-use microcore::workloads::dual_half_epochs;
+use microcore::memory::{CacheSpec, Level, MemSpec};
+use microcore::workloads::{dual_half_epochs, single_replica_epochs};
 
 const SUM_KERNEL: &str = r#"
 def total(xs):
@@ -85,8 +88,7 @@ fn epilogue(sess: &Session) -> (u64, String, String) {
 }
 
 #[test]
-#[allow(deprecated)]
-fn submit_wait_is_bit_identical_to_blocking_offload() {
+fn immediate_waits_bit_identical_to_deferred_wait_all() {
     let data: Vec<f32> = (0..3200).map(|i| i as f32 * 0.3 - 11.0).collect();
     let opts_of = |mode: &str| match mode {
         "ondemand" => OffloadOptions::default().transfer(TransferMode::OnDemand),
@@ -94,35 +96,48 @@ fn submit_wait_is_bit_identical_to_blocking_offload() {
         _ => OffloadOptions::default().prefetch(pf(40, 20)),
     };
 
-    // Legacy: the deprecated blocking shim, three offloads back to back.
-    let mut legacy_caps = Vec::new();
-    let mut legacy = session(17);
-    let a = legacy.alloc(MemSpec::host("a").from(&data)).unwrap();
-    let k = legacy.compile_kernel("total", SUM_KERNEL).unwrap();
+    // Blocking: three launches, each waited before the next is submitted.
+    let mut blocking_caps = Vec::new();
+    let mut blocking = session(17);
+    let a = blocking.alloc(MemSpec::host("a").from(&data)).unwrap();
+    let k = blocking.compile_kernel("total", SUM_KERNEL).unwrap();
     for mode in ["ondemand", "prefetch", "eager"] {
-        let res = legacy.offload(&k, &[ArgSpec::sharded(a)], opts_of(mode)).unwrap();
-        legacy_caps.push(capture(&res));
-    }
-    let legacy_end = epilogue(&legacy);
-
-    // New surface: submit then wait, same sequence, fresh session.
-    let mut fresh_caps = Vec::new();
-    let mut fresh = session(17);
-    let a = fresh.alloc(MemSpec::host("a").from(&data)).unwrap();
-    let k = fresh.compile_kernel("total", SUM_KERNEL).unwrap();
-    for mode in ["ondemand", "prefetch", "eager"] {
-        let h = fresh
+        let h = blocking
             .launch(&k)
             .arg(ArgSpec::sharded(a))
             .options(opts_of(mode))
             .submit()
             .unwrap();
-        fresh_caps.push(capture(&h.wait(&mut fresh).unwrap()));
+        blocking_caps.push(capture(&h.wait(&mut blocking).unwrap()));
     }
-    let fresh_end = epilogue(&fresh);
+    let blocking_end = epilogue(&blocking);
 
-    assert_eq!(legacy_caps, fresh_caps, "per-offload observables");
-    assert_eq!(legacy_end, fresh_end, "virtual clock, stats and trace");
+    // Deferred: the same three launches submitted up front (they contend
+    // for every core, so the queue serializes them in submission order),
+    // driven by wait_all, results claimed afterwards.
+    let mut deferred = session(17);
+    let a = deferred.alloc(MemSpec::host("a").from(&data)).unwrap();
+    let k = deferred.compile_kernel("total", SUM_KERNEL).unwrap();
+    let handles: Vec<_> = ["ondemand", "prefetch", "eager"]
+        .iter()
+        .map(|mode| {
+            deferred
+                .launch(&k)
+                .arg(ArgSpec::sharded(a))
+                .options(opts_of(mode))
+                .submit()
+                .unwrap()
+        })
+        .collect();
+    deferred.wait_all().unwrap();
+    let deferred_caps: Vec<_> = handles
+        .into_iter()
+        .map(|h| capture(&h.wait(&mut deferred).unwrap()))
+        .collect();
+    let deferred_end = epilogue(&deferred);
+
+    assert_eq!(blocking_caps, deferred_caps, "per-offload observables");
+    assert_eq!(blocking_end, deferred_end, "virtual clock, stats and trace");
 }
 
 #[test]
@@ -243,6 +258,40 @@ fn pipelined_mlbench_epochs_beat_blocking() {
     assert_eq!(replay.losses_a, pipelined.losses_a);
 }
 
+/// The launch-graph acceptance criterion: single-replica software
+/// pipelining — `grad(i)` overlapping `ff(i+1)` on disjoint phase-core
+/// halves, ordered purely by inferred data-flow edges — reports strictly
+/// lower total virtual time than the blocking sequence with bit-identical
+/// losses, deterministically.
+#[test]
+fn single_replica_pipeline_beats_blocking() {
+    let run = |pipelined| {
+        single_replica_epochs(
+            Technology::epiphany3(),
+            42,
+            TransferMode::Prefetch,
+            2,
+            2,
+            pipelined,
+        )
+        .unwrap()
+    };
+    let blocking = run(false);
+    let pipelined = run(true);
+    assert_eq!(blocking.losses.len(), 4, "images × epochs");
+    assert_eq!(blocking.losses, pipelined.losses, "identical numerics");
+    assert!(
+        pipelined.elapsed < blocking.elapsed,
+        "pipelined {} must be strictly lower than blocking {}",
+        pipelined.elapsed,
+        blocking.elapsed
+    );
+    // Deterministic under the fixed seed.
+    let replay = run(true);
+    assert_eq!(replay.elapsed, pipelined.elapsed);
+    assert_eq!(replay.losses, pipelined.losses);
+}
+
 #[test]
 fn poll_returns_completions_in_finish_order() {
     // A long launch on one half, a short one on the other: poll must
@@ -318,36 +367,36 @@ fn a_failing_launch_parks_its_own_error() {
 }
 
 #[test]
-#[allow(deprecated)]
-fn memspec_alloc_equivalent_to_legacy_grid() {
+fn memspec_grid_levels_contents_and_constraints() {
+    // The legacy alloc_* grid is gone (0.4): pin that the unified entry
+    // point still covers every place × initializer cell it spanned, with
+    // the right hierarchy levels, contents and constraint errors.
     let data: Vec<f32> = (0..320).map(|i| i as f32 * 0.7).collect();
     let spec = CacheSpec { segment_elems: 40, capacity_segments: 4 };
 
-    let mut old = session(3);
-    let o1 = old.alloc_host_f32("h", &data).unwrap();
-    let o2 = old.alloc_shared_f32("s", &data).unwrap();
-    let o3 = old.alloc_microcore_f32("m", 16).unwrap();
-    let o4 = old.alloc_host_cached_f32("c", &data, spec).unwrap();
-    let o5 = old.alloc_procedural_f32("p", 9, 64, 0.5).unwrap();
+    let mut s = session(3);
+    let h = s.alloc(MemSpec::host("h").from(&data)).unwrap();
+    let sh = s.alloc(MemSpec::shared("s").from(&data)).unwrap();
+    let m = s.alloc(MemSpec::microcore("m").zeroed(16)).unwrap();
+    let c = s.alloc(MemSpec::cached("c", spec).from(&data)).unwrap();
+    let p = s.alloc(MemSpec::procedural("p", 9, 0.5).zeroed(64)).unwrap();
 
-    let mut new = session(3);
-    let n1 = new.alloc(MemSpec::host("h").from(&data)).unwrap();
-    let n2 = new.alloc(MemSpec::shared("s").from(&data)).unwrap();
-    let n3 = new.alloc(MemSpec::microcore("m").zeroed(16)).unwrap();
-    let n4 = new.alloc(MemSpec::cached("c", spec).from(&data)).unwrap();
-    let n5 = new.alloc(MemSpec::procedural("p", 9, 0.5).zeroed(64)).unwrap();
+    assert_eq!(s.read(h).unwrap(), data, "host contents");
+    assert_eq!(s.read(c).unwrap(), data, "cache-fronted contents");
+    assert_eq!(s.read(m).unwrap(), vec![0.0; 16], "microcore zeroed replica");
+    let reg = s.engine().registry();
+    assert_eq!(reg.info(h).unwrap().level, Level::Host);
+    assert_eq!(reg.info(sh).unwrap().level, Level::Shared);
+    assert_eq!(reg.info(m).unwrap().level, Level::CoreLocal);
+    assert_eq!(reg.info(p).unwrap().level, Level::Shared);
+    // Ids are assigned in registration order and never recycled — the
+    // stable identity the launch graph's data-flow inference keys on.
+    assert_eq!((h.id, sh.id, m.id, c.id, p.id), (1, 2, 3, 4, 5));
 
-    for (o, n) in [(o1, n1), (o2, n2), (o3, n3), (o4, n4), (o5, n5)] {
-        assert_eq!(o, n, "same ids and geometry in registration order");
-        assert_eq!(old.read(o).unwrap(), new.read(n).unwrap(), "same contents");
-        let oi = old.engine().registry().info(o).unwrap();
-        let ni = new.engine().registry().info(n).unwrap();
-        assert_eq!(oi.level, ni.level, "same hierarchy level");
-    }
-
-    // Constraint errors survive the unification.
-    assert!(new.alloc(MemSpec::shared("big").zeroed(10_000_000)).is_err(), "window");
-    assert!(new.alloc(MemSpec::microcore("big").zeroed(10_000)).is_err(), "user store");
+    // Placement constraints are enforced centrally.
+    assert!(s.alloc(MemSpec::shared("big").zeroed(10_000_000)).is_err(), "window");
+    assert!(s.alloc(MemSpec::microcore("big").zeroed(10_000)).is_err(), "user store");
     let over = CacheSpec { segment_elems: 1 << 20, capacity_segments: 64 };
-    assert!(new.alloc(MemSpec::cached("big", over).from(&data)).is_err(), "cache budget");
+    assert!(s.alloc(MemSpec::cached("big", over).from(&data)).is_err(), "cache budget");
+    assert!(s.alloc(MemSpec::host("empty")).is_err(), "zero-length rejected");
 }

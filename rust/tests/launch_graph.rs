@@ -1,0 +1,529 @@
+//! Launch-graph tests: dependency edges, data-flow inference, failure
+//! propagation.
+//!
+//! Pinned properties:
+//!
+//! 1. **No-wait chain ≡ blocking** — a dependent chain submitted with no
+//!    intervening `wait()` calls produces bit-identical results, stats
+//!    and trace to the sequential blocking execution (the data-flow
+//!    edges reproduce exactly the ordering the waits used to impose).
+//! 2. **Diamond determinism** — the two independent middle stages of a
+//!    diamond overlap, the join waits for both, and replays are
+//!    bit-identical under a fixed seed.
+//! 3. **Inferred WAR/WAW ordering ≡ explicit `.after()`** — adding a
+//!    redundant explicit edge on top of an inferred one changes nothing,
+//!    and the inferred orderings match the hazard definitions (reads
+//!    don't conflict with reads; any overlapping pair with a writer is
+//!    ordered).
+//! 4. **Cycles are rejected at submit** — an edge may only name an
+//!    already-submitted launch; self/forward edges error immediately.
+//! 5. **`DependencyFailed` propagates transitively** — every launch with
+//!    a path to the failure parks its own error; unrelated launches and
+//!    later submissions are untouched.
+
+use microcore::coordinator::{
+    ArgSpec, LaunchId, LaunchStatus, OffloadResult, Session, TransferMode,
+};
+use microcore::device::Technology;
+use microcore::memory::MemSpec;
+
+const FILL_SRC: &str = r#"
+def fill(a, v):
+    i = 0
+    while i < len(a):
+        a[i] = v + i
+        i += 1
+    return 0
+"#;
+
+const XFER_SRC: &str = r#"
+def xfer(a, b):
+    i = 0
+    while i < len(a):
+        b[i] = a[i] * 2.0
+        i += 1
+    return 0
+"#;
+
+const SUM_SRC: &str = r#"
+def total(xs):
+    s = 0.0
+    i = 0
+    while i < len(xs):
+        s += xs[i]
+        i += 1
+    return s
+"#;
+
+fn session(seed: u64) -> Session {
+    Session::builder(Technology::epiphany3()).seed(seed).trace(8192).build().unwrap()
+}
+
+/// Everything observable about one offload, comparable for equality.
+#[derive(Debug, PartialEq)]
+struct Capture {
+    launched_at: u64,
+    finished_at: u64,
+    per_core: Vec<(usize, u64, u64, u64)>,
+    values: Vec<Vec<f64>>,
+}
+
+fn capture(res: &OffloadResult) -> Capture {
+    Capture {
+        launched_at: res.launched_at,
+        finished_at: res.finished_at,
+        per_core: res
+            .reports
+            .iter()
+            .map(|r| (r.core, r.finished_at, r.stall, r.requests))
+            .collect(),
+        values: res
+            .reports
+            .iter()
+            .map(|r| match r.value.as_array() {
+                Ok(a) => a.borrow().clone(),
+                Err(_) => vec![r.value.as_f64().unwrap_or(f64::NAN)],
+            })
+            .collect(),
+    }
+}
+
+/// Observable session state after a run sequence.
+fn epilogue(sess: &Session) -> (u64, String, String) {
+    (sess.now(), format!("{:?}", sess.stats()), sess.engine().trace().render())
+}
+
+/// The acceptance differential: fill → transform → reduce through one
+/// buffer chain, each stage on a different core quarter, ordered purely
+/// by inferred RAW edges — bit-identical to waiting every stage.
+#[test]
+fn no_wait_chain_bit_identical_to_blocking() {
+    let n = 160usize;
+    let build = |s: &mut Session| {
+        let a = s.alloc(MemSpec::host("a").zeroed(n)).unwrap();
+        let b = s.alloc(MemSpec::host("b").zeroed(n)).unwrap();
+        s.compile_kernel("fill", FILL_SRC).unwrap();
+        s.compile_kernel("xfer", XFER_SRC).unwrap();
+        s.compile_kernel("total", SUM_SRC).unwrap();
+        (a, b)
+    };
+    let submit3 = |s: &mut Session, a, b| {
+        let h1 = s
+            .launch_named("fill")
+            .unwrap()
+            .args(&[ArgSpec::sharded_mut(a), ArgSpec::Float(3.0)])
+            .mode(TransferMode::OnDemand)
+            .cores((0..4).collect())
+            .submit()
+            .unwrap();
+        let h2 = s
+            .launch_named("xfer")
+            .unwrap()
+            .args(&[ArgSpec::sharded(a), ArgSpec::sharded_mut(b)])
+            .mode(TransferMode::OnDemand)
+            .cores((4..8).collect())
+            .submit()
+            .unwrap();
+        let h3 = s
+            .launch_named("total")
+            .unwrap()
+            .arg(ArgSpec::sharded(b))
+            .mode(TransferMode::OnDemand)
+            .cores((8..12).collect())
+            .submit()
+            .unwrap();
+        (h1, h2, h3)
+    };
+
+    // Blocking: wait after every submit.
+    let mut blocking = session(11);
+    let (a, b) = build(&mut blocking);
+    let h1 = blocking
+        .launch_named("fill")
+        .unwrap()
+        .args(&[ArgSpec::sharded_mut(a), ArgSpec::Float(3.0)])
+        .mode(TransferMode::OnDemand)
+        .cores((0..4).collect())
+        .submit()
+        .unwrap();
+    let c1 = capture(&h1.wait(&mut blocking).unwrap());
+    let h2 = blocking
+        .launch_named("xfer")
+        .unwrap()
+        .args(&[ArgSpec::sharded(a), ArgSpec::sharded_mut(b)])
+        .mode(TransferMode::OnDemand)
+        .cores((4..8).collect())
+        .submit()
+        .unwrap();
+    let c2 = capture(&h2.wait(&mut blocking).unwrap());
+    let h3 = blocking
+        .launch_named("total")
+        .unwrap()
+        .arg(ArgSpec::sharded(b))
+        .mode(TransferMode::OnDemand)
+        .cores((8..12).collect())
+        .submit()
+        .unwrap();
+    let c3 = capture(&h3.wait(&mut blocking).unwrap());
+    let blocking_data = (blocking.read(a).unwrap(), blocking.read(b).unwrap());
+    let blocking_end = epilogue(&blocking);
+
+    // Graph: submit the whole chain, wait only the tail, claim the rest.
+    let mut graph = session(11);
+    let (a, b) = build(&mut graph);
+    let (h1, h2, h3) = submit3(&mut graph, a, b);
+    assert_eq!(h2.status(&graph), Some(LaunchStatus::Blocked), "RAW on fill");
+    assert_eq!(h3.status(&graph), Some(LaunchStatus::Blocked), "RAW on xfer");
+    let g3 = capture(&h3.wait(&mut graph).unwrap());
+    let g1 = capture(&h1.wait(&mut graph).unwrap());
+    let g2 = capture(&h2.wait(&mut graph).unwrap());
+    let graph_data = (graph.read(a).unwrap(), graph.read(b).unwrap());
+    let graph_end = epilogue(&graph);
+
+    assert_eq!((c1, c2, c3), (g1, g2, g3), "per-launch observables");
+    assert_eq!(blocking_data, graph_data, "buffer contents");
+    assert_eq!(blocking_end, graph_end, "virtual clock, stats and trace");
+}
+
+#[test]
+fn diamond_dependencies_overlap_and_replay_bit_identically() {
+    let n = 160usize;
+    let run = |graph: bool| {
+        let mut s = session(13);
+        let a = s.alloc(MemSpec::host("a").zeroed(n)).unwrap();
+        let b = s.alloc(MemSpec::host("b").zeroed(n)).unwrap();
+        let c = s.alloc(MemSpec::host("c").zeroed(n)).unwrap();
+        s.compile_kernel("fill", FILL_SRC).unwrap();
+        s.compile_kernel("xfer", XFER_SRC).unwrap();
+        s.compile_kernel("total", SUM_SRC).unwrap();
+        let fill = |s: &mut Session| {
+            s.launch_named("fill")
+                .unwrap()
+                .args(&[ArgSpec::sharded_mut(a), ArgSpec::Float(1.0)])
+                .mode(TransferMode::OnDemand)
+                .cores((0..4).collect())
+                .submit()
+                .unwrap()
+        };
+        let xfer = |s: &mut Session, dst, cores: std::ops::Range<usize>| {
+            s.launch_named("xfer")
+                .unwrap()
+                .args(&[ArgSpec::sharded(a), ArgSpec::sharded_mut(dst)])
+                .mode(TransferMode::OnDemand)
+                .cores(cores.collect())
+                .submit()
+                .unwrap()
+        };
+        // The join reads `b` (inferred RAW edge on the b-branch) and adds
+        // an explicit `.after` on the c-branch, closing the diamond.
+        if graph {
+            let h0 = fill(&mut s);
+            let hb = xfer(&mut s, b, 4..8);
+            let hc = xfer(&mut s, c, 8..12);
+            let hj = s
+                .launch_named("total")
+                .unwrap()
+                .arg(ArgSpec::sharded(b))
+                .mode(TransferMode::OnDemand)
+                .cores((12..16).collect())
+                .after(hc) // join also orders behind the c-branch
+                .submit()
+                .unwrap();
+            let rj = hj.wait(&mut s).unwrap();
+            let r0 = h0.wait(&mut s).unwrap();
+            let rb = hb.wait(&mut s).unwrap();
+            let rc = hc.wait(&mut s).unwrap();
+            (capture(&r0), capture(&rb), capture(&rc), capture(&rj), s.now())
+        } else {
+            let r0 = fill(&mut s).wait(&mut s).unwrap();
+            let rb = xfer(&mut s, b, 4..8).wait(&mut s).unwrap();
+            let rc = xfer(&mut s, c, 8..12).wait(&mut s).unwrap();
+            let rj = s
+                .launch_named("total")
+                .unwrap()
+                .arg(ArgSpec::sharded(b))
+                .mode(TransferMode::OnDemand)
+                .cores((12..16).collect())
+                .submit()
+                .unwrap()
+                .wait(&mut s)
+                .unwrap();
+            (capture(&r0), capture(&rb), capture(&rc), capture(&rj), s.now())
+        }
+    };
+
+    let (s0, sb, sc, sj, seq_total) = run(false);
+    let (g0, gb, gc, gj, graph_total) = run(true);
+
+    // Values are identical — overlap moves time, never data.
+    assert_eq!(s0.values, g0.values);
+    assert_eq!(sb.values, gb.values);
+    assert_eq!(sc.values, gc.values);
+    assert_eq!(sj.values, gj.values);
+    // Both middle stages start at the fill's finish (they only conflict
+    // with the fill, not each other: they read `a` and write disjoint
+    // buffers).
+    assert_eq!(gb.launched_at, g0.finished_at);
+    assert_eq!(gc.launched_at, g0.finished_at, "b and c branches overlap");
+    assert_eq!(sc.launched_at, sb.finished_at, "blocking serializes the branches");
+    // The join starts only once BOTH branches are done (RAW on b, plus
+    // the explicit edge on the c-branch).
+    assert_eq!(gj.launched_at, gb.finished_at.max(gc.finished_at));
+    // Strictly lower total virtual time, deterministic replay.
+    assert!(graph_total < seq_total, "diamond {graph_total} vs serial {seq_total}");
+    let (r0, rb, rc, rj, replay_total) = run(true);
+    assert_eq!((g0, gb, gc, gj, graph_total), (r0, rb, rc, rj, replay_total));
+}
+
+#[test]
+fn inferred_war_waw_edges_match_explicit_after() {
+    let n = 80usize;
+    // WAR: a reader on one quarter, then a writer of the same buffer on
+    // another — the writer must wait for the reader. `explicit` adds a
+    // redundant `.after` edge on top of the inferred one: bit-identical.
+    let war = |explicit: bool| {
+        let mut s = session(19);
+        let twos = vec![2.0f32; n];
+        let a = s.alloc(MemSpec::host("a").from(&twos)).unwrap();
+        s.compile_kernel("total", SUM_SRC).unwrap();
+        s.compile_kernel("fill", FILL_SRC).unwrap();
+        let hr = s
+            .launch_named("total")
+            .unwrap()
+            .arg(ArgSpec::sharded(a))
+            .mode(TransferMode::OnDemand)
+            .cores((0..4).collect())
+            .submit()
+            .unwrap();
+        let builder = s
+            .launch_named("fill")
+            .unwrap()
+            .args(&[ArgSpec::sharded_mut(a), ArgSpec::Float(0.0)])
+            .mode(TransferMode::OnDemand)
+            .cores((4..8).collect());
+        let builder = if explicit { builder.after(hr) } else { builder };
+        let hw = builder.submit().unwrap();
+        assert_eq!(hw.status(&s), Some(LaunchStatus::Blocked));
+        let rr = hr.wait(&mut s).unwrap();
+        let rw = hw.wait(&mut s).unwrap();
+        assert_eq!(rw.launched_at, rr.finished_at, "writer waits for the reader");
+        // Reader summed pre-write contents (2.0 × shard of 20).
+        assert_eq!(rr.reports[0].value.as_f64().unwrap(), 40.0);
+        (capture(&rr), capture(&rw), epilogue(&s))
+    };
+    assert_eq!(war(false), war(true), "inferred WAR ≡ explicit .after");
+
+    // WAW: two writers of one buffer on different quarters stay in
+    // submission order; the second's writes land last.
+    let waw = |explicit: bool| {
+        let mut s = session(23);
+        let a = s.alloc(MemSpec::host("a").zeroed(n)).unwrap();
+        s.compile_kernel("fill", FILL_SRC).unwrap();
+        let fill = |s: &mut Session, v: f64, cores: std::ops::Range<usize>| {
+            s.launch_named("fill")
+                .unwrap()
+                .args(&[ArgSpec::sharded_mut(a), ArgSpec::Float(v)])
+                .mode(TransferMode::OnDemand)
+                .cores(cores.collect())
+                .submit()
+                .unwrap()
+        };
+        let h1 = fill(&mut s, 100.0, 0..4);
+        let builder = s
+            .launch_named("fill")
+            .unwrap()
+            .args(&[ArgSpec::sharded_mut(a), ArgSpec::Float(500.0)])
+            .mode(TransferMode::OnDemand)
+            .cores((4..8).collect());
+        let builder = if explicit { builder.after(h1) } else { builder };
+        let h2 = builder.submit().unwrap();
+        assert_eq!(h2.status(&s), Some(LaunchStatus::Blocked), "WAW edge");
+        let r1 = h1.wait(&mut s).unwrap();
+        let r2 = h2.wait(&mut s).unwrap();
+        assert_eq!(r2.launched_at, r1.finished_at);
+        // The later writer's contents win everywhere.
+        assert_eq!(s.read(a).unwrap()[0], 500.0);
+        (capture(&r1), capture(&r2), epilogue(&s))
+    };
+    assert_eq!(waw(false), waw(true), "inferred WAW ≡ explicit .after");
+
+    // Read-read pairs commute: no edge, immediate overlap.
+    let mut s = session(29);
+    let ones = vec![1.0f32; n];
+    let a = s.alloc(MemSpec::host("a").from(&ones)).unwrap();
+    s.compile_kernel("total", SUM_SRC).unwrap();
+    let read = |s: &mut Session, cores: std::ops::Range<usize>| {
+        s.launch_named("total")
+            .unwrap()
+            .arg(ArgSpec::sharded(a))
+            .mode(TransferMode::OnDemand)
+            .cores(cores.collect())
+            .submit()
+            .unwrap()
+    };
+    let h1 = read(&mut s, 0..4);
+    let h2 = read(&mut s, 4..8);
+    assert_eq!(h2.status(&s), Some(LaunchStatus::Pending), "no edge between readers");
+    let r1 = h1.wait(&mut s).unwrap();
+    let r2 = h2.wait(&mut s).unwrap();
+    assert_eq!(r2.launched_at, 0, "readers overlap from virtual time 0");
+    assert_eq!(r1.launched_at, 0);
+}
+
+#[test]
+fn cycles_rejected_at_submit() {
+    let mut s = session(31);
+    let a = s.alloc(MemSpec::host("a").from(&[1.0; 16])).unwrap();
+    let k = s.compile_kernel("total", SUM_SRC).unwrap();
+    // Self edge: the next launch id would be 0 — depending on it is a
+    // cycle.
+    let err = s
+        .launch(&k)
+        .arg(ArgSpec::sharded(a))
+        .mode(TransferMode::OnDemand)
+        .after_id(LaunchId::from_raw(0))
+        .submit()
+        .unwrap_err();
+    assert!(err.to_string().contains("cycle"), "{err}");
+    // Forward edge: naming a launch that has not been submitted yet is
+    // equally a cycle (edges may only point backwards).
+    let h = s
+        .launch(&k)
+        .arg(ArgSpec::sharded(a))
+        .mode(TransferMode::OnDemand)
+        .submit()
+        .unwrap();
+    let err = s
+        .launch(&k)
+        .arg(ArgSpec::sharded(a))
+        .mode(TransferMode::OnDemand)
+        .after_id(LaunchId::from_raw(99))
+        .submit()
+        .unwrap_err();
+    assert!(err.to_string().contains("cycle"), "{err}");
+    // The rejected submissions left the graph intact.
+    assert!(h.wait(&mut s).is_ok());
+}
+
+#[test]
+fn dependency_failure_propagates_transitively_sparing_unrelated() {
+    let n = 80usize;
+    let mut s = session(37);
+    let ones = vec![1.0f32; n];
+    let fours = vec![4.0f32; n];
+    let a = s.alloc(MemSpec::host("a").from(&ones)).unwrap();
+    let d = s.alloc(MemSpec::host("d").from(&fours)).unwrap();
+    s.compile_kernel("total", SUM_SRC).unwrap();
+    let boom = s
+        .compile_kernel("boom", "def boom(a):\n    return a[999999]\n")
+        .unwrap();
+    // F writes... declares `a` mutable, then indexes out of range: fails
+    // at run time. Its mutable flow makes later readers of `a` depend on
+    // it.
+    let hf = s
+        .launch(&boom)
+        .arg(ArgSpec::sharded_mut(a))
+        .mode(TransferMode::OnDemand)
+        .cores((0..4).collect())
+        .submit()
+        .unwrap();
+    // B reads a → inferred RAW edge on F. C is explicitly after B.
+    let hb = s
+        .launch_named("total")
+        .unwrap()
+        .arg(ArgSpec::sharded(a))
+        .mode(TransferMode::OnDemand)
+        .cores((4..8).collect())
+        .submit()
+        .unwrap();
+    let hc = s
+        .launch_named("total")
+        .unwrap()
+        .arg(ArgSpec::sharded(d))
+        .mode(TransferMode::OnDemand)
+        .cores((8..12).collect())
+        .after(hb)
+        .submit()
+        .unwrap();
+    // U is unrelated: different buffer, different cores, no edges.
+    let hu = s
+        .launch_named("total")
+        .unwrap()
+        .arg(ArgSpec::sharded(d))
+        .mode(TransferMode::OnDemand)
+        .cores((12..16).collect())
+        .submit()
+        .unwrap();
+
+    // Driving the unrelated launch to completion is unaffected by the
+    // failure cascade it steps over.
+    let ru = hu.wait(&mut s).unwrap();
+    assert!(ru.finished_at > 0);
+
+    let ef = hf.wait(&mut s).unwrap_err();
+    assert!(!ef.to_string().contains("dependency"), "root error is the VM's: {ef}");
+    let eb = hb.wait(&mut s).unwrap_err();
+    assert!(eb.to_string().contains("dependency launch 0 failed"), "{eb}");
+    let ec = hc.wait(&mut s).unwrap_err();
+    assert!(ec.to_string().contains("dependency launch 1 failed"), "{ec}");
+
+    // The cascade released everything: new work on the same buffer and
+    // cores runs fine (no inferred edge onto retired failures).
+    let h = s
+        .launch_named("total")
+        .unwrap()
+        .arg(ArgSpec::sharded(a))
+        .mode(TransferMode::OnDemand)
+        .cores((0..4).collect())
+        .submit()
+        .unwrap();
+    let r = h.wait(&mut s).unwrap();
+    assert_eq!(r.reports[0].value.as_f64().unwrap(), 20.0, "contents untouched by boom");
+
+    // An explicit edge on a failed-and-claimed launch still refuses to
+    // run.
+    let h = s
+        .launch_named("total")
+        .unwrap()
+        .arg(ArgSpec::sharded(a))
+        .mode(TransferMode::OnDemand)
+        .after(hf)
+        .submit()
+        .unwrap();
+    let e = h.wait(&mut s).unwrap_err();
+    assert!(e.to_string().contains("dependency launch 0 failed"), "{e}");
+}
+
+#[test]
+fn queue_stats_distinguish_blocked_from_pending() {
+    let n = 80usize;
+    let mut s = session(41);
+    let a = s.alloc(MemSpec::host("a").zeroed(n)).unwrap();
+    let b = s.alloc(MemSpec::host("b").zeroed(n)).unwrap();
+    s.compile_kernel("fill", FILL_SRC).unwrap();
+    let fill = |s: &mut Session, buf, cores: std::ops::Range<usize>| {
+        s.launch_named("fill")
+            .unwrap()
+            .args(&[ArgSpec::sharded_mut(buf), ArgSpec::Float(1.0)])
+            .mode(TransferMode::OnDemand)
+            .cores(cores.collect())
+            .submit()
+            .unwrap()
+    };
+    let h1 = fill(&mut s, a, 0..4); // pending (not driven yet)
+    let h2 = fill(&mut s, a, 4..8); // blocked: WAW edge on h1
+    let h3 = fill(&mut s, b, 0..4); // pending: core contention with h1, no edge
+    assert_eq!(h1.status(&s), Some(LaunchStatus::Pending));
+    assert_eq!(h2.status(&s), Some(LaunchStatus::Blocked));
+    assert_eq!(h3.status(&s), Some(LaunchStatus::Pending));
+    let qs = s.queue_stats();
+    assert_eq!((qs.blocked, qs.pending, qs.active, qs.completed), (1, 2, 0, 0));
+    assert_eq!(s.in_flight(), 3, "in_flight counts every unfinished stage");
+    s.wait_all().unwrap();
+    let qs = s.queue_stats();
+    assert_eq!((qs.blocked, qs.pending, qs.active, qs.completed), (0, 0, 0, 3));
+    for h in [h1, h2, h3] {
+        h.wait(&mut s).unwrap();
+    }
+    assert_eq!(s.queue_stats(), Default::default());
+}

@@ -35,7 +35,7 @@ use microcore::device::Technology;
 use microcore::memory::{CacheSpec, MemSpec};
 use microcore::metrics::report::cache_table;
 use microcore::workloads::{
-    dual_half_epochs, sharded_normalize, sharded_sum, single_replica_epochs,
+    dual_half_epochs, hetero_mlbench, sharded_normalize, sharded_sum, single_replica_epochs,
 };
 
 const SPIN: &str = r#"
@@ -302,7 +302,52 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // 8. Tensor-builtin (PJRT) invocation rate, if artifacts exist and
+    // 8. Heterogeneous two-device mlbench: feed-forward on the Epiphany,
+    // grad/upd on the MicroBlaze, driven through the multi-device group
+    // scheduler with host-level weight staging between the devices. The
+    // perf-compile-rot guard for the group layer; one uncounted run
+    // prints the staging audit and the losses-identical check against
+    // the single-device reference.
+    let m = time_wall("hetero_mlbench_2dev", warmup, iters, || {
+        hetero_mlbench(
+            Technology::epiphany3(),
+            Some(Technology::microblaze_fpu()),
+            1,
+            TransferMode::Prefetch,
+            ml_images,
+            1,
+        )
+        .unwrap();
+    });
+    case(&m, Some(ml_images as f64 / m.mean()));
+    {
+        let hetero = hetero_mlbench(
+            Technology::epiphany3(),
+            Some(Technology::microblaze_fpu()),
+            1,
+            TransferMode::Prefetch,
+            ml_images,
+            1,
+        )
+        .unwrap();
+        let single = hetero_mlbench(
+            Technology::microblaze_fpu(),
+            None,
+            1,
+            TransferMode::Prefetch,
+            ml_images,
+            1,
+        )
+        .unwrap();
+        assert_eq!(hetero.losses, single.losses, "devices change times, never values");
+        println!(
+            "  -> staging: {} copies ({} B) across the host level; losses identical to \
+             the 1-device reference",
+            hetero.staging.copies, hetero.staging.bytes
+        );
+    }
+
+    // 9. Tensor-builtin (PJRT) invocation rate, if artifacts exist and
     // the build carries the real PJRT backend (stub builds would error
     // at session construction).
     if cfg!(feature = "xla") && std::path::Path::new("artifacts/manifest.json").exists() {

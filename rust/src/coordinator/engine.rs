@@ -565,13 +565,17 @@ impl Engine {
         // unordered, not invisible).
         let flows = collect_flows(&bound);
         let mut deps: Vec<u64> = Vec::new();
-        let mut dep_ready: Time = 0;
+        // External-dependency floor: the multi-device group threads its
+        // cross-device staging completion time in here, so it composes
+        // with in-engine edges exactly like a satisfied dependency.
+        let mut dep_ready: Time = options.not_before;
         let mut dep_error: Option<Error> = None;
         // An explicit edge on a launch that failed and was already
         // claimed (retired from the table) still abandons this launch.
         for d in &options.after {
             if self.failed.contains(&d.0) {
-                dep_error = Some(Error::DependencyFailed { launch: id, dep: d.0 });
+                dep_error =
+                    Some(Error::DependencyFailed { launch: id, dep: d.0, dep_device: None });
             }
         }
         for l in &self.launches {
@@ -593,7 +597,8 @@ impl Engine {
                 // blocking sequence, where the caller saw the error from
                 // their own wait and chose to keep submitting.
                 Some(Err(_)) if explicit => {
-                    dep_error = Some(Error::DependencyFailed { launch: id, dep: l.id });
+                    dep_error =
+                        Some(Error::DependencyFailed { launch: id, dep: l.id, dep_device: None });
                 }
                 Some(Err(_)) => {}
             }
@@ -706,6 +711,22 @@ impl Engine {
     /// active). See [`Engine::queue_stats`] for the per-stage breakdown.
     pub fn in_flight(&self) -> usize {
         self.launches.iter().filter(|l| l.outcome.is_none()).count()
+    }
+
+    /// Whether a launch ever failed (its own error or a propagated
+    /// `DependencyFailed`). Unlike [`Engine::launch_status`] this stays
+    /// answerable after the outcome is claimed — the failed set is kept
+    /// for the engine's lifetime. The multi-device group consults it to
+    /// decide whether a cross-device staging source is poisoned.
+    pub fn launch_failed(&self, id: LaunchId) -> bool {
+        self.failed.contains(&id.0)
+    }
+
+    /// Physical cores currently reserved or occupied by a launch. The
+    /// multi-device group's automatic placement reads this as the
+    /// per-device occupancy signal.
+    pub fn busy_cores(&self) -> usize {
+        self.core_owner.iter().filter(|o| o.is_some()).count()
     }
 
     /// Per-stage breakdown of the launch table — blocked on dependency
@@ -895,7 +916,8 @@ impl Engine {
                 let dl = &mut self.launches[di];
                 let did = dl.id;
                 dl.cores.clear();
-                dl.outcome = Some(Err(Error::DependencyFailed { launch: did, dep: fid }));
+                dl.outcome =
+                    Some(Err(Error::DependencyFailed { launch: did, dep: fid, dep_device: None }));
                 self.failed.insert(did);
                 worklist.push(did);
             }

@@ -1,0 +1,1066 @@
+//! Multi-device execution plans: one launch surface spanning
+//! heterogeneous micro-core technologies.
+//!
+//! The paper evaluates the same abstractions on two very different
+//! devices — Epiphany-III and MicroBlaze — but a [`super::Session`]
+//! drives exactly one of them. A [`DeviceGroup`] builds a
+//! [`GroupSession`] that owns **one engine per attached
+//! [`Technology`]** on a shared virtual timeline, so one driver can
+//! schedule work across an Epiphany *and* a MicroBlaze simultaneously,
+//! with the host memory hierarchy as the shared staging level (ePython's
+//! virtualised-core model and Vipera's portable runtime both target
+//! heterogeneous devices behind one API; this layer brings that into the
+//! launch graph).
+//!
+//! ## Placement
+//!
+//! [`GroupSession::launch_named`] returns a [`GroupLaunchBuilder`] — the
+//! familiar launch builder plus [`GroupLaunchBuilder::on`], which pins
+//! the launch to a device. Without `.on(..)` placement is **automatic**:
+//! the launch goes to the device with the lowest core occupancy
+//! (reserved/busy cores ÷ total cores, ties to the lower device index) —
+//! deterministic, so runs replay bit-for-bit.
+//!
+//! ## The staging invariant
+//!
+//! **No device ever reads another device's local window directly;
+//! everything crosses at Host level or above.** Group buffers
+//! ([`GroupSession::alloc`]) therefore must live at the Host level (plain
+//! or cache-fronted) and are *replicated*: each device's registry holds
+//! its own copy. The group tracks, per buffer, which replica is
+//! **authoritative** (the device whose launch last wrote it) and which
+//! replicas are fresh. When a launch on device B touches a buffer whose
+//! authoritative replica is on device A, submit performs a **host-level
+//! staging copy** — the cross-device analogue of an inferred RAW edge:
+//!
+//! 1. device A is quiesced for the buffer (the writer finishes — exactly
+//!    [`super::Session::quiesce`], so the edge spans devices);
+//! 2. device B is quiesced for its replica (in-flight readers of the old
+//!    contents finish before the overwrite — the WAR half);
+//! 3. one **host-level read** is charged on A's service and one
+//!    **host-level write** on B's service, the levels probed through
+//!    [`crate::memory::MemRegistry::access_level`] (a cache-fronted
+//!    source resident in its shared window is charged at `Shared` cost);
+//! 4. the dependent launch is submitted with an activation floor
+//!    ([`super::OffloadOptions::not_before`]) at the copy's completion —
+//!    it activates no earlier than the staged data's arrival, exactly
+//!    like an in-engine edge raising `dep_ready`.
+//!
+//! [`crate::sim::StagingCounters`] audits the 1 copy : 1 host read :
+//! 1 host write relationship; a two-device chain charges exactly one
+//! host-level read and one host-level write more than the same chain on
+//! one device (`tests/multi_device.rs`).
+//!
+//! ## Failure propagation across devices
+//!
+//! A staging copy is a host-side read of the writer's output, so the
+//! group refuses to stage from a failed writer: the dependent launch
+//! parks its own [`Error::DependencyFailed`] naming the writer *and its
+//! device* (`dep_device`), and — if it would itself have written buffers
+//! — records itself as their failed writer (replica contents and
+//! freshness stay exactly as they were: a parked launch never ran), so
+//! the abandonment propagates transitively through cross-device
+//! *staging* chains just as the engine's worklist propagates it within a
+//! device. A successor that can read its replica **without staging**
+//! proceeds on the data as it is — the same blocking-continue semantics
+//! the engine applies to inferred edges onto already-failed launches. A
+//! full-cover host write ([`GroupSession::write`]) clears the poison
+//! along with the staleness.
+//!
+//! ## What stays per-device
+//!
+//! Device-private kinds (`Shared`, `Microcore`, …) are allocated through
+//! the underlying [`GroupSession::session_mut`] and never cross devices
+//! — that is the staging invariant again. Within one device all engine
+//! semantics are unchanged: the per-device launch graph still infers
+//! edges, pipelines disjoint launches and propagates failures exactly as
+//! `coordinator/engine.rs` documents.
+//!
+//! Staleness is tracked per whole buffer (the hull), mirroring the
+//! engine's per-variable [`FlowSpan`](super::engine) hulls: a window
+//! write marks the entire buffer authoritative on the writer's device.
+//! Conservative — a spurious staging copy costs time, never correctness.
+
+use std::collections::HashMap;
+
+use crate::device::Technology;
+use crate::error::{Error, Result};
+use crate::memory::{DataRef, MemPlace, MemSpec};
+use crate::sim::{CacheCounters, StagingCounters, Time};
+
+use super::engine::{LaunchId, LaunchStatus};
+use super::marshal::{ArgSpec, PrefetchChoice};
+use super::offload::{OffloadOptions, OffloadResult};
+use super::prefetch::PrefetchSpec;
+use super::session::{OffloadHandle, Session};
+use super::{Access, TransferMode};
+
+/// Index of a device within a [`GroupSession`] (attachment order on the
+/// [`DeviceGroup`] builder).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DeviceId(
+    /// Zero-based attachment index.
+    pub usize,
+);
+
+/// Builder for a [`GroupSession`]: attach one [`Technology`] per device.
+#[derive(Debug, Clone)]
+pub struct DeviceGroup {
+    devices: Vec<Technology>,
+    seed: u64,
+    service_threads: usize,
+    trace_capacity: Option<usize>,
+}
+
+impl Default for DeviceGroup {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DeviceGroup {
+    /// Empty group; attach devices with [`DeviceGroup::device`].
+    pub fn new() -> Self {
+        DeviceGroup { devices: Vec::new(), seed: 42, service_threads: 1, trace_capacity: None }
+    }
+
+    /// Attach one device. The first attached device is `DeviceId(0)`.
+    pub fn device(mut self, tech: Technology) -> Self {
+        self.devices.push(tech);
+        self
+    }
+
+    /// Deterministic base seed. Device `i` derives its own service-jitter
+    /// seed from it; device 0's derivation is the identity, so a
+    /// one-device group reproduces a plain [`Session`] bit-for-bit.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Host service threads per device.
+    pub fn service_threads(mut self, n: usize) -> Self {
+        self.service_threads = n.max(1);
+        self
+    }
+
+    /// Record a bounded event trace on every device.
+    pub fn trace(mut self, capacity: usize) -> Self {
+        self.trace_capacity = Some(capacity);
+        self
+    }
+
+    /// Construct the group session (at least one device required).
+    pub fn build(self) -> Result<GroupSession> {
+        if self.devices.is_empty() {
+            return Err(Error::Coordinator("a device group needs at least one device".into()));
+        }
+        let mut sessions = Vec::with_capacity(self.devices.len());
+        for (i, tech) in self.devices.into_iter().enumerate() {
+            let mut b = Session::builder(tech)
+                .seed(self.seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+                .service_threads(self.service_threads);
+            if let Some(cap) = self.trace_capacity {
+                b = b.trace(cap);
+            }
+            sessions.push(b.build()?);
+        }
+        Ok(GroupSession {
+            sessions,
+            bufs: Vec::new(),
+            parked: HashMap::new(),
+            staging: StagingCounters::default(),
+            next_seq: 0,
+        })
+    }
+}
+
+/// A reference to (a window of) a group buffer — the multi-device
+/// analogue of [`DataRef`]. Resolve to a device-local view with
+/// [`GroupSession::device_ref`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GroupRef {
+    gid: usize,
+    offset: usize,
+    len: usize,
+}
+
+impl GroupRef {
+    /// Elements visible through this view.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the view is empty (never true for allocated buffers).
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// A sub-view, mirroring [`DataRef::slice`] (panics out of range).
+    pub fn slice(&self, offset: usize, len: usize) -> GroupRef {
+        assert!(
+            offset + len <= self.len,
+            "slice [{offset}, {}) out of group view of length {}",
+            offset + len,
+            self.len
+        );
+        GroupRef { gid: self.gid, offset: self.offset + offset, len }
+    }
+}
+
+/// The recorded last writer of a group buffer.
+#[derive(Debug, Clone, Copy)]
+struct GroupWriter {
+    /// Device the writer ran (or would have run) on.
+    device: usize,
+    /// Engine launch id for submitted writers; the group sequence number
+    /// for writers that were parked before ever reaching an engine.
+    id: u64,
+    /// Whether the writer was parked with a propagated failure and never
+    /// submitted (its replica was never written — but its failure must
+    /// still reach transitive cross-device dependents).
+    parked: bool,
+}
+
+/// One replicated group buffer.
+struct GroupBuf {
+    /// Per-device full-view references (index = device).
+    drefs: Vec<DataRef>,
+    len: usize,
+    /// Which replicas hold the authoritative contents.
+    fresh: Vec<bool>,
+    /// Device whose launch last wrote the buffer (`None` = host wrote it
+    /// last / never written — every replica fresh).
+    authoritative: Option<usize>,
+    writer: Option<GroupWriter>,
+}
+
+/// One argument of a group launch — [`super::ArgSpec`] over [`GroupRef`]s.
+#[derive(Debug, Clone)]
+pub enum GroupArgSpec {
+    /// A host scalar (float).
+    Float(f64),
+    /// A host scalar (int).
+    Int(i64),
+    /// A small by-value array copied into the launch message.
+    Values(Vec<f64>),
+    /// A group-buffer reference argument.
+    Ref {
+        /// The buffer window.
+        gref: GroupRef,
+        /// Shard across the launch's cores or broadcast the whole view.
+        shard: bool,
+        /// Read-only vs mutable (drives both write-back and the group's
+        /// authoritative-replica tracking).
+        access: Access,
+        /// Pre-fetch choice, as for [`super::ArgSpec::Ref`].
+        prefetch: PrefetchChoice,
+    },
+    /// One distinct group reference per core (core-ordered).
+    PerCore {
+        /// Core-ordered references.
+        grefs: Vec<GroupRef>,
+        /// Access modifier, applied to each.
+        access: Access,
+        /// Pre-fetch choice.
+        prefetch: PrefetchChoice,
+    },
+}
+
+impl GroupArgSpec {
+    /// Convenience: a sharded read-only reference.
+    pub fn sharded(gref: GroupRef) -> GroupArgSpec {
+        GroupArgSpec::Ref {
+            gref,
+            shard: true,
+            access: Access::ReadOnly,
+            prefetch: PrefetchChoice::Default,
+        }
+    }
+
+    /// Convenience: a broadcast read-only reference.
+    pub fn broadcast(gref: GroupRef) -> GroupArgSpec {
+        GroupArgSpec::Ref {
+            gref,
+            shard: false,
+            access: Access::ReadOnly,
+            prefetch: PrefetchChoice::Default,
+        }
+    }
+
+    /// Convenience: a sharded mutable reference.
+    pub fn sharded_mut(gref: GroupRef) -> GroupArgSpec {
+        GroupArgSpec::Ref {
+            gref,
+            shard: true,
+            access: Access::Mutable,
+            prefetch: PrefetchChoice::Default,
+        }
+    }
+
+    /// The group buffers this argument touches, with the write flag.
+    fn flows(&self) -> Vec<(usize, bool)> {
+        match self {
+            GroupArgSpec::Float(_) | GroupArgSpec::Int(_) | GroupArgSpec::Values(_) => Vec::new(),
+            GroupArgSpec::Ref { gref, access, .. } => {
+                vec![(gref.gid, *access == Access::Mutable)]
+            }
+            GroupArgSpec::PerCore { grefs, access, .. } => {
+                grefs.iter().map(|g| (g.gid, *access == Access::Mutable)).collect()
+            }
+        }
+    }
+}
+
+/// Outcome of making one buffer fresh on the launching device.
+enum StageOutcome {
+    /// Already fresh — no copy, no cost.
+    Fresh,
+    /// Staged; the copy completes at this virtual time (activation floor).
+    Staged(Time),
+    /// The authoritative writer failed; the dependent must be abandoned.
+    Poisoned(Error),
+}
+
+/// A live session over a group of devices (module docs). Owns one
+/// [`Session`] (engine + registry + kernels) per device; group buffers,
+/// placement, cross-device staging and failure propagation live here.
+pub struct GroupSession {
+    sessions: Vec<Session>,
+    bufs: Vec<GroupBuf>,
+    /// Errors parked for launches abandoned before reaching an engine,
+    /// keyed by group sequence number; claimed by the handle's `wait`.
+    parked: HashMap<u64, Error>,
+    staging: StagingCounters,
+    next_seq: u64,
+}
+
+impl std::fmt::Debug for GroupSession {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("GroupSession")
+            .field("devices", &self.sessions.len())
+            .field("bufs", &self.bufs.len())
+            .field("staging", &self.staging)
+            .finish()
+    }
+}
+
+impl GroupSession {
+    /// Builder entry point (alias for [`DeviceGroup::new`]).
+    pub fn builder() -> DeviceGroup {
+        DeviceGroup::new()
+    }
+
+    /// Number of attached devices.
+    pub fn devices(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Technology of one device.
+    pub fn tech(&self, d: DeviceId) -> &Technology {
+        self.sessions[d.0].tech()
+    }
+
+    /// The underlying per-device session (stats, trace, engine knobs).
+    pub fn session(&self, d: DeviceId) -> &Session {
+        &self.sessions[d.0]
+    }
+
+    /// Mutable per-device session access — the escape hatch for
+    /// device-*private* state (e.g. `Shared`/`Microcore` allocations,
+    /// service-bandwidth knobs). Device-private variables never cross
+    /// devices; only group buffers do.
+    pub fn session_mut(&mut self, d: DeviceId) -> &mut Session {
+        &mut self.sessions[d.0]
+    }
+
+    /// The group's virtual clock: the latest completion watermark across
+    /// the devices' shared timeline.
+    pub fn now(&self) -> Time {
+        self.sessions.iter().map(Session::now).max().unwrap_or(0)
+    }
+
+    /// Cross-device staging audit (module docs).
+    pub fn staging_counters(&self) -> StagingCounters {
+        self.staging
+    }
+
+    /// Aggregate cache accounting across every device's live variables —
+    /// the group-wide view of the shared host-level cache tier.
+    pub fn total_cache_counters(&self) -> CacheCounters {
+        let mut total = CacheCounters::default();
+        for s in &self.sessions {
+            total.merge(&s.total_cache_counters());
+        }
+        total
+    }
+
+    /// Launches submitted but not yet complete, summed over devices.
+    pub fn in_flight(&self) -> usize {
+        self.sessions.iter().map(Session::in_flight).sum()
+    }
+
+    /// Allocate a group buffer: one replica per device, identical
+    /// contents. Group buffers must live at the **Host level or above**
+    /// (plain [`MemPlace::Host`] or cache-fronted
+    /// [`MemPlace::Cached`]) — the staging invariant; device-private
+    /// places are allocated per device via [`GroupSession::session_mut`].
+    pub fn alloc(&mut self, spec: MemSpec) -> Result<GroupRef> {
+        match spec.place() {
+            MemPlace::Host | MemPlace::Cached(_) => {}
+            other => {
+                return Err(Error::Memory(format!(
+                    "group buffer '{}' must live at Host level or above (the staging \
+                     invariant — no device reads another device's local window); \
+                     {other:?} is device-private: allocate it on one device via \
+                     session_mut(d)",
+                    spec.name()
+                )))
+            }
+        }
+        let mut drefs = Vec::with_capacity(self.sessions.len());
+        for sess in self.sessions.iter_mut() {
+            drefs.push(sess.alloc(spec.clone())?);
+        }
+        let len = drefs[0].len;
+        let gid = self.bufs.len();
+        let n = self.sessions.len();
+        self.bufs.push(GroupBuf {
+            drefs,
+            len,
+            fresh: vec![true; n],
+            authoritative: None,
+            writer: None,
+        });
+        Ok(GroupRef { gid, offset: 0, len })
+    }
+
+    /// Resolve a group reference to one device's local view.
+    pub fn device_ref(&self, gref: GroupRef, d: DeviceId) -> Result<DataRef> {
+        let buf = self
+            .bufs
+            .get(gref.gid)
+            .ok_or_else(|| Error::Memory(format!("unknown group buffer {}", gref.gid)))?;
+        if d.0 >= self.sessions.len() {
+            return Err(Error::Coordinator(format!(
+                "device {} out of range (group has {} devices)",
+                d.0,
+                self.sessions.len()
+            )));
+        }
+        Ok(buf.drefs[d.0].slice(gref.offset, gref.len))
+    }
+
+    /// Read a group buffer's (view's) contents host-side, from the
+    /// authoritative replica, after quiescing that device's in-flight
+    /// launches touching it.
+    pub fn read(&mut self, gref: GroupRef) -> Result<Vec<f32>> {
+        let s = self.bufs[gref.gid].authoritative.unwrap_or(0);
+        let dref = self.device_ref(gref, DeviceId(s))?;
+        self.sessions[s].quiesce(dref)?;
+        self.sessions[s].read(dref)
+    }
+
+    /// Write into a group buffer host-side: every replica receives the
+    /// data (write-all coherence). A write covering the **whole** buffer
+    /// marks every replica fresh and clears the recorded writer — this is
+    /// also how a poisoned buffer (failed writer) is reset. A partial
+    /// write leaves the staleness tracking untouched (stale replicas got
+    /// the host values too, but remain stale overall). As with
+    /// [`Session::write`], ordering against in-flight launches is the
+    /// caller's via waits/quiesce.
+    pub fn write(&mut self, gref: GroupRef, off: usize, data: &[f32]) -> Result<()> {
+        for d in 0..self.sessions.len() {
+            let dref = self.device_ref(gref, DeviceId(d))?;
+            self.sessions[d].write(dref, off, data)?;
+        }
+        let buf = &mut self.bufs[gref.gid];
+        if gref.offset == 0 && off == 0 && data.len() == buf.len {
+            buf.fresh.iter_mut().for_each(|f| *f = true);
+            buf.authoritative = None;
+            buf.writer = None;
+        }
+        Ok(())
+    }
+
+    /// Compile and register a kernel on every device (one name, N
+    /// programs — each device compiles its own copy).
+    pub fn compile_kernel(&mut self, name: &str, src: &str) -> Result<()> {
+        for s in self.sessions.iter_mut() {
+            s.compile_kernel(name, src)?;
+        }
+        Ok(())
+    }
+
+    /// Begin building a group launch of the named kernel. Configure with
+    /// the usual builder surface plus [`GroupLaunchBuilder::on`]; without
+    /// `.on(..)` the launch is placed automatically on the least-occupied
+    /// device.
+    pub fn launch_named(&mut self, name: &str) -> Result<GroupLaunchBuilder<'_>> {
+        self.sessions[0].kernel(name)?; // existence check before building
+        Ok(GroupLaunchBuilder {
+            group: self,
+            kernel: name.to_string(),
+            device: None,
+            cores: None,
+            args: Vec::new(),
+            mode: TransferMode::OnDemand,
+            prefetch: None,
+            fuel: None,
+            after: Vec::new(),
+        })
+    }
+
+    /// Drive the group until `handle`'s launch completes; claim its
+    /// result or error (equivalently [`GroupHandle::wait`]).
+    pub fn wait(&mut self, handle: GroupHandle) -> Result<OffloadResult> {
+        handle.wait_inner(self)
+    }
+
+    /// Drive every device until all submitted launches complete (or
+    /// fail). Parked outcomes — including group-level `DependencyFailed`
+    /// errors — stay claimable by their handles' `wait`.
+    pub fn wait_all(&mut self) -> Result<()> {
+        for s in self.sessions.iter_mut() {
+            s.wait_all()?;
+        }
+        Ok(())
+    }
+
+    /// Quiesce every device for a group buffer: drive until no in-flight
+    /// launch on any device can touch its replica — the group-wide form
+    /// of [`Session::quiesce`].
+    pub fn quiesce(&mut self, gref: GroupRef) -> Result<()> {
+        for d in 0..self.sessions.len() {
+            let dref = self.device_ref(gref, DeviceId(d))?;
+            self.sessions[d].quiesce(dref)?;
+        }
+        Ok(())
+    }
+
+    /// Automatic placement: the device with the lowest busy-core
+    /// fraction; ties go to the lower index (deterministic).
+    fn place(&self) -> usize {
+        let mut best = 0;
+        let mut best_frac = f64::INFINITY;
+        for (i, s) in self.sessions.iter().enumerate() {
+            let frac = s.busy_cores() as f64 / s.tech().cores as f64;
+            if frac < best_frac {
+                best_frac = frac;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Make buffer `gid` fresh on device `d` (module docs: quiesce both
+    /// ends, refuse a failed writer, charge one host-level read + one
+    /// host-level write, return the copy's completion as the activation
+    /// floor).
+    fn ensure_fresh(&mut self, gid: usize, d: usize, seq: u64) -> Result<StageOutcome> {
+        if self.bufs[gid].fresh[d] {
+            return Ok(StageOutcome::Fresh);
+        }
+        let s = self.bufs[gid]
+            .authoritative
+            .expect("a stale replica implies an authoritative device");
+        let (src, dst, len) = {
+            let buf = &self.bufs[gid];
+            (buf.drefs[s], buf.drefs[d], buf.len)
+        };
+        // RAW: the writer (and everything else touching the source
+        // replica) finishes before the host-side read. WAR: in-flight
+        // readers of the destination replica finish before the overwrite.
+        self.sessions[s].quiesce(src)?;
+        self.sessions[d].quiesce(dst)?;
+        if let Some(w) = self.bufs[gid].writer {
+            let failed = w.parked
+                || self.sessions[w.device].engine().launch_failed(LaunchId::from_raw(w.id));
+            if failed {
+                return Ok(StageOutcome::Poisoned(Error::DependencyFailed {
+                    launch: seq,
+                    dep: w.id,
+                    dep_device: Some(self.sessions[w.device].tech().name.to_string()),
+                }));
+            }
+        }
+        let bytes = (len * 4) as u64;
+        // Cost levels probed through the registry *before* the accesses
+        // (engine invariant 5): a cache-fronted source resident in its
+        // shared window is charged at Shared read cost.
+        let src_level = self.sessions[s].engine().registry().access_level(src, 0, len)?;
+        let dst_level = self.sessions[d].engine().registry().access_level(dst, 0, len)?;
+        let t_src = self.sessions[s].now();
+        let read_done =
+            self.sessions[s].engine_mut().service_mut().service(t_src, src_level, bytes);
+        let t_dst = self.sessions[d].now().max(read_done);
+        let write_done =
+            self.sessions[d].engine_mut().service_mut().service(t_dst, dst_level, bytes);
+        let data = self.sessions[s].read(src)?;
+        self.sessions[d].write(dst, 0, &data)?;
+        self.staging.copies += 1;
+        self.staging.bytes += bytes;
+        self.staging.src_reads += 1;
+        self.staging.dst_writes += 1;
+        self.bufs[gid].fresh[d] = true;
+        Ok(StageOutcome::Staged(write_done))
+    }
+
+    /// Record a *submitted* launch as the writer of a buffer: its device
+    /// becomes the authoritative replica (engine semantics keep even a
+    /// failing launch's stamped effects, so the replica is the current
+    /// data either way).
+    fn record_writer(&mut self, gid: usize, d: usize, id: u64) {
+        let buf = &mut self.bufs[gid];
+        buf.authoritative = Some(d);
+        for (i, f) in buf.fresh.iter_mut().enumerate() {
+            *f = i == d;
+        }
+        buf.writer = Some(GroupWriter { device: d, id, parked: false });
+    }
+
+    /// Record a *parked* (never-submitted) launch as a buffer's failed
+    /// writer. Nothing ran, so replica contents and freshness stay
+    /// exactly as they were — only the writer slot is poisoned: a
+    /// successor that must *stage* from this buffer is abandoned in
+    /// turn, while a successor whose replica is already fresh proceeds
+    /// on the data as it is (the blocking-continue rule).
+    fn record_parked_writer(&mut self, gid: usize, d: usize, seq: u64) {
+        self.bufs[gid].writer = Some(GroupWriter { device: d, id: seq, parked: true });
+    }
+
+    /// Resolve one group argument into a device-local [`ArgSpec`].
+    fn resolve_arg(&self, a: &GroupArgSpec, d: usize) -> Result<ArgSpec> {
+        Ok(match a {
+            GroupArgSpec::Float(v) => ArgSpec::Float(*v),
+            GroupArgSpec::Int(v) => ArgSpec::Int(*v),
+            GroupArgSpec::Values(v) => ArgSpec::Values(v.clone()),
+            GroupArgSpec::Ref { gref, shard, access, prefetch } => ArgSpec::Ref {
+                dref: self.device_ref(*gref, DeviceId(d))?,
+                shard: *shard,
+                access: *access,
+                prefetch: *prefetch,
+            },
+            GroupArgSpec::PerCore { grefs, access, prefetch } => ArgSpec::PerCore {
+                drefs: grefs
+                    .iter()
+                    .map(|g| self.device_ref(*g, DeviceId(d)))
+                    .collect::<Result<Vec<_>>>()?,
+                access: *access,
+                prefetch: *prefetch,
+            },
+        })
+    }
+}
+
+/// Builder for one group launch (from [`GroupSession::launch_named`]).
+#[derive(Debug)]
+pub struct GroupLaunchBuilder<'g> {
+    group: &'g mut GroupSession,
+    kernel: String,
+    device: Option<DeviceId>,
+    cores: Option<Vec<usize>>,
+    args: Vec<GroupArgSpec>,
+    mode: TransferMode,
+    prefetch: Option<PrefetchSpec>,
+    fuel: Option<u64>,
+    after: Vec<GroupHandle>,
+}
+
+impl GroupLaunchBuilder<'_> {
+    /// Pin the launch to a device (default: automatic placement by
+    /// per-device occupancy).
+    pub fn on(mut self, device: DeviceId) -> Self {
+        self.device = Some(device);
+        self
+    }
+
+    /// Restrict to a core subset *of the chosen device* (default: all of
+    /// that device's cores). Validated at submit against the device's
+    /// [`Technology::validate_cores`] — whose message names the device.
+    pub fn cores(mut self, cores: Vec<usize>) -> Self {
+        self.cores = Some(cores);
+        self
+    }
+
+    /// Append one argument.
+    pub fn arg(mut self, arg: GroupArgSpec) -> Self {
+        self.args.push(arg);
+        self
+    }
+
+    /// Append a slice of arguments.
+    pub fn args(mut self, args: &[GroupArgSpec]) -> Self {
+        self.args.extend_from_slice(args);
+        self
+    }
+
+    /// Set the argument transfer mode.
+    pub fn mode(mut self, mode: TransferMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Set the default pre-fetch annotation (switches the mode to
+    /// [`TransferMode::Prefetch`]).
+    pub fn prefetch(mut self, spec: PrefetchSpec) -> Self {
+        self.prefetch = Some(spec);
+        self
+    }
+
+    /// Set the per-core dispatch budget.
+    pub fn fuel(mut self, fuel: u64) -> Self {
+        self.fuel = Some(fuel);
+        self
+    }
+
+    /// Add an explicit dependency edge on an earlier group launch.
+    /// Explicit edges live inside one engine, so the dependency must be
+    /// on the **same device** as this launch (cross-device ordering is
+    /// expressed by data flow — the staging copy *is* the edge). An
+    /// *unpinned* launch with explicit edges is therefore placed on its
+    /// first dependency's device rather than by occupancy; a `.on(..)`
+    /// (or a second edge) naming a different device is rejected at
+    /// submit. The edge itself is handed to the engine's launch graph
+    /// verbatim.
+    pub fn after(mut self, dep: GroupHandle) -> Self {
+        self.after.push(dep);
+        self
+    }
+
+    /// Resolve placement, stage stale cross-device inputs, and submit to
+    /// the chosen device's engine. Returns without driving any timeline
+    /// beyond the quiesces staging requires.
+    pub fn submit(self) -> Result<GroupHandle> {
+        let GroupLaunchBuilder { group, kernel, device, cores, args, mode, prefetch, fuel, after } =
+            self;
+        let d = match device {
+            Some(dev) => {
+                if dev.0 >= group.sessions.len() {
+                    return Err(Error::Coordinator(format!(
+                        "device {} out of range (group has {} devices)",
+                        dev.0,
+                        group.sessions.len()
+                    )));
+                }
+                dev.0
+            }
+            // An explicit edge pins placement: the edge lives inside one
+            // engine, so an unpinned dependent follows its dependency
+            // instead of the occupancy heuristic (which could otherwise
+            // split them across devices unpredictably).
+            None => match after.first() {
+                Some(dep) => dep.device.0,
+                None => group.place(),
+            },
+        };
+        let seq = group.next_seq;
+        group.next_seq += 1;
+
+        // The launch's group-level flow set: buffers touched, write flag
+        // OR-ed per buffer (the whole-buffer hull — module docs).
+        let mut flows: Vec<(usize, bool)> = Vec::new();
+        for a in &args {
+            for (gid, write) in a.flows() {
+                match flows.iter_mut().find(|(g, _)| *g == gid) {
+                    Some((_, w)) => *w |= write,
+                    None => flows.push((gid, write)),
+                }
+            }
+        }
+
+        // Cross-device staging (+ failure propagation) for stale inputs.
+        let mut not_before: Time = 0;
+        let mut parked: Option<Error> = None;
+        for &(gid, _) in &flows {
+            match group.ensure_fresh(gid, d, seq)? {
+                StageOutcome::Fresh => {}
+                StageOutcome::Staged(t) => not_before = not_before.max(t),
+                StageOutcome::Poisoned(e) => {
+                    parked = Some(e);
+                    break;
+                }
+            }
+        }
+
+        // Explicit same-device edges (validated against placement).
+        let mut engine_after: Vec<LaunchId> = Vec::new();
+        for dep in &after {
+            if dep.device.0 != d {
+                return Err(Error::Coordinator(format!(
+                    "explicit .after edge crosses devices ({} -> {}): cross-device \
+                     ordering comes from data flow (the staging copy is the edge)",
+                    group.sessions[dep.device.0].tech().name,
+                    group.sessions[d].tech().name,
+                )));
+            }
+            match dep.inner {
+                Some(h) => engine_after.push(h.id()),
+                // An explicit edge on a parked (never-submitted) launch
+                // abandons this one — the engine's explicit-edge rule.
+                None => {
+                    parked.get_or_insert(Error::DependencyFailed {
+                        launch: seq,
+                        dep: dep.seq,
+                        dep_device: Some(group.sessions[dep.device.0].tech().name.to_string()),
+                    });
+                }
+            }
+        }
+
+        if let Some(e) = parked {
+            group.parked.insert(seq, e);
+            // Poison this launch's outputs (writer slot only — replica
+            // contents and freshness are untouched, nothing ran) so the
+            // abandonment propagates across later *staging* edges.
+            for &(gid, write) in &flows {
+                if write {
+                    group.record_parked_writer(gid, d, seq);
+                }
+            }
+            return Ok(GroupHandle { seq, device: DeviceId(d), inner: None });
+        }
+
+        let dev_args: Vec<ArgSpec> =
+            args.iter().map(|a| group.resolve_arg(a, d)).collect::<Result<Vec<_>>>()?;
+        let mut options = OffloadOptions::default().transfer(mode).not_before(not_before);
+        if let Some(p) = prefetch {
+            options = options.prefetch(p);
+        }
+        if let Some(f) = fuel {
+            options = options.fuel(f);
+        }
+        for id in engine_after {
+            options = options.after(id);
+        }
+        let mut builder = group.sessions[d].launch_named(&kernel)?.args(&dev_args).options(options);
+        if let Some(cs) = cores {
+            builder = builder.cores(cs);
+        }
+        let h = builder.submit()?;
+        for &(gid, write) in &flows {
+            if write {
+                group.record_writer(gid, d, h.id().raw());
+            }
+        }
+        Ok(GroupHandle { seq, device: DeviceId(d), inner: Some(h) })
+    }
+}
+
+/// A claim ticket for a group launch: plain `Copy` data carrying the
+/// placement decision. Redeem with [`GroupHandle::wait`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GroupHandle {
+    seq: u64,
+    device: DeviceId,
+    inner: Option<OffloadHandle>,
+}
+
+impl GroupHandle {
+    /// The device the launch was placed on (pinned or automatic).
+    pub fn device(&self) -> DeviceId {
+        self.device
+    }
+
+    /// Drive the group until this launch completes; claim its result —
+    /// or the error that killed it, including a cross-device
+    /// [`Error::DependencyFailed`] naming the failed writer's device.
+    pub fn wait(self, group: &mut GroupSession) -> Result<OffloadResult> {
+        self.wait_inner(group)
+    }
+
+    fn wait_inner(self, group: &mut GroupSession) -> Result<OffloadResult> {
+        if let Some(e) = group.parked.remove(&self.seq) {
+            return Err(e);
+        }
+        match self.inner {
+            Some(h) => group.sessions[self.device.0].wait(h),
+            None => Err(Error::Coordinator(format!(
+                "group launch {} is unknown or already waited",
+                self.seq
+            ))),
+        }
+    }
+
+    /// Lifecycle stage on the owning device's engine; parked launches
+    /// report `Completed` (their error is ready to claim). `None` once
+    /// waited.
+    pub fn status(&self, group: &GroupSession) -> Option<LaunchStatus> {
+        if group.parked.contains_key(&self.seq) {
+            return Some(LaunchStatus::Completed);
+        }
+        self.inner.and_then(|h| h.status(&group.sessions[self.device.0]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::CacheSpec;
+
+    const SUM_SRC: &str = r#"
+def total(xs):
+    s = 0.0
+    i = 0
+    while i < len(xs):
+        s += xs[i]
+        i += 1
+    return s
+"#;
+
+    const FILL_SRC: &str = r#"
+def fill(a, v):
+    i = 0
+    while i < len(a):
+        a[i] = v + i
+        i += 1
+    return 0
+"#;
+
+    fn two_epiphanies() -> GroupSession {
+        GroupSession::builder()
+            .device(Technology::epiphany3())
+            .device(Technology::epiphany3())
+            .seed(9)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn group_needs_a_device_and_host_level_buffers() {
+        assert!(GroupSession::builder().build().is_err());
+        let mut g = two_epiphanies();
+        assert_eq!(g.devices(), 2);
+        assert!(g.alloc(MemSpec::host("a").zeroed(16)).is_ok());
+        assert!(g.alloc(MemSpec::cached("c", CacheSpec { segment_elems: 8, capacity_segments: 2 }).zeroed(16)).is_ok());
+        let err = g.alloc(MemSpec::shared("s").zeroed(16)).unwrap_err().to_string();
+        assert!(err.contains("staging invariant"), "{err}");
+        assert!(g.alloc(MemSpec::microcore("m").zeroed(8)).is_err());
+    }
+
+    #[test]
+    fn host_writes_replicate_and_reads_see_them() {
+        let mut g = two_epiphanies();
+        let a = g.alloc(MemSpec::host("a").zeroed(8)).unwrap();
+        g.write(a, 0, &[1.0; 8]).unwrap();
+        assert_eq!(g.read(a).unwrap(), vec![1.0; 8]);
+        for d in 0..2 {
+            let dref = g.device_ref(a, DeviceId(d)).unwrap();
+            assert_eq!(g.session(DeviceId(d)).read(dref).unwrap(), vec![1.0; 8]);
+        }
+        // Slices compose like DataRef slices.
+        assert_eq!(a.slice(2, 3).len(), 3);
+    }
+
+    #[test]
+    fn pinned_placement_and_auto_placement_by_occupancy() {
+        let mut g = two_epiphanies();
+        let a = g.alloc(MemSpec::host("a").zeroed(32)).unwrap();
+        g.compile_kernel("total", SUM_SRC).unwrap();
+        // Pinned on device 1.
+        let h1 = g
+            .launch_named("total")
+            .unwrap()
+            .arg(GroupArgSpec::sharded(a))
+            .on(DeviceId(1))
+            .cores((0..4).collect())
+            .submit()
+            .unwrap();
+        assert_eq!(h1.device(), DeviceId(1));
+        // Automatic: device 1 has busy cores, device 0 is idle.
+        let h2 = g
+            .launch_named("total")
+            .unwrap()
+            .arg(GroupArgSpec::sharded(a))
+            .cores((0..4).collect())
+            .submit()
+            .unwrap();
+        assert_eq!(h2.device(), DeviceId(0), "least-occupied device wins");
+        h1.wait(&mut g).unwrap();
+        h2.wait(&mut g).unwrap();
+        assert_eq!(g.in_flight(), 0);
+    }
+
+    #[test]
+    fn cross_device_read_after_write_stages_once_and_sees_values() {
+        let mut g = two_epiphanies();
+        let a = g.alloc(MemSpec::host("a").zeroed(32)).unwrap();
+        g.compile_kernel("fill", FILL_SRC).unwrap();
+        g.compile_kernel("total", SUM_SRC).unwrap();
+        let w = g
+            .launch_named("fill")
+            .unwrap()
+            .args(&[GroupArgSpec::sharded_mut(a), GroupArgSpec::Float(1.0)])
+            .on(DeviceId(0))
+            .cores((0..4).collect())
+            .submit()
+            .unwrap();
+        let r = g
+            .launch_named("total")
+            .unwrap()
+            .arg(GroupArgSpec::sharded(a))
+            .on(DeviceId(1))
+            .cores((0..4).collect())
+            .submit()
+            .unwrap();
+        let rw = w.wait(&mut g).unwrap();
+        let rr = r.wait(&mut g).unwrap();
+        let sum: f64 = rr.reports.iter().map(|c| c.value.as_f64().unwrap()).sum();
+        // fill writes (1 + i) per shard-local index i: 4 shards of 8.
+        assert_eq!(sum, 4.0 * (8.0 + (0..8).sum::<i64>() as f64));
+        let st = g.staging_counters();
+        assert_eq!((st.copies, st.src_reads, st.dst_writes), (1, 1, 1));
+        assert_eq!(st.bytes, 32 * 4);
+        assert!(rr.launched_at >= rw.finished_at, "reader floored past the staged copy");
+        // Re-running on the reader's device needs no second copy.
+        let r2 = g
+            .launch_named("total")
+            .unwrap()
+            .arg(GroupArgSpec::sharded(a))
+            .on(DeviceId(1))
+            .cores((0..4).collect())
+            .submit()
+            .unwrap();
+        r2.wait(&mut g).unwrap();
+        assert_eq!(g.staging_counters().copies, 1, "replica is fresh now");
+    }
+
+    #[test]
+    fn cross_device_explicit_after_is_rejected() {
+        let mut g = two_epiphanies();
+        let a = g.alloc(MemSpec::host("a").zeroed(16)).unwrap();
+        g.compile_kernel("total", SUM_SRC).unwrap();
+        let h = g
+            .launch_named("total")
+            .unwrap()
+            .arg(GroupArgSpec::sharded(a))
+            .on(DeviceId(0))
+            .cores((0..2).collect())
+            .submit()
+            .unwrap();
+        let err = g
+            .launch_named("total")
+            .unwrap()
+            .arg(GroupArgSpec::sharded(a))
+            .on(DeviceId(1))
+            .after(h)
+            .submit()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("crosses devices"), "{err}");
+        // Unpinned, the dependent follows its dependency's device instead
+        // of the occupancy heuristic (which would otherwise pick the idle
+        // device 1 and make the edge spuriously cross devices).
+        let follower = g
+            .launch_named("total")
+            .unwrap()
+            .arg(GroupArgSpec::sharded(a))
+            .cores((4..8).collect())
+            .after(h)
+            .submit()
+            .unwrap();
+        assert_eq!(follower.device(), DeviceId(0));
+        h.wait(&mut g).unwrap();
+        follower.wait(&mut g).unwrap();
+    }
+}

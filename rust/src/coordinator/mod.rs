@@ -28,9 +28,18 @@
 //! * **Sharding** ([`shard`]) — the multi-core offload planner: an
 //!   explicit partition of a variable over N cores (block or block-cyclic
 //!   with gather/scatter staging and write-back merge), the ownership
-//!   model every later scaling layer builds on.
+//!   model every later scaling layer builds on. [`ShardPlan::across_devices`]
+//!   splits a shard set over a device group proportionally to core counts.
+//! * **Multi-device plans** ([`group`]) — a [`DeviceGroup`] owns one
+//!   engine per attached technology on a shared virtual timeline;
+//!   launches place explicitly (`.on(device)`) or automatically by
+//!   per-device occupancy, and cross-device data flow becomes inferred
+//!   edges plus host-level staging copies (no device ever reads another
+//!   device's local window directly), so the launch graph — edges,
+//!   failure propagation, quiesce — spans heterogeneous devices.
 
 pub mod engine;
+pub mod group;
 pub mod marshal;
 pub mod offload;
 pub mod prefetch;
@@ -39,6 +48,7 @@ pub mod session;
 pub mod shard;
 
 pub use engine::{Engine, EngineStats, LaunchId, LaunchStatus, OffloadOutcome, QueueStats};
+pub use group::{DeviceGroup, DeviceId, GroupArgSpec, GroupHandle, GroupLaunchBuilder, GroupRef, GroupSession};
 pub use marshal::{ArgSpec, BoundArg, PrefetchChoice};
 pub use offload::{Kernel, KernelRegistry, OffloadOptions, OffloadResult};
 pub use prefetch::{PrefetchSpec, PrefetchState};

@@ -119,6 +119,14 @@ pub struct OffloadOptions {
     /// gets §3.3's weak cross-launch memory model
     /// (`LaunchBuilder::independent`).
     pub flow_deps: bool,
+    /// Earliest virtual time the launch may activate, regardless of core
+    /// availability (default 0 = no floor). This is how an *external*
+    /// dependency enters the graph: the multi-device group charges its
+    /// host-level staging copies on the service timelines and passes the
+    /// copy's completion time here, so a cross-device dependent launch
+    /// activates no earlier than the staged data's arrival — exactly like
+    /// an in-engine edge raising `dep_ready`.
+    pub not_before: Time,
 }
 
 impl Default for OffloadOptions {
@@ -130,6 +138,7 @@ impl Default for OffloadOptions {
             fuel: 2_000_000_000,
             after: Vec::new(),
             flow_deps: true,
+            not_before: 0,
         }
     }
 }
@@ -170,6 +179,13 @@ impl OffloadOptions {
     /// Opt out of inferred data-flow dependency edges for this launch.
     pub fn independent(mut self) -> Self {
         self.flow_deps = false;
+        self
+    }
+
+    /// Floor the activation time (external-dependency edge — see the
+    /// field docs on [`OffloadOptions::not_before`]).
+    pub fn not_before(mut self, at: Time) -> Self {
+        self.not_before = at;
         self
     }
 }

@@ -404,6 +404,13 @@ impl Session {
         self.engine.in_flight()
     }
 
+    /// Physical cores currently reserved or occupied by in-flight
+    /// launches — the occupancy signal the multi-device group's automatic
+    /// placement reads.
+    pub fn busy_cores(&self) -> usize {
+        self.engine.busy_cores()
+    }
+
     /// Per-stage breakdown of the launch table: blocked on dependency
     /// edges vs queued on core contention vs active vs
     /// completed-unclaimed — so a caller can tell *why* nothing is

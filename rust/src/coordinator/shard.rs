@@ -154,6 +154,53 @@ impl ShardPlan {
         self.assignments.len()
     }
 
+    /// Split `base` over a *device group* proportionally to per-device
+    /// core counts, then partition each device's slice over its cores
+    /// under `policy` — the device-aware decomposition a
+    /// [`crate::coordinator::GroupSession`] schedules one slice-plan per
+    /// device from. Device `i` receives a contiguous slice of
+    /// `⌊len·Σcounts[..=i]/Σcounts⌋ − ⌊len·Σcounts[..i]/Σcounts⌋`
+    /// elements (floor-of-cumulative-share, so the slices are disjoint,
+    /// cover `base` exactly once, and each is within one element of its
+    /// exact proportional share). A 16-core Epiphany paired with an
+    /// 8-core MicroBlaze therefore takes two thirds of the data.
+    pub fn across_devices(
+        base: DataRef,
+        core_counts: &[usize],
+        policy: ShardPolicy,
+    ) -> Result<Vec<ShardPlan>> {
+        Self::device_split(base, core_counts)?
+            .into_iter()
+            .zip(core_counts)
+            .map(|(slice, &cores)| ShardPlan::new(slice, cores, policy))
+            .collect()
+    }
+
+    /// The per-device contiguous slices behind
+    /// [`ShardPlan::across_devices`] (exposed for drivers that stage the
+    /// slices themselves).
+    pub fn device_split(base: DataRef, core_counts: &[usize]) -> Result<Vec<DataRef>> {
+        if core_counts.is_empty() {
+            return Err(Error::Coordinator("device split requires at least one device".into()));
+        }
+        if core_counts.iter().any(|&c| c == 0) {
+            return Err(Error::Coordinator(
+                "device split requires every device to contribute at least one core".into(),
+            ));
+        }
+        let total: usize = core_counts.iter().sum();
+        let mut out = Vec::with_capacity(core_counts.len());
+        let mut cum = 0usize;
+        let mut prev_end = 0usize;
+        for &c in core_counts {
+            cum += c;
+            let end = base.len * cum / total;
+            out.push(base.slice(prev_end, end - prev_end));
+            prev_end = end;
+        }
+        Ok(out)
+    }
+
     /// Run `kernel` with this plan's shard as the **first** kernel
     /// argument (`extra` args follow it), on the cores named by
     /// `options.cores` (default: all device cores; the count must match
@@ -330,6 +377,45 @@ mod tests {
         let plan = ShardPlan::new(base(3), 5, ShardPolicy::Block).unwrap();
         assert_exact_cover(&plan, 3);
         assert_eq!(plan.assignments()[4].elems(), 0);
+    }
+
+    #[test]
+    fn device_split_is_proportional_and_covers_exactly() {
+        // 16-core Epiphany + 8-core MicroBlaze: 2:1 split.
+        let slices = ShardPlan::device_split(base(3600), &[16, 8]).unwrap();
+        assert_eq!(slices.len(), 2);
+        assert_eq!(slices[0].len, 2400);
+        assert_eq!(slices[1].len, 1200);
+        assert_eq!(slices[0].offset, 0);
+        assert_eq!(slices[1].offset, 2400, "contiguous, disjoint");
+        // Rounding: slices stay within one element of the exact share.
+        let slices = ShardPlan::device_split(base(100), &[3, 7]).unwrap();
+        assert_eq!(slices[0].len + slices[1].len, 100, "exact cover");
+        assert!((slices[0].len as f64 - 30.0).abs() <= 1.0);
+        // Degenerate inputs rejected.
+        assert!(ShardPlan::device_split(base(10), &[]).is_err());
+        assert!(ShardPlan::device_split(base(10), &[4, 0]).is_err());
+    }
+
+    #[test]
+    fn across_devices_builds_one_plan_per_device() {
+        let plans =
+            ShardPlan::across_devices(base(3600), &[16, 8], ShardPolicy::Block).unwrap();
+        assert_eq!(plans.len(), 2);
+        assert_eq!(plans[0].cores(), 16);
+        assert_eq!(plans[1].cores(), 8);
+        assert_exact_cover(&plans[0], 2400);
+        // Device 1's plan partitions the *slice* (offsets are view-local).
+        assert_eq!(plans[1].base().offset, 2400);
+        assert_eq!(plans[1].assignments().iter().map(ShardAssignment::elems).sum::<usize>(), 1200);
+        // Composes with block-cyclic too.
+        let plans = ShardPlan::across_devices(
+            base(300),
+            &[2, 1],
+            ShardPolicy::BlockCyclic { block_elems: 10 },
+        )
+        .unwrap();
+        assert!(!plans[0].assignments()[0].is_contiguous());
     }
 
     #[test]

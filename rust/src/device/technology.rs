@@ -196,18 +196,21 @@ impl Technology {
     /// Validate a physical core-id selection against this device: every id
     /// in range, no id listed twice. The single source of the uniform
     /// error message used by the session launch path, the engine's submit
-    /// queue and the shard planner.
+    /// queue and the shard planner. Messages name the technology: once a
+    /// device group holds an Epiphany *and* a MicroBlaze, "core 12 out of
+    /// range" alone does not say which device rejected the selection.
     pub fn validate_cores(&self, cores: &[usize]) -> Result<()> {
         for (i, &id) in cores.iter().enumerate() {
             if id >= self.cores {
                 return Err(Error::Coordinator(format!(
-                    "core {id} out of range (device has {} cores)",
-                    self.cores
+                    "core {id} out of range (device {} has {} cores)",
+                    self.name, self.cores
                 )));
             }
             if cores[..i].contains(&id) {
                 return Err(Error::Coordinator(format!(
-                    "core {id} selected more than once in {cores:?}"
+                    "core {id} selected more than once in {cores:?} on device {}",
+                    self.name
                 )));
             }
         }
@@ -297,8 +300,12 @@ mod tests {
         assert!(t.validate_cores(&[]).is_ok(), "empty selection is the caller's concern");
         let err = t.validate_cores(&[3, 16]).unwrap_err().to_string();
         assert!(err.contains("out of range"), "{err}");
+        assert!(err.contains("Epiphany-III"), "names the device: {err}");
         let err = t.validate_cores(&[2, 7, 2]).unwrap_err().to_string();
         assert!(err.contains("more than once"), "{err}");
+        assert!(err.contains("Epiphany-III"), "names the device: {err}");
+        let err = Technology::microblaze_fpu().validate_cores(&[8]).unwrap_err().to_string();
+        assert!(err.contains("MicroBlaze+FPU"), "{err}");
     }
 
     #[test]

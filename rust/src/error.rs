@@ -34,6 +34,11 @@ pub enum Error {
         launch: u64,
         /// The direct dependency that failed (itself possibly abandoned).
         dep: u64,
+        /// Technology name of the device the failed dependency ran on —
+        /// `None` for same-device edges (the common case), `Some` when a
+        /// multi-device group propagates a failure across a cross-device
+        /// staging edge, where "launch 3" alone would be ambiguous.
+        dep_device: Option<String>,
     },
     /// PJRT runtime errors (artifact missing, shape mismatch, XLA failure).
     Runtime(String),
@@ -58,10 +63,13 @@ impl fmt::Display for Error {
             Error::Memory(m) => write!(f, "memory error: {m}"),
             Error::Channel(m) => write!(f, "channel error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
-            Error::DependencyFailed { launch, dep } => write!(
-                f,
-                "launch {launch} abandoned: dependency launch {dep} failed"
-            ),
+            Error::DependencyFailed { launch, dep, dep_device } => {
+                write!(f, "launch {launch} abandoned: dependency launch {dep} failed")?;
+                if let Some(d) = dep_device {
+                    write!(f, " on device {d}")?;
+                }
+                Ok(())
+            }
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
@@ -105,6 +113,19 @@ mod tests {
         let s = e.to_string();
         assert!(s.contains("core 3"));
         assert!(s.contains("4096"));
+    }
+
+    #[test]
+    fn dependency_failed_names_the_device_when_present() {
+        let e = Error::DependencyFailed { launch: 4, dep: 2, dep_device: None };
+        assert!(e.to_string().contains("dependency launch 2 failed"), "{e}");
+        let e = Error::DependencyFailed {
+            launch: 4,
+            dep: 2,
+            dep_device: Some("MicroBlaze+FPU".into()),
+        };
+        let s = e.to_string();
+        assert!(s.contains("dependency launch 2 failed on device MicroBlaze+FPU"), "{s}");
     }
 
     #[test]

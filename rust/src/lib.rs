@@ -34,9 +34,13 @@
 //!   dependent chain needs no waits while non-conflicting launches
 //!   pipeline on the shared virtual timeline), argument marshalling
 //!   (eager copy vs by-reference), the pre-fetch engine, request
-//!   servicing, device-resident data management, and the sharded offload
+//!   servicing, device-resident data management, the sharded offload
 //!   planner ([`coordinator::ShardPlan`]: block / block-cyclic
-//!   decomposition with write-back merge).
+//!   decomposition with write-back merge, plus device-proportional
+//!   splits), and multi-device plans ([`coordinator::GroupSession`]: one
+//!   engine per technology, `.on(device)` placement, cross-device
+//!   host-level staging — one launch graph spanning an Epiphany and a
+//!   MicroBlaze at once).
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`) that carry the numeric hot path.
 //! * [`workloads`] — the paper's benchmarks: the lung-scan neural-network

@@ -32,6 +32,7 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
         "hierarchical-memory offload for micro-core architectures (JPDC'20 reproduction)",
     )
     .opt("tech", Some("epiphany"), "technology preset (epiphany|microblaze|microblaze+fpu|cortex-a9)")
+    .opt("tech2", Some("microblaze+fpu"), "second device for --hetero (same presets)")
     .opt("mode", Some("prefetch"), "transfer mode (eager|on-demand|prefetch)")
     .opt("images", Some("4"), "images for mlbench")
     .opt("pixels", None, "override image pixels for mlbench")
@@ -42,6 +43,7 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
     .flag("full", "full-size image regime for mlbench")
     .flag("cache", "front the mlbench image store with the shared-window cache")
     .flag("pipeline", "mlbench: train two replicas on disjoint core halves, comparing blocking vs pipelined launches")
+    .flag("hetero", "mlbench: feed-forward on --tech, grad/upd on --tech2 through a multi-device group")
     .flag("trace", "print the event trace after a run");
 
     let Some(args) = cli.parse(argv)? else {
@@ -108,6 +110,69 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
                     .ok_or_else(|| anyhow::anyhow!("bad --mode"))?,
             };
             let seed: u64 = args.parse_as("seed")?;
+            if args.is_set("hetero") {
+                // The multi-device showcase: one launch graph spanning two
+                // technologies — feed-forward on --tech, grad/upd on
+                // --tech2, weights staged host-level between them; losses
+                // bit-identical to the single-device blocking reference.
+                let tech2 = Technology::by_name(args.req("tech2")?).ok_or_else(|| {
+                    anyhow::anyhow!("unknown technology '{}'", args.req("tech2").unwrap())
+                })?;
+                let images: usize = args.parse_as("images")?;
+                let epochs: usize =
+                    args.get("epochs").map(|e| e.parse()).transpose()?.unwrap_or(1);
+                let hetero = mlbench::hetero_mlbench(
+                    tech.clone(),
+                    Some(tech2.clone()),
+                    seed,
+                    mode,
+                    images,
+                    epochs,
+                )?;
+                // The reference must share the heterogeneous run's shard
+                // structure — min(cores, cores) shards — so the
+                // single-device pass runs on whichever technology has the
+                // fewer cores (bit-identical losses are only defined for
+                // identical shard counts).
+                let ref_tech =
+                    if tech.cores <= tech2.cores { tech.clone() } else { tech2.clone() };
+                let single =
+                    mlbench::hetero_mlbench(ref_tech.clone(), None, seed, mode, images, epochs)?;
+                let mut t = Table::new(
+                    format!(
+                        "Heterogeneous mlbench — ff on {}, grad/upd on {} ({} shards, {})",
+                        tech.name,
+                        tech2.name,
+                        tech.cores.min(tech2.cores),
+                        mode.name()
+                    ),
+                    &["variant", "total (ms, virtual)", "staging copies"],
+                );
+                t.row(&[
+                    format!("2 devices ({} + {})", tech.name, tech2.name),
+                    ms(hetero.elapsed),
+                    hetero.staging.copies.to_string(),
+                ]);
+                t.row(&[
+                    format!("1 device reference ({})", ref_tech.name),
+                    ms(single.elapsed),
+                    single.staging.copies.to_string(),
+                ]);
+                print!("{}", t.render());
+                print!(
+                    "{}",
+                    microcore::metrics::report::staging_table(
+                        "cross-device staging",
+                        &hetero.staging
+                    )
+                    .render()
+                );
+                println!(
+                    "losses bit-identical to the single-device reference: {}",
+                    hetero.losses == single.losses
+                );
+                return Ok(());
+            }
             if args.is_set("pipeline") {
                 // The launch-graph showcase: identical kernels and
                 // numerics, blocking vs pipelined control flow — ordering

@@ -125,6 +125,19 @@ pub fn cache_table(title: impl Into<String>, c: &crate::sim::CacheCounters) -> T
     t
 }
 
+/// Render a one-row cross-device staging audit table (multi-device
+/// groups; see [`crate::sim::StagingCounters`]).
+pub fn staging_table(title: impl Into<String>, s: &crate::sim::StagingCounters) -> Table {
+    let mut t = Table::new(title, &["copies", "KB staged", "host reads", "host writes"]);
+    t.row(&[
+        s.copies.to_string(),
+        format!("{:.1}", s.bytes as f64 / 1024.0),
+        s.src_reads.to_string(),
+        s.dst_writes.to_string(),
+    ]);
+    t
+}
+
 /// Format a float with 3 decimals.
 pub fn f3(v: f64) -> String {
     format!("{v:.3}")

@@ -17,7 +17,7 @@ pub mod timeline;
 pub mod trace;
 
 pub use rng::Rng;
-pub use stats::{CacheCounters, Histogram, OnlineStats};
+pub use stats::{CacheCounters, Histogram, OnlineStats, StagingCounters};
 pub use timeline::{Resource, Timeline};
 pub use trace::{Trace, TraceEvent};
 

@@ -163,6 +163,50 @@ impl CacheCounters {
     }
 }
 
+/// Cross-device staging accounting for a multi-device group
+/// ([`crate::coordinator::GroupSession`]).
+///
+/// Every copy crosses at the host level (the staging invariant: no device
+/// ever reads another device's local window directly), so each staged
+/// buffer is exactly one host-level read on the source device's service
+/// plus one host-level write on the destination device's service —
+/// `src_reads` and `dst_writes` audit that 1:1:1 relationship against
+/// `copies`. Levels are probed through `MemRegistry::access_level`, so a
+/// cache-fronted source resident in its shared window is charged at
+/// `Shared` read cost (the counters still record it as one staging read).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StagingCounters {
+    /// Buffers copied between devices.
+    pub copies: u64,
+    /// Bytes moved by staging copies.
+    pub bytes: u64,
+    /// Host-level (or cache-refined) reads charged on source devices.
+    pub src_reads: u64,
+    /// Host-level writes charged on destination devices.
+    pub dst_writes: u64,
+}
+
+impl StagingCounters {
+    /// Fold another counter set into this one.
+    pub fn merge(&mut self, other: &StagingCounters) {
+        self.copies += other.copies;
+        self.bytes += other.bytes;
+        self.src_reads += other.src_reads;
+        self.dst_writes += other.dst_writes;
+    }
+
+    /// The activity since `earlier` (a prior snapshot): per-field
+    /// saturating difference, mirroring [`CacheCounters::since`].
+    pub fn since(&self, earlier: &StagingCounters) -> StagingCounters {
+        StagingCounters {
+            copies: self.copies.saturating_sub(earlier.copies),
+            bytes: self.bytes.saturating_sub(earlier.bytes),
+            src_reads: self.src_reads.saturating_sub(earlier.src_reads),
+            dst_writes: self.dst_writes.saturating_sub(earlier.dst_writes),
+        }
+    }
+}
+
 /// Log2-bucketed histogram over `u64` magnitudes (latencies in ns, sizes in
 /// bytes). Bucket `i` holds values in `[2^i, 2^(i+1))`; bucket 0 holds 0–1.
 #[derive(Debug, Clone)]
@@ -317,6 +361,16 @@ mod tests {
         assert_eq!((d.hits, d.misses), (3, 1), "delta recovers the pre-merge half");
         assert_eq!(d.evictions, 0);
         assert_eq!(b.since(&a), CacheCounters::default(), "saturates, never underflows");
+    }
+
+    #[test]
+    fn staging_counters_merge_and_since() {
+        let mut a = StagingCounters { copies: 2, bytes: 512, src_reads: 2, dst_writes: 2 };
+        let b = StagingCounters { copies: 1, bytes: 128, src_reads: 1, dst_writes: 1 };
+        a.merge(&b);
+        assert_eq!(a, StagingCounters { copies: 3, bytes: 640, src_reads: 3, dst_writes: 3 });
+        assert_eq!(a.since(&b), StagingCounters { copies: 2, bytes: 512, src_reads: 2, dst_writes: 2 });
+        assert_eq!(b.since(&a), StagingCounters::default(), "saturates");
     }
 
     #[test]

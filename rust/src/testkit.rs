@@ -46,6 +46,20 @@ impl Gen {
     pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
         &items[self.usize(0, items.len())]
     }
+
+    /// `k` distinct values from `[lo, hi)`, ascending (e.g. a random core
+    /// subset in id order).
+    pub fn distinct(&mut self, lo: usize, hi: usize, k: usize) -> Vec<usize> {
+        assert!(hi > lo && k <= hi - lo);
+        let mut pool: Vec<usize> = (lo..hi).collect();
+        let mut out = Vec::with_capacity(k);
+        for _ in 0..k {
+            let i = self.usize(0, pool.len());
+            out.push(pool.swap_remove(i));
+        }
+        out.sort_unstable();
+        out
+    }
 }
 
 /// Outcome of a single property case.
@@ -74,6 +88,148 @@ pub fn check(name: &str, base_seed: u64, n: usize, mut prop: impl FnMut(&mut Gen
             "property '{name}' failed (seed {seed:#x}): {msg}\n\
              deterministic re-run: {confirm:?}"
         );
+    }
+}
+
+/// Seeded generator of arbitrary launch DAGs, plus the pure-data oracle
+/// for the launch graph's two core invariants (`tests/properties.rs`
+/// drives real sessions from these specs):
+///
+/// * **blocking ≡ wait-free** — a fully serialized DAG (every launch
+///   carries an explicit edge to its predecessor) must execute
+///   bit-identically with and without intervening waits;
+/// * **failure propagation** — `DependencyFailed` must reach *exactly*
+///   the transitive dependents of a failed launch, computed here from
+///   the same edge rules the engine uses (explicit `.after` edges plus
+///   data-flow inference: same buffer, overlapping windows, ≥ 1 writer).
+pub mod dag {
+    use super::Gen;
+
+    /// Which kernel a generated launch runs.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum DagKernel {
+        /// Reads its window (read-only sharded reference).
+        Reader,
+        /// Increments every element of its window (mutable sharded
+        /// reference — the launch's write set).
+        Writer,
+        /// Injected failure: writes through a read-only reference, which
+        /// the engine rejects with a typed error on every core.
+        Boom,
+    }
+
+    /// One generated launch.
+    #[derive(Debug, Clone)]
+    pub struct DagLaunch {
+        /// Random core subset (ascending, non-empty).
+        pub cores: Vec<usize>,
+        /// Kernel choice.
+        pub kernel: DagKernel,
+        /// Which generated buffer the single reference argument opens.
+        pub buf: usize,
+        /// `(offset, len)` window into the buffer (len ≥ 1); windows of
+        /// different launches overlap or stay disjoint at random.
+        pub window: (usize, usize),
+        /// Explicit `.after` edges (indices of earlier launches).
+        pub after: Vec<usize>,
+    }
+
+    impl DagLaunch {
+        /// Whether the launch's flow set carries a write (Boom binds its
+        /// reference read-only, so it flows as a reader).
+        pub fn writes(&self) -> bool {
+            matches!(self.kernel, DagKernel::Writer)
+        }
+    }
+
+    /// A generated launch DAG over a set of host buffers.
+    #[derive(Debug, Clone)]
+    pub struct DagSpec {
+        /// Element count of each generated buffer.
+        pub buf_lens: Vec<usize>,
+        /// Launches in submission order.
+        pub launches: Vec<DagLaunch>,
+    }
+
+    /// Generator knobs.
+    #[derive(Debug, Clone, Copy)]
+    pub struct DagConfig {
+        /// Upper bound on generated launches (≥ 2 are always generated).
+        pub max_launches: usize,
+        /// Device core count the random core subsets draw from.
+        pub device_cores: usize,
+        /// Force a total order: every launch gets an explicit edge to its
+        /// immediate predecessor (the regime where wait-free must be
+        /// bit-identical to blocking — unordered launches legitimately
+        /// pipeline to *different, lower* virtual times).
+        pub serialize: bool,
+        /// Inject `Boom` launches (~1 in 5).
+        pub failures: bool,
+    }
+
+    /// Generate one DAG from the seeded generator.
+    pub fn gen_dag(g: &mut Gen, cfg: &DagConfig) -> DagSpec {
+        let nbufs = g.usize(1, 4);
+        let buf_lens: Vec<usize> = (0..nbufs).map(|_| g.usize(8, 33)).collect();
+        let n = g.usize(2, cfg.max_launches.max(2) + 1);
+        let mut launches = Vec::with_capacity(n);
+        for i in 0..n {
+            let k = g.usize(1, cfg.device_cores.min(4) + 1);
+            let cores = g.distinct(0, cfg.device_cores, k);
+            let kernel = if cfg.failures && g.bool(0.2) {
+                DagKernel::Boom
+            } else if g.bool(0.45) {
+                DagKernel::Writer
+            } else {
+                DagKernel::Reader
+            };
+            let buf = g.usize(0, nbufs);
+            let len = buf_lens[buf];
+            let off = g.usize(0, len);
+            let wlen = 1 + g.usize(0, len - off);
+            let mut after: Vec<usize> = (0..i).filter(|_| g.bool(0.25)).collect();
+            if cfg.serialize && i > 0 && !after.contains(&(i - 1)) {
+                after.push(i - 1);
+            }
+            launches.push(DagLaunch { cores, kernel, buf, window: (off, wlen), after });
+        }
+        DagSpec { buf_lens, launches }
+    }
+
+    impl DagSpec {
+        /// Dependency edges launch `i` carries in a wait-free submission
+        /// (everything still in flight at submit): the explicit `.after`
+        /// list plus inferred data-flow edges — same buffer, overlapping
+        /// windows, at least one writer — mirroring the engine's
+        /// inference over hulled flow spans.
+        pub fn edges(&self, i: usize) -> Vec<usize> {
+            let li = &self.launches[i];
+            let mut deps = li.after.clone();
+            for (j, lj) in self.launches[..i].iter().enumerate() {
+                if lj.buf == li.buf {
+                    let (a0, al) = li.window;
+                    let (b0, bl) = lj.window;
+                    if a0 < b0 + bl && b0 < a0 + al && (li.writes() || lj.writes()) {
+                        deps.push(j);
+                    }
+                }
+            }
+            deps.sort_unstable();
+            deps.dedup();
+            deps
+        }
+
+        /// The oracle: which launches must fail in a wait-free run —
+        /// `Boom` launches, plus (transitively) every launch with an edge
+        /// onto a failed one.
+        pub fn expected_failed(&self) -> Vec<bool> {
+            let mut failed = vec![false; self.launches.len()];
+            for i in 0..self.launches.len() {
+                failed[i] = matches!(self.launches[i].kernel, DagKernel::Boom)
+                    || self.edges(i).iter().any(|&d| failed[d]);
+            }
+            failed
+        }
     }
 }
 
@@ -124,6 +280,51 @@ mod tests {
         assert!(assert_allclose(&[1.0, 2.0], &[1.0, 2.0], 1e-6, "x").is_ok());
         assert!(assert_allclose(&[1.0], &[1.1], 1e-3, "x").is_err());
         assert!(assert_allclose(&[1.0], &[1.0, 2.0], 1e-3, "x").is_err());
+    }
+
+    #[test]
+    fn distinct_is_distinct_sorted_in_range() {
+        let mut g = Gen { rng: Rng::new(11) };
+        for _ in 0..200 {
+            let k = g.usize(1, 9);
+            let v = g.distinct(0, 16, k);
+            assert_eq!(v.len(), k);
+            assert!(v.windows(2).all(|w| w[0] < w[1]), "{v:?}");
+            assert!(v.iter().all(|&x| x < 16));
+        }
+    }
+
+    #[test]
+    fn dag_generator_produces_valid_specs_and_oracle() {
+        use super::dag::{gen_dag, DagConfig, DagKernel};
+        let mut g = Gen { rng: Rng::new(5) };
+        let cfg = DagConfig { max_launches: 6, device_cores: 16, serialize: true, failures: true };
+        for _ in 0..100 {
+            let spec = gen_dag(&mut g, &cfg);
+            assert!(spec.launches.len() >= 2);
+            for (i, l) in spec.launches.iter().enumerate() {
+                assert!(!l.cores.is_empty());
+                assert!(l.cores.iter().all(|&c| c < 16));
+                let (off, len) = l.window;
+                assert!(len >= 1 && off + len <= spec.buf_lens[l.buf]);
+                assert!(l.after.iter().all(|&d| d < i), "edges point backwards");
+                // Serialized: the chain edge is always present.
+                if i > 0 {
+                    assert!(spec.edges(i).contains(&(i - 1)));
+                }
+            }
+            // Oracle sanity: every Boom is failed; failure is monotone
+            // along edges.
+            let failed = spec.expected_failed();
+            for (i, l) in spec.launches.iter().enumerate() {
+                if matches!(l.kernel, DagKernel::Boom) {
+                    assert!(failed[i]);
+                }
+                if spec.edges(i).iter().any(|&d| failed[d]) {
+                    assert!(failed[i]);
+                }
+            }
+        }
     }
 
     #[test]

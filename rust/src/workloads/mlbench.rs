@@ -63,13 +63,13 @@
 //! the control side does.
 
 use crate::coordinator::{
-    Access, ArgSpec, OffloadHandle, OffloadOptions, OffloadResult, PrefetchChoice, PrefetchSpec,
-    Session, TransferMode,
+    Access, ArgSpec, DeviceId, GroupArgSpec, GroupLaunchBuilder, GroupSession, OffloadHandle,
+    OffloadOptions, OffloadResult, PrefetchChoice, PrefetchSpec, Session, TransferMode,
 };
 use crate::device::Technology;
 use crate::error::{Error, Result};
 use crate::memory::{CacheSpec, DataRef, MemSpec};
-use crate::sim::{CacheCounters, Rng, Time};
+use crate::sim::{CacheCounters, Rng, StagingCounters, Time};
 
 use super::scans::ScanGenerator;
 
@@ -882,6 +882,214 @@ pub fn single_replica_epochs(
         losses.push(head.loss);
     }
     Ok(SingleReplicaOutcome { elapsed: session.now() - t0, losses })
+}
+
+/// Outcome of a [`hetero_mlbench`] run.
+#[derive(Debug, Clone)]
+pub struct HeteroOutcome {
+    /// Total virtual time of the whole epochs loop (group clock).
+    pub elapsed: Time,
+    /// Loss trajectory, one entry per processed image (`images × epochs`).
+    pub losses: Vec<f32>,
+    /// Cross-device staging audit (all-zero in the single-device
+    /// reference configuration).
+    pub staging: StagingCounters,
+}
+
+/// Train one model with its phases split across **heterogeneous
+/// devices**: feed-forward on `tech_ff`, combine-gradients and model
+/// update on `tech_bwd` — e.g. ff on the Epiphany-III (the FLOP-rich
+/// device) while the MicroBlaze applies gradients. `tech_bwd = None` is
+/// the **single-device blocking reference**: the identical code path
+/// with both phases on `tech_ff` and no cross-device staging. Losses
+/// compare bit-for-bit only between runs with the same shard count, so
+/// build the reference for a heterogeneous pair by passing the
+/// *smaller-core* technology as `tech_ff` (its core count is the pair's
+/// `min`).
+///
+/// The shard structure is shared between the phases (one weight/gradient
+/// shard per logical core slot), so the shard count is
+/// `min(tech_ff.cores, tech_bwd.cores)`; weights, gradients and the
+/// staged image set live in **group buffers** (Host level on every
+/// device — the staging invariant), and the only cross-device flow is
+/// the weights: `upd(i)` writes them on the backward device, `ff(i+1)`
+/// reads them on the feed-forward device, so the group stages exactly
+/// `shards × (images × epochs − 1)` host-level copies
+/// ([`HeteroOutcome::staging`]).
+///
+/// Content generation mirrors the single-device [`MlBench`] driver draw
+/// for draw (per-shard weight inits, then the head weights, images from
+/// the same [`ScanGenerator`]), and every phase runs the same kernels
+/// with the same argument shapes in the same blocking order — so the
+/// losses are **bit-identical** to the single-device blocking reference
+/// (`tests/multi_device.rs` pins this against both `tech_bwd = None` and
+/// the classic [`MlBench`] driver); devices change *times*, never
+/// *values* (engine invariant 2, now spanning technologies).
+pub fn hetero_mlbench(
+    tech_ff: Technology,
+    tech_bwd: Option<Technology>,
+    seed: u64,
+    mode: TransferMode,
+    images: usize,
+    epochs: usize,
+) -> Result<HeteroOutcome> {
+    if images == 0 {
+        return Err(Error::Coordinator("hetero mlbench needs at least one image".into()));
+    }
+    let nshards = match &tech_bwd {
+        Some(t) => tech_ff.cores.min(t.cores),
+        None => tech_ff.cores,
+    };
+    let dev_ff = DeviceId(0);
+    let dev_bwd = if tech_bwd.is_some() { DeviceId(1) } else { DeviceId(0) };
+    let mut builder = GroupSession::builder().device(tech_ff).seed(seed);
+    if let Some(t) = tech_bwd {
+        builder = builder.device(t);
+    }
+    let mut group = builder.build()?;
+
+    let mut cfg = MlBenchConfig::small(nshards, mode);
+    cfg.images = images;
+    cfg.epochs = epochs.max(1);
+    cfg.seed = seed;
+    let h = cfg.hidden;
+    let shard = cfg.pixels / nshards;
+    if shard % cfg.chunk != 0 {
+        return Err(Error::Coordinator(format!(
+            "shard {shard} not a multiple of chunk {}",
+            cfg.chunk
+        )));
+    }
+
+    // Content generation mirrors Replica::new draw for draw: per-shard
+    // weight inits from `rng`, images from the scan generator, then the
+    // head weights from `rng` — so losses compare bit-for-bit against
+    // the single-device driver.
+    let mut rng = Rng::new(cfg.seed);
+    let mut w_refs = Vec::with_capacity(nshards);
+    let mut g_refs = Vec::with_capacity(nshards);
+    for c in 0..nshards {
+        let init: Vec<f32> = (0..h * shard).map(|_| (rng.normal() * 0.01) as f32).collect();
+        w_refs.push(group.alloc(MemSpec::host(format!("w{c}")).from_vec(init))?);
+        g_refs.push(group.alloc(MemSpec::host(format!("g{c}")).zeroed(h * shard))?);
+    }
+    let mut gen = ScanGenerator::new(cfg.seed, cfg.pixels);
+    let mut dataset: Vec<f32> = Vec::with_capacity(images * cfg.pixels);
+    let mut labels = Vec::with_capacity(images);
+    for i in 0..images {
+        let (img, y) = gen.scan(i);
+        dataset.extend_from_slice(&img);
+        labels.push(y);
+    }
+    let x_all = group.alloc(MemSpec::host("images").from_vec(dataset))?;
+    let mut v: Vec<f32> = (0..h).map(|_| (rng.normal() * 0.01) as f32).collect();
+
+    group.compile_kernel("ff", FF_SRC)?;
+    group.compile_kernel("grad", GRAD_SRC)?;
+    group.compile_kernel("upd", UPD_SRC)?;
+
+    /// Apply the benchmark's transfer mode to a group launch builder
+    /// (free function: the builder's session borrow is per call site).
+    fn transfer(
+        b: GroupLaunchBuilder<'_>,
+        mode: TransferMode,
+        pf: PrefetchSpec,
+    ) -> GroupLaunchBuilder<'_> {
+        match mode {
+            TransferMode::Prefetch => b.prefetch(pf),
+            m => b.mode(m),
+        }
+    }
+
+    let cores: Vec<usize> = (0..nshards).collect();
+    let pf = cfg.prefetch;
+    let g_arg = || GroupArgSpec::PerCore {
+        grefs: g_refs.clone(),
+        access: Access::Mutable,
+        prefetch: PrefetchChoice::Never,
+    };
+
+    let t0 = group.now();
+    let mut losses = Vec::with_capacity(images * cfg.epochs);
+    for _epoch in 0..cfg.epochs {
+        for i in 0..images {
+            let x_view = x_all.slice(i * cfg.pixels, cfg.pixels);
+
+            // ---- phase 1: feed forward, on the ff device ----
+            let res = transfer(group.launch_named("ff")?, mode, pf)
+                .on(dev_ff)
+                .cores(cores.clone())
+                .args(&[
+                    GroupArgSpec::PerCore {
+                        grefs: w_refs.clone(),
+                        access: Access::ReadOnly,
+                        prefetch: PrefetchChoice::Never,
+                    },
+                    GroupArgSpec::sharded(x_view),
+                    GroupArgSpec::Int(shard as i64),
+                    GroupArgSpec::Int(cfg.chunk as i64),
+                    GroupArgSpec::Int(h as i64),
+                ])
+                .submit()?
+                .wait(&mut group)?;
+            let mut acc = vec![0.0f32; h];
+            for r in &res.reports {
+                let part = r.value.as_array()?.borrow().clone();
+                for (a, p) in acc.iter_mut().zip(part) {
+                    *a += p as f32;
+                }
+            }
+            let (loss, _yhat, gv, dh) = head_native(&acc, &v, labels[i]);
+
+            // ---- phase 2: combine gradients, on the backward device ----
+            transfer(group.launch_named("grad")?, mode, pf)
+                .on(dev_bwd)
+                .cores(cores.clone())
+                .args(&[
+                    GroupArgSpec::Values(dh.iter().map(|&x| f64::from(x)).collect()),
+                    GroupArgSpec::sharded(x_view),
+                    g_arg(),
+                    GroupArgSpec::Int(shard as i64),
+                    GroupArgSpec::Int(cfg.chunk as i64),
+                ])
+                .submit()?
+                .wait(&mut group)?;
+
+            // ---- phase 3: model update, on the backward device ----
+            transfer(group.launch_named("upd")?, mode, pf)
+                .on(dev_bwd)
+                .cores(cores.clone())
+                .args(&[
+                    GroupArgSpec::PerCore {
+                        grefs: w_refs.clone(),
+                        access: Access::Mutable,
+                        prefetch: PrefetchChoice::Never,
+                    },
+                    g_arg(),
+                    GroupArgSpec::Float(f64::from(cfg.lr)),
+                    GroupArgSpec::Int(shard as i64),
+                    GroupArgSpec::Int(cfg.chunk as i64),
+                ])
+                .submit()?
+                .wait(&mut group)?;
+
+            // Host side of phase 3: zero the gradient shards (full-cover
+            // group writes — every replica refreshed) and step the head.
+            let zeros = vec![0.0f32; h * shard];
+            for g in &g_refs {
+                group.write(*g, 0, &zeros)?;
+            }
+            for (vv, gg) in v.iter_mut().zip(&gv) {
+                *vv -= cfg.lr * gg;
+            }
+            losses.push(loss);
+        }
+    }
+    Ok(HeteroOutcome {
+        elapsed: group.now() - t0,
+        losses,
+        staging: group.staging_counters(),
+    })
 }
 
 /// Native fused head (identical math to the PJRT artifact) for sessions

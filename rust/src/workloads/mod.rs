@@ -15,7 +15,10 @@
 //!   disjoint core halves, and [`mlbench::single_replica_epochs`]
 //!   software-pipelines one replica's phases across images (`grad(i)`
 //!   overlapping `ff(i+1)`) — both riding the engine's launch graph,
-//!   with ordering inferred from data flow instead of manual waits.
+//!   with ordering inferred from data flow instead of manual waits;
+//!   [`mlbench::hetero_mlbench`] splits the phases across *heterogeneous
+//!   devices* (ff on one technology, grad/upd on the other) through the
+//!   multi-device group, bit-identical to the single-device reference.
 //! * [`linpack`] — the LINPACK LU benchmark and power table — Table 1.
 //! * [`stall`] — the synthetic single-transfer stall-time probe — Table 2.
 //! * [`baselines`] — analytic host-side comparators (CPython on ARM,
@@ -30,8 +33,8 @@ pub mod stall;
 
 pub use linpack::{linpack_row, LinpackRow};
 pub use mlbench::{
-    dual_half_epochs, single_replica_epochs, DualHalfOutcome, MlBench, MlBenchConfig,
-    MlBenchResult, PhaseTimes, SingleReplicaOutcome,
+    dual_half_epochs, hetero_mlbench, single_replica_epochs, DualHalfOutcome, HeteroOutcome,
+    MlBench, MlBenchConfig, MlBenchResult, PhaseTimes, SingleReplicaOutcome,
 };
 pub use scans::{sharded_normalize, sharded_sum, ScanGenerator};
 pub use stall::{stall_table, StallRow};

@@ -1,0 +1,139 @@
+//! `memory/cache.rs` eviction edge cases: the exact shared-window budget
+//! boundary, write-back ordering under LRU churn interleaved with
+//! `Session::quiesce`, and hit/miss counter deltas under churn. (The
+//! device-group half of the cache coverage lives in
+//! `tests/multi_device.rs`.)
+
+use microcore::coordinator::{ArgSpec, Session, TransferMode};
+use microcore::device::Technology;
+use microcore::memory::{CacheSpec, MemSpec};
+
+const BUMP_SRC: &str = r#"
+def bump(a):
+    i = 0
+    while i < len(a):
+        a[i] = a[i] + 1.0
+        i += 1
+    return 0
+"#;
+
+fn session() -> Session {
+    Session::builder(Technology::epiphany3()).seed(13).build().unwrap()
+}
+
+/// A cache budgeted at exactly the 32 MB shared window is accepted; one
+/// segment more is rejected. The boundary is exact, not approximate.
+#[test]
+fn cache_budget_exactly_at_the_window_boundary() {
+    let window = Technology::epiphany3().shared_window;
+    assert_eq!(window, 32 * 1024 * 1024);
+    // 8192 elements × 1024 segments × 4 B = exactly 32 MiB.
+    let exact = CacheSpec { segment_elems: 8192, capacity_segments: 1024 };
+    assert_eq!(exact.budget_bytes(), window);
+    let mut s = session();
+    assert!(s.alloc(MemSpec::cached("exact", exact).zeroed(64)).is_ok());
+    // One segment over the window: rejected with the budget in the error.
+    let over = CacheSpec { segment_elems: 8192, capacity_segments: 1025 };
+    let err = s.alloc(MemSpec::cached("over", over).zeroed(64)).unwrap_err().to_string();
+    assert!(err.contains("exceeds"), "{err}");
+    // A segment *larger than the whole variable* still works — the tail
+    // segment is clipped to the variable's length.
+    let huge_seg = CacheSpec { segment_elems: 8192, capacity_segments: 1 };
+    let d = s.alloc(MemSpec::cached("huge", huge_seg).from(&[5.0; 10])).unwrap();
+    assert_eq!(s.read(d).unwrap(), vec![5.0; 10]);
+}
+
+/// Write-back ordering under LRU churn interleaved with quiesce: launches
+/// dirty more segments than the cache holds, `Session::quiesce` is called
+/// between submissions (draining the in-flight writers), and the final
+/// host-side contents reflect every write exactly once — evicted-dirty
+/// segments were written back in the right order, quiesce-flushed state
+/// was not written back twice.
+#[test]
+fn write_back_ordering_under_lru_churn_interleaved_with_quiesce() {
+    let mut s = session();
+    let n = 48usize; // 6 segments of 8; capacity 2 → constant eviction.
+    let data: Vec<f32> = (0..n).map(|i| i as f32).collect();
+    let spec = CacheSpec { segment_elems: 8, capacity_segments: 2 };
+    let d = s.alloc(MemSpec::cached("xs", spec).from(&data)).unwrap();
+    s.compile_kernel("bump", BUMP_SRC).unwrap();
+
+    let submit = |s: &mut Session, off: usize, len: usize, cores: Vec<usize>| {
+        s.launch_named("bump")
+            .unwrap()
+            .arg(ArgSpec::sharded_mut(d.slice(off, len)))
+            .mode(TransferMode::OnDemand)
+            .cores(cores)
+            .submit()
+            .unwrap()
+    };
+
+    let before = s.cache_counters(d).unwrap().unwrap();
+    // Wave 1: dirty segments 0..3 (24 elements) on cores 0-1.
+    let h1 = submit(&mut s, 0, 24, vec![0, 1]);
+    // Quiesce mid-churn: drives h1 to completion (its flow touches d),
+    // then a host read must see the +1 — through resident-dirty segments
+    // (flush-on-host-read) and evicted ones (write-back) alike.
+    s.quiesce(d).unwrap();
+    assert_eq!(s.read(d.slice(0, 24)).unwrap(), (0..24).map(|i| i as f32 + 1.0).collect::<Vec<_>>());
+    h1.wait(&mut s).unwrap();
+    // Wave 2: two disjoint writers churning the tail segments, submitted
+    // wait-free (the engine orders nothing between them — disjoint), with
+    // a quiesce only at the end.
+    let h2 = submit(&mut s, 24, 12, vec![2]);
+    let h3 = submit(&mut s, 36, 12, vec![3]);
+    s.quiesce(d).unwrap();
+    h2.wait(&mut s).unwrap();
+    h3.wait(&mut s).unwrap();
+    // Every element bumped exactly once, regardless of eviction order.
+    let finished = s.read(d).unwrap();
+    for (i, v) in finished.iter().enumerate() {
+        assert_eq!(*v, i as f32 + 1.0, "element {i}");
+    }
+    let delta = s.cache_counters(d).unwrap().unwrap().since(&before);
+    // 6 segments entered a 2-slot cache across the run: compulsory misses
+    // at least once per segment, and churn forces evictions with dirty
+    // write-backs (reads-with-+1 re-misses are fine — the point is the
+    // ordering, audited by the values above).
+    assert!(delta.misses >= 6, "{delta:?}");
+    assert!(delta.evictions >= 4, "{delta:?}");
+    assert!(delta.write_backs >= 1, "{delta:?}");
+    assert!(
+        delta.write_backs <= delta.evictions,
+        "clean evictions never write back: {delta:?}"
+    );
+}
+
+/// Hit/miss deltas are exact across quiesce boundaries: `since` recovers
+/// the per-phase activity of a lifetime-cumulative counter.
+#[test]
+fn counter_deltas_across_quiesce_phases() {
+    let mut s = session();
+    let n = 32usize; // 4 segments of 8, capacity 4: no evictions.
+    let spec = CacheSpec { segment_elems: 8, capacity_segments: 4 };
+    let d = s.alloc(MemSpec::cached("xs", spec).zeroed(n)).unwrap();
+    s.compile_kernel("bump", BUMP_SRC).unwrap();
+    let run = |s: &mut Session| {
+        let h = s
+            .launch_named("bump")
+            .unwrap()
+            .arg(ArgSpec::sharded_mut(d))
+            .mode(TransferMode::OnDemand)
+            .cores(vec![0, 1, 2, 3])
+            .submit()
+            .unwrap();
+        h.wait(s).unwrap();
+    };
+    let c0 = s.cache_counters(d).unwrap().unwrap();
+    run(&mut s);
+    let c1 = s.cache_counters(d).unwrap().unwrap();
+    let p1 = c1.since(&c0);
+    assert_eq!(p1.misses, 4, "compulsory misses, one per segment: {p1:?}");
+    assert_eq!(p1.evictions, 0);
+    s.quiesce(d).unwrap(); // no-op: nothing in flight — counters unchanged
+    assert_eq!(s.cache_counters(d).unwrap().unwrap(), c1);
+    run(&mut s);
+    let p2 = s.cache_counters(d).unwrap().unwrap().since(&c1);
+    assert_eq!(p2.misses, 0, "second pass fully resident: {p2:?}");
+    assert!(p2.hits > 0);
+}

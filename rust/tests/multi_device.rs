@@ -1,0 +1,362 @@
+//! Multi-device plan tests: placement, cross-device staging costs,
+//! failure propagation across devices, and the heterogeneous mlbench
+//! acceptance differential (ff on one technology, grad/upd on the other,
+//! bit-identical to the single-device blocking reference).
+
+use microcore::coordinator::{
+    DeviceId, GroupArgSpec, GroupSession, LaunchStatus, Session, TransferMode,
+};
+use microcore::device::Technology;
+use microcore::error::Error;
+use microcore::memory::{CacheSpec, MemSpec};
+use microcore::metrics::report::staging_table;
+use microcore::sim::StagingCounters;
+use microcore::workloads::{hetero_mlbench, MlBench, MlBenchConfig};
+
+const FILL_SRC: &str = r#"
+def fill(a, v):
+    i = 0
+    while i < len(a):
+        a[i] = v + i
+        i += 1
+    return 0
+"#;
+
+const SUM_SRC: &str = r#"
+def total(xs):
+    s = 0.0
+    i = 0
+    while i < len(xs):
+        s += xs[i]
+        i += 1
+    return s
+"#;
+
+const BOOM_SRC: &str = "def b(a):\n    a[0] = 1.0\n    return 0\n";
+
+/// Writer on the first device, reader on the last device; returns the
+/// staging audit, the reader's sum and the two launch records' times.
+fn writer_reader_chain(two_devices: bool, cached: bool) -> (StagingCounters, f64, u64, u64) {
+    let mut b = GroupSession::builder().device(Technology::epiphany3()).seed(3);
+    if two_devices {
+        b = b.device(Technology::epiphany3());
+    }
+    let mut g = b.build().unwrap();
+    let n = 64usize;
+    let spec = if cached {
+        MemSpec::cached("a", CacheSpec { segment_elems: 16, capacity_segments: 8 }).zeroed(n)
+    } else {
+        MemSpec::host("a").zeroed(n)
+    };
+    let a = g.alloc(spec).unwrap();
+    g.compile_kernel("fill", FILL_SRC).unwrap();
+    g.compile_kernel("total", SUM_SRC).unwrap();
+    let dev_last = DeviceId(if two_devices { 1 } else { 0 });
+    let w = g
+        .launch_named("fill")
+        .unwrap()
+        .args(&[GroupArgSpec::sharded_mut(a), GroupArgSpec::Float(1.0)])
+        .on(DeviceId(0))
+        .cores((0..4).collect())
+        .submit()
+        .unwrap();
+    let r = g
+        .launch_named("total")
+        .unwrap()
+        .arg(GroupArgSpec::sharded(a))
+        .on(dev_last)
+        .cores((4..8).collect())
+        .submit()
+        .unwrap();
+    let rw = w.wait(&mut g).unwrap();
+    let rr = r.wait(&mut g).unwrap();
+    let sum: f64 = rr.reports.iter().map(|c| c.value.as_f64().unwrap()).sum();
+    (g.staging_counters(), sum, rw.finished_at, rr.launched_at)
+}
+
+/// Satellite: a two-device chain charges exactly one host-level read and
+/// one host-level write more than the same chain on one device — audited
+/// by `sim::StagingCounters` and rendered by the metrics table.
+#[test]
+fn cross_device_chain_charges_exactly_one_host_read_and_one_host_write_more() {
+    let (st1, sum1, _, _) = writer_reader_chain(false, false);
+    let (st2, sum2, w_fin, r_start) = writer_reader_chain(true, false);
+    // Same chain, same values — devices change times, never values.
+    assert_eq!(sum1, sum2);
+    // One device: every replica access is local, nothing staged.
+    assert_eq!(st1, StagingCounters::default());
+    // Two devices: exactly one staging copy = one host-level read (source
+    // device) + one host-level write (destination device), 64 f32s.
+    assert_eq!(st2.copies, 1);
+    assert_eq!(st2.src_reads, 1);
+    assert_eq!(st2.dst_writes, 1);
+    assert_eq!(st2.bytes, 64 * 4);
+    // The copy is on the virtual timeline: the reader activates only
+    // after the writer's finish plus the staged transfer.
+    assert!(r_start > w_fin, "reader floored past the staging copy: {r_start} vs {w_fin}");
+    // The metrics renderer carries the audit.
+    let rendered = staging_table("staging", &st2).render();
+    assert!(rendered.contains('1'), "{rendered}");
+}
+
+/// A cache-fronted source still stages exactly once, and the device-side
+/// writer traffic shows up in the group-wide cache counters while the
+/// host-side staging copy does not (coherence traffic is uncounted).
+#[test]
+fn cached_source_stages_once_and_keeps_numerics() {
+    let (st, sum, _, _) = writer_reader_chain(true, true);
+    assert_eq!(st.copies, 1);
+    // 4 shards of 16, each element v + i = 1 + i.
+    assert_eq!(sum, 4.0 * (16.0 + (0..16).sum::<i64>() as f64));
+    let (st_plain, sum_plain, _, _) = writer_reader_chain(true, false);
+    assert_eq!(sum, sum_plain, "cache never changes numerics");
+    assert_eq!(st.copies, st_plain.copies);
+}
+
+/// Satellite (cache.rs coverage, group half): two devices over one
+/// logical host-level cached buffer — per-device hit/miss deltas and the
+/// aggregate view. Each device's first pass pays compulsory misses, its
+/// second pass hits; the group aggregate sums both devices.
+#[test]
+fn cache_hit_miss_deltas_across_a_device_group() {
+    let mut g = GroupSession::builder()
+        .device(Technology::epiphany3())
+        .device(Technology::epiphany3())
+        .seed(4)
+        .build()
+        .unwrap();
+    let n = 64usize;
+    let data: Vec<f32> = (0..n).map(|i| i as f32).collect();
+    let a = g
+        .alloc(MemSpec::cached("a", CacheSpec { segment_elems: 16, capacity_segments: 8 }).from(&data))
+        .unwrap();
+    g.compile_kernel("total", SUM_SRC).unwrap();
+    let run_on = |g: &mut GroupSession, d: usize| {
+        let h = g
+            .launch_named("total")
+            .unwrap()
+            .arg(GroupArgSpec::sharded(a))
+            .on(DeviceId(d))
+            .cores((0..4).collect())
+            .submit()
+            .unwrap();
+        h.wait(g).unwrap();
+    };
+    let base = g.total_cache_counters();
+    assert_eq!(base.hits + base.misses, 0, "cold caches");
+    // Device 0, first pass: compulsory misses only.
+    run_on(&mut g, 0);
+    let after0 = g.total_cache_counters();
+    let d0 = after0.since(&base);
+    assert_eq!(d0.misses, 4, "4 segments of 16 over 64 elements");
+    // Device 0, second pass: all hits (its replica's cache is warm).
+    run_on(&mut g, 0);
+    let after1 = g.total_cache_counters();
+    let d1 = after1.since(&after0);
+    assert_eq!(d1.misses, 0);
+    assert!(d1.hits > 0);
+    // Device 1, first pass: its *own* replica cache is cold — compulsory
+    // misses again; the aggregate spans both devices.
+    run_on(&mut g, 1);
+    let after2 = g.total_cache_counters();
+    let d2 = after2.since(&after1);
+    assert_eq!(d2.misses, 4, "device 1 pays its own compulsory refills");
+    let dref0 = g.device_ref(a, DeviceId(0)).unwrap();
+    let dref1 = g.device_ref(a, DeviceId(1)).unwrap();
+    let c0 = g.session(DeviceId(0)).cache_counters(dref0).unwrap().unwrap();
+    let c1 = g.session(DeviceId(1)).cache_counters(dref1).unwrap().unwrap();
+    assert_eq!(c0.misses + c1.misses, after2.misses, "aggregate = sum of devices");
+}
+
+/// Cross-device failure propagation: a reader staging from a failed
+/// writer parks its own `DependencyFailed` naming the writer's device;
+/// the writer's own wait yields the root error; unrelated launches on
+/// either device are untouched.
+#[test]
+fn cross_device_dependency_failure_names_the_device() {
+    let mut g = GroupSession::builder()
+        .device(Technology::epiphany3())
+        .device(Technology::microblaze_fpu())
+        .seed(6)
+        .build()
+        .unwrap();
+    let a = g.alloc(MemSpec::host("a").zeroed(32)).unwrap();
+    let unrelated = g.alloc(MemSpec::host("u").from(&[2.0; 16])).unwrap();
+    g.compile_kernel("boom", BOOM_SRC).unwrap();
+    g.compile_kernel("fill", FILL_SRC).unwrap();
+    g.compile_kernel("total", SUM_SRC).unwrap();
+    // Root failure: boom (writes through a read-only binding). The
+    // recorded *writer* of `a` is the fill behind it, abandoned through
+    // its explicit edge on boom — so the cross-device reader below finds
+    // a failed authoritative writer when it tries to stage.
+    let hb = g
+        .launch_named("boom")
+        .unwrap()
+        .arg(GroupArgSpec::sharded(a))
+        .on(DeviceId(0))
+        .cores((0..2).collect())
+        .submit()
+        .unwrap();
+    let hw = g
+        .launch_named("fill")
+        .unwrap()
+        .args(&[GroupArgSpec::sharded_mut(a), GroupArgSpec::Float(1.0)])
+        .on(DeviceId(0))
+        .cores((0..2).collect())
+        .after(hb)
+        .submit()
+        .unwrap();
+    // Cross-device reader: staging from device 0, whose recorded writer
+    // (the fill) is abandoned once boom fails during the quiesce.
+    let hr = g
+        .launch_named("total")
+        .unwrap()
+        .arg(GroupArgSpec::sharded(a))
+        .on(DeviceId(1))
+        .cores((0..4).collect())
+        .submit()
+        .unwrap();
+    assert_eq!(hr.status(&g), Some(LaunchStatus::Completed), "parked before any engine");
+    // Unrelated launch on device 1 is untouched by the failure.
+    let hu = g
+        .launch_named("total")
+        .unwrap()
+        .arg(GroupArgSpec::sharded(unrelated))
+        .on(DeviceId(1))
+        .cores((4..8).collect())
+        .submit()
+        .unwrap();
+    let eb = hb.wait(&mut g).unwrap_err();
+    assert!(eb.to_string().contains("read-only"), "root error: {eb}");
+    let ew = hw.wait(&mut g).unwrap_err();
+    assert!(
+        matches!(ew, Error::DependencyFailed { dep_device: None, .. }),
+        "same-device propagation carries no device name: {ew}"
+    );
+    let er = hr.wait(&mut g).unwrap_err();
+    match &er {
+        Error::DependencyFailed { dep_device: Some(name), .. } => {
+            assert_eq!(name, "Epiphany-III", "{er}");
+        }
+        other => panic!("expected cross-device DependencyFailed, got {other}"),
+    }
+    assert!(er.to_string().contains("on device Epiphany-III"), "{er}");
+    let ru = hu.wait(&mut g).unwrap();
+    assert_eq!(ru.reports.len(), 4);
+    assert_eq!(g.staging_counters().copies, 0, "poisoned buffer is never copied");
+    // A full-cover host write clears the poison: the next cross-device
+    // reader stages normally.
+    g.write(a, 0, &[1.0; 32]).unwrap();
+    let hr2 = g
+        .launch_named("total")
+        .unwrap()
+        .arg(GroupArgSpec::sharded(a))
+        .on(DeviceId(1))
+        .cores((0..4).collect())
+        .submit()
+        .unwrap();
+    let rr2 = hr2.wait(&mut g).unwrap();
+    let sum: f64 = rr2.reports.iter().map(|c| c.value.as_f64().unwrap()).sum();
+    assert_eq!(sum, 32.0);
+}
+
+/// The acceptance differential: heterogeneous mlbench — feed-forward on
+/// the Epiphany-III, grad/upd on the MicroBlaze — produces losses
+/// bit-identical to the single-device blocking reference, both through
+/// the same group code path with one device and through the classic
+/// `MlBench` driver.
+#[test]
+fn hetero_mlbench_bit_identical_to_single_device_reference() {
+    let (images, epochs, seed) = (2usize, 2usize, 5u64);
+    let hetero = hetero_mlbench(
+        Technology::epiphany3(),
+        Some(Technology::microblaze_fpu()),
+        seed,
+        TransferMode::Prefetch,
+        images,
+        epochs,
+    )
+    .unwrap();
+    let single = hetero_mlbench(
+        Technology::microblaze_fpu(),
+        None,
+        seed,
+        TransferMode::Prefetch,
+        images,
+        epochs,
+    )
+    .unwrap();
+    assert_eq!(hetero.losses.len(), images * epochs);
+    assert!(hetero.losses.iter().all(|l| l.is_finite() && *l >= 0.0));
+    assert_eq!(hetero.losses, single.losses, "devices change times, never values");
+
+    // The classic blocking driver (a fully independent code path) agrees
+    // bit-for-bit: 8 shards on the 8-core MicroBlaze.
+    let sess = Session::builder(Technology::microblaze_fpu()).seed(seed).build().unwrap();
+    let mut cfg = MlBenchConfig::small(8, TransferMode::Prefetch);
+    cfg.images = images;
+    cfg.epochs = epochs;
+    cfg.seed = seed;
+    let classic = MlBench::new(sess, cfg).unwrap().run().unwrap();
+    assert_eq!(classic.losses, hetero.losses, "classic blocking driver agrees");
+
+    // Staging audit: the weights (8 shards) cross devices before every
+    // feed-forward except the first; nothing else ever crosses.
+    let shards = 8u64;
+    assert_eq!(hetero.staging.copies, shards * (images * epochs - 1) as u64);
+    assert_eq!(hetero.staging.src_reads, hetero.staging.copies);
+    assert_eq!(hetero.staging.dst_writes, hetero.staging.copies);
+    assert_eq!(single.staging, StagingCounters::default(), "one device never stages");
+
+    // Deterministic replay, times included.
+    let again = hetero_mlbench(
+        Technology::epiphany3(),
+        Some(Technology::microblaze_fpu()),
+        seed,
+        TransferMode::Prefetch,
+        images,
+        epochs,
+    )
+    .unwrap();
+    assert_eq!(again.elapsed, hetero.elapsed);
+    assert_eq!(again.losses, hetero.losses);
+}
+
+/// Placement is deterministic: pinned `.on(device)` is honored, and
+/// automatic placement picks the least-occupied device by busy-core
+/// fraction with ties to the lower index.
+#[test]
+fn placement_pinned_and_automatic() {
+    let mut g = GroupSession::builder()
+        .device(Technology::epiphany3())
+        .device(Technology::microblaze_fpu())
+        .seed(2)
+        .build()
+        .unwrap();
+    let a = g.alloc(MemSpec::host("a").from(&[1.0; 32])).unwrap();
+    g.compile_kernel("total", SUM_SRC).unwrap();
+    // Idle group: tie on 0.0 occupancy goes to device 0.
+    let h0 = g.launch_named("total").unwrap().arg(GroupArgSpec::sharded(a)).cores((0..8).collect()).submit().unwrap();
+    assert_eq!(h0.device(), DeviceId(0));
+    // Device 0 now has 8/16 busy; device 1 (MicroBlaze) is idle.
+    let h1 = g.launch_named("total").unwrap().arg(GroupArgSpec::sharded(a)).cores((0..4).collect()).submit().unwrap();
+    assert_eq!(h1.device(), DeviceId(1), "least-occupied fraction wins");
+    // Device 0: 8/16 = 0.5; device 1: 4/8 = 0.5 — tie back to device 0.
+    let h2 = g.launch_named("total").unwrap().arg(GroupArgSpec::sharded(a)).cores((8..12).collect()).submit().unwrap();
+    assert_eq!(h2.device(), DeviceId(0));
+    // Core validation errors name the technology now that two devices
+    // are in play (the satellite fix).
+    let err = g
+        .launch_named("total")
+        .unwrap()
+        .arg(GroupArgSpec::sharded(a))
+        .on(DeviceId(1))
+        .cores(vec![12])
+        .submit()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("MicroBlaze+FPU"), "{err}");
+    h0.wait(&mut g).unwrap();
+    h1.wait(&mut g).unwrap();
+    h2.wait(&mut g).unwrap();
+}

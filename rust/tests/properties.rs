@@ -1,10 +1,12 @@
 //! Property-based tests over coordinator invariants (testkit-driven).
 
 use microcore::coordinator::{
-    Access, ArgSpec, OffloadOptions, PrefetchSpec, Session, TransferMode,
+    Access, ArgSpec, OffloadOptions, OffloadResult, PrefetchSpec, Session, TransferMode,
 };
 use microcore::device::Technology;
+use microcore::error::Error;
 use microcore::memory::{DataRef, MemSpec};
+use microcore::testkit::dag::{gen_dag, DagConfig, DagKernel, DagSpec};
 use microcore::testkit::{check, Gen};
 
 const SUM_KERNEL: &str = r#"
@@ -319,6 +321,223 @@ fn prop_json_roundtrip() {
         }
         if pretty != doc {
             return Err(format!("pretty mismatch: {doc:?}"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Randomized launch-graph fuzzer: seeded DAGs of launches with random core
+// sets, overlapping/disjoint DataRef windows, explicit `.after` edges and
+// injected failures (testkit::dag). Failing seeds print for exact replay
+// (testkit::check panics with the case seed). The tier-1 seed set is fixed
+// (base seeds below); MICROCORE_FUZZ_CASES scales the differential's case
+// count for the nightly job.
+// ---------------------------------------------------------------------------
+
+const DAG_READER: &str =
+    "def r(a):\n    s = 0.0\n    i = 0\n    while i < len(a):\n        s += a[i]\n        i += 1\n    return s\n";
+const DAG_WRITER: &str =
+    "def w(a):\n    i = 0\n    while i < len(a):\n        a[i] = a[i] + 1.0\n        i += 1\n    return 0\n";
+const DAG_BOOM: &str = "def b(a):\n    a[0] = 1.0\n    return 0\n";
+
+/// Per-core observation: (core id, value debug, finish, stall, requests).
+type CoreCapture = (usize, String, u64, u64, u64);
+/// Per-launch observation: (launched_at, finished_at, spills, cores).
+type LaunchCapture = (u64, u64, u64, Vec<CoreCapture>);
+/// Wait outcomes in submission order.
+type DagOutcomes = Vec<Result<OffloadResult, Error>>;
+
+/// Everything observable about a DAG execution: per-launch times, spills
+/// and per-core reports, final buffer contents, engine stats, trace, and
+/// the session clock.
+#[derive(Debug, PartialEq)]
+struct DagCapture {
+    launches: Vec<LaunchCapture>,
+    buffers: Vec<Vec<f32>>,
+    stats: String,
+    trace: String,
+    now: u64,
+}
+
+/// Build a session for `spec` and submit every launch in order; in
+/// blocking mode each submit is waited immediately, otherwise all waits
+/// happen after the last submit. Returns the outcome of each launch's
+/// wait (parked errors included), plus the session for inspection.
+fn drive_dag(
+    spec: &DagSpec,
+    blocking: bool,
+) -> Result<(Session, Vec<DataRef>, DagOutcomes), String> {
+    let mut sess = Session::builder(Technology::epiphany3())
+        .seed(7)
+        .trace(4096)
+        .build()
+        .map_err(|e| e.to_string())?;
+    let mut bufs = Vec::new();
+    for (i, &l) in spec.buf_lens.iter().enumerate() {
+        bufs.push(
+            sess.alloc(MemSpec::host(format!("b{i}")).from(&vec![1.0; l]))
+                .map_err(|e| e.to_string())?,
+        );
+    }
+    sess.compile_kernel("r", DAG_READER).map_err(|e| e.to_string())?;
+    sess.compile_kernel("w", DAG_WRITER).map_err(|e| e.to_string())?;
+    sess.compile_kernel("b", DAG_BOOM).map_err(|e| e.to_string())?;
+    let mut handles = Vec::new();
+    let mut outcomes: Vec<Result<OffloadResult, Error>> = Vec::new();
+    for l in &spec.launches {
+        let dref = bufs[l.buf].slice(l.window.0, l.window.1);
+        let (name, arg) = match l.kernel {
+            DagKernel::Reader => ("r", ArgSpec::sharded(dref)),
+            DagKernel::Writer => ("w", ArgSpec::sharded_mut(dref)),
+            DagKernel::Boom => ("b", ArgSpec::sharded(dref)),
+        };
+        let mut b = sess
+            .launch_named(name)
+            .map_err(|e| e.to_string())?
+            .arg(arg)
+            .mode(TransferMode::OnDemand)
+            .cores(l.cores.clone());
+        for &d in &l.after {
+            b = b.after(handles[d]);
+        }
+        let h = b.submit().map_err(|e| e.to_string())?;
+        if blocking {
+            outcomes.push(h.wait(&mut sess));
+        }
+        handles.push(h);
+    }
+    if !blocking {
+        for h in &handles {
+            outcomes.push(h.wait(&mut sess));
+        }
+    }
+    Ok((sess, bufs, outcomes))
+}
+
+/// Full bit-identical capture for failure-free runs.
+fn capture_dag(spec: &DagSpec, blocking: bool) -> Result<DagCapture, String> {
+    let (sess, bufs, outcomes) = drive_dag(spec, blocking)?;
+    let mut launches = Vec::with_capacity(outcomes.len());
+    for (i, out) in outcomes.into_iter().enumerate() {
+        let res = out.map_err(|e| format!("launch {i} failed unexpectedly: {e}"))?;
+        let cores = res
+            .reports
+            .iter()
+            .map(|r| (r.core, format!("{:?}", r.value), r.finished_at, r.stall, r.requests))
+            .collect();
+        launches.push((res.launched_at, res.finished_at, res.spills, cores));
+    }
+    let buffers = bufs
+        .iter()
+        .map(|&b| sess.read(b).map_err(|e| e.to_string()))
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(DagCapture {
+        launches,
+        buffers,
+        stats: format!("{:?}", sess.stats()),
+        trace: sess.engine().trace().render(),
+        now: sess.now(),
+    })
+}
+
+/// Core invariant 1, generalized: for a fully *serialized* random DAG
+/// (every launch carries an explicit edge to its predecessor; inferred
+/// RAW/WAR/WAW edges from the random windows ride on top), a wait-free
+/// submission is bit-identical — results, stats, trace, clock — to the
+/// blocking sequence. ≥ 200 seeds in tier-1; MICROCORE_FUZZ_CASES=1000
+/// is the nightly setting.
+#[test]
+fn prop_launch_dag_waitfree_bit_identical_to_blocking() {
+    let cases = std::env::var("MICROCORE_FUZZ_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200);
+    check("launch-dag-differential", 0xDA6_0001, cases, |g: &mut Gen| {
+        let cfg =
+            DagConfig { max_launches: 5, device_cores: 16, serialize: true, failures: false };
+        let spec = gen_dag(g, &cfg);
+        let b = capture_dag(&spec, true)?;
+        let w = capture_dag(&spec, false)?;
+        if b != w {
+            return Err(format!(
+                "wait-free diverged from blocking\nspec: {spec:?}\nblocking: {b:?}\nwait-free: {w:?}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Free-form DAGs (no forced serialization): unordered launches may
+/// legitimately pipeline to lower virtual times, but the inferred edges
+/// must keep every *value* — per-core results and final buffer contents —
+/// bit-identical to the blocking sequence, and the wait-free schedule
+/// must replay deterministically.
+#[test]
+fn prop_launch_dag_freeform_values_match_blocking() {
+    check("launch-dag-freeform", 0xDA6_0002, 60, |g: &mut Gen| {
+        let cfg =
+            DagConfig { max_launches: 5, device_cores: 16, serialize: false, failures: false };
+        let spec = gen_dag(g, &cfg);
+        let b = capture_dag(&spec, true)?;
+        let w1 = capture_dag(&spec, false)?;
+        let w2 = capture_dag(&spec, false)?;
+        if b.buffers != w1.buffers {
+            return Err(format!("final memory diverged\nspec: {spec:?}"));
+        }
+        let values = |c: &DagCapture| -> Vec<Vec<(usize, String)>> {
+            c.launches
+                .iter()
+                .map(|l| l.3.iter().map(|r| (r.0, r.1.clone())).collect())
+                .collect()
+        };
+        if values(&b) != values(&w1) {
+            return Err(format!("per-core values diverged\nspec: {spec:?}"));
+        }
+        if w1 != w2 {
+            return Err(format!("wait-free replay not deterministic\nspec: {spec:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// Core invariant 2: in a wait-free run with injected failures,
+/// `DependencyFailed` reaches **exactly** the transitive dependents of a
+/// failed launch — computed by the pure oracle from the same edge rules
+/// the engine uses — while every unrelated launch completes untouched.
+/// A failed launch's own wait yields its own error (the read-only write
+/// rejection), a dependent's yields `DependencyFailed`.
+#[test]
+fn prop_launch_dag_failures_reach_exactly_the_dependents() {
+    check("launch-dag-failures", 0xDA6_0003, 60, |g: &mut Gen| {
+        let cfg =
+            DagConfig { max_launches: 6, device_cores: 16, serialize: false, failures: true };
+        let spec = gen_dag(g, &cfg);
+        let (_sess, _bufs, outcomes) = drive_dag(&spec, false)?;
+        let expected = spec.expected_failed();
+        for (i, out) in outcomes.iter().enumerate() {
+            match (expected[i], out) {
+                (true, Ok(_)) => {
+                    return Err(format!("launch {i} should have failed\nspec: {spec:?}"))
+                }
+                (false, Err(e)) => {
+                    return Err(format!("launch {i} unexpectedly failed: {e}\nspec: {spec:?}"))
+                }
+                (true, Err(e)) => {
+                    let dep_failed = spec.edges(i).iter().any(|&d| expected[d]);
+                    let is_dep = matches!(e, Error::DependencyFailed { .. });
+                    if dep_failed != is_dep {
+                        return Err(format!(
+                            "launch {i}: wrong failure kind ({e}); dependent-of-failure = \
+                             {dep_failed}\nspec: {spec:?}"
+                        ));
+                    }
+                    if !dep_failed && !e.to_string().contains("read-only") {
+                        return Err(format!("launch {i}: wrong root error: {e}"));
+                    }
+                }
+                (false, Ok(_)) => {}
+            }
         }
         Ok(())
     });

@@ -33,9 +33,11 @@ use microcore::coordinator::{
 };
 use microcore::device::Technology;
 use microcore::memory::{CacheSpec, MemSpec};
-use microcore::metrics::report::cache_table;
+use microcore::metrics::report::{cache_table, fault_table};
+use microcore::sim::FaultPlan;
 use microcore::workloads::{
     dual_half_epochs, hetero_mlbench, sharded_normalize, sharded_sum, single_replica_epochs,
+    MlBench, MlBenchConfig,
 };
 
 const SPIN: &str = r#"
@@ -251,6 +253,45 @@ fn main() -> anyhow::Result<()> {
             pipelined.elapsed,
             blocking.elapsed as f64 / pipelined.elapsed as f64
         );
+    }
+
+    // 6b. Faulted epochs with recovery: the 8-core epochs loop under a
+    // seeded transient-fault plan with a retry budget — times the
+    // checkpoint cadence, the restore read, and the deterministic replay
+    // end to end (the fault-tolerance layer's wallclock overhead).
+    let faulty_cfg = || {
+        let mut cfg = MlBenchConfig::small(8, TransferMode::Prefetch);
+        cfg.images = ml_images;
+        cfg.epochs = ml_epochs;
+        cfg
+    };
+    // One uncounted fault-free run sizes the plan's arm window (and is
+    // the loss reference for the recovery check below).
+    let (ref_losses, horizon) = {
+        let sess = Session::builder(Technology::microblaze_fpu()).seed(1).build().unwrap();
+        let mut b = MlBench::new(sess, faulty_cfg()).unwrap();
+        let r = b.run().unwrap();
+        (r.losses, b.session().now())
+    };
+    let faulty_run = || {
+        let mut sess =
+            Session::builder(Technology::microblaze_fpu()).seed(1).build().unwrap();
+        sess.engine_mut().install_faults(FaultPlan::seeded(9, 8, horizon, 4));
+        let mut cfg = faulty_cfg();
+        cfg.retry = 6;
+        cfg.backoff = 500;
+        let mut b = MlBench::new(sess, cfg).unwrap();
+        let r = b.run().unwrap();
+        (r.losses, b.session().fault_counters())
+    };
+    let m = time_wall("faulty_epochs_8core", warmup, iters, || {
+        faulty_run();
+    });
+    case(&m, Some((ml_images * ml_epochs) as f64 / m.mean()));
+    {
+        let (losses, fc) = faulty_run();
+        assert_eq!(losses, ref_losses, "recovery never changes values");
+        println!("{}", fault_table("faulty_epochs_8core fault audit", &fc).render());
     }
 
     // 7. Single-replica software pipelining over the launch graph: one

@@ -94,7 +94,7 @@
 
 use std::cell::RefCell;
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashSet};
+use std::collections::{BinaryHeap, HashMap, HashSet};
 use std::rc::Rc;
 
 use crate::channel::protocol::{Request, RequestKind, FRAME_HEADER_BYTES};
@@ -103,8 +103,8 @@ use crate::device::{ComputeModel, PowerModel, Scratchpad, Technology};
 use crate::error::{Error, Result};
 use crate::memory::{DataRef, Level, MemRegistry};
 use crate::runtime::ModelExecutor;
-use crate::sim::{CacheCounters, Rng, Time, Trace};
-use crate::vm::{Builtin, CostCounters, Interp, Outcome, TensorOp, Value};
+use crate::sim::{CacheCounters, FaultCounters, FaultPlan, Rng, Time, Trace};
+use crate::vm::{Builtin, CostCounters, Interp, Outcome, TensorOp, Value, VmSnapshot};
 
 use super::marshal::BoundArg;
 use super::offload::{CoreReport, Kernel, OffloadOptions, OffloadResult};
@@ -195,6 +195,76 @@ pub struct QueueStats {
 /// Event-heap sentinel in the core-position slot: the event activates the
 /// launch (stages it onto its now-free cores) instead of stepping a core.
 const EV_ACTIVATE: usize = usize::MAX;
+
+/// Refresh a core's checkpoint every this-many scheduler-visible
+/// suspensions (plus always at core completion). A per-suspension
+/// checkpoint would dominate the service timeline for chatty kernels; a
+/// sparse cadence bounds replay to at most this many suspensions while
+/// keeping the Shared-level write traffic modest. The first suspension
+/// always checkpoints, so even a fault arriving immediately after launch
+/// finds something better than a from-scratch restart.
+const CHECKPOINT_EVERY: u64 = 8;
+
+/// A resumable snapshot of one launch, taken at suspension points of its
+/// cores (see the "life of a fault" walkthrough in ARCHITECTURE.md).
+///
+/// Each participating core contributes a VM snapshot (stack, locals,
+/// program counter, pending suspension), its eager-copy write-back roots,
+/// and its pre-fetch stream cursors. Checkpoints are charged as
+/// Shared-level writes when taken and Shared-level reads when restored —
+/// recovery is cost-modeled, never free. The multi-device group stages a
+/// harvested checkpoint through Host level when it migrates a launch off a
+/// lost device ([`Engine::harvest_checkpoint`]).
+#[derive(Debug, Clone)]
+pub struct LaunchCheckpoint {
+    /// Per core-position entry; `None` means that core has not reached a
+    /// checkpointable suspension yet (restore restarts it from its bound
+    /// arguments — deterministic, just more replay).
+    cores: Vec<Option<CoreCheckpoint>>,
+    /// Total serialized footprint (sum over cores).
+    bytes: u64,
+}
+
+impl LaunchCheckpoint {
+    /// Serialized footprint in bytes — what every checkpoint write,
+    /// restore read and migration staging copy is charged for.
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+}
+
+/// One core's share of a [`LaunchCheckpoint`].
+#[derive(Debug, Clone)]
+struct CoreCheckpoint {
+    /// Interpreter state (stack, frames, locals, pending suspension).
+    vm: VmSnapshot,
+    /// Indices into the snapshot's array table for each eager-copy
+    /// write-back root, in `eager_writebacks` order — restore re-links the
+    /// write-back list to the rebuilt arrays so copy-back at completion
+    /// sees the replayed values.
+    wb_roots: Vec<usize>,
+    /// Where execution resumes.
+    resume: ResumePoint,
+    /// Accumulated transfer-stall time at snapshot.
+    stall: Time,
+    /// `(bind slot, stream cursor)` for every pre-fetch stream; restore
+    /// re-seeds each stream at its cursor ([`PrefetchState::seek`]).
+    pf_cursors: Vec<(usize, usize)>,
+    /// This core's serialized footprint.
+    bytes: u64,
+}
+
+/// The suspension a checkpointed core resumes from.
+#[derive(Debug, Clone)]
+enum ResumePoint {
+    /// Suspended asking for element `index` of reference slot `slot`.
+    Read { slot: usize, index: usize },
+    /// Suspended writing `value` to element `index` of slot `slot`.
+    Write { slot: usize, index: usize, value: f64 },
+    /// Core already finished; restore parks the (deep-copied) result and
+    /// marks the core done without re-running anything.
+    Done { result: Option<Value> },
+}
 
 /// One entry of a launch's data-flow set: the hull of every window the
 /// launch's bound arguments open onto one registry variable, and whether
@@ -289,6 +359,14 @@ struct Launch {
     /// Parked completion: the result, or the error that killed this
     /// launch (claimed exactly once by `wait`).
     outcome: Option<Result<OffloadResult>>,
+    /// Times this launch has been recovered after a transient fault.
+    /// Compared against `options.retry` to decide recover-vs-abandon.
+    attempts: u32,
+    /// Last checkpoint taken (retry-enabled launches only; `None` until
+    /// the first core suspends — a fault then restarts from scratch).
+    /// Seeded at submit time when the launch resumes a migrated
+    /// checkpoint (`OffloadOptions::restore`).
+    checkpoint: Option<LaunchCheckpoint>,
 }
 
 #[derive(Debug)]
@@ -338,6 +416,9 @@ struct CoreRun {
     last_counters: CostCounters,
     eager_writebacks: Vec<(Rc<RefCell<Vec<f64>>>, DataRef)>,
     autoconsume: Vec<Handle>,
+    /// Scheduler-visible suspensions serviced so far (throttles the
+    /// checkpoint cadence — see [`CHECKPOINT_EVERY`]).
+    suspensions: u64,
 }
 
 /// The engine: owns the memory registry, device model and PJRT executor.
@@ -380,6 +461,19 @@ pub struct Engine {
     /// [`Error::DependencyFailed`] (one u64 per failure — negligible).
     failed: HashSet<u64>,
     next_launch: u64,
+    /// Installed fault schedule, consumed as faults strike (`None` = the
+    /// common fault-free configuration, zero overhead).
+    faults: Option<FaultPlan>,
+    /// Fault/recovery accounting (injections, retries, checkpoint bytes…).
+    fault_counters: FaultCounters,
+    /// Virtual time the device was permanently lost, if it was. Once set,
+    /// nothing activates here again; submits fail immediately.
+    lost_at: Option<Time>,
+    /// Checkpoints rescued at device loss for launches that still had
+    /// retry budget, keyed by launch id: `(last checkpoint, remaining
+    /// budget)`. The multi-device group claims these to migrate work to a
+    /// surviving device ([`Engine::harvest_checkpoint`]).
+    harvested: HashMap<u64, (Option<LaunchCheckpoint>, u32)>,
 }
 
 impl std::fmt::Debug for Engine {
@@ -429,7 +523,43 @@ impl Engine {
             core_free: vec![0; cores],
             failed: HashSet::new(),
             next_launch: 0,
+            faults: None,
+            fault_counters: FaultCounters::default(),
+            lost_at: None,
+            harvested: HashMap::new(),
         }
+    }
+
+    /// Install a seeded fault schedule (see [`FaultPlan`]). Faults are
+    /// delivered through the engine's event loop on the shared virtual
+    /// timeline: a core fault strikes at the next suspension point of
+    /// whatever launch occupies the core, device loss kills every
+    /// in-flight launch. Installing a plan replaces any previous one.
+    pub fn install_faults(&mut self, plan: FaultPlan) {
+        self.faults = Some(plan);
+    }
+
+    /// Fault/recovery accounting so far (all-zero without a fault plan).
+    pub fn fault_counters(&self) -> FaultCounters {
+        self.fault_counters
+    }
+
+    /// Virtual time the device was permanently lost, if it was.
+    pub fn device_lost(&self) -> Option<Time> {
+        self.lost_at
+    }
+
+    /// Claim the checkpoint rescued for `id` at device loss: `(last
+    /// checkpoint — `None` means restart from arguments, remaining retry
+    /// budget)`. Present only for launches that were in flight when the
+    /// device died *and* still had budget; each entry is claimed at most
+    /// once. The multi-device group redeems this to resume the launch on
+    /// a surviving device ([`OffloadOptions::restore`]).
+    pub fn harvest_checkpoint(
+        &mut self,
+        id: LaunchId,
+    ) -> Option<(Option<LaunchCheckpoint>, u32)> {
+        self.harvested.remove(&id.0)
     }
 
     /// Enable/disable the inline prefetch-hit fast path (module docs).
@@ -624,8 +754,17 @@ impl Engine {
             live: core_ids.len(),
             spills: 0,
             outcome: None,
+            attempts: 0,
+            checkpoint: options.restore.as_deref().cloned(),
         });
-        if let Some(e) = dep_error {
+        if self.lost_at.is_some() {
+            // The device is gone: nothing submitted here can ever run.
+            // CoreFault (transient) lets a multi-device caller route the
+            // work elsewhere instead of treating it as a kernel bug.
+            let li = self.launches.len() - 1;
+            self.fault_counters.abandoned += 1;
+            self.fail_launch(li, Error::CoreFault { core: core_ids[0], launch: id });
+        } else if let Some(e) = dep_error {
             let li = self.launches.len() - 1;
             self.fail_launch(li, e);
         }
@@ -755,8 +894,18 @@ impl Engine {
     /// planner drains the base variable this way before gather staging.
     pub fn quiesce(&mut self, dref: DataRef) -> Result<()> {
         loop {
+            // Abandoned flows count as drained: a launch whose outcome is
+            // parked (including every transitively-abandoned dependent of
+            // a fault or failure) will never touch the variable again, so
+            // waiting on it would spin the full graph for nothing — or,
+            // after device loss empties the event heap, stall forever.
+            // The `failed` check is belt-and-braces: `fail_launch` always
+            // parks an outcome synchronously, but quiesce must never spin
+            // on a failed launch even if that coupling ever loosens.
             let busy = self.launches.iter().any(|l| {
-                l.outcome.is_none() && l.flows.iter().any(|f| f.touches(&dref))
+                l.outcome.is_none()
+                    && !self.failed.contains(&l.id)
+                    && l.flows.iter().any(|f| f.touches(&dref))
             });
             if !busy {
                 return Ok(());
@@ -782,6 +931,9 @@ impl Engine {
     /// can be deferred indefinitely only by a caller who keeps submitting
     /// conflicting work before driving it to completion.
     fn reserve_ready(&mut self) {
+        if self.lost_at.is_some() {
+            return; // a lost device never activates anything again
+        }
         for li in 0..self.launches.len() {
             let l = &self.launches[li];
             if l.reserved || l.outcome.is_some() || !l.deps.is_empty() {
@@ -822,6 +974,15 @@ impl Engine {
         let Some(Reverse((t, id, pos))) = self.events.pop() else {
             return Ok(false);
         };
+        // Permanent device loss fires before any event at or after its
+        // scheduled time (the popped event is moot — `device_loss` clears
+        // the heap anyway).
+        if let Some(at) = self.faults.as_ref().and_then(FaultPlan::device_loss_at) {
+            if at <= t && self.lost_at.is_none() {
+                self.device_loss(at);
+                return Ok(true);
+            }
+        }
         // Stale event for a launch already waited/aborted.
         let Some(li) = self.launches.iter().position(|l| l.id == id) else {
             return Ok(true);
@@ -845,8 +1006,30 @@ impl Engine {
             }
             None => return Ok(true),
         }
+        // An armed core fault strikes *here*: the core has reached the
+        // suspension point the scheduler is about to service, and loses
+        // its in-flight work instead of being stepped.
+        let cid = self.launches[li].core_ids[pos];
+        if let Some(kind) = self.faults.as_mut().and_then(|p| p.take_fault(cid, t)) {
+            self.fault_counters.injected += 1;
+            self.trace.emit(t, cid, "fault", format!("{kind:?}"));
+            if self.launches[li].attempts < self.launches[li].options.retry {
+                self.recover_launch(li, t);
+            } else {
+                let lid = self.launches[li].id;
+                self.fault_counters.abandoned += 1;
+                self.fail_launch(li, Error::CoreFault { core: cid, launch: lid });
+            }
+            return Ok(true);
+        }
         let mut core = self.launches[li].cores[pos].take().expect("core parked");
         let stepped = self.step_core(&mut core, t);
+        if stepped.is_ok() {
+            // Refresh this core's checkpoint entry while the launch still
+            // owns the scheduler slot, so the Shared-level write lands in
+            // the core's own time (cost-modeled, never free).
+            self.refresh_checkpoint(li, pos, &mut core);
+        }
         let next = Self::candidate(&core);
         let done = matches!(core.status, Status::Done);
         self.launches[li].cores[pos] = Some(core);
@@ -925,11 +1108,190 @@ impl Engine {
         self.reserve_ready();
     }
 
+    /// Deep-copy a value so a checkpoint cannot alias live VM state
+    /// (arrays are `Rc`-shared on ordinary clone).
+    fn deep_copy_value(v: &Value) -> Value {
+        match v {
+            Value::Array(a) => Value::array(a.borrow().clone()),
+            other => other.clone(),
+        }
+    }
+
+    /// Refresh core `pos`'s entry in launch `li`'s checkpoint if this is a
+    /// checkpointable suspension: `Pending(ExtRead/ExtWrite)` on the
+    /// [`CHECKPOINT_EVERY`] cadence, core completion always. No-op for
+    /// launches without a retry budget or a migrated checkpoint — the
+    /// fail-fast default pays nothing (and its timing is untouched: the
+    /// checkpoint's Shared-level write advances the core clock).
+    fn refresh_checkpoint(&mut self, li: usize, pos: usize, c: &mut CoreRun) {
+        let l = &self.launches[li];
+        if l.options.retry == 0 && l.options.restore.is_none() {
+            return;
+        }
+        let resume = match &c.status {
+            Status::Pending(Outcome::ExtRead { slot, index }) => {
+                c.suspensions += 1;
+                if c.suspensions % CHECKPOINT_EVERY != 1 {
+                    return;
+                }
+                ResumePoint::Read { slot: *slot, index: *index }
+            }
+            Status::Pending(Outcome::ExtWrite { slot, index, value }) => {
+                c.suspensions += 1;
+                if c.suspensions % CHECKPOINT_EVERY != 1 {
+                    return;
+                }
+                ResumePoint::Write { slot: *slot, index: *index, value: *value }
+            }
+            Status::Done => {
+                ResumePoint::Done { result: c.result.as_ref().map(Self::deep_copy_value) }
+            }
+            // Waiting/Retry/Fresh and Done/Tensor outcomes are not clean
+            // resume points (in-flight channel handles do not survive a
+            // restore); the previous checkpoint stays in force.
+            _ => return,
+        };
+        let roots: Vec<Rc<RefCell<Vec<f64>>>> =
+            c.eager_writebacks.iter().map(|(a, _)| Rc::clone(a)).collect();
+        let (vm, wb_roots) = c.vm.snapshot(&roots);
+        let pf_cursors: Vec<(usize, usize)> = c
+            .binds
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| b.pf.as_ref().map(|p| (i, p.cursor())))
+            .collect();
+        let result_bytes = match &resume {
+            ResumePoint::Done { result: Some(Value::Array(a)) } => (a.borrow().len() * 8) as u64,
+            _ => 0,
+        };
+        let bytes = vm.byte_size() + result_bytes + 32;
+        let cc = CoreCheckpoint { vm, wb_roots, resume, stall: c.stall, pf_cursors, bytes };
+        // The snapshot travels to Shared-level storage: charge the write
+        // in this core's own time so recovery readiness is never free.
+        if matches!(c.status, Status::Done) {
+            c.finished_at = self.service.service(c.finished_at, Level::Shared, bytes);
+        } else {
+            c.clock = self.service.service(c.clock, Level::Shared, bytes);
+        }
+        self.fault_counters.checkpoint_bytes += bytes;
+        let ncores = self.launches[li].core_ids.len();
+        let ck = self.launches[li]
+            .checkpoint
+            .get_or_insert_with(|| LaunchCheckpoint { cores: vec![None; ncores], bytes: 0 });
+        if ck.cores.len() != ncores {
+            // Migrated checkpoint from a device with a different core-set
+            // length (defensive; the group resubmits with matching arity).
+            ck.cores.resize(ncores, None);
+        }
+        ck.cores[pos] = Some(cc);
+        ck.bytes = ck.cores.iter().flatten().map(|c| c.bytes).sum();
+    }
+
+    /// A transient fault struck launch `li` and it has retry budget:
+    /// release its cores, charge the Shared-level read that restores its
+    /// last checkpoint, apply the configured back-off, and requeue it on
+    /// the same device. The replay is deterministic — registry writes are
+    /// issued at service time and replaying a checkpoint re-issues the
+    /// identical writes — so a recovered run's results, losses and final
+    /// buffer contents are bit-identical to its fault-free twin; only the
+    /// clock and the fault counters differ (engine invariant 10).
+    fn recover_launch(&mut self, li: usize, at: Time) {
+        self.fault_counters.retried += 1;
+        self.launches[li].attempts += 1;
+        // Release each core no earlier than the launch's own progress on
+        // it, exactly as `fail_launch` does, so requeued or competing
+        // launches cannot activate before already-stamped effects.
+        let releases: Vec<(usize, Time)> = self.launches[li]
+            .cores
+            .iter()
+            .flatten()
+            .map(|c| (c.id, Self::candidate(c).unwrap_or(0).max(c.clock).max(c.finished_at)))
+            .collect();
+        for (cid, t) in releases {
+            self.core_free[cid] = self.core_free[cid].max(t);
+        }
+        let id = self.launches[li].id;
+        for &c in &self.launches[li].core_ids.clone() {
+            if self.core_owner[c] == Some(id) {
+                self.core_owner[c] = None;
+            }
+        }
+        // Restore cost: one Shared-level read of the checkpoint (zero
+        // bytes — a from-scratch restart — reads nothing), then back-off.
+        let bytes = self.launches[li].checkpoint.as_ref().map_or(0, LaunchCheckpoint::bytes);
+        let restored = if bytes > 0 { self.service.service(at, Level::Shared, bytes) } else { at };
+        let resume_at = restored + self.launches[li].options.backoff;
+        self.fault_counters.recovery_time += resume_at.saturating_sub(at);
+        let l = &mut self.launches[li];
+        l.cores.clear();
+        l.reserved = false;
+        l.active = false;
+        l.live = l.core_ids.len();
+        l.dep_ready = l.dep_ready.max(resume_at);
+        let attempt = l.attempts;
+        self.trace.emit(at, self.launches[li].core_ids[0], "retry", format!(
+            "launch {id} attempt {attempt}, resume at {resume_at}"
+        ));
+        // Stale heap events for the old incarnation revalidate against the
+        // re-activated cores' candidates and re-push or drop — benign.
+        self.reserve_ready();
+    }
+
+    /// Permanent device loss at `at`: every in-flight launch fails with
+    /// [`Error::CoreFault`]; launches that still had retry budget first
+    /// park their last checkpoint in the harvest table so a multi-device
+    /// group can migrate them to a surviving device. The event heap is
+    /// cleared — nothing on this device ever runs again — but parked
+    /// outcomes (successes included) remain claimable, and `quiesce`
+    /// treats the abandoned flows as drained.
+    fn device_loss(&mut self, at: Time) {
+        self.lost_at = Some(at);
+        self.fault_counters.injected += 1;
+        self.trace.emit(at, 0, "device-loss", "");
+        // Harvest first: `fail_launch` cascades DependencyFailed through
+        // dependents, and a dependent with its own budget deserves its
+        // checkpoint in the table before the cascade reaches it.
+        let rescued: Vec<(u64, Option<LaunchCheckpoint>, u32)> = self
+            .launches
+            .iter()
+            .filter(|l| l.outcome.is_none())
+            .filter_map(|l| {
+                let budget = l.options.retry.saturating_sub(l.attempts);
+                (budget > 0).then(|| (l.id, l.checkpoint.clone(), budget))
+            })
+            .collect();
+        for (id, ck, budget) in rescued {
+            self.harvested.insert(id, (ck, budget));
+        }
+        while let Some(li) = self.launches.iter().position(|l| l.outcome.is_none()) {
+            let id = self.launches[li].id;
+            let core = self.launches[li].core_ids.first().copied().unwrap_or(0);
+            if !self.harvested.contains_key(&id) {
+                self.fault_counters.abandoned += 1;
+            }
+            self.fail_launch(li, Error::CoreFault { core, launch: id });
+        }
+        self.events.clear();
+    }
+
     /// Stage launch `li` onto its (free) cores at virtual time `at`: code
     /// pushes, eager copies / spills, reference binding, and the pre-fetch
     /// warm-up — the classic blocking launch sequence, verbatim.
     fn activate(&mut self, li: usize, at: Time) -> Result<()> {
-        let bound = self.launches[li].bound.take().expect("activated exactly once");
+        // Retry-enabled launches keep their bound arguments so a faulted
+        // incarnation can be re-staged; fail-fast launches (the default)
+        // consume them exactly as before.
+        let retryable = self.launches[li].options.retry > 0
+            || self.launches[li].options.restore.is_some();
+        let bound = if retryable {
+            self.launches[li].bound.clone().expect("bound retained for retry")
+        } else {
+            self.launches[li].bound.take().expect("activated exactly once")
+        };
+        // The checkpoint (if any) seeds per-core restores below; it is
+        // re-armed on the launch afterwards so a fault arriving before
+        // the next refresh restores the same state again.
+        let ck = self.launches[li].checkpoint.take();
         let kernel = self.launches[li].kernel.clone();
         let options = self.launches[li].options.clone();
         let core_ids = self.launches[li].core_ids.clone();
@@ -1045,7 +1407,7 @@ impl Engine {
             )?;
             vm.set_fuel(options.fuel);
             let last_counters = vm.counters();
-            cores.push(CoreRun {
+            let mut c = CoreRun {
                 id: cid,
                 vm,
                 clock: start,
@@ -1059,7 +1421,47 @@ impl Engine {
                 last_counters,
                 eager_writebacks,
                 autoconsume: Vec::new(),
-            });
+                suspensions: 0,
+            };
+            // Restore this core from its checkpoint entry, replaying from
+            // the captured suspension instead of from scratch. Cores
+            // without an entry (never reached a checkpointable suspension)
+            // restart from their freshly-marshalled arguments.
+            if let Some(cc) = ck.as_ref().and_then(|k| k.cores.get(pos)).and_then(Option::as_ref)
+            {
+                let table = c.vm.restore(&cc.vm);
+                debug_assert_eq!(cc.wb_roots.len(), c.eager_writebacks.len());
+                for (k, &root) in cc.wb_roots.iter().enumerate() {
+                    c.eager_writebacks[k].0 = Rc::clone(&table[root]);
+                }
+                c.last_counters = c.vm.counters();
+                c.stall = cc.stall;
+                for &(slot, cur) in &cc.pf_cursors {
+                    if let Some(pf) = c.binds[slot].pf.as_mut() {
+                        pf.seek(cur);
+                    }
+                }
+                match &cc.resume {
+                    ResumePoint::Read { slot, index } => {
+                        c.status =
+                            Status::Pending(Outcome::ExtRead { slot: *slot, index: *index });
+                    }
+                    ResumePoint::Write { slot, index, value } => {
+                        c.status = Status::Pending(Outcome::ExtWrite {
+                            slot: *slot,
+                            index: *index,
+                            value: *value,
+                        });
+                    }
+                    ResumePoint::Done { result } => {
+                        c.result = result.as_ref().map(Self::deep_copy_value);
+                        c.status = Status::Done;
+                        c.finished_at = start;
+                    }
+                }
+                self.trace.emit(launch, cid, "restore", format!("{} B", cc.bytes));
+            }
+            cores.push(c);
             self.trace.emit(launch, cid, "launch", format!("start at {start}"));
         }
 
@@ -1069,15 +1471,22 @@ impl Engine {
         // `launch` also keeps resource allocations in global time order
         // (the cores' staggered code-push start times come later).
         for c in cores.iter_mut() {
+            if matches!(c.status, Status::Done) {
+                continue; // restored-finished cores read nothing further
+            }
             for slot in 0..c.binds.len() {
-                if c.binds[slot].pf.is_some() {
+                if let Some(pf) = c.binds[slot].pf.as_ref() {
+                    // For a fresh stream the cursor is 0 (the classic
+                    // warm-up); a restored stream warms up at the
+                    // checkpoint's cursor instead.
+                    let idx = pf.cursor();
                     Self::issue_prefetch_spans_at(
                         &mut self.service,
                         &mut self.registry,
                         &mut self.stats,
                         c,
                         slot,
-                        0,
+                        idx,
                         launch,
                     )?;
                 }
@@ -1099,6 +1508,18 @@ impl Engine {
         l.active = true;
         l.launched_at = launch;
         l.spills = spills;
+        l.checkpoint = ck;
+        // Restored-Done cores are not live; a launch whose cores all
+        // finished before the fault completes immediately on restore.
+        l.live = l
+            .cores
+            .iter()
+            .flatten()
+            .filter(|c| !matches!(c.status, Status::Done))
+            .count();
+        if l.live == 0 {
+            self.complete(li)?;
+        }
         Ok(())
     }
 
@@ -1106,6 +1527,12 @@ impl Engine {
     /// copy-backs, per-core reports, power accounting; park the result and
     /// release the cores (which may activate queued launches).
     fn complete(&mut self, li: usize) -> Result<()> {
+        // A launch that was ever recovered (same-device retry) or resumed
+        // from a migrated checkpoint counts as recovered once it actually
+        // finishes.
+        if self.launches[li].attempts > 0 || self.launches[li].options.restore.is_some() {
+            self.fault_counters.recovered += 1;
+        }
         let launch = self.launches[li].launched_at;
         let core_ids = self.launches[li].core_ids.clone();
         let spills = self.launches[li].spills;

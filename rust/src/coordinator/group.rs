@@ -80,15 +80,39 @@
 //! engine's per-variable [`FlowSpan`](super::engine) hulls: a window
 //! write marks the entire buffer authoritative on the writer's device.
 //! Conservative — a spurious staging copy costs time, never correctness.
+//!
+//! ## Fault migration
+//!
+//! Transient core faults are the engine's business: a retry-budgeted
+//! launch restores its last checkpoint and requeues on the *same* device
+//! ([`super::OffloadOptions::retry`]). The group steps in only for
+//! **permanent device loss** ([`crate::sim::FaultPlan::lose_device`],
+//! installed per device via [`DeviceGroup::faults`]): when a
+//! retry-budgeted launch's device dies, its handle's `wait` harvests the
+//! launch's last checkpoint from the dead engine
+//! ([`super::Engine::harvest_checkpoint`]), stages it through **Host
+//! level** — one host read charged on the lost device's service (loss
+//! kills cores, not host windows) and one host write on the survivor's,
+//! audited by [`crate::sim::StagingCounters`] like any staging copy —
+//! re-freshens the launch's group-buffer inputs on the target, and
+//! resumes it there with the remaining budget. Placement reuses the
+//! occupancy heuristic over *surviving* devices with enough cores
+//! (checkpoint entries are positional, so the core count is preserved).
+//! No capable survivor exhausts the launch to
+//! [`Error::DependencyFailed`] naming the lost device — exactly the
+//! fail-fast surface a zero budget gets. [`GroupSession::fault_counters`]
+//! merges every engine's [`crate::sim::FaultCounters`] with the group's
+//! own migration bookkeeping.
 
 use std::collections::HashMap;
+use std::rc::Rc;
 
 use crate::device::Technology;
 use crate::error::{Error, Result};
-use crate::memory::{DataRef, MemPlace, MemSpec};
-use crate::sim::{CacheCounters, StagingCounters, Time};
+use crate::memory::{DataRef, Level, MemPlace, MemSpec};
+use crate::sim::{CacheCounters, FaultCounters, FaultPlan, StagingCounters, Time};
 
-use super::engine::{LaunchId, LaunchStatus};
+use super::engine::{LaunchCheckpoint, LaunchId, LaunchStatus};
 use super::marshal::{ArgSpec, PrefetchChoice};
 use super::offload::{OffloadOptions, OffloadResult};
 use super::prefetch::PrefetchSpec;
@@ -110,6 +134,7 @@ pub struct DeviceGroup {
     seed: u64,
     service_threads: usize,
     trace_capacity: Option<usize>,
+    faults: Vec<(usize, FaultPlan)>,
 }
 
 impl Default for DeviceGroup {
@@ -121,7 +146,13 @@ impl Default for DeviceGroup {
 impl DeviceGroup {
     /// Empty group; attach devices with [`DeviceGroup::device`].
     pub fn new() -> Self {
-        DeviceGroup { devices: Vec::new(), seed: 42, service_threads: 1, trace_capacity: None }
+        DeviceGroup {
+            devices: Vec::new(),
+            seed: 42,
+            service_threads: 1,
+            trace_capacity: None,
+            faults: Vec::new(),
+        }
     }
 
     /// Attach one device. The first attached device is `DeviceId(0)`.
@@ -150,6 +181,16 @@ impl DeviceGroup {
         self
     }
 
+    /// Install a seeded fault schedule on one device (by attachment
+    /// index). Core faults strike that device's engine only; a
+    /// [`FaultPlan::lose_device`] there makes the group migrate
+    /// retry-budgeted launches to surviving devices (module docs,
+    /// [`GroupLaunchBuilder::retry`]).
+    pub fn faults(mut self, device: usize, plan: FaultPlan) -> Self {
+        self.faults.push((device, plan));
+        self
+    }
+
     /// Construct the group session (at least one device required).
     pub fn build(self) -> Result<GroupSession> {
         if self.devices.is_empty() {
@@ -165,11 +206,22 @@ impl DeviceGroup {
             }
             sessions.push(b.build()?);
         }
+        let n = sessions.len();
+        for (d, plan) in self.faults {
+            let sess = sessions.get_mut(d).ok_or_else(|| {
+                Error::Coordinator(format!(
+                    "fault plan targets device {d}, but the group has {n} devices"
+                ))
+            })?;
+            sess.engine_mut().install_faults(plan);
+        }
         Ok(GroupSession {
             sessions,
             bufs: Vec::new(),
             parked: HashMap::new(),
             staging: StagingCounters::default(),
+            relaunch: HashMap::new(),
+            faults: FaultCounters::default(),
             next_seq: 0,
         })
     }
@@ -312,6 +364,25 @@ impl GroupArgSpec {
     }
 }
 
+/// Everything needed to resubmit a retry-budgeted group launch on a
+/// different device after its original device is permanently lost.
+/// Recorded at submit only when the budget is nonzero — fail-fast
+/// launches pay nothing.
+#[derive(Debug, Clone)]
+struct RelaunchSpec {
+    kernel: String,
+    args: Vec<GroupArgSpec>,
+    /// The original core *selection*; what migration must preserve is the
+    /// core **count** (checkpoint entries are positional), so the target
+    /// runs on its first `len` cores. `None` = every core of the original
+    /// device.
+    cores: Option<Vec<usize>>,
+    mode: TransferMode,
+    prefetch: Option<PrefetchSpec>,
+    fuel: Option<u64>,
+    backoff: Time,
+}
+
 /// Outcome of making one buffer fresh on the launching device.
 enum StageOutcome {
     /// Already fresh — no copy, no cost.
@@ -332,6 +403,14 @@ pub struct GroupSession {
     /// keyed by group sequence number; claimed by the handle's `wait`.
     parked: HashMap<u64, Error>,
     staging: StagingCounters,
+    /// Resubmission specs for retry-budgeted launches, keyed by group
+    /// sequence number; consulted when a device is lost mid-launch.
+    relaunch: HashMap<u64, RelaunchSpec>,
+    /// Group-level fault bookkeeping (migrations and their staged
+    /// checkpoint bytes; abandonments the *group* decided). Per-device
+    /// injection/retry counts live in each engine and are merged in by
+    /// [`GroupSession::fault_counters`].
+    faults: FaultCounters,
     next_seq: u64,
 }
 
@@ -383,6 +462,18 @@ impl GroupSession {
     /// Cross-device staging audit (module docs).
     pub fn staging_counters(&self) -> StagingCounters {
         self.staging
+    }
+
+    /// Fault/recovery accounting for the whole group: every device
+    /// engine's counters merged with the group's own migration
+    /// bookkeeping (launches migrated off lost devices, their staged
+    /// checkpoint bytes, and migration abandonments).
+    pub fn fault_counters(&self) -> FaultCounters {
+        let mut total = self.faults;
+        for s in &self.sessions {
+            total.merge(&s.fault_counters());
+        }
+        total
     }
 
     /// Aggregate cache accounting across every device's live variables —
@@ -508,6 +599,8 @@ impl GroupSession {
             prefetch: None,
             fuel: None,
             after: Vec::new(),
+            retry: 0,
+            backoff: 0,
         })
     }
 
@@ -538,12 +631,182 @@ impl GroupSession {
         Ok(())
     }
 
+    /// Drive a device until `h` completes, migrating across device loss:
+    /// the loop behind [`GroupHandle::wait`]. Same-device retries are the
+    /// engine's business; the group steps in only when the whole device
+    /// is gone, the failure was transient, and retry budget remains — it
+    /// harvests the checkpoint, migrates, and keeps waiting on the new
+    /// device (loss can strike more than once). Anything else surfaces
+    /// unchanged.
+    fn wait_recovering(
+        &mut self,
+        seq: u64,
+        mut device: usize,
+        mut h: OffloadHandle,
+    ) -> Result<OffloadResult> {
+        loop {
+            let err = match self.sessions[device].wait(h) {
+                Ok(r) => {
+                    self.relaunch.remove(&seq);
+                    return Ok(r);
+                }
+                Err(e) => e,
+            };
+            // A non-transient error (the kernel itself failed) must not
+            // migrate; a transient fault on a *live* device already spent
+            // its engine-side budget.
+            if !err.is_transient() || self.sessions[device].engine().device_lost().is_none() {
+                self.relaunch.remove(&seq);
+                return Err(err);
+            }
+            let lost_launch = h.id();
+            let Some((ck, left)) =
+                self.sessions[device].engine_mut().harvest_checkpoint(lost_launch)
+            else {
+                // No budget remained at loss — fail exactly as today.
+                self.relaunch.remove(&seq);
+                return Err(err);
+            };
+            let Some(spec) = self.relaunch.get(&seq).cloned() else {
+                self.relaunch.remove(&seq);
+                return Err(err);
+            };
+            match self.migrate(seq, device, lost_launch.raw(), ck, left, &spec) {
+                Ok((target, handle)) => {
+                    device = target;
+                    h = handle;
+                }
+                Err(e) => {
+                    self.relaunch.remove(&seq);
+                    return Err(e);
+                }
+            }
+        }
+    }
+
+    /// Move a rescued launch onto a surviving device: pick the
+    /// least-occupied survivor with enough cores (ties to the lower
+    /// index; checkpoint entries are positional, so the core count is
+    /// preserved and the target runs on its first `n` cores), stage the
+    /// checkpoint through Host level, re-freshen the launch's
+    /// group-buffer inputs on the target, and resubmit with the remaining
+    /// budget. No capable survivor exhausts the launch to
+    /// [`Error::DependencyFailed`] naming the lost device.
+    fn migrate(
+        &mut self,
+        seq: u64,
+        lost: usize,
+        lost_launch: u64,
+        ck: Option<LaunchCheckpoint>,
+        left: u32,
+        spec: &RelaunchSpec,
+    ) -> Result<(usize, OffloadHandle)> {
+        let needed = spec.cores.as_ref().map_or(self.sessions[lost].tech().cores, Vec::len);
+        let mut target: Option<usize> = None;
+        let mut best_frac = f64::INFINITY;
+        for (i, s) in self.sessions.iter().enumerate() {
+            if s.engine().device_lost().is_some() || s.tech().cores < needed {
+                continue;
+            }
+            let frac = s.busy_cores() as f64 / s.tech().cores as f64;
+            if frac < best_frac {
+                best_frac = frac;
+                target = Some(i);
+            }
+        }
+        let Some(t) = target else {
+            self.faults.abandoned += 1;
+            return Err(Error::DependencyFailed {
+                launch: seq,
+                dep: lost_launch,
+                dep_device: Some(self.sessions[lost].tech().name.to_string()),
+            });
+        };
+
+        // Stage the checkpoint itself at Host level: loss kills cores,
+        // not host windows, so the lost device's service charges the read
+        // and the survivor's the write — audited like any staging copy.
+        let mut floor: Time = 0;
+        if let Some(k) = &ck {
+            let bytes = k.bytes();
+            let t_src = self.sessions[lost].now();
+            let read_done =
+                self.sessions[lost].engine_mut().service_mut().service(t_src, Level::Host, bytes);
+            let t_dst = self.sessions[t].now().max(read_done);
+            let write_done =
+                self.sessions[t].engine_mut().service_mut().service(t_dst, Level::Host, bytes);
+            self.staging.copies += 1;
+            self.staging.bytes += bytes;
+            self.staging.src_reads += 1;
+            self.staging.dst_writes += 1;
+            self.faults.checkpoint_bytes += bytes;
+            floor = write_done;
+        }
+
+        // Group-buffer inputs must be fresh on the target — including
+        // buffers this launch itself had begun writing (the recovering
+        // exemption on the poison check — see `ensure_fresh`).
+        let mut flows: Vec<(usize, bool)> = Vec::new();
+        for a in &spec.args {
+            for (gid, write) in a.flows() {
+                match flows.iter_mut().find(|(g, _)| *g == gid) {
+                    Some((_, w)) => *w |= write,
+                    None => flows.push((gid, write)),
+                }
+            }
+        }
+        for &(gid, _) in &flows {
+            match self.ensure_fresh(gid, t, seq, Some((lost, lost_launch)))? {
+                StageOutcome::Fresh => {}
+                StageOutcome::Staged(done) => floor = floor.max(done),
+                StageOutcome::Poisoned(e) => {
+                    self.faults.abandoned += 1;
+                    return Err(e);
+                }
+            }
+        }
+
+        let dev_args: Vec<ArgSpec> =
+            spec.args.iter().map(|a| self.resolve_arg(a, t)).collect::<Result<Vec<_>>>()?;
+        let mut options = OffloadOptions::default()
+            .transfer(spec.mode)
+            .not_before(floor)
+            .retry(left.saturating_sub(1))
+            .backoff(spec.backoff);
+        if let Some(p) = spec.prefetch.clone() {
+            options = options.prefetch(p);
+        }
+        if let Some(f) = spec.fuel {
+            options = options.fuel(f);
+        }
+        options.restore = ck.map(Rc::new);
+        let handle = self.sessions[t]
+            .launch_named(&spec.kernel)?
+            .args(&dev_args)
+            .options(options)
+            .cores((0..needed).collect())
+            .submit()?;
+        for &(gid, write) in &flows {
+            if write {
+                self.record_writer(gid, t, handle.id().raw());
+            }
+        }
+        self.faults.migrated += 1;
+        Ok((t, handle))
+    }
+
     /// Automatic placement: the device with the lowest busy-core
-    /// fraction; ties go to the lower index (deterministic).
+    /// fraction; ties go to the lower index (deterministic). A lost
+    /// device never receives new work (submitting there would only
+    /// abandon the launch on arrival); with every device lost the fall
+    /// back is device 0, whose engine fails the launch immediately.
     fn place(&self) -> usize {
         let mut best = 0;
         let mut best_frac = f64::INFINITY;
         for (i, s) in self.sessions.iter().enumerate() {
+            if s.engine().device_lost().is_some() {
+                continue;
+            }
             let frac = s.busy_cores() as f64 / s.tech().cores as f64;
             if frac < best_frac {
                 best_frac = frac;
@@ -556,8 +819,20 @@ impl GroupSession {
     /// Make buffer `gid` fresh on device `d` (module docs: quiesce both
     /// ends, refuse a failed writer, charge one host-level read + one
     /// host-level write, return the copy's completion as the activation
-    /// floor).
-    fn ensure_fresh(&mut self, gid: usize, d: usize, seq: u64) -> Result<StageOutcome> {
+    /// floor). `recovering` names a `(device, engine launch id)` being
+    /// migrated off a lost device: that launch is its own recorded writer
+    /// for buffers it had begun mutating, and although it *failed* on the
+    /// lost engine, staging its partial pre-checkpoint writes out of the
+    /// lost device's host-level replica is exactly the recovery path — so
+    /// it is exempt from the poison check (deterministic replay re-issues
+    /// the missing writes idempotently).
+    fn ensure_fresh(
+        &mut self,
+        gid: usize,
+        d: usize,
+        seq: u64,
+        recovering: Option<(usize, u64)>,
+    ) -> Result<StageOutcome> {
         if self.bufs[gid].fresh[d] {
             return Ok(StageOutcome::Fresh);
         }
@@ -574,8 +849,11 @@ impl GroupSession {
         self.sessions[s].quiesce(src)?;
         self.sessions[d].quiesce(dst)?;
         if let Some(w) = self.bufs[gid].writer {
-            let failed = w.parked
-                || self.sessions[w.device].engine().launch_failed(LaunchId::from_raw(w.id));
+            let exempt =
+                recovering.is_some_and(|(dev, id)| !w.parked && w.device == dev && w.id == id);
+            let failed = !exempt
+                && (w.parked
+                    || self.sessions[w.device].engine().launch_failed(LaunchId::from_raw(w.id)));
             if failed {
                 return Ok(StageOutcome::Poisoned(Error::DependencyFailed {
                     launch: seq,
@@ -665,6 +943,8 @@ pub struct GroupLaunchBuilder<'g> {
     prefetch: Option<PrefetchSpec>,
     fuel: Option<u64>,
     after: Vec<GroupHandle>,
+    retry: u32,
+    backoff: Time,
 }
 
 impl GroupLaunchBuilder<'_> {
@@ -714,6 +994,23 @@ impl GroupLaunchBuilder<'_> {
         self
     }
 
+    /// Transient-fault retry budget ([`super::OffloadOptions::retry`]).
+    /// Besides the engine's same-device checkpoint/retry, a budgeted
+    /// group launch whose device is permanently *lost* **migrates**: its
+    /// harvested checkpoint is staged through Host level and resumed on
+    /// the best surviving device (module docs). Default 0 = fail-fast.
+    pub fn retry(mut self, n: u32) -> Self {
+        self.retry = n;
+        self
+    }
+
+    /// Virtual-time back-off before each same-device retry requeue
+    /// ([`super::OffloadOptions::backoff`]).
+    pub fn backoff(mut self, t: Time) -> Self {
+        self.backoff = t;
+        self
+    }
+
     /// Add an explicit dependency edge on an earlier group launch.
     /// Explicit edges live inside one engine, so the dependency must be
     /// on the **same device** as this launch (cross-device ordering is
@@ -732,8 +1029,19 @@ impl GroupLaunchBuilder<'_> {
     /// the chosen device's engine. Returns without driving any timeline
     /// beyond the quiesces staging requires.
     pub fn submit(self) -> Result<GroupHandle> {
-        let GroupLaunchBuilder { group, kernel, device, cores, args, mode, prefetch, fuel, after } =
-            self;
+        let GroupLaunchBuilder {
+            group,
+            kernel,
+            device,
+            cores,
+            args,
+            mode,
+            prefetch,
+            fuel,
+            after,
+            retry,
+            backoff,
+        } = self;
         let d = match device {
             Some(dev) => {
                 if dev.0 >= group.sessions.len() {
@@ -773,7 +1081,7 @@ impl GroupLaunchBuilder<'_> {
         let mut not_before: Time = 0;
         let mut parked: Option<Error> = None;
         for &(gid, _) in &flows {
-            match group.ensure_fresh(gid, d, seq)? {
+            match group.ensure_fresh(gid, d, seq, None)? {
                 StageOutcome::Fresh => {}
                 StageOutcome::Staged(t) => not_before = not_before.max(t),
                 StageOutcome::Poisoned(e) => {
@@ -823,7 +1131,23 @@ impl GroupLaunchBuilder<'_> {
 
         let dev_args: Vec<ArgSpec> =
             args.iter().map(|a| group.resolve_arg(a, d)).collect::<Result<Vec<_>>>()?;
-        let mut options = OffloadOptions::default().transfer(mode).not_before(not_before);
+        // A nonzero budget records everything migration would need to
+        // resubmit this launch elsewhere; fail-fast launches record
+        // nothing.
+        let relaunch = (retry > 0).then(|| RelaunchSpec {
+            kernel: kernel.clone(),
+            args: args.clone(),
+            cores: cores.clone(),
+            mode,
+            prefetch: prefetch.clone(),
+            fuel,
+            backoff,
+        });
+        let mut options = OffloadOptions::default()
+            .transfer(mode)
+            .not_before(not_before)
+            .retry(retry)
+            .backoff(backoff);
         if let Some(p) = prefetch {
             options = options.prefetch(p);
         }
@@ -838,6 +1162,9 @@ impl GroupLaunchBuilder<'_> {
             builder = builder.cores(cs);
         }
         let h = builder.submit()?;
+        if let Some(spec) = relaunch {
+            group.relaunch.insert(seq, spec);
+        }
         for &(gid, write) in &flows {
             if write {
                 group.record_writer(gid, d, h.id().raw());
@@ -874,7 +1201,7 @@ impl GroupHandle {
             return Err(e);
         }
         match self.inner {
-            Some(h) => group.sessions[self.device.0].wait(h),
+            Some(h) => group.wait_recovering(self.seq, self.device.0, h),
             None => Err(Error::Coordinator(format!(
                 "group launch {} is unknown or already waited",
                 self.seq
@@ -1023,6 +1350,87 @@ def fill(a, v):
             .unwrap();
         r2.wait(&mut g).unwrap();
         assert_eq!(g.staging_counters().copies, 1, "replica is fresh now");
+    }
+
+    #[test]
+    fn device_loss_migrates_budgeted_launch_to_survivor() {
+        let mut g = GroupSession::builder()
+            .device(Technology::epiphany3())
+            .device(Technology::epiphany3())
+            .seed(9)
+            .faults(0, FaultPlan::new().lose_device(1))
+            .build()
+            .unwrap();
+        let a = g.alloc(MemSpec::host("a").zeroed(32)).unwrap();
+        g.compile_kernel("fill", FILL_SRC).unwrap();
+        let h = g
+            .launch_named("fill")
+            .unwrap()
+            .args(&[GroupArgSpec::sharded_mut(a), GroupArgSpec::Float(1.0)])
+            .on(DeviceId(0))
+            .cores((0..4).collect())
+            .retry(2)
+            .submit()
+            .unwrap();
+        let r = h.wait(&mut g).unwrap();
+        assert_eq!(r.reports.len(), 4);
+        let fc = g.fault_counters();
+        assert_eq!((fc.injected, fc.migrated, fc.abandoned), (1, 1, 0), "{fc:?}");
+        // The migrated run lands exactly the fault-free values.
+        let mut expect = vec![0.0f32; 32];
+        for s in 0..4 {
+            for i in 0..8 {
+                expect[s * 8 + i] = 1.0 + i as f32;
+            }
+        }
+        assert_eq!(g.read(a).unwrap(), expect);
+        // New work avoids the lost device.
+        let h2 = g
+            .launch_named("fill")
+            .unwrap()
+            .args(&[GroupArgSpec::sharded_mut(a), GroupArgSpec::Float(2.0)])
+            .cores((0..4).collect())
+            .submit()
+            .unwrap();
+        assert_eq!(h2.device(), DeviceId(1), "placement skips the lost device");
+        h2.wait(&mut g).unwrap();
+    }
+
+    #[test]
+    fn migration_without_capable_survivor_exhausts_to_dependency_failed() {
+        let mut g = GroupSession::builder()
+            .device(Technology::epiphany3())
+            .seed(9)
+            .faults(0, FaultPlan::new().lose_device(1))
+            .build()
+            .unwrap();
+        let lost_name = g.tech(DeviceId(0)).name.to_string();
+        let a = g.alloc(MemSpec::host("a").zeroed(32)).unwrap();
+        g.compile_kernel("fill", FILL_SRC).unwrap();
+        let h = g
+            .launch_named("fill")
+            .unwrap()
+            .args(&[GroupArgSpec::sharded_mut(a), GroupArgSpec::Float(1.0)])
+            .cores((0..4).collect())
+            .retry(3)
+            .submit()
+            .unwrap();
+        match h.wait(&mut g).unwrap_err() {
+            Error::DependencyFailed { dep_device: Some(d), .. } => assert_eq!(d, lost_name),
+            other => panic!("expected DependencyFailed naming the lost device, got {other:?}"),
+        }
+        let fc = g.fault_counters();
+        assert_eq!((fc.migrated, fc.abandoned), (0, 1), "{fc:?}");
+        // Without budget the same loss is plain fail-fast: the engine's
+        // CoreFault surfaces unchanged.
+        let h2 = g
+            .launch_named("fill")
+            .unwrap()
+            .args(&[GroupArgSpec::sharded_mut(a), GroupArgSpec::Float(1.0)])
+            .cores((0..4).collect())
+            .submit()
+            .unwrap();
+        assert!(h2.wait(&mut g).unwrap_err().is_transient());
     }
 
     #[test]

@@ -47,7 +47,7 @@ pub mod service;
 pub mod session;
 pub mod shard;
 
-pub use engine::{Engine, EngineStats, LaunchId, LaunchStatus, OffloadOutcome, QueueStats};
+pub use engine::{Engine, EngineStats, LaunchCheckpoint, LaunchId, LaunchStatus, OffloadOutcome, QueueStats};
 pub use group::{DeviceGroup, DeviceId, GroupArgSpec, GroupHandle, GroupLaunchBuilder, GroupRef, GroupSession};
 pub use marshal::{ArgSpec, BoundArg, PrefetchChoice};
 pub use offload::{Kernel, KernelRegistry, OffloadOptions, OffloadResult};

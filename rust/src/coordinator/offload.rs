@@ -11,7 +11,7 @@ use crate::error::{Error, Result};
 use crate::sim::Time;
 use crate::vm::{self, CostCounters, Program, Value};
 
-use super::engine::LaunchId;
+use super::engine::{LaunchCheckpoint, LaunchId};
 use super::prefetch::PrefetchSpec;
 use super::TransferMode;
 
@@ -127,6 +127,18 @@ pub struct OffloadOptions {
     /// activates no earlier than the staged data's arrival — exactly like
     /// an in-engine edge raising `dep_ready`.
     pub not_before: Time,
+    /// Transient-fault retry budget (default 0 = today's fail-fast: the
+    /// first fault abandons the launch and poisons its dependents). With a
+    /// budget, a faulted launch restores its last checkpoint and requeues
+    /// on the same device, consuming one retry per fault.
+    pub retry: u32,
+    /// Virtual-time back-off inserted before each retry requeue (on top of
+    /// the modeled checkpoint-restore cost). Default 0.
+    pub backoff: Time,
+    /// Resume from a harvested checkpoint instead of starting fresh — set
+    /// by the multi-device group when it migrates a launch off a lost
+    /// device; never by user code.
+    pub(crate) restore: Option<Rc<LaunchCheckpoint>>,
 }
 
 impl Default for OffloadOptions {
@@ -139,6 +151,9 @@ impl Default for OffloadOptions {
             after: Vec::new(),
             flow_deps: true,
             not_before: 0,
+            retry: 0,
+            backoff: 0,
+            restore: None,
         }
     }
 }
@@ -186,6 +201,19 @@ impl OffloadOptions {
     /// field docs on [`OffloadOptions::not_before`]).
     pub fn not_before(mut self, at: Time) -> Self {
         self.not_before = at;
+        self
+    }
+
+    /// Set the transient-fault retry budget (see
+    /// [`OffloadOptions::retry`]; 0 = fail-fast, the default).
+    pub fn retry(mut self, n: u32) -> Self {
+        self.retry = n;
+        self
+    }
+
+    /// Set the virtual-time back-off before each retry requeue.
+    pub fn backoff(mut self, t: Time) -> Self {
+        self.backoff = t;
         self
     }
 }
@@ -282,6 +310,11 @@ mod tests {
         let o = OffloadOptions::default().prefetch(p);
         assert_eq!(o.mode, TransferMode::Prefetch);
         assert!(o.default_prefetch.is_some());
+        let o = OffloadOptions::default().retry(3).backoff(1_000);
+        assert_eq!((o.retry, o.backoff), (3, 1_000));
+        let d = OffloadOptions::default();
+        assert_eq!((d.retry, d.backoff), (0, 0), "default stays fail-fast");
+        assert!(d.restore.is_none());
     }
 
     #[test]

@@ -238,6 +238,31 @@ impl PrefetchState {
         spans
     }
 
+    /// The stream's window start — the earliest element still resident.
+    /// Together with [`PrefetchState::seek`] this is how a launch
+    /// checkpoint captures and restores a pre-fetch stream: the cursor is
+    /// the only position that must survive (buffered data is re-fetched
+    /// from the home location on resume, which also re-delivers any
+    /// write-through values — they are already home).
+    pub fn cursor(&self) -> usize {
+        self.lo
+    }
+
+    /// Re-seed the stream at `idx` without touching the hit/miss
+    /// statistics: checkpoint *restore* repositions the stream exactly
+    /// where the snapshot left it, and accounting a miss for that would
+    /// make a recovered run's statistics diverge from its fault-free twin
+    /// for reasons that are not the kernel's accesses. The mechanical
+    /// effect is identical to [`PrefetchState::plan_read`]'s miss arm.
+    pub fn seek(&mut self, idx: usize) {
+        self.lo = idx;
+        self.hi = idx;
+        self.buf.clear();
+        self.next_fetch = idx;
+        self.inflight.clear();
+        self.overlay.clear();
+    }
+
     /// Register a channel request covering `[start, start+len)`.
     pub fn on_issued(&mut self, handle: Handle, start: usize, len: usize) {
         self.fetches_issued += 1;
@@ -428,6 +453,24 @@ mod tests {
         assert_eq!(st.stats().0, h0 + 1);
         // peek_hit agrees with plan_read on residency
         assert_eq!(st.plan_read(0), ReadPlan::Hit(10.0));
+    }
+
+    #[test]
+    fn seek_repositions_without_miss_accounting() {
+        let mut st = PrefetchState::new(spec(), 1000).unwrap();
+        for (i, (s, l)) in st.spans_to_fetch(0).into_iter().enumerate() {
+            st.on_issued(handle(i), s, l);
+        }
+        assert_eq!(st.cursor(), 0);
+        st.seek(500);
+        assert_eq!(st.cursor(), 500);
+        let (h, m, _) = st.stats();
+        assert_eq!((h, m), (0, 0), "seek is invisible to the statistics");
+        // Stream restarts at the seek point, like plan_read's miss arm.
+        let spans = st.spans_to_fetch(500);
+        assert_eq!(spans[0], (500, 2));
+        st.on_arrival(handle(0), &[1.0, 2.0]); // pre-seek arrival: stale
+        assert!(st.peek_hit(0).is_none());
     }
 
     #[test]

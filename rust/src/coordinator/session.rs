@@ -55,7 +55,7 @@ use crate::memory::{
     ProceduralKind, SharedCacheKind, SharedKind, SinkKind,
 };
 use crate::runtime::{ModelExecutor, PjrtContext};
-use crate::sim::Time;
+use crate::sim::{FaultCounters, FaultPlan, Time};
 use crate::vm::Value;
 
 use super::engine::{Engine, EngineStats, LaunchId, LaunchStatus};
@@ -72,6 +72,7 @@ pub struct SessionBuilder {
     service_threads: usize,
     seed: u64,
     trace_capacity: Option<usize>,
+    faults: Option<FaultPlan>,
 }
 
 impl SessionBuilder {
@@ -83,6 +84,7 @@ impl SessionBuilder {
             service_threads: 1,
             seed: 42,
             trace_capacity: None,
+            faults: None,
         }
     }
 
@@ -110,6 +112,16 @@ impl SessionBuilder {
         self
     }
 
+    /// Install a seeded fault schedule ([`FaultPlan`]) — transient core
+    /// faults, transfer corruption and permanent device loss, delivered
+    /// deterministically on the virtual timeline. Pair with the launch
+    /// builder's `.retry(n)`/`.backoff(t)` to recover from them; without
+    /// a budget the first fault fails the launch (today's fail-fast).
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(plan);
+        self
+    }
+
     /// Construct the session.
     pub fn build(self) -> Result<Session> {
         let exec = match &self.artifacts_dir {
@@ -119,6 +131,9 @@ impl SessionBuilder {
         let mut engine = Engine::new(self.tech.clone(), self.service_threads, self.seed, exec);
         if let Some(cap) = self.trace_capacity {
             engine.enable_trace(cap);
+        }
+        if let Some(plan) = self.faults {
+            engine.install_faults(plan);
         }
         Ok(Session { tech: self.tech, engine, kernels: KernelRegistry::new() })
     }
@@ -156,6 +171,11 @@ impl Session {
     /// Engine statistics snapshot.
     pub fn stats(&self) -> EngineStats {
         self.engine.stats()
+    }
+
+    /// Fault/recovery accounting (all-zero without a fault plan).
+    pub fn fault_counters(&self) -> FaultCounters {
+        self.engine.fault_counters()
     }
 
     /// Current virtual time.
@@ -506,6 +526,22 @@ impl LaunchBuilder<'_> {
     /// interleaving, no ordering promise.
     pub fn independent(mut self) -> Self {
         self.options.flow_deps = false;
+        self
+    }
+
+    /// Set the transient-fault retry budget: a faulted launch restores
+    /// its last checkpoint and requeues on the same device, up to `n`
+    /// times. Default 0 keeps today's fail-fast behavior — the first
+    /// fault parks the error and poisons dependents.
+    pub fn retry(mut self, n: u32) -> Self {
+        self.options.retry = n;
+        self
+    }
+
+    /// Virtual-time back-off inserted before each retry requeue (on top
+    /// of the modeled checkpoint-restore read).
+    pub fn backoff(mut self, t: Time) -> Self {
+        self.options.backoff = t;
         self
     }
 

@@ -40,6 +40,18 @@ pub enum Error {
         /// staging edge, where "launch 3" alone would be ambiguous.
         dep_device: Option<String>,
     },
+    /// A transient device fault (injected by [`crate::sim::FaultPlan`])
+    /// struck a launch at one of its suspension points: the core lost its
+    /// in-flight work. Transient by definition — with a retry budget the
+    /// engine restores the launch's last checkpoint and requeues it, and
+    /// in a multi-device group a launch stranded by device loss migrates;
+    /// this error only surfaces when the budget is exhausted (or zero).
+    CoreFault {
+        /// Physical core the fault struck.
+        core: usize,
+        /// The launch occupying that core.
+        launch: u64,
+    },
     /// PJRT runtime errors (artifact missing, shape mismatch, XLA failure).
     Runtime(String),
     /// Configuration / manifest parse errors.
@@ -48,6 +60,17 @@ pub enum Error {
     Io(std::io::Error),
     /// Error bubbled up from the `xla` crate.
     Xla(String),
+}
+
+impl Error {
+    /// Whether this failure is *transient*: retrying the same work (from a
+    /// checkpoint, or from scratch) can plausibly succeed. Deterministic
+    /// failures — syntax errors, scratchpad exhaustion, protocol
+    /// violations — replay identically, so retrying them only burns budget;
+    /// the engine's retry/migration machinery acts on transient errors only.
+    pub fn is_transient(&self) -> bool {
+        matches!(self, Error::CoreFault { .. })
+    }
 }
 
 impl fmt::Display for Error {
@@ -69,6 +92,9 @@ impl fmt::Display for Error {
                     write!(f, " on device {d}")?;
                 }
                 Ok(())
+            }
+            Error::CoreFault { core, launch } => {
+                write!(f, "launch {launch}: transient fault on core {core} (retry budget exhausted)")
             }
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
@@ -133,5 +159,60 @@ mod tests {
         let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
         assert!(e.to_string().contains("gone"));
         assert!(std::error::Error::source(&e).is_some());
+    }
+
+    #[test]
+    fn display_covers_every_variant() {
+        let cases: Vec<(Error, &str)> = vec![
+            (Error::Syntax { line: 7, msg: "bad token".into() }, "syntax error (line 7): bad token"),
+            (Error::Compile("no entry".into()), "compile error: no entry"),
+            (Error::Vm("oob".into()), "vm error: oob"),
+            (
+                Error::ScratchpadExhausted { core: 1, requested: 64, free: 8 },
+                "core 1: scratchpad exhausted (64 B requested, 8 B free)",
+            ),
+            (Error::Memory("bad ref".into()), "memory error: bad ref"),
+            (Error::Channel("double ack".into()), "channel error: double ack"),
+            (Error::Coordinator("unknown kernel".into()), "coordinator error: unknown kernel"),
+            (
+                Error::DependencyFailed { launch: 9, dep: 4, dep_device: None },
+                "launch 9 abandoned: dependency launch 4 failed",
+            ),
+            (
+                Error::CoreFault { core: 5, launch: 11 },
+                "launch 11: transient fault on core 5 (retry budget exhausted)",
+            ),
+            (Error::Runtime("artifact missing".into()), "runtime error: artifact missing"),
+            (Error::Config("bad manifest".into()), "config error: bad manifest"),
+            (
+                Error::Io(std::io::Error::new(std::io::ErrorKind::NotFound, "gone")),
+                "io error: gone",
+            ),
+            (Error::Xla("shape".into()), "xla error: shape"),
+        ];
+        for (e, want) in cases {
+            assert_eq!(e.to_string(), want, "{e:?}");
+        }
+    }
+
+    #[test]
+    fn only_core_faults_are_transient() {
+        assert!(Error::CoreFault { core: 0, launch: 1 }.is_transient());
+        for e in [
+            Error::Syntax { line: 1, msg: "x".into() },
+            Error::Compile("x".into()),
+            Error::Vm("x".into()),
+            Error::ScratchpadExhausted { core: 0, requested: 1, free: 0 },
+            Error::Memory("x".into()),
+            Error::Channel("x".into()),
+            Error::Coordinator("x".into()),
+            Error::DependencyFailed { launch: 1, dep: 0, dep_device: None },
+            Error::Runtime("x".into()),
+            Error::Config("x".into()),
+            Error::Io(std::io::Error::other("x")),
+            Error::Xla("x".into()),
+        ] {
+            assert!(!e.is_transient(), "{e:?}");
+        }
     }
 }

@@ -15,7 +15,8 @@ use microcore::config::ExperimentConfig;
 use microcore::coordinator::{Session, TransferMode};
 use microcore::device::Technology;
 use microcore::memory::{Hierarchy, Level};
-use microcore::metrics::report::{f3, ms, Table};
+use microcore::metrics::report::{f3, fault_table, ms, Table};
+use microcore::sim::FaultPlan;
 use microcore::workloads::{linpack, mlbench, stall};
 
 fn main() {
@@ -39,6 +40,8 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
     .opt("epochs", None, "passes over the mlbench image set")
     .opt("artifacts", Some("artifacts"), "AOT artifacts directory")
     .opt("seed", Some("42"), "deterministic seed")
+    .opt("faults", None, "mlbench: inject a seeded transient-fault plan (value = fault seed)")
+    .opt("retries", Some("0"), "mlbench: per-launch retry budget under --faults (0 = fail fast)")
     .opt("config", None, "JSON experiment config (overrides other flags)")
     .flag("full", "full-size image regime for mlbench")
     .flag("cache", "front the mlbench image store with the shared-window cache")
@@ -263,6 +266,49 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
                     segment_elems: seg,
                     capacity_segments: want.min(window_cap).max(1),
                 });
+            }
+            if let Some(fs) = args.get("faults") {
+                // Fault-injection quickstart: run fault-free first (the
+                // reference losses and the virtual-time horizon the plan
+                // arms over), then replay with seeded transient faults
+                // and a retry budget — recovery must be invisible in the
+                // losses; only the clock and fault counters move.
+                let fseed: u64 = fs.parse()?;
+                let retries: u32 = args.parse_as("retries")?;
+                let mut reference = mlbench::MlBench::new(session, cfg.clone())?;
+                let ref_out = reference.run()?;
+                let horizon = reference.session().now();
+                let mut fcfg = cfg.clone();
+                fcfg.retry = retries;
+                fcfg.backoff = 1_000;
+                let mut fsess = Session::builder(tech.clone())
+                    .artifacts_dir(args.req("artifacts")?)
+                    .seed(seed)
+                    .build()?;
+                fsess
+                    .engine_mut()
+                    .install_faults(FaultPlan::seeded(fseed, tech.cores, horizon, 4));
+                let mut bench = mlbench::MlBench::new(fsess, fcfg)?;
+                let outcome = bench.run();
+                let fc = bench.session().fault_counters();
+                print!(
+                    "{}",
+                    fault_table(
+                        format!("fault injection — seed {fseed}, retry budget {retries}"),
+                        &fc
+                    )
+                    .render()
+                );
+                match outcome {
+                    Ok(r) => println!(
+                        "losses bit-identical to the fault-free run: {}",
+                        r.losses == ref_out.losses
+                    ),
+                    Err(e) => {
+                        println!("run failed under injected faults (fail-fast budget): {e}")
+                    }
+                }
+                return Ok(());
             }
             let mut bench = mlbench::MlBench::new(session, cfg.clone())?;
             let r = bench.run()?;

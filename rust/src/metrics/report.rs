@@ -138,6 +138,25 @@ pub fn staging_table(title: impl Into<String>, s: &crate::sim::StagingCounters) 
     t
 }
 
+/// Render a one-row fault/recovery audit table (fault injection runs; see
+/// [`crate::sim::FaultCounters`]).
+pub fn fault_table(title: impl Into<String>, c: &crate::sim::FaultCounters) -> Table {
+    let mut t = Table::new(
+        title,
+        &["injected", "retried", "migrated", "recovered", "abandoned", "ckpt KB", "recovery ms"],
+    );
+    t.row(&[
+        c.injected.to_string(),
+        c.retried.to_string(),
+        c.migrated.to_string(),
+        c.recovered.to_string(),
+        c.abandoned.to_string(),
+        format!("{:.1}", c.checkpoint_bytes as f64 / 1024.0),
+        ms(c.recovery_time),
+    ]);
+    t
+}
+
 /// Format a float with 3 decimals.
 pub fn f3(v: f64) -> String {
     format!("{v:.3}")
@@ -176,6 +195,25 @@ mod tests {
         assert!(s.contains("image cache"));
         assert!(s.contains('9'));
         assert!(s.contains("0.750"));
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn fault_table_renders_counts_and_overhead() {
+        let c = crate::sim::FaultCounters {
+            injected: 4,
+            retried: 3,
+            migrated: 1,
+            recovered: 4,
+            abandoned: 0,
+            checkpoint_bytes: 3072,
+            recovery_time: 2_000_000,
+        };
+        let t = fault_table("faults", &c);
+        let s = t.render();
+        assert!(s.contains("faults"));
+        assert!(s.contains("3.0"), "3072 B = 3.0 KB: {s}");
+        assert!(s.contains("2.000"), "2 ms recovery: {s}");
         assert_eq!(t.len(), 1);
     }
 

@@ -1,0 +1,209 @@
+//! Seeded fault injection for the virtual timeline.
+//!
+//! A [`FaultPlan`] is a deterministic schedule of faults the engine
+//! consults as it drives events: **transient core faults** and **transfer
+//! corruption** strike at the next suspension point of whatever launch
+//! occupies the named core at (or after) the scheduled time, and
+//! **permanent device loss** kills every in-flight launch on the device.
+//! Because the plan keys off the shared virtual clock and physical core
+//! ids — never wall time or queue internals — a seeded plan reproduces the
+//! same fault sequence on every run, which is what lets the differential
+//! property compare a faulted run against its fault-free twin.
+//!
+//! Corruption is modeled at the *detection* point: the engine notices the
+//! poisoned transfer at the suspension it services, before any value is
+//! committed to a register file or the memory registry, so recovery is
+//! identical to a transient fault (restore the last checkpoint and
+//! replay). This mirrors link-level CRC on real interconnects — a corrupt
+//! beat is dropped and retried, never consumed.
+
+use super::rng::Rng;
+use super::Time;
+
+/// What kind of fault strikes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// A transient fault on one core: the launch occupying it loses its
+    /// in-flight work and must restore a checkpoint (or restart).
+    Transient {
+        /// Physical core struck.
+        core: usize,
+    },
+    /// A serviced transfer for one core returns poisoned data; detected
+    /// before commit, so handled exactly like [`FaultKind::Transient`].
+    Corrupt {
+        /// Physical core whose transfer was corrupted.
+        core: usize,
+    },
+    /// The whole device is permanently lost: every in-flight launch fails
+    /// and only cross-device migration (in a group) can recover them.
+    DeviceLoss,
+}
+
+impl FaultKind {
+    /// The physical core a core-scoped fault strikes (`None` for loss).
+    pub fn core(&self) -> Option<usize> {
+        match self {
+            FaultKind::Transient { core } | FaultKind::Corrupt { core } => Some(*core),
+            FaultKind::DeviceLoss => None,
+        }
+    }
+}
+
+/// One scheduled fault.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultEvent {
+    /// Virtual time at (or after) which the fault arms. A core fault
+    /// stays armed until the core next reaches a suspension point.
+    pub at: Time,
+    /// What strikes.
+    pub kind: FaultKind,
+}
+
+/// A deterministic schedule of faults for one device (see module docs).
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// Core-scoped faults, sorted by arm time.
+    events: Vec<FaultEvent>,
+    /// Permanent device loss, if scheduled.
+    loss: Option<Time>,
+}
+
+impl FaultPlan {
+    /// An empty plan (injects nothing).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule a transient fault on `core`, armed from `at`.
+    pub fn transient(mut self, at: Time, core: usize) -> Self {
+        self.events.push(FaultEvent { at, kind: FaultKind::Transient { core } });
+        self.events.sort_by_key(|e| e.at);
+        self
+    }
+
+    /// Schedule a transfer corruption for `core`, armed from `at`.
+    pub fn corrupt(mut self, at: Time, core: usize) -> Self {
+        self.events.push(FaultEvent { at, kind: FaultKind::Corrupt { core } });
+        self.events.sort_by_key(|e| e.at);
+        self
+    }
+
+    /// Schedule permanent device loss at `at` (earliest wins if repeated).
+    pub fn lose_device(mut self, at: Time) -> Self {
+        self.loss = Some(self.loss.map_or(at, |t| t.min(at)));
+        self
+    }
+
+    /// Derive a plan of `n` core faults (≈70% transient, ≈30% corrupt)
+    /// across `cores` cores, armed uniformly over `(0, horizon]`, from a
+    /// seed. Never schedules device loss — loss is an explicit,
+    /// topology-level decision ([`FaultPlan::lose_device`]).
+    pub fn seeded(seed: u64, cores: usize, horizon: Time, n: usize) -> Self {
+        debug_assert!(cores > 0);
+        let mut rng = Rng::new(seed);
+        let mut plan = FaultPlan::new();
+        for _ in 0..n {
+            let at = rng.range_u64(1, horizon.max(2));
+            let core = rng.range_u64(0, cores as u64) as usize;
+            let kind = if rng.chance(0.3) {
+                FaultKind::Corrupt { core }
+            } else {
+                FaultKind::Transient { core }
+            };
+            plan.events.push(FaultEvent { at, kind });
+        }
+        plan.events.sort_by_key(|e| e.at);
+        plan
+    }
+
+    /// Consume the earliest armed fault for `core` at virtual time `now`,
+    /// if any. Each scheduled fault fires exactly once; a fault whose arm
+    /// time has passed stays armed until the core next suspends (a core
+    /// sitting idle cannot fault — there is nothing to strike).
+    pub fn take_fault(&mut self, core: usize, now: Time) -> Option<FaultKind> {
+        let pos = self
+            .events
+            .iter()
+            .position(|e| e.at <= now && e.kind.core() == Some(core))?;
+        Some(self.events.remove(pos).kind)
+    }
+
+    /// When the device is scheduled to be lost, if ever.
+    pub fn device_loss_at(&self) -> Option<Time> {
+        self.loss
+    }
+
+    /// Core faults still scheduled (armed or future).
+    pub fn pending(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Whether the plan schedules nothing at all.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty() && self.loss.is_none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn armed_fault_waits_for_its_core_and_fires_once() {
+        let mut p = FaultPlan::new().transient(100, 2);
+        assert_eq!(p.take_fault(2, 50), None, "not yet armed");
+        assert_eq!(p.take_fault(1, 200), None, "wrong core");
+        assert_eq!(p.take_fault(2, 200), Some(FaultKind::Transient { core: 2 }));
+        assert_eq!(p.take_fault(2, 300), None, "consumed");
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn earliest_armed_fault_fires_first() {
+        let mut p = FaultPlan::new().corrupt(200, 0).transient(100, 0);
+        assert_eq!(p.take_fault(0, 500), Some(FaultKind::Transient { core: 0 }));
+        assert_eq!(p.take_fault(0, 500), Some(FaultKind::Corrupt { core: 0 }));
+    }
+
+    #[test]
+    fn device_loss_earliest_wins() {
+        let p = FaultPlan::new().lose_device(900).lose_device(400).lose_device(700);
+        assert_eq!(p.device_loss_at(), Some(400));
+        assert!(!p.is_empty());
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_bounded() {
+        let a = FaultPlan::seeded(7, 16, 1_000_000, 10);
+        let b = FaultPlan::seeded(7, 16, 1_000_000, 10);
+        assert_eq!(a.pending(), 10);
+        assert_eq!(b.pending(), 10);
+        assert!(a.device_loss_at().is_none(), "seeded plans never lose the device");
+        let mut a = a;
+        let mut b = b;
+        for core in 0..16 {
+            loop {
+                let (x, y) = (a.take_fault(core, u64::MAX), b.take_fault(core, u64::MAX));
+                assert_eq!(x, y);
+                if x.is_none() {
+                    break;
+                }
+            }
+        }
+        assert!(a.is_empty() && b.is_empty());
+    }
+
+    #[test]
+    fn seeded_arm_times_within_horizon() {
+        let p = FaultPlan::seeded(3, 4, 1000, 50);
+        let mut p2 = p.clone();
+        let mut count = 0;
+        for core in 0..4 {
+            while p2.take_fault(core, 1000).is_some() {
+                count += 1;
+            }
+        }
+        assert_eq!(count, 50, "every fault armed within the horizon");
+    }
+}

@@ -11,13 +11,15 @@
 //! the shared [`timeline`] resources, which guarantees causal ordering
 //! without a general event queue.
 
+pub mod faults;
 pub mod rng;
 pub mod stats;
 pub mod timeline;
 pub mod trace;
 
+pub use faults::{FaultKind, FaultPlan};
 pub use rng::Rng;
-pub use stats::{CacheCounters, Histogram, OnlineStats, StagingCounters};
+pub use stats::{CacheCounters, FaultCounters, Histogram, OnlineStats, StagingCounters};
 pub use timeline::{Resource, Timeline};
 pub use trace::{Trace, TraceEvent};
 

@@ -207,6 +207,61 @@ impl StagingCounters {
     }
 }
 
+/// Fault-injection and recovery accounting (see [`crate::sim::faults`]).
+///
+/// Engines count injections, same-device retries, recoveries and
+/// abandonments plus the modeled checkpoint traffic; a multi-device group
+/// adds cross-device migrations and merges the per-engine counters into
+/// one group-wide view. `recovery_time` is virtual time spent restoring
+/// checkpoints and backing off — the recovery overhead a faulted run pays
+/// over its fault-free twin.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// Faults delivered (core faults that struck a launch + device losses).
+    pub injected: u64,
+    /// Same-device checkpoint-restore retries.
+    pub retried: u64,
+    /// Cross-device migrations (group-level; a lost device's launch
+    /// resumed on a survivor).
+    pub migrated: u64,
+    /// Faulted launches that went on to complete successfully.
+    pub recovered: u64,
+    /// Faulted launches abandoned (retry budget exhausted, no checkpoint
+    /// path, or no surviving device could host the migration).
+    pub abandoned: u64,
+    /// Bytes of checkpoint images written (Shared-level, cost-modeled).
+    pub checkpoint_bytes: u64,
+    /// Virtual nanoseconds spent on restores and backoff delays.
+    pub recovery_time: u64,
+}
+
+impl FaultCounters {
+    /// Fold another counter set into this one (group-wide aggregation).
+    pub fn merge(&mut self, other: &FaultCounters) {
+        self.injected += other.injected;
+        self.retried += other.retried;
+        self.migrated += other.migrated;
+        self.recovered += other.recovered;
+        self.abandoned += other.abandoned;
+        self.checkpoint_bytes += other.checkpoint_bytes;
+        self.recovery_time += other.recovery_time;
+    }
+
+    /// The activity since `earlier` (a prior snapshot): per-field
+    /// saturating difference, mirroring [`CacheCounters::since`].
+    pub fn since(&self, earlier: &FaultCounters) -> FaultCounters {
+        FaultCounters {
+            injected: self.injected.saturating_sub(earlier.injected),
+            retried: self.retried.saturating_sub(earlier.retried),
+            migrated: self.migrated.saturating_sub(earlier.migrated),
+            recovered: self.recovered.saturating_sub(earlier.recovered),
+            abandoned: self.abandoned.saturating_sub(earlier.abandoned),
+            checkpoint_bytes: self.checkpoint_bytes.saturating_sub(earlier.checkpoint_bytes),
+            recovery_time: self.recovery_time.saturating_sub(earlier.recovery_time),
+        }
+    }
+}
+
 /// Log2-bucketed histogram over `u64` magnitudes (latencies in ns, sizes in
 /// bytes). Bucket `i` holds values in `[2^i, 2^(i+1))`; bucket 0 holds 0–1.
 #[derive(Debug, Clone)]
@@ -371,6 +426,26 @@ mod tests {
         assert_eq!(a, StagingCounters { copies: 3, bytes: 640, src_reads: 3, dst_writes: 3 });
         assert_eq!(a.since(&b), StagingCounters { copies: 2, bytes: 512, src_reads: 2, dst_writes: 2 });
         assert_eq!(b.since(&a), StagingCounters::default(), "saturates");
+    }
+
+    #[test]
+    fn fault_counters_merge_and_since() {
+        let mut a = FaultCounters {
+            injected: 3,
+            retried: 2,
+            migrated: 1,
+            recovered: 2,
+            abandoned: 1,
+            checkpoint_bytes: 4096,
+            recovery_time: 900,
+        };
+        let b = FaultCounters { injected: 1, retried: 1, ..Default::default() };
+        a.merge(&b);
+        assert_eq!((a.injected, a.retried), (4, 3));
+        assert_eq!(a.checkpoint_bytes, 4096);
+        let d = a.since(&b);
+        assert_eq!((d.injected, d.retried, d.migrated), (3, 2, 1));
+        assert_eq!(b.since(&a), FaultCounters::default(), "saturates");
     }
 
     #[test]

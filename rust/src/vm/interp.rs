@@ -20,6 +20,8 @@
 //! time by the engine using the technology's
 //! [`crate::device::ComputeModel`].
 
+use std::cell::RefCell;
+use std::collections::HashMap;
 use std::rc::Rc;
 
 use super::builtins::{Builtin, TensorOp};
@@ -115,6 +117,101 @@ struct FusedAccum {
     line: usize,
 }
 
+/// A [`Value`] as stored in a [`VmSnapshot`]: identical shape, except
+/// arrays become indices into the snapshot's deep-copied array table so
+/// aliasing survives the round trip (two locals sharing one array map to
+/// one table entry, and [`Interp::restore`] rebuilds one shared `Rc`).
+#[derive(Debug, Clone)]
+enum SnapValue {
+    None,
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(usize),
+    Str(Rc<String>),
+    External(usize),
+}
+
+#[derive(Debug, Clone)]
+struct SnapFrame {
+    func: usize,
+    ip: usize,
+    locals: Vec<SnapValue>,
+    symbols: SymbolTable,
+}
+
+fn intern_array(
+    a: &Rc<RefCell<Vec<f64>>>,
+    arrays: &mut Vec<Vec<f64>>,
+    index: &mut HashMap<*const RefCell<Vec<f64>>, usize>,
+) -> usize {
+    *index.entry(Rc::as_ptr(a)).or_insert_with(|| {
+        arrays.push(a.borrow().clone());
+        arrays.len() - 1
+    })
+}
+
+fn snap_value(
+    v: &Value,
+    arrays: &mut Vec<Vec<f64>>,
+    index: &mut HashMap<*const RefCell<Vec<f64>>, usize>,
+) -> SnapValue {
+    match v {
+        Value::None => SnapValue::None,
+        Value::Int(i) => SnapValue::Int(*i),
+        Value::Float(f) => SnapValue::Float(*f),
+        Value::Bool(b) => SnapValue::Bool(*b),
+        Value::Str(s) => SnapValue::Str(s.clone()),
+        Value::External(s) => SnapValue::External(*s),
+        Value::Array(a) => SnapValue::Array(intern_array(a, arrays, index)),
+    }
+}
+
+fn unsnap_value(v: &SnapValue, table: &[Rc<RefCell<Vec<f64>>>]) -> Value {
+    match v {
+        SnapValue::None => Value::None,
+        SnapValue::Int(i) => Value::Int(*i),
+        SnapValue::Float(f) => Value::Float(*f),
+        SnapValue::Bool(b) => Value::Bool(*b),
+        SnapValue::Str(s) => Value::Str(s.clone()),
+        SnapValue::External(s) => Value::External(*s),
+        SnapValue::Array(i) => Value::Array(table[*i].clone()),
+    }
+}
+
+/// A deep copy of one interpreter's resumable state, taken at a
+/// suspension point: stack, call frames (locals + instruction pointers +
+/// symbol tables), the pending-suspension marker, a suspended fused
+/// accumulator (if any), cost counters and the print log.
+///
+/// The compiled program, fuel budget, core identity and external-slot
+/// lengths are *not* captured — a snapshot is restored into an
+/// interpreter freshly built by [`Interp::new`] from the same program and
+/// marshalled arguments (the fault-recovery engine re-marshals on retry),
+/// so those fields are already identical by construction.
+#[derive(Debug, Clone)]
+pub struct VmSnapshot {
+    arrays: Vec<Vec<f64>>,
+    stack: Vec<SnapValue>,
+    frames: Vec<SnapFrame>,
+    pending: Option<Pending>,
+    fused: Option<(u16, SnapValue, usize)>,
+    counters: CostCounters,
+    print_log: Vec<String>,
+    finished_symbols: Option<SymbolTable>,
+}
+
+impl VmSnapshot {
+    /// Modeled size of the checkpoint image in bytes: array payloads plus
+    /// 8 B per stack/local value, 16 B per frame header and a 64 B fixed
+    /// header. Used to charge checkpoint writes on the service timeline.
+    pub fn byte_size(&self) -> u64 {
+        let arrays: usize = self.arrays.iter().map(|a| a.len() * 8).sum();
+        let values = self.stack.len() + self.frames.iter().map(|f| f.locals.len()).sum::<usize>();
+        (arrays + values * 8 + self.frames.len() * 16 + 64) as u64
+    }
+}
+
 /// A resumable interpreter for one core's kernel invocation.
 #[derive(Debug)]
 pub struct Interp {
@@ -200,6 +297,87 @@ impl Interp {
     /// Lines printed by the kernel.
     pub fn print_log(&self) -> &[String] {
         &self.print_log
+    }
+
+    /// Deep-copy the interpreter's resumable state (see [`VmSnapshot`]).
+    ///
+    /// `extra_roots` are additional arrays the *caller* holds aliases to
+    /// (the engine's eager write-back list): they are interned through the
+    /// same pointer-keyed table as VM-reachable arrays, and their table
+    /// indices are returned so the caller can re-link its aliases to the
+    /// rebuilt arrays after [`Interp::restore`] — aliasing is preserved
+    /// even if the kernel has since rebound the local that introduced the
+    /// array.
+    pub fn snapshot(
+        &self,
+        extra_roots: &[Rc<RefCell<Vec<f64>>>],
+    ) -> (VmSnapshot, Vec<usize>) {
+        let mut arrays = Vec::new();
+        let mut index = HashMap::new();
+        let stack =
+            self.stack.iter().map(|v| snap_value(v, &mut arrays, &mut index)).collect();
+        let frames = self
+            .frames
+            .iter()
+            .map(|f| SnapFrame {
+                func: f.func,
+                ip: f.ip,
+                locals: f.locals.iter().map(|v| snap_value(v, &mut arrays, &mut index)).collect(),
+                symbols: f.symbols.clone(),
+            })
+            .collect();
+        let fused = self
+            .fused_accum
+            .as_ref()
+            .map(|fa| (fa.slot, snap_value(&fa.acc, &mut arrays, &mut index), fa.line));
+        let roots =
+            extra_roots.iter().map(|a| intern_array(a, &mut arrays, &mut index)).collect();
+        let snap = VmSnapshot {
+            arrays,
+            stack,
+            frames,
+            pending: self.pending,
+            fused,
+            counters: self.counters,
+            print_log: self.print_log.clone(),
+            finished_symbols: self.finished_symbols.clone(),
+        };
+        (snap, roots)
+    }
+
+    /// Replace the resumable state with a snapshot's (the inverse of
+    /// [`Interp::snapshot`]; `self` must have been built from the same
+    /// program and marshalled arguments). Returns the rebuilt array table,
+    /// index-aligned with the snapshot, so the caller can re-link any
+    /// `extra_roots` aliases it captured. Restoring twice builds two
+    /// independent copies — a snapshot is never consumed.
+    pub fn restore(&mut self, snap: &VmSnapshot) -> Vec<Rc<RefCell<Vec<f64>>>> {
+        let table: Vec<Rc<RefCell<Vec<f64>>>> =
+            snap.arrays.iter().map(|a| Rc::new(RefCell::new(a.clone()))).collect();
+        self.stack = snap.stack.iter().map(|v| unsnap_value(v, &table)).collect();
+        self.frames = snap
+            .frames
+            .iter()
+            .map(|f| Frame {
+                func: f.func,
+                ip: f.ip,
+                locals: f.locals.iter().map(|v| unsnap_value(v, &table)).collect(),
+                symbols: f.symbols.clone(),
+            })
+            .collect();
+        self.pending = snap.pending;
+        self.fused_accum = snap
+            .fused
+            .as_ref()
+            .map(|(slot, acc, line)| FusedAccum {
+                slot: *slot,
+                acc: unsnap_value(acc, &table),
+                line: *line,
+            });
+        self.counters = snap.counters;
+        self.print_log = snap.print_log.clone();
+        self.finished_symbols = snap.finished_symbols.clone();
+        table
     }
 
     /// Resume after a suspension, supplying the requested value
@@ -908,5 +1086,114 @@ def kernel(x):
     fn wrong_arity_at_launch_rejected() {
         let p = Rc::new(compile_source("def k(a, b):\n    return 0\n", None).unwrap());
         assert!(Interp::new(p, 0, 1, vec![Value::Int(1)], vec![]).is_err());
+    }
+
+    #[test]
+    fn snapshot_restore_replays_to_identical_result() {
+        let src = r#"
+def kernel(x):
+    total = 0.0
+    i = 0
+    while i < 4:
+        total += x[i]
+        i += 1
+    return total
+"#;
+        let p = Rc::new(compile_source(src, None).unwrap());
+        let mut vm = Interp::new(p.clone(), 0, 1, vec![Value::External(0)], vec![4]).unwrap();
+        // Run past two suspensions, snapshot at the third.
+        let mut out = vm.run().unwrap();
+        for v in [10.0, 20.0] {
+            assert!(matches!(out, Outcome::ExtRead { .. }));
+            out = vm.resume(Value::Float(v)).unwrap();
+        }
+        let (snap, roots) = vm.snapshot(&[]);
+        assert!(roots.is_empty());
+        assert!(snap.byte_size() >= 64);
+        // Original finishes...
+        out = vm.resume(Value::Float(30.0)).unwrap();
+        let Outcome::Done(v1) = vm.resume(Value::Float(40.0)).unwrap() else {
+            panic!("expected Done, got {out:?}")
+        };
+        // ...and so does a fresh interpreter restored from the snapshot,
+        // fed the same remaining values.
+        let mut vm2 = Interp::new(p, 0, 1, vec![Value::External(0)], vec![4]).unwrap();
+        vm2.restore(&snap);
+        let out2 = vm2.resume(Value::Float(30.0)).unwrap();
+        assert!(matches!(out2, Outcome::ExtRead { index: 3, .. }), "{out2:?}");
+        let Outcome::Done(v2) = vm2.resume(Value::Float(40.0)).unwrap() else { panic!() };
+        assert_eq!(v1.as_f64().unwrap(), 100.0);
+        assert_eq!(v2.as_f64().unwrap(), 100.0);
+        assert_eq!(vm.counters().dispatches, vm2.counters().dispatches);
+        assert_eq!(vm.counters().ext_reads, vm2.counters().ext_reads);
+        assert_eq!(vm.counters().flops, vm2.counters().flops);
+    }
+
+    #[test]
+    fn snapshot_preserves_array_aliasing() {
+        // `b = a` aliases; writes through either name must stay visible
+        // through the other after a restore into a fresh interpreter.
+        let src = r#"
+def kernel(x):
+    a = [0.0] * 4
+    b = a
+    b[0] = x[0]
+    a[1] = 2.0
+    return b[1] + a[0]
+"#;
+        let p = Rc::new(compile_source(src, None).unwrap());
+        let mut vm = Interp::new(p.clone(), 0, 1, vec![Value::External(0)], vec![1]).unwrap();
+        let out = vm.run().unwrap();
+        assert!(matches!(out, Outcome::ExtRead { index: 0, .. }));
+        let (snap, _) = vm.snapshot(&[]);
+        let mut vm2 = Interp::new(p, 0, 1, vec![Value::External(0)], vec![1]).unwrap();
+        vm2.restore(&snap);
+        let Outcome::Done(v) = vm2.resume(Value::Float(5.0)).unwrap() else { panic!() };
+        assert_eq!(v.as_f64().unwrap(), 7.0, "2.0 via a, 5.0 via b: one array");
+    }
+
+    #[test]
+    fn snapshot_extra_roots_relink_through_the_table() {
+        // An engine-held alias (eager write-back) interns into the same
+        // table as the VM-reachable array, and restore hands back the
+        // rebuilt Rc at the same index.
+        let src = r#"
+def kernel(a, x):
+    a[0] = 1.5
+    a[1] = x[0]
+    return 0
+"#;
+        let p = Rc::new(compile_source(src, None).unwrap());
+        let arr = Value::array(vec![0.0; 2]);
+        let root = arr.as_array().unwrap().clone();
+        let mut vm =
+            Interp::new(p.clone(), 0, 1, vec![arr.clone(), Value::External(0)], vec![1]).unwrap();
+        let out = vm.run().unwrap();
+        assert!(matches!(out, Outcome::ExtRead { .. }));
+        let (snap, roots) = vm.snapshot(&[root]);
+        assert_eq!(roots.len(), 1);
+        let mut vm2 =
+            Interp::new(p, 0, 1, vec![arr, Value::External(0)], vec![1]).unwrap();
+        let table = vm2.restore(&snap);
+        let relinked = table[roots[0]].clone();
+        let Outcome::Done(_) = vm2.resume(Value::Float(9.0)).unwrap() else { panic!() };
+        assert_eq!(*relinked.borrow(), vec![1.5, 9.0], "alias sees post-restore writes");
+    }
+
+    #[test]
+    fn restore_twice_builds_independent_copies() {
+        let src = "def kernel(x):\n    a = [1.0] * 2\n    a[0] = x[0]\n    return a[0]\n";
+        let p = Rc::new(compile_source(src, None).unwrap());
+        let mut vm = Interp::new(p.clone(), 0, 1, vec![Value::External(0)], vec![1]).unwrap();
+        vm.run().unwrap();
+        let (snap, _) = vm.snapshot(&[]);
+        let mut va = Interp::new(p.clone(), 0, 1, vec![Value::External(0)], vec![1]).unwrap();
+        let mut vb = Interp::new(p, 0, 1, vec![Value::External(0)], vec![1]).unwrap();
+        va.restore(&snap);
+        vb.restore(&snap);
+        let Outcome::Done(x) = va.resume(Value::Float(3.0)).unwrap() else { panic!() };
+        let Outcome::Done(y) = vb.resume(Value::Float(8.0)).unwrap() else { panic!() };
+        assert_eq!(x.as_f64().unwrap(), 3.0);
+        assert_eq!(y.as_f64().unwrap(), 8.0, "snapshot not consumed or shared");
     }
 }

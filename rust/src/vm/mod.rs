@@ -38,7 +38,7 @@ pub mod symbol;
 pub mod value;
 
 pub use builtins::{Builtin, TensorOp};
-pub use interp::{CostCounters, Interp, Outcome};
+pub use interp::{CostCounters, Interp, Outcome, VmSnapshot};
 pub use symbol::SymbolTable;
 pub use value::Value;
 

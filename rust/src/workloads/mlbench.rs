@@ -148,6 +148,13 @@ pub struct MlBenchConfig {
     /// in-flight phases must read stable image views, which the default
     /// single rewritten streaming buffer cannot provide.
     pub staged: bool,
+    /// Per-launch retry budget for transient-fault recovery (0 = the
+    /// fail-fast default). Set together with an installed
+    /// [`crate::sim::FaultPlan`] — the `microcore mlbench --faults` flag
+    /// wires both.
+    pub retry: u32,
+    /// Virtual-time backoff charged before each retry's restore.
+    pub backoff: Time,
 }
 
 impl MlBenchConfig {
@@ -174,6 +181,8 @@ impl MlBenchConfig {
             epochs: 1,
             cache: None,
             staged: false,
+            retry: 0,
+            backoff: 0,
         }
     }
 
@@ -197,6 +206,8 @@ impl MlBenchConfig {
             epochs: 1,
             cache: None,
             staged: false,
+            retry: 0,
+            backoff: 0,
         }
     }
 }
@@ -389,7 +400,7 @@ impl Replica {
     }
 
     fn options(&self) -> OffloadOptions {
-        let base = OffloadOptions::default();
+        let base = OffloadOptions::default().retry(self.cfg.retry).backoff(self.cfg.backoff);
         match self.cfg.mode {
             TransferMode::Eager => base.transfer(TransferMode::Eager),
             TransferMode::OnDemand => base.transfer(TransferMode::OnDemand),

@@ -350,6 +350,66 @@ fn engine_fast_path_identical_virtual_times() {
 }
 
 #[test]
+fn checkpoint_restore_across_fused_superinstruction_boundary() {
+    // `s += x[i]` fuses to AccumIndexLLL, which suspends *inside* the
+    // superinstruction: the accumulator is parked and the `Add; Store`
+    // tail runs on resume. A snapshot taken at that boundary must carry
+    // the half-executed fused state, so a twin restored from it replays
+    // the identical suspension sequence, counters and result as the
+    // uninterrupted run (engine invariant 10 at VM granularity).
+    let read = |_s: usize, i: usize| (i as f64) * 0.75 - 2.0;
+    let n = 33usize;
+    let p = Rc::new(compile_source(STREAM, None).unwrap());
+    let (vr, cr, pr, _) = drive(STREAM, true, vec![Value::External(0)], vec![n], read);
+
+    // Drive a fused VM seven suspensions deep — mid-superinstruction.
+    let mut vm = Interp::new(p.clone(), 0, 4, vec![Value::External(0)], vec![n]).unwrap();
+    let mut out = vm.run().unwrap();
+    for _ in 0..7 {
+        match out {
+            Outcome::ExtRead { slot, index } => {
+                out = vm.resume(Value::Float(read(slot, index))).unwrap();
+            }
+            ref o => panic!("expected a streamed read suspension, got {o:?}"),
+        }
+    }
+    let Outcome::ExtRead { slot, index } = out else {
+        panic!("expected to stop mid-stream, got {out:?}");
+    };
+    let (snap, _) = vm.snapshot(&[]);
+    assert!(snap.byte_size() >= 64, "checkpoint charge must be non-zero");
+
+    // Restore into a fresh interpreter (same program + marshalled args,
+    // exactly how the engine rebuilds a core) and finish both in lockstep.
+    let mut twin = Interp::new(p, 0, 4, vec![Value::External(0)], vec![n]).unwrap();
+    twin.restore(&snap);
+    let mut oa = vm.resume(Value::Float(read(slot, index))).unwrap();
+    let mut ob = twin.resume(Value::Float(read(slot, index))).unwrap();
+    loop {
+        match (oa, ob) {
+            (Outcome::Done(a), Outcome::Done(b)) => {
+                assert!(a.py_eq(&b), "restored twin diverged: {a:?} vs {b:?}");
+                assert!(a.py_eq(&vr), "interrupted run diverged from reference: {a:?} vs {vr:?}");
+                break;
+            }
+            (
+                Outcome::ExtRead { slot: sa, index: ia },
+                Outcome::ExtRead { slot: sb, index: ib },
+            ) => {
+                assert_eq!((sa, ia), (sb, ib), "suspension sequences diverged after restore");
+                oa = vm.resume(Value::Float(read(sa, ia))).unwrap();
+                ob = twin.resume(Value::Float(read(sb, ib))).unwrap();
+            }
+            (a, b) => panic!("suspension kinds diverged after restore: {a:?} vs {b:?}"),
+        }
+    }
+    assert_counters_eq(vm.counters(), twin.counters(), "restored twin");
+    assert_counters_eq(vm.counters(), cr, "interrupted vs uninterrupted");
+    assert_eq!(vm.print_log(), twin.print_log(), "print logs differ after restore");
+    assert_eq!(pr, vm.print_log().to_vec(), "print logs differ from reference");
+}
+
+#[test]
 fn engine_all_four_combinations_agree_on_prefetch() {
     let base = run_offload(false, false, "prefetch");
     for (fuse, fast) in [(false, true), (true, false), (true, true)] {

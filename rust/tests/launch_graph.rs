@@ -20,6 +20,10 @@
 //! 5. **`DependencyFailed` propagates transitively** — every launch with
 //!    a path to the failure parks its own error; unrelated launches and
 //!    later submissions are untouched.
+//! 6. **Quiesce treats abandoned flows as drained** — a buffer whose
+//!    only writer failed (or was abandoned by the cascade) quiesces
+//!    immediately, without driving unrelated work in search of launches
+//!    that will never run.
 
 use microcore::coordinator::{
     ArgSpec, LaunchId, LaunchStatus, OffloadResult, Session, TransferMode,
@@ -492,6 +496,58 @@ fn dependency_failure_propagates_transitively_sparing_unrelated() {
         .unwrap();
     let e = h.wait(&mut s).unwrap_err();
     assert!(e.to_string().contains("dependency launch 0 failed"), "{e}");
+}
+
+#[test]
+fn quiesce_treats_abandoned_writers_as_drained() {
+    let n = 80usize;
+    let mut s = session(43);
+    let ones = vec![1.0f32; n];
+    let a = s.alloc(MemSpec::host("a").from(&ones)).unwrap();
+    let d = s.alloc(MemSpec::host("d").from(&ones)).unwrap();
+    s.compile_kernel("total", SUM_SRC).unwrap();
+    let boom = s.compile_kernel("boom", "def boom(a):\n    return a[999999]\n").unwrap();
+    // The only writer of `a` fails at run time...
+    let hf = s
+        .launch(&boom)
+        .arg(ArgSpec::sharded_mut(a))
+        .mode(TransferMode::OnDemand)
+        .cores((0..4).collect())
+        .submit()
+        .unwrap();
+    // ...poisoning a dependent reader, which is abandoned without running.
+    let hb = s
+        .launch_named("total")
+        .unwrap()
+        .arg(ArgSpec::sharded(a))
+        .mode(TransferMode::OnDemand)
+        .cores((4..8).collect())
+        .submit()
+        .unwrap();
+    assert!(hf.wait(&mut s).is_err());
+    // Unrelated in-flight work, submitted before the quiesce, must stay
+    // queued across it.
+    let hu = s
+        .launch_named("total")
+        .unwrap()
+        .arg(ArgSpec::sharded(d))
+        .mode(TransferMode::OnDemand)
+        .cores((8..12).collect())
+        .submit()
+        .unwrap();
+    // Regression: quiesce must treat the abandoned flows (the failed
+    // writer and its abandoned dependent) as drained and return, instead
+    // of spinning the full graph waiting for launches that will never
+    // run.
+    s.quiesce(a).unwrap();
+    assert_eq!(s.read(a).unwrap(), ones, "failed writer never touched the buffer");
+    assert_ne!(
+        hu.status(&s),
+        Some(LaunchStatus::Completed),
+        "quiesce of the poisoned buffer did not drive unrelated work"
+    );
+    assert!(hb.wait(&mut s).is_err(), "the abandoned reader still parks its error");
+    hu.wait(&mut s).unwrap();
 }
 
 #[test]

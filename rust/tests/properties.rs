@@ -6,6 +6,7 @@ use microcore::coordinator::{
 use microcore::device::Technology;
 use microcore::error::Error;
 use microcore::memory::{DataRef, MemSpec};
+use microcore::sim::FaultPlan;
 use microcore::testkit::dag::{gen_dag, DagConfig, DagKernel, DagSpec};
 use microcore::testkit::{check, Gen};
 
@@ -441,6 +442,75 @@ fn capture_dag(spec: &DagSpec, blocking: bool) -> Result<DagCapture, String> {
     })
 }
 
+/// `drive_dag` with a fault plan installed and a per-launch retry budget:
+/// the wait-free submission order of the plain driver, plus
+/// `.retry(budget).backoff(backoff)` on every launch. Returns the fault
+/// counters alongside the usual observables.
+fn drive_dag_faulty(
+    spec: &DagSpec,
+    plan: FaultPlan,
+    budget: u32,
+    backoff: u64,
+) -> Result<(Session, Vec<DataRef>, DagOutcomes, microcore::sim::FaultCounters), String> {
+    let mut sess = Session::builder(Technology::epiphany3())
+        .seed(7)
+        .trace(4096)
+        .faults(plan)
+        .build()
+        .map_err(|e| e.to_string())?;
+    let mut bufs = Vec::new();
+    for (i, &l) in spec.buf_lens.iter().enumerate() {
+        bufs.push(
+            sess.alloc(MemSpec::host(format!("b{i}")).from(&vec![1.0; l]))
+                .map_err(|e| e.to_string())?,
+        );
+    }
+    sess.compile_kernel("r", DAG_READER).map_err(|e| e.to_string())?;
+    sess.compile_kernel("w", DAG_WRITER).map_err(|e| e.to_string())?;
+    sess.compile_kernel("b", DAG_BOOM).map_err(|e| e.to_string())?;
+    let mut handles = Vec::new();
+    for l in &spec.launches {
+        let dref = bufs[l.buf].slice(l.window.0, l.window.1);
+        let (name, arg) = match l.kernel {
+            DagKernel::Reader => ("r", ArgSpec::sharded(dref)),
+            DagKernel::Writer => ("w", ArgSpec::sharded_mut(dref)),
+            DagKernel::Boom => ("b", ArgSpec::sharded(dref)),
+        };
+        let mut b = sess
+            .launch_named(name)
+            .map_err(|e| e.to_string())?
+            .arg(arg)
+            .mode(TransferMode::OnDemand)
+            .cores(l.cores.clone())
+            .retry(budget)
+            .backoff(backoff);
+        for &d in &l.after {
+            b = b.after(handles[d]);
+        }
+        handles.push(b.submit().map_err(|e| e.to_string())?);
+    }
+    let mut outcomes: DagOutcomes = Vec::new();
+    for h in &handles {
+        outcomes.push(h.wait(&mut sess));
+    }
+    let fc = sess.fault_counters();
+    Ok((sess, bufs, outcomes, fc))
+}
+
+/// Project wait outcomes down to values only: per-core `(core, value)`
+/// pairs for successes, the rendered error for failures. This is exactly
+/// what fault recovery promises to preserve — clocks, stalls, stats and
+/// trace legitimately differ under retries.
+fn dag_values(outcomes: &DagOutcomes) -> Vec<Result<Vec<(usize, String)>, String>> {
+    outcomes
+        .iter()
+        .map(|o| match o {
+            Ok(r) => Ok(r.reports.iter().map(|c| (c.core, format!("{:?}", c.value))).collect()),
+            Err(e) => Err(e.to_string()),
+        })
+        .collect()
+}
+
 /// Core invariant 1, generalized: for a fully *serialized* random DAG
 /// (every launch carries an explicit edge to its predecessor; inferred
 /// RAW/WAR/WAW edges from the random windows ride on top), a wait-free
@@ -541,6 +611,100 @@ fn prop_launch_dag_failures_reach_exactly_the_dependents() {
         }
         Ok(())
     });
+}
+
+/// Core invariant 3 (PR 6, the fourth differential): under **any** seeded
+/// transient-fault plan with sufficient retry budget, a random DAG's
+/// results, losses and final buffer contents are bit-identical to the
+/// fault-free run — only the clock and the fault counters may differ.
+/// The zero-budget companion run pins today's fail-fast error surface:
+/// with `retry = 0` every outcome is either the baseline success or a
+/// transient `CoreFault` / downstream `DependencyFailed`, never a partial
+/// or corrupted value. Tier-1 runs 100 fault seeds; the fuzz-nightly
+/// matrix sets `MICROCORE_FUZZ_FAULTS=1` for 1000.
+#[test]
+fn prop_launch_dag_fault_recovery_is_value_transparent() {
+    let cases = if std::env::var("MICROCORE_FUZZ_FAULTS").is_ok_and(|v| v == "1") {
+        1000
+    } else {
+        std::env::var("MICROCORE_FUZZ_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(100)
+    };
+    let fired = std::cell::Cell::new(0u64);
+    check("launch-dag-fault-recovery", 0xDA6_0004, cases, |g: &mut Gen| {
+        let cfg =
+            DagConfig { max_launches: 5, device_cores: 16, serialize: false, failures: false };
+        let spec = gen_dag(g, &cfg);
+        // Fault-free reference run (fail-fast defaults: no checkpoints,
+        // no retry machinery in the loop at all).
+        let (base_sess, base_bufs, base_outcomes) = drive_dag(&spec, false)?;
+        let horizon = base_sess.now().max(2);
+        let base_vals = dag_values(&base_outcomes);
+        let base_mem = base_bufs
+            .iter()
+            .map(|&b| base_sess.read(b).map_err(|e| e.to_string()))
+            .collect::<Result<Vec<_>, _>>()?;
+        // Seeded transient plan over the run's own horizon, with a budget
+        // comfortably above the fault count: recovery must be invisible
+        // in every value.
+        let fseed = g.usize(0, 1 << 30) as u64;
+        let nfaults = g.usize(1, 4);
+        let plan = FaultPlan::seeded(fseed, 16, horizon, nfaults);
+        let (sess, bufs, outcomes, fc) = drive_dag_faulty(&spec, plan.clone(), 8, 64)?;
+        fired.set(fired.get() + fc.injected);
+        if fc.abandoned != 0 || fc.retried != fc.injected {
+            return Err(format!("budgeted run lost work: {fc:?}\nspec: {spec:?}"));
+        }
+        if fc.injected > 0 && (fc.recovered == 0 || fc.recovery_time == 0) {
+            return Err(format!("faults fired but nothing recovered: {fc:?}\nspec: {spec:?}"));
+        }
+        if dag_values(&outcomes) != base_vals {
+            return Err(format!(
+                "recovered values diverged from fault-free run\nplan seed {fseed} x{nfaults}\n\
+                 spec: {spec:?}\nbase: {base_vals:?}\nfaulty: {:?}",
+                dag_values(&outcomes)
+            ));
+        }
+        let mem = bufs
+            .iter()
+            .map(|&b| sess.read(b).map_err(|e| e.to_string()))
+            .collect::<Result<Vec<_>, _>>()?;
+        if mem != base_mem {
+            return Err(format!(
+                "final buffer contents diverged\nplan seed {fseed} x{nfaults}\nspec: {spec:?}"
+            ));
+        }
+        // Zero-budget companion: same plan, retry 0 — today's fail-fast
+        // surface, bit-for-bit. A struck launch faults, its dependents
+        // poison, everything else matches the baseline values.
+        let (_s0, _b0, outcomes0, fc0) = drive_dag_faulty(&spec, plan, 0, 0)?;
+        if fc0.retried != 0 || fc0.recovered != 0 || fc0.migrated != 0 {
+            return Err(format!("zero budget must never retry: {fc0:?}"));
+        }
+        for (i, (o, base)) in outcomes0.iter().zip(&base_vals).enumerate() {
+            match o {
+                Ok(r) => {
+                    let vals: Vec<(usize, String)> = r
+                        .reports
+                        .iter()
+                        .map(|c| (c.core, format!("{:?}", c.value)))
+                        .collect();
+                    if Ok(&vals) != base.as_ref() {
+                        return Err(format!(
+                            "zero-budget launch {i} succeeded with wrong values\nspec: {spec:?}"
+                        ));
+                    }
+                }
+                Err(Error::CoreFault { .. }) | Err(Error::DependencyFailed { .. }) => {}
+                Err(e) => {
+                    return Err(format!(
+                        "zero-budget launch {i}: unexpected error surface: {e}\nspec: {spec:?}"
+                    ))
+                }
+            }
+        }
+        Ok(())
+    });
+    assert!(fired.get() > 0, "no fault in the whole seed set ever fired — plan horizon broken?");
 }
 
 /// The pre-fetch engine never requests data beyond the view, regardless

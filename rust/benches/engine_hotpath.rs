@@ -16,6 +16,9 @@
 //! * dep-pipelined single-replica mlbench epochs — software pipelining
 //!   from inferred data-flow edges (`grad(i)` overlapping `ff(i+1)`
 //!   inside one replica, no manual phase waits);
+//! * multi-tenant fleet serving — 16 tenants' seeded request streams
+//!   through bounded fair admission over a 2x2 device pool
+//!   (`fleet_16tenants`);
 //! * tensor-builtin invocation rate through PJRT.
 //!
 //! ```text
@@ -33,7 +36,8 @@ use microcore::coordinator::{
 };
 use microcore::device::Technology;
 use microcore::memory::{CacheSpec, MemSpec};
-use microcore::metrics::report::{cache_table, fault_table};
+use microcore::fleet::{Fleet, FleetConfig};
+use microcore::metrics::report::{cache_table, fault_table, fleet_table};
 use microcore::sim::FaultPlan;
 use microcore::workloads::{
     dual_half_epochs, hetero_mlbench, sharded_normalize, sharded_sum, single_replica_epochs,
@@ -388,7 +392,40 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // 9. Tensor-builtin (PJRT) invocation rate, if artifacts exist and
+    // 9. Multi-tenant fleet serving: 16 tenants' seeded open-loop
+    // request streams over a 2x2 device pool with bounded fair
+    // admission — times the whole serving loop (traffic generation,
+    // admission, dispatch, latency accounting). One uncounted run
+    // asserts the determinism contract (same seed + same pool ⇒
+    // byte-identical report) and prints the per-class latency table.
+    let fleet_cfg = || {
+        let mut cfg = FleetConfig {
+            seed: 7,
+            groups: 2,
+            devices_per_group: 2,
+            ..FleetConfig::default()
+        }
+        .with_tenants(16);
+        cfg.traffic.duration = 400_000;
+        cfg
+    };
+    let m = time_wall("fleet_16tenants", warmup, iters, || {
+        let mut fleet = Fleet::new(fleet_cfg()).unwrap();
+        fleet.run().unwrap();
+    });
+    {
+        let report_a = Fleet::new(fleet_cfg()).unwrap().run().unwrap();
+        let report_b = Fleet::new(fleet_cfg()).unwrap().run().unwrap();
+        assert_eq!(report_a.render(), report_b.render(), "fleet runs are seed-deterministic");
+        case(&m, Some(report_a.total_completed() as f64 / m.mean()));
+        println!(
+            "  -> ~{:.0} requests/s served in wallclock",
+            report_a.total_completed() as f64 / m.mean()
+        );
+        print!("{}", fleet_table("fleet_16tenants latency by class", &report_a).render());
+    }
+
+    // 10. Tensor-builtin (PJRT) invocation rate, if artifacts exist and
     // the build carries the real PJRT backend (stub builds would error
     // at session construction).
     if cfg!(feature = "xla") && std::path::Path::new("artifacts/manifest.json").exists() {

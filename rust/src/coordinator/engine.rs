@@ -192,6 +192,19 @@ pub struct QueueStats {
     pub completed: usize,
 }
 
+impl QueueStats {
+    /// Field-wise accumulate of another snapshot — how a multi-device
+    /// [`crate::coordinator::GroupSession`] and the fleet layer aggregate
+    /// per-engine breakdowns into one pool-wide view (same idiom as
+    /// `CacheCounters::merge`).
+    pub fn merge(&mut self, other: &QueueStats) {
+        self.blocked += other.blocked;
+        self.pending += other.pending;
+        self.active += other.active;
+        self.completed += other.completed;
+    }
+}
+
 /// Event-heap sentinel in the core-position slot: the event activates the
 /// launch (stages it onto its now-free cores) instead of stepping a core.
 const EV_ACTIVATE: usize = usize::MAX;
@@ -874,6 +887,26 @@ impl Engine {
     pub fn queue_stats(&self) -> QueueStats {
         let mut qs = QueueStats::default();
         for l in &self.launches {
+            if l.outcome.is_some() {
+                qs.completed += 1;
+            } else if l.active {
+                qs.active += 1;
+            } else if !l.deps.is_empty() {
+                qs.blocked += 1;
+            } else {
+                qs.pending += 1;
+            }
+        }
+        qs
+    }
+
+    /// As [`Engine::queue_stats`], restricted to launches tagged with
+    /// `tenant` via [`crate::coordinator::OffloadOptions::tenant`]. The
+    /// fleet's fairness accounting reads this; untagged launches never
+    /// match.
+    pub fn queue_stats_for_tenant(&self, tenant: u64) -> QueueStats {
+        let mut qs = QueueStats::default();
+        for l in self.launches.iter().filter(|l| l.options.tenant == Some(tenant)) {
             if l.outcome.is_some() {
                 qs.completed += 1;
             } else if l.active {

@@ -112,7 +112,7 @@ use crate::error::{Error, Result};
 use crate::memory::{DataRef, Level, MemPlace, MemSpec};
 use crate::sim::{CacheCounters, FaultCounters, FaultPlan, StagingCounters, Time};
 
-use super::engine::{LaunchCheckpoint, LaunchId, LaunchStatus};
+use super::engine::{LaunchCheckpoint, LaunchId, LaunchStatus, QueueStats};
 use super::marshal::{ArgSpec, PrefetchChoice};
 use super::offload::{OffloadOptions, OffloadResult};
 use super::prefetch::PrefetchSpec;
@@ -491,6 +491,20 @@ impl GroupSession {
         self.sessions.iter().map(Session::in_flight).sum()
     }
 
+    /// Per-stage launch-table breakdown summed over every device engine
+    /// ([`QueueStats::merge`] of each session's
+    /// [`Session::queue_stats`]) — the pool-wide saturation signal the
+    /// fleet scheduler and the fairness tests read. `busy_cores` says how
+    /// *full* one device is; this says *why* the group's remaining
+    /// launches aren't running (edge-blocked vs core-contended).
+    pub fn queue_stats(&self) -> QueueStats {
+        let mut total = QueueStats::default();
+        for s in &self.sessions {
+            total.merge(&s.queue_stats());
+        }
+        total
+    }
+
     /// Allocate a group buffer: one replica per device, identical
     /// contents. Group buffers must live at the **Host level or above**
     /// (plain [`MemPlace::Host`] or cache-fronted
@@ -601,6 +615,7 @@ impl GroupSession {
             after: Vec::new(),
             retry: 0,
             backoff: 0,
+            tenant: None,
         })
     }
 
@@ -945,6 +960,7 @@ pub struct GroupLaunchBuilder<'g> {
     after: Vec<GroupHandle>,
     retry: u32,
     backoff: Time,
+    tenant: Option<u64>,
 }
 
 impl GroupLaunchBuilder<'_> {
@@ -1011,6 +1027,14 @@ impl GroupLaunchBuilder<'_> {
         self
     }
 
+    /// Tag the launch with its owning tenant
+    /// ([`super::OffloadOptions::tenant`] — fleet bookkeeping only, never
+    /// scheduling).
+    pub fn tenant(mut self, tenant: u64) -> Self {
+        self.tenant = Some(tenant);
+        self
+    }
+
     /// Add an explicit dependency edge on an earlier group launch.
     /// Explicit edges live inside one engine, so the dependency must be
     /// on the **same device** as this launch (cross-device ordering is
@@ -1041,6 +1065,7 @@ impl GroupLaunchBuilder<'_> {
             after,
             retry,
             backoff,
+            tenant,
         } = self;
         let d = match device {
             Some(dev) => {
@@ -1153,6 +1178,9 @@ impl GroupLaunchBuilder<'_> {
         }
         if let Some(f) = fuel {
             options = options.fuel(f);
+        }
+        if let Some(t) = tenant {
+            options = options.tenant(t);
         }
         for id in engine_after {
             options = options.after(id);
@@ -1277,6 +1305,50 @@ def fill(a, v):
         }
         // Slices compose like DataRef slices.
         assert_eq!(a.slice(2, 3).len(), 3);
+    }
+
+    #[test]
+    fn group_queue_stats_sums_every_device_engine() {
+        let mut g = two_epiphanies();
+        let b0 = g.alloc(MemSpec::host("b0").zeroed(32)).unwrap();
+        let b1 = g.alloc(MemSpec::host("b1").zeroed(32)).unwrap();
+        g.compile_kernel("fill", FILL_SRC).unwrap();
+        g.compile_kernel("total", SUM_SRC).unwrap();
+        // Device 0: a writer plus a dependent reader (inferred RAW edge,
+        // so the reader sits blocked); device 1: an independent writer.
+        // Nothing is driven yet — submission never advances time.
+        let f0 = g
+            .launch_named("fill")
+            .unwrap()
+            .args(&[GroupArgSpec::sharded_mut(b0), GroupArgSpec::Float(1.0)])
+            .on(DeviceId(0))
+            .submit()
+            .unwrap();
+        let t0 = g
+            .launch_named("total")
+            .unwrap()
+            .arg(GroupArgSpec::sharded(b0))
+            .on(DeviceId(0))
+            .submit()
+            .unwrap();
+        let f1 = g
+            .launch_named("fill")
+            .unwrap()
+            .args(&[GroupArgSpec::sharded_mut(b1), GroupArgSpec::Float(2.0)])
+            .on(DeviceId(1))
+            .submit()
+            .unwrap();
+        let qs = g.queue_stats();
+        assert_eq!(qs, QueueStats { blocked: 1, pending: 2, active: 0, completed: 0 });
+        assert_eq!(qs.blocked + qs.pending + qs.active, g.in_flight());
+        // Waiting the reader drives device 0 to completion: its writer's
+        // outcome parks unclaimed (completed), device 1 stays pending.
+        g.wait(t0).unwrap();
+        assert_eq!(g.queue_stats(), QueueStats { blocked: 0, pending: 1, active: 0, completed: 1 });
+        // Claiming everything empties both launch tables.
+        g.wait(f0).unwrap();
+        g.wait(f1).unwrap();
+        assert_eq!(g.queue_stats(), QueueStats::default());
     }
 
     #[test]

@@ -53,7 +53,7 @@ pub use marshal::{ArgSpec, BoundArg, PrefetchChoice};
 pub use offload::{Kernel, KernelRegistry, OffloadOptions, OffloadResult};
 pub use prefetch::{PrefetchSpec, PrefetchState};
 pub use service::HostService;
-pub use session::{LaunchBuilder, OffloadHandle, Session, SessionBuilder};
+pub use session::{value_as_vec, LaunchBuilder, OffloadHandle, Session, SessionBuilder};
 pub use shard::{ShardAssignment, ShardPlan, ShardPolicy};
 
 /// How kernel arguments travel to the device (§3.1).

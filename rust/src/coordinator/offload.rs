@@ -135,6 +135,14 @@ pub struct OffloadOptions {
     /// Virtual-time back-off inserted before each retry requeue (on top of
     /// the modeled checkpoint-restore cost). Default 0.
     pub backoff: Time,
+    /// Owning tenant, for fleet-level multiplexing (`None` = untagged, the
+    /// default for direct session use). Pure metadata: the tag is stored
+    /// on the launch record and surfaced through per-tenant accounting
+    /// ([`crate::coordinator::Engine::queue_stats_for_tenant`]) but never
+    /// consulted by scheduling — admission control upstream decides *when*
+    /// a launch is submitted, the engine stays tenant-blind about *what*
+    /// runs (engine invariant 11).
+    pub tenant: Option<u64>,
     /// Resume from a harvested checkpoint instead of starting fresh — set
     /// by the multi-device group when it migrates a launch off a lost
     /// device; never by user code.
@@ -153,6 +161,7 @@ impl Default for OffloadOptions {
             not_before: 0,
             retry: 0,
             backoff: 0,
+            tenant: None,
             restore: None,
         }
     }
@@ -214,6 +223,14 @@ impl OffloadOptions {
     /// Set the virtual-time back-off before each retry requeue.
     pub fn backoff(mut self, t: Time) -> Self {
         self.backoff = t;
+        self
+    }
+
+    /// Tag the launch with its owning tenant (see
+    /// [`OffloadOptions::tenant`]; fleet bookkeeping only, never
+    /// scheduling).
+    pub fn tenant(mut self, tenant: u64) -> Self {
+        self.tenant = Some(tenant);
         self
     }
 }
@@ -315,6 +332,8 @@ mod tests {
         let d = OffloadOptions::default();
         assert_eq!((d.retry, d.backoff), (0, 0), "default stays fail-fast");
         assert!(d.restore.is_none());
+        assert_eq!(d.tenant, None, "direct session use stays untagged");
+        assert_eq!(OffloadOptions::default().tenant(7).tenant, Some(7));
     }
 
     #[test]

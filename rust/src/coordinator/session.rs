@@ -545,6 +545,14 @@ impl LaunchBuilder<'_> {
         self
     }
 
+    /// Tag the launch with its owning tenant
+    /// ([`OffloadOptions::tenant`] — fleet bookkeeping only, never
+    /// scheduling).
+    pub fn tenant(mut self, tenant: u64) -> Self {
+        self.options.tenant = Some(tenant);
+        self
+    }
+
     /// Replace the whole options block (migration aid for call sites that
     /// already hold an [`OffloadOptions`]); combine with the individual
     /// setters — including `.after`/`.independent` — by calling this

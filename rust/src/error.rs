@@ -52,6 +52,20 @@ pub enum Error {
         /// The launch occupying that core.
         launch: u64,
     },
+    /// Fleet admission control rejected a request: every device slot was
+    /// busy and the bounded admission queue was already full. Load
+    /// shedding, not a fault — the work never reached an engine, no state
+    /// changed, and re-offering the identical request under lighter load
+    /// succeeds with identical results. Deliberately *not* transient in
+    /// the [`Error::is_transient`] sense: the engine's checkpoint/retry
+    /// machinery acts on device faults, while back-off on overload is the
+    /// client's policy decision.
+    Overloaded {
+        /// Tenant whose request was rejected.
+        tenant: u64,
+        /// Admission-queue capacity that was exhausted.
+        capacity: usize,
+    },
     /// PJRT runtime errors (artifact missing, shape mismatch, XLA failure).
     Runtime(String),
     /// Configuration / manifest parse errors.
@@ -96,6 +110,10 @@ impl fmt::Display for Error {
             Error::CoreFault { core, launch } => {
                 write!(f, "launch {launch}: transient fault on core {core} (retry budget exhausted)")
             }
+            Error::Overloaded { tenant, capacity } => write!(
+                f,
+                "tenant {tenant}: request rejected, admission queue full (capacity {capacity})"
+            ),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
@@ -182,6 +200,10 @@ mod tests {
                 Error::CoreFault { core: 5, launch: 11 },
                 "launch 11: transient fault on core 5 (retry budget exhausted)",
             ),
+            (
+                Error::Overloaded { tenant: 3, capacity: 8 },
+                "tenant 3: request rejected, admission queue full (capacity 8)",
+            ),
             (Error::Runtime("artifact missing".into()), "runtime error: artifact missing"),
             (Error::Config("bad manifest".into()), "config error: bad manifest"),
             (
@@ -207,6 +229,7 @@ mod tests {
             Error::Channel("x".into()),
             Error::Coordinator("x".into()),
             Error::DependencyFailed { launch: 1, dep: 0, dep_device: None },
+            Error::Overloaded { tenant: 0, capacity: 1 },
             Error::Runtime("x".into()),
             Error::Config("x".into()),
             Error::Io(std::io::Error::other("x")),

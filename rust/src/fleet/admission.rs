@@ -1,0 +1,175 @@
+//! Bounded admission queue with per-tenant fair dequeue.
+//!
+//! When every device slot is busy, arriving requests wait here. The
+//! queue is bounded: once `capacity` requests are waiting, further
+//! arrivals are **rejected** with [`crate::error::Error::Overloaded`] —
+//! load shedding at the door, before any engine state is touched. The
+//! boundary is exact: with capacity *c*, the *c*-th concurrent waiter is
+//! admitted and the *c+1*-th is rejected.
+//!
+//! Dequeue is **fair, not FIFO**: waiting requests are kept per tenant
+//! (FIFO within a tenant, preserving stream order) and a deterministic
+//! round-robin cursor walks the tenants, so one hog tenant flooding the
+//! queue cannot starve light tenants — each free slot goes to the next
+//! tenant in the rotation that has anything waiting. Determinism note:
+//! the rotation order is tenant-id order and the cursor state is part of
+//! the fleet's seeded state, so the same schedule always dequeues in the
+//! same order.
+
+use crate::error::{Error, Result};
+
+use super::traffic::Request;
+
+/// Bounded multi-tenant waiting queue (module docs).
+#[derive(Debug)]
+pub struct AdmissionQueue {
+    /// `None` = unbounded (the solo-run differential's configuration).
+    capacity: Option<usize>,
+    /// Per-tenant FIFO lanes, kept sorted by tenant id. Lanes persist
+    /// once created so the round-robin rotation is stable.
+    lanes: Vec<(u64, std::collections::VecDeque<Request>)>,
+    /// Round-robin position: index into `lanes` of the *next* lane to
+    /// offer a slot to.
+    cursor: usize,
+    waiting: usize,
+}
+
+impl AdmissionQueue {
+    /// Empty queue with the given capacity (`None` = unbounded).
+    pub fn new(capacity: Option<usize>) -> Self {
+        AdmissionQueue { capacity, lanes: Vec::new(), cursor: 0, waiting: 0 }
+    }
+
+    /// Requests currently waiting (across all tenants).
+    pub fn len(&self) -> usize {
+        self.waiting
+    }
+
+    /// Whether nothing is waiting.
+    pub fn is_empty(&self) -> bool {
+        self.waiting == 0
+    }
+
+    /// Configured capacity (`None` = unbounded).
+    pub fn capacity(&self) -> Option<usize> {
+        self.capacity
+    }
+
+    /// Requests one tenant currently has waiting. The fleet's chain
+    /// bypass consults this: a chained request may only skip the queue
+    /// when its tenant has nothing waiting, otherwise it would overtake
+    /// its own stream predecessor.
+    pub fn tenant_waiting(&self, tenant: u64) -> usize {
+        self.lanes
+            .binary_search_by_key(&tenant, |(t, _)| *t)
+            .map(|pos| self.lanes[pos].1.len())
+            .unwrap_or(0)
+    }
+
+    /// Admit a request to its tenant's lane, or reject it with
+    /// [`Error::Overloaded`] if the queue is at capacity. Rejection
+    /// happens at the door: the queue (and everything behind it) is
+    /// untouched.
+    pub fn push(&mut self, req: Request) -> Result<()> {
+        if let Some(cap) = self.capacity {
+            if self.waiting >= cap {
+                return Err(Error::Overloaded { tenant: req.tenant, capacity: cap });
+            }
+        }
+        let pos = match self.lanes.binary_search_by_key(&req.tenant, |(t, _)| *t) {
+            Ok(pos) => pos,
+            Err(pos) => {
+                // A new lane shifts later lanes right; keep the cursor on
+                // the lane it was pointing at.
+                if pos <= self.cursor && !self.lanes.is_empty() {
+                    self.cursor += 1;
+                }
+                self.lanes.insert(pos, (req.tenant, std::collections::VecDeque::new()));
+                pos
+            }
+        };
+        self.lanes[pos].1.push_back(req);
+        self.waiting += 1;
+        Ok(())
+    }
+
+    /// Dequeue the next request under the fair rotation: starting at the
+    /// cursor, the first tenant lane with a waiting request yields its
+    /// oldest one, and the cursor moves past that lane. `None` when
+    /// empty.
+    pub fn pop_fair(&mut self) -> Option<Request> {
+        if self.waiting == 0 || self.lanes.is_empty() {
+            return None;
+        }
+        let n = self.lanes.len();
+        for step in 0..n {
+            let i = (self.cursor + step) % n;
+            if let Some(req) = self.lanes[i].1.pop_front() {
+                self.waiting -= 1;
+                self.cursor = (i + 1) % n;
+                return Some(req);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::traffic::KernelClass;
+
+    fn req(tenant: u64, index: usize) -> Request {
+        Request {
+            tenant,
+            index,
+            arrival: index as u64,
+            class: KernelClass::ScanSum,
+            elems: 32,
+            cores: 4,
+            data_seed: 1,
+            after_prev: false,
+        }
+    }
+
+    #[test]
+    fn capacity_boundary_is_exact() {
+        let mut q = AdmissionQueue::new(Some(2));
+        q.push(req(0, 0)).unwrap();
+        q.push(req(1, 0)).unwrap();
+        let err = q.push(req(2, 0)).unwrap_err();
+        assert!(
+            matches!(err, Error::Overloaded { tenant: 2, capacity: 2 }),
+            "{err:?}"
+        );
+        assert_eq!(q.len(), 2, "rejection leaves the queue untouched");
+        // Draining one admits one again.
+        q.pop_fair().unwrap();
+        q.push(req(2, 0)).unwrap();
+    }
+
+    #[test]
+    fn fair_rotation_interleaves_a_hog_with_light_tenants() {
+        let mut q = AdmissionQueue::new(None);
+        for i in 0..6 {
+            q.push(req(0, i)).unwrap(); // the hog
+        }
+        q.push(req(1, 0)).unwrap();
+        q.push(req(2, 0)).unwrap();
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop_fair()).map(|r| r.tenant).collect();
+        // Round-robin: hog, light, light, then the hog's remainder — the
+        // light tenants never wait behind the whole hog backlog.
+        assert_eq!(order, vec![0, 1, 2, 0, 0, 0, 0, 0]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn fifo_within_a_tenant() {
+        let mut q = AdmissionQueue::new(None);
+        for i in 0..4 {
+            q.push(req(5, i)).unwrap();
+        }
+        let idx: Vec<usize> = std::iter::from_fn(|| q.pop_fair()).map(|r| r.index).collect();
+        assert_eq!(idx, vec![0, 1, 2, 3]);
+    }
+}

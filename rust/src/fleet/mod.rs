@@ -1,0 +1,615 @@
+//! Fleet-scale serving: multi-tenant open-loop traffic over a bounded
+//! pool of device groups.
+//!
+//! The paper's offload abstractions assume one driver feeding one device;
+//! this layer is the step from *an* accelerator to *a service*. A
+//! [`Fleet`] owns a bounded pool of [`GroupSession`]s (each a
+//! [`crate::coordinator::DeviceGroup`] of one or more devices) and
+//! multiplexes N independent tenant request streams onto the pool's
+//! device slots:
+//!
+//! * **Traffic** ([`traffic`]) — each tenant is a seeded open-loop
+//!   client: Poisson-ish arrivals on the shared virtual timeline, kernel
+//!   classes drawn from the paper's own workloads, heavy-tailed argument
+//!   sizes. Streams depend only on `(seed, tenant)`, never on the pool.
+//! * **Admission** ([`admission`]) — when every slot is busy, requests
+//!   wait in a bounded queue with per-tenant fair (round-robin) dequeue;
+//!   at capacity, arrivals are shed with
+//!   [`crate::error::Error::Overloaded`] before touching any engine.
+//! * **Serving** — a dispatched request becomes an ordinary engine
+//!   launch on its slot's [`Session`], floored at its admission time via
+//!   [`OffloadOptions::not_before`] and tagged with its tenant
+//!   ([`OffloadOptions::tenant`]). The fleet tracks each slot's
+//!   `free_at` watermark analytically: a slot serves one request at a
+//!   time, and service time is whatever the device simulation says it
+//!   is.
+//! * **Reporting** ([`report`]) — exact nearest-rank p50/p95/p99 per
+//!   kernel class, per-tenant accounting with Jain's fairness index,
+//!   per-device busy fractions; rendered via
+//!   [`crate::metrics::report::fleet_table`].
+//!
+//! **Determinism is the contract**: the same seed and the same pool
+//! shape produce a byte-identical latency report, identical traces and
+//! identical final buffer contents — admission control changes *when*
+//! launches run, never *what* they compute (engine invariant 11 in
+//! ARCHITECTURE.md). The properties in `tests/properties.rs` pin both
+//! this and the unbounded-admission ≡ per-tenant-solo-runs differential.
+
+pub mod admission;
+pub mod report;
+pub mod traffic;
+
+use std::collections::HashMap;
+
+use crate::coordinator::{
+    ArgSpec, DeviceId, GroupSession, LaunchId, OffloadOptions, QueueStats, Session, TransferMode,
+    value_as_vec,
+};
+use crate::device::Technology;
+use crate::error::{Error, Result};
+use crate::memory::{DataRef, MemSpec};
+use crate::sim::{FaultPlan, Rng, Time};
+use crate::workloads::{linpack::LINPACK_VM_SRC, mlbench::SGD_STEP_SRC, scans};
+
+pub use admission::AdmissionQueue;
+pub use report::{percentile, ClassStats, DeviceStats, FleetReport, TenantStats};
+pub use traffic::{schedule, tenant_requests, KernelClass, Request, TrafficConfig};
+
+/// Deterministically-failing kernel for [`KernelClass::Boom`]: the
+/// out-of-bounds read raises a VM error on every core, every time.
+const BOOM_SRC: &str = "def boom(x):\n    return x[len(x)]\n";
+
+/// Stable, run-independent label for an error's failure domain. Request
+/// records store this instead of the full `Display` text because engine
+/// launch ids differ between a fleet run and a solo replay of one
+/// tenant — the *kind* of failure is the part that must match across
+/// both (the solo-run differential in `tests/properties.rs`).
+pub fn error_kind(e: &Error) -> &'static str {
+    match e {
+        Error::Syntax { .. } => "syntax",
+        Error::Compile(_) => "compile",
+        Error::Vm(_) => "vm",
+        Error::ScratchpadExhausted { .. } => "scratchpad-exhausted",
+        Error::Memory(_) => "memory",
+        Error::Channel(_) => "channel",
+        Error::Coordinator(_) => "coordinator",
+        Error::DependencyFailed { .. } => "dependency-failed",
+        Error::CoreFault { .. } => "core-fault",
+        Error::Overloaded { .. } => "overloaded",
+        Error::Runtime(_) => "runtime",
+        Error::Config(_) => "config",
+        Error::Io(_) => "io",
+        Error::Xla(_) => "xla",
+    }
+}
+
+/// How one request ended.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RequestOutcome {
+    /// Served successfully; the string is a deterministic digest of the
+    /// result values (per-core returns or the written-back buffer).
+    Ok(String),
+    /// Shed at admission ([`Error::Overloaded`]) — never dispatched,
+    /// no engine state touched.
+    Rejected,
+    /// Dispatched but the launch failed; the string is the failure
+    /// domain from [`error_kind`].
+    Failed(String),
+}
+
+/// The full story of one request through the fleet — the report's raw
+/// material and the differential tests' comparison unit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RequestRecord {
+    /// Owning tenant.
+    pub tenant: u64,
+    /// Position in the tenant's stream.
+    pub index: usize,
+    /// Kernel class.
+    pub class: KernelClass,
+    /// Arrival on the virtual timeline (ns).
+    pub arrival: Time,
+    /// Service start: `max(arrival, slot free)` (`0` if rejected).
+    pub start: Time,
+    /// Service finish per the device simulation (`0` if rejected).
+    pub finish: Time,
+    /// Flat slot index that served it (`usize::MAX` if rejected).
+    pub slot: usize,
+    /// Global dispatch sequence number (`usize::MAX` if rejected) — the
+    /// fairness tests read interleaving off this.
+    pub dispatch_order: usize,
+    /// How it ended.
+    pub outcome: RequestOutcome,
+}
+
+/// Pool shape + traffic shape for one fleet run.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Master seed: forks every tenant stream and every group session.
+    pub seed: u64,
+    /// Tenant ids to generate traffic for.
+    pub tenants: Vec<u64>,
+    /// Device groups in the pool.
+    pub groups: usize,
+    /// Devices per group (each device is one serving slot).
+    pub devices_per_group: usize,
+    /// Technology of every pooled device.
+    pub tech: Technology,
+    /// Admission-queue capacity (`None` = unbounded — the solo-run
+    /// differential's configuration).
+    pub queue_capacity: Option<usize>,
+    /// Traffic shape shared by every tenant.
+    pub traffic: TrafficConfig,
+    /// Seeded fault plans to install, as `(group, device, plan)` — the
+    /// fault-isolation tests poison one slot this way.
+    pub faults: Vec<(usize, usize, FaultPlan)>,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            seed: 42,
+            tenants: (0..4).collect(),
+            groups: 2,
+            devices_per_group: 2,
+            tech: Technology::epiphany3(),
+            queue_capacity: Some(64),
+            traffic: TrafficConfig::default(),
+            faults: Vec::new(),
+        }
+    }
+}
+
+impl FleetConfig {
+    /// Convenience: tenants `0..n`.
+    pub fn with_tenants(mut self, n: usize) -> Self {
+        self.tenants = (0..n as u64).collect();
+        self
+    }
+}
+
+/// One serving slot: a single device inside a pooled group, serialized —
+/// it serves one request at a time, and `free_at` is the analytic
+/// watermark the admission loop schedules against.
+#[derive(Debug, Clone)]
+struct Slot {
+    group: usize,
+    device: usize,
+    free_at: Time,
+    busy: Time,
+    served: u64,
+}
+
+/// What a request's result digest is derived from after the wait.
+enum Digest {
+    /// Per-core scalar returns.
+    PerCoreScalars,
+    /// Read the named buffer back and checksum it (tag names the class).
+    ReadBack(DataRef, &'static str),
+    /// Core 0's array return (all cores compute the same solution).
+    FirstCoreArray,
+}
+
+/// The serving layer (module docs): a bounded pool of device groups, a
+/// fair bounded admission queue, and per-request records feeding the
+/// latency/utilization report.
+#[derive(Debug)]
+pub struct Fleet {
+    cfg: FleetConfig,
+    pool: Vec<GroupSession>,
+    slots: Vec<Slot>,
+    queue: AdmissionQueue,
+    records: Vec<RequestRecord>,
+    /// Per tenant: slot and engine launch id of the tenant's most recent
+    /// dispatched request (chained requests attach `.after` edges here).
+    last_launch: HashMap<u64, (usize, LaunchId)>,
+    dispatched: usize,
+}
+
+impl Fleet {
+    /// Build the pool: `groups × devices_per_group` slots, every device
+    /// running the same technology, each group seeded from the master
+    /// seed, the five traffic kernels compiled everywhere.
+    pub fn new(cfg: FleetConfig) -> Result<Fleet> {
+        if cfg.groups == 0 || cfg.devices_per_group == 0 {
+            return Err(Error::Config("fleet pool must have at least one device".into()));
+        }
+        let mut pool = Vec::with_capacity(cfg.groups);
+        let mut slots = Vec::new();
+        for gi in 0..cfg.groups {
+            let mut b = GroupSession::builder()
+                .seed(cfg.seed ^ (gi as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            for _ in 0..cfg.devices_per_group {
+                b = b.device(cfg.tech.clone());
+            }
+            for (fg, fd, plan) in &cfg.faults {
+                if *fg == gi {
+                    b = b.faults(*fd, plan.clone());
+                }
+            }
+            let mut g = b.build()?;
+            g.compile_kernel(KernelClass::ScanSum.name(), scans::SUM_SRC)?;
+            g.compile_kernel(KernelClass::Normalize.name(), scans::NORM_SRC)?;
+            g.compile_kernel(KernelClass::SgdStep.name(), SGD_STEP_SRC)?;
+            g.compile_kernel(KernelClass::Linpack.name(), LINPACK_VM_SRC)?;
+            g.compile_kernel(KernelClass::Boom.name(), BOOM_SRC)?;
+            for di in 0..cfg.devices_per_group {
+                slots.push(Slot { group: gi, device: di, free_at: 0, busy: 0, served: 0 });
+            }
+            pool.push(g);
+        }
+        let queue = AdmissionQueue::new(cfg.queue_capacity);
+        Ok(Fleet {
+            cfg,
+            pool,
+            slots,
+            queue,
+            records: Vec::new(),
+            last_launch: HashMap::new(),
+            dispatched: 0,
+        })
+    }
+
+    /// Generate every tenant's stream, offer each arrival in global
+    /// arrival order, drain the queue, and return the report. Rejections
+    /// are recorded (they are an *expected* outcome under saturation),
+    /// not propagated.
+    pub fn run(&mut self) -> Result<FleetReport> {
+        let sched = schedule(self.cfg.seed, &self.cfg.tenants, &self.cfg.traffic);
+        for req in sched {
+            match self.offer(req) {
+                Ok(()) | Err(Error::Overloaded { .. }) => {}
+                Err(e) => return Err(e),
+            }
+        }
+        self.drain()?;
+        Ok(self.report())
+    }
+
+    /// Process one arrival: first dispatch any queued requests onto
+    /// slots that have freed up by `req.arrival`, then serve the arrival
+    /// (idle slot), queue it (all busy, queue below capacity) or shed it
+    /// (`Err(Overloaded)`, also recorded). Chained requests
+    /// ([`Request::after_prev`]) are continuations of an admitted
+    /// stream: when the tenant has nothing queued they bypass admission
+    /// and dispatch directly behind their predecessor on its slot; when
+    /// earlier requests of the same tenant are still waiting, the chain
+    /// queues behind them (intra-tenant FIFO keeps stream order, so the
+    /// predecessor is always dispatched first).
+    pub fn offer(&mut self, req: Request) -> Result<()> {
+        self.release_ready(req.arrival)?;
+        if req.after_prev && self.queue.tenant_waiting(req.tenant) == 0 {
+            if let Some(&(pslot, _)) = self.last_launch.get(&req.tenant) {
+                return self.dispatch(req, pslot);
+            }
+        }
+        match self.idle_slot(req.arrival) {
+            Some(slot) => self.dispatch(req, slot),
+            None => {
+                let (tenant, index, class, arrival) =
+                    (req.tenant, req.index, req.class, req.arrival);
+                match self.queue.push(req) {
+                    Ok(()) => Ok(()),
+                    Err(e) => {
+                        self.records.push(RequestRecord {
+                            tenant,
+                            index,
+                            class,
+                            arrival,
+                            start: 0,
+                            finish: 0,
+                            slot: usize::MAX,
+                            dispatch_order: usize::MAX,
+                            outcome: RequestOutcome::Rejected,
+                        });
+                        Err(e)
+                    }
+                }
+            }
+        }
+    }
+
+    /// Dispatch every queued request (fair rotation) onto the earliest-
+    /// free slots — the end-of-run drain after the last arrival.
+    pub fn drain(&mut self) -> Result<()> {
+        while let Some(req) = self.queue.pop_fair() {
+            let slot = self
+                .earliest_slot()
+                .expect("pool is non-empty by construction");
+            self.dispatch(req, slot)?;
+        }
+        Ok(())
+    }
+
+    /// Requests currently waiting for a slot.
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// The configuration the fleet was built with.
+    pub fn config(&self) -> &FleetConfig {
+        &self.cfg
+    }
+
+    /// Every request record so far (arrival order for queued/rejected
+    /// interleaving, see [`RequestRecord::dispatch_order`] for service
+    /// order).
+    pub fn records(&self) -> &[RequestRecord] {
+        &self.records
+    }
+
+    /// The pool's groups (tests inspect traces and per-device engines).
+    pub fn pool(&self) -> &[GroupSession] {
+        &self.pool
+    }
+
+    /// Pool-wide launch-table breakdown:
+    /// [`GroupSession::queue_stats`] merged over every group.
+    pub fn queue_stats(&self) -> QueueStats {
+        let mut total = QueueStats::default();
+        for g in &self.pool {
+            total.merge(&g.queue_stats());
+        }
+        total
+    }
+
+    /// Build the latency/utilization report from the records so far.
+    pub fn report(&self) -> FleetReport {
+        let horizon = self.slots.iter().map(|s| s.free_at).max().unwrap_or(0);
+        let devices = self
+            .slots
+            .iter()
+            .enumerate()
+            .map(|(i, s)| DeviceStats {
+                slot: i,
+                group: s.group,
+                device: s.device,
+                served: s.served,
+                busy: s.busy,
+                busy_fraction: if horizon > 0 { s.busy as f64 / horizon as f64 } else { 0.0 },
+            })
+            .collect();
+        FleetReport::from_records(&self.records, devices, horizon)
+    }
+
+    /// Slot free at `now` with the smallest `free_at` (ties: lowest
+    /// index) — the most-idle slot.
+    fn idle_slot(&self, now: Time) -> Option<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.free_at <= now)
+            .min_by_key(|(i, s)| (s.free_at, *i))
+            .map(|(i, _)| i)
+    }
+
+    /// Slot with the smallest `free_at` regardless of the clock (drain).
+    fn earliest_slot(&self) -> Option<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, s)| (s.free_at, *i))
+            .map(|(i, _)| i)
+    }
+
+    /// While queued requests exist and a slot is free at `now`, dispatch
+    /// fairly.
+    fn release_ready(&mut self, now: Time) -> Result<()> {
+        loop {
+            if self.queue.is_empty() {
+                return Ok(());
+            }
+            let Some(slot) = self.idle_slot(now) else { return Ok(()) };
+            let Some(req) = self.queue.pop_fair() else { return Ok(()) };
+            self.dispatch(req, slot)?;
+        }
+    }
+
+    /// Serve `req` on `slot`: build its arguments from its data seed,
+    /// submit on the slot's device floored at `max(arrival, free_at)`,
+    /// wait, digest the result, and advance the slot's watermark.
+    /// Chained requests are re-routed to their predecessor's slot
+    /// regardless of the caller's choice — the `.after` edge must live
+    /// on the predecessor's engine, and honoring it on every path is
+    /// what keeps a chain's failure propagation identical between a
+    /// contended fleet and a solo run (the differential property).
+    fn dispatch(&mut self, req: Request, slot: usize) -> Result<()> {
+        let slot = match self.last_launch.get(&req.tenant) {
+            Some(&(pslot, _)) if req.after_prev => pslot,
+            _ => slot,
+        };
+        let start = req.arrival.max(self.slots[slot].free_at);
+        let order = self.dispatched;
+        self.dispatched += 1;
+        let (finish, outcome) = self.execute(&req, slot, start)?;
+        let s = &mut self.slots[slot];
+        s.served += 1;
+        s.busy += finish.saturating_sub(start);
+        s.free_at = s.free_at.max(finish);
+        self.records.push(RequestRecord {
+            tenant: req.tenant,
+            index: req.index,
+            class: req.class,
+            arrival: req.arrival,
+            start,
+            finish,
+            slot,
+            dispatch_order: order,
+            outcome,
+        });
+        Ok(())
+    }
+
+    /// Build, submit and wait one launch. Launch *outcomes* (VM errors,
+    /// dependency poisoning, core faults) become `Failed` records;
+    /// submission errors (misconfiguration) propagate.
+    fn execute(&mut self, req: &Request, slot: usize, start: Time) -> Result<(Time, RequestOutcome)> {
+        let (g, d) = (self.slots[slot].group, self.slots[slot].device);
+        let chain = if req.after_prev { self.last_launch.get(&req.tenant).copied() } else { None };
+        let sess: &mut Session = self.pool[g].session_mut(DeviceId(d));
+        let cores = req.cores.min(sess.tech().cores).max(1);
+        let core_ids: Vec<usize> = (0..cores).collect();
+        let mut opts = OffloadOptions::default().not_before(start).tenant(req.tenant);
+        if let Some((pslot, pid)) = chain {
+            if pslot == slot {
+                opts = opts.after(pid);
+            }
+        }
+        let base = format!("t{}.r{}", req.tenant, req.index);
+        let mut rng = Rng::new(req.data_seed);
+        let elems = req.elems.div_ceil(cores) * cores;
+        let (handle, digest) = match req.class {
+            KernelClass::ScanSum => {
+                let data: Vec<f32> = (0..elems).map(|_| rng.next_f32()).collect();
+                let x = sess.alloc(MemSpec::host(format!("{base}.x")).from_vec(data))?;
+                let h = sess
+                    .launch_named(KernelClass::ScanSum.name())?
+                    .options(opts)
+                    .arg(ArgSpec::sharded(x))
+                    .cores(core_ids)
+                    .submit()?;
+                (h, Digest::PerCoreScalars)
+            }
+            KernelClass::Normalize => {
+                let mu = rng.range_f64(-1.0, 1.0);
+                let scale = rng.range_f64(0.5, 2.0);
+                let data: Vec<f32> = (0..elems).map(|_| rng.next_f32()).collect();
+                let x = sess.alloc(MemSpec::host(format!("{base}.x")).from_vec(data))?;
+                let h = sess
+                    .launch_named(KernelClass::Normalize.name())?
+                    .options(opts)
+                    .args(&[ArgSpec::sharded_mut(x), ArgSpec::Float(mu), ArgSpec::Float(scale)])
+                    .cores(core_ids)
+                    .submit()?;
+                (h, Digest::ReadBack(x, "norm"))
+            }
+            KernelClass::SgdStep => {
+                let lr = rng.range_f64(0.001, 0.1);
+                let w: Vec<f32> = (0..elems).map(|_| rng.next_f32()).collect();
+                let gr: Vec<f32> = (0..elems).map(|_| rng.next_f32()).collect();
+                let wref = sess.alloc(MemSpec::host(format!("{base}.w")).from_vec(w))?;
+                let gref = sess.alloc(MemSpec::host(format!("{base}.g")).from_vec(gr))?;
+                let h = sess
+                    .launch_named(KernelClass::SgdStep.name())?
+                    .options(opts)
+                    .args(&[
+                        ArgSpec::sharded_mut(wref),
+                        ArgSpec::sharded(gref),
+                        ArgSpec::Float(lr),
+                    ])
+                    .cores(core_ids)
+                    .submit()?;
+                (h, Digest::ReadBack(wref, "sgd"))
+            }
+            KernelClass::Linpack => {
+                // Small diagonally-dominant system; every core eliminates
+                // its own eager-copied private replica (as Table 1 does).
+                let n = 3 + (req.elems % 5);
+                let mut a = vec![0.0f32; n * n];
+                for (i, v) in a.iter_mut().enumerate() {
+                    *v = rng.range_f64(0.0, 1.0) as f32;
+                    if i % (n + 1) == 0 {
+                        *v += n as f32;
+                    }
+                }
+                let mut b = vec![0.0f32; n];
+                for r in 0..n {
+                    b[r] = (0..n).map(|c| a[r * n + c] * (1.0 + c as f32)).sum();
+                }
+                let ra = sess.alloc(MemSpec::host(format!("{base}.a")).from_vec(a))?;
+                let rb = sess.alloc(MemSpec::host(format!("{base}.b")).from_vec(b))?;
+                opts = opts.transfer(TransferMode::Eager);
+                let h = sess
+                    .launch_named(KernelClass::Linpack.name())?
+                    .options(opts)
+                    .args(&[
+                        ArgSpec::broadcast(ra),
+                        ArgSpec::broadcast(rb),
+                        ArgSpec::Int(n as i64),
+                    ])
+                    .cores(core_ids)
+                    .submit()?;
+                (h, Digest::FirstCoreArray)
+            }
+            KernelClass::Boom => {
+                let data: Vec<f32> = (0..elems).map(|_| rng.next_f32()).collect();
+                let x = sess.alloc(MemSpec::host(format!("{base}.x")).from_vec(data))?;
+                let h = sess
+                    .launch_named(KernelClass::Boom.name())?
+                    .options(opts)
+                    .arg(ArgSpec::sharded(x))
+                    .cores(core_ids)
+                    .submit()?;
+                (h, Digest::PerCoreScalars)
+            }
+        };
+        self.last_launch.insert(req.tenant, (slot, handle.id()));
+        match handle.wait(sess) {
+            Ok(res) => {
+                let finish = res.finished_at.max(start);
+                let value = match digest {
+                    Digest::PerCoreScalars => {
+                        let vals: Vec<f64> = res
+                            .reports
+                            .iter()
+                            .map(|r| r.value.as_f64())
+                            .collect::<Result<_>>()?;
+                        format!("{vals:?}")
+                    }
+                    Digest::ReadBack(dref, tag) => {
+                        let v = sess.read(dref)?;
+                        let acc: f64 = v.iter().map(|&f| f as f64).sum();
+                        format!("{tag}:{}:{acc:?}", v.len())
+                    }
+                    Digest::FirstCoreArray => format!("{:?}", value_as_vec(&res.reports[0].value)?),
+                };
+                Ok((finish, RequestOutcome::Ok(value)))
+            }
+            Err(e) => {
+                let finish = sess.now().max(start);
+                Ok((finish, RequestOutcome::Failed(error_kind(&e).to_string())))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> FleetConfig {
+        FleetConfig {
+            groups: 1,
+            devices_per_group: 2,
+            tenants: vec![0, 1],
+            traffic: TrafficConfig { duration: 300_000, ..TrafficConfig::default() },
+            ..FleetConfig::default()
+        }
+    }
+
+    #[test]
+    fn run_serves_every_generated_request() {
+        let mut f = Fleet::new(tiny()).unwrap();
+        let expect: usize = [0u64, 1]
+            .iter()
+            .map(|&t| tenant_requests(42, t, &f.cfg.traffic).len())
+            .sum();
+        let rep = f.run().unwrap();
+        assert!(expect > 0, "tiny traffic shape must generate something");
+        assert_eq!(f.records().len(), expect);
+        assert_eq!(rep.total_completed() as usize, expect, "no faults, no boom: all Ok");
+        assert_eq!(rep.total_rejected(), 0);
+        assert!(!rep.classes.is_empty());
+        assert_eq!(f.queue_len(), 0);
+        // Every engine's launch table was claimed empty by the blocking waits.
+        assert_eq!(f.queue_stats(), QueueStats::default());
+    }
+
+    #[test]
+    fn same_seed_runs_are_identical() {
+        let r1 = Fleet::new(tiny()).unwrap().run().unwrap();
+        let r2 = Fleet::new(tiny()).unwrap().run().unwrap();
+        assert_eq!(r1, r2);
+        assert_eq!(r1.render(), r2.render());
+    }
+}

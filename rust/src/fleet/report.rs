@@ -1,0 +1,247 @@
+//! Latency and utilization accounting for a fleet run.
+//!
+//! Percentiles use exact **nearest-rank** math over the full sorted
+//! sample set (rank `⌈p/100·n⌉`, 1-based) — not the log-bucketed
+//! [`crate::sim::stats::Histogram`], whose quantiles round up to bucket
+//! bounds. Latency reports are the fleet's headline artifact, so they
+//! get the exact order statistic; the hand-computed fixture test in
+//! `tests/fleet_serving.rs` pins the math down.
+//!
+//! Everything here is plain deterministic arithmetic over the request
+//! records: two fleet runs with the same seed produce byte-identical
+//! rendered reports (the bit-reproducibility property in
+//! `tests/properties.rs`).
+
+use crate::metrics::report as tables;
+use crate::sim::Time;
+
+use super::traffic::KernelClass;
+use super::{RequestOutcome, RequestRecord};
+
+/// Exact nearest-rank percentile of an ascending-sorted sample set:
+/// the smallest sample such that at least `p`% of the set is ≤ it
+/// (1-based rank `⌈p/100·n⌉`). Returns 0 on an empty set. `p` is
+/// clamped to `(0, 100]`.
+pub fn percentile(sorted: &[Time], p: f64) -> Time {
+    if sorted.is_empty() {
+        return 0;
+    }
+    debug_assert!(sorted.windows(2).all(|w| w[0] <= w[1]));
+    let p = p.clamp(f64::MIN_POSITIVE, 100.0);
+    let rank = (p / 100.0 * sorted.len() as f64).ceil() as usize;
+    sorted[rank.max(1) - 1]
+}
+
+/// Latency summary for one kernel class.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassStats {
+    /// The kernel class.
+    pub class: KernelClass,
+    /// Successfully served requests (the percentile population).
+    pub completed: u64,
+    /// Median latency (arrival → finish, virtual ns).
+    pub p50: Time,
+    /// 95th-percentile latency (ns).
+    pub p95: Time,
+    /// 99th-percentile latency (ns).
+    pub p99: Time,
+    /// Mean latency (ns).
+    pub mean_ns: f64,
+}
+
+/// Per-tenant service accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TenantStats {
+    /// Tenant id.
+    pub tenant: u64,
+    /// Requests the tenant's stream offered.
+    pub submitted: u64,
+    /// Requests served to a successful result.
+    pub completed: u64,
+    /// Requests shed at admission ([`crate::error::Error::Overloaded`]).
+    pub rejected: u64,
+    /// Requests dispatched but failed (kernel error, dependency
+    /// poisoning, core fault).
+    pub failed: u64,
+}
+
+/// Per-device-slot utilization.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceStats {
+    /// Flat slot index across the pool.
+    pub slot: usize,
+    /// Owning group in the pool.
+    pub group: usize,
+    /// Device within the group.
+    pub device: usize,
+    /// Requests this slot served (including failed dispatches).
+    pub served: u64,
+    /// Accumulated busy virtual time (ns).
+    pub busy: Time,
+    /// `busy / horizon` — the slot's busy fraction over the run.
+    pub busy_fraction: f64,
+}
+
+/// The complete latency/utilization report for one fleet run
+/// ([`super::Fleet::report`]). Rendering is byte-deterministic.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetReport {
+    /// Per-class latency percentiles (classes with traffic only, in
+    /// [`KernelClass::ALL`] order).
+    pub classes: Vec<ClassStats>,
+    /// Per-tenant accounting, ascending tenant id.
+    pub tenants: Vec<TenantStats>,
+    /// Per-slot utilization.
+    pub devices: Vec<DeviceStats>,
+    /// Jain's fairness index over per-tenant completed counts:
+    /// `(Σx)² / (n·Σx²)` — 1.0 when every tenant got identical service,
+    /// approaching `1/n` when one tenant got everything. 1.0 when no
+    /// tenant completed anything (vacuously fair).
+    pub fairness: f64,
+    /// The run's horizon: the latest finish time across all slots (ns),
+    /// the denominator of every busy fraction.
+    pub horizon: Time,
+}
+
+impl FleetReport {
+    /// Aggregate request records and per-slot utilization into the
+    /// report. `devices` comes from the fleet's slot bookkeeping with
+    /// `busy_fraction` already scaled by the caller's horizon.
+    pub fn from_records(records: &[RequestRecord], devices: Vec<DeviceStats>, horizon: Time) -> FleetReport {
+        let mut classes = Vec::new();
+        for class in KernelClass::ALL {
+            let mut lat: Vec<Time> = records
+                .iter()
+                .filter(|r| r.class == class && matches!(r.outcome, RequestOutcome::Ok(_)))
+                .map(|r| r.finish - r.arrival)
+                .collect();
+            if lat.is_empty() {
+                continue;
+            }
+            lat.sort_unstable();
+            let mean_ns = lat.iter().map(|&t| t as f64).sum::<f64>() / lat.len() as f64;
+            classes.push(ClassStats {
+                class,
+                completed: lat.len() as u64,
+                p50: percentile(&lat, 50.0),
+                p95: percentile(&lat, 95.0),
+                p99: percentile(&lat, 99.0),
+                mean_ns,
+            });
+        }
+
+        let mut tenants: Vec<TenantStats> = Vec::new();
+        for r in records {
+            let pos = match tenants.binary_search_by_key(&r.tenant, |t| t.tenant) {
+                Ok(pos) => pos,
+                Err(pos) => {
+                    tenants.insert(
+                        pos,
+                        TenantStats { tenant: r.tenant, submitted: 0, completed: 0, rejected: 0, failed: 0 },
+                    );
+                    pos
+                }
+            };
+            let t = &mut tenants[pos];
+            t.submitted += 1;
+            match &r.outcome {
+                RequestOutcome::Ok(_) => t.completed += 1,
+                RequestOutcome::Rejected => t.rejected += 1,
+                RequestOutcome::Failed(_) => t.failed += 1,
+            }
+        }
+
+        let n = tenants.len() as f64;
+        let sum: f64 = tenants.iter().map(|t| t.completed as f64).sum();
+        let sumsq: f64 = tenants.iter().map(|t| (t.completed as f64).powi(2)).sum();
+        let fairness = if sum > 0.0 { (sum * sum) / (n * sumsq) } else { 1.0 };
+
+        FleetReport { classes, tenants, devices, fairness, horizon }
+    }
+
+    /// Completed requests across all classes.
+    pub fn total_completed(&self) -> u64 {
+        self.tenants.iter().map(|t| t.completed).sum()
+    }
+
+    /// Admission rejections across all tenants.
+    pub fn total_rejected(&self) -> u64 {
+        self.tenants.iter().map(|t| t.rejected).sum()
+    }
+
+    /// Render the full report: the per-class latency table
+    /// ([`crate::metrics::report::fleet_table`]), the per-slot
+    /// utilization table, the per-tenant accounting table and the
+    /// fairness line. Byte-identical across same-seed runs.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&tables::fleet_table("fleet latency by class", self).render());
+        out.push_str(&tables::fleet_util_table("fleet device utilization", self).render());
+        let mut t = tables::Table::new(
+            "fleet tenants",
+            &["tenant", "submitted", "completed", "rejected", "failed"],
+        );
+        for ts in &self.tenants {
+            t.row(&[
+                ts.tenant.to_string(),
+                ts.submitted.to_string(),
+                ts.completed.to_string(),
+                ts.rejected.to_string(),
+                ts.failed.to_string(),
+            ]);
+        }
+        out.push_str(&t.render());
+        out.push_str(&format!(
+            "fairness index {:.4} over {} tenants; horizon {} ms\n",
+            self.fairness,
+            self.tenants.len(),
+            tables::ms(self.horizon)
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_rank_percentiles() {
+        let s: Vec<Time> = vec![10, 20, 30, 40, 50, 60, 70];
+        assert_eq!(percentile(&s, 50.0), 40);
+        assert_eq!(percentile(&s, 95.0), 70);
+        assert_eq!(percentile(&s, 99.0), 70);
+        assert_eq!(percentile(&s, 100.0), 70);
+        assert_eq!(percentile(&s, 1.0), 10);
+        assert_eq!(percentile(&[], 50.0), 0);
+        // Even-sized set: p50 is the lower-middle sample (rank 2 of 4).
+        assert_eq!(percentile(&[1, 2, 3, 4], 50.0), 2);
+    }
+
+    #[test]
+    fn fairness_index_brackets() {
+        let rec = |tenant: u64, ok: bool| RequestRecord {
+            tenant,
+            index: 0,
+            class: KernelClass::ScanSum,
+            arrival: 0,
+            start: 0,
+            finish: 10,
+            slot: 0,
+            dispatch_order: 0,
+            outcome: if ok {
+                RequestOutcome::Ok("v".into())
+            } else {
+                RequestOutcome::Rejected
+            },
+        };
+        // Equal service: fairness 1.
+        let r = FleetReport::from_records(&[rec(0, true), rec(1, true)], Vec::new(), 10);
+        assert!((r.fairness - 1.0).abs() < 1e-12);
+        // One tenant starved: Jain = (1)^2 / (2 * 1) = 0.5.
+        let r = FleetReport::from_records(&[rec(0, true), rec(1, false)], Vec::new(), 10);
+        assert!((r.fairness - 0.5).abs() < 1e-12, "{}", r.fairness);
+        assert_eq!(r.total_completed(), 1);
+        assert_eq!(r.total_rejected(), 1);
+    }
+}

@@ -1,0 +1,231 @@
+//! Seeded open-loop request generation for the fleet.
+//!
+//! Each tenant is an independent **open-loop** client: its request stream
+//! is drawn from its own [`crate::sim::Rng`] fork of the master seed, so
+//! the stream depends only on `(seed, tenant id)` — never on the pool
+//! size, the admission queue, or what other tenants do. That independence
+//! is what makes the fleet's headline differential possible: a tenant's
+//! requests (arrival times, kernel classes, argument sizes, data seeds)
+//! are *identical* whether the tenant runs alone on an idle pool or
+//! multiplexed with a thousand others, so an unbounded-admission fleet
+//! run must produce value-identical results to the per-tenant solo runs.
+//!
+//! Arrivals are Poisson-ish — exponential inter-arrival gaps on the
+//! shared virtual timeline — and argument sizes are heavy-tailed
+//! (truncated Pareto), mirroring the "many small, a few huge" shape real
+//! request mixes have. The kernel mix is drawn from the paper's own
+//! workloads: the sharded scan kernels ([`crate::workloads::scans`]), the
+//! ML benchmark's SGD step ([`crate::workloads::mlbench::SGD_STEP_SRC`])
+//! and a small LINPACK solve ([`crate::workloads::linpack`]).
+
+use crate::sim::{Rng, Time};
+
+/// Kernel class of one fleet request — which paper workload the request
+/// exercises. The latency report buckets percentiles by class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum KernelClass {
+    /// Whole-shard reduction ([`crate::workloads::scans::SUM_SRC`]):
+    /// read-only streaming over a sharded volume.
+    ScanSum,
+    /// In-place element-wise normalization
+    /// ([`crate::workloads::scans::NORM_SRC`]): sharded mutable
+    /// write-back.
+    Normalize,
+    /// Scalar SGD model update
+    /// ([`crate::workloads::mlbench::SGD_STEP_SRC`]): two buffers, one
+    /// mutable.
+    SgdStep,
+    /// Small dense solve ([`crate::workloads::linpack::LINPACK_VM_SRC`]):
+    /// eager-copied broadcast system, per-core private elimination.
+    Linpack,
+    /// Deterministically-failing request (out-of-bounds read) — only
+    /// generated when [`TrafficConfig::boom_rate`] is nonzero; the fault
+    /// isolation tests use it to poison one tenant's stream.
+    Boom,
+}
+
+impl KernelClass {
+    /// Every class, in report order.
+    pub const ALL: [KernelClass; 5] = [
+        KernelClass::ScanSum,
+        KernelClass::Normalize,
+        KernelClass::SgdStep,
+        KernelClass::Linpack,
+        KernelClass::Boom,
+    ];
+
+    /// Stable report/registry label.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelClass::ScanSum => "scan-sum",
+            KernelClass::Normalize => "normalize",
+            KernelClass::SgdStep => "sgd-step",
+            KernelClass::Linpack => "linpack",
+            KernelClass::Boom => "boom",
+        }
+    }
+}
+
+/// One tenant request: everything the fleet needs to build the launch is
+/// derived from these fields plus the request's own `data_seed`, so a
+/// request re-executes identically anywhere (fleet slot or solo run).
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Owning tenant.
+    pub tenant: u64,
+    /// Position in the tenant's stream (0-based submission order).
+    pub index: usize,
+    /// Arrival on the shared virtual timeline (ns).
+    pub arrival: Time,
+    /// Which workload kernel to run.
+    pub class: KernelClass,
+    /// Argument length in f32 elements (rounded up to a multiple of
+    /// `cores` so shards stay balanced).
+    pub elems: usize,
+    /// Cores the launch occupies on its device.
+    pub cores: usize,
+    /// Seed for the request's argument contents.
+    pub data_seed: u64,
+    /// Chain behind the tenant's previous request with an explicit
+    /// `.after` edge on the same device (a continuation, not a new
+    /// admission) — how a failed predecessor propagates
+    /// [`crate::error::Error::DependencyFailed`] *within* one tenant.
+    pub after_prev: bool,
+}
+
+/// Traffic-shape knobs, shared by every tenant stream.
+#[derive(Debug, Clone)]
+pub struct TrafficConfig {
+    /// Arrival horizon: requests arrive in `(0, duration]` virtual ns.
+    pub duration: Time,
+    /// Mean exponential inter-arrival gap per tenant (ns).
+    pub mean_interarrival: Time,
+    /// Smallest argument size (f32 elements).
+    pub min_elems: usize,
+    /// Heavy-tail truncation for argument sizes (f32 elements).
+    pub max_elems: usize,
+    /// Cores per request on the serving device (a quarter of requests
+    /// drop to half this, so core counts vary but stay
+    /// stream-deterministic).
+    pub cores: usize,
+    /// Probability a request is the failing [`KernelClass::Boom`] class
+    /// (default 0 — healthy traffic).
+    pub boom_rate: f64,
+    /// Probability a request chains behind its predecessor
+    /// ([`Request::after_prev`]; default 0).
+    pub chain_rate: f64,
+}
+
+impl Default for TrafficConfig {
+    fn default() -> Self {
+        TrafficConfig {
+            duration: 2_000_000,
+            mean_interarrival: 100_000,
+            min_elems: 32,
+            max_elems: 512,
+            cores: 4,
+            boom_rate: 0.0,
+            chain_rate: 0.0,
+        }
+    }
+}
+
+/// Generate one tenant's full request stream. Depends only on
+/// `(master_seed, tenant, cfg)` — independent of every other tenant and
+/// of the pool, which is the solo-run differential's foundation (module
+/// docs).
+pub fn tenant_requests(master_seed: u64, tenant: u64, cfg: &TrafficConfig) -> Vec<Request> {
+    debug_assert!(cfg.min_elems <= cfg.max_elems);
+    let mut rng = Rng::new(master_seed).fork(tenant);
+    let mut reqs: Vec<Request> = Vec::new();
+    let mut t: Time = 0;
+    loop {
+        let gap = rng.exponential(cfg.mean_interarrival as f64);
+        t += (gap as Time).max(1);
+        if t > cfg.duration {
+            break;
+        }
+        let class = if cfg.boom_rate > 0.0 && rng.chance(cfg.boom_rate) {
+            KernelClass::Boom
+        } else {
+            match rng.next_u64() % 100 {
+                0..=34 => KernelClass::ScanSum,
+                35..=64 => KernelClass::Normalize,
+                65..=84 => KernelClass::SgdStep,
+                _ => KernelClass::Linpack,
+            }
+        };
+        // Truncated Pareto (alpha 1.3): mostly near min_elems, an
+        // occasional request near the cap.
+        let u = rng.next_f64();
+        let raw = cfg.min_elems as f64 / (1.0 - u).max(1e-12).powf(1.0 / 1.3);
+        let cores = if rng.chance(0.25) { (cfg.cores / 2).max(1) } else { cfg.cores.max(1) };
+        let elems = (raw as usize).clamp(cfg.min_elems, cfg.max_elems).div_ceil(cores) * cores;
+        let after_prev = !reqs.is_empty() && cfg.chain_rate > 0.0 && rng.chance(cfg.chain_rate);
+        let data_seed = rng.next_u64();
+        reqs.push(Request {
+            tenant,
+            index: reqs.len(),
+            arrival: t,
+            class,
+            elems,
+            cores,
+            data_seed,
+            after_prev,
+        });
+    }
+    reqs
+}
+
+/// Merge every tenant's stream into one global arrival schedule, ordered
+/// by `(arrival, tenant, index)` — the deterministic order the fleet
+/// processes admissions in (ties cannot reorder between runs).
+pub fn schedule(master_seed: u64, tenants: &[u64], cfg: &TrafficConfig) -> Vec<Request> {
+    let mut all: Vec<Request> =
+        tenants.iter().flat_map(|&t| tenant_requests(master_seed, t, cfg)).collect();
+    all.sort_by_key(|r| (r.arrival, r.tenant, r.index));
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn streams_are_deterministic_and_tenant_independent() {
+        let cfg = TrafficConfig::default();
+        let a = tenant_requests(7, 3, &cfg);
+        let b = tenant_requests(7, 3, &cfg);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.arrival, x.class, x.elems, x.cores, x.data_seed), (
+                y.arrival, y.class, y.elems, y.cores, y.data_seed
+            ));
+        }
+        // A different tenant under the same seed gets a different stream.
+        let c = tenant_requests(7, 4, &cfg);
+        assert!(
+            a.len() != c.len()
+                || a.iter().zip(&c).any(|(x, y)| x.arrival != y.arrival),
+            "tenant forks must decorrelate streams"
+        );
+    }
+
+    #[test]
+    fn schedule_is_sorted_and_sizes_are_bounded() {
+        let cfg = TrafficConfig::default();
+        let all = schedule(42, &[0, 1, 2], &cfg);
+        assert!(!all.is_empty());
+        for w in all.windows(2) {
+            assert!((w[0].arrival, w[0].tenant, w[0].index) <= (w[1].arrival, w[1].tenant, w[1].index));
+        }
+        for r in &all {
+            assert!(r.arrival >= 1 && r.arrival <= cfg.duration);
+            assert!(r.elems >= cfg.min_elems);
+            // Rounding to a core multiple can push at most cores-1 past the cap.
+            assert!(r.elems < cfg.max_elems + r.cores);
+            assert_eq!(r.elems % r.cores, 0);
+            assert!(!matches!(r.class, KernelClass::Boom), "boom_rate 0 means no boom");
+        }
+    }
+}

@@ -41,6 +41,12 @@
 //!   engine per technology, `.on(device)` placement, cross-device
 //!   host-level staging — one launch graph spanning an Epiphany and a
 //!   MicroBlaze at once).
+//! * [`fleet`] — the serving layer above single sessions: a bounded pool
+//!   of device groups multiplexing N independent tenants' seeded
+//!   open-loop request streams, with bounded fair admission
+//!   ([`Error::Overloaded`] load shedding), tenant-tagged launches and a
+//!   deterministic latency/utilization report (per-class p50/p95/p99,
+//!   Jain fairness, per-device busy fractions).
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`) that carry the numeric hot path.
 //! * [`workloads`] — the paper's benchmarks: the lung-scan neural-network
@@ -101,6 +107,7 @@ pub mod config;
 pub mod coordinator;
 pub mod device;
 pub mod error;
+pub mod fleet;
 pub mod memory;
 pub mod metrics;
 pub mod runtime;

@@ -5,6 +5,8 @@
 //! * `mlbench`  — the §5 machine-learning benchmark (Figs. 3–4 rows).
 //! * `linpack`  — Table 1 (MFLOPs / Watts / GFLOPs-per-Watt).
 //! * `stall`    — Table 2 (synthetic stall-time probe).
+//! * `fleet`    — multi-tenant serving over a bounded device pool
+//!   (latency percentiles, fairness, utilization).
 //! * `info`     — technology presets and memory hierarchy facts.
 //!
 //! See `--help` for flags; each bench target under `benches/` regenerates
@@ -14,6 +16,7 @@ use microcore::cli::Cli;
 use microcore::config::ExperimentConfig;
 use microcore::coordinator::{Session, TransferMode};
 use microcore::device::Technology;
+use microcore::fleet::{Fleet, FleetConfig, TrafficConfig};
 use microcore::memory::{Hierarchy, Level};
 use microcore::metrics::report::{f3, fault_table, ms, Table};
 use microcore::sim::FaultPlan;
@@ -43,6 +46,11 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
     .opt("faults", None, "mlbench: inject a seeded transient-fault plan (value = fault seed)")
     .opt("retries", Some("0"), "mlbench: per-launch retry budget under --faults (0 = fail fast)")
     .opt("config", None, "JSON experiment config (overrides other flags)")
+    .opt("tenants", Some("8"), "fleet: independent tenant request streams")
+    .opt("duration", Some("2000000"), "fleet: arrival horizon in virtual ns")
+    .opt("groups", Some("2"), "fleet: device groups in the pool")
+    .opt("devices", Some("2"), "fleet: devices per group")
+    .opt("capacity", Some("64"), "fleet: admission-queue capacity (0 = unbounded)")
     .flag("full", "full-size image regime for mlbench")
     .flag("cache", "front the mlbench image store with the shared-window cache")
     .flag("pipeline", "mlbench: train two replicas on disjoint core halves, comparing blocking vs pipelined launches")
@@ -51,7 +59,7 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
 
     let Some(args) = cli.parse(argv)? else {
         println!("{}", cli.help());
-        println!("Subcommands: mlbench | linpack | stall | info");
+        println!("Subcommands: mlbench | linpack | stall | fleet | info");
         return Ok(());
     };
     let cmd = args.positional.first().map(String::as_str).unwrap_or("info");
@@ -331,6 +339,36 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
                 r.losses,
                 r.requests,
                 ms(r.stall)
+            );
+            Ok(())
+        }
+        "fleet" => {
+            let seed: u64 = args.parse_as("seed")?;
+            let tenants: usize = args.parse_as("tenants")?;
+            let duration: u64 = args.parse_as("duration")?;
+            let groups: usize = args.parse_as("groups")?;
+            let devices: usize = args.parse_as("devices")?;
+            let capacity: usize = args.parse_as("capacity")?;
+            let tech = tech_of(&args)?;
+            let cfg = FleetConfig {
+                seed,
+                groups,
+                devices_per_group: devices,
+                tech: tech.clone(),
+                queue_capacity: (capacity > 0).then_some(capacity),
+                traffic: TrafficConfig { duration, ..TrafficConfig::default() },
+                ..FleetConfig::default()
+            }
+            .with_tenants(tenants);
+            let mut fleet = Fleet::new(cfg)?;
+            let report = fleet.run()?;
+            print!("{}", report.render());
+            println!(
+                "served {} requests ({} rejected) across {} slots on {}",
+                report.total_completed(),
+                report.total_rejected(),
+                groups * devices,
+                tech.name
             );
             Ok(())
         }

@@ -162,6 +162,45 @@ pub fn f3(v: f64) -> String {
     format!("{v:.3}")
 }
 
+/// Per-kernel-class latency table for a fleet run: served count and
+/// nearest-rank p50/p95/p99 plus mean, in milliseconds of virtual time
+/// (see [`crate::fleet::FleetReport`]). One row per class that saw
+/// traffic; byte-deterministic for a given report.
+pub fn fleet_table(title: impl Into<String>, r: &crate::fleet::FleetReport) -> Table {
+    let mut t = Table::new(
+        title,
+        &["class", "served", "p50 ms", "p95 ms", "p99 ms", "mean ms"],
+    );
+    for c in &r.classes {
+        t.row(&[
+            c.class.name().to_string(),
+            c.completed.to_string(),
+            ms(c.p50),
+            ms(c.p95),
+            ms(c.p99),
+            f3(c.mean_ns / 1e6),
+        ]);
+    }
+    t
+}
+
+/// Per-device-slot utilization table for a fleet run: requests served,
+/// accumulated busy virtual time and busy fraction of the run horizon.
+pub fn fleet_util_table(title: impl Into<String>, r: &crate::fleet::FleetReport) -> Table {
+    let mut t = Table::new(title, &["slot", "group", "device", "served", "busy ms", "busy frac"]);
+    for d in &r.devices {
+        t.row(&[
+            d.slot.to_string(),
+            d.group.to_string(),
+            d.device.to_string(),
+            d.served.to_string(),
+            ms(d.busy),
+            f3(d.busy_fraction),
+        ]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -215,6 +254,38 @@ mod tests {
         assert!(s.contains("3.0"), "3072 B = 3.0 KB: {s}");
         assert!(s.contains("2.000"), "2 ms recovery: {s}");
         assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn fleet_tables_render_classes_and_slots() {
+        let r = crate::fleet::FleetReport {
+            classes: vec![crate::fleet::ClassStats {
+                class: crate::fleet::KernelClass::ScanSum,
+                completed: 7,
+                p50: 40_000_000,
+                p95: 70_000_000,
+                p99: 70_000_000,
+                mean_ns: 40_000_000.0,
+            }],
+            tenants: Vec::new(),
+            devices: vec![crate::fleet::DeviceStats {
+                slot: 0,
+                group: 0,
+                device: 1,
+                served: 7,
+                busy: 50_000_000,
+                busy_fraction: 0.5,
+            }],
+            fairness: 1.0,
+            horizon: 100_000_000,
+        };
+        let s = fleet_table("fleet latency", &r).render();
+        assert!(s.contains("scan-sum"), "{s}");
+        assert!(s.contains("40.000"), "p50 in ms: {s}");
+        assert!(s.contains("70.000"), "p95/p99 in ms: {s}");
+        let u = fleet_util_table("util", &r).render();
+        assert!(u.contains("0.500"), "busy fraction: {u}");
+        assert!(u.contains("50.000"), "busy ms: {u}");
     }
 
     #[test]

@@ -233,6 +233,75 @@ pub mod dag {
     }
 }
 
+/// Seeded generator of fleet serving scenarios — a random pool shape
+/// (groups × devices, bounded or unbounded admission) plus a random
+/// traffic shape (arrival rate, size distribution, failing `Boom`
+/// requests, intra-tenant chains), emitted directly as a runnable
+/// [`crate::fleet::FleetConfig`]. `tests/properties.rs` drives real
+/// fleets from these scenarios for the serving layer's two properties:
+///
+/// * **bit-reproducibility** — the same scenario run twice produces
+///   byte-identical records, reports, clocks and engine stats;
+/// * **solo-run differential** — with unbounded admission, every
+///   tenant's per-request outcomes in the shared fleet are
+///   value-identical to the same tenant running alone on an identical
+///   pool (admission changes *when*, never *what*).
+pub mod fleet {
+    use super::Gen;
+    use crate::device::Technology;
+    use crate::fleet::{FleetConfig, TrafficConfig};
+
+    /// Generator knobs.
+    #[derive(Debug, Clone, Copy)]
+    pub struct FleetGenConfig {
+        /// Upper bound on tenants (at least 1 is generated).
+        pub max_tenants: usize,
+        /// Upper bound on device groups in the pool (≥ 1 generated).
+        pub max_groups: usize,
+        /// Upper bound on devices per group (≥ 1 generated).
+        pub max_devices: usize,
+        /// Allow bounded admission queues (~half of scenarios; otherwise
+        /// every scenario is unbounded, the differential's regime).
+        pub bounded: bool,
+        /// Allow failing [`crate::fleet::KernelClass::Boom`] traffic.
+        pub booms: bool,
+        /// Allow intra-tenant request chains (`after_prev`).
+        pub chains: bool,
+    }
+
+    /// Generate one runnable scenario. Sizes are kept small (a few
+    /// tenants, a handful of requests each) so a property can afford
+    /// hundreds of cases; the shapes still cover idle pools, saturated
+    /// pools, rejections (when `bounded`), failures and chains.
+    pub fn gen_fleet(g: &mut Gen, cfg: &FleetGenConfig) -> FleetConfig {
+        let tenants = g.usize(1, cfg.max_tenants.max(1) + 1);
+        let groups = g.usize(1, cfg.max_groups.max(1) + 1);
+        let devices = g.usize(1, cfg.max_devices.max(1) + 1);
+        let queue_capacity =
+            if cfg.bounded && g.bool(0.5) { Some(g.usize(1, 8)) } else { None };
+        let traffic = TrafficConfig {
+            duration: g.usize(80_000, 250_000) as u64,
+            mean_interarrival: g.usize(30_000, 100_000) as u64,
+            min_elems: 16,
+            max_elems: g.usize(48, 161),
+            cores: *g.choose(&[2usize, 4]),
+            boom_rate: if cfg.booms && g.bool(0.5) { 0.25 } else { 0.0 },
+            chain_rate: if cfg.chains && g.bool(0.5) { 0.35 } else { 0.0 },
+        };
+        FleetConfig {
+            seed: g.usize(0, 1 << 30) as u64,
+            groups,
+            devices_per_group: devices,
+            tech: Technology::epiphany3(),
+            queue_capacity,
+            traffic,
+            faults: Vec::new(),
+            ..FleetConfig::default()
+        }
+        .with_tenants(tenants)
+    }
+}
+
 /// Assert two f32 slices are elementwise close.
 pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, what: &str) -> CaseResult {
     if a.len() != b.len() {
@@ -324,6 +393,44 @@ mod tests {
                     assert!(failed[i]);
                 }
             }
+        }
+    }
+
+    #[test]
+    fn fleet_generator_produces_runnable_shapes() {
+        use super::fleet::{gen_fleet, FleetGenConfig};
+        let mut g = Gen { rng: Rng::new(9) };
+        let cfg = FleetGenConfig {
+            max_tenants: 3,
+            max_groups: 2,
+            max_devices: 2,
+            bounded: true,
+            booms: true,
+            chains: true,
+        };
+        let mut saw_bounded = false;
+        let mut saw_booms = false;
+        for _ in 0..100 {
+            let fc = gen_fleet(&mut g, &cfg);
+            assert!((1..=3).contains(&fc.tenants.len()));
+            assert!((1..=2).contains(&fc.groups));
+            assert!((1..=2).contains(&fc.devices_per_group));
+            assert!(fc.traffic.min_elems <= fc.traffic.max_elems);
+            assert!(fc.traffic.duration >= 80_000);
+            if let Some(cap) = fc.queue_capacity {
+                assert!((1..8).contains(&cap));
+                saw_bounded = true;
+            }
+            saw_booms |= fc.traffic.boom_rate > 0.0;
+        }
+        assert!(saw_bounded && saw_booms, "knobs must actually vary the scenarios");
+        // Knobs off: always unbounded, always healthy, never chained.
+        let quiet = FleetGenConfig { bounded: false, booms: false, chains: false, ..cfg };
+        for _ in 0..50 {
+            let fc = gen_fleet(&mut g, &quiet);
+            assert_eq!(fc.queue_capacity, None);
+            assert_eq!(fc.traffic.boom_rate, 0.0);
+            assert_eq!(fc.traffic.chain_rate, 0.0);
         }
     }
 

@@ -114,6 +114,20 @@ def upd(w, g, lr, n, chunk):
     return 0
 "#;
 
+/// Scalar SGD step: `w[i] -= lr * g[i]`, element by element — the plain
+/// ePython reference form of [`UPD_SRC`]'s `update_tile` inner loop,
+/// with no tensor builtins. Public for the fleet traffic generator (the
+/// "ml-update" request class), where each tenant request carries its own
+/// small sharded weight/gradient pair.
+pub const SGD_STEP_SRC: &str = r#"
+def sgd(w, g, lr):
+    i = 0
+    while i < len(w):
+        w[i] = w[i] - lr * g[i]
+        i += 1
+    return 0
+"#;
+
 /// Benchmark configuration.
 #[derive(Debug, Clone)]
 pub struct MlBenchConfig {

@@ -76,8 +76,10 @@ impl ScanGenerator {
 
 /// Element-wise volume normalization: `x[i] = (x[i] - mu) * scale`,
 /// written back in place. Two statements so every arithmetic step is a
-/// plain binary op — identical f64 evaluation on every core.
-const NORM_SRC: &str = r#"
+/// plain binary op — identical f64 evaluation on every core. Public so
+/// the fleet traffic generator can draw "normalize" requests from the
+/// same kernel the sharded-scan differentials pin down.
+pub const NORM_SRC: &str = r#"
 def norm(x, mu, scale):
     i = 0
     while i < len(x):
@@ -88,7 +90,8 @@ def norm(x, mu, scale):
 "#;
 
 /// Whole-shard reduction: per-core partial sum, combined on the host.
-const SUM_SRC: &str = r#"
+/// Public for the fleet traffic generator (the "scan-sum" request class).
+pub const SUM_SRC: &str = r#"
 def total(x):
     s = 0.0
     i = 0

@@ -1,0 +1,261 @@
+//! Integration tests for the fleet serving layer: the admission
+//! boundary, fair dequeue under a hog, tenant fault isolation, and the
+//! hand-computed percentile fixture pinning the report math.
+//!
+//! These complement the seeded fuzzers in `properties.rs` with exact,
+//! hand-crafted scenarios: every request below is constructed directly
+//! (not drawn from the traffic generator), so each assertion pins a
+//! specific boundary rather than a statistical tendency.
+
+use microcore::coordinator::QueueStats;
+use microcore::error::Error;
+use microcore::fleet::{
+    Fleet, FleetConfig, FleetReport, KernelClass, Request, RequestOutcome, RequestRecord,
+    TrafficConfig,
+};
+use microcore::metrics::report::fleet_table;
+use microcore::sim::FaultPlan;
+
+/// A hand-crafted request (healthy scan unless the test overrides).
+fn req(tenant: u64, index: usize, arrival: u64) -> Request {
+    Request {
+        tenant,
+        index,
+        arrival,
+        class: KernelClass::ScanSum,
+        elems: 32,
+        cores: 2,
+        data_seed: 0xD0_u64 ^ (tenant << 8) ^ index as u64,
+        after_prev: false,
+    }
+}
+
+/// A one-slot pool (every request serializes through a single device).
+fn one_slot(queue_capacity: Option<usize>) -> FleetConfig {
+    FleetConfig {
+        groups: 1,
+        devices_per_group: 1,
+        queue_capacity,
+        traffic: TrafficConfig { duration: 100_000, ..TrafficConfig::default() },
+        ..FleetConfig::default()
+    }
+    .with_tenants(4)
+}
+
+/// Outcomes of one tenant's requests, in stream (index) order.
+fn tenant_outcomes(records: &[RequestRecord], tenant: u64) -> Vec<(usize, RequestOutcome)> {
+    let mut v: Vec<(usize, RequestOutcome)> = records
+        .iter()
+        .filter(|r| r.tenant == tenant)
+        .map(|r| (r.index, r.outcome.clone()))
+        .collect();
+    v.sort_by_key(|&(i, _)| i);
+    v
+}
+
+/// The admission boundary is exact: with capacity `c` and a busy pool,
+/// the `c`-th waiter is admitted and the `c+1`-th is rejected with
+/// [`Error::Overloaded`] — recorded, shed at the door, and invisible to
+/// every engine.
+#[test]
+fn overloaded_fires_exactly_at_the_queue_full_boundary() {
+    let mut f = Fleet::new(one_slot(Some(2))).unwrap();
+    // First arrival takes the only slot (the fleet serves it to
+    // completion, so the slot's free_at watermark is far past these
+    // arrival times); the next two fill the queue to capacity.
+    f.offer(req(0, 0, 1)).unwrap();
+    f.offer(req(1, 0, 2)).unwrap();
+    f.offer(req(2, 0, 3)).unwrap();
+    assert_eq!(f.queue_len(), 2, "queue exactly at capacity");
+
+    // capacity + 1: rejected, queue untouched.
+    let err = f.offer(req(3, 0, 4)).unwrap_err();
+    assert!(
+        matches!(err, Error::Overloaded { tenant: 3, capacity: 2 }),
+        "expected Overloaded at the boundary, got {err:?}"
+    );
+    assert_eq!(f.queue_len(), 2, "rejection must not consume queue space");
+    let rejected = f.records().last().unwrap();
+    assert_eq!(rejected.tenant, 3);
+    assert_eq!(rejected.outcome, RequestOutcome::Rejected);
+    assert_eq!(rejected.slot, usize::MAX, "a shed request never touched a slot");
+
+    // Still full: the boundary holds for repeated offers.
+    let err = f.offer(req(3, 1, 5)).unwrap_err();
+    assert!(matches!(err, Error::Overloaded { tenant: 3, capacity: 2 }));
+
+    // Draining serves everything that was admitted.
+    f.drain().unwrap();
+    let report = f.report();
+    assert_eq!(report.total_completed(), 3);
+    assert_eq!(report.total_rejected(), 2);
+    assert_eq!(f.queue_len(), 0);
+    assert_eq!(f.queue_stats(), QueueStats::default(), "all launches claimed");
+}
+
+/// Fair dequeue: one hog tenant flooding the queue cannot starve three
+/// light tenants — each light tenant's single request dispatches before
+/// the hog's backlog, in deterministic round-robin order.
+#[test]
+fn hog_tenant_cannot_starve_light_tenants() {
+    let mut f = Fleet::new(one_slot(None)).unwrap();
+    // Hog tenant 0: request 0 takes the slot, 1..=5 pile into the queue.
+    for i in 0..6 {
+        f.offer(req(0, i, 1 + i as u64)).unwrap();
+    }
+    // Light tenants 1..=3: one request each, arriving after the hog's
+    // whole backlog is queued.
+    for t in 1..=3u64 {
+        f.offer(req(t, 0, 9 + t)).unwrap();
+    }
+    f.drain().unwrap();
+
+    let mut by_dispatch: Vec<&RequestRecord> = f.records().iter().collect();
+    by_dispatch.sort_by_key(|r| r.dispatch_order);
+    let tenants: Vec<u64> = by_dispatch.iter().map(|r| r.tenant).collect();
+    // Hog's head request, then one full round-robin rotation (hog, the
+    // three light tenants), then the hog's remaining backlog.
+    assert_eq!(tenants, vec![0, 0, 1, 2, 3, 0, 0, 0, 0], "fair rotation order");
+
+    let report = f.report();
+    assert_eq!(report.total_completed(), 9);
+    for t in &report.tenants {
+        let expect = if t.tenant == 0 { 6 } else { 1 };
+        assert_eq!(t.completed, expect, "tenant {}", t.tenant);
+    }
+    // Jain over [6, 1, 1, 1]: (9)^2 / (4 * 39).
+    assert!(
+        (report.fairness - 81.0 / 156.0).abs() < 1e-12,
+        "fairness index: {}",
+        report.fairness
+    );
+}
+
+/// Failure isolation, kernel errors: a tenant whose request fails (and
+/// whose chained continuation is dependency-poisoned) never affects
+/// another tenant sharing the same device.
+#[test]
+fn a_failing_chain_never_poisons_another_tenant() {
+    let mut f = Fleet::new(one_slot(None)).unwrap();
+    // Tenant 0: a deterministically-failing request, then a chained
+    // continuation that must park on DependencyFailed.
+    let mut boom = req(0, 0, 1);
+    boom.class = KernelClass::Boom;
+    f.offer(boom).unwrap();
+    let mut chained = req(0, 1, 2);
+    chained.after_prev = true;
+    f.offer(chained).unwrap();
+    // Tenant 1: healthy traffic on the same single device.
+    f.offer(req(1, 0, 3)).unwrap();
+    f.offer(req(1, 1, 4)).unwrap();
+    f.drain().unwrap();
+
+    let t0 = tenant_outcomes(f.records(), 0);
+    assert_eq!(t0.len(), 2);
+    assert_eq!(t0[0].1, RequestOutcome::Failed("vm".into()), "boom is a VM error");
+    assert_eq!(
+        t0[1].1,
+        RequestOutcome::Failed("dependency-failed".into()),
+        "the chain parks on its failed predecessor"
+    );
+    let t1 = tenant_outcomes(f.records(), 1);
+    assert_eq!(t1.len(), 2);
+    for (i, o) in &t1 {
+        assert!(
+            matches!(o, RequestOutcome::Ok(_)),
+            "tenant 1 request {i} must be untouched, got {o:?}"
+        );
+    }
+    assert_eq!(f.queue_stats(), QueueStats::default(), "failed launches are claimed too");
+}
+
+/// Failure isolation, injected hardware faults: a transient core fault
+/// strikes the first launch on the poisoned slot (fail-fast — the fleet
+/// sets no retry budget), its owner's chained continuation parks, and
+/// every other tenant's request still completes.
+#[test]
+fn a_core_fault_never_poisons_another_tenant() {
+    let mut cfg = one_slot(None);
+    // Armed from t=1, core 0: strikes at the first suspension point of
+    // whatever launch occupies core 0 — deterministically tenant 0's
+    // first request (cores {0, 1}, on-demand traffic suspends on every
+    // element access).
+    cfg.faults = vec![(0, 0, FaultPlan::new().transient(1, 0))];
+    let mut f = Fleet::new(cfg).unwrap();
+    f.offer(req(0, 0, 1)).unwrap();
+    let mut chained = req(0, 1, 2);
+    chained.after_prev = true;
+    f.offer(chained).unwrap();
+    f.offer(req(1, 0, 3)).unwrap();
+    f.offer(req(1, 1, 4)).unwrap();
+    f.drain().unwrap();
+
+    let t0 = tenant_outcomes(f.records(), 0);
+    assert_eq!(t0[0].1, RequestOutcome::Failed("core-fault".into()), "fail-fast core fault");
+    assert_eq!(t0[1].1, RequestOutcome::Failed("dependency-failed".into()));
+    let t1 = tenant_outcomes(f.records(), 1);
+    assert_eq!(t1.len(), 2);
+    for (i, o) in &t1 {
+        assert!(
+            matches!(o, RequestOutcome::Ok(_)),
+            "tenant 1 request {i} must survive the fault, got {o:?}"
+        );
+    }
+    let report = f.report();
+    assert_eq!(report.total_completed(), 2);
+    assert_eq!(report.tenants[0].failed, 2);
+    assert_eq!(report.tenants[1].completed, 2);
+}
+
+/// The report's percentile math, pinned against a hand-computed 7-sample
+/// fixture (nearest-rank: rank ⌈p/100·n⌉ of the sorted set):
+/// latencies 10..=70 ms ⇒ p50 = rank 4 = 40 ms, p95 = p99 = rank 7 =
+/// 70 ms, mean = 40 ms. A 4-sample class pins the even-size behavior
+/// (p50 = rank 2 = 20 ms).
+#[test]
+fn fleet_table_percentiles_match_hand_computed_fixture() {
+    let rec = |class: KernelClass, index: usize, latency_ms: u64| RequestRecord {
+        tenant: 0,
+        index,
+        class,
+        arrival: 1_000_000,
+        start: 1_000_000,
+        finish: 1_000_000 + latency_ms * 1_000_000,
+        slot: 0,
+        dispatch_order: index,
+        outcome: RequestOutcome::Ok("v".into()),
+    };
+    let mut records = Vec::new();
+    // Seven scan-sum samples, deliberately out of order (the report must
+    // sort before ranking).
+    for (i, ms) in [40u64, 10, 70, 20, 60, 30, 50].iter().enumerate() {
+        records.push(rec(KernelClass::ScanSum, i, *ms));
+    }
+    // Four linpack samples: 10, 20, 30, 40 ms.
+    for (i, ms) in [30u64, 10, 40, 20].iter().enumerate() {
+        records.push(rec(KernelClass::Linpack, 100 + i, *ms));
+    }
+    let report = FleetReport::from_records(&records, Vec::new(), 100_000_000);
+
+    let scan = &report.classes[0];
+    assert_eq!(scan.class, KernelClass::ScanSum);
+    assert_eq!(scan.completed, 7);
+    assert_eq!(scan.p50, 40_000_000, "rank ⌈0.50·7⌉ = 4 ⇒ 40 ms");
+    assert_eq!(scan.p95, 70_000_000, "rank ⌈0.95·7⌉ = 7 ⇒ 70 ms");
+    assert_eq!(scan.p99, 70_000_000, "rank ⌈0.99·7⌉ = 7 ⇒ 70 ms");
+    assert!((scan.mean_ns - 40_000_000.0).abs() < 1e-6);
+
+    let lin = &report.classes[1];
+    assert_eq!(lin.class, KernelClass::Linpack);
+    assert_eq!(lin.completed, 4);
+    assert_eq!(lin.p50, 20_000_000, "rank ⌈0.50·4⌉ = 2 ⇒ 20 ms");
+    assert_eq!(lin.p95, 40_000_000, "rank ⌈0.95·4⌉ = 4 ⇒ 40 ms");
+    assert_eq!(lin.p99, 40_000_000);
+
+    // And the rendered table carries exactly those milliseconds.
+    let rendered = fleet_table("fixture", &report).render();
+    assert!(rendered.contains("scan-sum"), "{rendered}");
+    assert!(rendered.contains("40.000"), "p50 in ms: {rendered}");
+    assert!(rendered.contains("70.000"), "p95/p99 in ms: {rendered}");
+    assert!(rendered.contains("20.000"), "even-size p50: {rendered}");
+}

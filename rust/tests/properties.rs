@@ -1,13 +1,17 @@
 //! Property-based tests over coordinator invariants (testkit-driven).
 
+use std::collections::BTreeMap;
+
 use microcore::coordinator::{
-    Access, ArgSpec, OffloadOptions, OffloadResult, PrefetchSpec, Session, TransferMode,
+    Access, ArgSpec, DeviceId, OffloadOptions, OffloadResult, PrefetchSpec, Session, TransferMode,
 };
 use microcore::device::Technology;
 use microcore::error::Error;
+use microcore::fleet::{Fleet, FleetConfig, RequestOutcome, RequestRecord};
 use microcore::memory::{DataRef, MemSpec};
 use microcore::sim::FaultPlan;
 use microcore::testkit::dag::{gen_dag, DagConfig, DagKernel, DagSpec};
+use microcore::testkit::fleet::{gen_fleet, FleetGenConfig};
 use microcore::testkit::{check, Gen};
 
 const SUM_KERNEL: &str = r#"
@@ -705,6 +709,136 @@ fn prop_launch_dag_fault_recovery_is_value_transparent() {
         Ok(())
     });
     assert!(fired.get() > 0, "no fault in the whole seed set ever fired — plan horizon broken?");
+}
+
+// ---------------------------------------------------------------------------
+// Fleet serving fuzzer: seeded multi-tenant scenarios (testkit::fleet) over
+// real device pools. Two properties pin the serving layer's contract
+// (engine invariant 11: admission changes *when* launches run, never *what*
+// they compute). The tier-1 seed set is fixed at 100 cases;
+// MICROCORE_FUZZ_FLEET=1 is the nightly setting (1000 cases).
+// ---------------------------------------------------------------------------
+
+/// Case count for the fleet properties: 100 in tier-1,
+/// `MICROCORE_FUZZ_FLEET=1` selects the 1000-case nightly sweep
+/// (`MICROCORE_FUZZ_CASES` overrides for local bisection).
+fn fleet_cases() -> usize {
+    if std::env::var("MICROCORE_FUZZ_FLEET").is_ok_and(|v| v == "1") {
+        1000
+    } else {
+        std::env::var("MICROCORE_FUZZ_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(100)
+    }
+}
+
+/// One full fleet run reduced to everything observable: every request
+/// record, the rendered report, and each pooled session's final clock and
+/// engine stats.
+fn fleet_capture(
+    cfg: &FleetConfig,
+) -> Result<(Vec<RequestRecord>, String, Vec<(u64, String)>), String> {
+    let mut f = Fleet::new(cfg.clone()).map_err(|e| e.to_string())?;
+    let rep = f.run().map_err(|e| e.to_string())?;
+    let mut sessions = Vec::new();
+    for grp in f.pool() {
+        for d in 0..cfg.devices_per_group {
+            let s = grp.session(DeviceId(d));
+            sessions.push((s.now(), format!("{:?}", s.stats())));
+        }
+    }
+    Ok((f.records().to_vec(), rep.render(), sessions))
+}
+
+/// One full fleet run reduced to the per-tenant outcome maps
+/// (`index → outcome`) the solo-run differential compares.
+fn fleet_outcomes(
+    cfg: &FleetConfig,
+) -> Result<BTreeMap<u64, BTreeMap<usize, RequestOutcome>>, String> {
+    let mut f = Fleet::new(cfg.clone()).map_err(|e| e.to_string())?;
+    f.run().map_err(|e| e.to_string())?;
+    let mut by_tenant: BTreeMap<u64, BTreeMap<usize, RequestOutcome>> = BTreeMap::new();
+    for r in f.records() {
+        by_tenant.entry(r.tenant).or_default().insert(r.index, r.outcome.clone());
+    }
+    Ok(by_tenant)
+}
+
+/// Fleet property 1 — **bit-reproducibility**: the same seed and the same
+/// pool shape produce byte-identical request records (including result
+/// digests of the final buffer contents), a byte-identical rendered
+/// report, and identical per-session clocks and engine stats — across
+/// random pool shapes, bounded and unbounded admission, failing traffic
+/// and chained requests.
+#[test]
+fn prop_fleet_same_seed_bit_identical() {
+    check("fleet-bit-identical", 0xF1EE7_0001, fleet_cases(), |g: &mut Gen| {
+        let cfg = gen_fleet(
+            g,
+            &FleetGenConfig {
+                max_tenants: 3,
+                max_groups: 2,
+                max_devices: 2,
+                bounded: true,
+                booms: true,
+                chains: true,
+            },
+        );
+        let a = fleet_capture(&cfg)?;
+        let b = fleet_capture(&cfg)?;
+        if a.0 != b.0 {
+            return Err(format!("records diverged between identical runs\ncfg: {cfg:?}"));
+        }
+        if a.1 != b.1 {
+            return Err(format!("rendered reports diverged\ncfg: {cfg:?}\n{}\nvs\n{}", a.1, b.1));
+        }
+        if a.2 != b.2 {
+            return Err(format!("session clocks/stats diverged\ncfg: {cfg:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// Fleet property 2 — the **solo-run differential**: with unbounded
+/// admission (capacity ∞, nothing ever shed), every tenant's per-request
+/// outcomes in the shared multi-tenant fleet are value-identical to the
+/// same tenant running *alone* on an identical pool. Contention moves
+/// start times, never results — success digests match exactly and failure
+/// domains (VM errors from `Boom`, intra-tenant `DependencyFailed`
+/// chains) match exactly.
+#[test]
+fn prop_fleet_unbounded_matches_solo_runs() {
+    check("fleet-solo-differential", 0xF1EE7_0002, fleet_cases(), |g: &mut Gen| {
+        let cfg = gen_fleet(
+            g,
+            &FleetGenConfig {
+                max_tenants: 3,
+                max_groups: 2,
+                max_devices: 2,
+                bounded: false,
+                booms: true,
+                chains: true,
+            },
+        );
+        let shared = fleet_outcomes(&cfg)?;
+        for outcomes in shared.values() {
+            if outcomes.values().any(|o| matches!(o, RequestOutcome::Rejected)) {
+                return Err(format!("capacity-∞ fleet shed a request\ncfg: {cfg:?}"));
+            }
+        }
+        for &tenant in &cfg.tenants {
+            let solo_cfg = FleetConfig { tenants: vec![tenant], ..cfg.clone() };
+            let solo = fleet_outcomes(&solo_cfg)?;
+            let empty = BTreeMap::new();
+            let (got, want) =
+                (shared.get(&tenant).unwrap_or(&empty), solo.get(&tenant).unwrap_or(&empty));
+            if got != want {
+                return Err(format!(
+                    "tenant {tenant}: shared fleet diverged from solo run\ncfg: {cfg:?}\n\
+                     shared: {got:?}\nsolo: {want:?}"
+                ));
+            }
+        }
+        Ok(())
+    });
 }
 
 /// The pre-fetch engine never requests data beyond the view, regardless

@@ -1,0 +1,793 @@
+//! Abstract interpretation of kernel bytecode: per-argument access windows.
+//!
+//! Runs a worklist fixpoint over [`crate::vm::bytecode::Op`] (post-fusion —
+//! the `fuse.rs` superinstructions `AugAdd*`/`BranchCmpLL`/`AccumIndexLLL`
+//! have their own transfer functions) and conservatively infers, for every
+//! entry-function parameter, the interval of indices the kernel may read
+//! and may write through that parameter.
+//!
+//! The abstraction tracks integer scalars as [`Interval`]s and preserves
+//! *parameter identity*: the value bound to entry parameter `p` is tracked
+//! as [`AVal::Param`]`(p)` through loads, stores, `CallFunc` inlining and
+//! returns, so an `a[i]` deep inside a helper still lands on the right
+//! argument summary. Everything the lattice cannot express degrades toward
+//! [`AVal::Any`], whose indexing records an *approximate* whole-window
+//! access on every parameter — imprecise, never unsound.
+//!
+//! ## Soundness contract
+//!
+//! For every external access the VM actually performs at runtime, the
+//! access index lies inside the inferred window for that argument (after
+//! [`Interval::clamp_window`] to the bound view — sound because the
+//! interpreter bounds-checks every external index *before* suspending, so
+//! an out-of-window index raises a `Vm` error instead of becoming an
+//! access, and negative indices are rejected by `as_index` first). The
+//! differential fuzzer `prop_launch_dag_analyzer_is_sound` checks this
+//! contract against the engine's recorded runtime accesses on every seed.
+
+use super::interval::Interval;
+use crate::vm::bytecode::{CmpKind, Function, Op};
+use crate::vm::builtins::Builtin;
+use crate::vm::Program;
+
+/// Maximum `CallFunc` inlining depth before the analyzer gives up on the
+/// callee and assumes it reads and writes every reachable argument.
+const MAX_INLINE_DEPTH: usize = 8;
+/// Global transfer-step budget per program analysis; exceeding it aborts
+/// to the all-arguments conservative fallback.
+const MAX_STEPS: usize = 10_000;
+/// Joins at a program point before widening kicks in.
+const WIDEN_AFTER: u32 = 3;
+
+/// Abstract value: what the analyzer knows about one stack slot or local.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AVal {
+    /// Definitely an integer scalar within the interval.
+    Int(Interval),
+    /// The value bound to entry-function parameter `p` (may be an external
+    /// reference, a local array, or a scalar — identity is what matters).
+    Param(u16),
+    /// A local array (list literal, repetition, tensor result) — indexing
+    /// it never performs an external access.
+    Arr,
+    /// Some other scalar (float / bool / str / none).
+    Scal,
+    /// Top: could be anything, including any parameter's external.
+    Any,
+}
+
+impl AVal {
+    /// Least upper bound in the value lattice.
+    fn join(&self, other: &AVal) -> AVal {
+        match (self, other) {
+            (AVal::Int(a), AVal::Int(b)) => AVal::Int(a.join(b)),
+            (AVal::Param(a), AVal::Param(b)) if a == b => AVal::Param(*a),
+            (AVal::Arr, AVal::Arr) => AVal::Arr,
+            (AVal::Scal, AVal::Scal)
+            | (AVal::Int(_), AVal::Scal)
+            | (AVal::Scal, AVal::Int(_)) => AVal::Scal,
+            _ => AVal::Any,
+        }
+    }
+
+    /// The index interval this value contributes when used as a subscript.
+    fn index_interval(&self) -> (Interval, bool) {
+        match self {
+            AVal::Int(iv) => (*iv, false),
+            _ => (Interval::top(), true),
+        }
+    }
+}
+
+/// Inferred access windows for one entry-function argument.
+///
+/// Windows are intervals over the *argument's bound view* (element 0 = the
+/// first element of the view the launch bound to this parameter); `None`
+/// means the analyzer proved no access of that kind. The `bool` is the
+/// *approximate* flag: `true` when the window came from lattice loss
+/// (non-integer index, inlining bailout, tensor whole-view semantics)
+/// rather than a definitely-executed access pattern.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ArgSummary {
+    /// Read window and approximate flag.
+    pub read: Option<(Interval, bool)>,
+    /// Write window and approximate flag.
+    pub write: Option<(Interval, bool)>,
+}
+
+impl ArgSummary {
+    fn add_read(&mut self, iv: Interval, approx: bool) {
+        self.read = Some(match self.read {
+            Some((old, a)) => (old.join(&iv), a || approx),
+            None => (iv, approx),
+        });
+    }
+
+    fn add_write(&mut self, iv: Interval, approx: bool) {
+        self.write = Some(match self.write {
+            Some((old, a)) => (old.join(&iv), a || approx),
+            None => (iv, approx),
+        });
+    }
+}
+
+/// The analyzer's result for one compiled kernel.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KernelSummary {
+    /// One summary per entry-function parameter.
+    pub args: Vec<ArgSummary>,
+    /// `true` when the fixpoint aborted (step budget, stack confusion,
+    /// inline depth at the entry) and every argument was conservatively
+    /// marked whole-window read+write.
+    pub fallback: bool,
+}
+
+impl KernelSummary {
+    /// The all-arguments conservative summary.
+    fn conservative(arity: usize) -> KernelSummary {
+        let mut args = vec![ArgSummary::default(); arity];
+        for a in &mut args {
+            a.add_read(Interval::top(), true);
+            a.add_write(Interval::top(), true);
+        }
+        KernelSummary { args, fallback: true }
+    }
+}
+
+/// Analyze a compiled (post-fusion) program and summarize, per entry
+/// parameter, the index windows it may read and write.
+pub fn analyze_program(program: &Program) -> KernelSummary {
+    let arity = program.arity();
+    let mut az = Analyzer { program, args: vec![ArgSummary::default(); arity], steps: 0 };
+    let entry_args: Vec<AVal> =
+        (0..arity).map(|p| AVal::Param(p as u16)).collect();
+    let mut active = Vec::new();
+    match az.analyze_fn(program.entry, entry_args, &mut active, 0) {
+        Some(_) => KernelSummary { args: az.args, fallback: false },
+        None => KernelSummary::conservative(arity),
+    }
+}
+
+/// Abstract machine state at one program point.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct State {
+    stack: Vec<AVal>,
+    locals: Vec<AVal>,
+}
+
+impl State {
+    /// Join two states; `None` when stack heights disagree (the compiler
+    /// never emits that, so it signals analyzer confusion → fallback).
+    fn join(&self, other: &State) -> Option<State> {
+        if self.stack.len() != other.stack.len() || self.locals.len() != other.locals.len() {
+            return None;
+        }
+        Some(State {
+            stack: self
+                .stack
+                .iter()
+                .zip(&other.stack)
+                .map(|(a, b)| a.join(b))
+                .collect(),
+            locals: self
+                .locals
+                .iter()
+                .zip(&other.locals)
+                .map(|(a, b)| a.join(b))
+                .collect(),
+        })
+    }
+
+    /// Widen `next` against `self` (applied after [`WIDEN_AFTER`] joins at
+    /// a program point, on the interval components only).
+    fn widen(&self, next: &State) -> State {
+        let w = |a: &AVal, b: &AVal| match (a, b) {
+            (AVal::Int(x), AVal::Int(y)) => AVal::Int(x.widen(y)),
+            _ => *b,
+        };
+        State {
+            stack: self.stack.iter().zip(&next.stack).map(|(a, b)| w(a, b)).collect(),
+            locals: self.locals.iter().zip(&next.locals).map(|(a, b)| w(a, b)).collect(),
+        }
+    }
+}
+
+struct Analyzer<'a> {
+    program: &'a Program,
+    /// Per-entry-parameter access summaries (shared across inlined calls).
+    args: Vec<ArgSummary>,
+    steps: usize,
+}
+
+impl Analyzer<'_> {
+    fn read_param(&mut self, p: u16, iv: Interval, approx: bool) {
+        if let Some(a) = self.args.get_mut(p as usize) {
+            a.add_read(iv, approx);
+        }
+    }
+
+    fn write_param(&mut self, p: u16, iv: Interval, approx: bool) {
+        if let Some(a) = self.args.get_mut(p as usize) {
+            a.add_write(iv, approx);
+        }
+    }
+
+    /// `Any` subscripted: could be any parameter — approximate everything.
+    fn read_all(&mut self) {
+        for a in &mut self.args {
+            a.add_read(Interval::top(), true);
+        }
+    }
+
+    fn write_all(&mut self) {
+        for a in &mut self.args {
+            a.add_write(Interval::top(), true);
+        }
+    }
+
+    fn rw_all(&mut self) {
+        self.read_all();
+        self.write_all();
+    }
+
+    /// Record what a value *might* alias when a call boundary is too deep
+    /// to inline: parameters get whole-window read+write, `Any` taints all.
+    fn taint_escaping(&mut self, v: &AVal) {
+        match v {
+            AVal::Param(p) => {
+                self.read_param(*p, Interval::top(), true);
+                self.write_param(*p, Interval::top(), true);
+            }
+            AVal::Any => self.rw_all(),
+            _ => {}
+        }
+    }
+
+    /// Approximate whole-window read through whatever `v` may alias.
+    fn taint_read(&mut self, v: &AVal) {
+        match v {
+            AVal::Param(p) => self.read_param(*p, Interval::top(), true),
+            AVal::Any => self.read_all(),
+            _ => {}
+        }
+    }
+
+    /// Approximate whole-window write through whatever `v` may alias.
+    fn taint_write(&mut self, v: &AVal) {
+        match v {
+            AVal::Param(p) => self.write_param(*p, Interval::top(), true),
+            AVal::Any => self.write_all(),
+            _ => {}
+        }
+    }
+
+    /// Record accesses for a suspended tensor builtin, mirroring
+    /// `Engine::handle_tensor`: `fwd_accum(w,..)` streams reads of `w`,
+    /// `grad_tile(.., g, ..)` reads and writes `g`, `update_tile(w, g, ..)`
+    /// reads and writes `w` and reads `g`; anything else (or `dot` on an
+    /// unexpected external) conservatively taints every external argument.
+    fn tensor_accesses(&mut self, b: Builtin, argv: &[AVal]) {
+        match b {
+            Builtin::FwdAccum => {
+                if let Some(w) = argv.first() {
+                    self.taint_read(w);
+                }
+            }
+            Builtin::GradTile => {
+                if let Some(g) = argv.get(2) {
+                    self.taint_read(g);
+                    self.taint_write(g);
+                }
+            }
+            Builtin::UpdateTile => {
+                if let Some(w) = argv.first() {
+                    self.taint_read(w);
+                    self.taint_write(w);
+                }
+                if let Some(g) = argv.get(1) {
+                    self.taint_read(g);
+                }
+            }
+            _ => {
+                for v in argv {
+                    self.taint_read(v);
+                    self.taint_write(v);
+                }
+            }
+        }
+    }
+
+    /// Fixpoint over one function; returns the joined abstract return
+    /// value, or `None` when the analysis must fall back globally.
+    fn analyze_fn(
+        &mut self,
+        fidx: usize,
+        argv: Vec<AVal>,
+        active: &mut Vec<usize>,
+        depth: usize,
+    ) -> Option<AVal> {
+        let f: &Function = self.program.functions.get(fidx)?;
+        if depth > MAX_INLINE_DEPTH || active.contains(&fidx) {
+            // Too deep or recursive: assume the callee touches everything
+            // reachable through its arguments, return top.
+            for v in &argv {
+                self.taint_escaping(v);
+            }
+            return Some(AVal::Any);
+        }
+        active.push(fidx);
+        let result = self.run_fixpoint(f, argv, active, depth);
+        active.pop();
+        result
+    }
+
+    fn run_fixpoint(
+        &mut self,
+        f: &Function,
+        argv: Vec<AVal>,
+        active: &mut Vec<usize>,
+        depth: usize,
+    ) -> Option<AVal> {
+        let mut locals = argv;
+        locals.truncate(f.params);
+        while locals.len() < f.nlocals {
+            locals.push(AVal::Scal); // interp pads missing locals with None
+        }
+        let entry = State { stack: Vec::new(), locals };
+        let n = f.code.len();
+        let mut states: Vec<Option<State>> = vec![None; n];
+        let mut joins: Vec<u32> = vec![0; n];
+        let mut ret: Option<AVal> = None;
+        let mut work: Vec<usize> = Vec::new();
+        if n == 0 {
+            return Some(AVal::Scal);
+        }
+        states[0] = Some(entry);
+        work.push(0);
+        while let Some(ip) = work.pop() {
+            self.steps += 1;
+            if self.steps > MAX_STEPS {
+                return None;
+            }
+            let st = states[ip].clone()?;
+            let succs = self.transfer(f, ip, st, active, depth, &mut ret)?;
+            for (nip, ns) in succs {
+                if nip >= n {
+                    return None; // malformed jump target
+                }
+                let merged = match &states[nip] {
+                    None => ns,
+                    Some(old) => {
+                        let joined = old.join(&ns)?;
+                        if joined == *old {
+                            continue; // no change, no re-queue
+                        }
+                        joins[nip] += 1;
+                        if joins[nip] > WIDEN_AFTER {
+                            old.widen(&joined)
+                        } else {
+                            joined
+                        }
+                    }
+                };
+                states[nip] = Some(merged);
+                if !work.contains(&nip) {
+                    work.push(nip);
+                }
+            }
+        }
+        Some(ret.unwrap_or(AVal::Scal))
+    }
+
+    /// One instruction's transfer function. Mirrors `vm::interp` exactly:
+    /// the same pops in the same order, successor set = the interpreter's
+    /// possible next ips. Returns `None` on stack underflow (analyzer
+    /// confusion → global fallback).
+    #[allow(clippy::too_many_lines)]
+    fn transfer(
+        &mut self,
+        f: &Function,
+        ip: usize,
+        mut st: State,
+        active: &mut Vec<usize>,
+        depth: usize,
+        ret: &mut Option<AVal>,
+    ) -> Option<Vec<(usize, State)>> {
+        use Op::*;
+        let bool_val = AVal::Int(Interval::range(0, 1));
+        macro_rules! pop {
+            () => {
+                st.stack.pop()?
+            };
+        }
+        let next = ip + 1;
+        let succ = match f.code[ip] {
+            ConstF(_) => {
+                st.stack.push(AVal::Scal);
+                vec![(next, st)]
+            }
+            ConstI(k) => {
+                st.stack.push(AVal::Int(Interval::point(k)));
+                vec![(next, st)]
+            }
+            ConstB(_) => {
+                st.stack.push(bool_val);
+                vec![(next, st)]
+            }
+            ConstNone | ConstStr(_) => {
+                st.stack.push(AVal::Scal);
+                vec![(next, st)]
+            }
+            Load(s) => {
+                let v = *st.locals.get(s as usize)?;
+                st.stack.push(v);
+                vec![(next, st)]
+            }
+            Store(s) => {
+                let v = pop!();
+                *st.locals.get_mut(s as usize)? = v;
+                vec![(next, st)]
+            }
+            NewList(count) => {
+                for _ in 0..count {
+                    pop!();
+                }
+                st.stack.push(AVal::Arr);
+                vec![(next, st)]
+            }
+            Index => {
+                let idx = pop!();
+                let obj = pop!();
+                match obj {
+                    AVal::Param(p) => {
+                        let (iv, approx) = idx.index_interval();
+                        self.read_param(p, iv, approx);
+                    }
+                    AVal::Any => self.read_all(),
+                    _ => {} // local array / runtime error: no external access
+                }
+                st.stack.push(AVal::Scal); // element reads push Float
+                vec![(next, st)]
+            }
+            StoreIndex => {
+                let _val = pop!();
+                let idx = pop!();
+                let obj = pop!();
+                match obj {
+                    AVal::Param(p) => {
+                        let (iv, approx) = idx.index_interval();
+                        self.write_param(p, iv, approx);
+                    }
+                    AVal::Any => self.write_all(),
+                    _ => {}
+                }
+                vec![(next, st)]
+            }
+            Add | Sub | Mul | FloorDiv | Mod => {
+                let rhs = pop!();
+                let lhs = pop!();
+                let out = match (&f.code[ip], &lhs, &rhs) {
+                    (_, AVal::Int(a), AVal::Int(b)) => AVal::Int(match f.code[ip] {
+                        Add => a.add(b),
+                        Sub => a.sub(b),
+                        Mul => a.mul(b),
+                        FloorDiv => a.floordiv(b),
+                        _ => a.pymod(b),
+                    }),
+                    // list repetition: `[0.0] * n` — a fresh local array.
+                    (Mul, AVal::Arr, _) | (Mul, _, AVal::Arr) => AVal::Arr,
+                    // arith never yields an external reference; parameters
+                    // feeding arith are either scalars (→ number) or local
+                    // arrays under Mul repetition (→ fresh array).
+                    (Mul, AVal::Param(_) | AVal::Any, _)
+                    | (Mul, _, AVal::Param(_) | AVal::Any) => AVal::Arr,
+                    _ => AVal::Scal,
+                };
+                st.stack.push(out);
+                vec![(next, st)]
+            }
+            Div => {
+                pop!();
+                pop!();
+                st.stack.push(AVal::Scal); // true division is always Float
+                vec![(next, st)]
+            }
+            Neg => {
+                let v = pop!();
+                st.stack.push(match v {
+                    AVal::Int(iv) => AVal::Int(iv.neg()),
+                    _ => AVal::Scal,
+                });
+                vec![(next, st)]
+            }
+            Not => {
+                pop!();
+                st.stack.push(bool_val);
+                vec![(next, st)]
+            }
+            Lt | Le | Gt | Ge | CmpEq | CmpNe => {
+                pop!();
+                pop!();
+                st.stack.push(bool_val);
+                vec![(next, st)]
+            }
+            Jump(t) => vec![(t as usize, st)],
+            JumpIfFalse(t) => {
+                pop!();
+                vec![(t as usize, st.clone()), (next, st)]
+            }
+            JumpIfFalsePeek(t) | JumpIfTruePeek(t) => {
+                // Peek: the conditional value stays on the stack on both
+                // edges (short-circuit `and`/`or` lowering).
+                vec![(t as usize, st.clone()), (next, st)]
+            }
+            Pop => {
+                pop!();
+                vec![(next, st)]
+            }
+            CallFunc(fid, argc) => {
+                let argc = argc as usize;
+                if st.stack.len() < argc {
+                    return None;
+                }
+                let callee_args = st.stack.split_off(st.stack.len() - argc);
+                let rv = self.analyze_fn(fid as usize, callee_args, active, depth + 1)?;
+                st.stack.push(rv);
+                vec![(next, st)]
+            }
+            CallBuiltin(bid, argc) => {
+                let argc = argc as usize;
+                if st.stack.len() < argc {
+                    return None;
+                }
+                let argv = st.stack.split_off(st.stack.len() - argc);
+                let b = Builtin::from_id(bid);
+                let out = match b {
+                    Some(b) if b.is_tensor() => {
+                        self.tensor_accesses(b, &argv);
+                        // tensor results resume as computed values (Float
+                        // or fresh Array) — never an external reference.
+                        AVal::Scal
+                    }
+                    Some(Builtin::Len) => AVal::Int(Interval::nonneg()),
+                    Some(Builtin::Abs) => match argv.first() {
+                        Some(AVal::Int(iv)) => AVal::Int(iv.abs()),
+                        _ => AVal::Scal,
+                    },
+                    Some(Builtin::ToInt) => match argv.first() {
+                        Some(AVal::Int(iv)) => AVal::Int(*iv),
+                        _ => AVal::Int(Interval::top()),
+                    },
+                    Some(Builtin::CoreId) => AVal::Int(Interval::nonneg()),
+                    Some(Builtin::NumCores) => {
+                        AVal::Int(Interval::range(1, super::interval::POS_INF))
+                    }
+                    _ => AVal::Scal,
+                };
+                st.stack.push(out);
+                vec![(next, st)]
+            }
+            Return => {
+                let v = pop!();
+                *ret = Some(match ret {
+                    Some(prev) => prev.join(&v),
+                    None => v,
+                });
+                vec![] // no successors
+            }
+            AugAddConstI(s, k) => {
+                let slot = st.locals.get_mut(s as usize)?;
+                *slot = match *slot {
+                    AVal::Int(iv) => AVal::Int(iv.add(&Interval::point(k))),
+                    _ => AVal::Scal,
+                };
+                vec![(next, st)]
+            }
+            AugAddConstF(s, _) => {
+                *st.locals.get_mut(s as usize)? = AVal::Scal;
+                vec![(next, st)]
+            }
+            AugAddLocal(dst, src) => {
+                let sv = *st.locals.get(src as usize)?;
+                let slot = st.locals.get_mut(dst as usize)?;
+                *slot = match (*slot, sv) {
+                    (AVal::Int(a), AVal::Int(b)) => AVal::Int(a.add(&b)),
+                    _ => AVal::Scal,
+                };
+                vec![(next, st)]
+            }
+            BranchCmpLL(a, b, cmp, t) => {
+                // Falls through when `cmp(a, b)` HOLDS, jumps to t when it
+                // fails — refine the integer locals on both edges.
+                let av = *st.locals.get(a as usize)?;
+                let bv = *st.locals.get(b as usize)?;
+                let (ai, bi) = (
+                    match av {
+                        AVal::Int(iv) => Some(iv),
+                        _ => None,
+                    },
+                    match bv {
+                        AVal::Int(iv) => Some(iv),
+                        _ => None,
+                    },
+                );
+                let mut fall = st.clone();
+                let mut jump = st;
+                if let (Some(ai), Some(bi)) = (ai, bi) {
+                    let (fa, fb, ja, jb) = match cmp {
+                        CmpKind::Lt => (
+                            ai.refine_lt(&bi),
+                            bi.refine_gt(&ai),
+                            ai.refine_ge(&bi),
+                            bi.refine_le(&ai),
+                        ),
+                        CmpKind::Le => (
+                            ai.refine_le(&bi),
+                            bi.refine_ge(&ai),
+                            ai.refine_gt(&bi),
+                            bi.refine_lt(&ai),
+                        ),
+                        CmpKind::Gt => (
+                            ai.refine_gt(&bi),
+                            bi.refine_lt(&ai),
+                            ai.refine_le(&bi),
+                            bi.refine_ge(&ai),
+                        ),
+                        CmpKind::Ge => (
+                            ai.refine_ge(&bi),
+                            bi.refine_le(&ai),
+                            ai.refine_lt(&bi),
+                            bi.refine_gt(&ai),
+                        ),
+                    };
+                    fall.locals[a as usize] = AVal::Int(fa);
+                    fall.locals[b as usize] = AVal::Int(fb);
+                    jump.locals[a as usize] = AVal::Int(ja);
+                    jump.locals[b as usize] = AVal::Int(jb);
+                }
+                vec![(next, fall), (t as usize, jump)]
+            }
+            AccumIndexLLL(acc, obj, idx) => {
+                let ov = *st.locals.get(obj as usize)?;
+                let xv = *st.locals.get(idx as usize)?;
+                match ov {
+                    AVal::Param(p) => {
+                        let (iv, approx) = xv.index_interval();
+                        self.read_param(p, iv, approx);
+                    }
+                    AVal::Any => self.read_all(),
+                    _ => {}
+                }
+                // acc += element; elements are Float.
+                *st.locals.get_mut(acc as usize)? = AVal::Scal;
+                vec![(next, st)]
+            }
+        };
+        Some(succ)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::interval::POS_INF;
+    use crate::vm::compile_source;
+
+    fn summarize(src: &str) -> KernelSummary {
+        analyze_program(&compile_source(src, None).expect("compiles"))
+    }
+
+    #[test]
+    fn reader_loop_infers_whole_view_read_no_write() {
+        let s = summarize(
+            "def r(a):\n    s = 0.0\n    i = 0\n    while i < len(a):\n        s += a[i]\n        i += 1\n    return s\n",
+        );
+        assert!(!s.fallback);
+        assert_eq!(s.args.len(), 1);
+        let (r, _approx) = s.args[0].read.expect("reads a");
+        assert_eq!(r.lo, 0, "counter anchored at 0");
+        assert!(s.args[0].write.is_none(), "reader never writes");
+    }
+
+    #[test]
+    fn writer_loop_infers_read_and_write() {
+        let s = summarize(
+            "def w(a):\n    i = 0\n    while i < len(a):\n        a[i] = a[i] + 1.0\n        i += 1\n    return 0\n",
+        );
+        assert!(!s.fallback);
+        let (w, w_approx) = s.args[0].write.expect("writes a");
+        assert_eq!(w.lo, 0);
+        assert!(!w_approx, "integer-indexed write is definite");
+        assert!(s.args[0].read.is_some(), "reads a[i] too");
+    }
+
+    #[test]
+    fn point_write_is_definite_and_exact() {
+        let s = summarize("def b(a):\n    a[0] = 1.0\n    return 0\n");
+        assert!(!s.fallback);
+        let (w, approx) = s.args[0].write.expect("writes a[0]");
+        assert_eq!((w.lo, w.hi), (0, 0));
+        assert!(!approx);
+        assert!(s.args[0].read.is_none());
+    }
+
+    #[test]
+    fn param_identity_survives_call_inlining() {
+        let s = summarize(
+            "def put(buf, j):\n    buf[j] = 1.0\n    return 0\n\ndef k(a):\n    put(a, 3)\n    return 0\n",
+        );
+        assert!(!s.fallback);
+        let (w, approx) = s.args[0].write.expect("helper writes a[3]");
+        assert_eq!((w.lo, w.hi), (3, 3));
+        assert!(!approx, "inlined constant index stays definite");
+    }
+
+    #[test]
+    fn offset_window_is_bounded_below() {
+        let s = summarize(
+            "def k(a):\n    i = 2\n    while i < len(a):\n        a[i] = 0.0\n        i += 1\n    return 0\n",
+        );
+        let (w, _) = s.args[0].write.expect("writes");
+        // `while i < len(a)` does not fuse (a CallBuiltin intervenes), so
+        // the bound widens — but lo stays anchored by the widening
+        // threshold and the clamp recovers [0, len) at worst.
+        assert!(w.lo >= 0);
+        assert_eq!(w.hi, POS_INF);
+    }
+
+    #[test]
+    fn recursion_falls_back_per_argument_not_globally() {
+        let s = summarize(
+            "def f(a, n):\n    if n > 0:\n        f(a, n - 1)\n    return a[0]\n\ndef k(a, b):\n    f(a, 4)\n    return 0\n",
+        );
+        assert!(!s.fallback, "recursion bails out per-call, not globally");
+        let a = &s.args[0];
+        assert!(a.read.is_some() && a.write.is_some(), "recursive callee taints `a`");
+        assert!(a.read.unwrap().1, "taint is approximate");
+        let b = &s.args[1];
+        assert!(b.read.is_none() && b.write.is_none(), "`b` never escapes");
+    }
+
+    #[test]
+    fn tensor_builtins_follow_engine_semantics() {
+        let s = summarize(
+            "def k(w, g, x):\n    acc = fwd_accum(w, 0, 4, x, 0.0)\n    grad_tile(acc, x, g, 0)\n    return 0\n",
+        );
+        assert!(!s.fallback);
+        assert!(s.args[0].read.is_some(), "fwd_accum streams w");
+        assert!(s.args[0].write.is_none(), "fwd_accum never writes w");
+        assert!(s.args[1].read.is_some() && s.args[1].write.is_some(), "grad_tile rw g");
+        assert!(s.args[2].write.is_none(), "x only read");
+    }
+
+    #[test]
+    fn scalar_only_kernel_has_empty_summaries() {
+        let s = summarize("def k(x, y):\n    return x + y * 2.0\n");
+        assert!(!s.fallback);
+        assert!(s.args.iter().all(|a| a.read.is_none() && a.write.is_none()));
+    }
+
+    #[test]
+    fn local_array_access_records_nothing() {
+        let s = summarize(
+            "def k(a):\n    t = [0.0] * 8\n    t[3] = a[1]\n    return t[3]\n",
+        );
+        assert!(!s.fallback);
+        let (r, approx) = s.args[0].read.expect("reads a[1]");
+        assert_eq!((r.lo, r.hi), (1, 1));
+        assert!(!approx);
+        assert!(s.args[0].write.is_none(), "writes hit the local list only");
+    }
+
+    #[test]
+    fn fused_accum_loop_refines_with_branch_cmp() {
+        // `while i < n:` with integer locals fuses to BranchCmpLL; the
+        // fallthrough edge refines i < n.
+        let s = summarize(
+            "def k(a, n):\n    s = 0.0\n    i = 0\n    while i < n:\n        s += a[i]\n        i += 1\n    return s\n",
+        );
+        assert!(!s.fallback);
+        let (r, _) = s.args[0].read.expect("reads a");
+        assert_eq!(r.lo, 0, "refined + widening-threshold lower bound");
+    }
+}

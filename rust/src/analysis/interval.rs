@@ -1,0 +1,315 @@
+//! The index lattice: integer intervals with ±∞ sentinels and widening.
+//!
+//! The abstract interpreter ([`super::absint`]) tracks every integer the
+//! kernel computes as an inclusive interval `[lo, hi]`. `i64::MIN` and
+//! `i64::MAX` act as −∞/+∞; all arithmetic saturates toward the
+//! sentinels, so an unknown or overflowing bound degrades to "unbounded"
+//! rather than wrapping — the conservative direction for a window that
+//! is later clamped to the declared view.
+
+/// −∞ sentinel for interval bounds.
+pub const NEG_INF: i64 = i64::MIN;
+/// +∞ sentinel for interval bounds.
+pub const POS_INF: i64 = i64::MAX;
+
+/// An inclusive integer interval `[lo, hi]` over the ±∞ sentinels.
+///
+/// Invariant: `lo <= hi` (the analyzer never constructs empty intervals;
+/// refinement that would empty one keeps the refined bound equal to the
+/// other, which is still a sound over-approximation of "unreachable").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interval {
+    /// Lower bound (inclusive; [`NEG_INF`] = unbounded below).
+    pub lo: i64,
+    /// Upper bound (inclusive; [`POS_INF`] = unbounded above).
+    pub hi: i64,
+}
+
+/// Saturating add that keeps the ±∞ sentinels absorbing.
+fn badd(a: i64, b: i64) -> i64 {
+    if a == NEG_INF || b == NEG_INF {
+        NEG_INF
+    } else if a == POS_INF || b == POS_INF {
+        POS_INF
+    } else {
+        a.saturating_add(b)
+    }
+}
+
+impl Interval {
+    /// The single point `[k, k]`.
+    pub fn point(k: i64) -> Interval {
+        Interval { lo: k, hi: k }
+    }
+
+    /// A finite-or-infinite range (callers must pass `lo <= hi`).
+    pub fn range(lo: i64, hi: i64) -> Interval {
+        debug_assert!(lo <= hi);
+        Interval { lo, hi }
+    }
+
+    /// The full lattice top `[−∞, +∞]`.
+    pub fn top() -> Interval {
+        Interval { lo: NEG_INF, hi: POS_INF }
+    }
+
+    /// `[0, +∞]` — lengths, core ids, and other known-non-negative values.
+    pub fn nonneg() -> Interval {
+        Interval { lo: 0, hi: POS_INF }
+    }
+
+    /// Whether the interval is the full top element.
+    pub fn is_top(&self) -> bool {
+        self.lo == NEG_INF && self.hi == POS_INF
+    }
+
+    /// Least upper bound (interval hull).
+    pub fn join(&self, other: &Interval) -> Interval {
+        Interval { lo: self.lo.min(other.lo), hi: self.hi.max(other.hi) }
+    }
+
+    /// Widening: any bound that moved since `self` jumps to the threshold
+    /// `0` (if it still fits) or to the sentinel. Guarantees fixpoint
+    /// termination for loop counters while keeping the common
+    /// `i = 0; i += 1` shape anchored at `lo = 0`.
+    pub fn widen(&self, next: &Interval) -> Interval {
+        let lo = if next.lo < self.lo {
+            if next.lo >= 0 {
+                0
+            } else {
+                NEG_INF
+            }
+        } else {
+            self.lo
+        };
+        let hi = if next.hi > self.hi { POS_INF } else { self.hi };
+        Interval { lo, hi }
+    }
+
+    /// Abstract addition.
+    pub fn add(&self, other: &Interval) -> Interval {
+        Interval { lo: badd(self.lo, other.lo), hi: badd(self.hi, other.hi) }
+    }
+
+    /// Abstract subtraction.
+    pub fn sub(&self, other: &Interval) -> Interval {
+        Interval { lo: badd(self.lo, other.hi.wrapping_neg().max(NEG_INF + 1).min(POS_INF)), hi: badd(self.hi, neg_bound(other.lo)) }
+    }
+
+    /// Abstract negation.
+    pub fn neg(&self) -> Interval {
+        Interval { lo: neg_bound(self.hi), hi: neg_bound(self.lo) }
+    }
+
+    /// Abstract multiplication (top as soon as any bound is infinite —
+    /// index expressions that multiply an unbounded counter are treated
+    /// as whole-view accesses anyway once clamped).
+    pub fn mul(&self, other: &Interval) -> Interval {
+        if self.lo == NEG_INF
+            || self.hi == POS_INF
+            || other.lo == NEG_INF
+            || other.hi == POS_INF
+        {
+            return Interval::top();
+        }
+        let products = [
+            (self.lo as i128) * (other.lo as i128),
+            (self.lo as i128) * (other.hi as i128),
+            (self.hi as i128) * (other.lo as i128),
+            (self.hi as i128) * (other.hi as i128),
+        ];
+        let lo = products.iter().copied().min().unwrap();
+        let hi = products.iter().copied().max().unwrap();
+        Interval { lo: clamp128(lo), hi: clamp128(hi) }
+    }
+
+    /// Abstract floor division: refined only for the non-negative /
+    /// positive case the kernels use for index math; top otherwise.
+    pub fn floordiv(&self, other: &Interval) -> Interval {
+        if self.lo >= 0 && other.lo >= 1 {
+            let hi = if self.hi == POS_INF { POS_INF } else { self.hi / other.lo };
+            Interval { lo: 0, hi }
+        } else {
+            Interval::top()
+        }
+    }
+
+    /// Abstract modulo (Python semantics: sign of the divisor). Refined
+    /// for the all-positive divisor case; top otherwise.
+    pub fn pymod(&self, other: &Interval) -> Interval {
+        if other.lo >= 1 && other.hi != POS_INF {
+            Interval { lo: 0, hi: other.hi - 1 }
+        } else {
+            Interval::top()
+        }
+    }
+
+    /// Absolute value.
+    pub fn abs(&self) -> Interval {
+        if self.lo >= 0 {
+            *self
+        } else if self.hi <= 0 {
+            self.neg()
+        } else {
+            Interval { lo: 0, hi: neg_bound(self.lo).max(self.hi) }
+        }
+    }
+
+    /// Refine `self` assuming `self < other` holds (strictly-less side of
+    /// a branch). The refined upper bound never crosses the lower bound.
+    pub fn refine_lt(&self, other: &Interval) -> Interval {
+        let cap = badd(other.hi, -1);
+        Interval { lo: self.lo, hi: self.hi.min(cap).max(self.lo) }
+    }
+
+    /// Refine assuming `self <= other`.
+    pub fn refine_le(&self, other: &Interval) -> Interval {
+        Interval { lo: self.lo, hi: self.hi.min(other.hi).max(self.lo) }
+    }
+
+    /// Refine assuming `self > other`.
+    pub fn refine_gt(&self, other: &Interval) -> Interval {
+        let floor = badd(other.lo, 1);
+        Interval { lo: self.lo.max(floor).min(self.hi), hi: self.hi }
+    }
+
+    /// Refine assuming `self >= other`.
+    pub fn refine_ge(&self, other: &Interval) -> Interval {
+        Interval { lo: self.lo.max(other.lo).min(self.hi), hi: self.hi }
+    }
+
+    /// Clamp to a view of `len` elements, yielding the half-open element
+    /// window `[lo, hi)` actually reachable — the VM bounds-checks every
+    /// external index *before* suspending, so indices outside `[0, len)`
+    /// raise a `Vm` error instead of performing an access. `None` when
+    /// the interval misses the view entirely.
+    pub fn clamp_window(&self, len: usize) -> Option<(usize, usize)> {
+        if len == 0 || self.hi < 0 {
+            return None;
+        }
+        let lo = self.lo.clamp(0, (len - 1) as i64) as usize;
+        let hi_incl = self.hi.clamp(0, (len - 1) as i64) as usize;
+        if self.lo > hi_incl as i64 {
+            return None;
+        }
+        Some((lo, hi_incl + 1))
+    }
+}
+
+fn neg_bound(b: i64) -> i64 {
+    if b == NEG_INF {
+        POS_INF
+    } else if b == POS_INF {
+        NEG_INF
+    } else {
+        -b
+    }
+}
+
+fn clamp128(v: i128) -> i64 {
+    if v <= NEG_INF as i128 {
+        NEG_INF
+    } else if v >= POS_INF as i128 {
+        POS_INF
+    } else {
+        v as i64
+    }
+}
+
+impl std::fmt::Display for Interval {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match (self.lo, self.hi) {
+            (NEG_INF, POS_INF) => write!(f, "[-inf, +inf]"),
+            (NEG_INF, hi) => write!(f, "[-inf, {hi}]"),
+            (lo, POS_INF) => write!(f, "[{lo}, +inf]"),
+            (lo, hi) => write!(f, "[{lo}, {hi}]"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn join_is_hull() {
+        let a = Interval::range(1, 3);
+        let b = Interval::range(5, 9);
+        assert_eq!(a.join(&b), Interval::range(1, 9));
+        assert_eq!(a.join(&a), a);
+    }
+
+    #[test]
+    fn widen_anchors_at_zero_then_infinity() {
+        let prev = Interval::point(0);
+        let grown = Interval::range(0, 1);
+        let w = prev.widen(&grown);
+        assert_eq!(w, Interval { lo: 0, hi: POS_INF }, "hi widens to +inf");
+        let neg = Interval::range(-1, 0);
+        assert_eq!(prev.widen(&neg).lo, NEG_INF, "negative lo widens to -inf");
+        let still = prev.widen(&prev);
+        assert_eq!(still, prev, "stable state does not widen");
+    }
+
+    #[test]
+    fn arithmetic_saturates_to_sentinels() {
+        let top = Interval::top();
+        assert!(top.add(&Interval::point(5)).is_top());
+        assert!(Interval::nonneg().mul(&Interval::point(4)).hi == POS_INF);
+        let a = Interval::range(2, 3);
+        let b = Interval::range(10, 20);
+        assert_eq!(a.mul(&b), Interval::range(20, 60));
+        assert_eq!(a.add(&b), Interval::range(12, 23));
+        assert_eq!(b.sub(&a), Interval::range(7, 18));
+        assert_eq!(a.neg(), Interval::range(-3, -2));
+    }
+
+    #[test]
+    fn mod_and_floordiv_refine_positive_cases() {
+        let i = Interval::range(0, 100);
+        let n = Interval::point(8);
+        assert_eq!(i.pymod(&n), Interval::range(0, 7));
+        assert_eq!(i.floordiv(&n), Interval::range(0, 12));
+        assert!(i.pymod(&Interval::top()).is_top());
+        assert!(Interval::range(-5, 5).floordiv(&n).is_top());
+    }
+
+    #[test]
+    fn refinement_matches_comparison_sides() {
+        let i = Interval::range(0, POS_INF);
+        let len = Interval::range(0, POS_INF);
+        // i < len leaves hi unbounded (len is unbounded) but keeps lo.
+        assert_eq!(i.refine_lt(&len).lo, 0);
+        let i = Interval::range(0, POS_INF);
+        let n = Interval::point(10);
+        assert_eq!(i.refine_lt(&n), Interval::range(0, 9));
+        assert_eq!(i.refine_le(&n), Interval::range(0, 10));
+        assert_eq!(Interval::range(0, 20).refine_gt(&n), Interval::range(11, 20));
+        assert_eq!(Interval::range(0, 20).refine_ge(&n), Interval::range(10, 20));
+    }
+
+    #[test]
+    fn clamp_window_respects_view_bounds() {
+        assert_eq!(Interval::range(0, 9).clamp_window(10), Some((0, 10)));
+        assert_eq!(Interval::top().clamp_window(10), Some((0, 10)));
+        assert_eq!(Interval::point(0).clamp_window(10), Some((0, 1)));
+        assert_eq!(Interval::range(3, 5).clamp_window(10), Some((3, 6)));
+        assert_eq!(Interval::range(-5, -1).clamp_window(10), None);
+        assert_eq!(Interval::range(12, 20).clamp_window(10), Some((9, 10)), "clamps into view");
+        assert_eq!(Interval::point(0).clamp_window(0), None);
+    }
+
+    #[test]
+    fn abs_covers_sign_cases() {
+        assert_eq!(Interval::range(2, 5).abs(), Interval::range(2, 5));
+        assert_eq!(Interval::range(-5, -2).abs(), Interval::range(2, 5));
+        assert_eq!(Interval::range(-3, 5).abs(), Interval::range(0, 5));
+    }
+
+    #[test]
+    fn display_renders_sentinels() {
+        assert_eq!(Interval::top().to_string(), "[-inf, +inf]");
+        assert_eq!(Interval::range(1, 2).to_string(), "[1, 2]");
+        assert_eq!(Interval::nonneg().to_string(), "[0, +inf]");
+    }
+}

@@ -1,0 +1,164 @@
+//! Lint driver: diagnostics, verify levels, and per-`Technology` budgets.
+
+use crate::device::Technology;
+use crate::vm::Program;
+
+/// How much static verification the session performs at submit time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum VerifyLevel {
+    /// No analysis at submit (kernel budgets are still enforced at
+    /// registration — they model a hard device limit, not a lint).
+    #[default]
+    Off,
+    /// Analyze every launch; collect diagnostics (retrievable via
+    /// `Session::take_diagnostics`) but never reject.
+    Warn,
+    /// As `Warn`, but an `Error`-severity diagnostic rejects the launch at
+    /// submit with [`crate::error::Error::Analysis`] before any engine
+    /// state changes.
+    Strict,
+}
+
+/// Diagnostic severity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Suspicious but possibly intentional (or too imprecise to reject).
+    Warning,
+    /// A definite contract violation; rejects at `Strict`.
+    Error,
+}
+
+impl std::fmt::Display for Severity {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Severity::Warning => write!(f, "warning"),
+            Severity::Error => write!(f, "error"),
+        }
+    }
+}
+
+/// One verifier finding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Severity ([`Severity::Error`] rejects at `Strict`).
+    pub severity: Severity,
+    /// Kernel name the finding is about.
+    pub kernel: String,
+    /// Launch id, when the finding is launch-specific (budget findings at
+    /// registration have none).
+    pub launch: Option<u64>,
+    /// Human-readable description, including the offending window.
+    pub message: String,
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: kernel `{}`", self.severity, self.kernel)?;
+        if let Some(l) = self.launch {
+            write!(f, " (launch {l})")?;
+        }
+        write!(f, ": {}", self.message)
+    }
+}
+
+/// Conservative per-frame scratch model: engine bookkeeping plus the
+/// value-stack reserve the resident VM keeps per activation.
+const SCRATCH_BASE_BYTES: usize = 64;
+/// Value-stack reserve per activation (the interpreter caps frame depth,
+/// so one reserve covers the deepest frame).
+const STACK_RESERVE_BYTES: usize = 256;
+/// Per-local cost: one tagged value slot.
+const LOCAL_SLOT_BYTES: usize = 16;
+
+/// Check a compiled kernel against a technology's local-store budgets:
+/// total code bytes (plus the channel frame header pushed with the code)
+/// must fit the local store, and the estimated scratch/stack footprint
+/// must fit the user partition left after the resident VM. Violations are
+/// `Error`-severity — they model hard device limits, so they are enforced
+/// at kernel registration regardless of the session's [`VerifyLevel`].
+pub fn check_kernel_budget(name: &str, program: &Program, tech: &Technology) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let code: usize = program.functions.iter().map(|f| f.code_bytes()).sum();
+    let header = crate::channel::FRAME_HEADER_BYTES;
+    if code + header > tech.local_store {
+        out.push(Diagnostic {
+            severity: Severity::Error,
+            kernel: name.to_string(),
+            launch: None,
+            message: format!(
+                "code {code} B + {header} B frame header exceeds {} local store ({} B)",
+                tech.name, tech.local_store
+            ),
+        });
+    }
+    let worst_frame = program
+        .functions
+        .iter()
+        .map(|f| f.nlocals * LOCAL_SLOT_BYTES)
+        .max()
+        .unwrap_or(0);
+    let scratch = SCRATCH_BASE_BYTES + STACK_RESERVE_BYTES + worst_frame;
+    if scratch > tech.user_store() {
+        out.push(Diagnostic {
+            severity: Severity::Error,
+            kernel: name.to_string(),
+            launch: None,
+            message: format!(
+                "estimated scratch/stack footprint {scratch} B exceeds {} user store ({} B)",
+                tech.name,
+                tech.user_store()
+            ),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vm::compile_source;
+
+    #[test]
+    fn small_kernel_fits_every_preset() {
+        let p = compile_source("def k(a):\n    return a[0]\n", None).unwrap();
+        for tech in [
+            Technology::epiphany3(),
+            Technology::microblaze(),
+            Technology::microblaze_fpu(),
+            Technology::cortex_a9(),
+        ] {
+            assert!(check_kernel_budget("k", &p, &tech).is_empty(), "{}", tech.name);
+        }
+    }
+
+    #[test]
+    fn oversized_kernel_breaks_code_budget() {
+        // ~3000 fused float-accumulate lines ≈ 48 KB of code > the 32 KB
+        // Epiphany-III local store.
+        let mut src = String::from("def k():\n    x = 0.0\n");
+        for _ in 0..3000 {
+            src.push_str("    x = x + 1.0\n");
+        }
+        src.push_str("    return x\n");
+        let p = compile_source(&src, None).unwrap();
+        let diags = check_kernel_budget("k", &p, &Technology::epiphany3());
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].severity, Severity::Error);
+        assert!(diags[0].message.contains("local store"), "{}", diags[0].message);
+        // The same kernel fits the 64 KB MicroBlaze local store.
+        assert!(check_kernel_budget("k", &p, &Technology::microblaze()).is_empty());
+    }
+
+    #[test]
+    fn diagnostic_display_names_kernel_and_launch() {
+        let d = Diagnostic {
+            severity: Severity::Error,
+            kernel: "boom".into(),
+            launch: Some(3),
+            message: "writes [0, 1) of read-only arg 0".into(),
+        };
+        let s = d.to_string();
+        assert!(s.starts_with("error: kernel `boom` (launch 3):"), "{s}");
+        assert!(s.contains("[0, 1)"));
+    }
+}

@@ -1,0 +1,155 @@
+//! Static launch verifier: bytecode flow inference and lints.
+//!
+//! The launch-graph scheduler infers RAW/WAR/WAW edges purely from each
+//! launch's *declared* `BoundArg` flows. Nothing in the runtime checks
+//! that the bytecode agrees — an under-declared flow (a kernel that
+//! writes through an argument bound read-only, or touches a window wider
+//! than declared) is exactly the race the scheduler cannot see. This
+//! module closes that hole statically:
+//!
+//! * [`absint`] — an abstract interpreter over post-fusion
+//!   [`crate::vm::bytecode::Op`] that infers, per kernel argument, the
+//!   interval of indices read and written ([`KernelSummary`]).
+//! * [`lint`] — diagnostics, [`VerifyLevel`], and the per-`Technology`
+//!   code/scratch budget check enforced at kernel registration.
+//! * The engine wires the summaries in at three layers: per-launch checks
+//!   in `Engine::submit` (`SessionBuilder::verify(Strict|Warn|Off)`),
+//!   whole-graph pre-flight `Session::verify_graph()` producing a
+//!   [`GraphReport`], and the `microcore analyze` CLI subcommand.
+//!
+//! The soundness contract (engine invariant 12): every external access
+//! the VM performs at runtime lies inside a statically inferred window
+//! for that launch. It is fuzzed differentially, not asserted — see
+//! `prop_launch_dag_analyzer_is_sound` in `rust/tests/properties.rs`.
+
+pub mod absint;
+pub mod interval;
+pub mod lint;
+
+pub use absint::{analyze_program, AVal, ArgSummary, KernelSummary};
+pub use interval::Interval;
+pub use lint::{check_kernel_budget, Diagnostic, Severity, VerifyLevel};
+
+/// One external access the engine actually performed at runtime, in base
+/// buffer coordinates (half-open `[lo, hi)` element span). Recorded only
+/// when access recording is enabled on the engine — the soundness fuzzer
+/// replays these against the statically inferred windows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AccessRecord {
+    /// Launch the access belongs to.
+    pub launch: u64,
+    /// Base buffer id (`DataRef::id`).
+    pub buf: u64,
+    /// First element touched (base-buffer coordinates).
+    pub lo: usize,
+    /// One past the last element touched.
+    pub hi: usize,
+    /// `true` for a committed write, `false` for a read.
+    pub write: bool,
+}
+
+/// One statically inferred access window of a launch, in base buffer
+/// coordinates (half-open `[lo, hi)`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InferredWindow {
+    /// Base buffer id (`DataRef::id`).
+    pub buf: u64,
+    /// First element possibly touched.
+    pub lo: usize,
+    /// One past the last element possibly touched.
+    pub hi: usize,
+    /// Whether the window may be written (a write window also implies the
+    /// elements may be read back by the same launch).
+    pub write: bool,
+    /// `true` when the window is an over-approximation (lattice loss)
+    /// rather than a definite access pattern.
+    pub approx: bool,
+}
+
+impl InferredWindow {
+    /// Whether two windows conflict: same buffer, overlapping spans, and
+    /// at least one side writing.
+    pub fn conflicts(&self, other: &InferredWindow) -> bool {
+        self.buf == other.buf
+            && (self.write || other.write)
+            && self.lo < other.hi
+            && other.lo < self.hi
+    }
+}
+
+/// Per-launch result of whole-graph verification.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LaunchFlowReport {
+    /// Launch id (submission order).
+    pub launch: u64,
+    /// Kernel name.
+    pub kernel: String,
+    /// Inferred windows, one or more per externally bound argument.
+    pub windows: Vec<InferredWindow>,
+}
+
+/// Result of `Session::verify_graph()`: the analyzer's view of the whole
+/// in-flight launch graph diffed against the scheduler's declared-flow
+/// edge set. Soundness requires `declared_edges ⊆ inferred_edges`; any
+/// edge in the difference is a dependency the scheduler honours only
+/// because it was declared — or, for `.independent()` launches, one it
+/// was told to ignore even though the bytecode conflicts.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct GraphReport {
+    /// All diagnostics produced by the graph pass.
+    pub diagnostics: Vec<Diagnostic>,
+    /// Per-launch inferred flows.
+    pub launches: Vec<LaunchFlowReport>,
+    /// Dependency edges `(earlier, later)` re-derived from inferred flows
+    /// (ignoring `.independent()` opt-outs, including explicit `.after`).
+    pub inferred_edges: Vec<(u64, u64)>,
+    /// The scheduler's actual edge set (declared flows + `.after`).
+    pub declared_edges: Vec<(u64, u64)>,
+    /// Launches present but not analyzable (e.g. already failed).
+    pub skipped: usize,
+}
+
+impl GraphReport {
+    /// Whether the report contains any `Error`-severity diagnostic.
+    pub fn has_errors(&self) -> bool {
+        self.diagnostics.iter().any(|d| d.severity == Severity::Error)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_conflict_requires_overlap_and_a_writer() {
+        let r = |lo, hi| InferredWindow { buf: 1, lo, hi, write: false, approx: false };
+        let w = |lo, hi| InferredWindow { buf: 1, lo, hi, write: true, approx: false };
+        assert!(w(0, 4).conflicts(&r(2, 6)), "WAR overlap");
+        assert!(r(2, 6).conflicts(&w(0, 4)), "RAW overlap");
+        assert!(w(0, 4).conflicts(&w(3, 5)), "WAW overlap");
+        assert!(!r(0, 4).conflicts(&r(0, 4)), "two readers never conflict");
+        assert!(!w(0, 4).conflicts(&w(4, 8)), "adjacent half-open spans");
+        let other_buf = InferredWindow { buf: 2, lo: 0, hi: 4, write: true, approx: false };
+        assert!(!w(0, 4).conflicts(&other_buf), "different buffers");
+    }
+
+    #[test]
+    fn graph_report_error_detection() {
+        let mut g = GraphReport::default();
+        assert!(!g.has_errors());
+        g.diagnostics.push(Diagnostic {
+            severity: Severity::Warning,
+            kernel: "k".into(),
+            launch: None,
+            message: "m".into(),
+        });
+        assert!(!g.has_errors());
+        g.diagnostics.push(Diagnostic {
+            severity: Severity::Error,
+            kernel: "k".into(),
+            launch: Some(1),
+            message: "m".into(),
+        });
+        assert!(g.has_errors());
+    }
+}

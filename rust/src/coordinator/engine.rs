@@ -97,6 +97,10 @@ use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, HashSet};
 use std::rc::Rc;
 
+use crate::analysis::{
+    AccessRecord, Diagnostic, GraphReport, InferredWindow, KernelSummary, LaunchFlowReport,
+    Severity, VerifyLevel,
+};
 use crate::channel::protocol::{Request, RequestKind, FRAME_HEADER_BYTES};
 use crate::channel::{Channel, Handle};
 use crate::device::{ComputeModel, PowerModel, Scratchpad, Technology};
@@ -339,6 +343,204 @@ fn collect_flows(bound: &[Vec<BoundArg>]) -> Vec<FlowSpan> {
     flows
 }
 
+/// Precise record of one externally visible argument binding — the
+/// unmerged counterpart of [`FlowSpan`]. `collect_flows` collapses shard
+/// windows into whole-buffer hulls for the scheduler; the static verifier
+/// instead needs the exact per-core view each VM slot was bound to, so it
+/// can diff inferred windows against *real* declarations rather than
+/// hulls. Collected at submit, kept for the launch's lifetime (`bound` is
+/// consumed at activation).
+#[derive(Debug, Clone, Copy)]
+struct ExtArgDecl {
+    /// Position in the launch's argument vector == the kernel parameter
+    /// index == the VM external slot.
+    param: u16,
+    /// The exact view bound on this core.
+    dref: DataRef,
+    access: Access,
+    /// `true` for an eager copy-in (whole-view read at activation, plus a
+    /// whole-view write-back when mutable), `false` for by-reference.
+    eager: bool,
+    /// Whether the binding carries a prefetch annotation.
+    prefetched: bool,
+    /// The variable's home level at submit time.
+    level: Level,
+}
+
+/// Collect the precise per-core external argument declarations (see
+/// [`ExtArgDecl`]); outer index = core position, matching `bound`.
+fn collect_ext_args(bound: &[Vec<BoundArg>], registry: &MemRegistry) -> Vec<Vec<ExtArgDecl>> {
+    bound
+        .iter()
+        .map(|args| {
+            args.iter()
+                .enumerate()
+                .filter_map(|(p, a)| {
+                    let (dref, access) = a.flow()?;
+                    let (eager, prefetched) = match a {
+                        BoundArg::EagerCopy { .. } => (true, false),
+                        BoundArg::External { prefetch, .. } => (false, prefetch.is_some()),
+                        _ => return None,
+                    };
+                    let level = registry.info(dref).map(|i| i.level).unwrap_or(Level::Host);
+                    Some(ExtArgDecl { param: p as u16, dref, access, eager, prefetched, level })
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Map a kernel summary through one launch's precise argument
+/// declarations into base-buffer [`InferredWindow`]s — the analyzer's view
+/// of the launch's flow set. Summary intervals are view-relative; each is
+/// clamped to its core's bound view (sound: the VM bounds-checks before
+/// any external access is performed, so an out-of-view index never becomes
+/// an access) and shifted by the view offset. Eager copies contribute
+/// their definite whole-view transfers (copy-in read, mutable copy-back
+/// write) — and those windows also cover the spill path, where the
+/// argument falls back to by-reference element access inside the view.
+fn inferred_windows(summary: &KernelSummary, ext_args: &[Vec<ExtArgDecl>]) -> Vec<InferredWindow> {
+    let mut out = Vec::new();
+    for d in ext_args.iter().flatten() {
+        let buf = d.dref.id;
+        if d.eager {
+            out.push(InferredWindow {
+                buf,
+                lo: d.dref.offset,
+                hi: d.dref.offset + d.dref.len,
+                write: false,
+                approx: false,
+            });
+            if d.access == Access::Mutable {
+                out.push(InferredWindow {
+                    buf,
+                    lo: d.dref.offset,
+                    hi: d.dref.offset + d.dref.len,
+                    write: true,
+                    approx: false,
+                });
+            }
+            continue;
+        }
+        let arg = summary.args.get(d.param as usize).cloned().unwrap_or(crate::analysis::ArgSummary {
+            read: Some((crate::analysis::Interval::top(), true)),
+            write: Some((crate::analysis::Interval::top(), true)),
+        });
+        for (win, write) in [(arg.read, false), (arg.write, true)] {
+            if let Some((iv, approx)) = win {
+                if let Some((lo, hi)) = iv.clamp_window(d.dref.len) {
+                    out.push(InferredWindow {
+                        buf,
+                        lo: d.dref.offset + lo,
+                        hi: d.dref.offset + hi,
+                        write,
+                        approx,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The scheduler's hull flow set rendered as conflict windows, so hull
+/// and inferred flows answer aliasing questions through one predicate
+/// ([`InferredWindow::conflicts`], which matches [`FlowSpan::conflicts`]).
+fn hull_windows(flows: &[FlowSpan]) -> Vec<InferredWindow> {
+    flows
+        .iter()
+        .map(|f| InferredWindow { buf: f.id, lo: f.start, hi: f.end, write: f.write, approx: true })
+        .collect()
+}
+
+/// Minimum inferred on-demand read width (elements) before the verifier
+/// flags a host-level binding with no prefetch annotation as streaming.
+const STREAM_LINT_MIN: usize = 16;
+
+/// Per-launch flow lints over the precise declarations: under-declared
+/// flows (the bytecode may write through an argument bound read-only) and
+/// memory-kind capability (a kernel streaming a `Host`-level kind
+/// element-by-element with prefetch disabled). Findings are deduplicated
+/// per parameter — every core runs the same kernel, so one finding per
+/// argument carries the full signal.
+fn lint_flows(
+    summary: &KernelSummary,
+    ext_args: &[Vec<ExtArgDecl>],
+    launch: Option<u64>,
+    kernel: &str,
+) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let mut flagged_write: HashSet<u16> = HashSet::new();
+    let mut flagged_stream: HashSet<u16> = HashSet::new();
+    for d in ext_args.iter().flatten() {
+        let Some(arg) = summary.args.get(d.param as usize) else { continue };
+        if d.access == Access::ReadOnly {
+            if let Some((iv, approx)) = arg.write {
+                if flagged_write.insert(d.param) {
+                    let p = d.param;
+                    let win = iv
+                        .clamp_window(d.dref.len)
+                        .map_or_else(|| iv.to_string(), |(lo, hi)| format!("[{lo}, {hi})"));
+                    let (severity, message) = if d.eager {
+                        // The writes land in the on-core copy and are
+                        // discarded at completion — legal, likely a bug.
+                        (
+                            Severity::Warning,
+                            format!(
+                                "writes {win} of read-only arg {p}, but the argument is an \
+                                 eager copy — the writes are silently discarded"
+                            ),
+                        )
+                    } else if approx {
+                        // Imprecise windows never reject: the lattice may
+                        // have over-approximated a path that never runs.
+                        (
+                            Severity::Warning,
+                            format!(
+                                "may write read-only arg {p} (imprecise inferred window {win}) \
+                                 — under-declared flow if any write executes"
+                            ),
+                        )
+                    } else {
+                        (
+                            Severity::Error,
+                            format!(
+                                "writes {win} of read-only arg {p} — under-declared flow \
+                                 (bind the argument mutable so the scheduler sees the hazard)"
+                            ),
+                        )
+                    };
+                    out.push(Diagnostic {
+                        severity,
+                        kernel: kernel.to_string(),
+                        launch,
+                        message,
+                    });
+                }
+            }
+        }
+        if !d.eager && !d.prefetched && d.level == Level::Host {
+            if let Some((iv, _)) = arg.read {
+                let width = iv.clamp_window(d.dref.len).map_or(0, |(lo, hi)| hi - lo);
+                if width >= STREAM_LINT_MIN && flagged_stream.insert(d.param) {
+                    out.push(Diagnostic {
+                        severity: Severity::Warning,
+                        kernel: kernel.to_string(),
+                        launch,
+                        message: format!(
+                            "streams {width} elements of arg {} from Host-level memory \
+                             on demand with no prefetch annotation — each element is a \
+                             blocking host round-trip",
+                            d.param
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
 /// One entry in the engine's launch table: everything needed to stage the
 /// launch when its cores free up, the per-core runs while active, and the
 /// parked result once complete.
@@ -361,6 +563,14 @@ struct Launch {
     /// The launch's data-flow set (see [`FlowSpan`]); later submissions
     /// infer their edges against it.
     flows: Vec<FlowSpan>,
+    /// Precise, unmerged external-argument declarations (see
+    /// [`ExtArgDecl`]) — what the static verifier diffs inferred windows
+    /// against. Outer index = core position.
+    ext_args: Vec<Vec<ExtArgDecl>>,
+    /// Statically inferred flow windows, computed at submit when
+    /// verification is on (empty otherwise) — later `.independent()`
+    /// submissions lint their inferred flows against these.
+    inferred: Vec<InferredWindow>,
     /// Cores reserved (owner recorded) and the activation event scheduled.
     reserved: bool,
     active: bool,
@@ -417,6 +627,9 @@ enum Status {
 
 struct CoreRun {
     id: usize,
+    /// Owning launch (threaded through so access recording can attribute
+    /// runtime external accesses to the launch being verified).
+    launch: u64,
     vm: Interp,
     clock: Time,
     start: Time,
@@ -487,7 +700,25 @@ pub struct Engine {
     /// budget)`. The multi-device group claims these to migrate work to a
     /// surviving device ([`Engine::harvest_checkpoint`]).
     harvested: HashMap<u64, (Option<LaunchCheckpoint>, u32)>,
+    /// Static-verifier level applied at submit ([`VerifyLevel::Off`] by
+    /// default — zero analysis overhead unless opted in).
+    verify: VerifyLevel,
+    /// Diagnostics accumulated by submit-time verification (capped at
+    /// [`MAX_DIAGNOSTICS`]); drained via [`Engine::take_diagnostics`].
+    diagnostics: Vec<Diagnostic>,
+    /// When set, every external access the VM performs is appended to
+    /// `observed` — the soundness fuzzer's runtime trace. Off by default.
+    record_accesses: bool,
+    /// Runtime external-access trace (see [`AccessRecord`]).
+    observed: Vec<AccessRecord>,
+    /// Kernel-summary cache keyed by program identity (`Rc::as_ptr`), so
+    /// re-launching the same kernel never re-runs the fixpoint.
+    summaries: HashMap<usize, Rc<KernelSummary>>,
 }
+
+/// Submit-time diagnostics kept before older ones are dropped (bounds
+/// memory for long-running sessions that never drain them).
+const MAX_DIAGNOSTICS: usize = 1024;
 
 impl std::fmt::Debug for Engine {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
@@ -540,7 +771,182 @@ impl Engine {
             fault_counters: FaultCounters::default(),
             lost_at: None,
             harvested: HashMap::new(),
+            verify: VerifyLevel::default(),
+            diagnostics: Vec::new(),
+            record_accesses: false,
+            observed: Vec::new(),
+            summaries: HashMap::new(),
         }
+    }
+
+    /// Set the static-verification level applied at submit (default
+    /// [`VerifyLevel::Off`]; see [`crate::analysis`]).
+    pub fn set_verify(&mut self, level: VerifyLevel) {
+        self.verify = level;
+    }
+
+    /// Current static-verification level.
+    pub fn verify_level(&self) -> VerifyLevel {
+        self.verify
+    }
+
+    /// Enable/disable runtime external-access recording (the soundness
+    /// fuzzer's trace — see [`Engine::observed_accesses`]). Off by
+    /// default; recording never changes virtual-time results.
+    pub fn set_record_accesses(&mut self, on: bool) {
+        self.record_accesses = on;
+    }
+
+    /// Runtime external accesses recorded so far (empty unless
+    /// [`Engine::set_record_accesses`] was enabled).
+    pub fn observed_accesses(&self) -> &[AccessRecord] {
+        &self.observed
+    }
+
+    /// Drain the diagnostics accumulated by submit-time verification.
+    pub fn take_diagnostics(&mut self) -> Vec<Diagnostic> {
+        std::mem::take(&mut self.diagnostics)
+    }
+
+    /// Append a runtime external-access record (no-op unless recording).
+    fn record_access(&mut self, launch: u64, dref: &DataRef, index: usize, write: bool) {
+        if self.record_accesses {
+            let lo = dref.offset + index;
+            self.observed.push(AccessRecord { launch, buf: dref.id, lo, hi: lo + 1, write });
+        }
+    }
+
+    /// Append a whole-view runtime access record (tensor builtins and
+    /// eager copies move the full window at once).
+    fn record_span(&mut self, launch: u64, dref: &DataRef, write: bool) {
+        if self.record_accesses {
+            self.observed.push(AccessRecord {
+                launch,
+                buf: dref.id,
+                lo: dref.offset,
+                hi: dref.offset + dref.len,
+                write,
+            });
+        }
+    }
+
+    /// Push a verifier diagnostic, dropping beyond the cap.
+    fn push_diagnostic(&mut self, d: Diagnostic) {
+        if self.diagnostics.len() < MAX_DIAGNOSTICS {
+            self.diagnostics.push(d);
+        }
+    }
+
+    /// Summary for a kernel's program, computed once per distinct program.
+    fn summary_for(&mut self, kernel: &Kernel) -> Rc<KernelSummary> {
+        let key = Rc::as_ptr(&kernel.program) as usize;
+        self.summaries
+            .entry(key)
+            .or_insert_with(|| Rc::new(crate::analysis::analyze_program(&kernel.program)))
+            .clone()
+    }
+
+    /// Whole-graph pre-flight: re-derive the scheduler's edge set from the
+    /// analyzer's inferred flows and diff it against the declared-flow
+    /// edge set, re-running the per-launch flow lints over every launch
+    /// still in the table. Call it after submitting and *before* waiting —
+    /// `wait` retires launches from the table as results are claimed.
+    /// Pure analysis: no virtual time advances and no launch state
+    /// changes. Works at any [`VerifyLevel`], including `Off`.
+    ///
+    /// Edge derivation: `declared_edges` replays the scheduler's own
+    /// predicate (explicit `.after` plus hull-flow conflicts, honouring
+    /// `.independent()`); `inferred_edges` uses the union of analyzer
+    /// windows and declared hulls and ignores `.independent()` — so the
+    /// declared set is contained in the inferred set by construction, and
+    /// the difference is exactly the dependencies the scheduler was told
+    /// to ignore (plus any it honours only because flows were declared
+    /// wider than the bytecode's real footprint).
+    pub fn verify_graph(&mut self) -> GraphReport {
+        let mut report = GraphReport::default();
+        // Snapshot what the analysis needs (kernel clones are two Rc
+        // bumps) so the summary cache can grow while iterating.
+        let snaps: Vec<_> = self
+            .launches
+            .iter()
+            .map(|l| {
+                (
+                    l.id,
+                    l.kernel.clone(),
+                    l.ext_args.clone(),
+                    l.flows.clone(),
+                    l.options.flow_deps,
+                    l.options.after.iter().map(|d| d.0).collect::<Vec<u64>>(),
+                    l.outcome.as_ref().is_some_and(|o| o.is_err()),
+                )
+            })
+            .collect();
+        // Per included launch: (id, pure analyzer windows, declared
+        // hulls, union of both, flow_deps, explicit deps).
+        struct Node {
+            id: u64,
+            name: String,
+            pure: Vec<InferredWindow>,
+            hull: Vec<InferredWindow>,
+            union: Vec<InferredWindow>,
+            flow_deps: bool,
+            after: Vec<u64>,
+        }
+        let mut nodes: Vec<Node> = Vec::new();
+        for (id, kernel, ext_args, flows, flow_deps, after, failed) in snaps {
+            if failed {
+                report.skipped += 1;
+                continue;
+            }
+            let summary = self.summary_for(&kernel);
+            let pure = inferred_windows(&summary, &ext_args);
+            report.diagnostics.extend(lint_flows(&summary, &ext_args, Some(id), kernel.name()));
+            let hull = hull_windows(&flows);
+            let mut union = pure.clone();
+            union.extend(hull.iter().copied());
+            report.launches.push(LaunchFlowReport {
+                launch: id,
+                kernel: kernel.name().to_string(),
+                windows: pure.clone(),
+            });
+            nodes.push(Node {
+                id,
+                name: kernel.name().to_string(),
+                pure,
+                hull,
+                union,
+                flow_deps,
+                after,
+            });
+        }
+        let conflict = |a: &[InferredWindow], b: &[InferredWindow]| {
+            a.iter().any(|x| b.iter().any(|y| x.conflicts(y)))
+        };
+        for j in 1..nodes.len() {
+            for i in 0..j {
+                let (earlier, later) = (&nodes[i], &nodes[j]);
+                let explicit = later.after.contains(&earlier.id);
+                if explicit || (later.flow_deps && conflict(&later.hull, &earlier.hull)) {
+                    report.declared_edges.push((earlier.id, later.id));
+                }
+                if explicit || conflict(&later.union, &earlier.union) {
+                    report.inferred_edges.push((earlier.id, later.id));
+                }
+                if !later.flow_deps && conflict(&later.pure, &earlier.pure) {
+                    report.diagnostics.push(Diagnostic {
+                        severity: Severity::Warning,
+                        kernel: later.name.clone(),
+                        launch: Some(later.id),
+                        message: format!(
+                            "launch {} declared .independent() but its inferred flows \
+                             conflict with launch {} — the scheduler will not order them",
+                            later.id, earlier.id
+                        ),
+                    });
+                }
+            }
+        }
+        report
     }
 
     /// Install a seeded fault schedule (see [`FaultPlan`]). Faults are
@@ -707,6 +1113,58 @@ impl Engine {
         // [`Engine::quiesce`] still sees it (an opted-out launch is
         // unordered, not invisible).
         let flows = collect_flows(&bound);
+        let ext_args = collect_ext_args(&bound, &self.registry);
+
+        // ---- static verification (see `crate::analysis`) ----
+        // Runs before any engine state mutates, so a Strict rejection
+        // leaves the launch table, event heap and id counter untouched.
+        let mut inferred: Vec<InferredWindow> = Vec::new();
+        if self.verify != VerifyLevel::Off {
+            let summary = self.summary_for(kernel);
+            inferred = inferred_windows(&summary, &ext_args);
+            let mut diags = lint_flows(&summary, &ext_args, Some(id), kernel.name());
+            if !options.flow_deps {
+                // `.independent()` opt-out whose *inferred* flows conflict
+                // with an in-flight launch: the weak cross-launch memory
+                // model applies to a race the bytecode really has.
+                let mine = &inferred;
+                for l in self.launches.iter().filter(|l| l.outcome.is_none()) {
+                    let theirs = if l.inferred.is_empty() {
+                        hull_windows(&l.flows)
+                    } else {
+                        l.inferred.clone()
+                    };
+                    if let Some((a, b)) = mine
+                        .iter()
+                        .flat_map(|a| theirs.iter().map(move |b| (a, b)))
+                        .find(|&(a, b)| a.conflicts(b))
+                    {
+                        diags.push(Diagnostic {
+                            severity: Severity::Warning,
+                            kernel: kernel.name().to_string(),
+                            launch: Some(id),
+                            message: format!(
+                                "declared .independent() but inferred flows conflict with \
+                                 in-flight launch {} on buffer {} ([{}, {}) vs [{}, {}))",
+                                l.id, a.buf, a.lo, a.hi, b.lo, b.hi
+                            ),
+                        });
+                    }
+                }
+            }
+            if self.verify == VerifyLevel::Strict {
+                if let Some(d) = diags.iter().find(|d| d.severity == Severity::Error) {
+                    return Err(Error::Analysis {
+                        launch: Some(id),
+                        diagnostic: d.to_string(),
+                    });
+                }
+            }
+            for d in diags {
+                self.push_diagnostic(d);
+            }
+        }
+
         let mut deps: Vec<u64> = Vec::new();
         // External-dependency floor: the multi-device group threads its
         // cross-device staging completion time in here, so it composes
@@ -761,6 +1219,8 @@ impl Engine {
             deps,
             dep_ready,
             flows,
+            inferred,
+            ext_args,
             reserved: false,
             active: false,
             cores: Vec::new(),
@@ -1377,6 +1837,7 @@ impl Engine {
                             self.scratch_m.clear();
                             self.scratch_m.resize(dref.len, 0.0);
                             self.registry.read(dref, Some(cid), 0, &mut self.scratch_m)?;
+                            self.record_span(id, &dref, false);
                             let done =
                                 self.service.eager_push(launch, lvl, bytes as u64);
                             self.stats.eager_bytes += bytes as u64;
@@ -1442,6 +1903,7 @@ impl Engine {
             let last_counters = vm.counters();
             let mut c = CoreRun {
                 id: cid,
+                launch: id,
                 vm,
                 clock: start,
                 start,
@@ -1587,6 +2049,7 @@ impl Engine {
                 self.scratch_m.clear();
                 self.scratch_m.extend(arr.borrow().iter().map(|&v| v as f32));
                 self.registry.write(dref, Some(c.id), 0, &self.scratch_m)?;
+                self.record_span(c.launch, &dref, true);
                 let done = self.service.service(c.finished_at, Level::Shared, dref.bytes() as u64);
                 c.finished_at = done;
             }
@@ -1825,6 +2288,12 @@ impl Engine {
                 self.trace.emit(done, c.id, "done", "");
             }
             Outcome::ExtRead { mut slot, mut index } => {
+                // (Recording, not servicing: the VM only emits ExtRead
+                // after its own bounds check, so the request *is* the
+                // access for soundness purposes; a retried outcome may
+                // record twice, which the ⊆-check tolerates.)
+                let dref = c.binds[slot].dref;
+                self.record_access(c.launch, &dref, index, false);
                 // Inline fast path: consume a run of pure pre-fetch hits
                 // without a scheduler round trip per element. Legal only
                 // while no shared resource is touched — the buffer hit is
@@ -1851,6 +2320,8 @@ impl Engine {
                             Outcome::ExtRead { slot: s, index: i } => {
                                 slot = s;
                                 index = i;
+                                let dref = c.binds[slot].dref;
+                                self.record_access(c.launch, &dref, index, false);
                             }
                             other => {
                                 c.status = Status::Pending(other);
@@ -1893,7 +2364,9 @@ impl Engine {
                             "write to read-only reference argument".into(),
                         ));
                     }
-                    self.registry.write(b.dref, Some(c.id), index, &[value as f32])?;
+                    let dref = b.dref;
+                    self.registry.write(dref, Some(c.id), index, &[value as f32])?;
+                    self.record_access(c.launch, &dref, index, true);
                     c.clock += self.compute.dispatch(4);
                     let out = c.vm.resume(Value::None)?;
                     self.charge_vm(c);
@@ -2023,6 +2496,7 @@ impl Engine {
                 let lvl = self.registry.access_level(b.dref, index, 1)?;
                 // Atomic per-element write applied in service order.
                 self.registry.write(b.dref, Some(c.id), index, &[value as f32])?;
+                self.record_access(c.launch, &b.dref, index, true);
                 let ready = self.service.service(c.clock, lvl, wire);
                 c.channel.begin_service(h)?;
                 c.channel.complete(h, ready, Vec::new())?;
@@ -2149,6 +2623,7 @@ impl Engine {
                     Some((dref, level)) => {
                         let t = dref.len / h;
                         Self::gather_rows_into(&self.registry, &mut w, dref, c.id, h, t, off, len)?;
+                        self.record_span(c.launch, &dref, false);
                         let done = self.bulk_transfer(c.clock, level, (h * len * 4) as u64);
                         c.clock = done;
                     }
@@ -2197,6 +2672,7 @@ impl Engine {
                 let t = gref.len / h;
                 let mut gtile = std::mem::take(&mut self.scratch_a);
                 Self::gather_rows_into(&self.registry, &mut gtile, gref, c.id, h, t, off, len)?;
+                self.record_span(c.launch, &gref, false);
                 let bytes = (h * len * 4) as u64;
                 let read_done = self.bulk_transfer(c.clock, glevel, bytes);
                 let (out, flops) = match &self.exec {
@@ -2214,6 +2690,7 @@ impl Engine {
                 };
                 let compute_done = read_done + self.compute.compiled_flops(flops);
                 self.scatter_rows(gref, c.id, h, t, off, len, &out)?;
+                self.record_span(c.launch, &gref, true);
                 self.scratch_a = gtile;
                 c.clock = self.bulk_transfer(compute_done, glevel, bytes);
                 Ok(Value::Int(0))
@@ -2235,6 +2712,8 @@ impl Engine {
                 let mut gtile = std::mem::take(&mut self.scratch_b);
                 Self::gather_rows_into(&self.registry, &mut wtile, wref, c.id, h, t, off, len)?;
                 Self::gather_rows_into(&self.registry, &mut gtile, gref, c.id, h, t, off, len)?;
+                self.record_span(c.launch, &wref, false);
+                self.record_span(c.launch, &gref, false);
                 let bytes = (h * len * 4) as u64;
                 let r1 = self.bulk_transfer(c.clock, wlevel, bytes);
                 let r2 = self.bulk_transfer(r1, glevel, bytes);
@@ -2249,6 +2728,7 @@ impl Engine {
                 };
                 let compute_done = r2 + self.compute.compiled_flops(flops);
                 self.scatter_rows(wref, c.id, h, t, off, len, &out)?;
+                self.record_span(c.launch, &wref, true);
                 self.scratch_a = wtile;
                 self.scratch_b = gtile;
                 c.clock = self.bulk_transfer(compute_done, wlevel, bytes);

@@ -107,6 +107,7 @@
 use std::collections::HashMap;
 use std::rc::Rc;
 
+use crate::analysis::{Diagnostic, GraphReport, InferredWindow, VerifyLevel};
 use crate::device::Technology;
 use crate::error::{Error, Result};
 use crate::memory::{DataRef, Level, MemPlace, MemSpec};
@@ -135,6 +136,7 @@ pub struct DeviceGroup {
     service_threads: usize,
     trace_capacity: Option<usize>,
     faults: Vec<(usize, FaultPlan)>,
+    verify: VerifyLevel,
 }
 
 impl Default for DeviceGroup {
@@ -152,6 +154,7 @@ impl DeviceGroup {
             service_threads: 1,
             trace_capacity: None,
             faults: Vec::new(),
+            verify: VerifyLevel::Off,
         }
     }
 
@@ -191,6 +194,16 @@ impl DeviceGroup {
         self
     }
 
+    /// Static-verification level applied to **every** per-device session
+    /// (the group analogue of [`super::SessionBuilder::verify`]): each
+    /// device's engine lints its own launches at submit, and
+    /// [`GroupSession::verify_graph`] collects the per-device whole-graph
+    /// reports.
+    pub fn verify(mut self, level: VerifyLevel) -> Self {
+        self.verify = level;
+        self
+    }
+
     /// Construct the group session (at least one device required).
     pub fn build(self) -> Result<GroupSession> {
         if self.devices.is_empty() {
@@ -200,7 +213,8 @@ impl DeviceGroup {
         for (i, tech) in self.devices.into_iter().enumerate() {
             let mut b = Session::builder(tech)
                 .seed(self.seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
-                .service_threads(self.service_threads);
+                .service_threads(self.service_threads)
+                .verify(self.verify);
             if let Some(cap) = self.trace_capacity {
                 b = b.trace(cap);
             }
@@ -222,6 +236,7 @@ impl DeviceGroup {
             staging: StagingCounters::default(),
             relaunch: HashMap::new(),
             faults: FaultCounters::default(),
+            flow_windows: HashMap::new(),
             next_seq: 0,
         })
     }
@@ -362,6 +377,28 @@ impl GroupArgSpec {
             }
         }
     }
+
+    /// The precise view windows behind [`GroupArgSpec::flows`]' whole-buffer
+    /// hull: one [`InferredWindow`] per referenced view, in group-buffer
+    /// coordinates (`buf` = group buffer id). Staging and freshness keep
+    /// hull semantics; these windows are recorded alongside so the static
+    /// verifier can tell disjoint sub-views of one buffer apart.
+    fn windows(&self) -> Vec<InferredWindow> {
+        let win = |g: &GroupRef, access: &Access| InferredWindow {
+            buf: g.gid as u64,
+            lo: g.offset,
+            hi: g.offset + g.len,
+            write: *access == Access::Mutable,
+            approx: true,
+        };
+        match self {
+            GroupArgSpec::Float(_) | GroupArgSpec::Int(_) | GroupArgSpec::Values(_) => Vec::new(),
+            GroupArgSpec::Ref { gref, access, .. } => vec![win(gref, access)],
+            GroupArgSpec::PerCore { grefs, access, .. } => {
+                grefs.iter().map(|g| win(g, access)).collect()
+            }
+        }
+    }
 }
 
 /// Everything needed to resubmit a retry-budgeted group launch on a
@@ -411,6 +448,11 @@ pub struct GroupSession {
     /// injection/retry counts live in each engine and are merged in by
     /// [`GroupSession::fault_counters`].
     faults: FaultCounters,
+    /// Precise per-view flow windows recorded at submit, keyed by group
+    /// sequence number — the fine-grained record the whole-buffer hulls
+    /// (`GroupArgSpec::flows`) collapse away. Staging decisions still use
+    /// the hulls; the verifier reads these.
+    flow_windows: HashMap<u64, Vec<InferredWindow>>,
     next_seq: u64,
 }
 
@@ -633,6 +675,41 @@ impl GroupSession {
             s.wait_all()?;
         }
         Ok(())
+    }
+
+    /// Whole-graph static pre-flight across every device: each engine
+    /// re-derives its edge set from inferred flows and diffs it against
+    /// the declared-flow edges, exactly as [`Session::verify_graph`].
+    /// Cross-device ordering is staging copies (never engine edges), so
+    /// the group report is the per-device reports side by side.
+    pub fn verify_graph(&mut self) -> Vec<(DeviceId, GraphReport)> {
+        self.sessions
+            .iter_mut()
+            .enumerate()
+            .map(|(d, s)| (DeviceId(d), s.verify_graph()))
+            .collect()
+    }
+
+    /// Drain the submit-time diagnostics accumulated on every device's
+    /// engine (group analogue of [`Session::take_diagnostics`]), tagged
+    /// with the device each was produced on.
+    pub fn take_diagnostics(&mut self) -> Vec<(DeviceId, Diagnostic)> {
+        let mut out = Vec::new();
+        for (d, s) in self.sessions.iter_mut().enumerate() {
+            for diag in s.take_diagnostics() {
+                out.push((DeviceId(d), diag));
+            }
+        }
+        out
+    }
+
+    /// The precise per-view flow windows recorded when group launch `seq`
+    /// was submitted (group-buffer coordinates; `buf` = group buffer id).
+    /// The whole-buffer hulls drive staging and freshness; this is the
+    /// fine-grained record kept alongside them. `None` for unknown
+    /// sequence numbers.
+    pub fn flow_windows(&self, seq: u64) -> Option<&[InferredWindow]> {
+        self.flow_windows.get(&seq).map(Vec::as_slice)
     }
 
     /// Quiesce every device for a group buffer: drive until no in-flight
@@ -1091,8 +1168,11 @@ impl GroupLaunchBuilder<'_> {
         group.next_seq += 1;
 
         // The launch's group-level flow set: buffers touched, write flag
-        // OR-ed per buffer (the whole-buffer hull — module docs).
+        // OR-ed per buffer (the whole-buffer hull — module docs). The
+        // precise per-view windows the hull collapses are recorded
+        // alongside, keyed by sequence number, for the static verifier.
         let mut flows: Vec<(usize, bool)> = Vec::new();
+        let mut windows: Vec<InferredWindow> = Vec::new();
         for a in &args {
             for (gid, write) in a.flows() {
                 match flows.iter_mut().find(|(g, _)| *g == gid) {
@@ -1100,7 +1180,9 @@ impl GroupLaunchBuilder<'_> {
                     None => flows.push((gid, write)),
                 }
             }
+            windows.extend(a.windows());
         }
+        group.flow_windows.insert(seq, windows);
 
         // Cross-device staging (+ failure propagation) for stale inputs.
         let mut not_before: Time = 0;
@@ -1215,6 +1297,13 @@ impl GroupHandle {
     /// The device the launch was placed on (pinned or automatic).
     pub fn device(&self) -> DeviceId {
         self.device
+    }
+
+    /// Group sequence number (submission order across all devices) — the
+    /// key [`GroupSession::flow_windows`] records precise flow windows
+    /// under.
+    pub fn seq(&self) -> u64 {
+        self.seq
     }
 
     /// Drive the group until this launch completes; claim its result —
@@ -1349,6 +1438,61 @@ def fill(a, v):
         g.wait(f0).unwrap();
         g.wait(f1).unwrap();
         assert_eq!(g.queue_stats(), QueueStats::default());
+    }
+
+    #[test]
+    fn precise_flow_windows_recorded_alongside_buffer_hulls() {
+        let mut g = GroupSession::builder()
+            .device(Technology::epiphany3())
+            .device(Technology::epiphany3())
+            .seed(9)
+            .verify(VerifyLevel::Warn)
+            .build()
+            .unwrap();
+        let a = g.alloc(MemSpec::host("a").zeroed(32)).unwrap();
+        g.compile_kernel("fill", FILL_SRC).unwrap();
+        g.compile_kernel("total", SUM_SRC).unwrap();
+        // Disjoint halves of one buffer: the whole-buffer hull sees one
+        // (gid, write) entry per launch, but the recorded windows keep the
+        // halves apart.
+        let lo_half = a.slice(0, 16);
+        let hi_half = a.slice(16, 16);
+        let w = g
+            .launch_named("fill")
+            .unwrap()
+            .args(&[GroupArgSpec::sharded_mut(lo_half), GroupArgSpec::Float(1.0)])
+            .on(DeviceId(0))
+            .submit()
+            .unwrap();
+        let r = g
+            .launch_named("total")
+            .unwrap()
+            .arg(GroupArgSpec::sharded(hi_half))
+            .on(DeviceId(0))
+            .submit()
+            .unwrap();
+        let ww = g.flow_windows(w.seq).unwrap();
+        assert_eq!(ww.len(), 1);
+        assert_eq!((ww[0].lo, ww[0].hi, ww[0].write), (0, 16, true));
+        let rw = g.flow_windows(r.seq).unwrap();
+        assert_eq!((rw[0].lo, rw[0].hi, rw[0].write), (16, 32, false));
+        assert!(
+            !ww[0].conflicts(&rw[0]),
+            "disjoint halves the hull would have merged into a conflict"
+        );
+        assert!(g.flow_windows(999).is_none());
+        // One whole-graph report per device, none with errors; the Warn
+        // level reached every engine through the builder.
+        let reports = g.verify_graph();
+        assert_eq!(reports.len(), 2);
+        assert!(reports.iter().all(|(_, rep)| !rep.has_errors()));
+        assert_eq!(reports[0].1.launches.len(), 2, "both launches sit on device 0");
+        g.wait(w).unwrap();
+        g.wait(r).unwrap();
+        assert!(g
+            .take_diagnostics()
+            .iter()
+            .all(|(_, d)| d.severity != crate::analysis::Severity::Error));
     }
 
     #[test]

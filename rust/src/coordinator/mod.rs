@@ -56,6 +56,11 @@ pub use service::HostService;
 pub use session::{value_as_vec, LaunchBuilder, OffloadHandle, Session, SessionBuilder};
 pub use shard::{ShardAssignment, ShardPlan, ShardPolicy};
 
+// The static verifier's user-facing types, re-exported where the session
+// builder that consumes them lives (the analysis itself is
+// [`crate::analysis`]).
+pub use crate::analysis::{GraphReport, VerifyLevel};
+
 /// How kernel arguments travel to the device (§3.1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TransferMode {

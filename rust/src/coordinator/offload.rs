@@ -338,7 +338,15 @@ mod tests {
 
     #[test]
     fn kernel_code_fits_microcore_budget() {
+        // The analyzer's per-technology budget check replaces the former
+        // ad-hoc byte-count assert (and is what `Session::compile_kernel`
+        // now enforces at registration).
         let k = Kernel::compile("k", SRC, None).unwrap();
-        assert!(k.code_bytes() < 1024);
+        let diags = crate::analysis::check_kernel_budget(
+            k.name(),
+            &k.program,
+            &crate::device::Technology::epiphany3(),
+        );
+        assert!(diags.is_empty(), "{diags:?}");
     }
 }

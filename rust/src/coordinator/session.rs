@@ -48,6 +48,7 @@
 //! deprecation window; use [`Session::alloc`] + [`MemSpec`] and the
 //! launch builder.
 
+use crate::analysis::{check_kernel_budget, Diagnostic, GraphReport, VerifyLevel};
 use crate::device::Technology;
 use crate::error::{Error, Result};
 use crate::memory::{
@@ -73,6 +74,7 @@ pub struct SessionBuilder {
     seed: u64,
     trace_capacity: Option<usize>,
     faults: Option<FaultPlan>,
+    verify: VerifyLevel,
 }
 
 impl SessionBuilder {
@@ -85,7 +87,20 @@ impl SessionBuilder {
             seed: 42,
             trace_capacity: None,
             faults: None,
+            verify: VerifyLevel::Off,
         }
+    }
+
+    /// Set the static-verification level applied at every submit
+    /// ([`VerifyLevel::Off`] by default — zero analysis overhead). At
+    /// `Warn`, the engine analyzes each launch's bytecode and collects
+    /// diagnostics ([`Session::take_diagnostics`]) without changing any
+    /// behavior; at `Strict`, an `Error`-severity finding (a definite
+    /// under-declared flow) rejects the launch at submit with
+    /// [`crate::error::Error::Analysis`]. See [`crate::analysis`].
+    pub fn verify(mut self, level: VerifyLevel) -> Self {
+        self.verify = level;
+        self
     }
 
     /// Attach AOT artifacts (enables PJRT-backed tensor builtins).
@@ -135,6 +150,7 @@ impl SessionBuilder {
         if let Some(plan) = self.faults {
             engine.install_faults(plan);
         }
+        engine.set_verify(self.verify);
         Ok(Session { tech: self.tech, engine, kernels: KernelRegistry::new() })
     }
 }
@@ -349,14 +365,33 @@ impl Session {
 
     // ---- kernels ----------------------------------------------------------
 
-    /// Compile and register a kernel (entry = last `def`).
+    /// Compile and register a kernel (entry = last `def`). Registration
+    /// enforces this device's code/scratch budgets
+    /// ([`crate::analysis::check_kernel_budget`]): a kernel whose bytecode
+    /// cannot fit the technology's local store is rejected here with a
+    /// typed [`Error::Analysis`] — these model hard device limits, so
+    /// they apply regardless of the session's [`VerifyLevel`].
     pub fn compile_kernel(&mut self, name: &str, src: &str) -> Result<Kernel> {
-        self.kernels.register(name, src, None)
+        let k = self.kernels.register(name, src, None)?;
+        self.enforce_budget(&k)?;
+        Ok(k)
     }
 
-    /// Compile with an explicit entry function.
+    /// Compile with an explicit entry function (same budget enforcement
+    /// as [`Session::compile_kernel`]).
     pub fn compile_kernel_entry(&mut self, name: &str, src: &str, entry: &str) -> Result<Kernel> {
-        self.kernels.register(name, src, Some(entry))
+        let k = self.kernels.register(name, src, Some(entry))?;
+        self.enforce_budget(&k)?;
+        Ok(k)
+    }
+
+    /// Reject a registered kernel that breaks this device's budgets.
+    fn enforce_budget(&self, k: &Kernel) -> Result<()> {
+        if let Some(d) = check_kernel_budget(k.name(), &k.program, &self.tech).into_iter().next()
+        {
+            return Err(Error::Analysis { launch: None, diagnostic: d.to_string() });
+        }
+        Ok(())
     }
 
     /// Look up a registered kernel.
@@ -445,6 +480,25 @@ impl Session {
     /// the base variable this way before gather staging).
     pub fn quiesce(&mut self, dref: DataRef) -> Result<()> {
         self.engine.quiesce(dref)
+    }
+
+    // ---- static verification (see `crate::analysis`) ---------------------
+
+    /// Whole-graph pre-flight over every launch still in the table:
+    /// re-derives the scheduler's dependency edges from the analyzer's
+    /// inferred flows and diffs them against the declared-flow edge set
+    /// (plus the per-launch flow lints). Call it after submitting and
+    /// *before* waiting — claimed launches leave the table. Pure
+    /// analysis: no virtual time advances, works at any [`VerifyLevel`].
+    pub fn verify_graph(&mut self) -> GraphReport {
+        self.engine.verify_graph()
+    }
+
+    /// Drain the diagnostics collected by submit-time verification
+    /// (empty unless the session was built with
+    /// `SessionBuilder::verify(Warn|Strict)`).
+    pub fn take_diagnostics(&mut self) -> Vec<Diagnostic> {
+        self.engine.take_diagnostics()
     }
 }
 
@@ -958,6 +1012,56 @@ def bump(state):
         assert!(s.alloc(MemSpec::sink("sk").zeroed(8)).is_ok());
         assert!(s.alloc(MemSpec::procedural("pr", 1, 0.5).zeroed(8)).is_ok());
         assert!(s.launch_named("sum").is_ok());
+    }
+
+    #[test]
+    fn oversized_kernel_rejected_at_registration_with_typed_error() {
+        let mut s = session();
+        // ~3000 fused float-accumulate lines ≈ 48 KB of code > the 32 KB
+        // Epiphany-III local store (the former ad-hoc test asserts, now a
+        // typed registration error from the analyzer's budget check).
+        let mut src = String::from("def k():\n    x = 0.0\n");
+        for _ in 0..3000 {
+            src.push_str("    x = x + 1.0\n");
+        }
+        src.push_str("    return x\n");
+        let err = s.compile_kernel("big", &src).unwrap_err();
+        assert!(matches!(err, Error::Analysis { launch: None, .. }), "{err:?}");
+        assert!(err.to_string().contains("local store"), "{err}");
+        // The same kernel registers fine on the 64 KB MicroBlaze.
+        let mut mb = Session::builder(Technology::microblaze()).build().unwrap();
+        assert!(mb.compile_kernel("big", &src).is_ok());
+    }
+
+    #[test]
+    fn strict_verify_rejects_under_declared_write_at_submit() {
+        let mut s = Session::builder(Technology::epiphany3())
+            .seed(7)
+            .verify(VerifyLevel::Strict)
+            .build()
+            .unwrap();
+        let ra = s.alloc(MemSpec::host("a").from(&[0.0; 16])).unwrap();
+        // Writes a[0] but binds the argument read-only: the exact race the
+        // scheduler cannot see. Strict mode rejects it before any engine
+        // state changes.
+        let k = s.compile_kernel("w", "def w(a):\n    a[0] = 1.0\n    return 0\n").unwrap();
+        let err = s
+            .launch(&k)
+            .arg(ArgSpec::sharded(ra))
+            .mode(TransferMode::OnDemand)
+            .submit()
+            .unwrap_err();
+        assert!(matches!(err, Error::Analysis { launch: Some(_), .. }), "{err:?}");
+        assert!(err.to_string().contains("[0, 1)"), "offending window in message: {err}");
+        assert_eq!(s.in_flight(), 0, "rejected before entering the launch table");
+        // Properly declared, the same kernel submits fine under Strict.
+        let h = s
+            .launch(&k)
+            .arg(ArgSpec::sharded_mut(ra))
+            .mode(TransferMode::OnDemand)
+            .submit()
+            .unwrap();
+        h.wait(&mut s).unwrap();
     }
 
     #[test]

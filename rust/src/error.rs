@@ -25,6 +25,16 @@ pub enum Error {
     Channel(String),
     /// Offload coordination errors (unknown kernel, bad argument count, …).
     Coordinator(String),
+    /// The static launch verifier ([`crate::analysis`]) rejected a kernel
+    /// or launch: an under-declared flow at `Strict` submit, or a
+    /// per-technology code/scratch budget violation at registration.
+    Analysis {
+        /// Launch the diagnostic is about (`None` for registration-time
+        /// findings such as budget violations).
+        launch: Option<u64>,
+        /// The rendered diagnostic, including the offending window.
+        diagnostic: String,
+    },
     /// A launch was abandoned because a launch it depends on (an explicit
     /// `.after` edge or an inferred data-flow edge) failed. Propagates
     /// transitively through the launch graph; each abandoned launch parks
@@ -100,6 +110,13 @@ impl fmt::Display for Error {
             Error::Memory(m) => write!(f, "memory error: {m}"),
             Error::Channel(m) => write!(f, "channel error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Analysis { launch, diagnostic } => {
+                write!(f, "analysis error")?;
+                if let Some(l) = launch {
+                    write!(f, " (launch {l})")?;
+                }
+                write!(f, ": {diagnostic}")
+            }
             Error::DependencyFailed { launch, dep, dep_device } => {
                 write!(f, "launch {launch} abandoned: dependency launch {dep} failed")?;
                 if let Some(d) = dep_device {
@@ -193,6 +210,17 @@ mod tests {
             (Error::Channel("double ack".into()), "channel error: double ack"),
             (Error::Coordinator("unknown kernel".into()), "coordinator error: unknown kernel"),
             (
+                Error::Analysis { launch: None, diagnostic: "code too big".into() },
+                "analysis error: code too big",
+            ),
+            (
+                Error::Analysis {
+                    launch: Some(2),
+                    diagnostic: "writes [0, 1) of read-only arg 0".into(),
+                },
+                "analysis error (launch 2): writes [0, 1) of read-only arg 0",
+            ),
+            (
                 Error::DependencyFailed { launch: 9, dep: 4, dep_device: None },
                 "launch 9 abandoned: dependency launch 4 failed",
             ),
@@ -228,6 +256,7 @@ mod tests {
             Error::Memory("x".into()),
             Error::Channel("x".into()),
             Error::Coordinator("x".into()),
+            Error::Analysis { launch: None, diagnostic: "x".into() },
             Error::DependencyFailed { launch: 1, dep: 0, dep_device: None },
             Error::Overloaded { tenant: 0, capacity: 1 },
             Error::Runtime("x".into()),

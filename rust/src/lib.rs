@@ -52,6 +52,12 @@
 //! * [`workloads`] — the paper's benchmarks: the lung-scan neural-network
 //!   training benchmark (Figs. 3–4), LINPACK (Table 1) and the synthetic
 //!   stall-time probe (Table 2).
+//! * [`analysis`] — the static launch verifier: an abstract interpreter
+//!   over the kernel bytecode infers per-argument read/write windows,
+//!   powering under-declared-flow and `.independent()`-conflict lints at
+//!   submit ([`coordinator::SessionBuilder`]`::verify`), per-technology
+//!   code/scratch budget checks at kernel registration, the whole-graph
+//!   pre-flight `Session::verify_graph()`, and `microcore analyze`.
 //!
 //! ## Quick start
 //!
@@ -100,6 +106,7 @@
 // the build rather than silently accruing.
 #![warn(missing_docs)]
 
+pub mod analysis;
 pub mod bench_support;
 pub mod channel;
 pub mod cli;

@@ -7,6 +7,9 @@
 //! * `stall`    — Table 2 (synthetic stall-time probe).
 //! * `fleet`    — multi-tenant serving over a bounded device pool
 //!   (latency percentiles, fairness, utilization).
+//! * `analyze`  — static launch verifier sweep over every shipped kernel:
+//!   per-argument inferred read/write windows, per-technology code and
+//!   scratch budgets; exits non-zero on any error-severity finding.
 //! * `info`     — technology presets and memory hierarchy facts.
 //!
 //! See `--help` for flags; each bench target under `benches/` regenerates
@@ -59,7 +62,7 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
 
     let Some(args) = cli.parse(argv)? else {
         println!("{}", cli.help());
-        println!("Subcommands: mlbench | linpack | stall | fleet | info");
+        println!("Subcommands: mlbench | linpack | stall | fleet | analyze | info");
         return Ok(());
     };
     let cmd = args.positional.first().map(String::as_str).unwrap_or("info");
@@ -368,6 +371,59 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
                 report.total_completed(),
                 report.total_rejected(),
                 groups * devices,
+                tech.name
+            );
+            Ok(())
+        }
+        "analyze" => {
+            let tech = tech_of(&args)?;
+            let mut t = Table::new(
+                format!("Static analysis — shipped kernel inventory on {}", tech.name),
+                &["kernel", "code B", "arg", "reads", "writes"],
+            );
+            let mut diags = Vec::new();
+            for (name, src) in microcore::workloads::kernel_inventory() {
+                let k = microcore::coordinator::Kernel::compile(name, src, None)?;
+                diags.extend(microcore::analysis::check_kernel_budget(
+                    k.name(),
+                    &k.program,
+                    &tech,
+                ));
+                let summary = microcore::analysis::analyze_program(&k.program);
+                let cell = |w: &Option<(microcore::analysis::Interval, bool)>| match w {
+                    None => "-".to_string(),
+                    Some((iv, approx)) => {
+                        format!("{iv}{}", if *approx { " ~" } else { "" })
+                    }
+                };
+                for (i, a) in summary.args.iter().enumerate() {
+                    t.row(&[
+                        if i == 0 { name.to_string() } else { String::new() },
+                        if i == 0 { k.code_bytes().to_string() } else { String::new() },
+                        format!("{i}{}", if summary.fallback { " (fallback)" } else { "" }),
+                        cell(&a.read),
+                        cell(&a.write),
+                    ]);
+                }
+            }
+            print!("{}", t.render());
+            if !diags.is_empty() {
+                print!(
+                    "{}",
+                    microcore::metrics::report::analysis_table("verifier diagnostics", &diags)
+                        .render()
+                );
+            }
+            let errors = diags
+                .iter()
+                .filter(|d| d.severity == microcore::analysis::Severity::Error)
+                .count();
+            if errors > 0 {
+                anyhow::bail!("static analysis found {errors} error-severity finding(s)");
+            }
+            println!(
+                "analysis clean: {} kernels within {} budgets, no error findings",
+                microcore::workloads::kernel_inventory().len(),
                 tech.name
             );
             Ok(())

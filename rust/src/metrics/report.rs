@@ -162,6 +162,23 @@ pub fn f3(v: f64) -> String {
     format!("{v:.3}")
 }
 
+/// Static-verifier diagnostics table (one row per
+/// [`crate::analysis::Diagnostic`]) — how `microcore analyze` and the CI
+/// lint step render the analyzer's findings. Launch-less diagnostics
+/// (registration-time budget checks) show `-` in the launch column.
+pub fn analysis_table(title: impl Into<String>, diags: &[crate::analysis::Diagnostic]) -> Table {
+    let mut t = Table::new(title, &["severity", "kernel", "launch", "finding"]);
+    for d in diags {
+        t.row(&[
+            d.severity.to_string(),
+            d.kernel.clone(),
+            d.launch.map_or_else(|| "-".to_string(), |l| l.to_string()),
+            d.message.clone(),
+        ]);
+    }
+    t
+}
+
 /// Per-kernel-class latency table for a fleet run: served count and
 /// nearest-rank p50/p95/p99 plus mean, in milliseconds of virtual time
 /// (see [`crate::fleet::FleetReport`]). One row per class that saw
@@ -286,6 +303,30 @@ mod tests {
         let u = fleet_util_table("util", &r).render();
         assert!(u.contains("0.500"), "busy fraction: {u}");
         assert!(u.contains("50.000"), "busy ms: {u}");
+    }
+
+    #[test]
+    fn analysis_table_renders_severity_and_launch_column() {
+        let diags = vec![
+            crate::analysis::Diagnostic {
+                severity: crate::analysis::Severity::Error,
+                kernel: "boom".into(),
+                launch: Some(3),
+                message: "writes [0, 1) of read-only arg 0".into(),
+            },
+            crate::analysis::Diagnostic {
+                severity: crate::analysis::Severity::Warning,
+                kernel: "big".into(),
+                launch: None,
+                message: "over budget".into(),
+            },
+        ];
+        let s = analysis_table("verifier", &diags).render();
+        assert!(s.contains("error"), "{s}");
+        assert!(s.contains("warning"), "{s}");
+        assert!(s.contains("boom"), "{s}");
+        assert!(s.contains('-'), "launch-less row renders a dash: {s}");
+        assert_eq!(analysis_table("empty", &[]).len(), 0);
     }
 
     #[test]

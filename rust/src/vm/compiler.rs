@@ -443,7 +443,14 @@ def mykernel(a, b):
         assert_eq!(p.arity(), 2);
         assert_eq!(p.entry_fn().name, "mykernel");
         assert!(p.entry_fn().code.len() > 10);
-        assert!(p.entry_fn().code_bytes() < 8 * 1024, "fits user-code budget");
+        // The analyzer's per-technology budget check replaces the former
+        // ad-hoc "< 8 KB" assert: Listing 1 must fit the tightest preset.
+        let diags = crate::analysis::check_kernel_budget(
+            "mykernel",
+            &p,
+            &crate::device::Technology::epiphany3(),
+        );
+        assert!(diags.is_empty(), "{diags:?}");
     }
 
     #[test]

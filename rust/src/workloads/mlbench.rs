@@ -74,7 +74,9 @@ use crate::sim::{CacheCounters, Rng, StagingCounters, Time};
 use super::scans::ScanGenerator;
 
 /// Feed-forward kernel: stream the shard, accumulate `W @ x` per chunk.
-const FF_SRC: &str = r#"
+/// Public so the `microcore analyze` inventory can lint every shipped
+/// kernel source against each technology's budgets and declared flows.
+pub const FF_SRC: &str = r#"
 def ff(w, x, n, chunk, h):
     acc = [0.0] * h
     buf = [0.0] * chunk
@@ -90,7 +92,8 @@ def ff(w, x, n, chunk, h):
 "#;
 
 /// Combine-gradients kernel: re-stream the shard, accumulate outer tiles.
-const GRAD_SRC: &str = r#"
+/// Public for the `microcore analyze` kernel inventory.
+pub const GRAD_SRC: &str = r#"
 def grad(dh, x, g, n, chunk):
     buf = [0.0] * chunk
     i = 0
@@ -105,7 +108,8 @@ def grad(dh, x, g, n, chunk):
 "#;
 
 /// Model-update kernel: tile SGD steps; touches no image data.
-const UPD_SRC: &str = r#"
+/// Public for the `microcore analyze` kernel inventory.
+pub const UPD_SRC: &str = r#"
 def upd(w, g, lr, n, chunk):
     i = 0
     while i < n:

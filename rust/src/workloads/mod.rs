@@ -32,6 +32,22 @@ pub mod scans;
 pub mod stall;
 
 pub use linpack::{linpack_row, LinpackRow};
+
+/// Every kernel source this crate ships, as `(name, source)` pairs — the
+/// inventory the `microcore analyze` subcommand (and the CI lint step)
+/// sweeps: each kernel is compiled, budget-checked against the selected
+/// technology, and flow-analyzed by [`crate::analysis`].
+pub fn kernel_inventory() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("ff", mlbench::FF_SRC),
+        ("grad", mlbench::GRAD_SRC),
+        ("upd", mlbench::UPD_SRC),
+        ("sgd", mlbench::SGD_STEP_SRC),
+        ("norm", scans::NORM_SRC),
+        ("total", scans::SUM_SRC),
+        ("linpack", linpack::LINPACK_VM_SRC),
+    ]
+}
 pub use mlbench::{
     dual_half_epochs, hetero_mlbench, single_replica_epochs, DualHalfOutcome, HeteroOutcome,
     MlBench, MlBenchConfig, MlBenchResult, PhaseTimes, SingleReplicaOutcome,

@@ -711,6 +711,152 @@ fn prop_launch_dag_fault_recovery_is_value_transparent() {
     assert!(fired.get() > 0, "no fault in the whole seed set ever fired — plan horizon broken?");
 }
 
+/// `drive_dag` under `VerifyLevel::Warn` with runtime access recording on:
+/// submits everything, takes the whole-graph report *before* any wait
+/// (waits retire launches from the table), then waits every launch —
+/// per-launch errors (Boom, poisoned dependents) are part of the outcome
+/// set, not a driver failure.
+fn drive_dag_analyzed(
+    spec: &DagSpec,
+) -> Result<(Session, microcore::coordinator::GraphReport, DagOutcomes), String> {
+    let mut sess = Session::builder(Technology::epiphany3())
+        .seed(7)
+        .trace(4096)
+        .verify(microcore::coordinator::VerifyLevel::Warn)
+        .build()
+        .map_err(|e| e.to_string())?;
+    sess.engine_mut().set_record_accesses(true);
+    let mut bufs = Vec::new();
+    for (i, &l) in spec.buf_lens.iter().enumerate() {
+        bufs.push(
+            sess.alloc(MemSpec::host(format!("b{i}")).from(&vec![1.0; l]))
+                .map_err(|e| e.to_string())?,
+        );
+    }
+    sess.compile_kernel("r", DAG_READER).map_err(|e| e.to_string())?;
+    sess.compile_kernel("w", DAG_WRITER).map_err(|e| e.to_string())?;
+    sess.compile_kernel("b", DAG_BOOM).map_err(|e| e.to_string())?;
+    let mut handles = Vec::new();
+    for l in &spec.launches {
+        let dref = bufs[l.buf].slice(l.window.0, l.window.1);
+        let (name, arg) = match l.kernel {
+            DagKernel::Reader => ("r", ArgSpec::sharded(dref)),
+            DagKernel::Writer => ("w", ArgSpec::sharded_mut(dref)),
+            DagKernel::Boom => ("b", ArgSpec::sharded(dref)),
+        };
+        let mut b = sess
+            .launch_named(name)
+            .map_err(|e| e.to_string())?
+            .arg(arg)
+            .mode(TransferMode::OnDemand)
+            .cores(l.cores.clone());
+        for &d in &l.after {
+            b = b.after(handles[d]);
+        }
+        handles.push(b.submit().map_err(|e| e.to_string())?);
+    }
+    let report = sess.verify_graph();
+    let mut outcomes: DagOutcomes = Vec::new();
+    for h in &handles {
+        outcomes.push(h.wait(&mut sess));
+    }
+    Ok((sess, report, outcomes))
+}
+
+/// The analyzer's soundness differential (engine invariant 12): for any
+/// random DAG, (a) the pure dependency oracle's edges all appear in the
+/// report's declared set, (b) the declared set is contained in the
+/// inferred set, (c) **every** external access the VM actually performed
+/// lies inside a statically inferred window of its launch with a
+/// compatible write flag, and (d) every spec containing a `Boom` kernel
+/// (a definite write through a read-only binding) earns at least one
+/// error-severity under-declaration diagnostic. 200 seeds in tier-1;
+/// `MICROCORE_FUZZ_ANALYZE=1` selects the 1000-case nightly sweep
+/// (`MICROCORE_FUZZ_CASES` overrides for local bisection).
+#[test]
+fn prop_launch_dag_analyzer_is_sound() {
+    let cases = if std::env::var("MICROCORE_FUZZ_ANALYZE").is_ok_and(|v| v == "1") {
+        1000
+    } else {
+        std::env::var("MICROCORE_FUZZ_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(200)
+    };
+    let booms = std::cell::Cell::new(0u64);
+    let accesses = std::cell::Cell::new(0u64);
+    check("launch-dag-analyzer-soundness", 0xDA6_0005, cases, |g: &mut Gen| {
+        let cfg =
+            DagConfig { max_launches: 5, device_cores: 16, serialize: false, failures: true };
+        let spec = gen_dag(g, &cfg);
+        let (sess, report, _outcomes) = drive_dag_analyzed(&spec)?;
+        if report.skipped != 0 {
+            return Err(format!(
+                "pre-flight saw {} skipped launches before anything ran\nspec: {spec:?}",
+                report.skipped
+            ));
+        }
+        // (a) The pure oracle's edge set is declared. The oracle mirrors
+        // the scheduler's hull inference exactly, so this is equality in
+        // practice; containment is the soundness direction.
+        for i in 0..spec.launches.len() {
+            for &d in &spec.edges(i) {
+                let edge = (d as u64, i as u64);
+                if !report.declared_edges.contains(&edge) {
+                    return Err(format!(
+                        "oracle edge {edge:?} missing from declared set \
+                         {:?}\nspec: {spec:?}",
+                        report.declared_edges
+                    ));
+                }
+            }
+        }
+        // (b) Declared ⊆ inferred (the verifier's construction guarantee).
+        for e in &report.declared_edges {
+            if !report.inferred_edges.contains(e) {
+                return Err(format!(
+                    "declared edge {e:?} missing from inferred set {:?}\nspec: {spec:?}",
+                    report.inferred_edges
+                ));
+            }
+        }
+        // (c) Soundness: every runtime access sits inside an inferred
+        // window of its launch (a write needs a write window; a read is
+        // covered by either kind — write windows imply read-back).
+        for rec in sess.engine().observed_accesses() {
+            accesses.set(accesses.get() + 1);
+            let Some(lr) = report.launches.iter().find(|l| l.launch == rec.launch) else {
+                return Err(format!(
+                    "access {rec:?} by a launch absent from the report\nspec: {spec:?}"
+                ));
+            };
+            let covered = lr.windows.iter().any(|w| {
+                w.buf == rec.buf && w.lo <= rec.lo && rec.hi <= w.hi && (!rec.write || w.write)
+            });
+            if !covered {
+                return Err(format!(
+                    "unsound: runtime access {rec:?} outside every inferred window \
+                     {:?}\nspec: {spec:?}",
+                    lr.windows
+                ));
+            }
+        }
+        // (d) Every Boom spec earns an error-severity under-declaration.
+        if spec.launches.iter().any(|l| matches!(l.kernel, DagKernel::Boom)) {
+            booms.set(booms.get() + 1);
+            let has_error = report.diagnostics.iter().any(|d| {
+                d.severity == microcore::analysis::Severity::Error && d.kernel == "b"
+            });
+            if !has_error {
+                return Err(format!(
+                    "Boom spec produced no error diagnostic: {:?}\nspec: {spec:?}",
+                    report.diagnostics
+                ));
+            }
+        }
+        Ok(())
+    });
+    assert!(booms.get() > 0, "no Boom spec in the whole seed set — generator drifted?");
+    assert!(accesses.get() > 0, "no runtime access was ever recorded — recording broken?");
+}
+
 // ---------------------------------------------------------------------------
 // Fleet serving fuzzer: seeded multi-tenant scenarios (testkit::fleet) over
 // real device pools. Two properties pin the serving layer's contract

@@ -1,0 +1,198 @@
+//! Integration tests for the static launch verifier: submit-time lints
+//! under `Warn`/`Strict`, the whole-graph pre-flight, and the guarantee
+//! that verification never changes what (or when) anything runs.
+
+use microcore::analysis::Severity;
+use microcore::coordinator::{ArgSpec, Session, TransferMode, VerifyLevel};
+use microcore::device::Technology;
+use microcore::memory::MemSpec;
+
+const READER: &str = r#"
+def r(a):
+    s = 0.0
+    i = 0
+    while i < len(a):
+        s += a[i]
+        i += 1
+    return s
+"#;
+
+const WRITER: &str = r#"
+def w(a):
+    i = 0
+    while i < len(a):
+        a[i] = a[i] + 1.0
+        i += 1
+    return 0
+"#;
+
+/// Writes through its argument unconditionally — bound read-only below,
+/// the canonical under-declared flow.
+const BOOM: &str = "def b(a):\n    a[0] = 1.0\n    return 0\n";
+
+fn session(level: VerifyLevel) -> Session {
+    Session::builder(Technology::epiphany3())
+        .seed(7)
+        .trace(2048)
+        .verify(level)
+        .build()
+        .unwrap()
+}
+
+/// An `.independent()` launch whose inferred flows conflict with an
+/// in-flight writer draws a warning diagnostic — and still runs: the
+/// lint reports the race the scheduler was told to ignore, it never
+/// reinstates the edge.
+#[test]
+fn independent_conflicting_pair_warns_and_still_runs() {
+    let mut s = session(VerifyLevel::Warn);
+    let a = s.alloc(MemSpec::host("a").from(&vec![1.0; 64])).unwrap();
+    s.compile_kernel("w", WRITER).unwrap();
+    s.compile_kernel("r", READER).unwrap();
+    let h1 = s
+        .launch_named("w")
+        .unwrap()
+        .arg(ArgSpec::sharded_mut(a))
+        .mode(TransferMode::OnDemand)
+        .submit()
+        .unwrap();
+    let h2 = s
+        .launch_named("r")
+        .unwrap()
+        .arg(ArgSpec::sharded(a))
+        .mode(TransferMode::OnDemand)
+        .independent()
+        .submit()
+        .unwrap();
+    let diags = s.take_diagnostics();
+    assert!(
+        diags.iter().any(|d| d.severity == Severity::Warning
+            && d.message.contains("independent")
+            && d.launch == Some(h2.id().raw())),
+        "expected an independent-conflict warning, got {diags:?}"
+    );
+    // Both launches complete despite the warning.
+    h1.wait(&mut s).unwrap();
+    h2.wait(&mut s).unwrap();
+    // Same pair at Strict: the conflict lint stays a warning (racing is
+    // legal under §3.3's weak model — the user opted out explicitly), so
+    // Strict accepts it too.
+    let mut st = session(VerifyLevel::Strict);
+    let b = st.alloc(MemSpec::host("b").from(&vec![1.0; 64])).unwrap();
+    st.compile_kernel("w", WRITER).unwrap();
+    let g1 = st
+        .launch_named("w")
+        .unwrap()
+        .arg(ArgSpec::sharded_mut(b))
+        .mode(TransferMode::OnDemand)
+        .submit()
+        .unwrap();
+    let g2 = st
+        .launch_named("w")
+        .unwrap()
+        .arg(ArgSpec::sharded_mut(b))
+        .mode(TransferMode::OnDemand)
+        .independent()
+        .submit()
+        .unwrap();
+    g1.wait(&mut st).unwrap();
+    g2.wait(&mut st).unwrap();
+}
+
+/// `Warn` must be observationally identical to `Off` for clean and dirty
+/// kernels alike: same results, same virtual times, same trace —
+/// verification only ever *adds* diagnostics.
+#[test]
+fn warn_level_is_bit_identical_to_off() {
+    let run = |level: VerifyLevel| {
+        let mut s = session(level);
+        let a = s.alloc(MemSpec::host("a").from(&vec![2.0; 48])).unwrap();
+        s.compile_kernel("w", WRITER).unwrap();
+        s.compile_kernel("r", READER).unwrap();
+        let h1 = s
+            .launch_named("w")
+            .unwrap()
+            .arg(ArgSpec::sharded_mut(a))
+            .mode(TransferMode::OnDemand)
+            .submit()
+            .unwrap();
+        let h2 = s
+            .launch_named("r")
+            .unwrap()
+            .arg(ArgSpec::sharded(a))
+            .mode(TransferMode::OnDemand)
+            .submit()
+            .unwrap();
+        let r1 = h1.wait(&mut s).unwrap();
+        let r2 = h2.wait(&mut s).unwrap();
+        let vals: Vec<String> = r2.reports.iter().map(|c| format!("{:?}", c.value)).collect();
+        (r1.finished_at, r2.finished_at, vals, s.read(a).unwrap(), s.now(), s.engine().trace().render())
+    };
+    assert_eq!(run(VerifyLevel::Off), run(VerifyLevel::Warn));
+}
+
+/// Whole-graph pre-flight on a RAW pair: the declared edge is present,
+/// declared ⊆ inferred, and the under-declared writer's report pins its
+/// definite `[0, 1)` write window.
+#[test]
+fn verify_graph_reports_edges_and_windows() {
+    let mut s = session(VerifyLevel::Warn);
+    let a = s.alloc(MemSpec::host("a").from(&vec![1.0; 32])).unwrap();
+    s.compile_kernel("w", WRITER).unwrap();
+    s.compile_kernel("r", READER).unwrap();
+    s.compile_kernel("b", BOOM).unwrap();
+    let hw = s
+        .launch_named("w")
+        .unwrap()
+        .arg(ArgSpec::sharded_mut(a))
+        .mode(TransferMode::OnDemand)
+        .cores(vec![0])
+        .submit()
+        .unwrap();
+    let hr = s
+        .launch_named("r")
+        .unwrap()
+        .arg(ArgSpec::sharded(a))
+        .mode(TransferMode::OnDemand)
+        .cores(vec![0])
+        .submit()
+        .unwrap();
+    let hb = s
+        .launch_named("b")
+        .unwrap()
+        .arg(ArgSpec::sharded(a.slice(0, 8)))
+        .mode(TransferMode::OnDemand)
+        .cores(vec![1])
+        .submit()
+        .unwrap();
+    let report = s.verify_graph();
+    assert_eq!(report.skipped, 0);
+    assert_eq!(report.launches.len(), 3);
+    let raw = (hw.id().raw(), hr.id().raw());
+    assert!(report.declared_edges.contains(&raw), "RAW edge declared: {report:?}");
+    for e in &report.declared_edges {
+        assert!(report.inferred_edges.contains(e), "declared ⊆ inferred: {report:?}");
+    }
+    // Boom on one core over view [0, 8): a definite one-element write at
+    // the view base, and an error diagnostic naming the launch.
+    let boom = report.launches.iter().find(|l| l.kernel == "b").unwrap();
+    assert!(
+        boom.windows.iter().any(|w| w.write && !w.approx && w.lo == 0 && w.hi == 1),
+        "expected the definite [0, 1) write window: {boom:?}"
+    );
+    assert!(
+        report
+            .diagnostics
+            .iter()
+            .any(|d| d.severity == Severity::Error && d.launch == Some(hb.id().raw())),
+        "expected the under-declaration error: {:?}",
+        report.diagnostics
+    );
+    assert!(report.has_errors());
+    hw.wait(&mut s).unwrap();
+    hr.wait(&mut s).unwrap();
+    // Boom itself fails at runtime with the read-only write rejection —
+    // the launch graph and the verifier agree on why.
+    let err = hb.wait(&mut s).unwrap_err().to_string();
+    assert!(err.contains("read-only"), "{err}");
+}

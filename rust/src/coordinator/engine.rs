@@ -108,7 +108,10 @@ use crate::error::{Error, Result};
 use crate::memory::{DataRef, Level, MemRegistry};
 use crate::runtime::ModelExecutor;
 use crate::sim::{CacheCounters, FaultCounters, FaultPlan, Rng, Time, Trace};
-use crate::vm::{Builtin, CostCounters, Interp, Outcome, TensorOp, Value, VmSnapshot};
+use crate::vm::{
+    lower_program, Builtin, CostCounters, Interp, LinearProgram, Outcome, TensorOp, TierChoice,
+    Value, VmSnapshot,
+};
 
 use super::marshal::BoundArg;
 use super::offload::{CoreReport, Kernel, OffloadOptions, OffloadResult};
@@ -208,6 +211,67 @@ impl QueueStats {
         self.completed += other.completed;
     }
 }
+
+/// Per-tier execution accounting ([`Engine::tier_counters`]) — how much
+/// work ran on the interpreter vs the compiled linear-IR tier (see
+/// [`crate::vm::tier`]), plus the tier selector's decisions. Kept out of
+/// [`EngineStats`] deliberately: tier choice never changes numerics, and
+/// the differential suites pin `EngineStats` bit-for-bit.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TierCounters {
+    /// Launch activations that ran on the interpreter tier.
+    pub interp_launches: u64,
+    /// Launch activations that ran on the compiled tier.
+    pub compiled_launches: u64,
+    /// Bytecode dispatches retired by interpreter-tier launches.
+    pub interp_dispatches: u64,
+    /// Bytecode-equivalent dispatches retired by compiled-tier launches
+    /// (the compiled tier charges the same weights, so the two dispatch
+    /// columns are directly comparable).
+    pub compiled_dispatches: u64,
+    /// Distinct kernel programs lowered to the linear IR (each is lowered
+    /// once and cached by program identity).
+    pub lowered_kernels: u64,
+    /// `Auto` launches the heuristic promoted to the compiled tier.
+    pub auto_promotions: u64,
+    /// Compiled-tier requests demoted back to the interpreter because the
+    /// lowered image would not fit the core's local store.
+    pub budget_demotions: u64,
+}
+
+impl TierCounters {
+    /// Field-wise accumulate of another snapshot — how the multi-device
+    /// [`crate::coordinator::GroupSession`] aggregates per-engine tier
+    /// breakdowns (same idiom as [`QueueStats::merge`]).
+    pub fn merge(&mut self, other: &TierCounters) {
+        self.interp_launches += other.interp_launches;
+        self.compiled_launches += other.compiled_launches;
+        self.interp_dispatches += other.interp_dispatches;
+        self.compiled_dispatches += other.compiled_dispatches;
+        self.lowered_kernels += other.lowered_kernels;
+        self.auto_promotions += other.auto_promotions;
+        self.budget_demotions += other.budget_demotions;
+    }
+}
+
+/// Per-program launch/dispatch history driving [`TierChoice::Auto`]
+/// promotion (keyed by program identity, like the summary cache).
+#[derive(Debug, Clone, Copy, Default)]
+struct TierHeat {
+    /// Times this program was submitted.
+    launches: u64,
+    /// Dispatches retired by completed launches of this program.
+    dispatches: u64,
+}
+
+/// `Auto` compiles a kernel once it is submitted this many times (a
+/// repeated launch amortizes the one-time lowering).
+const AUTO_COMPILE_LAUNCHES: u64 = 2;
+
+/// `Auto` also compiles a kernel whose completed launches have already
+/// retired this many dispatches (a single hot kernel earns the tier
+/// without repetition).
+const AUTO_COMPILE_DISPATCHES: u64 = 50_000;
 
 /// Event-heap sentinel in the core-position slot: the event activates the
 /// launch (stages it onto its now-free cores) instead of stepping a core.
@@ -714,6 +778,13 @@ pub struct Engine {
     /// Kernel-summary cache keyed by program identity (`Rc::as_ptr`), so
     /// re-launching the same kernel never re-runs the fixpoint.
     summaries: HashMap<usize, Rc<KernelSummary>>,
+    /// Lowered linear-IR cache keyed by program identity — each program is
+    /// lowered at most once, then shared by every compiled-tier launch.
+    lowered: HashMap<usize, Rc<LinearProgram>>,
+    /// Per-program launch/dispatch history for [`TierChoice::Auto`].
+    tier_heat: HashMap<usize, TierHeat>,
+    /// Per-tier execution accounting ([`Engine::tier_counters`]).
+    tiers: TierCounters,
 }
 
 /// Submit-time diagnostics kept before older ones are dropped (bounds
@@ -776,6 +847,9 @@ impl Engine {
             record_accesses: false,
             observed: Vec::new(),
             summaries: HashMap::new(),
+            lowered: HashMap::new(),
+            tier_heat: HashMap::new(),
+            tiers: TierCounters::default(),
         }
     }
 
@@ -844,6 +918,58 @@ impl Engine {
             .entry(key)
             .or_insert_with(|| Rc::new(crate::analysis::analyze_program(&kernel.program)))
             .clone()
+    }
+
+    /// Lowered linear IR for a kernel's program, computed once per
+    /// distinct program (same identity-keyed cache as [`Self::summary_for`]).
+    fn lowered_for(&mut self, kernel: &Kernel) -> Rc<LinearProgram> {
+        let key = Rc::as_ptr(&kernel.program) as usize;
+        if !self.lowered.contains_key(&key) {
+            self.tiers.lowered_kernels += 1;
+            self.lowered.insert(key, Rc::new(lower_program(&kernel.program)));
+        }
+        self.lowered[&key].clone()
+    }
+
+    /// Resolve the requested execution tier to a concrete one at submit
+    /// time. `Auto` promotes once the program's history crosses either
+    /// heuristic threshold ([`AUTO_COMPILE_LAUNCHES`] submissions or
+    /// [`AUTO_COMPILE_DISPATCHES`] retired dispatches); any compiled
+    /// choice is demoted back to the interpreter if the lowered image
+    /// plus launch frame would overflow the core's local store — the
+    /// same budget the static verifier lints
+    /// ([`crate::analysis::lint`]'s kernel-budget check), applied to the
+    /// image that would actually be pushed.
+    fn resolve_tier(&mut self, kernel: &Kernel, choice: TierChoice) -> TierChoice {
+        let key = Rc::as_ptr(&kernel.program) as usize;
+        let heat = self.tier_heat.entry(key).or_default();
+        heat.launches += 1;
+        let mut tier = match choice {
+            TierChoice::Auto => {
+                if heat.launches >= AUTO_COMPILE_LAUNCHES
+                    || heat.dispatches >= AUTO_COMPILE_DISPATCHES
+                {
+                    self.tiers.auto_promotions += 1;
+                    TierChoice::Compiled
+                } else {
+                    TierChoice::Interp
+                }
+            }
+            t => t,
+        };
+        if tier == TierChoice::Compiled {
+            let lp = self.lowered_for(kernel);
+            if lp.code_bytes() + FRAME_HEADER_BYTES > self.tech.local_store {
+                self.tiers.budget_demotions += 1;
+                tier = TierChoice::Interp;
+            }
+        }
+        tier
+    }
+
+    /// Per-tier execution accounting accumulated so far.
+    pub fn tier_counters(&self) -> TierCounters {
+        self.tiers
     }
 
     /// Whole-graph pre-flight: re-derive the scheduler's edge set from the
@@ -1206,6 +1332,13 @@ impl Engine {
         }
         deps.sort_unstable();
         deps.dedup();
+
+        // ---- execution-tier resolution ----
+        // `Auto` resolves to a concrete tier *now* and the resolved tier is
+        // what the launch records, so fault-retry re-activations and
+        // harvested-checkpoint migrations replay the same tier.
+        let mut options = options.clone();
+        options.tier = self.resolve_tier(kernel, options.tier);
 
         self.next_launch += 1;
         self.launches.push(Launch {
@@ -1793,13 +1926,32 @@ impl Engine {
         let mut spills = 0u64;
         let mut cores: Vec<CoreRun> = Vec::with_capacity(core_ids.len());
 
+        // Compiled-tier launches push the *lowered* image (pre-resolved
+        // linear IR, typically wider per instruction but fewer of them) —
+        // MemKind placement and transfer costing see the bytes that
+        // actually travel. The tier was resolved at submit, so the budget
+        // demotion already guaranteed this image fits the local store.
+        let lowered = if options.tier == TierChoice::Compiled {
+            Some(self.lowered_for(&kernel))
+        } else {
+            None
+        };
+        let image_bytes = match &lowered {
+            Some(lp) => lp.code_bytes(),
+            None => kernel.code_bytes(),
+        };
+        match options.tier {
+            TierChoice::Compiled => self.tiers.compiled_launches += 1,
+            _ => self.tiers.interp_launches += 1,
+        }
+
         // ---- launch: code push, eager copies, reference binding ----
         for (pos, (&cid, args)) in core_ids.iter().zip(bound).enumerate() {
             let mut spad =
                 Scratchpad::new(cid, self.tech.local_store, self.tech.vm_footprint);
-            // Kernel byte code + launch frame travel to every core via the
+            // Kernel code image + launch frame travel to every core via the
             // direct path (the §5.1 "new data transfer mechanism").
-            let code_bytes = (kernel.code_bytes() + FRAME_HEADER_BYTES) as u64;
+            let code_bytes = (image_bytes + FRAME_HEADER_BYTES) as u64;
             let mut start = self.service.push_code(launch, code_bytes);
             self.stats.eager_bytes += code_bytes;
 
@@ -1899,6 +2051,9 @@ impl Engine {
                 values,
                 ext_lens,
             )?;
+            if let Some(lp) = &lowered {
+                vm.attach_lowered(lp.clone());
+            }
             vm.set_fuel(options.fuel);
             let last_counters = vm.counters();
             let mut c = CoreRun {
@@ -2031,6 +2186,8 @@ impl Engine {
         let launch = self.launches[li].launched_at;
         let core_ids = self.launches[li].core_ids.clone();
         let spills = self.launches[li].spills;
+        let tier = self.launches[li].options.tier;
+        let heat_key = Rc::as_ptr(&self.launches[li].kernel.program) as usize;
         let mut cores: Vec<CoreRun> = self.launches[li]
             .cores
             .drain(..)
@@ -2059,12 +2216,20 @@ impl Engine {
             // queued launch can start on it as early as possible.
             self.core_owner[c.id] = None;
             self.core_free[c.id] = c.finished_at;
+            let counters = c.vm.counters();
+            // Per-tier dispatch accounting, plus heat feedback so `Auto`
+            // can promote a single hot kernel on its dispatch volume.
+            match tier {
+                TierChoice::Compiled => self.tiers.compiled_dispatches += counters.dispatches,
+                _ => self.tiers.interp_dispatches += counters.dispatches,
+            }
+            self.tier_heat.entry(heat_key).or_default().dispatches += counters.dispatches;
             reports.push(CoreReport {
                 core: c.id,
                 value: c.result.take().unwrap_or(Value::None),
                 finished_at: c.finished_at,
                 stall: c.stall,
-                counters: c.vm.counters(),
+                counters,
                 requests: c.channel.issued(),
                 peak_cells: c.channel.peak_occupancy(),
                 cell_stalls: c.channel.stalls(),

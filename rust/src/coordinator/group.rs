@@ -113,12 +113,12 @@ use crate::error::{Error, Result};
 use crate::memory::{DataRef, Level, MemPlace, MemSpec};
 use crate::sim::{CacheCounters, FaultCounters, FaultPlan, StagingCounters, Time};
 
-use super::engine::{LaunchCheckpoint, LaunchId, LaunchStatus, QueueStats};
+use super::engine::{LaunchCheckpoint, LaunchId, LaunchStatus, QueueStats, TierCounters};
 use super::marshal::{ArgSpec, PrefetchChoice};
 use super::offload::{OffloadOptions, OffloadResult};
 use super::prefetch::PrefetchSpec;
 use super::session::{OffloadHandle, Session};
-use super::{Access, TransferMode};
+use super::{Access, TierChoice, TransferMode};
 
 /// Index of a device within a [`GroupSession`] (attachment order on the
 /// [`DeviceGroup`] builder).
@@ -418,6 +418,10 @@ struct RelaunchSpec {
     prefetch: Option<PrefetchSpec>,
     fuel: Option<u64>,
     backoff: Time,
+    /// Execution tier of the original submission — migration resumes the
+    /// launch on the same tier it started on (checkpoints are
+    /// tier-portable, but keeping the tier keeps the accounting honest).
+    tier: TierChoice,
 }
 
 /// Outcome of making one buffer fresh on the launching device.
@@ -547,6 +551,17 @@ impl GroupSession {
         total
     }
 
+    /// Per-tier execution accounting summed over every device engine
+    /// ([`TierCounters::merge`] of each session's
+    /// [`Session::tier_counters`]).
+    pub fn tier_counters(&self) -> TierCounters {
+        let mut total = TierCounters::default();
+        for s in &self.sessions {
+            total.merge(&s.tier_counters());
+        }
+        total
+    }
+
     /// Allocate a group buffer: one replica per device, identical
     /// contents. Group buffers must live at the **Host level or above**
     /// (plain [`MemPlace::Host`] or cache-fronted
@@ -658,6 +673,7 @@ impl GroupSession {
             retry: 0,
             backoff: 0,
             tenant: None,
+            tier: TierChoice::Interp,
         })
     }
 
@@ -864,7 +880,8 @@ impl GroupSession {
             .transfer(spec.mode)
             .not_before(floor)
             .retry(left.saturating_sub(1))
-            .backoff(spec.backoff);
+            .backoff(spec.backoff)
+            .tier(spec.tier);
         if let Some(p) = spec.prefetch.clone() {
             options = options.prefetch(p);
         }
@@ -1038,6 +1055,7 @@ pub struct GroupLaunchBuilder<'g> {
     retry: u32,
     backoff: Time,
     tenant: Option<u64>,
+    tier: TierChoice,
 }
 
 impl GroupLaunchBuilder<'_> {
@@ -1112,6 +1130,16 @@ impl GroupLaunchBuilder<'_> {
         self
     }
 
+    /// Select the launch's execution tier
+    /// ([`super::OffloadOptions::tier`]): interpreter (default), compiled
+    /// linear IR, or `Auto`. Bit-identical results either way; a
+    /// retry-budgeted launch migrated to another device resumes on the
+    /// same tier.
+    pub fn tier(mut self, tier: TierChoice) -> Self {
+        self.tier = tier;
+        self
+    }
+
     /// Add an explicit dependency edge on an earlier group launch.
     /// Explicit edges live inside one engine, so the dependency must be
     /// on the **same device** as this launch (cross-device ordering is
@@ -1143,6 +1171,7 @@ impl GroupLaunchBuilder<'_> {
             retry,
             backoff,
             tenant,
+            tier,
         } = self;
         let d = match device {
             Some(dev) => {
@@ -1249,12 +1278,14 @@ impl GroupLaunchBuilder<'_> {
             prefetch: prefetch.clone(),
             fuel,
             backoff,
+            tier,
         });
         let mut options = OffloadOptions::default()
             .transfer(mode)
             .not_before(not_before)
             .retry(retry)
-            .backoff(backoff);
+            .backoff(backoff)
+            .tier(tier);
         if let Some(p) = prefetch {
             options = options.prefetch(p);
         }

@@ -47,7 +47,7 @@ pub mod service;
 pub mod session;
 pub mod shard;
 
-pub use engine::{Engine, EngineStats, LaunchCheckpoint, LaunchId, LaunchStatus, OffloadOutcome, QueueStats};
+pub use engine::{Engine, EngineStats, LaunchCheckpoint, LaunchId, LaunchStatus, OffloadOutcome, QueueStats, TierCounters};
 pub use group::{DeviceGroup, DeviceId, GroupArgSpec, GroupHandle, GroupLaunchBuilder, GroupRef, GroupSession};
 pub use marshal::{ArgSpec, BoundArg, PrefetchChoice};
 pub use offload::{Kernel, KernelRegistry, OffloadOptions, OffloadResult};
@@ -60,6 +60,10 @@ pub use shard::{ShardAssignment, ShardPlan, ShardPolicy};
 // builder that consumes them lives (the analysis itself is
 // [`crate::analysis`]).
 pub use crate::analysis::{GraphReport, VerifyLevel};
+
+// The execution-tier selector, re-exported where the launch options that
+// carry it live (the tiers themselves are [`crate::vm::tier`]).
+pub use crate::vm::TierChoice;
 
 /// How kernel arguments travel to the device (§3.1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

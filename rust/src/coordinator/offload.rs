@@ -9,7 +9,7 @@ use std::rc::Rc;
 
 use crate::error::{Error, Result};
 use crate::sim::Time;
-use crate::vm::{self, CostCounters, Program, Value};
+use crate::vm::{self, CostCounters, Program, TierChoice, Value};
 
 use super::engine::{LaunchCheckpoint, LaunchId};
 use super::prefetch::PrefetchSpec;
@@ -143,6 +143,14 @@ pub struct OffloadOptions {
     /// a launch is submitted, the engine stays tenant-blind about *what*
     /// runs (engine invariant 11).
     pub tenant: Option<u64>,
+    /// Execution tier for the per-core VMs: the fused interpreter
+    /// (default), the compiled direct-dispatch tier, or `Auto` (the engine
+    /// compiles once the kernel's launch repeats or its dispatch volume
+    /// crosses the hot threshold). Tier choice never changes values,
+    /// counters or suspension points — it changes host overhead and the
+    /// modelled code-image footprint (`code_bytes` of the lowered image
+    /// when compiled).
+    pub tier: TierChoice,
     /// Resume from a harvested checkpoint instead of starting fresh — set
     /// by the multi-device group when it migrates a launch off a lost
     /// device; never by user code.
@@ -162,6 +170,7 @@ impl Default for OffloadOptions {
             retry: 0,
             backoff: 0,
             tenant: None,
+            tier: TierChoice::Interp,
             restore: None,
         }
     }
@@ -231,6 +240,12 @@ impl OffloadOptions {
     /// scheduling).
     pub fn tenant(mut self, tenant: u64) -> Self {
         self.tenant = Some(tenant);
+        self
+    }
+
+    /// Select the execution tier (see [`OffloadOptions::tier`]).
+    pub fn tier(mut self, tier: TierChoice) -> Self {
+        self.tier = tier;
         self
     }
 }

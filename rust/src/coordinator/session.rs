@@ -59,11 +59,11 @@ use crate::runtime::{ModelExecutor, PjrtContext};
 use crate::sim::{FaultCounters, FaultPlan, Time};
 use crate::vm::Value;
 
-use super::engine::{Engine, EngineStats, LaunchId, LaunchStatus};
+use super::engine::{Engine, EngineStats, LaunchId, LaunchStatus, TierCounters};
 use super::marshal::{bind, ArgSpec};
 use super::offload::{Kernel, KernelRegistry, OffloadOptions, OffloadResult};
 use super::prefetch::PrefetchSpec;
-use super::TransferMode;
+use super::{TierChoice, TransferMode};
 
 /// Builder for [`Session`].
 #[derive(Debug, Clone)]
@@ -75,6 +75,7 @@ pub struct SessionBuilder {
     trace_capacity: Option<usize>,
     faults: Option<FaultPlan>,
     verify: VerifyLevel,
+    tier: TierChoice,
 }
 
 impl SessionBuilder {
@@ -88,7 +89,18 @@ impl SessionBuilder {
             trace_capacity: None,
             faults: None,
             verify: VerifyLevel::Off,
+            tier: TierChoice::Interp,
         }
+    }
+
+    /// Set the session-wide default execution tier
+    /// ([`TierChoice::Interp`] unless overridden — tier choice never
+    /// changes kernel results, only host-side dispatch cost; see
+    /// [`crate::vm::tier`]). Individual launches override it with
+    /// [`LaunchBuilder::tier`].
+    pub fn tier(mut self, tier: TierChoice) -> Self {
+        self.tier = tier;
+        self
     }
 
     /// Set the static-verification level applied at every submit
@@ -151,7 +163,12 @@ impl SessionBuilder {
             engine.install_faults(plan);
         }
         engine.set_verify(self.verify);
-        Ok(Session { tech: self.tech, engine, kernels: KernelRegistry::new() })
+        Ok(Session {
+            tech: self.tech,
+            engine,
+            kernels: KernelRegistry::new(),
+            default_tier: self.tier,
+        })
     }
 }
 
@@ -161,6 +178,10 @@ pub struct Session {
     tech: Technology,
     engine: Engine,
     kernels: KernelRegistry,
+    /// Execution tier seeded into every launch builder
+    /// ([`SessionBuilder::tier`]; per-launch [`LaunchBuilder::tier`]
+    /// overrides it).
+    default_tier: TierChoice,
 }
 
 impl Session {
@@ -192,6 +213,13 @@ impl Session {
     /// Fault/recovery accounting (all-zero without a fault plan).
     pub fn fault_counters(&self) -> FaultCounters {
         self.engine.fault_counters()
+    }
+
+    /// Per-tier execution accounting: launches and dispatches retired on
+    /// the interpreter vs the compiled linear-IR tier, plus the `Auto`
+    /// selector's promotion/demotion decisions.
+    pub fn tier_counters(&self) -> TierCounters {
+        self.engine.tier_counters()
     }
 
     /// Current virtual time.
@@ -410,12 +438,8 @@ impl Session {
     /// builder's argument list doubles as the launch's read/write set —
     /// the engine infers dependency edges from it (module docs).
     pub fn launch(&mut self, kernel: &Kernel) -> LaunchBuilder<'_> {
-        LaunchBuilder {
-            kernel: kernel.clone(),
-            session: self,
-            args: Vec::new(),
-            options: OffloadOptions::default(),
-        }
+        let options = OffloadOptions::default().tier(self.default_tier);
+        LaunchBuilder { kernel: kernel.clone(), session: self, args: Vec::new(), options }
     }
 
     /// As [`Session::launch`], resolving the kernel by registry name. No
@@ -423,12 +447,8 @@ impl Session {
     /// reference-count bumps.
     pub fn launch_named(&mut self, name: &str) -> Result<LaunchBuilder<'_>> {
         let kernel = self.kernels.get(name)?.clone();
-        Ok(LaunchBuilder {
-            kernel,
-            session: self,
-            args: Vec::new(),
-            options: OffloadOptions::default(),
-        })
+        let options = OffloadOptions::default().tier(self.default_tier);
+        Ok(LaunchBuilder { kernel, session: self, args: Vec::new(), options })
     }
 
     /// Drive the timeline until `handle`'s launch completes; claim its
@@ -604,6 +624,17 @@ impl LaunchBuilder<'_> {
     /// scheduling).
     pub fn tenant(mut self, tenant: u64) -> Self {
         self.options.tenant = Some(tenant);
+        self
+    }
+
+    /// Select this launch's execution tier ([`TierChoice`]): the
+    /// bytecode interpreter (default), the compiled linear-IR tier, or
+    /// `Auto` (the engine promotes repeated/hot kernels). Results,
+    /// dispatch counts and suspension points are bit-identical across
+    /// tiers; only host-side dispatch overhead and the pushed code-image
+    /// bytes differ.
+    pub fn tier(mut self, tier: TierChoice) -> Self {
+        self.options.tier = tier;
         self
     }
 

@@ -48,6 +48,7 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
     .opt("seed", Some("42"), "deterministic seed")
     .opt("faults", None, "mlbench: inject a seeded transient-fault plan (value = fault seed)")
     .opt("retries", Some("0"), "mlbench: per-launch retry budget under --faults (0 = fail fast)")
+    .opt("tier", Some("interp"), "mlbench: execution tier (interp|compiled|auto)")
     .opt("config", None, "JSON experiment config (overrides other flags)")
     .opt("tenants", Some("8"), "fleet: independent tenant request streams")
     .opt("duration", Some("2000000"), "fleet: arrival horizon in virtual ns")
@@ -261,6 +262,8 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
             if let Some(e) = args.get("epochs") {
                 cfg.epochs = e.parse()?;
             }
+            cfg.tier = microcore::coordinator::TierChoice::parse(args.req("tier")?)
+                .ok_or_else(|| anyhow::anyhow!("bad --tier"))?;
             if args.is_set("cache") {
                 // Cover the whole image set when it fits the shared
                 // window; otherwise take the window's worth of segments.
@@ -335,6 +338,12 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
                 print!(
                     "{}",
                     microcore::metrics::report::cache_table("image-store cache", c).render()
+                );
+            }
+            if cfg.tier != microcore::coordinator::TierChoice::Interp {
+                print!(
+                    "{}",
+                    microcore::metrics::report::tier_table("execution tiers", &r.tiers).render()
                 );
             }
             println!(

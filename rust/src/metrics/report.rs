@@ -157,6 +157,34 @@ pub fn fault_table(title: impl Into<String>, c: &crate::sim::FaultCounters) -> T
     t
 }
 
+/// Render a one-row execution-tier breakdown table (interpreter vs
+/// compiled linear-IR launches and dispatches, plus the `Auto` selector's
+/// decisions; see [`crate::coordinator::TierCounters`]).
+pub fn tier_table(title: impl Into<String>, c: &crate::coordinator::TierCounters) -> Table {
+    let mut t = Table::new(
+        title,
+        &[
+            "interp launches",
+            "compiled launches",
+            "interp dispatches",
+            "compiled dispatches",
+            "lowered kernels",
+            "auto promotions",
+            "budget demotions",
+        ],
+    );
+    t.row(&[
+        c.interp_launches.to_string(),
+        c.compiled_launches.to_string(),
+        c.interp_dispatches.to_string(),
+        c.compiled_dispatches.to_string(),
+        c.lowered_kernels.to_string(),
+        c.auto_promotions.to_string(),
+        c.budget_demotions.to_string(),
+    ]);
+    t
+}
+
 /// Format a float with 3 decimals.
 pub fn f3(v: f64) -> String {
     format!("{v:.3}")
@@ -251,6 +279,25 @@ mod tests {
         assert!(s.contains("image cache"));
         assert!(s.contains('9'));
         assert!(s.contains("0.750"));
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn tier_table_renders_per_tier_breakdown() {
+        let c = crate::coordinator::TierCounters {
+            interp_launches: 2,
+            compiled_launches: 5,
+            interp_dispatches: 1_234,
+            compiled_dispatches: 98_765,
+            lowered_kernels: 1,
+            auto_promotions: 4,
+            budget_demotions: 0,
+        };
+        let t = tier_table("tiers", &c);
+        let s = t.render();
+        assert!(s.contains("tiers"));
+        assert!(s.contains("compiled launches"));
+        assert!(s.contains("98765"));
         assert_eq!(t.len(), 1);
     }
 

@@ -26,6 +26,7 @@ use std::rc::Rc;
 
 use super::builtins::{Builtin, TensorOp};
 use super::bytecode::Op;
+use super::lower::LinearProgram;
 use super::symbol::SymbolTable;
 use super::value::Value;
 use super::Program;
@@ -71,17 +72,21 @@ pub struct CostCounters {
     pub tensor_calls: u64,
 }
 
+/// One call frame. `ip` indexes the *bytecode* on the interpreter tier
+/// and the *lowered code* on the compiled tier (`vm::tier`); snapshots
+/// always store bytecode ips, converting through the lowered program's
+/// pc ↔ ip maps, so checkpoints are tier-portable.
 #[derive(Debug)]
-struct Frame {
-    func: usize,
-    ip: usize,
-    locals: Vec<Value>,
-    symbols: SymbolTable,
+pub(super) struct Frame {
+    pub(super) func: usize,
+    pub(super) ip: usize,
+    pub(super) locals: Vec<Value>,
+    pub(super) symbols: SymbolTable,
 }
 
 /// `Op::Load` semantics for a fused arm: record the read and clone the
 /// slot, with the plain arm's exact error.
-fn load_local(frame: &mut Frame, slot: u16, line: usize) -> Result<Value> {
+pub(super) fn load_local(frame: &mut Frame, slot: u16, line: usize) -> Result<Value> {
     frame.symbols.record(slot as usize, false);
     frame
         .locals
@@ -92,14 +97,34 @@ fn load_local(frame: &mut Frame, slot: u16, line: usize) -> Result<Value> {
 
 /// `Op::Store` semantics for a fused arm: record the write, refresh the
 /// external flag (§4 rebinding), store.
-fn store_local(frame: &mut Frame, slot: u16, v: Value) {
+pub(super) fn store_local(frame: &mut Frame, slot: u16, v: Value) {
     frame.symbols.record(slot as usize, true);
     frame.symbols.set_external(slot as usize, matches!(v, Value::External(_)));
     frame.locals[slot as usize] = v;
 }
 
+/// Check (without charging) that `n` more unfused dispatches fit the
+/// fuel budget — the loop-top reservation both tiers make before
+/// executing an op or group.
+pub(super) fn check_fuel(counters: &CostCounters, fuel: u64, n: u64) -> Result<()> {
+    if counters.dispatches.saturating_add(n) > fuel {
+        return Err(Error::Vm("kernel exceeded its dispatch budget (fuel)".into()));
+    }
+    Ok(())
+}
+
+/// Check-and-charge `n` unfused dispatches. The single helper every
+/// group-weight charge goes through — fused interpreter arms, the
+/// suspended-accumulator resume path, and the compiled tier — so the
+/// accounting cannot drift between them.
+pub(super) fn charge_group(counters: &mut CostCounters, fuel: u64, n: u64) -> Result<()> {
+    check_fuel(counters, fuel, n)?;
+    counters.dispatches += n;
+    Ok(())
+}
+
 #[derive(Debug, Clone, Copy)]
-enum Pending {
+pub(super) enum Pending {
     ReadValue,
     WriteAck,
     TensorValue,
@@ -111,10 +136,10 @@ enum Pending {
 /// state here so the resume path charges the identical 2 dispatches and
 /// produces the identical result.
 #[derive(Debug)]
-struct FusedAccum {
-    slot: u16,
-    acc: Value,
-    line: usize,
+pub(super) struct FusedAccum {
+    pub(super) slot: u16,
+    pub(super) acc: Value,
+    pub(super) line: usize,
 }
 
 /// A [`Value`] as stored in a [`VmSnapshot`]: identical shape, except
@@ -213,22 +238,32 @@ impl VmSnapshot {
 }
 
 /// A resumable interpreter for one core's kernel invocation.
+///
+/// Runs on one of two tiers: the fused bytecode interpreter (default) or,
+/// when a lowered program is attached ([`Interp::attach_lowered`]), the
+/// compiled direct-dispatch tier of `vm::tier` — bit-identical
+/// observables, lower host overhead.
 #[derive(Debug)]
 pub struct Interp {
-    program: Rc<Program>,
-    stack: Vec<Value>,
-    frames: Vec<Frame>,
-    counters: CostCounters,
-    core_id: usize,
-    num_cores: usize,
+    pub(super) program: Rc<Program>,
+    pub(super) stack: Vec<Value>,
+    pub(super) frames: Vec<Frame>,
+    pub(super) counters: CostCounters,
+    pub(super) core_id: usize,
+    pub(super) num_cores: usize,
     /// Per-external-slot view lengths (bound at launch; `len()` is local
     /// because the reference carries its metadata).
-    ext_lens: Vec<usize>,
-    print_log: Vec<String>,
-    pending: Option<Pending>,
-    fused_accum: Option<FusedAccum>,
-    fuel: u64,
-    finished_symbols: Option<SymbolTable>,
+    pub(super) ext_lens: Vec<usize>,
+    pub(super) print_log: Vec<String>,
+    pub(super) pending: Option<Pending>,
+    pub(super) fused_accum: Option<FusedAccum>,
+    pub(super) fuel: u64,
+    pub(super) finished_symbols: Option<SymbolTable>,
+    /// Compiled-tier image; `None` = interpret bytecode.
+    pub(super) lowered: Option<Rc<LinearProgram>>,
+    /// Host dispatch-loop iterations (both tiers). Instrumentation only:
+    /// not a modelled cost, not part of snapshots.
+    pub(super) steps: u64,
 }
 
 impl Interp {
@@ -275,7 +310,35 @@ impl Interp {
             fused_accum: None,
             fuel: u64::MAX,
             finished_symbols: None,
+            lowered: None,
+            steps: 0,
         })
+    }
+
+    /// Switch this invocation to the compiled tier: `run`/`resume` will
+    /// execute `lowered` (the [`super::lower::lower_program`] image of
+    /// this program) via the direct-dispatch loop of `vm::tier`. Must be
+    /// called before the first `run()` (the engine attaches right after
+    /// construction, before any checkpoint restore).
+    pub fn attach_lowered(&mut self, lowered: Rc<LinearProgram>) {
+        debug_assert!(
+            self.counters.dispatches == 0 && self.frames.len() == 1 && self.frames[0].ip == 0,
+            "attach_lowered after execution started"
+        );
+        self.lowered = Some(lowered);
+    }
+
+    /// Whether the compiled tier is active (a lowered program is attached).
+    pub fn is_compiled(&self) -> bool {
+        self.lowered.is_some()
+    }
+
+    /// Host dispatch-loop iterations so far, on either tier. Pure
+    /// host-side instrumentation (the benches' structural per-op overhead
+    /// metric): never part of the modelled cost, virtual time or
+    /// snapshots.
+    pub fn host_steps(&self) -> u64 {
+        self.steps
     }
 
     /// Limit total dispatches (runaway-kernel guard). Errors when exceeded.
@@ -316,12 +379,21 @@ impl Interp {
         let mut index = HashMap::new();
         let stack =
             self.stack.iter().map(|v| snap_value(v, &mut arrays, &mut index)).collect();
+        // Snapshots always store *bytecode* ips: on the compiled tier the
+        // frame ip indexes lowered code, so convert through the pc → ip
+        // map (suspension points are always group heads, so the map is
+        // exact) — a checkpoint taken on either tier restores on either.
+        let lowered = self.lowered.clone();
+        let to_ip = |func: usize, ip: usize| match &lowered {
+            Some(lp) => lp.funcs[func].pc_to_ip[ip] as usize,
+            None => ip,
+        };
         let frames = self
             .frames
             .iter()
             .map(|f| SnapFrame {
                 func: f.func,
-                ip: f.ip,
+                ip: to_ip(f.func, f.ip),
                 locals: f.locals.iter().map(|v| snap_value(v, &mut arrays, &mut index)).collect(),
                 symbols: f.symbols.clone(),
             })
@@ -355,12 +427,21 @@ impl Interp {
         let table: Vec<Rc<RefCell<Vec<f64>>>> =
             snap.arrays.iter().map(|a| Rc::new(RefCell::new(a.clone()))).collect();
         self.stack = snap.stack.iter().map(|v| unsnap_value(v, &table)).collect();
+        // Snapshot ips are bytecode ips; if this interpreter runs on the
+        // compiled tier, convert to lowered pcs (snapshot points are
+        // always instruction boundaries of the lowered code — merge rules
+        // in `vm::lower` guarantee it).
+        let lowered = self.lowered.clone();
+        let to_pc = |func: usize, ip: usize| match &lowered {
+            Some(lp) => lp.funcs[func].ip_to_pc[ip] as usize,
+            None => ip,
+        };
         self.frames = snap
             .frames
             .iter()
             .map(|f| Frame {
                 func: f.func,
-                ip: f.ip,
+                ip: to_pc(f.func, f.ip),
                 locals: f.locals.iter().map(|v| unsnap_value(v, &table)).collect(),
                 symbols: f.symbols.clone(),
             })
@@ -388,13 +469,10 @@ impl Interp {
                 if let Some(FusedAccum { slot, acc, line }) = self.fused_accum.take() {
                     // Complete a suspended `AccumIndexLLL`: the unfused
                     // sequence would now execute `Add; Store` — charge the
-                    // same 2 dispatches and perform the identical update.
-                    if self.counters.dispatches + 2 > self.fuel {
-                        return Err(Error::Vm(
-                            "kernel exceeded its dispatch budget (fuel)".into(),
-                        ));
-                    }
-                    self.counters.dispatches += 2;
+                    // same 2 dispatches (through the shared group-weight
+                    // helper, same saturating check as the run loop) and
+                    // perform the identical update.
+                    charge_group(&mut self.counters, self.fuel, 2)?;
                     let v = self.arith(&Op::Add, acc, value, line)?;
                     store_local(self.frames.last_mut().expect("frame"), slot, v);
                 } else {
@@ -413,10 +491,16 @@ impl Interp {
         if self.pending.is_some() {
             return Err(Error::Vm("run() while suspended; call resume()".into()));
         }
+        // Compiled tier: execute the lowered image via the
+        // direct-dispatch loop instead (identical observables).
+        if self.lowered.is_some() {
+            return super::tier::run_compiled(self);
+        }
         // Hot loop: borrow opcodes from a local Rc clone of the program so
         // dispatch never clones an `Op` (perf pass #1, EXPERIMENTS.md §Perf).
         let program = self.program.clone();
         loop {
+            self.steps += 1;
             let frame = self.frames.last_mut().expect("frame");
             let func = &program.functions[frame.func];
             debug_assert!(frame.ip < func.code.len(), "fell off code");
@@ -426,9 +510,8 @@ impl Interp {
             // budget (for plain ops this is exactly the old
             // `dispatches >= fuel` check; a fused group reserves its whole
             // unfused length up front — see `vm::fuse` module docs).
-            if self.counters.dispatches.saturating_add(op.fused_len()) > self.fuel {
-                return Err(Error::Vm("kernel exceeded its dispatch budget (fuel)".into()));
-            }
+            check_fuel(&self.counters, self.fuel, op.fused_len())?;
+            let frame = self.frames.last_mut().expect("frame");
             frame.ip += 1;
             self.counters.dispatches += 1;
 
@@ -664,13 +747,13 @@ impl Interp {
                         Op::AugAddConstF(s, k) => (s, Value::Float(k)),
                         _ => unreachable!(),
                     };
-                    self.counters.dispatches += 3;
+                    charge_group(&mut self.counters, self.fuel, 3)?;
                     let l = load_local(self.frames.last_mut().unwrap(), slot, line)?;
                     let v = self.arith(&Op::Add, l, rhs, line)?;
                     store_local(self.frames.last_mut().unwrap(), slot, v);
                 }
                 Op::AugAddLocal(dst, src) => {
-                    self.counters.dispatches += 3;
+                    charge_group(&mut self.counters, self.fuel, 3)?;
                     let frame = self.frames.last_mut().unwrap();
                     let l = load_local(frame, dst, line)?;
                     let r = load_local(frame, src, line)?;
@@ -678,7 +761,7 @@ impl Interp {
                     store_local(self.frames.last_mut().unwrap(), dst, v);
                 }
                 Op::BranchCmpLL(a, b, cmp, t) => {
-                    self.counters.dispatches += 3;
+                    charge_group(&mut self.counters, self.fuel, 3)?;
                     let frame = self.frames.last_mut().unwrap();
                     let l = load_local(frame, a, line)?;
                     let r = load_local(frame, b, line)?;
@@ -692,7 +775,7 @@ impl Interp {
                 Op::AccumIndexLLL(acc, obj, idx) => {
                     // Load; Load; Load charged here (+ the loop top's 1 =
                     // 4 through Index — the unfused suspension point).
-                    self.counters.dispatches += 3;
+                    charge_group(&mut self.counters, self.fuel, 3)?;
                     let frame = self.frames.last_mut().unwrap();
                     let accv = load_local(frame, acc, line)?;
                     let objv = load_local(frame, obj, line)?;
@@ -709,7 +792,7 @@ impl Interp {
                                     }
                                 }
                             };
-                            self.counters.dispatches += 2; // Add; Store
+                            charge_group(&mut self.counters, self.fuel, 2)?; // Add; Store
                             let v = self.arith(&Op::Add, accv, Value::Float(elem), line)?;
                             store_local(self.frames.last_mut().unwrap(), acc, v);
                         }
@@ -732,15 +815,15 @@ impl Interp {
         }
     }
 
-    fn pop(&mut self) -> Result<Value> {
+    pub(super) fn pop(&mut self) -> Result<Value> {
         self.stack.pop().ok_or_else(|| Error::Vm("stack underflow".into()))
     }
 
-    fn peek(&self) -> Result<&Value> {
+    pub(super) fn peek(&self) -> Result<&Value> {
         self.stack.last().ok_or_else(|| Error::Vm("stack underflow".into()))
     }
 
-    fn arith(&mut self, op: &Op, l: Value, r: Value, line: usize) -> Result<Value> {
+    pub(super) fn arith(&mut self, op: &Op, l: Value, r: Value, line: usize) -> Result<Value> {
         // list * int: Python repetition ([0.0] * n allocation idiom).
         if matches!(op, Op::Mul) {
             if let (Value::Array(a), Ok(n)) = (&l, r.as_i64()) {
@@ -816,7 +899,7 @@ impl Interp {
         })
     }
 
-    fn pure_builtin(&mut self, b: Builtin, args: &[Value], line: usize) -> Result<Value> {
+    pub(super) fn pure_builtin(&mut self, b: Builtin, args: &[Value], line: usize) -> Result<Value> {
         let flop = |me: &mut Self| me.counters.flops += 1;
         Ok(match b {
             Builtin::Len => match &args[0] {

@@ -1,0 +1,520 @@
+//! Post-fusion lowering: bytecode → a direct-dispatch linear IR.
+//!
+//! The compiled tier (see [`super::tier`]) executes a [`LinearProgram`]
+//! instead of re-decoding [`Op`]s on every dispatch. Lowering runs once per
+//! kernel (the engine caches the result per `Rc<Program>` identity) and
+//! resolves everything the interpreter resolves per dispatch:
+//!
+//! * **operand slots and immediates** are copied into the instruction;
+//! * **jump targets** become lowered-code indices (`pc`), so taken
+//!   branches are a single store;
+//! * **builtin bindings** are resolved from ids to [`Builtin`] values and
+//!   split into pure/tensor variants (an unresolvable id lowers to
+//!   [`LIns::BadBuiltin`], which errors lazily exactly like the
+//!   interpreter);
+//! * **string constants** are interned once ([`LIns::ConstStr`] carries
+//!   the `Rc`, not a pool index);
+//! * **back-edge sequences** are merged: an `AugAddConst*; Jump` pair
+//!   becomes one [`LIns::IncJmpI`]/[`LIns::IncJmpF`], and when the jump
+//!   lands on a `BranchCmpLL` loop head the head test is replayed inline
+//!   ([`LIns::IncLoopI`]/[`LIns::IncLoopF`]) — the canonical counted-loop
+//!   back edge runs in one host dispatch instead of three.
+//!
+//! **Cost-model invariance.** A lowered instruction charges exactly the
+//! dispatch weight of its source op or fused group, constituent by
+//! constituent (see `vm::tier`), so fuel errors, `CostCounters` and
+//! virtual time are bit-identical to the interpreter. The *host* cost is
+//! what changes — fewer, cheaper dispatch-loop iterations.
+//!
+//! **Suspension-safety.** Merged groups never contain a suspendable op
+//! (`AugAddConst*` and `Jump` cannot suspend) and never span a jump
+//! target, so every resumable interpreter state maps to a lowered
+//! instruction boundary. [`LinearFn::ip_to_pc`]/[`LinearFn::pc_to_ip`]
+//! convert between bytecode and lowered instruction pointers, which keeps
+//! [`super::interp::VmSnapshot`]s tier-portable: a checkpoint taken under
+//! either tier restores under either tier.
+
+use std::rc::Rc;
+
+use super::builtins::Builtin;
+use super::bytecode::{CmpKind, Function, Op};
+use super::Program;
+
+/// Arithmetic selector for the lowered binary-arithmetic instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArithKind {
+    /// `+`
+    Add,
+    /// `-`
+    Sub,
+    /// `*`
+    Mul,
+    /// `/`
+    Div,
+    /// `//`
+    FloorDiv,
+    /// `%`
+    Mod,
+}
+
+impl ArithKind {
+    /// The bytecode op whose semantics this selector replays (the shared
+    /// `arith` helper dispatches on it).
+    pub fn op(self) -> &'static Op {
+        match self {
+            ArithKind::Add => &Op::Add,
+            ArithKind::Sub => &Op::Sub,
+            ArithKind::Mul => &Op::Mul,
+            ArithKind::Div => &Op::Div,
+            ArithKind::FloorDiv => &Op::FloorDiv,
+            ArithKind::Mod => &Op::Mod,
+        }
+    }
+}
+
+/// One pre-resolved instruction of the compiled tier's linear IR.
+///
+/// Jump operands are lowered-code indices (`pc`), not bytecode ips.
+/// Weights (dispatches charged per execution) match the source op or
+/// fused group exactly — see [`LIns::weight`].
+#[derive(Debug, Clone)]
+pub enum LIns {
+    /// Push a float constant.
+    ConstF(f64),
+    /// Push an int constant.
+    ConstI(i64),
+    /// Push a bool constant.
+    ConstB(bool),
+    /// Push `None`.
+    ConstNone,
+    /// Push the pre-interned string constant.
+    ConstStr(Rc<String>),
+    /// Push local `slot`.
+    Load(u16),
+    /// Pop into local `slot`.
+    Store(u16),
+    /// Pop `n` items, push a list of them.
+    NewList(u16),
+    /// `obj[i]` — externals suspend.
+    Index,
+    /// `obj[i] = v` — externals suspend.
+    StoreIndex,
+    /// Binary arithmetic (pop rhs, pop lhs, push result).
+    Arith(ArithKind),
+    /// Unary negation.
+    Neg,
+    /// Boolean not.
+    Not,
+    /// Ordered comparison (`<`, `<=`, `>`, `>=`).
+    Cmp(CmpKind),
+    /// Equality (`true`) or inequality (`false`) comparison.
+    CmpEq(bool),
+    /// Unconditional jump to lowered `pc`.
+    Jump(u32),
+    /// Pop; jump to lowered `pc` if falsy.
+    JumpIfFalse(u32),
+    /// Peek; jump if falsy (keep value) — `and` chains.
+    JumpIfFalsePeek(u32),
+    /// Peek; jump if truthy (keep value) — `or` chains.
+    JumpIfTruePeek(u32),
+    /// Pop the top of stack.
+    Pop,
+    /// Call user function `fid` with `argc` args.
+    CallFunc(u16, u8),
+    /// Pure builtin call, binding resolved at lower time.
+    CallPure(Builtin, u8),
+    /// Tensor builtin call (suspends), binding resolved at lower time.
+    CallTensor(Builtin, u8),
+    /// A `CallBuiltin` whose id did not resolve; errors when executed
+    /// (lazily, exactly like the interpreter).
+    BadBuiltin(u16),
+    /// Return from the current frame.
+    Return,
+    /// Fused integer augmented add (weight 4, like the source op).
+    AugAddConstI(u16, i64),
+    /// Fused float augmented add (weight 4).
+    AugAddConstF(u16, f64),
+    /// Fused local-to-local augmented add (weight 4).
+    AugAddLocal(u16, u16),
+    /// Fused compare-and-branch; `target` is a lowered `pc` (weight 4).
+    BranchCmpLL(u16, u16, CmpKind, u32),
+    /// Fused indexed-load-accumulate (weight 6; suspends on externals).
+    AccumIndexLLL(u16, u16, u16),
+    /// Lower-time merge of `AugAddConstI(slot, k); Jump(target)` — the
+    /// loop back edge in one dispatch (weight 4 + 1).
+    IncJmpI {
+        /// Counter slot.
+        slot: u16,
+        /// Increment.
+        k: i64,
+        /// Lowered `pc` of the jump target.
+        target: u32,
+    },
+    /// Float variant of [`LIns::IncJmpI`].
+    IncJmpF {
+        /// Counter slot.
+        slot: u16,
+        /// Increment.
+        k: f64,
+        /// Lowered `pc` of the jump target.
+        target: u32,
+    },
+    /// Lower-time merge of `AugAddConstI(slot, k); Jump(head)` where
+    /// `head` is a `BranchCmpLL(a, b, cmp, exit_ip)` loop head: bump the
+    /// counter, replay the head test inline, continue at `body` (test
+    /// holds) or `exit` (test fails). Weight 4 + 1 + 4, charged
+    /// constituent by constituent.
+    IncLoopI {
+        /// Counter slot.
+        slot: u16,
+        /// Increment.
+        k: i64,
+        /// Head test lhs slot.
+        a: u16,
+        /// Head test rhs slot.
+        b: u16,
+        /// Head test comparison.
+        cmp: CmpKind,
+        /// Lowered `pc` of the loop body (head + 1).
+        body: u32,
+        /// Lowered `pc` of the loop exit (the head's branch target).
+        exit: u32,
+        /// Source line of the replayed head (its errors report this).
+        bline: u32,
+    },
+    /// Float variant of [`LIns::IncLoopI`].
+    IncLoopF {
+        /// Counter slot.
+        slot: u16,
+        /// Increment.
+        k: f64,
+        /// Head test lhs slot.
+        a: u16,
+        /// Head test rhs slot.
+        b: u16,
+        /// Head test comparison.
+        cmp: CmpKind,
+        /// Lowered `pc` of the loop body (head + 1).
+        body: u32,
+        /// Lowered `pc` of the loop exit (the head's branch target).
+        exit: u32,
+        /// Source line of the replayed head (its errors report this).
+        bline: u32,
+    },
+}
+
+impl LIns {
+    /// Total unfused dispatches this instruction charges per execution —
+    /// the sum of its constituents' [`Op::fused_len`]s. Used by tests and
+    /// docs; the executor charges constituent by constituent so fuel
+    /// exhaustion errors surface at the identical dispatch count.
+    pub fn weight(&self) -> u64 {
+        match self {
+            LIns::AugAddConstI(..)
+            | LIns::AugAddConstF(..)
+            | LIns::AugAddLocal(..)
+            | LIns::BranchCmpLL(..) => 4,
+            LIns::AccumIndexLLL(..) => 6,
+            LIns::IncJmpI { .. } | LIns::IncJmpF { .. } => 5,
+            LIns::IncLoopI { .. } | LIns::IncLoopF { .. } => 9,
+            _ => 1,
+        }
+    }
+}
+
+/// One lowered function.
+#[derive(Debug)]
+pub struct LinearFn {
+    /// Lowered instructions (direct-dispatch form).
+    pub code: Vec<LIns>,
+    /// Source line per lowered instruction (the group head's line).
+    pub lines: Vec<usize>,
+    /// Bytecode ip → lowered pc, length `bytecode len + 1`. Interior
+    /// positions of a merged group map to the group's pc; merge rules
+    /// guarantee they never appear in a snapshot.
+    pub ip_to_pc: Vec<u32>,
+    /// Lowered pc → bytecode ip of the group head, length
+    /// `lowered len + 1`.
+    pub pc_to_ip: Vec<u32>,
+    str_bytes: usize,
+}
+
+/// A lowered program, index-aligned with [`Program::functions`].
+#[derive(Debug)]
+pub struct LinearProgram {
+    /// One lowered function per bytecode function.
+    pub funcs: Vec<LinearFn>,
+}
+
+impl LinearProgram {
+    /// Modelled byte size of the compiled image: 8 B per lowered
+    /// instruction (wider, pre-resolved encoding) plus each function's
+    /// string pool. This is what `MemKind` placement and launch-time
+    /// code-push costing see when a kernel runs on the compiled tier —
+    /// merged back edges make the image smaller, pre-resolved operands
+    /// make each slot wider.
+    pub fn code_bytes(&self) -> usize {
+        self.funcs.iter().map(|f| f.code.len() * 8 + f.str_bytes).sum()
+    }
+}
+
+/// Lower every function of a post-fusion [`Program`]. Total: any program
+/// the compiler emits lowers, and the result is executable by
+/// `vm::tier::run_compiled` with observables bit-identical to the
+/// interpreter.
+pub fn lower_program(p: &Program) -> LinearProgram {
+    LinearProgram { funcs: p.functions.iter().map(lower_fn).collect() }
+}
+
+fn lower_fn(f: &Function) -> LinearFn {
+    let n = f.code.len();
+    // Jump targets may not become merged-group interiors (same rule the
+    // fusion pass applies): a taken branch must land on an instruction
+    // boundary of the lowered code.
+    let mut target = vec![false; n + 1];
+    for op in &f.code {
+        match *op {
+            Op::Jump(t)
+            | Op::JumpIfFalse(t)
+            | Op::JumpIfFalsePeek(t)
+            | Op::JumpIfTruePeek(t)
+            | Op::BranchCmpLL(_, _, _, t) => target[t as usize] = true,
+            _ => {}
+        }
+    }
+
+    // Pass 1: emit instructions with *bytecode* jump operands, recording
+    // the ip ↔ pc correspondence.
+    let mut code: Vec<LIns> = Vec::with_capacity(n);
+    let mut lines: Vec<usize> = Vec::with_capacity(n);
+    let mut ip_to_pc = vec![0u32; n + 1];
+    let mut pc_to_ip: Vec<u32> = Vec::with_capacity(n + 1);
+    let mut i = 0usize;
+    while i < n {
+        let pc = code.len() as u32;
+        ip_to_pc[i] = pc;
+        pc_to_ip.push(i as u32);
+        let mut merged = None;
+        let aug = match f.code[i] {
+            Op::AugAddConstI(slot, k) => Some((slot, Ok(k))),
+            Op::AugAddConstF(slot, k) => Some((slot, Err(k))),
+            _ => None,
+        };
+        if let Some((slot, k)) = aug {
+            if i + 1 < n && !target[i + 1] {
+                if let Op::Jump(t) = f.code[i + 1] {
+                    let t = t as usize;
+                    merged = Some(match (f.code.get(t), k) {
+                        (Some(&Op::BranchCmpLL(a, b, cmp, exit)), Ok(k)) => LIns::IncLoopI {
+                            slot,
+                            k,
+                            a,
+                            b,
+                            cmp,
+                            body: (t + 1) as u32,
+                            exit,
+                            bline: f.lines[t] as u32,
+                        },
+                        (Some(&Op::BranchCmpLL(a, b, cmp, exit)), Err(k)) => LIns::IncLoopF {
+                            slot,
+                            k,
+                            a,
+                            b,
+                            cmp,
+                            body: (t + 1) as u32,
+                            exit,
+                            bline: f.lines[t] as u32,
+                        },
+                        (_, Ok(k)) => LIns::IncJmpI { slot, k, target: t as u32 },
+                        (_, Err(k)) => LIns::IncJmpF { slot, k, target: t as u32 },
+                    });
+                }
+            }
+        }
+        match merged {
+            Some(ins) => {
+                lines.push(f.lines[i]);
+                code.push(ins);
+                ip_to_pc[i + 1] = pc; // interior; unreachable as a resume point
+                i += 2;
+            }
+            None => {
+                lines.push(f.lines[i]);
+                code.push(lower_one(f, &f.code[i]));
+                i += 1;
+            }
+        }
+    }
+    ip_to_pc[n] = code.len() as u32;
+    pc_to_ip.push(n as u32);
+
+    // Pass 2: rewrite jump operands from bytecode ips to lowered pcs.
+    for ins in &mut code {
+        match ins {
+            LIns::Jump(t)
+            | LIns::JumpIfFalse(t)
+            | LIns::JumpIfFalsePeek(t)
+            | LIns::JumpIfTruePeek(t)
+            | LIns::BranchCmpLL(_, _, _, t)
+            | LIns::IncJmpI { target: t, .. }
+            | LIns::IncJmpF { target: t, .. } => *t = ip_to_pc[*t as usize],
+            LIns::IncLoopI { body, exit, .. } | LIns::IncLoopF { body, exit, .. } => {
+                *body = ip_to_pc[*body as usize];
+                *exit = ip_to_pc[*exit as usize];
+            }
+            _ => {}
+        }
+    }
+
+    LinearFn {
+        code,
+        lines,
+        ip_to_pc,
+        pc_to_ip,
+        str_bytes: f.strings.iter().map(String::len).sum(),
+    }
+}
+
+fn lower_one(f: &Function, op: &Op) -> LIns {
+    match *op {
+        Op::ConstF(v) => LIns::ConstF(v),
+        Op::ConstI(v) => LIns::ConstI(v),
+        Op::ConstB(v) => LIns::ConstB(v),
+        Op::ConstNone => LIns::ConstNone,
+        Op::ConstStr(i) => LIns::ConstStr(Rc::new(f.strings[i as usize].clone())),
+        Op::Load(s) => LIns::Load(s),
+        Op::Store(s) => LIns::Store(s),
+        Op::NewList(c) => LIns::NewList(c),
+        Op::Index => LIns::Index,
+        Op::StoreIndex => LIns::StoreIndex,
+        Op::Add => LIns::Arith(ArithKind::Add),
+        Op::Sub => LIns::Arith(ArithKind::Sub),
+        Op::Mul => LIns::Arith(ArithKind::Mul),
+        Op::Div => LIns::Arith(ArithKind::Div),
+        Op::FloorDiv => LIns::Arith(ArithKind::FloorDiv),
+        Op::Mod => LIns::Arith(ArithKind::Mod),
+        Op::Neg => LIns::Neg,
+        Op::Not => LIns::Not,
+        Op::Lt => LIns::Cmp(CmpKind::Lt),
+        Op::Le => LIns::Cmp(CmpKind::Le),
+        Op::Gt => LIns::Cmp(CmpKind::Gt),
+        Op::Ge => LIns::Cmp(CmpKind::Ge),
+        Op::CmpEq => LIns::CmpEq(true),
+        Op::CmpNe => LIns::CmpEq(false),
+        Op::Jump(t) => LIns::Jump(t),
+        Op::JumpIfFalse(t) => LIns::JumpIfFalse(t),
+        Op::JumpIfFalsePeek(t) => LIns::JumpIfFalsePeek(t),
+        Op::JumpIfTruePeek(t) => LIns::JumpIfTruePeek(t),
+        Op::Pop => LIns::Pop,
+        Op::CallFunc(fid, argc) => LIns::CallFunc(fid, argc),
+        Op::CallBuiltin(bid, argc) => match Builtin::from_id(bid) {
+            Some(b) if b.is_tensor() => LIns::CallTensor(b, argc),
+            Some(b) => LIns::CallPure(b, argc),
+            None => LIns::BadBuiltin(bid),
+        },
+        Op::Return => LIns::Return,
+        Op::AugAddConstI(s, k) => LIns::AugAddConstI(s, k),
+        Op::AugAddConstF(s, k) => LIns::AugAddConstF(s, k),
+        Op::AugAddLocal(d, s) => LIns::AugAddLocal(d, s),
+        Op::BranchCmpLL(a, b, cmp, t) => LIns::BranchCmpLL(a, b, cmp, t),
+        Op::AccumIndexLLL(a, o, x) => LIns::AccumIndexLLL(a, o, x),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vm::compile_source;
+    use crate::vm::symbol::SymbolTable;
+
+    const SPIN: &str = r#"
+def kernel(n):
+    i = 0
+    acc = 0
+    while i < n:
+        acc += i
+        i += 1
+    return acc
+"#;
+
+    #[test]
+    fn spin_back_edge_merges_to_incloop() {
+        let p = compile_source(SPIN, None).unwrap();
+        let lp = lower_program(&p);
+        let lf = &lp.funcs[p.entry];
+        assert!(lf.code.len() < p.entry_fn().code.len(), "merging shrinks the image");
+        assert!(
+            lf.code.iter().any(|i| matches!(i, LIns::IncLoopI { .. })),
+            "counted-loop back edge becomes IncLoopI: {:?}",
+            lf.code
+        );
+    }
+
+    #[test]
+    fn weights_preserve_total_dispatch_count() {
+        let p = compile_source(SPIN, None).unwrap();
+        let lp = lower_program(&p);
+        for (f, lf) in p.functions.iter().zip(&lp.funcs) {
+            let ops: u64 = f.code.iter().map(Op::fused_len).sum();
+            let lins: u64 = lf.code.iter().map(LIns::weight).sum();
+            assert_eq!(ops, lins, "static weight totals match");
+        }
+    }
+
+    #[test]
+    fn ip_pc_maps_are_inverse_on_group_heads() {
+        let p = compile_source(SPIN, None).unwrap();
+        let lp = lower_program(&p);
+        for (f, lf) in p.functions.iter().zip(&lp.funcs) {
+            assert_eq!(lf.ip_to_pc.len(), f.code.len() + 1);
+            assert_eq!(lf.pc_to_ip.len(), lf.code.len() + 1);
+            for (pc, &ip) in lf.pc_to_ip.iter().enumerate() {
+                assert_eq!(lf.ip_to_pc[ip as usize] as usize, pc, "head round-trips");
+            }
+        }
+    }
+
+    #[test]
+    fn jump_target_blocks_the_merge() {
+        // The Jump at ip 1 is itself a jump target (op 2 points at it), so
+        // the AugAddConstI+Jump pair must not merge — a taken branch must
+        // land on an instruction boundary.
+        let f = Function {
+            name: "f".into(),
+            params: 0,
+            nlocals: 1,
+            code: vec![
+                Op::AugAddConstI(0, 1),
+                Op::Jump(0),
+                Op::JumpIfFalse(1),
+                Op::ConstNone,
+                Op::Return,
+            ],
+            strings: vec![],
+            symbols: SymbolTable::default(),
+            lines: vec![1; 5],
+        };
+        let lf = lower_fn(&f);
+        assert_eq!(lf.code.len(), 5, "no merge across a jump target: {:?}", lf.code);
+        assert!(lf.code.iter().all(|i| !matches!(i, LIns::IncJmpI { .. } | LIns::IncLoopI { .. })));
+    }
+
+    #[test]
+    fn code_bytes_models_the_lowered_image() {
+        let p = compile_source(SPIN, None).unwrap();
+        let lp = lower_program(&p);
+        let lins: usize = lp.funcs.iter().map(|f| f.code.len()).sum();
+        assert_eq!(lp.code_bytes(), lins * 8, "8 B per instruction, no strings here");
+        assert!(lp.code_bytes() > 0);
+    }
+
+    #[test]
+    fn builtins_resolve_at_lower_time() {
+        let p = compile_source("def k(a, b):\n    x = len(a)\n    return dot(a, b)\n", None)
+            .unwrap();
+        let lp = lower_program(&p);
+        let lf = &lp.funcs[p.entry];
+        assert!(lf.code.iter().any(|i| matches!(i, LIns::CallPure(Builtin::Len, _))));
+        assert!(lf.code.iter().any(|i| matches!(i, LIns::CallTensor(Builtin::Dot, _))));
+    }
+}

@@ -33,13 +33,17 @@ pub mod compiler;
 pub mod fuse;
 pub mod interp;
 pub mod lexer;
+pub mod lower;
 pub mod parser;
 pub mod symbol;
+pub mod tier;
 pub mod value;
 
 pub use builtins::{Builtin, TensorOp};
 pub use interp::{CostCounters, Interp, Outcome, VmSnapshot};
+pub use lower::{lower_program, LinearProgram};
 pub use symbol::SymbolTable;
+pub use tier::TierChoice;
 pub use value::Value;
 
 use crate::error::Result;

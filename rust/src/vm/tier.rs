@@ -1,0 +1,559 @@
+//! The compiled execution tier: a direct-dispatch loop over the lowered
+//! linear IR of [`super::lower`].
+//!
+//! [`run_compiled`] is the compiled counterpart of `Interp::run` — the
+//! interpreter transparently branches here when a lowered program is
+//! attached ([`super::Interp::attach_lowered`]). It executes
+//! [`super::lower::LIns`] with **no `Op` matching, no symbol lookup and no
+//! fused-group re-decode**: operands, jump targets and builtin bindings
+//! were resolved at lower time, and the merged back-edge instructions
+//! retire an entire `bump; jump; test` loop edge per host dispatch.
+//!
+//! Every interpreter observable is preserved bit-for-bit:
+//!
+//! * values, error messages and their order, the print log, symbol-table
+//!   access records;
+//! * [`super::CostCounters`] — each instruction charges its constituents'
+//!   dispatch weights through the same `charge_group` helper as the
+//!   interpreter, in the same sequence, so fuel exhaustion fires at the
+//!   identical dispatch count with the identical message;
+//! * suspension points ([`super::Outcome`]) — external reads/writes and
+//!   tensor calls suspend exactly where the interpreter does, which keeps
+//!   preemption, checkpointing, migration and the launch verifier working
+//!   unchanged on compiled kernels (snapshots convert instruction
+//!   pointers through the lowered pc ↔ ip maps and are tier-portable).
+//!
+//! What changes is host cost only: the spin-loop class of kernels retires
+//! ~2 bytecode-equivalent ops per dispatch-loop iteration (measure with
+//! [`super::Interp::host_steps`]), which is where the ≥2× per-op host
+//! overhead win of the compiled tier comes from.
+
+use super::builtins::TensorOp;
+use super::interp::{charge_group, check_fuel, load_local, store_local};
+use super::interp::{Frame, FusedAccum, Interp, Outcome, Pending};
+use super::lower::LIns;
+use super::value::Value;
+use super::bytecode::{CmpKind, Op};
+use crate::error::{Error, Result};
+
+/// Which execution tier runs a kernel: selected per launch via
+/// `OffloadOptions::tier`, defaulted per session, surfaced on the CLI as
+/// `--tier interp|compiled|auto`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TierChoice {
+    /// The fused bytecode interpreter (the default; virtual-time baseline
+    /// of every pinned differential).
+    #[default]
+    Interp,
+    /// The compiled direct-dispatch tier (post-fusion lowering; identical
+    /// observables, lower host overhead, compiled-image `code_bytes`).
+    Compiled,
+    /// Let the engine decide per kernel: compile once a kernel's launch
+    /// repeats or its dispatch volume crosses the hot threshold, unless
+    /// the compiled image would bust the local-store code budget.
+    Auto,
+}
+
+impl TierChoice {
+    /// Parse a CLI spelling (`interp`, `compiled`, `auto`).
+    pub fn parse(s: &str) -> Option<TierChoice> {
+        match s {
+            "interp" => Some(TierChoice::Interp),
+            "compiled" => Some(TierChoice::Compiled),
+            "auto" => Some(TierChoice::Auto),
+            _ => None,
+        }
+    }
+
+    /// The CLI spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            TierChoice::Interp => "interp",
+            TierChoice::Compiled => "compiled",
+            TierChoice::Auto => "auto",
+        }
+    }
+}
+
+/// `AugAddConst*` semantics shared by the merged back-edge instructions:
+/// load, add, store through the interpreter's own helpers (same symbol
+/// records, same errors).
+fn aug_add(vm: &mut Interp, slot: u16, rhs: Value, line: usize) -> Result<()> {
+    let l = load_local(vm.frames.last_mut().expect("frame"), slot, line)?;
+    let v = vm.arith(&Op::Add, l, rhs, line)?;
+    store_local(vm.frames.last_mut().expect("frame"), slot, v);
+    Ok(())
+}
+
+/// `BranchCmpLL` test semantics: load both slots (recording the reads),
+/// convert rhs first (the unfused sequence's order), evaluate.
+fn branch_test(vm: &mut Interp, a: u16, b: u16, cmp: CmpKind, line: usize) -> Result<bool> {
+    let frame = vm.frames.last_mut().expect("frame");
+    let l = load_local(frame, a, line)?;
+    let r = load_local(frame, b, line)?;
+    let rf = r.as_f64()?;
+    let lf = l.as_f64()?;
+    Ok(cmp.eval(lf, rf))
+}
+
+/// Run `vm` on the compiled tier until completion or the next suspension.
+/// Pre-condition (enforced by `Interp::run`): not currently suspended and
+/// a lowered program is attached.
+pub(super) fn run_compiled(vm: &mut Interp) -> Result<Outcome> {
+    let lowered = vm.lowered.clone().expect("compiled tier without a lowered program");
+    loop {
+        vm.steps += 1;
+        let frame = vm.frames.last_mut().expect("frame");
+        let lf = &lowered.funcs[frame.func];
+        debug_assert!(frame.ip < lf.code.len(), "fell off lowered code");
+        let pc = frame.ip;
+        frame.ip = pc + 1;
+        let line = lf.lines[pc];
+
+        macro_rules! vm_err {
+            ($($arg:tt)*) => {
+                return Err(Error::Vm(format!("line {line}: {}", format!($($arg)*))))
+            };
+        }
+
+        match lf.code[pc] {
+            LIns::ConstF(v) => {
+                charge_group(&mut vm.counters, vm.fuel, 1)?;
+                vm.stack.push(Value::Float(v));
+            }
+            LIns::ConstI(v) => {
+                charge_group(&mut vm.counters, vm.fuel, 1)?;
+                vm.stack.push(Value::Int(v));
+            }
+            LIns::ConstB(v) => {
+                charge_group(&mut vm.counters, vm.fuel, 1)?;
+                vm.stack.push(Value::Bool(v));
+            }
+            LIns::ConstNone => {
+                charge_group(&mut vm.counters, vm.fuel, 1)?;
+                vm.stack.push(Value::None);
+            }
+            LIns::ConstStr(ref s) => {
+                charge_group(&mut vm.counters, vm.fuel, 1)?;
+                vm.stack.push(Value::Str(s.clone()));
+            }
+            LIns::Load(slot) => {
+                charge_group(&mut vm.counters, vm.fuel, 1)?;
+                let v = load_local(vm.frames.last_mut().expect("frame"), slot, line)?;
+                vm.stack.push(v);
+            }
+            LIns::Store(slot) => {
+                charge_group(&mut vm.counters, vm.fuel, 1)?;
+                let v = vm.pop()?;
+                store_local(vm.frames.last_mut().expect("frame"), slot, v);
+            }
+            LIns::NewList(count) => {
+                charge_group(&mut vm.counters, vm.fuel, 1)?;
+                let count = count as usize;
+                let at = vm.stack.len() - count;
+                let items: Result<Vec<f64>> = vm.stack.drain(at..).map(|v| v.as_f64()).collect();
+                match items {
+                    Ok(v) => vm.stack.push(Value::array(v)),
+                    Err(e) => return Err(e),
+                }
+            }
+            LIns::Index => {
+                charge_group(&mut vm.counters, vm.fuel, 1)?;
+                let idx = vm.pop()?;
+                let obj = vm.pop()?;
+                match obj {
+                    Value::Array(a) => {
+                        let i = idx.as_index()?;
+                        let b = a.borrow();
+                        match b.get(i) {
+                            Some(&v) => vm.stack.push(Value::Float(v)),
+                            None => vm_err!("index {i} out of range (len {})", b.len()),
+                        }
+                    }
+                    Value::External(slot) => {
+                        let i = idx.as_index()?;
+                        let len = vm.ext_lens[slot];
+                        if i >= len {
+                            vm_err!("external index {i} out of range (len {len})");
+                        }
+                        vm.counters.ext_reads += 1;
+                        vm.pending = Some(Pending::ReadValue);
+                        return Ok(Outcome::ExtRead { slot, index: i });
+                    }
+                    other => vm_err!("cannot index {}", other.type_name()),
+                }
+            }
+            LIns::StoreIndex => {
+                charge_group(&mut vm.counters, vm.fuel, 1)?;
+                let val = vm.pop()?;
+                let idx = vm.pop()?;
+                let obj = vm.pop()?;
+                match obj {
+                    Value::Array(a) => {
+                        let i = idx.as_index()?;
+                        let x = val.as_f64()?;
+                        let mut b = a.borrow_mut();
+                        let len = b.len();
+                        match b.get_mut(i) {
+                            Some(p) => *p = x,
+                            None => vm_err!("index {i} out of range (len {len})"),
+                        }
+                    }
+                    Value::External(slot) => {
+                        let i = idx.as_index()?;
+                        let len = vm.ext_lens[slot];
+                        if i >= len {
+                            vm_err!("external index {i} out of range (len {len})");
+                        }
+                        let x = val.as_f64()?;
+                        vm.counters.ext_writes += 1;
+                        vm.pending = Some(Pending::WriteAck);
+                        return Ok(Outcome::ExtWrite { slot, index: i, value: x });
+                    }
+                    other => vm_err!("cannot index-assign {}", other.type_name()),
+                }
+            }
+            LIns::Arith(kind) => {
+                charge_group(&mut vm.counters, vm.fuel, 1)?;
+                let r = vm.pop()?;
+                let l = vm.pop()?;
+                let v = vm.arith(kind.op(), l, r, line)?;
+                vm.stack.push(v);
+            }
+            LIns::Neg => {
+                charge_group(&mut vm.counters, vm.fuel, 1)?;
+                let v = vm.pop()?;
+                let out = match v {
+                    Value::Int(i) => Value::Int(-i),
+                    Value::Float(f) => {
+                        vm.counters.flops += 1;
+                        Value::Float(-f)
+                    }
+                    other => vm_err!("cannot negate {}", other.type_name()),
+                };
+                vm.stack.push(out);
+            }
+            LIns::Not => {
+                charge_group(&mut vm.counters, vm.fuel, 1)?;
+                let v = vm.pop()?;
+                vm.stack.push(Value::Bool(!v.truthy()));
+            }
+            LIns::Cmp(cmp) => {
+                charge_group(&mut vm.counters, vm.fuel, 1)?;
+                let r = vm.pop()?.as_f64()?;
+                let l = vm.pop()?.as_f64()?;
+                vm.stack.push(Value::Bool(cmp.eval(l, r)));
+            }
+            LIns::CmpEq(want_eq) => {
+                charge_group(&mut vm.counters, vm.fuel, 1)?;
+                let r = vm.pop()?;
+                let l = vm.pop()?;
+                let eq = l.py_eq(&r);
+                vm.stack.push(Value::Bool(if want_eq { eq } else { !eq }));
+            }
+            LIns::Jump(t) => {
+                charge_group(&mut vm.counters, vm.fuel, 1)?;
+                vm.frames.last_mut().expect("frame").ip = t as usize;
+            }
+            LIns::JumpIfFalse(t) => {
+                charge_group(&mut vm.counters, vm.fuel, 1)?;
+                let v = vm.pop()?;
+                if !v.truthy() {
+                    vm.frames.last_mut().expect("frame").ip = t as usize;
+                }
+            }
+            LIns::JumpIfFalsePeek(t) => {
+                charge_group(&mut vm.counters, vm.fuel, 1)?;
+                if !vm.peek()?.truthy() {
+                    vm.frames.last_mut().expect("frame").ip = t as usize;
+                }
+            }
+            LIns::JumpIfTruePeek(t) => {
+                charge_group(&mut vm.counters, vm.fuel, 1)?;
+                if vm.peek()?.truthy() {
+                    vm.frames.last_mut().expect("frame").ip = t as usize;
+                }
+            }
+            LIns::Pop => {
+                charge_group(&mut vm.counters, vm.fuel, 1)?;
+                vm.pop()?;
+            }
+            LIns::CallFunc(fid, argc) => {
+                charge_group(&mut vm.counters, vm.fuel, 1)?;
+                let fid = fid as usize;
+                let argc = argc as usize;
+                let callee = &vm.program.functions[fid];
+                if callee.params != argc {
+                    vm_err!("{}() takes {} arguments, got {argc}", callee.name, callee.params);
+                }
+                if vm.frames.len() >= 64 {
+                    vm_err!("call depth limit (64) exceeded");
+                }
+                let at = vm.stack.len() - argc;
+                let mut locals: Vec<Value> = vm.stack.drain(at..).collect();
+                locals.resize(callee.nlocals, Value::None);
+                let mut symbols = callee.symbols.clone();
+                for (slot, v) in locals.iter().enumerate() {
+                    if matches!(v, Value::External(_)) {
+                        symbols.set_external(slot, true);
+                    }
+                }
+                vm.frames.push(Frame { func: fid, ip: 0, locals, symbols });
+            }
+            LIns::CallPure(b, argc) => {
+                charge_group(&mut vm.counters, vm.fuel, 1)?;
+                let argc = argc as usize;
+                if vm.stack.len() < argc {
+                    return Err(Error::Vm("stack underflow".into()));
+                }
+                let v = if argc <= 4 {
+                    let mut buf = [Value::None, Value::None, Value::None, Value::None];
+                    for j in (0..argc).rev() {
+                        buf[j] = vm.stack.pop().expect("checked above");
+                    }
+                    vm.pure_builtin(b, &buf[..argc], line)?
+                } else {
+                    let at = vm.stack.len() - argc;
+                    let args: Vec<Value> = vm.stack.drain(at..).collect();
+                    vm.pure_builtin(b, &args, line)?
+                };
+                vm.stack.push(v);
+            }
+            LIns::CallTensor(b, argc) => {
+                charge_group(&mut vm.counters, vm.fuel, 1)?;
+                let argc = argc as usize;
+                if vm.stack.len() < argc {
+                    return Err(Error::Vm("stack underflow".into()));
+                }
+                let at = vm.stack.len() - argc;
+                let args: Vec<Value> = vm.stack.drain(at..).collect();
+                vm.counters.tensor_calls += 1;
+                vm.pending = Some(Pending::TensorValue);
+                return Ok(Outcome::Tensor(TensorOp { builtin: b, args }));
+            }
+            LIns::BadBuiltin(bid) => {
+                charge_group(&mut vm.counters, vm.fuel, 1)?;
+                vm_err!("bad builtin id {bid}");
+            }
+            LIns::Return => {
+                charge_group(&mut vm.counters, vm.fuel, 1)?;
+                let v = vm.pop()?;
+                let done_frame = vm.frames.pop().expect("frame");
+                if vm.frames.is_empty() {
+                    vm.finished_symbols = Some(done_frame.symbols);
+                    return Ok(Outcome::Done(v));
+                }
+                vm.stack.push(v);
+            }
+            LIns::AugAddConstI(slot, k) => {
+                charge_group(&mut vm.counters, vm.fuel, 4)?;
+                aug_add(vm, slot, Value::Int(k), line)?;
+            }
+            LIns::AugAddConstF(slot, k) => {
+                charge_group(&mut vm.counters, vm.fuel, 4)?;
+                aug_add(vm, slot, Value::Float(k), line)?;
+            }
+            LIns::AugAddLocal(dst, src) => {
+                charge_group(&mut vm.counters, vm.fuel, 4)?;
+                let frame = vm.frames.last_mut().expect("frame");
+                let l = load_local(frame, dst, line)?;
+                let r = load_local(frame, src, line)?;
+                let v = vm.arith(&Op::Add, l, r, line)?;
+                store_local(vm.frames.last_mut().expect("frame"), dst, v);
+            }
+            LIns::BranchCmpLL(a, b, cmp, t) => {
+                charge_group(&mut vm.counters, vm.fuel, 4)?;
+                if !branch_test(vm, a, b, cmp, line)? {
+                    vm.frames.last_mut().expect("frame").ip = t as usize;
+                }
+            }
+            LIns::AccumIndexLLL(acc, obj, idx) => {
+                // The interpreter's loop top reserves the whole unfused
+                // length (6) before executing anything; replicate that
+                // check, then charge the constituents as it does.
+                check_fuel(&vm.counters, vm.fuel, 6)?;
+                charge_group(&mut vm.counters, vm.fuel, 4)?;
+                let frame = vm.frames.last_mut().expect("frame");
+                let accv = load_local(frame, acc, line)?;
+                let objv = load_local(frame, obj, line)?;
+                let idxv = load_local(frame, idx, line)?;
+                match objv {
+                    Value::Array(arr) => {
+                        let i = idxv.as_index()?;
+                        let elem = {
+                            let b = arr.borrow();
+                            match b.get(i) {
+                                Some(&v) => v,
+                                None => {
+                                    vm_err!("index {i} out of range (len {})", b.len())
+                                }
+                            }
+                        };
+                        charge_group(&mut vm.counters, vm.fuel, 2)?; // Add; Store
+                        let v = vm.arith(&Op::Add, accv, Value::Float(elem), line)?;
+                        store_local(vm.frames.last_mut().expect("frame"), acc, v);
+                    }
+                    Value::External(slot) => {
+                        let i = idxv.as_index()?;
+                        let len = vm.ext_lens[slot];
+                        if i >= len {
+                            vm_err!("external index {i} out of range (len {len})");
+                        }
+                        vm.counters.ext_reads += 1;
+                        vm.pending = Some(Pending::ReadValue);
+                        vm.fused_accum = Some(FusedAccum { slot: acc, acc: accv, line });
+                        return Ok(Outcome::ExtRead { slot, index: i });
+                    }
+                    other => vm_err!("cannot index {}", other.type_name()),
+                }
+            }
+            // Merged back edges: charge and execute constituent by
+            // constituent, so fuel exhaustion and error ordering are
+            // indistinguishable from the interpreter running the
+            // unmerged sequence.
+            LIns::IncJmpI { slot, k, target } => {
+                charge_group(&mut vm.counters, vm.fuel, 4)?;
+                aug_add(vm, slot, Value::Int(k), line)?;
+                charge_group(&mut vm.counters, vm.fuel, 1)?;
+                vm.frames.last_mut().expect("frame").ip = target as usize;
+            }
+            LIns::IncJmpF { slot, k, target } => {
+                charge_group(&mut vm.counters, vm.fuel, 4)?;
+                aug_add(vm, slot, Value::Float(k), line)?;
+                charge_group(&mut vm.counters, vm.fuel, 1)?;
+                vm.frames.last_mut().expect("frame").ip = target as usize;
+            }
+            LIns::IncLoopI { slot, k, a, b, cmp, body, exit, bline } => {
+                charge_group(&mut vm.counters, vm.fuel, 4)?;
+                aug_add(vm, slot, Value::Int(k), line)?;
+                charge_group(&mut vm.counters, vm.fuel, 1)?; // the Jump
+                charge_group(&mut vm.counters, vm.fuel, 4)?; // the replayed head
+                let taken = branch_test(vm, a, b, cmp, bline as usize)?;
+                vm.frames.last_mut().expect("frame").ip =
+                    if taken { body as usize } else { exit as usize };
+            }
+            LIns::IncLoopF { slot, k, a, b, cmp, body, exit, bline } => {
+                charge_group(&mut vm.counters, vm.fuel, 4)?;
+                aug_add(vm, slot, Value::Float(k), line)?;
+                charge_group(&mut vm.counters, vm.fuel, 1)?; // the Jump
+                charge_group(&mut vm.counters, vm.fuel, 4)?; // the replayed head
+                let taken = branch_test(vm, a, b, cmp, bline as usize)?;
+                vm.frames.last_mut().expect("frame").ip =
+                    if taken { body as usize } else { exit as usize };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vm::lower::lower_program;
+    use crate::vm::{compile_source, CostCounters};
+    use std::rc::Rc;
+
+    fn pair(src: &str, args: Vec<Value>, ext_lens: Vec<usize>) -> (Interp, Interp) {
+        let p = Rc::new(compile_source(src, None).unwrap());
+        let lp = Rc::new(lower_program(&p));
+        let interp = Interp::new(p.clone(), 0, 16, args.clone(), ext_lens.clone()).unwrap();
+        let mut compiled = Interp::new(p, 0, 16, args, ext_lens).unwrap();
+        compiled.attach_lowered(lp);
+        (interp, compiled)
+    }
+
+    fn assert_counters_eq(a: CostCounters, b: CostCounters) {
+        assert_eq!(a.dispatches, b.dispatches, "dispatches");
+        assert_eq!(a.flops, b.flops, "flops");
+        assert_eq!(a.ext_reads, b.ext_reads, "ext_reads");
+        assert_eq!(a.ext_writes, b.ext_writes, "ext_writes");
+        assert_eq!(a.tensor_calls, b.tensor_calls, "tensor_calls");
+    }
+
+    #[test]
+    fn compiled_spin_matches_interp_and_halves_host_steps() {
+        let src = "def kernel(n):\n    i = 0\n    acc = 0\n    while i < n:\n        acc += i\n        i += 1\n    return acc\n";
+        let (mut a, mut b) = pair(src, vec![Value::Int(10_000)], vec![]);
+        let Outcome::Done(va) = a.run().unwrap() else { panic!() };
+        let Outcome::Done(vb) = b.run().unwrap() else { panic!() };
+        assert_eq!(va.as_i64().unwrap(), vb.as_i64().unwrap());
+        assert_counters_eq(a.counters(), b.counters());
+        // Structural 2×: the interpreter retires 4 host dispatches per
+        // loop iteration (BranchCmpLL; AugAddLocal; AugAddConstI; Jump),
+        // the compiled tier 2 (AugAddLocal; IncLoopI).
+        let ratio = a.host_steps() as f64 / b.host_steps() as f64;
+        assert!(ratio >= 1.99, "compiled tier must halve host dispatch-loop iterations: {ratio}");
+    }
+
+    #[test]
+    fn compiled_externals_suspend_identically() {
+        let src = "def kernel(x):\n    s = 0.0\n    i = 0\n    while i < 3:\n        s += x[i]\n        i += 1\n    x[3] = s\n    return s\n";
+        let (mut a, mut b) = pair(src, vec![Value::External(0)], vec![4]);
+        let mut oa = a.run().unwrap();
+        let mut ob = b.run().unwrap();
+        for v in [2.0, 3.0, 5.0] {
+            let (Outcome::ExtRead { slot: sa, index: ia }, Outcome::ExtRead { slot: sb, index: ib }) =
+                (&oa, &ob)
+            else {
+                panic!("both suspend on reads: {oa:?} {ob:?}")
+            };
+            assert_eq!((sa, ia), (sb, ib));
+            oa = a.resume(Value::Float(v)).unwrap();
+            ob = b.resume(Value::Float(v)).unwrap();
+        }
+        let (Outcome::ExtWrite { value: va, .. }, Outcome::ExtWrite { value: vb, .. }) = (&oa, &ob)
+        else {
+            panic!("both suspend on the write: {oa:?} {ob:?}")
+        };
+        assert_eq!(va, vb);
+        let Outcome::Done(ra) = a.resume(Value::None).unwrap() else { panic!() };
+        let Outcome::Done(rb) = b.resume(Value::None).unwrap() else { panic!() };
+        assert_eq!(ra.as_f64().unwrap(), 10.0);
+        assert_eq!(rb.as_f64().unwrap(), 10.0);
+        assert_counters_eq(a.counters(), b.counters());
+    }
+
+    #[test]
+    fn compiled_fuel_exhaustion_is_bit_identical() {
+        let src = "def kernel(n):\n    i = 0\n    while i < n:\n        i += 1\n    return i\n";
+        // Learn the exact completion cost, then probe every budget at and
+        // below it: same Ok/Err outcome, same message, same counters.
+        let (mut full, _) = pair(src, vec![Value::Int(50)], vec![]);
+        full.run().unwrap();
+        let total = full.counters().dispatches;
+        for fuel in [0, 1, 2, 3, 5, 7, total / 2, total - 1, total] {
+            let (mut a, mut b) = pair(src, vec![Value::Int(50)], vec![]);
+            a.set_fuel(fuel);
+            b.set_fuel(fuel);
+            let ra = a.run();
+            let rb = b.run();
+            match (ra, rb) {
+                (Ok(_), Ok(_)) => {}
+                (Err(ea), Err(eb)) => assert_eq!(ea.to_string(), eb.to_string(), "fuel {fuel}"),
+                (ra, rb) => panic!("tiers diverge at fuel {fuel}: {ra:?} vs {rb:?}"),
+            }
+            assert_counters_eq(a.counters(), b.counters());
+        }
+    }
+
+    #[test]
+    fn compiled_print_and_recursion_match() {
+        let src = "def fib(n):\n    if n < 2:\n        return n\n    return fib(n - 1) + fib(n - 2)\n\ndef kernel(n):\n    print('go')\n    return fib(n)\n";
+        let (mut a, mut b) = pair(src, vec![Value::Int(12)], vec![]);
+        let Outcome::Done(va) = a.run().unwrap() else { panic!() };
+        let Outcome::Done(vb) = b.run().unwrap() else { panic!() };
+        assert_eq!(va.as_i64().unwrap(), 144);
+        assert_eq!(vb.as_i64().unwrap(), 144);
+        assert_eq!(a.print_log(), b.print_log());
+        assert_counters_eq(a.counters(), b.counters());
+    }
+
+    #[test]
+    fn tier_choice_parses_cli_spellings() {
+        assert_eq!(TierChoice::parse("interp"), Some(TierChoice::Interp));
+        assert_eq!(TierChoice::parse("compiled"), Some(TierChoice::Compiled));
+        assert_eq!(TierChoice::parse("auto"), Some(TierChoice::Auto));
+        assert_eq!(TierChoice::parse("jit"), None);
+        assert_eq!(TierChoice::Compiled.name(), "compiled");
+        assert_eq!(TierChoice::default(), TierChoice::Interp);
+    }
+}

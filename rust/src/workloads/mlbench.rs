@@ -64,7 +64,8 @@
 
 use crate::coordinator::{
     Access, ArgSpec, DeviceId, GroupArgSpec, GroupLaunchBuilder, GroupSession, OffloadHandle,
-    OffloadOptions, OffloadResult, PrefetchChoice, PrefetchSpec, Session, TransferMode,
+    OffloadOptions, OffloadResult, PrefetchChoice, PrefetchSpec, Session, TierChoice,
+    TierCounters, TransferMode,
 };
 use crate::device::Technology;
 use crate::error::{Error, Result};
@@ -173,6 +174,11 @@ pub struct MlBenchConfig {
     pub retry: u32,
     /// Virtual-time backoff charged before each retry's restore.
     pub backoff: Time,
+    /// Execution tier for every kernel launch (`microcore mlbench
+    /// --tier`): the bytecode interpreter (default), the compiled
+    /// linear-IR tier, or `Auto` promotion. Numerics and dispatch counts
+    /// are identical across tiers.
+    pub tier: TierChoice,
 }
 
 impl MlBenchConfig {
@@ -201,6 +207,7 @@ impl MlBenchConfig {
             staged: false,
             retry: 0,
             backoff: 0,
+            tier: TierChoice::Interp,
         }
     }
 
@@ -226,6 +233,7 @@ impl MlBenchConfig {
             staged: false,
             retry: 0,
             backoff: 0,
+            tier: TierChoice::Interp,
         }
     }
 }
@@ -258,6 +266,10 @@ pub struct MlBenchResult {
     /// Image-store cache accounting (`None` unless
     /// [`MlBenchConfig::cache`] was set).
     pub cache: Option<CacheCounters>,
+    /// Per-tier execution accounting for the whole run (interpreter vs
+    /// compiled launches/dispatches — all-interpreter unless
+    /// [`MlBenchConfig::tier`] was changed).
+    pub tiers: TierCounters,
 }
 
 /// Host-side output of the fused head after a feed-forward phase.
@@ -418,7 +430,10 @@ impl Replica {
     }
 
     fn options(&self) -> OffloadOptions {
-        let base = OffloadOptions::default().retry(self.cfg.retry).backoff(self.cfg.backoff);
+        let base = OffloadOptions::default()
+            .retry(self.cfg.retry)
+            .backoff(self.cfg.backoff)
+            .tier(self.cfg.tier);
         match self.cfg.mode {
             TransferMode::Eager => base.transfer(TransferMode::Eager),
             TransferMode::OnDemand => base.transfer(TransferMode::OnDemand),
@@ -662,6 +677,7 @@ impl MlBench {
             requests,
             stall,
             cache,
+            tiers: self.session.tier_counters(),
         })
     }
 }

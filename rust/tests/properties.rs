@@ -3,7 +3,8 @@
 use std::collections::BTreeMap;
 
 use microcore::coordinator::{
-    Access, ArgSpec, DeviceId, OffloadOptions, OffloadResult, PrefetchSpec, Session, TransferMode,
+    Access, ArgSpec, DeviceId, OffloadOptions, OffloadResult, PrefetchSpec, Session, TierChoice,
+    TransferMode,
 };
 use microcore::device::Technology;
 use microcore::error::Error;
@@ -709,6 +710,100 @@ fn prop_launch_dag_fault_recovery_is_value_transparent() {
         Ok(())
     });
     assert!(fired.get() > 0, "no fault in the whole seed set ever fired — plan horizon broken?");
+}
+
+/// Wait-free drive of `spec` with every launch pinned to `tier`, reduced
+/// to the observables the execution tiers must agree on bit-for-bit:
+/// per-launch per-core `(core, value, dispatches, flops)` plus the final
+/// buffer contents. Virtual times and stats are deliberately excluded —
+/// the compiled tier pushes a different code-image size, so timestamps
+/// legitimately differ.
+type TierCoreObs = (usize, String, u64, u64);
+
+fn dag_tier_values(
+    spec: &DagSpec,
+    tier: TierChoice,
+) -> Result<(Vec<Vec<TierCoreObs>>, Vec<Vec<f32>>), String> {
+    let mut sess =
+        Session::builder(Technology::epiphany3()).seed(7).build().map_err(|e| e.to_string())?;
+    let mut bufs = Vec::new();
+    for (i, &l) in spec.buf_lens.iter().enumerate() {
+        bufs.push(
+            sess.alloc(MemSpec::host(format!("b{i}")).from(&vec![1.0; l]))
+                .map_err(|e| e.to_string())?,
+        );
+    }
+    sess.compile_kernel("r", DAG_READER).map_err(|e| e.to_string())?;
+    sess.compile_kernel("w", DAG_WRITER).map_err(|e| e.to_string())?;
+    let mut handles = Vec::new();
+    for l in &spec.launches {
+        let dref = bufs[l.buf].slice(l.window.0, l.window.1);
+        let (name, arg) = match l.kernel {
+            DagKernel::Writer => ("w", ArgSpec::sharded_mut(dref)),
+            _ => ("r", ArgSpec::sharded(dref)),
+        };
+        let mut b = sess
+            .launch_named(name)
+            .map_err(|e| e.to_string())?
+            .arg(arg)
+            .mode(TransferMode::OnDemand)
+            .cores(l.cores.clone())
+            .tier(tier);
+        for &d in &l.after {
+            b = b.after(handles[d]);
+        }
+        handles.push(b.submit().map_err(|e| e.to_string())?);
+    }
+    let mut launches = Vec::with_capacity(handles.len());
+    for (i, h) in handles.iter().enumerate() {
+        let res = h.wait(&mut sess).map_err(|e| format!("launch {i} failed: {e}"))?;
+        launches.push(
+            res.reports
+                .iter()
+                .map(|r| {
+                    (r.core, format!("{:?}", r.value), r.counters.dispatches, r.counters.flops)
+                })
+                .collect(),
+        );
+    }
+    let buffers = bufs
+        .iter()
+        .map(|&b| sess.read(b).map_err(|e| e.to_string()))
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok((launches, buffers))
+}
+
+/// The compiled tier's differential (this PR's invariant): for any random
+/// failure-free DAG, pinning every launch to `TierChoice::Compiled`
+/// produces bit-identical per-core values, dispatch/flop counters and
+/// final buffer contents to the interpreter tier. 100 seeds in tier-1;
+/// `MICROCORE_FUZZ_TIER=1` selects the 1000-case nightly sweep
+/// (`MICROCORE_FUZZ_CASES` overrides for local bisection).
+#[test]
+fn prop_launch_dag_compiled_tier_matches_interp() {
+    let cases = if std::env::var("MICROCORE_FUZZ_TIER").is_ok_and(|v| v == "1") {
+        1000
+    } else {
+        std::env::var("MICROCORE_FUZZ_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(100)
+    };
+    check("launch-dag-compiled-tier", 0xDA6_0006, cases, |g: &mut Gen| {
+        let cfg =
+            DagConfig { max_launches: 5, device_cores: 16, serialize: false, failures: false };
+        let spec = gen_dag(g, &cfg);
+        let interp = dag_tier_values(&spec, TierChoice::Interp)?;
+        let compiled = dag_tier_values(&spec, TierChoice::Compiled)?;
+        if interp.0 != compiled.0 {
+            return Err(format!(
+                "per-core values/counters diverged across tiers\nspec: {spec:?}\n\
+                 interp: {:?}\ncompiled: {:?}",
+                interp.0, compiled.0
+            ));
+        }
+        if interp.1 != compiled.1 {
+            return Err(format!("final buffer contents diverged across tiers\nspec: {spec:?}"));
+        }
+        Ok(())
+    });
 }
 
 /// `drive_dag` under `VerifyLevel::Warn` with runtime access recording on:

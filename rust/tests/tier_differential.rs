@@ -1,0 +1,451 @@
+//! Differential tests: the compiled execution tier (post-fusion lowering
+//! to the direct-dispatch linear IR of `vm::lower` / `vm::tier`) must be
+//! *bit-identical* to the bytecode interpreter in every modelled
+//! observable — result values, cost counters, print logs, suspension
+//! sequences, fuel-exhaustion errors and checkpoint contents. The only
+//! thing allowed to change is host-side dispatch-loop work (`host_steps`),
+//! which is the whole point of the tier.
+
+use std::rc::Rc;
+
+use microcore::coordinator::{ArgSpec, Kernel, Session, TierChoice};
+use microcore::device::Technology;
+use microcore::memory::MemSpec;
+use microcore::vm::{compile_source, lower_program, CostCounters, Interp, Outcome, Value};
+
+// ---- kernel corpus (mirrors fusion_differential's) ----------------------
+
+const LISTING1: &str = r#"
+def mykernel(a, b):
+    ret_data = [0.0] * len(a)
+    i = 0
+    while i < len(a):
+        ret_data[i] = a[i] + b[i]
+        i += 1
+    return ret_data
+"#;
+
+const FIB: &str = r#"
+def fib(n):
+    if n < 2:
+        return n
+    return fib(n - 1) + fib(n - 2)
+
+def kernel(n):
+    return fib(n)
+"#;
+
+const RANGE_AUG: &str = r#"
+def kernel(n):
+    total = 0
+    for i in range(1, n + 1):
+        total += i
+    return total
+"#;
+
+const BREAK_CONTINUE: &str = r#"
+def kernel():
+    s = 0
+    for i in range(0, 100, 7):
+        if i == 35:
+            continue
+        if i > 70:
+            break
+        s += i
+    return s
+"#;
+
+const SPIN: &str = r#"
+def spin(n):
+    s = 0
+    i = 0
+    while i < n:
+        s += i
+        i += 1
+    return s
+"#;
+
+const STREAM: &str = r#"
+def stream(x):
+    s = 0.0
+    i = 0
+    while i < len(x):
+        s += x[i]
+        i += 1
+    return s
+"#;
+
+const PRINTY: &str = r#"
+def kernel(n):
+    s = 0.0
+    i = 0
+    while i < n:
+        s += float(i)
+        if i == 2:
+            print(s)
+        i += 1
+    print('done')
+    return s
+"#;
+
+fn assert_counters_eq(a: CostCounters, b: CostCounters, what: &str) {
+    assert_eq!(a.dispatches, b.dispatches, "{what}: dispatches");
+    assert_eq!(a.flops, b.flops, "{what}: flops");
+    assert_eq!(a.ext_reads, b.ext_reads, "{what}: ext_reads");
+    assert_eq!(a.ext_writes, b.ext_writes, "{what}: ext_writes");
+    assert_eq!(a.tensor_calls, b.tensor_calls, "{what}: tensor_calls");
+}
+
+/// Everything observable about one VM run on one tier. `steps` is the
+/// host dispatch-loop count — the one field the tiers are *allowed* (and
+/// expected) to disagree on.
+struct TierRun {
+    result: Result<Value, String>,
+    counters: CostCounters,
+    prints: Vec<String>,
+    events: Vec<String>,
+    steps: u64,
+}
+
+/// Drive one VM to completion (or fuel exhaustion), answering external
+/// reads with `read(slot, index)` and recording every suspension event
+/// with the counters at that boundary — the engine charges virtual time
+/// from exactly these deltas, so equal event logs ⇒ equal virtual time.
+fn drive(
+    src: &str,
+    compiled: bool,
+    fuel: Option<u64>,
+    args: Vec<Value>,
+    ext_lens: Vec<usize>,
+    read: impl Fn(usize, usize) -> f64,
+) -> TierRun {
+    let p = Rc::new(compile_source(src, None).unwrap());
+    let mut vm = Interp::new(p.clone(), 0, 4, args, ext_lens).unwrap();
+    if compiled {
+        vm.attach_lowered(Rc::new(lower_program(&p)));
+    }
+    if let Some(f) = fuel {
+        vm.set_fuel(f);
+    }
+    let mut events = Vec::new();
+    macro_rules! step {
+        ($e:expr) => {
+            match $e {
+                Ok(o) => o,
+                Err(err) => {
+                    return TierRun {
+                        result: Err(err.to_string()),
+                        counters: vm.counters(),
+                        prints: vm.print_log().to_vec(),
+                        events,
+                        steps: vm.host_steps(),
+                    }
+                }
+            }
+        };
+    }
+    let mut out = step!(vm.run());
+    loop {
+        let c = vm.counters();
+        match out {
+            Outcome::Done(v) => {
+                events.push(format!("done d={} f={}", c.dispatches, c.flops));
+                return TierRun {
+                    result: Ok(v),
+                    counters: c,
+                    prints: vm.print_log().to_vec(),
+                    events,
+                    steps: vm.host_steps(),
+                };
+            }
+            Outcome::ExtRead { slot, index } => {
+                events.push(format!("read {slot}[{index}] d={} f={}", c.dispatches, c.flops));
+                out = step!(vm.resume(Value::Float(read(slot, index))));
+            }
+            Outcome::ExtWrite { slot, index, value } => {
+                events.push(format!(
+                    "write {slot}[{index}]={value} d={} f={}",
+                    c.dispatches, c.flops
+                ));
+                out = step!(vm.resume(Value::None));
+            }
+            Outcome::Tensor(_) => {
+                events.push(format!("tensor d={}", c.dispatches));
+                out = step!(vm.resume(Value::Float(0.0)));
+            }
+        }
+    }
+}
+
+fn assert_same_run(
+    src: &str,
+    fuel: Option<u64>,
+    args: Vec<Value>,
+    ext_lens: Vec<usize>,
+    read: impl Fn(usize, usize) -> f64 + Copy,
+    what: &str,
+) {
+    let a = drive(src, false, fuel, args.clone(), ext_lens.clone(), read);
+    let b = drive(src, true, fuel, args, ext_lens, read);
+    match (&a.result, &b.result) {
+        (Ok(va), Ok(vb)) => assert!(va.py_eq(vb), "{what}: results differ: {va:?} vs {vb:?}"),
+        (ra, rb) => assert_eq!(ra, rb, "{what}: outcomes differ"),
+    }
+    assert_counters_eq(a.counters, b.counters, what);
+    assert_eq!(a.prints, b.prints, "{what}: print logs differ");
+    assert_eq!(a.events, b.events, "{what}: suspension event sequences differ");
+}
+
+#[test]
+fn pure_kernels_identical_across_tiers() {
+    let a = Value::array((0..10).map(f64::from).collect());
+    let b = Value::array(vec![100.0; 10]);
+    assert_same_run(LISTING1, None, vec![a, b], vec![], |_, _| 0.0, "listing1");
+    assert_same_run(FIB, None, vec![Value::Int(12)], vec![], |_, _| 0.0, "fib");
+    assert_same_run(RANGE_AUG, None, vec![Value::Int(100)], vec![], |_, _| 0.0, "range_aug");
+    assert_same_run(BREAK_CONTINUE, None, vec![], vec![], |_, _| 0.0, "break_continue");
+    assert_same_run(SPIN, None, vec![Value::Int(5000)], vec![], |_, _| 0.0, "spin");
+    assert_same_run(PRINTY, None, vec![Value::Int(10)], vec![], |_, _| 0.0, "printy");
+}
+
+#[test]
+fn external_stream_identical_suspension_sequence() {
+    // `s += x[i]` fuses to AccumIndexLLL, which must suspend at the same
+    // point with the same counters on both tiers, and complete the parked
+    // accumulator add on resume.
+    assert_same_run(
+        STREAM,
+        None,
+        vec![Value::External(0)],
+        vec![257],
+        |_, i| (i as f64) * 0.5 - 3.0,
+        "stream_external",
+    );
+}
+
+#[test]
+fn compiled_tier_halves_host_dispatch_steps() {
+    // The structural form of the ISSUE's "≥2× lower per-op host overhead":
+    // same spin, same virtual dispatches, about half the host loop trips
+    // (the merged IncLoop IR op retires a whole back-edge per trip).
+    let a = drive(SPIN, false, None, vec![Value::Int(100_000)], vec![], |_, _| 0.0);
+    let b = drive(SPIN, true, None, vec![Value::Int(100_000)], vec![], |_, _| 0.0);
+    assert_eq!(a.counters.dispatches, b.counters.dispatches, "virtual dispatches must match");
+    let ratio = a.steps as f64 / b.steps as f64;
+    assert!(
+        ratio >= 1.99,
+        "compiled tier must retire ~2x fewer host steps (interp {} vs compiled {}, {ratio:.3}x)",
+        a.steps,
+        b.steps
+    );
+}
+
+#[test]
+fn fuel_sweep_is_bit_identical_including_resume_path() {
+    // Sweep the fuel budget across the whole run so exhaustion lands on
+    // every kind of charge site at least once: merged IR groups (IncLoop
+    // charges its constituents one by one), fused interpreter arms, and —
+    // the regression this PR fixed — the suspended-accumulator resume path,
+    // which used to hand-charge its group weight without a fuel check.
+    let read = |_s: usize, i: usize| (i as f64) * 0.25 + 1.0;
+    let full = drive(STREAM, false, None, vec![Value::External(0)], vec![9], read);
+    let total = full.counters.dispatches;
+    for fuel in 0..=total {
+        let a = drive(STREAM, false, Some(fuel), vec![Value::External(0)], vec![9], read);
+        let b = drive(STREAM, true, Some(fuel), vec![Value::External(0)], vec![9], read);
+        match (&a.result, &b.result) {
+            (Ok(va), Ok(vb)) => assert!(va.py_eq(vb), "fuel={fuel}: results differ"),
+            (ra, rb) => assert_eq!(ra, rb, "fuel={fuel}: outcomes differ"),
+        }
+        assert_counters_eq(a.counters, b.counters, &format!("fuel={fuel}"));
+        assert_eq!(a.events, b.events, "fuel={fuel}: event sequences differ");
+        if fuel < total {
+            let err = a.result.unwrap_err();
+            assert!(err.contains("fuel"), "fuel={fuel}: expected a fuel error, got {err}");
+        }
+    }
+    // Same sweep over the pure spin loop (IncLoopI merged op, no
+    // suspensions) at a handful of budgets around the loop body.
+    let spin_total =
+        drive(SPIN, false, None, vec![Value::Int(40)], vec![], read).counters.dispatches;
+    for fuel in [0, 1, 5, 6, 7, 8, 9, 10, spin_total - 1, spin_total] {
+        let a = drive(SPIN, false, Some(fuel), vec![Value::Int(40)], vec![], read);
+        let b = drive(SPIN, true, Some(fuel), vec![Value::Int(40)], vec![], read);
+        match (&a.result, &b.result) {
+            (Ok(va), Ok(vb)) => assert!(va.py_eq(vb), "spin fuel={fuel}: results differ"),
+            (ra, rb) => assert_eq!(ra, rb, "spin fuel={fuel}: outcomes differ"),
+        }
+        assert_counters_eq(a.counters, b.counters, &format!("spin fuel={fuel}"));
+    }
+}
+
+#[test]
+fn checkpoints_are_tier_portable_both_directions() {
+    // Snapshots always store *bytecode* instruction pointers, so a
+    // checkpoint taken on one tier must restore into the other and replay
+    // the identical tail. Exercise both directions, snapshotting
+    // mid-stream (inside the fused accumulator's suspension).
+    let read = |_s: usize, i: usize| (i as f64) * 0.75 - 2.0;
+    let n = 33usize;
+    let reference = drive(STREAM, false, None, vec![Value::External(0)], vec![n], read);
+    let p = Rc::new(compile_source(STREAM, None).unwrap());
+
+    for (donor_compiled, twin_compiled) in [(false, true), (true, false)] {
+        let mut vm = Interp::new(p.clone(), 0, 4, vec![Value::External(0)], vec![n]).unwrap();
+        if donor_compiled {
+            vm.attach_lowered(Rc::new(lower_program(&p)));
+        }
+        let mut out = vm.run().unwrap();
+        for _ in 0..7 {
+            match out {
+                Outcome::ExtRead { slot, index } => {
+                    out = vm.resume(Value::Float(read(slot, index))).unwrap();
+                }
+                ref o => panic!("expected a streamed read suspension, got {o:?}"),
+            }
+        }
+        let Outcome::ExtRead { slot, index } = out else {
+            panic!("expected to stop mid-stream, got {out:?}");
+        };
+        let (snap, _) = vm.snapshot(&[]);
+
+        // Rebuild on the *other* tier, exactly how the engine re-activates
+        // a checkpointed launch: construct, attach the lowered image (when
+        // compiled), then restore.
+        let mut twin = Interp::new(p.clone(), 0, 4, vec![Value::External(0)], vec![n]).unwrap();
+        if twin_compiled {
+            twin.attach_lowered(Rc::new(lower_program(&p)));
+        }
+        twin.restore(&snap);
+        let mut oa = vm.resume(Value::Float(read(slot, index))).unwrap();
+        let mut ob = twin.resume(Value::Float(read(slot, index))).unwrap();
+        loop {
+            match (oa, ob) {
+                (Outcome::Done(a), Outcome::Done(b)) => {
+                    assert!(a.py_eq(&b), "cross-tier twin diverged: {a:?} vs {b:?}");
+                    let r = reference.result.as_ref().unwrap();
+                    assert!(a.py_eq(r), "interrupted run diverged from reference");
+                    break;
+                }
+                (
+                    Outcome::ExtRead { slot: sa, index: ia },
+                    Outcome::ExtRead { slot: sb, index: ib },
+                ) => {
+                    assert_eq!((sa, ia), (sb, ib), "suspensions diverged after cross-tier restore");
+                    oa = vm.resume(Value::Float(read(sa, ia))).unwrap();
+                    ob = twin.resume(Value::Float(read(sb, ib))).unwrap();
+                }
+                (a, b) => panic!("suspension kinds diverged: {a:?} vs {b:?}"),
+            }
+        }
+        let what = format!("donor compiled={donor_compiled}");
+        assert_counters_eq(vm.counters(), twin.counters(), &what);
+        assert_counters_eq(vm.counters(), reference.counters, &what);
+    }
+}
+
+// ---- engine-level differential runs -------------------------------------
+
+/// Per-core engine observation: (value, dispatches, flops, reads, writes).
+type CoreObs = (String, u64, u64, u64, u64);
+
+/// Launch one sharded-stream offload on the given tier and capture the
+/// per-core observables the tiers must agree on. Virtual times are *not*
+/// captured: the compiled tier pushes a different code-image size, so
+/// launch/finish timestamps legitimately differ.
+fn run_session(tier: TierChoice, fuel: Option<u64>) -> Result<Vec<CoreObs>, String> {
+    let mut sess = Session::builder(Technology::epiphany3()).seed(7).build().unwrap();
+    let n = 3200usize;
+    let a: Vec<f32> = (0..n).map(|i| i as f32 * 0.25).collect();
+    let ra = sess.alloc(MemSpec::host("a").from(&a)).unwrap();
+    let kernel =
+        Kernel::from_program("stream", Rc::new(compile_source(STREAM, None).unwrap()));
+    let mut lb = sess.launch(&kernel).args(&[ArgSpec::sharded(ra)]).tier(tier);
+    if let Some(f) = fuel {
+        lb = lb.fuel(f);
+    }
+    let res = lb.submit().map_err(|e| e.to_string())?.wait(&mut sess).map_err(|e| e.to_string())?;
+    Ok(res
+        .reports
+        .iter()
+        .map(|r| {
+            (
+                format!("{:?}", r.value),
+                r.counters.dispatches,
+                r.counters.flops,
+                r.counters.ext_reads,
+                r.counters.ext_writes,
+            )
+        })
+        .collect())
+}
+
+#[test]
+fn engine_launch_identical_values_and_counters_across_tiers() {
+    let interp = run_session(TierChoice::Interp, None).unwrap();
+    let compiled = run_session(TierChoice::Compiled, None).unwrap();
+    assert_eq!(interp, compiled, "per-core values/counters differ across tiers");
+}
+
+#[test]
+fn engine_fuel_exhaustion_identical_across_tiers() {
+    let interp = run_session(TierChoice::Interp, Some(100));
+    let compiled = run_session(TierChoice::Compiled, Some(100));
+    let ei = interp.unwrap_err();
+    let ec = compiled.unwrap_err();
+    assert_eq!(ei, ec, "fuel-exhaustion errors differ across tiers");
+    assert!(ei.contains("fuel"), "expected a fuel error, got {ei}");
+}
+
+#[test]
+fn auto_tier_promotes_on_second_launch_of_same_kernel() {
+    let mut sess =
+        Session::builder(Technology::epiphany3()).seed(7).tier(TierChoice::Auto).build().unwrap();
+    let kernel = Kernel::from_program("spin", Rc::new(compile_source(SPIN, None).unwrap()));
+    let mut results = Vec::new();
+    for _ in 0..2 {
+        let res = sess
+            .launch(&kernel)
+            .args(&[ArgSpec::Int(1000)])
+            .submit()
+            .unwrap()
+            .wait(&mut sess)
+            .unwrap();
+        results.push(res.reports.iter().map(|r| format!("{:?}", r.value)).collect::<Vec<_>>());
+    }
+    assert_eq!(results[0], results[1], "auto promotion changed results");
+    let t = sess.tier_counters();
+    assert_eq!(t.interp_launches, 1, "first launch should stay interpreted: {t:?}");
+    assert_eq!(t.compiled_launches, 1, "second launch should compile: {t:?}");
+    assert_eq!(t.auto_promotions, 1, "{t:?}");
+    assert_eq!(t.lowered_kernels, 1, "the program lowers exactly once: {t:?}");
+    assert_eq!(t.budget_demotions, 0, "{t:?}");
+    assert!(t.interp_dispatches > 0 && t.compiled_dispatches > 0, "{t:?}");
+    assert_eq!(t.interp_dispatches, t.compiled_dispatches, "identical work on each tier: {t:?}");
+}
+
+#[test]
+fn compiled_request_demotes_when_image_overflows_local_store() {
+    // A local store smaller than the lowered image (plus launch frame)
+    // must demote the launch back to the interpreter — the same budget
+    // the static verifier lints — rather than modelling an impossible
+    // code push. The kernel still runs, on the interpreter tier.
+    let mut tech = Technology::epiphany3();
+    tech.vm_footprint = 0;
+    tech.local_store = 64;
+    let mut sess = Session::builder(tech).seed(7).build().unwrap();
+    let kernel = Kernel::from_program("spin", Rc::new(compile_source(SPIN, None).unwrap()));
+    let res = sess
+        .launch(&kernel)
+        .args(&[ArgSpec::Int(100)])
+        .tier(TierChoice::Compiled)
+        .submit()
+        .unwrap()
+        .wait(&mut sess)
+        .unwrap();
+    assert_eq!(res.reports[0].value.as_i64().unwrap(), 99 * 100 / 2);
+    let t = sess.tier_counters();
+    assert_eq!(t.budget_demotions, 1, "{t:?}");
+    assert_eq!(t.compiled_launches, 0, "{t:?}");
+    assert_eq!(t.interp_launches, 1, "{t:?}");
+}

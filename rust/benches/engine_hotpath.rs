@@ -417,6 +417,24 @@ fn main() -> anyhow::Result<()> {
             TransferMode::Prefetch,
             ml_images,
             1,
+            1,
+        )
+        .unwrap();
+    });
+    case(&m, Some(ml_images as f64 / m.mean()));
+    // Same workload on 2 OS worker threads (one per device engine):
+    // engine invariant 14 says observables cannot move, so the delta
+    // between these two rows is pure wall-clock — the threading layer's
+    // speedup (or overhead) on a real two-device drain.
+    let m = time_wall("hetero_mlbench_2dev_2threads", warmup, iters, || {
+        hetero_mlbench(
+            Technology::epiphany3(),
+            Some(Technology::microblaze_fpu()),
+            1,
+            TransferMode::Prefetch,
+            ml_images,
+            1,
+            2,
         )
         .unwrap();
     });
@@ -429,6 +447,17 @@ fn main() -> anyhow::Result<()> {
             TransferMode::Prefetch,
             ml_images,
             1,
+            1,
+        )
+        .unwrap();
+        let threaded = hetero_mlbench(
+            Technology::epiphany3(),
+            Some(Technology::microblaze_fpu()),
+            1,
+            TransferMode::Prefetch,
+            ml_images,
+            1,
+            2,
         )
         .unwrap();
         let single = hetero_mlbench(
@@ -438,12 +467,15 @@ fn main() -> anyhow::Result<()> {
             TransferMode::Prefetch,
             ml_images,
             1,
+            1,
         )
         .unwrap();
         assert_eq!(hetero.losses, single.losses, "devices change times, never values");
+        assert_eq!(hetero.losses, threaded.losses, "threads change wall-clock, never values");
+        assert_eq!(hetero.elapsed, threaded.elapsed, "virtual time is thread-invariant");
         println!(
             "  -> staging: {} copies ({} B) across the host level; losses identical to \
-             the 1-device reference",
+             the 1-device reference and the 2-thread run",
             hetero.staging.copies, hetero.staging.bytes
         );
     }

@@ -94,7 +94,7 @@
 
 use std::cell::RefCell;
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::collections::{BTreeMap, BinaryHeap, HashMap, HashSet};
 use std::rc::Rc;
 
 use crate::analysis::{
@@ -762,8 +762,10 @@ pub struct Engine {
     /// Checkpoints rescued at device loss for launches that still had
     /// retry budget, keyed by launch id: `(last checkpoint, remaining
     /// budget)`. The multi-device group claims these to migrate work to a
-    /// surviving device ([`Engine::harvest_checkpoint`]).
-    harvested: HashMap<u64, (Option<LaunchCheckpoint>, u32)>,
+    /// surviving device ([`Engine::harvest_checkpoint`]). Ordered map:
+    /// group migration scans survivors per harvested launch, so iteration
+    /// order (if ever added) must be launch-id order, not hash order.
+    harvested: BTreeMap<u64, (Option<LaunchCheckpoint>, u32)>,
     /// Static-verifier level applied at submit ([`VerifyLevel::Off`] by
     /// default — zero analysis overhead unless opted in).
     verify: VerifyLevel,
@@ -777,11 +779,15 @@ pub struct Engine {
     observed: Vec<AccessRecord>,
     /// Kernel-summary cache keyed by program identity (`Rc::as_ptr`), so
     /// re-launching the same kernel never re-runs the fixpoint.
+    /// Lookup-only — never iterated, so hash (and address) order can
+    /// never leak into any observable (determinism sweep, PR 10).
     summaries: HashMap<usize, Rc<KernelSummary>>,
     /// Lowered linear-IR cache keyed by program identity — each program is
     /// lowered at most once, then shared by every compiled-tier launch.
+    /// Lookup-only, never iterated (see `summaries`).
     lowered: HashMap<usize, Rc<LinearProgram>>,
     /// Per-program launch/dispatch history for [`TierChoice::Auto`].
+    /// Lookup-only, never iterated (see `summaries`).
     tier_heat: HashMap<usize, TierHeat>,
     /// Per-tier execution accounting ([`Engine::tier_counters`]).
     tiers: TierCounters,
@@ -841,7 +847,7 @@ impl Engine {
             faults: None,
             fault_counters: FaultCounters::default(),
             lost_at: None,
-            harvested: HashMap::new(),
+            harvested: BTreeMap::new(),
             verify: VerifyLevel::default(),
             diagnostics: Vec::new(),
             record_accesses: false,
@@ -1163,6 +1169,18 @@ impl Engine {
     /// Current virtual time.
     pub fn now(&self) -> Time {
         self.now
+    }
+
+    /// The latest virtual time any core is reserved through — the
+    /// device's true busy-until. `now` advances only when a launch
+    /// *completes* ([`Engine::complete`]); a **failed** launch instead
+    /// releases its cores at their stamped progress via `core_free`
+    /// without ever completing, so after a failure `now` can lag the
+    /// horizon. Anything scheduling *future* work against this device
+    /// (the fleet's analytic slot watermark) must use the horizon, or it
+    /// will book an instant the device is still busy.
+    pub fn core_horizon(&self) -> Time {
+        self.core_free.iter().copied().fold(self.now, Time::max)
     }
 
     /// Energy consumed so far (Joules, integrated over offloads).

@@ -104,13 +104,14 @@
 //! merges every engine's [`crate::sim::FaultCounters`] with the group's
 //! own migration bookkeeping.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::rc::Rc;
 
 use crate::analysis::{Diagnostic, GraphReport, InferredWindow, VerifyLevel};
 use crate::device::Technology;
 use crate::error::{Error, Result};
 use crate::memory::{DataRef, Level, MemPlace, MemSpec};
+use crate::runtime::parallel;
 use crate::sim::{CacheCounters, FaultCounters, FaultPlan, StagingCounters, Time};
 
 use super::engine::{LaunchCheckpoint, LaunchId, LaunchStatus, QueueStats, TierCounters};
@@ -134,6 +135,7 @@ pub struct DeviceGroup {
     devices: Vec<Technology>,
     seed: u64,
     service_threads: usize,
+    threads: usize,
     trace_capacity: Option<usize>,
     faults: Vec<(usize, FaultPlan)>,
     verify: VerifyLevel,
@@ -152,6 +154,7 @@ impl DeviceGroup {
             devices: Vec::new(),
             seed: 42,
             service_threads: 1,
+            threads: 1,
             trace_capacity: None,
             faults: Vec::new(),
             verify: VerifyLevel::Off,
@@ -172,9 +175,25 @@ impl DeviceGroup {
         self
     }
 
-    /// Host service threads per device.
+    /// Host service threads per device — a **simulated** quantity: how
+    /// many request-service workers the cost model charges against each
+    /// device's host bus. Affects virtual time. Not to be confused with
+    /// [`DeviceGroup::threads`], the real OS-thread count, which never
+    /// does.
     pub fn service_threads(mut self, n: usize) -> Self {
         self.service_threads = n.max(1);
+        self
+    }
+
+    /// Real OS worker threads for driving the per-device engines
+    /// ([`crate::runtime::parallel`]). Default 1 — the serial loop,
+    /// byte-identical to the pre-threading code path. Any `n` produces
+    /// bit-identical traces, stats, clocks and reports (engine invariant
+    /// 14): devices interact only at host-level barriers, and all
+    /// cross-thread merges happen there in device-index order. Changes
+    /// wall-clock only.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n.max(1);
         self
     }
 
@@ -232,12 +251,13 @@ impl DeviceGroup {
         Ok(GroupSession {
             sessions,
             bufs: Vec::new(),
-            parked: HashMap::new(),
+            parked: BTreeMap::new(),
             staging: StagingCounters::default(),
-            relaunch: HashMap::new(),
+            relaunch: BTreeMap::new(),
             faults: FaultCounters::default(),
-            flow_windows: HashMap::new(),
+            flow_windows: BTreeMap::new(),
             next_seq: 0,
+            threads: self.threads,
         })
     }
 }
@@ -442,11 +462,11 @@ pub struct GroupSession {
     bufs: Vec<GroupBuf>,
     /// Errors parked for launches abandoned before reaching an engine,
     /// keyed by group sequence number; claimed by the handle's `wait`.
-    parked: HashMap<u64, Error>,
+    parked: BTreeMap<u64, Error>,
     staging: StagingCounters,
     /// Resubmission specs for retry-budgeted launches, keyed by group
     /// sequence number; consulted when a device is lost mid-launch.
-    relaunch: HashMap<u64, RelaunchSpec>,
+    relaunch: BTreeMap<u64, RelaunchSpec>,
     /// Group-level fault bookkeeping (migrations and their staged
     /// checkpoint bytes; abandonments the *group* decided). Per-device
     /// injection/retry counts live in each engine and are merged in by
@@ -456,8 +476,12 @@ pub struct GroupSession {
     /// sequence number — the fine-grained record the whole-buffer hulls
     /// (`GroupArgSpec::flows`) collapse away. Staging decisions still use
     /// the hulls; the verifier reads these.
-    flow_windows: HashMap<u64, Vec<InferredWindow>>,
+    flow_windows: BTreeMap<u64, Vec<InferredWindow>>,
     next_seq: u64,
+    /// OS worker threads for device fan-outs ([`DeviceGroup::threads`]).
+    /// 1 = the serial pre-threading path; observables are identical at
+    /// any value.
+    threads: usize,
 }
 
 impl std::fmt::Debug for GroupSession {
@@ -479,6 +503,19 @@ impl GroupSession {
     /// Number of attached devices.
     pub fn devices(&self) -> usize {
         self.sessions.len()
+    }
+
+    /// Configured OS worker-thread count ([`DeviceGroup::threads`]).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Change the OS worker-thread count mid-session. Safe at any point:
+    /// thread count is not part of any seed or cost model, so this can
+    /// never change an observable (engine invariant 14) — only how many
+    /// devices make progress concurrently at the next fan-out.
+    pub fn set_threads(&mut self, n: usize) {
+        self.threads = n.max(1);
     }
 
     /// Technology of one device.
@@ -686,9 +723,26 @@ impl GroupSession {
     /// Drive every device until all submitted launches complete (or
     /// fail). Parked outcomes — including group-level `DependencyFailed`
     /// errors — stay claimable by their handles' `wait`.
+    ///
+    /// This is the group's main parallel section: all cross-device
+    /// interaction happened at submit (staging copies, quiesces), so
+    /// between here and completion the devices are share-nothing and
+    /// each drains on its own worker thread
+    /// ([`crate::runtime::parallel::run_indexed`]). Results merge in
+    /// device-index order; at `threads <= 1` this is the literal serial
+    /// loop. Either way the first error by device index is returned
+    /// (`wait_all` errors indicate a scheduler invariant violation and
+    /// are unreachable in normal operation — real launch failures park
+    /// on handles instead).
     pub fn wait_all(&mut self) -> Result<()> {
-        for s in self.sessions.iter_mut() {
-            s.wait_all()?;
+        if self.threads <= 1 {
+            for s in self.sessions.iter_mut() {
+                s.wait_all()?;
+            }
+            return Ok(());
+        }
+        for r in parallel::run_indexed(self.threads, &mut self.sessions, |_, s| s.wait_all()) {
+            r?;
         }
         Ok(())
     }
@@ -698,12 +752,13 @@ impl GroupSession {
     /// the declared-flow edges, exactly as [`Session::verify_graph`].
     /// Cross-device ordering is staging copies (never engine edges), so
     /// the group report is the per-device reports side by side.
+    /// Each device's pre-flight is independent (it reads only that
+    /// engine's launch table), so the reports are produced on worker
+    /// threads and merged in device-index order.
     pub fn verify_graph(&mut self) -> Vec<(DeviceId, GraphReport)> {
-        self.sessions
-            .iter_mut()
-            .enumerate()
-            .map(|(d, s)| (DeviceId(d), s.verify_graph()))
-            .collect()
+        parallel::run_indexed(self.threads, &mut self.sessions, |d, s| {
+            (DeviceId(d), s.verify_graph())
+        })
     }
 
     /// Drain the submit-time diagnostics accumulated on every device's
@@ -731,10 +786,24 @@ impl GroupSession {
     /// Quiesce every device for a group buffer: drive until no in-flight
     /// launch on any device can touch its replica — the group-wide form
     /// of [`Session::quiesce`].
+    /// Like [`GroupSession::wait_all`], the per-device drains are
+    /// independent once the views are resolved, so they run on worker
+    /// threads with errors surfacing in device-index order.
     pub fn quiesce(&mut self, gref: GroupRef) -> Result<()> {
+        let mut drefs = Vec::with_capacity(self.sessions.len());
         for d in 0..self.sessions.len() {
-            let dref = self.device_ref(gref, DeviceId(d))?;
-            self.sessions[d].quiesce(dref)?;
+            drefs.push(self.device_ref(gref, DeviceId(d))?);
+        }
+        if self.threads <= 1 {
+            for (d, &dref) in drefs.iter().enumerate() {
+                self.sessions[d].quiesce(dref)?;
+            }
+            return Ok(());
+        }
+        let drefs = &drefs;
+        for r in parallel::run_indexed(self.threads, &mut self.sessions, |d, s| s.quiesce(drefs[d]))
+        {
+            r?;
         }
         Ok(())
     }

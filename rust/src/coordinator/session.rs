@@ -184,6 +184,16 @@ pub struct Session {
     default_tier: TierChoice,
 }
 
+// SAFETY: a `Session` is one closed ownership island. `SessionBuilder::
+// build` constructs the engine, registry, kernel table and executor cache
+// from scratch — every `Rc`/`RefCell` reachable from a session was created
+// inside it, and no API hands an `Rc` from one session to another (group
+// buffers are *replicated* per device, kernels are compiled per device,
+// cross-device data moves by value through host staging). Confining a
+// `&mut Session` to one worker thread under a joined scope therefore
+// cannot race any reference count or cell; see `runtime::parallel`.
+unsafe impl crate::runtime::parallel::IsolatedIsland for Session {}
+
 impl Session {
     /// Builder entry point.
     pub fn builder(tech: Technology) -> SessionBuilder {
@@ -225,6 +235,17 @@ impl Session {
     /// Current virtual time.
     pub fn now(&self) -> Time {
         self.engine.now()
+    }
+
+    /// The device's busy horizon: the latest virtual time any core is
+    /// reserved through ([`Engine::core_horizon`]). Never below
+    /// [`Session::now`], but can exceed it after a failed launch —
+    /// failure releases cores at their stamped progress without ever
+    /// completing, so the completion watermark `now` lags the true
+    /// busy-until. Schedulers placing future work (e.g. the fleet's
+    /// slot watermark) should use this, not `now`.
+    pub fn core_horizon(&self) -> Time {
+        self.engine.core_horizon()
     }
 
     // ---- memory allocation (§3.2) ---------------------------------------

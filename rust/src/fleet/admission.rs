@@ -163,6 +163,75 @@ mod tests {
         assert!(q.is_empty());
     }
 
+    /// Audit pinning the round-robin cursor against the classic
+    /// shifting-index off-by-one. Lanes are never *removed* (they persist
+    /// to keep the rotation stable), so the two hazards are a lane
+    /// *emptying* under the cursor and a new lane *inserting* at, before,
+    /// or after it; this drives all of them and asserts no tenant's turn
+    /// is skipped or double-served.
+    #[test]
+    fn rotation_never_skips_a_turn_as_lanes_empty_and_refill() {
+        let mut q = AdmissionQueue::new(None);
+        for t in [0u64, 1, 2] {
+            for i in 0..3 {
+                q.push(req(t, i)).unwrap();
+            }
+        }
+        // Full drain is a strict rotation: nobody skipped, nobody served
+        // twice in one round.
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop_fair()).map(|r| r.tenant).collect();
+        assert_eq!(order, vec![0, 1, 2, 0, 1, 2, 0, 1, 2]);
+        // All three lanes are now empty and the cursor sits on tenant 0's
+        // lane. Refill only the tenants *past* the cursor: the empty lane
+        // under the cursor must be skipped without eating a turn.
+        q.push(req(1, 3)).unwrap();
+        q.push(req(2, 3)).unwrap();
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop_fair()).map(|r| r.tenant).collect();
+        assert_eq!(order, vec![1, 2], "empty lane at the cursor must not stall or skip");
+    }
+
+    #[test]
+    fn new_lane_before_cursor_does_not_steal_the_pointed_lane_turn() {
+        let mut q = AdmissionQueue::new(None);
+        q.push(req(5, 0)).unwrap();
+        q.push(req(10, 0)).unwrap();
+        assert_eq!(q.pop_fair().unwrap().tenant, 5); // cursor now points at lane 10
+        q.push(req(5, 1)).unwrap();
+        // Tenant 1 sorts before both lanes: inserting it shifts lane 10
+        // right under the cursor. Unadjusted, the cursor would now point
+        // at lane 5 — serving 5 twice in a row and skipping 10's turn.
+        q.push(req(1, 0)).unwrap();
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop_fair()).map(|r| r.tenant).collect();
+        assert_eq!(order, vec![10, 1, 5], "lane 10 keeps its turn; the newcomer joins the rotation");
+    }
+
+    #[test]
+    fn new_lane_at_cursor_position_keeps_the_rotation_intact() {
+        let mut q = AdmissionQueue::new(None);
+        q.push(req(5, 0)).unwrap();
+        q.push(req(10, 0)).unwrap();
+        assert_eq!(q.pop_fair().unwrap().tenant, 5); // cursor → lane 10 (index 1)
+        q.push(req(5, 1)).unwrap();
+        // Tenant 7 lands exactly at the cursor index, shifting lane 10.
+        q.push(req(7, 0)).unwrap();
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop_fair()).map(|r| r.tenant).collect();
+        assert_eq!(order, vec![10, 5, 7], "insertion at the cursor must not skip lane 10");
+    }
+
+    #[test]
+    fn new_lane_after_cursor_is_served_in_this_rotation() {
+        let mut q = AdmissionQueue::new(None);
+        q.push(req(5, 0)).unwrap();
+        q.push(req(10, 0)).unwrap();
+        assert_eq!(q.pop_fair().unwrap().tenant, 5); // cursor → lane 10
+        q.push(req(5, 1)).unwrap();
+        // Tenant 20 sorts after the cursor: no shift, no adjustment — it
+        // simply takes its place later in the current rotation.
+        q.push(req(20, 0)).unwrap();
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop_fair()).map(|r| r.tenant).collect();
+        assert_eq!(order, vec![10, 20, 5]);
+    }
+
     #[test]
     fn fifo_within_a_tenant() {
         let mut q = AdmissionQueue::new(None);

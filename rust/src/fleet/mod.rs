@@ -39,7 +39,7 @@ pub mod admission;
 pub mod report;
 pub mod traffic;
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::coordinator::{
     ArgSpec, DeviceId, GroupSession, LaunchId, OffloadOptions, QueueStats, Session, TransferMode,
@@ -48,12 +48,13 @@ use crate::coordinator::{
 use crate::device::Technology;
 use crate::error::{Error, Result};
 use crate::memory::{DataRef, MemSpec};
-use crate::sim::{FaultPlan, Rng, Time};
+use crate::runtime::parallel;
+use crate::sim::{FaultPlan, Time};
 use crate::workloads::{linpack::LINPACK_VM_SRC, mlbench::SGD_STEP_SRC, scans};
 
 pub use admission::AdmissionQueue;
 pub use report::{percentile, ClassStats, DeviceStats, FleetReport, TenantStats};
-pub use traffic::{schedule, tenant_requests, KernelClass, Request, TrafficConfig};
+pub use traffic::{payload, schedule, tenant_requests, KernelClass, Payload, Request, TrafficConfig};
 
 /// Deterministically-failing kernel for [`KernelClass::Boom`]: the
 /// out-of-bounds read raises a VM error on every core, every time.
@@ -143,6 +144,20 @@ pub struct FleetConfig {
     /// Seeded fault plans to install, as `(group, device, plan)` — the
     /// fault-isolation tests poison one slot this way.
     pub faults: Vec<(usize, usize, FaultPlan)>,
+    /// Transient-fault retry budget applied to every request launch
+    /// ([`OffloadOptions::retry`]; default 0 = fail-fast). Only matters
+    /// when `faults` is non-empty: a faulted request restores its last
+    /// checkpoint and requeues on its slot instead of failing.
+    pub retry: u32,
+    /// Virtual-time back-off before each retry requeue
+    /// ([`OffloadOptions::backoff`]; default 0).
+    pub backoff: Time,
+    /// Real OS worker threads ([`crate::runtime::parallel`]): passed to
+    /// every pooled group ([`crate::coordinator::DeviceGroup::threads`])
+    /// and used to fan out request-payload construction. Default 1 — the
+    /// serial path. Reports, records and traces are bit-identical at any
+    /// value (engine invariant 14); only wall-clock changes.
+    pub threads: usize,
 }
 
 impl Default for FleetConfig {
@@ -156,6 +171,9 @@ impl Default for FleetConfig {
             queue_capacity: Some(64),
             traffic: TrafficConfig::default(),
             faults: Vec::new(),
+            retry: 0,
+            backoff: 0,
+            threads: 1,
         }
     }
 }
@@ -164,6 +182,12 @@ impl FleetConfig {
     /// Convenience: tenants `0..n`.
     pub fn with_tenants(mut self, n: usize) -> Self {
         self.tenants = (0..n as u64).collect();
+        self
+    }
+
+    /// Convenience: set the OS worker-thread count.
+    pub fn with_threads(mut self, n: usize) -> Self {
+        self.threads = n.max(1);
         self
     }
 }
@@ -202,7 +226,14 @@ pub struct Fleet {
     records: Vec<RequestRecord>,
     /// Per tenant: slot and engine launch id of the tenant's most recent
     /// dispatched request (chained requests attach `.after` edges here).
-    last_launch: HashMap<u64, (usize, LaunchId)>,
+    /// Ordered map as part of the determinism sweep — keeps any future
+    /// iteration deterministic by construction.
+    last_launch: BTreeMap<u64, (usize, LaunchId)>,
+    /// Pre-built argument contents keyed by `(tenant, index)`, consumed
+    /// as requests dispatch. Filled by [`Fleet::run`]'s parallel
+    /// precompute; a request offered directly (tests) builds its payload
+    /// inline instead.
+    payloads: BTreeMap<(u64, usize), Payload>,
     dispatched: usize,
 }
 
@@ -218,7 +249,8 @@ impl Fleet {
         let mut slots = Vec::new();
         for gi in 0..cfg.groups {
             let mut b = GroupSession::builder()
-                .seed(cfg.seed ^ (gi as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                .seed(cfg.seed ^ (gi as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+                .threads(cfg.threads.max(1));
             for _ in 0..cfg.devices_per_group {
                 b = b.device(cfg.tech.clone());
             }
@@ -245,7 +277,8 @@ impl Fleet {
             slots,
             queue,
             records: Vec::new(),
-            last_launch: HashMap::new(),
+            last_launch: BTreeMap::new(),
+            payloads: BTreeMap::new(),
             dispatched: 0,
         })
     }
@@ -256,6 +289,19 @@ impl Fleet {
     /// not propagated.
     pub fn run(&mut self) -> Result<FleetReport> {
         let sched = schedule(self.cfg.seed, &self.cfg.tenants, &self.cfg.traffic);
+        // Payloads are pure functions of each request (every pooled
+        // device runs `cfg.tech`), so the only data-parallel work in the
+        // serving path fans out here, ahead of the admission loop — which
+        // stays sequential by design: each dispatch's finish time feeds
+        // the next idle-slot decision.
+        let device_cores = self.cfg.tech.cores;
+        self.payloads = sched
+            .iter()
+            .map(|r| (r.tenant, r.index))
+            .zip(parallel::map_indexed(self.cfg.threads, &sched, |_, r| {
+                payload(r, device_cores)
+            }))
+            .collect();
         for req in sched {
             match self.offer(req) {
                 Ok(()) | Err(Error::Overloaded { .. }) => {}
@@ -446,22 +492,30 @@ impl Fleet {
     fn execute(&mut self, req: &Request, slot: usize, start: Time) -> Result<(Time, RequestOutcome)> {
         let (g, d) = (self.slots[slot].group, self.slots[slot].device);
         let chain = if req.after_prev { self.last_launch.get(&req.tenant).copied() } else { None };
+        // Payload: usually pre-built by `run`'s parallel fan-out; a
+        // request offered directly (tests, custom drivers) builds it
+        // here — same pure function, same bytes.
+        let device_cores = self.cfg.tech.cores;
+        let p = self
+            .payloads
+            .remove(&(req.tenant, req.index))
+            .unwrap_or_else(|| payload(req, device_cores));
         let sess: &mut Session = self.pool[g].session_mut(DeviceId(d));
-        let cores = req.cores.min(sess.tech().cores).max(1);
-        let core_ids: Vec<usize> = (0..cores).collect();
-        let mut opts = OffloadOptions::default().not_before(start).tenant(req.tenant);
+        let core_ids: Vec<usize> = (0..p.cores).collect();
+        let mut opts = OffloadOptions::default()
+            .not_before(start)
+            .tenant(req.tenant)
+            .retry(self.cfg.retry)
+            .backoff(self.cfg.backoff);
         if let Some((pslot, pid)) = chain {
             if pslot == slot {
                 opts = opts.after(pid);
             }
         }
         let base = format!("t{}.r{}", req.tenant, req.index);
-        let mut rng = Rng::new(req.data_seed);
-        let elems = req.elems.div_ceil(cores) * cores;
         let (handle, digest) = match req.class {
             KernelClass::ScanSum => {
-                let data: Vec<f32> = (0..elems).map(|_| rng.next_f32()).collect();
-                let x = sess.alloc(MemSpec::host(format!("{base}.x")).from_vec(data))?;
+                let x = sess.alloc(MemSpec::host(format!("{base}.x")).from_vec(p.data))?;
                 let h = sess
                     .launch_named(KernelClass::ScanSum.name())?
                     .options(opts)
@@ -471,53 +525,33 @@ impl Fleet {
                 (h, Digest::PerCoreScalars)
             }
             KernelClass::Normalize => {
-                let mu = rng.range_f64(-1.0, 1.0);
-                let scale = rng.range_f64(0.5, 2.0);
-                let data: Vec<f32> = (0..elems).map(|_| rng.next_f32()).collect();
-                let x = sess.alloc(MemSpec::host(format!("{base}.x")).from_vec(data))?;
+                let x = sess.alloc(MemSpec::host(format!("{base}.x")).from_vec(p.data))?;
                 let h = sess
                     .launch_named(KernelClass::Normalize.name())?
                     .options(opts)
-                    .args(&[ArgSpec::sharded_mut(x), ArgSpec::Float(mu), ArgSpec::Float(scale)])
+                    .args(&[ArgSpec::sharded_mut(x), ArgSpec::Float(p.f0), ArgSpec::Float(p.f1)])
                     .cores(core_ids)
                     .submit()?;
                 (h, Digest::ReadBack(x, "norm"))
             }
             KernelClass::SgdStep => {
-                let lr = rng.range_f64(0.001, 0.1);
-                let w: Vec<f32> = (0..elems).map(|_| rng.next_f32()).collect();
-                let gr: Vec<f32> = (0..elems).map(|_| rng.next_f32()).collect();
-                let wref = sess.alloc(MemSpec::host(format!("{base}.w")).from_vec(w))?;
-                let gref = sess.alloc(MemSpec::host(format!("{base}.g")).from_vec(gr))?;
+                let wref = sess.alloc(MemSpec::host(format!("{base}.w")).from_vec(p.data))?;
+                let gref = sess.alloc(MemSpec::host(format!("{base}.g")).from_vec(p.aux))?;
                 let h = sess
                     .launch_named(KernelClass::SgdStep.name())?
                     .options(opts)
                     .args(&[
                         ArgSpec::sharded_mut(wref),
                         ArgSpec::sharded(gref),
-                        ArgSpec::Float(lr),
+                        ArgSpec::Float(p.f0),
                     ])
                     .cores(core_ids)
                     .submit()?;
                 (h, Digest::ReadBack(wref, "sgd"))
             }
             KernelClass::Linpack => {
-                // Small diagonally-dominant system; every core eliminates
-                // its own eager-copied private replica (as Table 1 does).
-                let n = 3 + (req.elems % 5);
-                let mut a = vec![0.0f32; n * n];
-                for (i, v) in a.iter_mut().enumerate() {
-                    *v = rng.range_f64(0.0, 1.0) as f32;
-                    if i % (n + 1) == 0 {
-                        *v += n as f32;
-                    }
-                }
-                let mut b = vec![0.0f32; n];
-                for r in 0..n {
-                    b[r] = (0..n).map(|c| a[r * n + c] * (1.0 + c as f32)).sum();
-                }
-                let ra = sess.alloc(MemSpec::host(format!("{base}.a")).from_vec(a))?;
-                let rb = sess.alloc(MemSpec::host(format!("{base}.b")).from_vec(b))?;
+                let ra = sess.alloc(MemSpec::host(format!("{base}.a")).from_vec(p.data))?;
+                let rb = sess.alloc(MemSpec::host(format!("{base}.b")).from_vec(p.aux))?;
                 opts = opts.transfer(TransferMode::Eager);
                 let h = sess
                     .launch_named(KernelClass::Linpack.name())?
@@ -525,15 +559,14 @@ impl Fleet {
                     .args(&[
                         ArgSpec::broadcast(ra),
                         ArgSpec::broadcast(rb),
-                        ArgSpec::Int(n as i64),
+                        ArgSpec::Int(p.n as i64),
                     ])
                     .cores(core_ids)
                     .submit()?;
                 (h, Digest::FirstCoreArray)
             }
             KernelClass::Boom => {
-                let data: Vec<f32> = (0..elems).map(|_| rng.next_f32()).collect();
-                let x = sess.alloc(MemSpec::host(format!("{base}.x")).from_vec(data))?;
+                let x = sess.alloc(MemSpec::host(format!("{base}.x")).from_vec(p.data))?;
                 let h = sess
                     .launch_named(KernelClass::Boom.name())?
                     .options(opts)
@@ -566,7 +599,13 @@ impl Fleet {
                 Ok((finish, RequestOutcome::Ok(value)))
             }
             Err(e) => {
-                let finish = sess.now().max(start);
+                // The completion watermark `now` only advances when a
+                // launch *completes*; a failed launch instead released
+                // its cores at their stamped progress. `core_horizon` is
+                // the device's true busy-until — using `now` here let a
+                // later request book the slot at an instant the device
+                // was still busy (the fault-retry watermark bug).
+                let finish = sess.core_horizon().max(start);
                 Ok((finish, RequestOutcome::Failed(error_kind(&e).to_string())))
             }
         }

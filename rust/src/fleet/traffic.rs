@@ -187,6 +187,80 @@ pub fn schedule(master_seed: u64, tenants: &[u64], cfg: &TrafficConfig) -> Vec<R
     all
 }
 
+/// The materialized argument contents of one request — everything
+/// [`crate::fleet::Fleet`] feeds the launch builder, built from the
+/// request's `data_seed` alone. Split out of the serving loop because it
+/// is a **pure function of the request** (plus the uniform device core
+/// count): building payloads is the fleet's only per-request work with
+/// no ordering dependence, so [`payload`] fans out over worker threads
+/// ahead of the (inherently sequential) admission loop.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Payload {
+    /// Cores the launch will occupy (request's ask clamped to the device).
+    pub cores: usize,
+    /// Argument length re-rounded to a multiple of `cores`.
+    pub elems: usize,
+    /// Primary array: `x` (scan/normalize/boom), `w` (SGD) or the
+    /// row-major matrix `a` (LINPACK).
+    pub data: Vec<f32>,
+    /// Secondary array: the gradient `g` (SGD) or the RHS `b` (LINPACK);
+    /// empty otherwise.
+    pub aux: Vec<f32>,
+    /// First scalar: `mu` (normalize) or `lr` (SGD).
+    pub f0: f64,
+    /// Second scalar: `scale` (normalize).
+    pub f1: f64,
+    /// System dimension (LINPACK only).
+    pub n: usize,
+}
+
+/// Materialize one request's arguments. The RNG draw order per class is
+/// the serving contract: it must stay identical between this function
+/// and any solo replay of the request, or digests stop matching across
+/// the fleet differential properties.
+pub fn payload(req: &Request, device_cores: usize) -> Payload {
+    let cores = req.cores.min(device_cores).max(1);
+    let mut rng = Rng::new(req.data_seed);
+    let elems = req.elems.div_ceil(cores) * cores;
+    let mut p =
+        Payload { cores, elems, data: Vec::new(), aux: Vec::new(), f0: 0.0, f1: 0.0, n: 0 };
+    match req.class {
+        KernelClass::ScanSum | KernelClass::Boom => {
+            p.data = (0..elems).map(|_| rng.next_f32()).collect();
+        }
+        KernelClass::Normalize => {
+            p.f0 = rng.range_f64(-1.0, 1.0);
+            p.f1 = rng.range_f64(0.5, 2.0);
+            p.data = (0..elems).map(|_| rng.next_f32()).collect();
+        }
+        KernelClass::SgdStep => {
+            p.f0 = rng.range_f64(0.001, 0.1);
+            p.data = (0..elems).map(|_| rng.next_f32()).collect();
+            p.aux = (0..elems).map(|_| rng.next_f32()).collect();
+        }
+        KernelClass::Linpack => {
+            // Small diagonally-dominant system; every core eliminates its
+            // own eager-copied private replica (as Table 1 does).
+            let n = 3 + (req.elems % 5);
+            let mut a = vec![0.0f32; n * n];
+            for (i, v) in a.iter_mut().enumerate() {
+                *v = rng.range_f64(0.0, 1.0) as f32;
+                if i % (n + 1) == 0 {
+                    *v += n as f32;
+                }
+            }
+            let mut b = vec![0.0f32; n];
+            for r in 0..n {
+                b[r] = (0..n).map(|c| a[r * n + c] * (1.0 + c as f32)).sum();
+            }
+            p.n = n;
+            p.data = a;
+            p.aux = b;
+        }
+    }
+    p
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -209,6 +283,36 @@ mod tests {
                 || a.iter().zip(&c).any(|(x, y)| x.arrival != y.arrival),
             "tenant forks must decorrelate streams"
         );
+    }
+
+    #[test]
+    fn payloads_are_pure_and_class_shaped() {
+        let cfg = TrafficConfig { boom_rate: 0.05, chain_rate: 0.2, ..TrafficConfig::default() };
+        for req in schedule(11, &[0, 1], &cfg) {
+            let a = payload(&req, 16);
+            let b = payload(&req, 16);
+            assert_eq!(a, b, "payload must depend on the request alone");
+            assert_eq!(a.elems % a.cores, 0);
+            match req.class {
+                KernelClass::ScanSum | KernelClass::Boom => {
+                    assert_eq!(a.data.len(), a.elems);
+                    assert!(a.aux.is_empty());
+                }
+                KernelClass::Normalize => {
+                    assert_eq!(a.data.len(), a.elems);
+                    assert!((-1.0..=1.0).contains(&a.f0) && (0.5..=2.0).contains(&a.f1));
+                }
+                KernelClass::SgdStep => {
+                    assert_eq!((a.data.len(), a.aux.len()), (a.elems, a.elems));
+                }
+                KernelClass::Linpack => {
+                    assert_eq!((a.data.len(), a.aux.len()), (a.n * a.n, a.n));
+                }
+            }
+            // Clamping to a smaller device changes the rounding, never panics.
+            let clamped = payload(&req, 1);
+            assert_eq!(clamped.cores, 1);
+        }
     }
 
     #[test]

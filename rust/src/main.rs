@@ -55,6 +55,7 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
     .opt("groups", Some("2"), "fleet: device groups in the pool")
     .opt("devices", Some("2"), "fleet: devices per group")
     .opt("capacity", Some("64"), "fleet: admission-queue capacity (0 = unbounded)")
+    .opt("threads", Some("1"), "OS worker threads for multi-device drains (fleet, mlbench --hetero); observables are bit-identical at any value")
     .flag("full", "full-size image regime for mlbench")
     .flag("cache", "front the mlbench image store with the shared-window cache")
     .flag("pipeline", "mlbench: train two replicas on disjoint core halves, comparing blocking vs pipelined launches")
@@ -136,6 +137,7 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
                 let images: usize = args.parse_as("images")?;
                 let epochs: usize =
                     args.get("epochs").map(|e| e.parse()).transpose()?.unwrap_or(1);
+                let threads: usize = args.parse_as("threads")?;
                 let hetero = mlbench::hetero_mlbench(
                     tech.clone(),
                     Some(tech2.clone()),
@@ -143,6 +145,7 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
                     mode,
                     images,
                     epochs,
+                    threads,
                 )?;
                 // The reference must share the heterogeneous run's shard
                 // structure — min(cores, cores) shards — so the
@@ -151,8 +154,15 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
                 // identical shard counts).
                 let ref_tech =
                     if tech.cores <= tech2.cores { tech.clone() } else { tech2.clone() };
-                let single =
-                    mlbench::hetero_mlbench(ref_tech.clone(), None, seed, mode, images, epochs)?;
+                let single = mlbench::hetero_mlbench(
+                    ref_tech.clone(),
+                    None,
+                    seed,
+                    mode,
+                    images,
+                    epochs,
+                    threads,
+                )?;
                 let mut t = Table::new(
                     format!(
                         "Heterogeneous mlbench — ff on {}, grad/upd on {} ({} shards, {})",
@@ -361,6 +371,7 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
             let groups: usize = args.parse_as("groups")?;
             let devices: usize = args.parse_as("devices")?;
             let capacity: usize = args.parse_as("capacity")?;
+            let threads: usize = args.parse_as("threads")?;
             let tech = tech_of(&args)?;
             let cfg = FleetConfig {
                 seed,
@@ -371,7 +382,8 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
                 traffic: TrafficConfig { duration, ..TrafficConfig::default() },
                 ..FleetConfig::default()
             }
-            .with_tenants(tenants);
+            .with_tenants(tenants)
+            .with_threads(threads);
             let mut fleet = Fleet::new(cfg)?;
             let report = fleet.run()?;
             print!("{}", report.render());

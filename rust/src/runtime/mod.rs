@@ -11,14 +11,20 @@
 //!   per process) and shape-checked execution.
 //! * [`executor`] — typed wrappers for each model operation (`fwd_accum`,
 //!   `grad_shard`, `head`, …) used by the engine's tensor-builtin handler.
+//! * [`parallel`] — the deterministic worker-thread executor that fans
+//!   per-device engines (and other share-nothing fan-outs) over OS
+//!   threads with island-index-order merges, so thread count changes
+//!   wall-clock only.
 //!
 //! Python never runs on the request path: once `artifacts/` exists the
 //! whole system is this Rust binary plus `libxla_extension`.
 
 pub mod executor;
 pub mod manifest;
+pub mod parallel;
 pub mod pjrt;
 
 pub use executor::ModelExecutor;
 pub use manifest::{ArtifactSpec, Manifest};
+pub use parallel::{env_threads, map_indexed, run_indexed, IsolatedIsland};
 pub use pjrt::PjrtContext;

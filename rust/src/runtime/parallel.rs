@@ -1,0 +1,253 @@
+//! Deterministic host-side parallelism over isolated simulation islands.
+//!
+//! The simulator's unit of concurrency is the **device engine**: a
+//! [`crate::coordinator::Session`] owns its engine, registry, kernels and
+//! RNG as one closed `Rc` ownership graph that never aliases another
+//! session's. A [`crate::coordinator::GroupSession`] already interacts
+//! across devices only at host-level barriers (staging copies at submit,
+//! checkpoint migration, waits) — between barriers the devices are
+//! share-nothing. This module supplies the executor that exploits that:
+//! fan a closure over many islands on OS worker threads, then merge the
+//! results **in island-index order** so the outcome is bit-identical to
+//! the serial loop at any thread count.
+//!
+//! ## Determinism contract
+//!
+//! * `threads <= 1` (the default everywhere) takes a literal serial
+//!   `for` loop — byte-for-byte the pre-parallelism code path.
+//! * `threads > 1` runs workers under [`std::thread::scope`]; worker `w`
+//!   owns the island indices `w, w + workers, w + 2·workers, …`
+//!   (disjoint by construction) and writes each result into a slot
+//!   indexed by the island it came from. The scope join gives the host
+//!   thread a happens-before edge over every write, and the results are
+//!   then read out `0, 1, 2, …` — merge order is island index, never
+//!   completion order.
+//! * The closure must itself be deterministic per `(index, island)`;
+//!   everything in this crate is (seeded RNGs, virtual time).
+//!
+//! Thread count therefore changes wall-clock only (engine invariant 14
+//! in ARCHITECTURE.md); it is *not* part of any seed or cost model.
+//!
+//! ## Why a marker trait instead of `Send`
+//!
+//! `Session` is deliberately **not** `Send`: its `Rc`-based sharing
+//! (kernels, VM arrays, executor caches) is single-owner by design and
+//! converting it to `Arc`/`Mutex` would put locks on the interpreter hot
+//! path to protect state that is never actually shared. What makes
+//! threading sound here is not shareability but **confinement**: each
+//! island's `Rc` graph is closed (no `Rc` inside one session points into
+//! another), so moving the whole island to one worker for the duration
+//! of a joined scope never runs a reference count race. The unsafe
+//! [`IsolatedIsland`] marker is the type-level record of that closure
+//! property; [`run_indexed`] is the only place the confinement argument
+//! is discharged.
+
+use std::thread;
+
+/// Marker for types whose value is a **closed ownership island**: every
+/// `Rc`/`RefCell`/raw-pointer reachable from one value is reachable from
+/// no other value of the type (nor from anywhere else on the host
+/// thread while a [`run_indexed`] scope is live).
+///
+/// # Safety
+///
+/// Implementors assert that confining a `&mut` of the value to a single
+/// OS thread under a joined [`std::thread::scope`] cannot race: no
+/// non-atomic reference count, cache, or interior-mutable cell inside
+/// the value is shared with any other island or with the host thread.
+/// A one-`Session`-per-device [`crate::coordinator::GroupSession`]
+/// satisfies this by construction — sessions are built independently
+/// and never exchange `Rc`s.
+pub unsafe trait IsolatedIsland {}
+
+/// Raw-pointer wrapper that crosses the scope boundary. Soundness is
+/// argued at the use sites in [`run_indexed`]: workers dereference it
+/// only at stride-disjoint offsets, under a scope the owner outlives.
+struct SendPtr<T>(*mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        SendPtr(self.0)
+    }
+}
+
+impl<T> Copy for SendPtr<T> {}
+
+/// Thread-count override from the environment: `MICROCORE_THREADS=N`.
+/// Returns `None` when unset, empty, unparsable, or zero — callers keep
+/// their configured default (normally 1) in that case.
+pub fn env_threads() -> Option<usize> {
+    std::env::var("MICROCORE_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+}
+
+/// Run `f(i, &mut items[i])` for every island, on up to `threads` OS
+/// worker threads, returning the results **in island-index order**.
+///
+/// With `threads <= 1` or fewer than two islands this is a plain serial
+/// loop — the exact pre-parallelism code path. Otherwise worker `w`
+/// strides over indices `w, w + workers, …` so index ownership is
+/// disjoint, and the scope join publishes every island mutation and
+/// result back to the caller before this function returns. A panic on
+/// any worker propagates to the caller after all workers are joined.
+pub fn run_indexed<T, R, F>(threads: usize, items: &mut [T], f: F) -> Vec<R>
+where
+    T: IsolatedIsland,
+    R: Send,
+    F: Fn(usize, &mut T) -> R + Sync,
+{
+    let n = items.len();
+    if threads <= 1 || n <= 1 {
+        return items.iter_mut().enumerate().map(|(i, item)| f(i, item)).collect();
+    }
+    let workers = threads.min(n);
+    let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let items_ptr = SendPtr(items.as_mut_ptr());
+    let results_ptr = SendPtr(results.as_mut_ptr());
+    thread::scope(|scope| {
+        for w in 0..workers {
+            let f = &f;
+            scope.spawn(move || {
+                let mut i = w;
+                while i < n {
+                    // SAFETY: index i is visited by worker w = i % workers
+                    // only, so no two live &mut alias; both backing
+                    // buffers outlive the scope on the (blocked) caller
+                    // frame; T: IsolatedIsland asserts the pointee's Rc
+                    // graph is confined to whichever thread holds it; the
+                    // scope join sequences these writes before the
+                    // caller's reads.
+                    let item = unsafe { &mut *items_ptr.0.add(i) };
+                    let slot = unsafe { &mut *results_ptr.0.add(i) };
+                    *slot = Some(f(i, item));
+                    i += workers;
+                }
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|r| r.expect("stride covered every island index"))
+        .collect()
+}
+
+/// Map a pure function over shared items on up to `threads` OS worker
+/// threads, returning results in item order. The safe companion to
+/// [`run_indexed`] for fan-outs that only *read* their input (e.g. the
+/// fleet's request-payload precompute): `T: Sync` does all the work, no
+/// confinement argument needed. Serial (and allocation-identical to a
+/// plain `map`) when `threads <= 1` or there are fewer than two items.
+pub fn map_indexed<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    if threads <= 1 || n <= 1 {
+        return items.iter().enumerate().map(|(i, item)| f(i, item)).collect();
+    }
+    let workers = threads.min(n);
+    let chunk = n.div_ceil(workers);
+    let mut out = Vec::with_capacity(n);
+    thread::scope(|scope| {
+        let handles: Vec<_> = items
+            .chunks(chunk)
+            .enumerate()
+            .map(|(ci, part)| {
+                let f = &f;
+                scope.spawn(move || {
+                    part.iter()
+                        .enumerate()
+                        .map(|(j, item)| f(ci * chunk + j, item))
+                        .collect::<Vec<R>>()
+                })
+            })
+            .collect();
+        // Chunks are contiguous and joined in spawn order, so `out` is
+        // in item order regardless of which worker finished first.
+        for h in handles {
+            out.extend(h.join().unwrap_or_else(|p| std::panic::resume_unwind(p)));
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A toy island: owns its state outright, so confinement is trivial.
+    struct Counter {
+        id: usize,
+        ticks: u64,
+    }
+
+    unsafe impl IsolatedIsland for Counter {}
+
+    fn islands(n: usize) -> Vec<Counter> {
+        (0..n).map(|id| Counter { id, ticks: 0 }).collect()
+    }
+
+    fn drive(threads: usize, n: usize) -> (Vec<u64>, Vec<u64>) {
+        let mut isles = islands(n);
+        let results = run_indexed(threads, &mut isles, |i, c| {
+            assert_eq!(i, c.id, "closure sees the island at its own index");
+            // Unequal per-island work so completion order differs from
+            // index order under real threading.
+            for k in 0..((n - i) as u64 * 1000) {
+                c.ticks = c.ticks.wrapping_add(k ^ (i as u64));
+            }
+            c.ticks
+        });
+        (results, isles.iter().map(|c| c.ticks).collect())
+    }
+
+    #[test]
+    fn run_indexed_matches_serial_at_every_thread_count() {
+        let (serial_results, serial_state) = drive(1, 13);
+        for threads in [2, 4, 8, 32] {
+            let (results, state) = drive(threads, 13);
+            assert_eq!(results, serial_results, "results at threads={threads}");
+            assert_eq!(state, serial_state, "island state at threads={threads}");
+        }
+    }
+
+    #[test]
+    fn run_indexed_handles_degenerate_sizes() {
+        let mut none: Vec<Counter> = islands(0);
+        assert!(run_indexed::<_, u64, _>(8, &mut none, |_, c| c.ticks).is_empty());
+        let mut one = islands(1);
+        assert_eq!(run_indexed(8, &mut one, |i, _| i), vec![0]);
+        let mut few = islands(3);
+        // More threads than islands: workers clamp to island count.
+        assert_eq!(run_indexed(64, &mut few, |i, _| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn map_indexed_preserves_item_order() {
+        let items: Vec<u64> = (0..97).map(|i| i * 3 + 1).collect();
+        let serial = map_indexed(1, &items, |i, v| (i as u64) * 1_000_000 + v * v);
+        for threads in [2, 4, 7, 16] {
+            assert_eq!(map_indexed(threads, &items, |i, v| (i as u64) * 1_000_000 + v * v), serial);
+        }
+    }
+
+    #[test]
+    fn env_threads_parses_and_rejects() {
+        // Uses a private helper on the raw string to avoid mutating the
+        // process environment (other tests run concurrently).
+        fn parse(v: &str) -> Option<usize> {
+            v.trim().parse::<usize>().ok().filter(|&n| n >= 1)
+        }
+        assert_eq!(parse("4"), Some(4));
+        assert_eq!(parse(" 2 "), Some(2));
+        assert_eq!(parse("0"), None);
+        assert_eq!(parse("many"), None);
+        assert_eq!(parse(""), None);
+    }
+}

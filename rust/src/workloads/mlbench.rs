@@ -970,6 +970,12 @@ pub struct HeteroOutcome {
 /// (`tests/multi_device.rs` pins this against both `tech_bwd = None` and
 /// the classic [`MlBench`] driver); devices change *times*, never
 /// *values* (engine invariant 2, now spanning technologies).
+///
+/// `threads` is the group's **real OS worker-thread count**
+/// ([`crate::coordinator::DeviceGroup::threads`]) — engine invariant 14:
+/// any value produces bit-identical losses, staging counts and virtual
+/// times; only wall-clock moves. Pass 1 for the serial pre-threading
+/// path.
 pub fn hetero_mlbench(
     tech_ff: Technology,
     tech_bwd: Option<Technology>,
@@ -977,6 +983,7 @@ pub fn hetero_mlbench(
     mode: TransferMode,
     images: usize,
     epochs: usize,
+    threads: usize,
 ) -> Result<HeteroOutcome> {
     if images == 0 {
         return Err(Error::Coordinator("hetero mlbench needs at least one image".into()));
@@ -987,7 +994,7 @@ pub fn hetero_mlbench(
     };
     let dev_ff = DeviceId(0);
     let dev_bwd = if tech_bwd.is_some() { DeviceId(1) } else { DeviceId(0) };
-    let mut builder = GroupSession::builder().device(tech_ff).seed(seed);
+    let mut builder = GroupSession::builder().device(tech_ff).seed(seed).threads(threads);
     if let Some(t) = tech_bwd {
         builder = builder.device(t);
     }

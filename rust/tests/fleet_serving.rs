@@ -259,3 +259,94 @@ fn fleet_table_percentiles_match_hand_computed_fixture() {
     assert!(rendered.contains("70.000"), "p95/p99 in ms: {rendered}");
     assert!(rendered.contains("20.000"), "even-size p50: {rendered}");
 }
+
+/// Regression for the fault-retry watermark bug: a **failed** launch
+/// never advances the engine's completion watermark `now` — failure
+/// releases the device's cores at their stamped progress instead
+/// (`Session::core_horizon`). The fleet's analytic `free_at` used to be
+/// derived from `now` on the failure path, so a failed request's record
+/// said it finished the instant it started and a later request could be
+/// `not_before`-floored at a time the device was still busy. The fix
+/// advances the watermark from the busy horizon; this pins it.
+#[test]
+fn failed_launch_watermark_tracks_the_busy_horizon() {
+    let run = |faults: Vec<(usize, usize, FaultPlan)>, retry: u32, backoff: u64| {
+        let mut cfg = one_slot(None).with_tenants(1);
+        cfg.faults = faults;
+        cfg.retry = retry;
+        cfg.backoff = backoff;
+        let mut f = Fleet::new(cfg).unwrap();
+        f.offer(req(0, 0, 1_000)).unwrap();
+        f.offer(req(0, 1, 2_000)).unwrap();
+        f.drain().unwrap();
+        f
+    };
+
+    // Fault-free reference: both requests succeed; remember the digests
+    // and the horizon the fault plans should cover.
+    let clean = run(Vec::new(), 0, 0);
+    let clean_recs = clean.records().to_vec();
+    assert!(clean_recs.iter().all(|r| matches!(r.outcome, RequestOutcome::Ok(_))));
+    let horizon = clean_recs.iter().map(|r| r.finish).max().unwrap() * 4;
+
+    // Fail-fast (no retry budget): scan fault seeds until one strikes
+    // the stream. The struck request's finish must sit strictly past its
+    // start (the device really was busy), and nothing dispatched later
+    // on the single slot may start before that finish.
+    let mut strike = None;
+    for fseed in 0..64u64 {
+        let f = run(vec![(0, 0, FaultPlan::seeded(fseed, 16, horizon, 24))], 0, 0);
+        if f.pool()[0].fault_counters().injected == 0 {
+            continue;
+        }
+        let recs = f.records().to_vec();
+        if let Some(r0) = recs.iter().find(|r| matches!(r.outcome, RequestOutcome::Failed(_))) {
+            assert!(
+                r0.finish > r0.start,
+                "seed {fseed}: failed request's finish {} collapsed onto its start {} — \
+                 the slot watermark was derived from `now`, which failure never advances",
+                r0.finish,
+                r0.start,
+            );
+            for r in &recs {
+                if r.dispatch_order != usize::MAX && r.dispatch_order > r0.dispatch_order {
+                    assert!(
+                        r.start >= r0.finish,
+                        "seed {fseed}: request {} started at {} while the slot was busy \
+                         until {}",
+                        r.index,
+                        r.start,
+                        r0.finish,
+                    );
+                }
+            }
+            strike = Some(fseed);
+            break;
+        }
+    }
+    let fseed = strike.expect("no fault seed in 0..64 struck the probe stream — widen the plan");
+
+    // The same striking plan with a retry budget: the stream recovers
+    // value-transparently (identical digests to the fault-free run) and
+    // the recovery cost (restore + backoff) pushes the finish later, with
+    // stream order still intact on the slot.
+    let retried = run(vec![(0, 0, FaultPlan::seeded(fseed, 16, horizon, 24))], 4, 1_000);
+    let counters = retried.pool()[0].fault_counters();
+    assert!(counters.injected > 0, "retry run lost the strike");
+    if counters.recovered > 0 {
+        let recs = retried.records().to_vec();
+        for (r, c) in recs.iter().zip(&clean_recs) {
+            assert_eq!(r.outcome, c.outcome, "recovery must be value-transparent");
+        }
+        assert!(counters.recovery_time > 0, "recovery charged no virtual time");
+        assert!(
+            recs.iter().map(|r| r.finish).max().unwrap()
+                >= clean_recs.iter().map(|r| r.finish).max().unwrap(),
+            "recovered stream cannot finish before the fault-free one"
+        );
+        let failed_then = recs.windows(2).all(|w| {
+            w[1].dispatch_order == usize::MAX || w[1].start >= w[0].start
+        });
+        assert!(failed_then, "single-slot dispatch starts must be monotone");
+    }
+}

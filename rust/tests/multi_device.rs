@@ -275,6 +275,7 @@ fn hetero_mlbench_bit_identical_to_single_device_reference() {
         TransferMode::Prefetch,
         images,
         epochs,
+        1,
     )
     .unwrap();
     let single = hetero_mlbench(
@@ -284,6 +285,7 @@ fn hetero_mlbench_bit_identical_to_single_device_reference() {
         TransferMode::Prefetch,
         images,
         epochs,
+        1,
     )
     .unwrap();
     assert_eq!(hetero.losses.len(), images * epochs);
@@ -308,7 +310,9 @@ fn hetero_mlbench_bit_identical_to_single_device_reference() {
     assert_eq!(hetero.staging.dst_writes, hetero.staging.copies);
     assert_eq!(single.staging, StagingCounters::default(), "one device never stages");
 
-    // Deterministic replay, times included.
+    // Deterministic replay, times included — on **4 OS worker threads**,
+    // so the replay also pins engine invariant 14: thread count changes
+    // wall-clock only, never an observable.
     let again = hetero_mlbench(
         Technology::epiphany3(),
         Some(Technology::microblaze_fpu()),
@@ -316,10 +320,12 @@ fn hetero_mlbench_bit_identical_to_single_device_reference() {
         TransferMode::Prefetch,
         images,
         epochs,
+        4,
     )
     .unwrap();
     assert_eq!(again.elapsed, hetero.elapsed);
     assert_eq!(again.losses, hetero.losses);
+    assert_eq!(again.staging, hetero.staging);
 }
 
 /// Recovery edge: a transient fault striking the launch that is waiting

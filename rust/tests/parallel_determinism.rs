@@ -1,0 +1,494 @@
+//! Engine invariant 14, fuzzed: **thread count changes wall-clock only**.
+//!
+//! Every differential the single-threaded fuzzers pin down —
+//! launch-DAG scheduling, fault recovery, the compiled tier, the static
+//! analyzer, and fleet serving — is re-run here across a two-device
+//! [`DeviceGroup`] at `threads = 1` (the literal pre-threading serial
+//! loop) and `threads = 4` (the worker-thread fan-out in
+//! `runtime/parallel`), asserting the **full observable capture** —
+//! per-core values, per-launch clocks, stalls, request counts, final
+//! buffer contents, engine stats, event traces, fault/tier counters,
+//! verifier reports and fleet records — is byte-identical.
+//!
+//! `MICROCORE_THREADS` overrides the parallel side's thread count (the
+//! CI matrix runs this suite at 4; any value ≥ 2 must pass), and
+//! `MICROCORE_FUZZ_CASES` scales the per-property case count as in
+//! `tests/properties.rs`.
+
+use microcore::analysis::VerifyLevel;
+use microcore::coordinator::{
+    DeviceGroup, DeviceId, GroupArgSpec, GroupHandle, OffloadResult, TierChoice,
+};
+use microcore::device::Technology;
+use microcore::fleet::{Fleet, FleetConfig, RequestRecord};
+use microcore::memory::MemSpec;
+use microcore::runtime::parallel::env_threads;
+use microcore::sim::FaultPlan;
+use microcore::testkit::dag::{gen_dag, DagConfig, DagKernel, DagSpec};
+use microcore::testkit::fleet::{gen_fleet, FleetGenConfig};
+use microcore::testkit::{check, Gen};
+
+const DAG_READER: &str =
+    "def r(a):\n    s = 0.0\n    i = 0\n    while i < len(a):\n        s += a[i]\n        i += 1\n    return s\n";
+const DAG_WRITER: &str =
+    "def w(a):\n    i = 0\n    while i < len(a):\n        a[i] = a[i] + 1.0\n        i += 1\n    return 0\n";
+const DAG_BOOM: &str = "def b(a):\n    a[0] = 1.0\n    return 0\n";
+
+/// The parallel side of every differential: `MICROCORE_THREADS` when set
+/// (the CI matrix axis), else 4. Clamped to ≥ 2 so the comparison is
+/// never serial-vs-serial.
+fn hi_threads() -> usize {
+    env_threads().unwrap_or(4).max(2)
+}
+
+/// Per-property case count, scaled by `MICROCORE_FUZZ_CASES` like the
+/// single-threaded fuzzers (each case here runs the whole scenario once
+/// per thread count).
+fn cases(default: usize) -> usize {
+    std::env::var("MICROCORE_FUZZ_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Weakly-connected components of the DAG under the full edge relation
+/// (explicit `.after` + inferred data-flow edges): launches in one
+/// component must share a device (explicit edges cannot cross devices),
+/// launches in different components may be placed apart. Returns one
+/// device index per launch over `devices` devices, assigned in order of
+/// first appearance so placement is deterministic.
+fn component_devices(spec: &DagSpec, devices: usize) -> Vec<usize> {
+    let n = spec.launches.len();
+    let mut root: Vec<usize> = (0..n).collect();
+    fn find(root: &mut [usize], mut i: usize) -> usize {
+        while root[i] != i {
+            root[i] = root[root[i]];
+            i = root[i];
+        }
+        i
+    }
+    for i in 0..n {
+        for d in spec.edges(i) {
+            let (a, b) = (find(&mut root, i), find(&mut root, d));
+            if a != b {
+                root[a.max(b)] = a.min(b);
+            }
+        }
+    }
+    let mut next = 0usize;
+    let mut device_of_root = vec![usize::MAX; n];
+    (0..n)
+        .map(|i| {
+            let r = find(&mut root, i);
+            if device_of_root[r] == usize::MAX {
+                device_of_root[r] = next % devices;
+                next += 1;
+            }
+            device_of_root[r]
+        })
+        .collect()
+}
+
+/// Knobs for one group-DAG drive.
+#[derive(Clone, Copy, Default)]
+struct DriveOpts {
+    /// Per-device transient-fault plan seed (`None` = fault-free).
+    fault_seed: Option<(u64, u64, usize)>, // (seed, horizon, faults per device)
+    /// Per-launch retry budget / backoff (fault runs).
+    retry: u32,
+    backoff: u64,
+    /// Run every launch on the compiled tier.
+    compiled: bool,
+    /// Static verification at `Warn` + per-engine access recording, and
+    /// capture the whole-graph verifier reports and diagnostics.
+    analyze: bool,
+}
+
+/// Per-core observation: (core id, value debug, finish, stall, requests).
+type CoreCapture = (usize, String, u64, u64, u64);
+/// Per-launch observation: (launched_at, finished_at, spills, cores).
+type LaunchCapture = (u64, u64, u64, Vec<CoreCapture>);
+
+/// Everything observable about one group-DAG execution, formatted for
+/// byte comparison: per-launch wait outcomes (full `OffloadResult`
+/// projections or rendered errors), final group-buffer contents,
+/// per-device clocks, stats and traces, staging/fault/tier counters,
+/// verifier output, and the group clock.
+#[derive(Debug, PartialEq)]
+struct GroupCapture {
+    outcomes: Vec<Result<LaunchCapture, String>>,
+    buffers: Vec<Vec<f32>>,
+    devices: Vec<(u64, String, String)>,
+    staging: String,
+    faults: String,
+    tiers: String,
+    verify: String,
+    now: u64,
+}
+
+/// Build a two-device group for `spec` at the given OS-thread count,
+/// place each weakly-connected component on its own device, submit
+/// everything wait-free, drain through the (possibly threaded)
+/// `wait_all` barrier, then claim every outcome in submission order.
+fn drive_group(spec: &DagSpec, threads: usize, opts: DriveOpts) -> Result<GroupCapture, String> {
+    let mut b = DeviceGroup::new()
+        .device(Technology::epiphany3())
+        .device(Technology::epiphany3())
+        .seed(7)
+        .trace(4096)
+        .threads(threads);
+    if opts.analyze {
+        b = b.verify(VerifyLevel::Warn);
+    }
+    if let Some((fseed, horizon, n)) = opts.fault_seed {
+        for d in 0..2u64 {
+            b = b.faults(
+                d as usize,
+                FaultPlan::seeded(fseed ^ d.wrapping_mul(0x9E37_79B9_7F4A_7C15), 16, horizon, n),
+            );
+        }
+    }
+    let mut grp = b.build().map_err(|e| e.to_string())?;
+    if opts.analyze {
+        for d in 0..grp.devices() {
+            grp.session_mut(DeviceId(d)).engine_mut().set_record_accesses(true);
+        }
+    }
+    let mut gbufs = Vec::new();
+    for (i, &l) in spec.buf_lens.iter().enumerate() {
+        gbufs.push(
+            grp.alloc(MemSpec::host(format!("b{i}")).from(&vec![1.0; l]))
+                .map_err(|e| e.to_string())?,
+        );
+    }
+    grp.compile_kernel("r", DAG_READER).map_err(|e| e.to_string())?;
+    grp.compile_kernel("w", DAG_WRITER).map_err(|e| e.to_string())?;
+    grp.compile_kernel("b", DAG_BOOM).map_err(|e| e.to_string())?;
+    let placement = component_devices(spec, grp.devices());
+    let mut handles: Vec<GroupHandle> = Vec::new();
+    for (i, l) in spec.launches.iter().enumerate() {
+        let gref = gbufs[l.buf].slice(l.window.0, l.window.1);
+        let (name, arg) = match l.kernel {
+            DagKernel::Reader => ("r", GroupArgSpec::sharded(gref)),
+            DagKernel::Writer => ("w", GroupArgSpec::sharded_mut(gref)),
+            DagKernel::Boom => ("b", GroupArgSpec::sharded(gref)),
+        };
+        let mut lb = grp
+            .launch_named(name)
+            .map_err(|e| e.to_string())?
+            .on(DeviceId(placement[i]))
+            .cores(l.cores.clone())
+            .retry(opts.retry)
+            .backoff(opts.backoff);
+        if opts.compiled {
+            lb = lb.tier(TierChoice::Compiled);
+        }
+        for &d in &l.after {
+            lb = lb.after(handles[d]);
+        }
+        handles.push(lb.submit().map_err(|e| e.to_string())?);
+    }
+    // The main parallel section under test: every device drains on its
+    // own worker thread (at threads > 1) behind the wait_all barrier.
+    grp.wait_all().map_err(|e| e.to_string())?;
+    let verify = if opts.analyze {
+        format!("{:?} {:?}", grp.verify_graph(), grp.take_diagnostics())
+    } else {
+        String::new()
+    };
+    let outcomes = handles
+        .iter()
+        .map(|&h| match grp.wait(h) {
+            Ok(r) => Ok(project(&r)),
+            Err(e) => Err(e.to_string()),
+        })
+        .collect();
+    let buffers = gbufs
+        .iter()
+        .map(|&g| grp.read(g).map_err(|e| e.to_string()))
+        .collect::<Result<Vec<_>, _>>()?;
+    let devices = (0..grp.devices())
+        .map(|d| {
+            let s = grp.session(DeviceId(d));
+            (s.now(), format!("{:?}", s.stats()), s.engine().trace().render())
+        })
+        .collect();
+    Ok(GroupCapture {
+        outcomes,
+        buffers,
+        devices,
+        staging: format!("{:?}", grp.staging_counters()),
+        faults: format!("{:?}", grp.fault_counters()),
+        tiers: format!("{:?}", grp.tier_counters()),
+        verify,
+        now: grp.now(),
+    })
+}
+
+/// Project an [`OffloadResult`] to its comparable observables:
+/// `(launched_at, finished_at, spills, per-core (core, value, finish,
+/// stall, requests))` — the same projection `tests/properties.rs` uses.
+fn project(r: &OffloadResult) -> LaunchCapture {
+    let cores = r
+        .reports
+        .iter()
+        .map(|c| (c.core, format!("{:?}", c.value), c.finished_at, c.stall, c.requests))
+        .collect();
+    (r.launched_at, r.finished_at, r.spills, cores)
+}
+
+/// Run one scenario at threads = 1 and threads = `hi_threads()` and
+/// demand byte-identical captures.
+fn assert_thread_invariant(spec: &DagSpec, opts: DriveOpts, what: &str) -> Result<(), String> {
+    let serial = drive_group(spec, 1, opts)?;
+    let threaded = drive_group(spec, hi_threads(), opts)?;
+    if serial != threaded {
+        return Err(format!(
+            "{what}: observables diverged between threads=1 and threads={}\nspec: {spec:?}\n\
+             serial: {serial:?}\nthreaded: {threaded:?}",
+            hi_threads()
+        ));
+    }
+    Ok(())
+}
+
+/// Differential 1 — **launch-DAG scheduling**: random DAGs (explicit
+/// edges + inferred RAW/WAR/WAW from overlapping windows, components
+/// split across both devices, cross-device staging where components
+/// share buffers) capture byte-identically at any thread count.
+#[test]
+fn prop_launch_dag_bit_identical_across_thread_counts() {
+    check("parallel-launch-dag", 0x7DE7_0001, cases(60), |g: &mut Gen| {
+        let cfg =
+            DagConfig { max_launches: 5, device_cores: 16, serialize: false, failures: false };
+        let spec = gen_dag(g, &cfg);
+        assert_thread_invariant(&spec, DriveOpts::default(), "launch-DAG")
+    });
+}
+
+/// Differential 2 — **fault recovery**: seeded transient-fault plans on
+/// both devices with a per-launch retry budget; retries, checkpoint
+/// restores and fault counters are all part of the capture and must not
+/// move with the thread count.
+#[test]
+fn prop_fault_recovery_bit_identical_across_thread_counts() {
+    check("parallel-fault-recovery", 0x7DE7_0002, cases(40), |g: &mut Gen| {
+        let cfg =
+            DagConfig { max_launches: 4, device_cores: 16, serialize: false, failures: false };
+        let spec = gen_dag(g, &cfg);
+        // Horizon from a fault-free serial run, as the fault fuzzer does.
+        let base = drive_group(&spec, 1, DriveOpts::default())?;
+        let horizon = base.now.max(2);
+        let opts = DriveOpts {
+            fault_seed: Some((g.usize(0, 1 << 30) as u64, horizon, g.usize(1, 4))),
+            retry: 8,
+            backoff: 64,
+            ..DriveOpts::default()
+        };
+        assert_thread_invariant(&spec, opts, "fault-recovery")
+    });
+}
+
+/// Differential 3 — **compiled tier**: every launch lowered to the
+/// direct-dispatch linear IR; tier counters ride in the capture.
+#[test]
+fn prop_compiled_tier_bit_identical_across_thread_counts() {
+    check("parallel-compiled-tier", 0x7DE7_0003, cases(40), |g: &mut Gen| {
+        let cfg =
+            DagConfig { max_launches: 5, device_cores: 16, serialize: false, failures: false };
+        let spec = gen_dag(g, &cfg);
+        let opts = DriveOpts { compiled: true, ..DriveOpts::default() };
+        assert_thread_invariant(&spec, opts, "compiled-tier")
+    });
+}
+
+/// Differential 4 — **analyzer soundness surface**: injected failures,
+/// `Warn`-level static verification and recorded accesses; the
+/// whole-graph reports (produced on worker threads, merged in
+/// device-index order) and drained diagnostics compare byte-for-byte.
+#[test]
+fn prop_analyzer_bit_identical_across_thread_counts() {
+    check("parallel-analyzer", 0x7DE7_0004, cases(60), |g: &mut Gen| {
+        let cfg =
+            DagConfig { max_launches: 6, device_cores: 16, serialize: false, failures: true };
+        let spec = gen_dag(g, &cfg);
+        let opts = DriveOpts { analyze: true, ..DriveOpts::default() };
+        assert_thread_invariant(&spec, opts, "analyzer")
+    });
+}
+
+/// One full fleet run reduced to everything observable, as in
+/// `tests/properties.rs`: records, rendered report, per-session clocks
+/// and stats.
+type FleetCapture = (Vec<RequestRecord>, String, Vec<(u64, String)>);
+
+fn fleet_capture(cfg: &FleetConfig) -> Result<FleetCapture, String> {
+    let mut f = Fleet::new(cfg.clone()).map_err(|e| e.to_string())?;
+    let rep = f.run().map_err(|e| e.to_string())?;
+    let mut sessions = Vec::new();
+    for grp in f.pool() {
+        for d in 0..cfg.devices_per_group {
+            let s = grp.session(DeviceId(d));
+            sessions.push((s.now(), format!("{:?}", s.stats())));
+        }
+    }
+    Ok((f.records().to_vec(), rep.render(), sessions))
+}
+
+/// Differential 5 — **fleet serving**: the same seeded scenario run with
+/// a serial pool and a threaded pool (payload precompute + per-group
+/// engines on workers) produces byte-identical records, report bytes,
+/// clocks and engine stats.
+#[test]
+fn prop_fleet_bit_identical_across_thread_counts() {
+    check("parallel-fleet", 0x7DE7_0005, cases(30), |g: &mut Gen| {
+        let cfg = gen_fleet(
+            g,
+            &FleetGenConfig {
+                max_tenants: 3,
+                max_groups: 2,
+                max_devices: 2,
+                bounded: true,
+                booms: true,
+                chains: true,
+            },
+        );
+        let serial = fleet_capture(&FleetConfig { threads: 1, ..cfg.clone() })?;
+        let threaded = fleet_capture(&FleetConfig { threads: hi_threads(), ..cfg.clone() })?;
+        if serial.0 != threaded.0 {
+            return Err(format!("fleet records diverged across thread counts\ncfg: {cfg:?}"));
+        }
+        if serial.1 != threaded.1 {
+            return Err(format!(
+                "fleet report bytes diverged across thread counts\ncfg: {cfg:?}\n{}\nvs\n{}",
+                serial.1, threaded.1
+            ));
+        }
+        if serial.2 != threaded.2 {
+            return Err(format!("fleet session clocks/stats diverged\ncfg: {cfg:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// A fixed DAG swept across thread counts 1, 2, 4, 8 and 32 (more
+/// workers than devices — the stride leaves the extras idle) — every
+/// capture equals the serial baseline byte-for-byte.
+#[test]
+fn thread_count_sweep_is_byte_identical_on_a_fixed_dag() {
+    use microcore::testkit::dag::DagLaunch;
+    // Two components: {0, 1, 4} chain on buffer 0 (inferred + explicit
+    // edges), {2, 3} on buffer 1 — placed on devices 0 and 1.
+    let spec = DagSpec {
+        buf_lens: vec![32, 24],
+        launches: vec![
+            DagLaunch {
+                cores: vec![0, 1, 2, 3],
+                kernel: DagKernel::Writer,
+                buf: 0,
+                window: (0, 32),
+                after: vec![],
+            },
+            DagLaunch {
+                cores: vec![0, 1],
+                kernel: DagKernel::Reader,
+                buf: 0,
+                window: (8, 16),
+                after: vec![],
+            },
+            DagLaunch {
+                cores: vec![4, 5, 6, 7, 8, 9],
+                kernel: DagKernel::Writer,
+                buf: 1,
+                window: (0, 24),
+                after: vec![],
+            },
+            DagLaunch {
+                cores: vec![2, 3],
+                kernel: DagKernel::Reader,
+                buf: 1,
+                window: (4, 8),
+                after: vec![2],
+            },
+            DagLaunch {
+                cores: vec![0, 1, 2, 3, 4, 5, 6, 7],
+                kernel: DagKernel::Writer,
+                buf: 0,
+                window: (16, 16),
+                after: vec![1],
+            },
+        ],
+    };
+    let baseline = drive_group(&spec, 1, DriveOpts::default()).unwrap();
+    for threads in [2usize, 4, 8, 32] {
+        let run = drive_group(&spec, threads, DriveOpts::default()).unwrap();
+        assert_eq!(
+            baseline, run,
+            "threads={threads} diverged from the serial baseline on a fixed DAG"
+        );
+    }
+}
+
+/// `set_threads` mid-session is invisible: raising the worker count
+/// between two submit/drain rounds leaves every observable where the
+/// all-serial run put it (thread count is not part of any seed or cost
+/// model).
+#[test]
+fn set_threads_mid_session_changes_nothing_observable() {
+    let run = |split: bool| -> GroupCapture {
+        let mut grp = DeviceGroup::new()
+            .device(Technology::epiphany3())
+            .device(Technology::epiphany3())
+            .seed(11)
+            .trace(2048)
+            .threads(1)
+            .build()
+            .unwrap();
+        let a = grp.alloc(MemSpec::host("a").from(&vec![1.0; 64])).unwrap();
+        grp.compile_kernel("w", DAG_WRITER).unwrap();
+        grp.compile_kernel("r", DAG_READER).unwrap();
+        let mut outcomes = Vec::new();
+        for (round, dev) in [(0usize, 0usize), (1, 1)] {
+            if round == 1 && split {
+                grp.set_threads(4);
+                assert_eq!(grp.threads(), 4);
+            }
+            let h1 = grp
+                .launch_named("w")
+                .unwrap()
+                .on(DeviceId(dev))
+                .cores(vec![0, 1, 2, 3])
+                .arg(GroupArgSpec::sharded_mut(a))
+                .submit()
+                .unwrap();
+            let h2 = grp
+                .launch_named("r")
+                .unwrap()
+                .on(DeviceId(dev))
+                .cores(vec![0, 1])
+                .arg(GroupArgSpec::sharded(a))
+                .after(h1)
+                .submit()
+                .unwrap();
+            grp.wait_all().unwrap();
+            for h in [h1, h2] {
+                outcomes.push(Ok(project(&grp.wait(h).unwrap())));
+            }
+        }
+        let buffers = vec![grp.read(a).unwrap()];
+        let devices = (0..grp.devices())
+            .map(|d| {
+                let s = grp.session(DeviceId(d));
+                (s.now(), format!("{:?}", s.stats()), s.engine().trace().render())
+            })
+            .collect();
+        GroupCapture {
+            outcomes,
+            buffers,
+            devices,
+            staging: format!("{:?}", grp.staging_counters()),
+            faults: format!("{:?}", grp.fault_counters()),
+            tiers: format!("{:?}", grp.tier_counters()),
+            verify: String::new(),
+            now: grp.now(),
+        }
+    };
+    assert_eq!(run(false), run(true), "set_threads(4) mid-session changed an observable");
+}

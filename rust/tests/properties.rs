@@ -973,10 +973,18 @@ fn fleet_cases() -> usize {
 
 /// One full fleet run reduced to everything observable: every request
 /// record, the rendered report, and each pooled session's final clock and
-/// engine stats.
+/// engine stats. `MICROCORE_THREADS` (the fuzz-nightly matrix axis)
+/// overrides the pool's OS worker-thread count — engine invariant 14
+/// promises the captures stay byte-identical at any value, so the same
+/// properties pass unchanged with the threaded pool.
 fn fleet_capture(
     cfg: &FleetConfig,
 ) -> Result<(Vec<RequestRecord>, String, Vec<(u64, String)>), String> {
+    let mut cfg = cfg.clone();
+    if let Some(n) = microcore::runtime::parallel::env_threads() {
+        cfg.threads = n;
+    }
+    let cfg = &cfg;
     let mut f = Fleet::new(cfg.clone()).map_err(|e| e.to_string())?;
     let rep = f.run().map_err(|e| e.to_string())?;
     let mut sessions = Vec::new();
@@ -994,7 +1002,11 @@ fn fleet_capture(
 fn fleet_outcomes(
     cfg: &FleetConfig,
 ) -> Result<BTreeMap<u64, BTreeMap<usize, RequestOutcome>>, String> {
-    let mut f = Fleet::new(cfg.clone()).map_err(|e| e.to_string())?;
+    let mut cfg = cfg.clone();
+    if let Some(n) = microcore::runtime::parallel::env_threads() {
+        cfg.threads = n;
+    }
+    let mut f = Fleet::new(cfg).map_err(|e| e.to_string())?;
     f.run().map_err(|e| e.to_string())?;
     let mut by_tenant: BTreeMap<u64, BTreeMap<usize, RequestOutcome>> = BTreeMap::new();
     for r in f.records() {

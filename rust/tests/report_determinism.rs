@@ -1,0 +1,206 @@
+//! Report-render byte-equality regression suite (the PR 10 determinism
+//! sweep): every report table must render to the **same bytes** when its
+//! input state is built twice through different construction orders.
+//! Hash-map iteration order leaking into a table shows up here as a
+//! byte diff long before it shows up as a flaky CI run — especially once
+//! worker threads make allocation (and therefore hash-seed) patterns
+//! vary between runs.
+
+use microcore::analysis::{Diagnostic, Severity};
+use microcore::coordinator::TierCounters;
+use microcore::fleet::{
+    DeviceStats, Fleet, FleetConfig, FleetReport, KernelClass, RequestOutcome, RequestRecord,
+    TrafficConfig,
+};
+use microcore::metrics::report::{
+    analysis_table, cache_table, fault_table, fleet_table, fleet_util_table, staging_table,
+    tier_table,
+};
+use microcore::sim::{CacheCounters, FaultCounters, StagingCounters};
+
+/// A small deterministic record set covering every class and outcome.
+fn records() -> Vec<RequestRecord> {
+    let mut out = Vec::new();
+    let classes = KernelClass::ALL;
+    for i in 0..40usize {
+        let class = classes[i % classes.len()];
+        let outcome = match i % 7 {
+            0 => RequestOutcome::Failed("core-fault".into()),
+            1 => RequestOutcome::Rejected,
+            _ => RequestOutcome::Ok(format!("v{i}")),
+        };
+        let rejected = matches!(outcome, RequestOutcome::Rejected);
+        out.push(RequestRecord {
+            tenant: (i % 5) as u64,
+            index: i / 5,
+            class,
+            arrival: 1_000 * (i as u64 + 1),
+            start: if rejected { 0 } else { 1_500 * (i as u64 + 1) },
+            finish: if rejected { 0 } else { 1_500 * (i as u64 + 1) + 7_000 + (i as u64 % 11) * 900 },
+            slot: if rejected { usize::MAX } else { i % 3 },
+            dispatch_order: if rejected { usize::MAX } else { i },
+            outcome,
+        });
+    }
+    out
+}
+
+fn devices() -> Vec<DeviceStats> {
+    (0..3)
+        .map(|i| DeviceStats {
+            slot: i,
+            group: i / 2,
+            device: i % 2,
+            served: 10 + i as u64,
+            busy: 40_000 + 1_000 * i as u64,
+            busy_fraction: 0.25 + 0.1 * i as f64,
+        })
+        .collect()
+}
+
+/// The fleet report renders byte-identically no matter what order its
+/// records were accumulated in — per-class percentiles sort internally,
+/// per-tenant rows insert in id order, and the mean is summed post-sort.
+#[test]
+fn fleet_report_is_byte_identical_under_record_shuffle() {
+    let forward = records();
+    let mut shuffled = records();
+    // Deterministic shuffle: reverse, then interleave halves.
+    shuffled.reverse();
+    let half = shuffled.split_off(shuffled.len() / 2);
+    let mut mixed = Vec::with_capacity(forward.len());
+    for (a, b) in half.iter().zip(shuffled.iter()) {
+        mixed.push(a.clone());
+        mixed.push(b.clone());
+    }
+    mixed.extend(half.iter().skip(shuffled.len()).cloned());
+    assert_eq!(mixed.len(), forward.len());
+
+    let r1 = FleetReport::from_records(&forward, devices(), 1_000_000);
+    let r2 = FleetReport::from_records(&mixed, devices(), 1_000_000);
+    assert_eq!(r1.render(), r2.render(), "record order leaked into the report bytes");
+    assert_eq!(
+        fleet_table("t", &r1).render(),
+        fleet_table("t", &r2).render(),
+    );
+    assert_eq!(
+        fleet_util_table("u", &r1).render(),
+        fleet_util_table("u", &r2).render(),
+    );
+}
+
+/// Counter tables render byte-identically when the counters are merged
+/// from parts in opposite orders (all folds are commutative sums).
+#[test]
+fn counter_tables_are_merge_order_independent() {
+    let cache_parts = [
+        CacheCounters { hits: 3, misses: 1, evictions: 0, write_backs: 1, bytes_from_cache: 96, bytes_from_backing: 64 },
+        CacheCounters { hits: 10, misses: 4, evictions: 2, write_backs: 0, bytes_from_cache: 320, bytes_from_backing: 128 },
+        CacheCounters { hits: 7, misses: 0, evictions: 1, write_backs: 3, bytes_from_cache: 224, bytes_from_backing: 256 },
+    ];
+    let mut fwd = CacheCounters::default();
+    cache_parts.iter().for_each(|p| fwd.merge(p));
+    let mut rev = CacheCounters::default();
+    cache_parts.iter().rev().for_each(|p| rev.merge(p));
+    assert_eq!(cache_table("c", &fwd).render(), cache_table("c", &rev).render());
+
+    let staging_parts = [
+        StagingCounters { copies: 2, bytes: 512, src_reads: 2, dst_writes: 2 },
+        StagingCounters { copies: 5, bytes: 2048, src_reads: 5, dst_writes: 5 },
+    ];
+    let mut fwd = StagingCounters::default();
+    staging_parts.iter().for_each(|p| fwd.merge(p));
+    let mut rev = StagingCounters::default();
+    staging_parts.iter().rev().for_each(|p| rev.merge(p));
+    assert_eq!(staging_table("s", &fwd).render(), staging_table("s", &rev).render());
+
+    let fault_parts = [
+        FaultCounters { injected: 4, retried: 3, migrated: 1, recovered: 2, abandoned: 1, checkpoint_bytes: 4096, recovery_time: 9000 },
+        FaultCounters { injected: 1, retried: 0, migrated: 0, recovered: 1, abandoned: 0, checkpoint_bytes: 1024, recovery_time: 700 },
+    ];
+    let mut fwd = FaultCounters::default();
+    fault_parts.iter().for_each(|p| fwd.merge(p));
+    let mut rev = FaultCounters::default();
+    fault_parts.iter().rev().for_each(|p| rev.merge(p));
+    assert_eq!(fault_table("f", &fwd).render(), fault_table("f", &rev).render());
+
+    let tier_parts = [
+        TierCounters { interp_launches: 6, compiled_launches: 2, interp_dispatches: 900, compiled_dispatches: 300, lowered_kernels: 2, ..TierCounters::default() },
+        TierCounters { interp_launches: 1, compiled_launches: 5, interp_dispatches: 100, compiled_dispatches: 800, lowered_kernels: 1, ..TierCounters::default() },
+    ];
+    let mut fwd = TierCounters::default();
+    tier_parts.iter().for_each(|p| fwd.merge(p));
+    let mut rev = TierCounters::default();
+    tier_parts.iter().rev().for_each(|p| rev.merge(p));
+    assert_eq!(tier_table("t", &fwd).render(), tier_table("t", &rev).render());
+}
+
+/// The diagnostics table renders row-for-row from its input slice, so
+/// two independently constructed (equal) slices must be byte-identical.
+#[test]
+fn analysis_table_is_byte_identical_from_independent_state() {
+    let build = || -> Vec<Diagnostic> {
+        vec![
+            Diagnostic {
+                severity: Severity::Warning,
+                kernel: "norm".into(),
+                launch: Some(3),
+                message: "write outside declared window [0,8)".into(),
+            },
+            Diagnostic {
+                severity: Severity::Error,
+                kernel: "boom".into(),
+                launch: None,
+                message: "code budget exceeded".into(),
+            },
+        ]
+    };
+    assert_eq!(
+        analysis_table("a", &build()).render(),
+        analysis_table("a", &build()).render(),
+    );
+}
+
+/// End to end: two fresh fleets with the same config render every table
+/// byte-identically — independently-built engines, registries, queues
+/// and counters, down to the full report text.
+#[test]
+fn fresh_fleet_runs_render_every_table_byte_identically() {
+    let cfg = || FleetConfig {
+        groups: 1,
+        devices_per_group: 2,
+        tenants: vec![0, 1, 2],
+        traffic: TrafficConfig {
+            duration: 400_000,
+            boom_rate: 0.1,
+            chain_rate: 0.2,
+            ..TrafficConfig::default()
+        },
+        ..FleetConfig::default()
+    };
+    let mut f1 = Fleet::new(cfg()).unwrap();
+    let mut f2 = Fleet::new(cfg()).unwrap();
+    let r1 = f1.run().unwrap();
+    let r2 = f2.run().unwrap();
+    assert_eq!(r1.render(), r2.render());
+    assert_eq!(fleet_table("lat", &r1).render(), fleet_table("lat", &r2).render());
+    assert_eq!(fleet_util_table("util", &r1).render(), fleet_util_table("util", &r2).render());
+    for (g1, g2) in f1.pool().iter().zip(f2.pool()) {
+        assert_eq!(
+            fault_table("faults", &g1.fault_counters()).render(),
+            fault_table("faults", &g2.fault_counters()).render(),
+        );
+        assert_eq!(
+            staging_table("staging", &g1.staging_counters()).render(),
+            staging_table("staging", &g2.staging_counters()).render(),
+        );
+        assert_eq!(
+            cache_table("cache", &g1.total_cache_counters()).render(),
+            cache_table("cache", &g2.total_cache_counters()).render(),
+        );
+        assert_eq!(
+            tier_table("tiers", &g1.tier_counters()).render(),
+            tier_table("tiers", &g2.tier_counters()).render(),
+        );
+    }
+}
